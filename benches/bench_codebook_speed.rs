@@ -1,0 +1,46 @@
+//! Appendix C.4 — codebook construction speed: the binary-specialized
+//! K-means (XOR+POPCNT + unique-census) vs floating-point K-means on
+//! the same data (the paper reports ~2.3x faster than GPTVQ).
+
+use btc_llm::benchsuite::{load_workload, quick_mode};
+use btc_llm::quant::binarize::BinaryLayer;
+use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook};
+use btc_llm::quant::fpvq::FpVqLayer;
+use btc_llm::tensor::Matrix;
+use btc_llm::util::benchkit::{bench, benchline, black_box, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let model = if quick { "tinylm_s" } else { "tinylm_m" };
+    let w = load_workload(model)?;
+    // One representative layer, same (v, c, iters) for both builders.
+    let wm = w.raw.matrix("l0.wgate")?;
+    let bl = BinaryLayer::quantize(&wm);
+    let v = 8usize;
+    let c = 256usize;
+    let iters = 5usize;
+    let vectors = collect_vectors(&bl, v);
+    // Sign matrix as floats for the fp k-means.
+    let signs = Matrix::from_vec(bl.rows, bl.cols, bl.b.unpack());
+
+    let reps = if quick { 2 } else { 5 };
+    let b = bench("binary codebook", 1, reps, || {
+        black_box(BinaryCodebook::build(&vectors, v, c, iters));
+    });
+    let f = bench("fp kmeans", 1, reps, || {
+        black_box(FpVqLayer::quantize(&signs, v, c, iters, 1));
+    });
+    let speedup = f.mean_ns() / b.mean_ns();
+    let mut t = Table::new(&["builder", "mean", "p50"]);
+    t.row(&["binary K-means (XOR+POPCNT)".into(), format!("{:.2}ms", b.mean_ms()),
+            format!("{:.2}ms", b.percentile_ns(0.5) as f64 / 1e6)]);
+    t.row(&["fp K-means (same data)".into(), format!("{:.2}ms", f.mean_ms()),
+            format!("{:.2}ms", f.percentile_ns(0.5) as f64 / 1e6)]);
+    println!("\nApp. C.4 (codebook build speed, {} vectors, v={v}, c={c}, {iters} iters)", vectors.len());
+    t.print();
+    println!("speedup: {speedup:.2}x (paper: ~2.3x vs GPTVQ)");
+    benchline("codebook_speed", &[("binary_ms", format!("{:.3}", b.mean_ms())),
+                                  ("fp_ms", format!("{:.3}", f.mean_ms())),
+                                  ("speedup", format!("{speedup:.3}"))]);
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! §5.3 latency / end-to-end serving — the coordinator with dynamic
+//! batching replaying a request trace over three weight backends:
+//! FP16 dense, W1A16 binary (sign-GEMM engine) and BTC sub-1-bit
+//! (LUT-GEMM engine). Reports tokens/s and latency percentiles.
+
+use std::time::Duration;
+
+use btc_llm::benchsuite::{load_workload, quick_mode};
+use btc_llm::coordinator::Server;
+use btc_llm::data::{corpus, ByteTokenizer};
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::benchkit::{benchline, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let w = load_workload("tinylm_s")?;
+    let n_requests = if quick { 8 } else { 32 };
+    let max_new = if quick { 16 } else { 32 };
+    let tok = ByteTokenizer::default();
+    let prompts = corpus::prompts(n_requests, 7);
+
+    let lanes = [
+        ("FP16", QuantConfig::fp16()),
+        ("W1A16 binary", QuantConfig::naive()),
+        ("BTC 0.8 (LUT)", QuantConfig::btc(0.8)),
+    ];
+    let mut t = Table::new(&["backend", "tokens/s", "p50 lat", "p99 lat", "mean batch"]);
+    for (label, cfg) in lanes {
+        let mut qm = quantize_model(&w.raw, &w.corpus, &cfg)?;
+        qm.model.prepare_engines();
+        let server = Server::start(qm.model, 8, Duration::from_millis(2), 7);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| server.submit(tok.encode(p), max_new, 0.0))
+            .collect();
+        let mut total_tokens = 0usize;
+        for rx in rxs {
+            let r = rx.recv().expect("response");
+            total_tokens += r.tokens.len() - r.prompt_len;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tps = total_tokens as f64 / wall;
+        t.row(&[
+            label.to_string(),
+            format!("{tps:.1}"),
+            format!("{:.1}ms", server.metrics.latency_percentile_us(0.5) as f64 / 1e3),
+            format!("{:.1}ms", server.metrics.latency_percentile_us(0.99) as f64 / 1e3),
+            format!("{:.2}", server.metrics.mean_batch_size()),
+        ]);
+        benchline("serve_e2e", &[("backend", label.replace(' ', "_")),
+                                 ("tokens_per_s", format!("{tps:.2}"))]);
+        server.shutdown();
+    }
+    println!("\nEnd-to-end serving ({} requests, <= {max_new} new tokens each)", n_requests);
+    t.print();
+    println!("\nNote: at TinyLM widths the decode hot path is attention + norm overhead;");
+    println!("the weight-GEMM speedup shows at MLP shapes — see bench_fig5_latency.");
+    Ok(())
+}

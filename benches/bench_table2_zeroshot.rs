@@ -1,0 +1,51 @@
+//! Table 2 — zero-shot accuracy at 0.8 bits: FP16 vs STBLLM vs BTC on
+//! the 7 probe tasks (synthetic analogs of Winogrande/OBQA/HellaSwag/
+//! BoolQ/ARC-e/ARC-c/RTE — DESIGN.md §2).
+
+use btc_llm::benchsuite::{eval_lane, load_workload, quick_mode};
+use btc_llm::quant::pipeline::QuantConfig;
+use btc_llm::util::benchkit::{benchline, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let models: &[&str] = if quick { &["tinylm_s"] } else { &["tinylm_m", "tinylm_l"] };
+    let n = if quick { 20 } else { 64 };
+    let lanes = [
+        ("FP16", QuantConfig::fp16()),
+        ("STBLLM", QuantConfig::stbllm(0.8)),
+        ("BTC-LLM", QuantConfig::btc(0.8)),
+    ];
+    let mut table = Table::new(&[
+        "Model", "Method", "W-Bits", "agree", "embed", "categ", "induc", "count", "brack",
+        "adjor", "Average",
+    ]);
+    for model in models {
+        let w = load_workload(model)?;
+        for (label, cfg) in &lanes {
+            let r = eval_lane(&w, cfg, 1200, Some(n))?;
+            let mut cells = vec![
+                r.model.clone(),
+                label.to_string(),
+                format!("{:.2}", r.bits_label),
+            ];
+            for (_, acc) in &r.per_task {
+                cells.push(format!("{acc:.1}"));
+            }
+            cells.push(format!("{:.2}", r.mean_acc.unwrap_or(0.0)));
+            table.row(&cells);
+            benchline(
+                "table2",
+                &[
+                    ("model", r.model.clone()),
+                    ("method", r.method.clone()),
+                    ("bits", format!("{:.2}", r.bits_label)),
+                    ("mean_acc", format!("{:.2}", r.mean_acc.unwrap_or(0.0))),
+                ],
+            );
+        }
+    }
+    println!("\nTable 2 (zero-shot accuracy %, higher is better)");
+    table.print();
+    println!("\nExpected shape: BTC > STBLLM at 0.8 bits on the mean; both below FP16.");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Table 3 — the five ablations on TinyLM-M (paper: LLaMA-2-7B):
+//!   (a) codebook vector length sweep at 0.8 bits
+//!   (b) learned-transform components (none / P / P + D±)
+//!   (c) memory + codebook overhead vs bits
+//!   (d) activation quantization W0.8A{16,8,4}
+//!   (e) number of split points 1/2/3
+//! Run one with `--only 3a` … `--only 3e` (default: all).
+
+use btc_llm::benchsuite::{eval_lane, fmt_ppl, load_workload, quick_mode};
+use btc_llm::eval::memory;
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::argparse::Args;
+use btc_llm::util::benchkit::{benchline, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let quick = quick_mode();
+    let only = args.get("only").map(|s| s.to_string());
+    let run = |tag: &str| only.as_deref().map(|o| o == tag).unwrap_or(true);
+    let model = if quick { "tinylm_s" } else { "tinylm_m" };
+    let w = load_workload(model)?;
+    let eval_tokens = if quick { 1200 } else { 3000 };
+    let zs = if quick { None } else { Some(48) };
+
+    // ---- 3a: vector length sweep -------------------------------------
+    if run("3a") {
+        let mut t = Table::new(&["v", "c", "payload", "PPL", "acc", "quant(s)"]);
+        let vs: &[usize] = if quick { &[8, 16] } else { &[4, 8, 10, 12, 16, 20] };
+        for &v in vs {
+            let mut cfg = QuantConfig::btc(0.8);
+            cfg.v = v;
+            let r = eval_lane(&w, &cfg, eval_tokens, zs)?;
+            t.row(&[
+                v.to_string(),
+                cfg.derived_c().to_string(),
+                format!("{:.2}", r.payload_bits),
+                fmt_ppl(r.ppl),
+                r.mean_acc.map(|a| format!("{a:.1}")).unwrap_or("-".into()),
+                format!("{:.1}", r.quant_secs),
+            ]);
+            benchline("table3a", &[("v", v.to_string()), ("ppl", format!("{:.4}", r.ppl)),
+                                   ("quant_s", format!("{:.2}", r.quant_secs))]);
+        }
+        println!("\nTable 3a (codebook vector length @0.8b): longer v -> better PPL, more quant time");
+        t.print();
+    }
+
+    // ---- 3b: transform components ------------------------------------
+    if run("3b") {
+        let mut t = Table::new(&["Transform", "PPL", "acc"]);
+        for (label, p, s) in [("none", false, false), ("P", true, false), ("P + D±", true, true)] {
+            let mut cfg = QuantConfig::btc(0.8);
+            cfg.transform_p = p;
+            cfg.transform_sigma = s;
+            let r = eval_lane(&w, &cfg, eval_tokens, zs)?;
+            t.row(&[
+                label.to_string(),
+                fmt_ppl(r.ppl),
+                r.mean_acc.map(|a| format!("{a:.1}")).unwrap_or("-".into()),
+            ]);
+            benchline("table3b", &[("transform", label.to_string()), ("ppl", format!("{:.4}", r.ppl))]);
+        }
+        println!("\nTable 3b (learned transform @0.8b): none > P > P+D± in PPL");
+        t.print();
+    }
+
+    // ---- 3c: memory + codebook overhead -------------------------------
+    if run("3c") {
+        let mut t = Table::new(&["Config", "Model Mem", "Codebook Mem", "overhead", "compression"]);
+        {
+            let fp = quantize_model(&w.raw, &w.corpus, &QuantConfig::fp16())?;
+            let r = memory::report(&fp.model);
+            t.row(&["FP16".into(), memory::human_bytes(r.fp16_total_bytes), "-".into(), "-".into(), "1.0x".into()]);
+        }
+        for bits in [0.9, 0.8, 0.7] {
+            let qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::btc(bits))?;
+            let r = memory::report(&qm.model);
+            t.row(&[
+                format!("{bits}bit"),
+                memory::human_bytes(r.total_bytes),
+                memory::human_bytes(r.codebook_bytes),
+                format!("{:.1}%", 100.0 * r.codebook_overhead),
+                format!("{:.1}x", r.compression),
+            ]);
+            benchline("table3c", &[("bits", bits.to_string()),
+                                   ("total_bytes", r.total_bytes.to_string()),
+                                   ("codebook_bytes", r.codebook_bytes.to_string()),
+                                   ("compression", format!("{:.2}", r.compression))]);
+        }
+        println!("\nTable 3c (memory): codebook overhead shrinks with bits (c shrinks)");
+        t.print();
+        println!("note: overhead % is larger than the paper's 1-9% because TinyLM is ~1000x");
+        println!("smaller than LLaMA-2-7B while the codebook is shared-size — amortization");
+        println!("improves with model scale exactly as §4.3 argues (compare tinylm_s vs _l).");
+    }
+
+    // ---- 3d: activation quantization ----------------------------------
+    if run("3d") {
+        let mut t = Table::new(&["Config", "PPL", "acc"]);
+        for act_bits in [16u32, 8, 4] {
+            let mut cfg = QuantConfig::btc(0.8);
+            cfg.act_bits = act_bits;
+            let r = eval_lane(&w, &cfg, eval_tokens, zs)?;
+            t.row(&[
+                format!("W0.8A{act_bits}"),
+                fmt_ppl(r.ppl),
+                r.mean_acc.map(|a| format!("{a:.1}")).unwrap_or("-".into()),
+            ]);
+            benchline("table3d", &[("act_bits", act_bits.to_string()), ("ppl", format!("{:.4}", r.ppl))]);
+        }
+        println!("\nTable 3d (activation quantization): A8 ~ A16 >> A4");
+        t.print();
+    }
+
+    // ---- 3e: split points ---------------------------------------------
+    if run("3e") {
+        let mut t = Table::new(&["Split points", "PPL", "acc"]);
+        for splits in [1usize, 2, 3] {
+            let mut cfg = QuantConfig::btc(0.8);
+            cfg.n_splits = splits;
+            let r = eval_lane(&w, &cfg, eval_tokens, zs)?;
+            t.row(&[
+                splits.to_string(),
+                fmt_ppl(r.ppl),
+                r.mean_acc.map(|a| format!("{a:.1}")).unwrap_or("-".into()),
+            ]);
+            benchline("table3e", &[("splits", splits.to_string()), ("ppl", format!("{:.4}", r.ppl))]);
+        }
+        println!("\nTable 3e (split points): more splits -> better PPL");
+        t.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Table 5 / Table 7 — second model family (TinyQwen: GQA attention,
+//! different widths — the Qwen2.5/Qwen3 analog) across bit-widths,
+//! demonstrating the method generalizes beyond the primary family.
+
+use btc_llm::benchsuite::{eval_lane, fmt_ppl, load_workload, quick_mode};
+use btc_llm::quant::pipeline::QuantConfig;
+use btc_llm::util::benchkit::{benchline, Table};
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let models: &[&str] = if quick { &["tinyqwen_s"] } else { &["tinyqwen_s", "tinyqwen_m"] };
+    let eval_tokens = if quick { 1200 } else { 3000 };
+    let zs = if quick { None } else { Some(40) };
+
+    let mut t = Table::new(&["Model", "Config", "PPL", "acc"]);
+    for model in models {
+        let w = load_workload(model)?;
+        let fp = eval_lane(&w, &QuantConfig::fp16(), eval_tokens, zs)?;
+        t.row(&[
+            w.name.clone(),
+            "FP16".into(),
+            fmt_ppl(fp.ppl),
+            fp.mean_acc.map(|a| format!("{a:.1}")).unwrap_or("-".into()),
+        ]);
+        for bits in [1.11, 0.9, 0.8, 0.7] {
+            let r = eval_lane(&w, &QuantConfig::btc(bits), eval_tokens, zs)?;
+            t.row(&[
+                w.name.clone(),
+                format!("{bits}bit"),
+                fmt_ppl(r.ppl),
+                r.mean_acc.map(|a| format!("{a:.1}")).unwrap_or("-".into()),
+            ]);
+            benchline("table5", &[("model", w.name.clone()), ("bits", bits.to_string()),
+                                  ("ppl", format!("{:.4}", r.ppl))]);
+        }
+    }
+    println!("\nTable 5 (Qwen-analog family, GQA): same graceful degradation as the primary family");
+    t.print();
+    Ok(())
+}

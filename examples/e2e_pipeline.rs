@@ -1,0 +1,81 @@
+//! End-to-end driver (DESIGN.md §5): proves all layers compose on a
+//! real small workload.
+//!
+//! - replays the build-time training loss curve (L2 JAX trainer,
+//!   artifacts/train_metrics_*.txt)
+//! - quantizes the trained TinyLM at 1.11 / 0.9 / 0.8 / 0.7 bits with
+//!   the full BTC pipeline (learnable transformation + ARB + shared
+//!   binary codebook)
+//! - evaluates held-out perplexity and the 7 zero-shot probes
+//! - prints the memory report
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example e2e_pipeline [-- --model tinylm_m --quick]
+//! ```
+
+use btc_llm::benchsuite::{eval_lane, fmt_ppl, load_workload};
+use btc_llm::eval::memory;
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::argparse::Args;
+use btc_llm::util::benchkit::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let model = args.get_or("model", "tinylm_m").to_string();
+    let quick = args.flag("quick");
+    let w = load_workload(&model)?;
+
+    // ---- 1. training loss curve (from the L2 build) -------------------
+    let metrics_path = btc_llm::artifacts_dir().join(format!("train_metrics_{model}.txt"));
+    let metrics = std::fs::read_to_string(&metrics_path)?;
+    println!("== training loss curve ({model}, L2 JAX trainer) ==");
+    let points: Vec<(usize, f64)> = metrics
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .filter_map(|l| {
+            let mut it = l.split_whitespace();
+            Some((it.next()?.parse().ok()?, it.next()?.parse().ok()?))
+        })
+        .collect();
+    let maxloss = points.iter().map(|p| p.1).fold(0.0f64, f64::max);
+    for (step, loss) in points.iter().step_by((points.len() / 12).max(1)) {
+        let bar = "#".repeat((loss / maxloss * 50.0) as usize);
+        println!("step {step:>4} loss {loss:.4} |{bar}");
+    }
+    println!("({} params)", w.raw.config.param_count());
+
+    // ---- 2. quantize + evaluate at every bit-width ---------------------
+    let eval_tokens = if quick { 1200 } else { 4000 };
+    let zs = if quick { Some(16) } else { Some(48) };
+    let mut t = Table::new(&["Config", "payload bits", "PPL", "mean acc", "quant(s)"]);
+    let fp = eval_lane(&w, &QuantConfig::fp16(), eval_tokens, zs)?;
+    t.row(&["FP16".into(), "16.00".into(), fmt_ppl(fp.ppl),
+            format!("{:.1}%", fp.mean_acc.unwrap_or(0.0)), format!("{:.1}", fp.quant_secs)]);
+    for bits in [1.11, 0.9, 0.8, 0.7] {
+        let r = eval_lane(&w, &QuantConfig::btc(bits), eval_tokens, zs)?;
+        t.row(&[
+            format!("BTC-LLM @ {bits}"),
+            format!("{:.2}", r.payload_bits),
+            fmt_ppl(r.ppl),
+            format!("{:.1}%", r.mean_acc.unwrap_or(0.0)),
+            format!("{:.1}", r.quant_secs),
+        ]);
+    }
+    println!("\n== quantization grid ({model}) ==");
+    t.print();
+
+    // ---- 3. memory report ----------------------------------------------
+    let qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::btc(0.8))?;
+    let r = memory::report(&qm.model);
+    println!("\n== memory (BTC 0.8) ==");
+    println!("fp16 model:    {}", memory::human_bytes(r.fp16_total_bytes));
+    println!("quantized:     {} ({:.1}x compression)", memory::human_bytes(r.total_bytes), r.compression);
+    println!("  linears:     {}", memory::human_bytes(r.linear_bytes));
+    println!("  codebook:    {} ({:.1}% overhead)", memory::human_bytes(r.codebook_bytes), 100.0 * r.codebook_overhead);
+    println!("  transforms:  {}", memory::human_bytes(r.transform_bytes));
+    println!("  emb/norms:   {}", memory::human_bytes(r.residual_fp16_bytes));
+    println!("\ne2e pipeline OK");
+    Ok(())
+}

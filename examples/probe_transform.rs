@@ -1,0 +1,25 @@
+use btc_llm::*;
+use btc_llm::quant::transform::{fit, FitConfig};
+use btc_llm::model::transformer::{Capture, CaptureSite};
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let raw = io::load_model(&dir.join("tinylm_s.bin"))?;
+    let model = model::Transformer::from_raw(&raw)?;
+    let corpus = std::fs::read(dir.join("corpus_eval.txt"))?;
+    let calib = data::calib::CalibSet::sample(&corpus, 8, 64, 42);
+    let mut cap = Capture::new(192);
+    for s in &calib.seqs { let mut o = Some(&mut cap); model.forward_capture(s, &mut o); }
+    let x = cap.matrix(0, CaptureSite::Ln1Out).unwrap();
+    let wq = raw.matrix("l0.wq")?; let wk = raw.matrix("l0.wk")?; let wv = raw.matrix("l0.wv")?;
+    for (name, cfg) in [
+        ("default", FitConfig::default()),
+        ("more", FitConfig { outer_iters: 12, p_steps: 10, lr: 3e-2, ..Default::default() }),
+        ("p-only", FitConfig { learn_sigma: false, ..Default::default() }),
+        ("sigma-only", FitConfig { learn_p: false, ..Default::default() }),
+    ] {
+        let (_, st) = fit(&x, &[&wq, &wk, &wv], &cfg);
+        println!("{name}: init {:.1} final {:.1} ratio {:.3} flips {} iters {}",
+            st.initial_loss, st.final_loss, st.final_loss/st.initial_loss, st.sigma_flips, st.outer_iters_run);
+    }
+    Ok(())
+}

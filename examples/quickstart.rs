@@ -1,0 +1,78 @@
+//! Quickstart: the whole BTC pipeline on one weight matrix.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//! 1. make an "LLM-like" weight matrix (heavy-tailed, outlier columns)
+//! 2. fit the learnable transformation T = D± (P1 ⊗ P2)
+//! 3. ARB-binarize the transformed weight (grouped scales)
+//! 4. compress the sign matrix with the binary codebook
+//! 5. run the LUT-GEMM engine and check it against the dense product
+
+use std::sync::Arc;
+
+use btc_llm::engine::LutGemmEngine;
+use btc_llm::quant::arb::arb_quantize;
+use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
+use btc_llm::quant::transform::{fit, FitConfig};
+use btc_llm::tensor::stats::rel_error;
+use btc_llm::tensor::Matrix;
+use btc_llm::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+    let (out, inp, v, c) = (192, 128, 16, 512);
+
+    // 1. "LLM-like" weights + calibration activations with hot channels.
+    let hot: Vec<f32> = (0..inp).map(|ch| if ch % 16 == 0 { 6.0 } else { 1.0 }).collect();
+    let w = Matrix::from_fn(out, inp, |_, ch| rng.heavy_tailed(0.03, 6.0) * 0.05 * hot[ch].sqrt());
+    let x = Matrix::from_fn(128, inp, |_, ch| rng.normal() * hot[ch]);
+    println!("weights: {out}x{inp}, activation max|x| = {:.2}", x.max_abs());
+
+    // 2. learnable transformation.
+    let (t, stats) = fit(&x, &[&w], &FitConfig::default());
+    println!(
+        "transform fit: block loss {:.1} -> {:.1} ({} sigma flips)",
+        stats.initial_loss, stats.final_loss, stats.sigma_flips
+    );
+    let xt = t.apply(&x);
+    println!("transformed activation max|x| = {:.2}", xt.max_abs());
+
+    // 3. grouped ARB binarization of the transformed weight.
+    let wt = t.transform_weight(&w);
+    let groups = vec![0u16; inp];
+    let bl = arb_quantize(&wt, &groups, 1, 15);
+    println!("ARB binarized: rel err {:.4}, {:.2} bits/weight stored",
+             rel_error(&wt.data, &bl.reconstruct().data), bl.bits_per_weight());
+
+    // 4. binary codebook (sub-1-bit).
+    let vectors = collect_vectors(&bl, v);
+    let (cb, assign, cstats) = BinaryCodebook::build(&vectors, v, c, 5);
+    let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+    println!(
+        "codebook: {} vectors -> c={} ({} unique, exact={}), {:.3} index bits/weight",
+        cstats.n_vectors,
+        cstats.c,
+        cstats.n_unique,
+        cstats.exact,
+        cl.codebook.index_bits() as f64 / v as f64
+    );
+    println!("codebook rel err {:.4}", rel_error(&wt.data, &cl.reconstruct().data));
+
+    // 5. LUT-GEMM engine == dense reconstruction.
+    let eng = LutGemmEngine::try_new(&cl).expect("block-aligned");
+    let y_fast = eng.forward(&xt);
+    let y_ref = xt.matmul_bt(&cl.reconstruct());
+    let gemm_err = rel_error(&y_ref.data, &y_fast.data);
+    println!("LUT-GEMM vs dense reconstruction: rel err {gemm_err:.2e}");
+    assert!(gemm_err < 1e-5);
+
+    // End-to-end: quantized product vs the original fp product.
+    let y_fp = x.matmul_bt(&w);
+    println!(
+        "end-to-end output rel err (fp vs BTC sub-1-bit): {:.4}",
+        rel_error(&y_fp.data, &y_fast.data)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

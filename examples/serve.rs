@@ -1,0 +1,61 @@
+//! Serving driver: start the coordinator with a BTC-quantized model
+//! (LUT-GEMM engines on the hot path), replay a batched request trace
+//! from the tinywiki prompt generator, and report latency/throughput.
+//!
+//! ```bash
+//! cargo run --release --example serve -- --model tinylm_s --bits 0.8 --requests 24
+//! ```
+
+use std::time::Duration;
+
+use btc_llm::benchsuite::load_workload;
+use btc_llm::coordinator::Server;
+use btc_llm::data::{corpus, ByteTokenizer};
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let model = args.get_or("model", "tinylm_s").to_string();
+    let bits = args.get_f64("bits", 0.8);
+    let n_requests = args.get_usize("requests", 24);
+    let max_new = args.get_usize("max-new-tokens", 32);
+    let max_batch = args.get_usize("max-batch", 8);
+
+    let w = load_workload(&model)?;
+    println!("quantizing {model} at {bits} bits for serving…");
+    let mut qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::btc(bits))?;
+    qm.model.prepare_engines(); // sign-GEMM / LUT-GEMM engines
+    println!(
+        "ready: {} ({} linears, payload {:.2} bits/weight)",
+        qm.stats.method, qm.stats.n_linears, qm.stats.payload_bits
+    );
+
+    let server = Server::start(qm.model, max_batch, Duration::from_millis(2), 7);
+    let tok = ByteTokenizer::default();
+    let prompts = corpus::prompts(n_requests, 11);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> =
+        prompts.iter().map(|p| server.submit(tok.encode(p), max_new, 0.0)).collect();
+    let mut total_new = 0usize;
+    for (p, rx) in prompts.iter().zip(rxs) {
+        let r = rx.recv().expect("response");
+        total_new += r.tokens.len() - r.prompt_len;
+        println!(
+            "{:>28} | {} ({:.1} ms)",
+            format!("'{p}'"),
+            tok.decode(&r.tokens[r.prompt_len..]).trim_end().replace('\n', "\\n"),
+            r.latency.as_secs_f64() * 1e3
+        );
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n{}", server.metrics.summary());
+    println!(
+        "throughput: {:.1} new tokens/s over {} requests ({:.2}s wall)",
+        total_new as f64 / wall,
+        n_requests,
+        wall
+    );
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,165 @@
+"""AOT build orchestrator (`make artifacts`).
+
+Runs the ENTIRE python side once and writes everything the Rust
+coordinator needs into artifacts/:
+
+  corpus_train.txt / corpus_eval.txt   synthetic tinywiki corpus
+  <model>.bin                          TLM1 weight blobs (6 models)
+  train_metrics_<model>.txt            loss curves (e2e example replays)
+  binary_gemm.hlo.txt                  L1 W1A16 kernel, AOT-lowered
+  lut_gemm.hlo.txt                     L1 codebook LUT-GEMM, AOT-lowered
+  tinylm_s_fwd.hlo.txt                 full fp forward (weights baked)
+  manifest.txt                         shapes/paths for the Rust runtime
+
+Interchange is HLO **text**: the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized HloModuleProto (64-bit instruction ids); the text
+parser reassigns ids (see /opt/xla-example/README.md). Lowered with
+return_tuple=True; the Rust side unwraps with to_tuple1().
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import blob, corpus
+from .kernels import binary_gemm, lut_gemm
+from .model import CONFIGS, forward
+from .train import train_model
+
+# (name, steps, qat) — sizes/steps chosen for a 1-core CPU build.
+MODEL_PLAN = [
+    ("tinylm_s", 400, False),
+    ("tinylm_m", 400, False),
+    ("tinylm_l", 300, False),
+    ("tinyqwen_s", 300, False),
+    ("tinyqwen_m", 300, False),
+    ("fbi_s", 400, True),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides
+    # non-scalar constants as `{...}`, which the text parser then reads
+    # as garbage — e.g. the RoPE cos/sin tables silently became zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write_hlo(path: str, fn, *example_args) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)", flush=True)
+
+
+def lower_kernels(out_dir: str, manifest: list) -> None:
+    """Lower the two L1 kernels with parity-test shapes.
+
+    The Rust runtime executes these HLOs via PJRT and cross-checks its
+    own engine (engine/lutgemm.rs, engine/xnor.rs) on identical inputs.
+    """
+    m, n, o = 8, 96, 64
+    c, v = 32, 16
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    write_hlo(
+        os.path.join(out_dir, "binary_gemm.hlo.txt"),
+        lambda x, b, a, mu: (binary_gemm(x, b, a, mu),),
+        spec((m, n), f32), spec((o, n), f32), spec((o,), f32), spec((o,), f32),
+    )
+    manifest.append(f"binary_gemm.hlo.txt kind=kernel m={m} n={n} o={o}")
+    write_hlo(
+        os.path.join(out_dir, "lut_gemm.hlo.txt"),
+        lambda x, cb, idx, a, mu: (lut_gemm(x, cb, idx, a, mu, mu_bits=4),),
+        spec((m, n), f32), spec((c, v), f32), spec((o, n // v), jnp.int32),
+        spec((o,), f32), spec((o,), f32),
+    )
+    manifest.append(f"lut_gemm.hlo.txt kind=kernel m={m} n={n} o={o} c={c} v={v} mu=4")
+
+
+def lower_model_forward(out_dir: str, manifest: list, name: str, seq: int = 32) -> None:
+    """Lower a full fp forward pass to HLO text.
+
+    Weights are EXPLICIT parameters in sorted-name order, AFTER the
+    tokens argument (jax would hoist large closed-over constants into
+    hidden trailing parameters anyway — making them explicit pins the
+    calling convention for the Rust runtime, which feeds tensors from
+    the TLM1 blob in the same sorted order; see examples/hlo_parity.rs).
+    Proves the whole L2 graph (RoPE/GQA/SwiGLU) composes under PJRT.
+    """
+    cfg, params = blob.load(os.path.join(out_dir, f"{name}.bin"))
+    names = sorted(params.keys())
+
+    def fwd(toks, *tensors):
+        p = dict(zip(names, tensors))
+        return (forward(cfg, p, toks),)
+
+    specs = [jax.ShapeDtypeStruct(params[n].shape, jnp.float32) for n in names]
+    write_hlo(
+        os.path.join(out_dir, f"{name}_fwd.hlo.txt"),
+        fwd,
+        jax.ShapeDtypeStruct((1, seq), jnp.int32),
+        *specs,
+    )
+    manifest.append(
+        f"{name}_fwd.hlo.txt kind=forward model={name} batch=1 seq={seq} "
+        f"args=tokens+sorted_tensors n_tensors={len(names)}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="BTC-LLM artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny corpus + few steps (CI smoke, not for benches)")
+    ap.add_argument("--force", action="store_true", help="rebuild everything")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    manifest = []
+
+    # 1. Corpus.
+    train_path = os.path.join(out, "corpus_train.txt")
+    if args.force or not os.path.exists(train_path):
+        n_train = 40_000 if args.quick else 400_000
+        text = corpus.generate(n_train, seed=42)
+        with open(train_path, "w") as f:
+            f.write(text)
+        with open(os.path.join(out, "corpus_eval.txt"), "w") as f:
+            f.write(corpus.generate(n_train // 10, seed=1042))
+        print(f"corpus: {n_train} train chars", flush=True)
+    with open(train_path, "rb") as f:
+        corpus_bytes = np.frombuffer(f.read(), dtype=np.uint8)
+    manifest.append("corpus_train.txt kind=corpus")
+    manifest.append("corpus_eval.txt kind=corpus")
+
+    # 2. Train the model zoo (cached: skipped when the blob exists).
+    plan = MODEL_PLAN if not args.quick else [("tinylm_s", 30, False), ("fbi_s", 30, True)]
+    for name, steps, qat in plan:
+        path = os.path.join(out, f"{name}.bin")
+        if args.force or not os.path.exists(path):
+            train_model(name, corpus_bytes, out, steps=steps, qat=qat)
+        else:
+            print(f"[{name}] cached", flush=True)
+        manifest.append(f"{name}.bin kind=weights qat={int(qat)}")
+        manifest.append(f"train_metrics_{name}.txt kind=metrics")
+
+    # 3. AOT-lower the L1 kernels + a full model forward to HLO text.
+    lower_kernels(out, manifest)
+    lower_model_forward(out, manifest, "tinylm_s")
+
+    with open(os.path.join(out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""TLM1 weight-blob format — the interchange between the L2 trainer and
+the Rust coordinator (rust/src/io/weights.rs reads this).
+
+Layout (little-endian):
+  magic  b"TLM1"
+  u32    version (=1)
+  u32    vocab, d_model, n_layer, n_head, n_kv_head, d_ff, max_seq
+  f32    rope_theta
+  u32    n_tensors
+  per tensor:
+    u32  name_len; name utf-8 bytes
+    u32  ndim; u32 dims[ndim]
+    f32  data (row-major)
+"""
+
+import struct
+
+import numpy as np
+
+from .model import CONFIGS, ModelConfig
+
+MAGIC = b"TLM1"
+
+
+def save(path: str, cfg: ModelConfig, params: dict) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<8I", 1, cfg.vocab, cfg.d_model, cfg.n_layer,
+                            cfg.n_head, cfg.n_kv_head, cfg.d_ff, cfg.max_seq))
+        f.write(struct.pack("<f", cfg.rope_theta))
+        names = sorted(params.keys())
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            arr = np.asarray(params[name], dtype=np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+            f.write(arr.tobytes(order="C"))
+
+
+def load(path: str):
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:4] == MAGIC, "bad magic"
+    off = 4
+    ver, vocab, d, nl, nh, nkv, dff, mseq = struct.unpack_from("<8I", data, off)
+    off += 32
+    (theta,) = struct.unpack_from("<f", data, off)
+    off += 4
+    assert ver == 1
+    cfg = ModelConfig("loaded", vocab, d, nl, nh, nkv, dff, mseq, theta)
+    (nt,) = struct.unpack_from("<I", data, off)
+    off += 4
+    params = {}
+    for _ in range(nt):
+        (ln,) = struct.unpack_from("<I", data, off)
+        off += 4
+        name = data[off : off + ln].decode()
+        off += ln
+        (ndim,) = struct.unpack_from("<I", data, off)
+        off += 4
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, np.float32, n, off).reshape(dims)
+        off += 4 * n
+        params[name] = arr
+    return cfg, params

@@ -1,0 +1,180 @@
+"""Synthetic "tinywiki" PCFG corpus generator.
+
+Stand-in for WikiText2 in the offline reproduction (see DESIGN.md §2).
+A deterministic probabilistic grammar over English-like sentences with
+enough latent structure (number agreement, embedded clauses, category
+facts, induction patterns, balanced brackets) that (a) a tiny LM learns
+non-trivial statistics and (b) the 7 zero-shot probe tasks have
+well-defined correct/distractor continuations.
+
+Pure-python, stdlib-free randomness via SplitMix64 so the corpus is
+bit-reproducible across machines (and re-implementable in Rust).
+"""
+
+from __future__ import annotations
+
+
+class SplitMix64:
+    """Tiny deterministic PRNG (same algorithm as rust/src/util/rng.rs)."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+    def uniform(self) -> float:
+        return self.next_u64() / float(1 << 64)
+
+
+# (singular, plural) noun pairs — regular morphology only, so the
+# agreement probe is learnable by a byte-level model.
+NOUNS = [
+    ("cat", "cats"), ("dog", "dogs"), ("bird", "birds"), ("fox", "foxes"),
+    ("cow", "cows"), ("frog", "frogs"), ("crab", "crabs"), ("hen", "hens"),
+    ("rock", "rocks"), ("lamp", "lamps"), ("door", "doors"), ("cup", "cups"),
+    ("box", "boxes"), ("car", "cars"), ("ship", "ships"), ("coin", "coins"),
+]
+ANIMALS = {"cat", "dog", "bird", "fox", "cow", "frog", "crab", "hen"}
+# (3rd-sg, plural) verb pairs.
+VERBS = [
+    ("runs", "run"), ("sleeps", "sleep"), ("jumps", "jump"),
+    ("sings", "sing"), ("hides", "hide"), ("waits", "wait"),
+    ("turns", "turn"), ("falls", "fall"),
+]
+ADJS = ["big", "small", "red", "blue", "old", "new", "slow", "fast"]
+PLACES = ["barn", "lake", "hill", "road", "town", "yard", "cave", "dock"]
+NUMBER_WORDS = ["one", "two", "three", "four", "five", "six", "seven", "eight"]
+
+
+def noun_phrase(rng: SplitMix64, plural: bool) -> str:
+    noun = rng.choice(NOUNS)[1 if plural else 0]
+    if rng.uniform() < 0.4:
+        return f"the {rng.choice(ADJS)} {noun}"
+    return f"the {noun}"
+
+
+def sent_agreement(rng: SplitMix64) -> str:
+    """the (adj) cat runs . / the (adj) cats run ."""
+    plural = rng.uniform() < 0.5
+    verb = rng.choice(VERBS)[1 if plural else 0]
+    return f"{noun_phrase(rng, plural)} {verb} ."
+
+
+def sent_embedded(rng: SplitMix64) -> str:
+    """long-range agreement across an embedded clause."""
+    plural = rng.uniform() < 0.5
+    inner = rng.choice(NOUNS)[0]
+    verb = rng.choice(VERBS)[1 if plural else 0]
+    head = rng.choice(NOUNS)[1 if plural else 0]
+    return f"the {head} that sees the {inner} {verb} ."
+
+
+def sent_category(rng: SplitMix64) -> str:
+    """category facts: animals are animals, the rest are objects."""
+    noun_sg = rng.choice(NOUNS)[0]
+    kind = "animal" if noun_sg in ANIMALS else "object"
+    return f"the {noun_sg} is an {kind} ." if kind == "animal" else f"the {noun_sg} is an object ."
+
+
+def sent_place(rng: SplitMix64) -> str:
+    plural = rng.uniform() < 0.3
+    verb = rng.choice(VERBS)[1 if plural else 0]
+    return f"{noun_phrase(rng, plural)} {verb} near the {rng.choice(PLACES)} ."
+
+
+def sent_counting(rng: SplitMix64) -> str:
+    """one two three ... — order structure for the order probe."""
+    start = rng.below(4)
+    ln = 3 + rng.below(4)
+    return " ".join(NUMBER_WORDS[start:start + ln]) + " ."
+
+
+def sent_induction(rng: SplitMix64) -> str:
+    """A B ... A B — repeated bigram, for the induction probe."""
+    a = rng.choice(NOUNS)[0]
+    b = rng.choice(PLACES)
+    mid = rng.choice(ADJS)
+    return f"{a} {b} {mid} {a} {b} ."
+
+
+def sent_brackets(rng: SplitMix64) -> str:
+    """balanced brackets over letters."""
+    depth = 1 + rng.below(2)
+    letters = "abcdefgh"
+    out = []
+    for _ in range(depth):
+        out.append("(")
+        out.append(letters[rng.below(8)])
+    out.append(letters[rng.below(8)])
+    out.extend(")" * depth)
+    return " ".join(out) + " ."
+
+
+SENTENCE_KINDS = [
+    (sent_agreement, 0.30),
+    (sent_embedded, 0.12),
+    (sent_category, 0.15),
+    (sent_place, 0.18),
+    (sent_counting, 0.10),
+    (sent_induction, 0.08),
+    (sent_brackets, 0.07),
+]
+
+
+def sentence(rng: SplitMix64) -> str:
+    u = rng.uniform()
+    acc = 0.0
+    for fn, w in SENTENCE_KINDS:
+        acc += w
+        if u < acc:
+            return fn(rng)
+    return sent_agreement(rng)
+
+
+def generate(n_chars: int, seed: int = 42) -> str:
+    """Generate roughly n_chars of corpus text (newline-joined sentences)."""
+    rng = SplitMix64(seed)
+    parts = []
+    total = 0
+    while total < n_chars:
+        s = sentence(rng)
+        parts.append(s)
+        total += len(s) + 1
+    return "\n".join(parts) + "\n"
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--train-chars", type=int, default=400_000)
+    ap.add_argument("--eval-chars", type=int, default=40_000)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    import os
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    train = generate(args.train_chars, seed=42)
+    evaltxt = generate(args.eval_chars, seed=1042)  # disjoint stream
+    with open(os.path.join(args.out_dir, "corpus_train.txt"), "w") as f:
+        f.write(train)
+    with open(os.path.join(args.out_dir, "corpus_eval.txt"), "w") as f:
+        f.write(evaltxt)
+    print(f"corpus: train={len(train)} eval={len(evaltxt)} chars")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spot.
+from .binary_gemm import binary_gemm
+from .lut_gemm import codebook_keys, lut_gemm, pattern_matrix
+from . import ref
+
+__all__ = ["binary_gemm", "lut_gemm", "codebook_keys", "pattern_matrix", "ref"]

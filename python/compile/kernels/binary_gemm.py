@@ -1,0 +1,69 @@
+"""W1A16 sign-GEMM Pallas kernel.
+
+Computes y = x @ (alpha * B + mu)^T for a binarized weight matrix
+B in {-1,+1}^{o x n} with per-output-row scale alpha and bias mu,
+WITHOUT materializing the dequantized weight: the kernel contracts x
+against the ±1 matrix (addition/subtraction on real hardware; the MXU
+bf16 path on TPU) and folds alpha/mu in afterwards:
+
+    y[i, r] = alpha[r] * <x[i], B[r]> + mu[r] * sum(x[i]).
+
+HARDWARE NOTE (DESIGN.md §Hardware-Adaptation): on GPU the paper packs
+bits into shared memory and uses add/sub; on TPU the profitable mapping
+is a bf16 MXU matmul against the ±1 matrix with the scale fused on the
+VPU. Grid tiles over output rows so the B tile lives in VMEM.
+
+Pallas is ALWAYS invoked with interpret=True here: real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, b_ref, alpha_ref, mu_ref, o_ref):
+    x = x_ref[...]
+    b = b_ref[...]
+    # Contract against ±1 weights; on TPU this hits the MXU in bf16.
+    dots = jax.lax.dot_general(
+        x, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (m, o_tile)
+    xsum = jnp.sum(x, axis=1, keepdims=True)  # (m, 1)
+    o_ref[...] = (dots * alpha_ref[...][None, :] + xsum * mu_ref[...][None, :]).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def binary_gemm(x, b, alpha, mu, row_tile=128):
+    """Pallas W1A16 sign-GEMM. x: (m, n); b: (o, n) ±1 (float dtype);
+    alpha, mu: (o,). Returns (m, o) in x.dtype."""
+    m, n = x.shape
+    o, n2 = b.shape
+    assert n == n2, f"shape mismatch {x.shape} vs {b.shape}"
+    row_tile = min(row_tile, o)
+    # Pad o to a multiple of the tile so the grid is exact.
+    pad = (-o) % row_tile
+    if pad:
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+        alpha = jnp.pad(alpha, (0, pad))
+        mu = jnp.pad(mu, (0, pad))
+    o_pad = o + pad
+    grid = (o_pad // row_tile,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),           # x broadcast
+            pl.BlockSpec((row_tile, n), lambda i: (i, 0)),    # B row tile
+            pl.BlockSpec((row_tile,), lambda i: (i,)),        # alpha tile
+            pl.BlockSpec((row_tile,), lambda i: (i,)),        # mu tile
+        ],
+        out_specs=pl.BlockSpec((m, row_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, o_pad), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, b.astype(x.dtype), alpha.astype(x.dtype), mu.astype(x.dtype))
+    return out[:, :o]

@@ -1,0 +1,125 @@
+"""Binary-Codebook LUT-GEMM Pallas kernel (paper App. H).
+
+The weight matrix never exists at runtime: it is a codebook
+C in {-1,+1}^{c x v} plus an index matrix I in [0,c)^{o x nb}
+(nb = n / v), with per-row scale alpha and bias mu.
+
+Two-stage lookup structure, faithful to the paper:
+
+  Stage-I  (activation LUT): split each length-v activation block into
+           P = v/mu segments of mu elements; LUT[j,p,s] holds the signed
+           sum of segment (j,p) under ±1 pattern s (2^mu patterns).
+           Built as one small matmul against the constant pattern matrix.
+  Stage-II (codebook LUT):   CBLUT[j,k] = sum_p LUT[j, p, key[k,p]]
+           where key[k,p] packs the mu sign bits of codebook entry k,
+           segment p — precomputed offline from C (`codebook_keys`).
+  Gather:  y[i,r] = alpha[r] * sum_j CBLUT[i, j, I[r,j]]
+                  + mu[r] * sum(x[i]).
+
+HARDWARE MAPPING (DESIGN.md §Hardware-Adaptation): the CUDA version
+places LUT/CBLUT in shared memory and replicates across warps; here the
+grid tiles output rows, CBLUT is built once per grid step in VMEM and
+reused by the whole row tile (the paper's "large tile of output rows"),
+and the index gather lowers to dynamic-slice streams. The LUT build is
+VPU work; there is deliberately no MXU matmul on the per-row path.
+
+interpret=True always — Mosaic custom-calls cannot run on CPU PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pattern_matrix(mu_bits, dtype=jnp.float32):
+    """S[s, t] = 2*bit_t(s) - 1, shape (2^mu, mu)."""
+    s = jnp.arange(1 << mu_bits, dtype=jnp.int32)
+    t = jnp.arange(mu_bits, dtype=jnp.int32)
+    return (2 * ((s[:, None] >> t[None, :]) & 1) - 1).astype(dtype)
+
+
+def codebook_keys(codebook, mu_bits):
+    """key[k, p] = packed mu-bit sign pattern of codebook entry k, segment p.
+
+    Precomputed OFFLINE at quantization time (the codebook is static).
+    codebook: (c, v) ±1 -> (c, v/mu) int32.
+    """
+    c, v = codebook.shape
+    assert v % mu_bits == 0
+    p = v // mu_bits
+    bits = ((codebook.reshape(c, p, mu_bits) + 1) // 2).astype(jnp.int32)
+    t = jnp.arange(mu_bits, dtype=jnp.int32)
+    return jnp.sum(bits << t[None, None, :], axis=-1)
+
+
+def _kernel(mu_bits, x_ref, key_ref, idx_ref, alpha_ref, mu_ref, o_ref):
+    x = x_ref[...]                       # (m, n)
+    key = key_ref[...]                   # (c, p)
+    idx = idx_ref[...]                   # (o_tile, nb)
+    m, n = x.shape
+    c, p = key.shape
+    o_tile, nb = idx.shape
+    v = n // nb
+    npat = 1 << mu_bits
+
+    # Stage-I: activation LUTs. One small matmul against the constant
+    # pattern matrix: LUT[i, j, pp, s].
+    patterns = pattern_matrix(mu_bits, x.dtype)  # (npat, mu)
+    xseg = x.reshape(m, nb, p, mu_bits)
+    lut = jax.lax.dot_general(
+        xseg, patterns, (((3,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (m, nb, p, npat)
+
+    # Stage-II: codebook LUT. CBLUT[i, j, k] = sum_pp LUT[i, j, pp, key[k, pp]].
+    keyt = jnp.broadcast_to(key.T[None, None, :, :], (m, nb, p, c))
+    cblut = jnp.take_along_axis(lut, keyt, axis=3).sum(axis=2)  # (m, nb, c)
+
+    # Gather-accumulate over the index tile: one lookup + add per block.
+    idxt = jnp.broadcast_to(idx.T[None, :, :], (m, nb, o_tile))
+    dots = jnp.take_along_axis(cblut, idxt, axis=2).sum(axis=1)  # (m, o_tile)
+
+    xsum = jnp.sum(x, axis=1, keepdims=True)
+    o_ref[...] = (
+        dots * alpha_ref[...][None, :] + xsum * mu_ref[...][None, :]
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mu_bits", "row_tile"))
+def lut_gemm(x, codebook, idx, alpha, mu, mu_bits=4, row_tile=128):
+    """Binary-codebook LUT-GEMM.
+
+    x: (m, n); codebook: (c, v) ±1 float; idx: (o, nb) int32 with
+    nb*v == n; alpha, mu: (o,). Returns (m, o) in x.dtype.
+    """
+    m, n = x.shape
+    c, v = codebook.shape
+    o, nb = idx.shape
+    assert nb * v == n, f"{nb}*{v} != {n}"
+    assert v % mu_bits == 0
+    key = codebook_keys(codebook, mu_bits)  # offline in deployment
+    row_tile = min(row_tile, o)
+    pad = (-o) % row_tile
+    if pad:
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+        alpha = jnp.pad(alpha, (0, pad))
+        mu = jnp.pad(mu, (0, pad))
+    o_pad = o + pad
+    grid = (o_pad // row_tile,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, mu_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, n), lambda i: (0, 0)),             # x broadcast
+            pl.BlockSpec((c, v // mu_bits), lambda i: (0, 0)),  # keys broadcast
+            pl.BlockSpec((row_tile, nb), lambda i: (i, 0)),     # index tile
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+            pl.BlockSpec((row_tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((m, row_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, o_pad), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, key, idx.astype(jnp.int32), alpha.astype(x.dtype), mu.astype(x.dtype))
+    return out[:, :o]

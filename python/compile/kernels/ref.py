@@ -1,0 +1,81 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything here is the *semantic* definition; the Pallas kernels in
+`binary_gemm.py` / `lut_gemm.py` must match these to float tolerance.
+"""
+
+import jax.numpy as jnp
+
+
+def reconstruct_binary(b, alpha, mu):
+    """W_hat[r, :] = alpha[r] * B[r, :] + mu[r].
+
+    b: (o, n) in {-1, +1}; alpha, mu: (o,). Returns (o, n) float.
+    """
+    return alpha[:, None] * b + mu[:, None]
+
+
+def binary_gemm_ref(x, b, alpha, mu):
+    """y = x @ W_hat^T with W_hat = alpha*B + mu (per output row).
+
+    x: (m, n); b: (o, n) ±1; alpha, mu: (o,). Returns (m, o).
+    """
+    w = reconstruct_binary(b.astype(x.dtype), alpha.astype(x.dtype), mu.astype(x.dtype))
+    return x @ w.T
+
+
+def expand_codebook(codebook, idx):
+    """Materialize W's ±1 matrix from codebook entries.
+
+    codebook: (c, v) ±1; idx: (o, nb) int; returns (o, nb*v).
+    """
+    o, nb = idx.shape
+    _, v = codebook.shape
+    return codebook[idx].reshape(o, nb * v)
+
+
+def lut_gemm_ref(x, codebook, idx, alpha, mu):
+    """Reference for the Binary-Codebook LUT-GEMM (paper App. H).
+
+    x: (m, n) with n = nb*v; codebook: (c, v) ±1; idx: (o, nb) int;
+    alpha, mu: (o,). y[i, r] = alpha[r] * sum_j <x_block[i,j], C[idx[r,j]]>
+                              + mu[r] * sum(x[i]).
+    """
+    b = expand_codebook(codebook, idx).astype(x.dtype)
+    return binary_gemm_ref(x, b, alpha, mu)
+
+
+def lut_gemm_twostage_ref(x, codebook, idx, alpha, mu, mu_bits=4):
+    """Two-stage LUT formulation (Stage-I activation LUT over mu_bits-wide
+    ±1 patterns, Stage-II codebook LUT, index-gather accumulation).
+
+    Algebraically identical to lut_gemm_ref; spelled out LUT-wise so the
+    Rust CPU engine and the Pallas kernel share an oracle for the *staged*
+    computation.
+    """
+    m, n = x.shape
+    c, v = codebook.shape
+    o, nb = idx.shape
+    assert n == nb * v and v % mu_bits == 0
+    p = v // mu_bits
+    npat = 1 << mu_bits
+    # Pattern matrix S[s, t] = ±1 from the bits of s (bit t -> position t).
+    s_codes = jnp.arange(npat, dtype=jnp.int32)
+    t_codes = jnp.arange(mu_bits, dtype=jnp.int32)
+    patterns = (2 * ((s_codes[:, None] >> t_codes[None, :]) & 1) - 1).astype(x.dtype)
+    # Stage-I: LUT[i, j, pp, s] = <x[i, j, pp, :], patterns[s]>
+    xseg = x.reshape(m, nb, p, mu_bits)
+    lut = jnp.einsum("ijpt,st->ijps", xseg, patterns)
+    # Codebook keys: key[k, pp] = packed bits of C[k, pp*mu : (pp+1)*mu].
+    bits = ((codebook.reshape(c, p, mu_bits) + 1) // 2).astype(jnp.int32)
+    key = jnp.sum(bits << t_codes[None, None, :], axis=-1)  # (c, p)
+    # Stage-II: CBLUT[i, j, k] = sum_pp LUT[i, j, pp, key[k, pp]]
+    cblut = jnp.take_along_axis(
+        lut, jnp.broadcast_to(key.T[None, None, :, :], (m, nb, p, c)), axis=3
+    ).sum(axis=2)  # (m, nb, c)
+    # Gather-accumulate: y[i, r] = sum_j CBLUT[i, j, idx[r, j]]
+    gathered = jnp.take_along_axis(
+        cblut, jnp.broadcast_to(idx.T[None, :, :], (m, nb, o)), axis=2
+    )  # (m, nb, o)
+    dots = gathered.sum(axis=1)  # (m, o)
+    return alpha[None, :] * dots + mu[None, :] * x.sum(axis=1, keepdims=True)

@@ -1,0 +1,221 @@
+"""L2: TinyLM — the JAX model whose linear layers are the quantization
+targets, used both to TRAIN the build-time workload models and to lower
+the AOT inference graphs (fp + kernel-backed quantized variants).
+
+Architecture: pre-norm decoder-only transformer (LLaMA-style):
+RMSNorm, RoPE, multi-head attention with optional GQA (the "TinyQwen"
+family), SwiGLU FFN, tied input/output embedding.
+
+Params are a flat dict[str, jnp.ndarray] with the SAME tensor names the
+Rust side reads from the TLM1 weight blob (io/weights.rs):
+  emb (vocab, d), lnf (d,), and per layer i:
+  l{i}.ln1, l{i}.wq (d, d), l{i}.wk (kv_dim, d), l{i}.wv (kv_dim, d),
+  l{i}.wo (d, d), l{i}.ln2, l{i}.wgate (ff, d), l{i}.wup (ff, d),
+  l{i}.wdown (d, ff).
+All linears are stored (out, in), applied as y = x @ W^T.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import binary_gemm, lut_gemm
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 128
+    d_model: int = 128
+    n_layer: int = 4
+    n_head: int = 4
+    n_kv_head: int = 4
+    d_ff: int = 344
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_head * self.head_dim
+
+    def param_count(self, params=None) -> int:
+        per_layer = (
+            self.d_model * self.d_model * 2
+            + self.kv_dim * self.d_model * 2
+            + 3 * self.d_model * self.d_ff
+            + 2 * self.d_model
+        )
+        return self.vocab * self.d_model + self.n_layer * per_layer + self.d_model
+
+
+# The model zoo. Sizes are scaled so that training + the full bench grid
+# run on a single CPU core (DESIGN.md §2); "tinyllama" mirrors the LLaMA
+# rows of Tables 1-2, "tinyqwen" (GQA) mirrors the Qwen rows of Table 5,
+# "fbi" is the QAT-binary FBI-LLM analog of Table 4.
+CONFIGS = {
+    "tinylm_s": ModelConfig("tinylm_s", d_model=96, n_layer=3, n_head=3, n_kv_head=3, d_ff=256),
+    "tinylm_m": ModelConfig("tinylm_m", d_model=128, n_layer=4, n_head=4, n_kv_head=4, d_ff=344),
+    "tinylm_l": ModelConfig("tinylm_l", d_model=192, n_layer=6, n_head=6, n_kv_head=6, d_ff=512),
+    "tinyqwen_s": ModelConfig("tinyqwen_s", d_model=128, n_layer=4, n_head=4, n_kv_head=2, d_ff=320),
+    "tinyqwen_m": ModelConfig("tinyqwen_m", d_model=160, n_layer=5, n_head=5, n_kv_head=1, d_ff=416),
+    "fbi_s": ModelConfig("fbi_s", d_model=96, n_layer=3, n_head=3, n_kv_head=3, d_ff=256),
+}
+
+LINEAR_NAMES = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"]
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """LLaMA-style init: normal(0, 0.02sqrt-scaled) for linears."""
+    params = {}
+    keys = jax.random.split(key, 2 + cfg.n_layer)
+    params["emb"] = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+    params["lnf"] = jnp.ones((cfg.d_model,))
+    for i in range(cfg.n_layer):
+        lk = jax.random.split(keys[2 + i], 7)
+        s = 0.02
+        so = 0.02 / jnp.sqrt(2.0 * cfg.n_layer)  # scaled residual-out init
+        params[f"l{i}.ln1"] = jnp.ones((cfg.d_model,))
+        params[f"l{i}.ln2"] = jnp.ones((cfg.d_model,))
+        params[f"l{i}.wq"] = jax.random.normal(lk[0], (cfg.d_model, cfg.d_model)) * s
+        params[f"l{i}.wk"] = jax.random.normal(lk[1], (cfg.kv_dim, cfg.d_model)) * s
+        params[f"l{i}.wv"] = jax.random.normal(lk[2], (cfg.kv_dim, cfg.d_model)) * s
+        params[f"l{i}.wo"] = jax.random.normal(lk[3], (cfg.d_model, cfg.d_model)) * so
+        params[f"l{i}.wgate"] = jax.random.normal(lk[4], (cfg.d_ff, cfg.d_model)) * s
+        params[f"l{i}.wup"] = jax.random.normal(lk[5], (cfg.d_ff, cfg.d_model)) * s
+        params[f"l{i}.wdown"] = jax.random.normal(lk[6], (cfg.d_model, cfg.d_ff)) * so
+    return params
+
+
+def rmsnorm(x, w, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def rope_angles(cfg: ModelConfig, seq: int):
+    """(seq, head_dim/2) rotation angles, computed with NUMPY so they
+    embed as literal constants in the lowered HLO. (XLA's own cos/sin
+    lose accuracy for large arguments in the pinned xla_extension 0.5.1
+    the Rust runtime uses — table precomputation sidesteps that and is
+    standard practice anyway.)"""
+    hd = cfg.head_dim
+    inv = cfg.rope_theta ** (-np.arange(0, hd, 2, dtype=np.float64) / hd)
+    pos = np.arange(seq, dtype=np.float64)
+    return pos[:, None] * inv[None, :]
+
+
+def apply_rope(x, ang):
+    """x: (..., seq, n_head, head_dim); rotate pairs (even, odd) halves.
+
+    Uses the "split-half" convention (first half = real, second half =
+    imag), matching rust/src/model/rope.rs.
+    """
+    hd = x.shape[-1]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    cos = jnp.asarray(np.cos(ang), x.dtype)[None, :, None, :]
+    sin = jnp.asarray(np.sin(ang), x.dtype)[None, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _linear(x, w):
+    return x @ w.T
+
+
+def attention(cfg: ModelConfig, params, i, x):
+    """Causal self-attention with optional GQA. x: (b, s, d)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    q = _linear(x, params[f"l{i}.wq"]).reshape(b, s, cfg.n_head, hd)
+    k = _linear(x, params[f"l{i}.wk"]).reshape(b, s, cfg.n_kv_head, hd)
+    v = _linear(x, params[f"l{i}.wv"]).reshape(b, s, cfg.n_kv_head, hd)
+    ang = rope_angles(cfg, s)
+    q = apply_rope(q, ang)
+    k = apply_rope(k, ang)
+    if cfg.n_kv_head != cfg.n_head:
+        rep = cfg.n_head // cfg.n_kv_head
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, d)
+    return _linear(out, params[f"l{i}.wo"])
+
+
+def ffn(cfg: ModelConfig, params, i, x):
+    g = _linear(x, params[f"l{i}.wgate"])
+    u = _linear(x, params[f"l{i}.wup"])
+    return _linear(jax.nn.silu(g) * u, params[f"l{i}.wdown"])
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens: (b, s) int32 -> logits (b, s, vocab). FP path."""
+    x = params["emb"][tokens]
+    for i in range(cfg.n_layer):
+        x = x + attention(cfg, params, i, rmsnorm(x, params[f"l{i}.ln1"]))
+        x = x + ffn(cfg, params, i, rmsnorm(x, params[f"l{i}.ln2"]))
+    x = rmsnorm(x, params["lnf"])
+    return x @ params["emb"].T  # tied embedding
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Next-token cross-entropy. tokens: (b, s+1)."""
+    logits = forward(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# QAT-lite (FBI-LLM analog, Table 4): straight-through binary weights.
+# ---------------------------------------------------------------------------
+
+def binarize_ste(w):
+    """Row-wise alpha*sign(w) with straight-through gradient."""
+    alpha = jnp.mean(jnp.abs(w), axis=1, keepdims=True)
+    wb = alpha * jnp.sign(jnp.where(w == 0, 1.0, w))
+    return w + jax.lax.stop_gradient(wb - w)
+
+
+def binarize_params(params):
+    """Apply STE binarization to every linear weight (not norms/emb)."""
+    out = dict(params)
+    for name, w in params.items():
+        if any(name.endswith("." + ln) for ln in LINEAR_NAMES):
+            out[name] = binarize_ste(w)
+    return out
+
+
+def loss_fn_qat(cfg: ModelConfig, params, tokens):
+    return loss_fn(cfg, binarize_params(params), tokens)
+
+
+# ---------------------------------------------------------------------------
+# Quantized forward using the L1 kernels (python-side validation + the
+# AOT parity graphs; the deployed path is the Rust engine).
+# ---------------------------------------------------------------------------
+
+def quantized_linear(x, qw):
+    """Apply one quantized linear. qw is a dict with kind 'binary'
+    {b, alpha, mu} or 'codebook' {codebook, idx, alpha, mu}."""
+    b, s, n = x.shape
+    x2 = x.reshape(b * s, n)
+    if qw["kind"] == "binary":
+        y = binary_gemm(x2, qw["b"], qw["alpha"], qw["mu"])
+    elif qw["kind"] == "codebook":
+        y = lut_gemm(x2, qw["codebook"], qw["idx"], qw["alpha"], qw["mu"])
+    else:
+        raise ValueError(qw["kind"])
+    return y.reshape(b, s, -1)
+
+
+def quantized_ffn(cfg: ModelConfig, qparams, i, x):
+    g = quantized_linear(x, qparams[f"l{i}.wgate"])
+    u = quantized_linear(x, qparams[f"l{i}.wup"])
+    return quantized_linear(jax.nn.silu(g) * u, qparams[f"l{i}.wdown"])

@@ -1,0 +1,93 @@
+"""Build-time trainer for the TinyLM workload models.
+
+Runs ONCE under `make artifacts` (python is never on the request path).
+optax/flax are not in the offline image, so this is a self-contained
+Adam + cosine schedule + grad clipping implementation over the pure
+functional model in model.py.
+
+Also trains the QAT-lite binary model (FBI-LLM analog, Table 4) via the
+straight-through estimator in model.binarize_params.
+"""
+
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blob
+from .model import CONFIGS, ModelConfig, init_params, loss_fn, loss_fn_qat
+
+
+def make_batches(corpus: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    """Random crops of length seq+1 from the byte corpus."""
+    rng = np.random.default_rng(seed)
+    hi = len(corpus) - seq - 2
+    for _ in range(steps):
+        starts = rng.integers(0, hi, size=batch)
+        yield np.stack([corpus[s : s + seq + 1] for s in starts]).astype(np.int32)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "qat", "lr_max", "total_steps"))
+def train_step(cfg: ModelConfig, params, opt, tokens, qat=False,
+               lr_max=3e-3, total_steps=400):
+    lfn = loss_fn_qat if qat else loss_fn
+    loss, grads = jax.value_and_grad(lambda p: lfn(cfg, p, tokens))(params)
+    # Global-norm clip.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+    t = opt["t"] + 1
+    # 20-step warmup then cosine decay.
+    tf = t.astype(jnp.float32)
+    warm = jnp.minimum(tf / 20.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(tf / total_steps, 1.0)))
+    lr = lr_max * warm * (0.1 + 0.9 * cos)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g * scale, opt["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * scale) ** 2, opt["v"], grads)
+    bc1 = 1 - b1 ** tf
+    bc2 = 1 - b2 ** tf
+    new_params = jax.tree.map(
+        lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+        params, new_m, new_v,
+    )
+    return new_params, {"m": new_m, "v": new_v, "t": t}, loss, lr
+
+
+def train_model(name: str, corpus: np.ndarray, out_dir: str, steps: int,
+                batch: int = 8, seq: int = 128, seed: int = 42,
+                qat: bool = False, log_every: int = 10) -> dict:
+    cfg = CONFIGS[name]
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    curve = []
+    t0 = time.time()
+    for step, tokens in enumerate(make_batches(corpus, batch, seq, steps, seed)):
+        params, opt, loss, lr = train_step(
+            cfg, params, opt, jnp.asarray(tokens), qat=qat, total_steps=steps
+        )
+        if step % log_every == 0 or step == steps - 1:
+            curve.append((step, float(loss)))
+            print(f"[{name}] step {step:4d} loss {float(loss):.4f} lr {float(lr):.2e} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    # For the QAT model, bake the binarized weights in (the FBI analog
+    # ships natively-binary linear weights).
+    if qat:
+        from .model import binarize_params
+        params = jax.tree.map(lambda x: x, binarize_params(params))
+    blob.save(os.path.join(out_dir, f"{name}.bin"), cfg, params)
+    with open(os.path.join(out_dir, f"train_metrics_{name}.txt"), "w") as f:
+        f.write(f"# model={name} params={cfg.param_count()} steps={steps} "
+                f"batch={batch} seq={seq} qat={int(qat)}\n")
+        for s, l in curve:
+            f.write(f"{s} {l:.6f}\n")
+    print(f"[{name}] done: final loss {curve[-1][1]:.4f}, "
+          f"{cfg.param_count()} params, {time.time()-t0:.0f}s", flush=True)
+    return params

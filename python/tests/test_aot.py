@@ -1,0 +1,74 @@
+"""AOT artifact sanity: manifest contents and HLO-text invariants.
+
+Runs against artifacts/ when present (i.e. after `make artifacts`);
+skips otherwise so the suite works on a clean checkout.
+"""
+
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.txt")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def test_manifest_lists_expected_artifacts():
+    lines = open(os.path.join(ART, "manifest.txt")).read().splitlines()
+    names = {l.split()[0] for l in lines}
+    for expected in [
+        "corpus_train.txt", "corpus_eval.txt", "tinylm_s.bin", "tinylm_m.bin",
+        "tinylm_l.bin", "tinyqwen_s.bin", "tinyqwen_m.bin", "fbi_s.bin",
+        "binary_gemm.hlo.txt", "lut_gemm.hlo.txt", "tinylm_s_fwd.hlo.txt",
+    ]:
+        assert expected in names, f"missing {expected}"
+    for name in names:
+        assert os.path.exists(os.path.join(ART, name)), name
+
+
+def test_hlo_text_constants_not_elided():
+    """Regression: the default printer elides big constants as `{...}`,
+    which the Rust-side parser reads as garbage (zeros). All artifacts
+    must be printed with print_large_constants=True."""
+    for name in ["binary_gemm.hlo.txt", "lut_gemm.hlo.txt", "tinylm_s_fwd.hlo.txt"]:
+        text = open(os.path.join(ART, name)).read()
+        assert "constant({...})" not in text, f"{name} has elided constants"
+
+
+def test_hlo_entry_signature():
+    """tinylm_s_fwd takes tokens + 29 sorted tensors (the documented
+    calling convention for the Rust runtime)."""
+    text = open(os.path.join(ART, "tinylm_s_fwd.hlo.txt")).read()
+    # entry layout: tokens (s32) + 29 f32 tensors.
+    entry = text.splitlines()[0]
+    assert entry.startswith("HloModule")
+    assert "s32[1,32]" in entry  # tokens arg first
+    n_args = entry.split("->")[0].count("f32[") + entry.split("->")[0].count("s32[")
+    assert n_args == 30, f"expected 30 entry args, got {n_args}"
+
+
+def test_fbi_weights_are_binary():
+    """The FBI analog ships natively-binary linear weights."""
+    import numpy as np
+    from compile import blob
+
+    cfg, params = blob.load(os.path.join(ART, "fbi_s.bin"))
+    w = np.asarray(params["l0.wq"])
+    # every row: exactly two magnitudes (+a, -a)
+    for r in range(0, w.shape[0], 16):
+        mags = np.abs(w[r])
+        spread = mags.max() - mags.min()
+        assert spread <= 1e-6 * mags.max(), f"row {r} not binary: spread {spread}"
+
+
+def test_trained_models_better_than_chance():
+    """Each trained blob's final loss must be far below ln(128)=4.85."""
+    import glob
+
+    for path in glob.glob(os.path.join(ART, "train_metrics_*.txt")):
+        lines = [l for l in open(path).read().splitlines() if not l.startswith("#")]
+        final = float(lines[-1].split()[1])
+        assert final < 2.5, f"{os.path.basename(path)}: final loss {final}"

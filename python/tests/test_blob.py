@@ -1,0 +1,36 @@
+"""TLM1 weight-blob format roundtrip (python writer side)."""
+
+import jax
+import numpy as np
+
+from compile import blob
+from compile.model import CONFIGS, init_params
+
+
+def test_roundtrip(tmp_path):
+    cfg = CONFIGS["tinylm_s"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "m.bin")
+    blob.save(path, cfg, params)
+    cfg2, params2 = blob.load(path)
+    assert (cfg2.vocab, cfg2.d_model, cfg2.n_layer) == (cfg.vocab, cfg.d_model, cfg.n_layer)
+    assert (cfg2.n_head, cfg2.n_kv_head, cfg2.d_ff) == (cfg.n_head, cfg.n_kv_head, cfg.d_ff)
+    assert abs(cfg2.rope_theta - cfg.rope_theta) < 1e-3
+    assert set(params2) == set(params)
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(params[k], np.float32), params2[k])
+
+
+def test_header_layout(tmp_path):
+    """Byte-level header pin so rust/src/io/weights.rs cannot drift."""
+    cfg = CONFIGS["tinylm_s"]
+    params = {"emb": np.zeros((2, 3), np.float32)}
+    path = str(tmp_path / "h.bin")
+    blob.save(path, cfg, params)
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"TLM1"
+    import struct
+    ver, vocab, d, nl, nh, nkv, dff, mseq = struct.unpack_from("<8I", raw, 4)
+    assert (ver, vocab, d) == (1, cfg.vocab, cfg.d_model)
+    (nt,) = struct.unpack_from("<I", raw, 40)
+    assert nt == 1

@@ -1,0 +1,65 @@
+"""Corpus generator: determinism, ASCII-only, structural guarantees."""
+
+from compile import corpus
+
+
+def test_deterministic():
+    assert corpus.generate(5000, seed=7) == corpus.generate(5000, seed=7)
+
+
+def test_seed_changes_output():
+    assert corpus.generate(5000, seed=7) != corpus.generate(5000, seed=8)
+
+
+def test_ascii_vocab_bound():
+    text = corpus.generate(20000, seed=42)
+    assert all(ord(ch) < 128 for ch in text)
+    assert len(text) >= 20000
+
+
+def test_sentences_terminated():
+    text = corpus.generate(10000, seed=42)
+    for line in text.strip().split("\n"):
+        assert line.endswith("."), line
+
+
+def test_agreement_morphology_present():
+    """Both singular and plural agreement forms must occur (needed by the
+    zero-shot agreement probe)."""
+    text = corpus.generate(50000, seed=42)
+    assert "the cat " in text or "the dog " in text
+    assert " run ." in text and " runs ." in text
+
+
+def test_category_facts_consistent():
+    """'X is an animal' only for animal nouns."""
+    text = corpus.generate(80000, seed=42)
+    for line in text.split("\n"):
+        if " is an animal" in line:
+            noun = line.split()[1]
+            assert noun in corpus.ANIMALS
+
+
+def test_brackets_balanced():
+    text = corpus.generate(50000, seed=42)
+    for line in text.split("\n"):
+        if line.startswith("("):
+            depth = 0
+            for tok in line.split():
+                if tok == "(":
+                    depth += 1
+                elif tok == ")":
+                    depth -= 1
+                assert depth >= 0
+            assert depth == 0
+
+
+def test_splitmix_matches_reference_vector():
+    """Pin the PRNG so rust/src/util/rng.rs and corpus.py can never drift."""
+    rng = corpus.SplitMix64(42)
+    got = [rng.next_u64() for _ in range(3)]
+    assert got == [
+        13679457532755275413,
+        2949826092126892291,
+        5139283748462763858,
+    ]

@@ -1,0 +1,123 @@
+"""L2 model: shapes, invariances, QAT binarization, quantized-linear path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.model import (
+    CONFIGS, LINEAR_NAMES, ModelConfig, apply_rope, binarize_params,
+    binarize_ste, forward, init_params, loss_fn, quantized_linear, rmsnorm,
+    rope_angles,
+)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = CONFIGS["tinylm_s"]
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_param_count_matches_init(small):
+    cfg, params = small
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == cfg.param_count()
+
+
+def test_forward_shape_and_finite(small):
+    cfg, params = small
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = forward(cfg, params, toks)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_causality(small):
+    """Changing a future token must not change past logits."""
+    cfg, params = small
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, 96, size=(1, 12)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % 96
+    l1 = forward(cfg, params, jnp.asarray(t1))
+    l2 = forward(cfg, params, jnp.asarray(t2))
+    assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]), rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_forward_shape():
+    cfg = CONFIGS["tinyqwen_s"]
+    assert cfg.n_kv_head != cfg.n_head
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    logits = forward(cfg, params, jnp.zeros((1, 8), jnp.int32))
+    assert logits.shape == (1, 8, cfg.vocab)
+
+
+def test_rope_preserves_norm():
+    cfg = CONFIGS["tinylm_s"]
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 8, 3, cfg.head_dim)), jnp.float32)
+    y = apply_rope(x, rope_angles(cfg, 8))
+    assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+
+
+def test_rope_position_zero_identity():
+    cfg = CONFIGS["tinylm_s"]
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 4, 2, cfg.head_dim)), jnp.float32)
+    y = apply_rope(x, rope_angles(cfg, 4))
+    assert_allclose(np.asarray(y[:, 0]), np.asarray(x[:, 0]), rtol=1e-6)
+
+
+def test_rmsnorm_unit_scale():
+    x = jnp.asarray([[3.0, 4.0]])
+    y = rmsnorm(x, jnp.ones(2))
+    # rms of y must be ~1
+    assert abs(float(jnp.sqrt(jnp.mean(y * y))) - 1.0) < 1e-3
+
+
+def test_loss_decreases_on_repeated_data(small):
+    """One-batch overfit sanity: a few Adam steps reduce the loss."""
+    from compile.train import adam_init, train_step
+    cfg, params = small
+    toks = jnp.asarray(np.tile(np.arange(33, dtype=np.int32) % 90, (4, 1)))
+    opt = adam_init(params)
+    l0 = float(loss_fn(cfg, params, toks))
+    p = params
+    for _ in range(10):
+        p, opt, loss, _ = train_step(cfg, p, opt, toks, total_steps=10)
+    assert float(loss) < l0
+
+
+def test_binarize_ste_is_row_binary():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(6, 10)), jnp.float32)
+    wb = binarize_ste(w)
+    vals = np.asarray(wb)
+    for r in range(6):
+        uniq = np.unique(np.abs(vals[r]))
+        assert len(uniq) == 1  # alpha_r * (+-1)
+
+
+def test_binarize_params_only_linears(small):
+    cfg, params = small
+    bp = binarize_params(params)
+    assert np.array_equal(np.asarray(bp["emb"]), np.asarray(params["emb"]))
+    w = np.asarray(bp["l0.wq"])
+    assert len(np.unique(np.abs(w[0]))) == 1
+
+
+def test_quantized_linear_binary_matches_dense(small):
+    cfg, params = small
+    w = params["l0.wq"]
+    alpha = jnp.mean(jnp.abs(w), axis=1)
+    b = jnp.sign(jnp.where(w == 0, 1.0, w))
+    mu = jnp.zeros(w.shape[0])
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 5, cfg.d_model)), jnp.float32)
+    qw = {"kind": "binary", "b": b, "alpha": alpha, "mu": mu}
+    y = quantized_linear(x, qw)
+    want = ref.binary_gemm_ref(x.reshape(10, -1), b, alpha, mu).reshape(2, 5, -1)
+    assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-4, atol=1e-4)

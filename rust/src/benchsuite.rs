@@ -1,0 +1,125 @@
+//! Shared scaffolding for the `cargo bench` targets that regenerate the
+//! paper's tables and figures (see DESIGN.md §4 for the experiment
+//! index). Each bench target is a thin `harness = false` binary over
+//! these helpers.
+
+use anyhow::{Context, Result};
+
+use crate::data::ByteTokenizer;
+use crate::eval::{memory, perplexity, zeroshot};
+use crate::io::{load_model, RawModel};
+use crate::quant::pipeline::{quantize_model, QuantConfig, QuantizedModel};
+
+/// True when `--quick` was passed or `BTC_QUICK=1` — benches shrink
+/// their grids so CI smoke stays fast.
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || matches!(std::env::var("BTC_QUICK").as_deref(), Ok("1") | Ok("true"))
+}
+
+/// cargo bench passes `--bench`; ignore it and other harness flags.
+pub fn is_bench_invocation() -> bool {
+    true
+}
+
+/// Load a model + its eval corpus from artifacts/.
+pub struct Workload {
+    pub name: String,
+    pub raw: RawModel,
+    pub eval_tokens: Vec<u16>,
+    pub corpus: Vec<u8>,
+}
+
+pub fn load_workload(name: &str) -> Result<Workload> {
+    let dir = crate::artifacts_dir();
+    let raw = load_model(&dir.join(format!("{name}.bin")))
+        .with_context(|| format!("{name}.bin missing — run `make artifacts`"))?;
+    let corpus = std::fs::read(dir.join("corpus_eval.txt")).context("corpus_eval.txt")?;
+    let tok = ByteTokenizer::default();
+    let eval_tokens = tok.encode(&String::from_utf8_lossy(&corpus));
+    Ok(Workload { name: name.to_string(), raw, eval_tokens, corpus })
+}
+
+/// One quantization lane evaluated on one workload.
+#[derive(Debug, Clone)]
+pub struct LaneResult {
+    pub model: String,
+    pub method: String,
+    pub bits_label: f64,
+    /// Paper-convention payload bits (signs/indices/masks).
+    pub payload_bits: f64,
+    /// Fully measured bits incl. fp16 scales.
+    pub measured_bits: f64,
+    pub ppl: f64,
+    pub mean_acc: Option<f64>,
+    pub per_task: Vec<(String, f64)>,
+    pub quant_secs: f64,
+    pub codebook_overhead: f64,
+    pub compression: f64,
+}
+
+/// Quantize + evaluate one lane.
+pub fn eval_lane(
+    w: &Workload,
+    cfg: &QuantConfig,
+    eval_tokens: usize,
+    zeroshot_n: Option<usize>,
+) -> Result<LaneResult> {
+    let t0 = std::time::Instant::now();
+    let qm: QuantizedModel = quantize_model(&w.raw, &w.corpus, cfg)?;
+    let quant_secs = t0.elapsed().as_secs_f64();
+    let ppl = perplexity::perplexity(&qm.model, &w.eval_tokens, 96, eval_tokens);
+    let (per_task, mean_acc) = match zeroshot_n {
+        Some(n) => {
+            let (pt, m) = zeroshot::run_all(&qm.model, n, 7);
+            (pt, Some(m))
+        }
+        None => (Vec::new(), None),
+    };
+    let mem = memory::report(&qm.model);
+    Ok(LaneResult {
+        model: w.name.clone(),
+        method: qm.stats.method.clone(),
+        bits_label: qm.stats.target_bits,
+        payload_bits: if qm.stats.payload_bits > 0.0 { qm.stats.payload_bits } else { 16.0 },
+        measured_bits: mem.linear_bits_per_weight,
+        ppl,
+        mean_acc,
+        per_task,
+        quant_secs,
+        codebook_overhead: mem.codebook_overhead,
+        compression: mem.compression,
+    })
+}
+
+/// Format a float like the paper's tables (2 decimals, e-notation for
+/// collapsed values).
+pub fn fmt_ppl(p: f64) -> String {
+    if p.is_nan() || p.is_infinite() {
+        "inf".to_string()
+    } else if p >= 1000.0 {
+        format!("{:.1e}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ppl_matches_paper_style() {
+        assert_eq!(fmt_ppl(6.06), "6.06");
+        assert_eq!(fmt_ppl(13.064), "13.06");
+        assert_eq!(fmt_ppl(23000.0), "2.3e4");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn quick_mode_env() {
+        // No --quick arg in the test harness; env unset => false (can't
+        // assert true case without mutating global env).
+        let _ = quick_mode();
+    }
+}

@@ -1,0 +1,123 @@
+//! XOR + POPCNT Hamming-distance kernels (paper Eq. 4-5).
+//!
+//! For ±1 vectors packed as bits, squared Euclidean distance reduces to
+//! `4 · d_H` and the inner product to `len − 2 · d_H` — one XOR and one
+//! POPCNT per 64 elements instead of 64 multiply-adds.
+
+/// Hamming distance between two packed rows of `n_bits` valid bits.
+/// `tail_mask` masks the final word's padding (see BitMatrix::tail_mask).
+#[inline]
+pub fn hamming_words(a: &[u64], b: &[u64], tail_mask: u64) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let last = a.len() - 1;
+    let mut d = 0u32;
+    for i in 0..last {
+        d += (a[i] ^ b[i]).count_ones();
+    }
+    d + ((a[last] ^ b[last]) & tail_mask).count_ones()
+}
+
+/// Hamming distance between two ±1 f32 slices (reference path).
+pub fn hamming(a: &[f32], b: &[f32]) -> u32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| (**x >= 0.0) != (**y >= 0.0)).count() as u32
+}
+
+/// Inner product of two packed ±1 rows: `<a,b> = n − 2·d_H(a,b)`.
+#[inline]
+pub fn xnor_dot(a: &[u64], b: &[u64], n_bits: usize, tail_mask: u64) -> i32 {
+    n_bits as i32 - 2 * hamming_words(a, b, tail_mask) as i32
+}
+
+/// Squared Euclidean distance between ±1 vectors: `4·d_H` (paper Eq. 4).
+#[inline]
+pub fn sq_euclidean(a: &[u64], b: &[u64], tail_mask: u64) -> u32 {
+    4 * hamming_words(a, b, tail_mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bitops::pack::{pack_signs, BitMatrix};
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hamming_known() {
+        let a = [1.0, 1.0, -1.0, -1.0];
+        let b = [1.0, -1.0, -1.0, 1.0];
+        assert_eq!(hamming(&a, &b), 2);
+    }
+
+    #[test]
+    fn packed_matches_naive_property() {
+        check(
+            "hamming packed == naive",
+            50,
+            |r: &mut Rng| {
+                let n = 1 + r.below(200);
+                let a: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+                let b: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let m = BitMatrix::from_signs(2, a.len(), &[a.clone(), b.clone()].concat());
+                let packed = hamming_words(m.row(0), m.row(1), m.tail_mask());
+                let naive = hamming(a, b);
+                if packed == naive {
+                    Ok(())
+                } else {
+                    Err(format!("{packed} != {naive}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn xnor_dot_matches_fp_dot_property() {
+        check(
+            "xnor_dot == fp dot",
+            50,
+            |r: &mut Rng| {
+                let n = 1 + r.below(130);
+                let a: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+                let b: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let pa = pack_signs(a);
+                let pb = pack_signs(b);
+                let mask = if a.len() % 64 == 0 { u64::MAX } else { (1u64 << (a.len() % 64)) - 1 };
+                let fast = xnor_dot(&pa, &pb, a.len(), mask);
+                let fp: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                if fast == fp as i32 {
+                    Ok(())
+                } else {
+                    Err(format!("{fast} != {fp}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn sq_euclidean_is_4x_hamming() {
+        let a = pack_signs(&[1.0, -1.0, 1.0]);
+        let b = pack_signs(&[-1.0, -1.0, -1.0]);
+        assert_eq!(sq_euclidean(&a, &b, 0b111), 8);
+    }
+
+    #[test]
+    fn identical_vectors_distance_zero() {
+        let a = pack_signs(&[1.0; 100]);
+        assert_eq!(hamming_words(&a, &a, (1u64 << 36) - 1), 0);
+    }
+
+    #[test]
+    fn padding_bits_ignored() {
+        // 3 valid bits; poison a padding bit in one operand's copy.
+        let mut a = pack_signs(&[1.0, 1.0, 1.0]);
+        let b = pack_signs(&[1.0, 1.0, 1.0]);
+        a[0] |= 1u64 << 40; // padding
+        assert_eq!(hamming_words(&a, &b, 0b111), 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Bit-level substrate for binary weights: ±1 ↔ packed-u64 conversion
+//! and XOR/POPCNT Hamming kernels (paper Eq. 4-5, Alg. 3).
+
+pub mod hamming;
+pub mod pack;
+
+pub use hamming::{hamming, hamming_words, xnor_dot};
+pub use pack::BitMatrix;

@@ -1,0 +1,190 @@
+//! ±1 ↔ packed-u64 bit conversion.
+//!
+//! Convention (shared with `python/compile/kernels/lut_gemm.py`):
+//! bit = 1 encodes +1, bit = 0 encodes −1; element `i` of a vector maps
+//! to bit `i % 64` of word `i / 64` (little-endian bit order).
+
+/// Pack a ±1 f32 slice into u64 words. Values must be exactly ±1
+/// (zero is treated as +1, matching the paper's sign(0)=+1 rule).
+pub fn pack_signs(signs: &[f32]) -> Vec<u64> {
+    let nwords = signs.len().div_ceil(64);
+    let mut words = vec![0u64; nwords];
+    for (i, &s) in signs.iter().enumerate() {
+        if s >= 0.0 {
+            words[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+    words
+}
+
+/// Unpack u64 words into n ±1 f32 values.
+pub fn unpack_signs(words: &[u64], n: usize) -> Vec<f32> {
+    assert!(words.len() * 64 >= n, "not enough words");
+    (0..n)
+        .map(|i| if words[i / 64] >> (i % 64) & 1 == 1 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+/// A bit-packed ±1 matrix: `rows` rows, each `cols` bits padded to
+/// whole u64 words. Padding bits are ZERO (i.e. decode as −1) and must
+/// never be included in distance computations — [`crate::bitops::hamming`]
+/// masks them via `Self::tail_mask`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        let wpr = cols.div_ceil(64);
+        BitMatrix { rows, cols, words_per_row: wpr, data: vec![0; rows * wpr] }
+    }
+
+    /// Pack from a row-major ±1 f32 matrix slice.
+    pub fn from_signs(rows: usize, cols: usize, signs: &[f32]) -> Self {
+        assert_eq!(rows * cols, signs.len());
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            let packed = pack_signs(&signs[r * cols..(r + 1) * cols]);
+            let off = r * m.words_per_row;
+            m.data[off..off + m.words_per_row].copy_from_slice(&packed);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [u64] {
+        &mut self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Decode row r to ±1 f32.
+    pub fn unpack_row(&self, r: usize) -> Vec<f32> {
+        unpack_signs(self.row(r), self.cols)
+    }
+
+    /// Decode the whole matrix row-major.
+    pub fn unpack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            out.extend(self.unpack_row(r));
+        }
+        out
+    }
+
+    /// Mask selecting the valid bits of the LAST word of a row
+    /// (all-ones when cols is a multiple of 64).
+    #[inline]
+    pub fn tail_mask(&self) -> u64 {
+        let rem = self.cols % 64;
+        if rem == 0 {
+            u64::MAX
+        } else {
+            (1u64 << rem) - 1
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        if self.row(r)[c / 64] >> (c % 64) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, plus: bool) {
+        let wpr = self.words_per_row;
+        let w = &mut self.data[r * wpr + c / 64];
+        if plus {
+            *w |= 1u64 << (c % 64);
+        } else {
+            *w &= !(1u64 << (c % 64));
+        }
+    }
+
+    /// Storage in bytes (the real memory-accounting number).
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip_property() {
+        check(
+            "pack/unpack roundtrip",
+            50,
+            |r: &mut Rng| {
+                let n = 1 + r.below(200);
+                (0..n).map(|_| r.sign()).collect::<Vec<f32>>()
+            },
+            |signs| {
+                let words = pack_signs(signs);
+                let back = unpack_signs(&words, signs.len());
+                if &back == signs { Ok(()) } else { Err("roundtrip mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    fn zero_maps_to_plus_one() {
+        let words = pack_signs(&[0.0, -1.0, 1.0]);
+        assert_eq!(unpack_signs(&words, 3), vec![1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn bitmatrix_roundtrip_property() {
+        check(
+            "bitmatrix roundtrip",
+            30,
+            |r: &mut Rng| {
+                let rows = 1 + r.below(8);
+                let cols = 1 + r.below(150);
+                let signs: Vec<f32> = (0..rows * cols).map(|_| r.sign()).collect();
+                (rows, cols, signs)
+            },
+            |(rows, cols, signs)| {
+                let m = BitMatrix::from_signs(*rows, *cols, signs);
+                if &m.unpack() == signs { Ok(()) } else { Err("mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    fn get_set() {
+        let mut m = BitMatrix::zeros(3, 70);
+        assert_eq!(m.get(2, 69), -1.0);
+        m.set(2, 69, true);
+        assert_eq!(m.get(2, 69), 1.0);
+        m.set(2, 69, false);
+        assert_eq!(m.get(2, 69), -1.0);
+    }
+
+    #[test]
+    fn tail_mask_values() {
+        assert_eq!(BitMatrix::zeros(1, 64).tail_mask(), u64::MAX);
+        assert_eq!(BitMatrix::zeros(1, 3).tail_mask(), 0b111);
+        assert_eq!(BitMatrix::zeros(1, 65).tail_mask(), 1);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let m = BitMatrix::zeros(10, 100); // 2 words/row
+        assert_eq!(m.storage_bytes(), 10 * 2 * 8);
+    }
+}

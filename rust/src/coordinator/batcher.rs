@@ -1,0 +1,70 @@
+//! Dynamic batcher: drains the request queue into batches of up to
+//! `max_batch`, waiting at most `wait` for stragglers once the first
+//! request arrives (the standard continuous-batching admission policy,
+//! scaled to this coordinator's decode loop).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Drain up to `max_batch` items from `rx`, waiting at most `wait`
+/// after the first item. Returns an empty vec when the channel is
+/// closed and drained.
+pub fn collect_batch<T>(rx: &Receiver<T>, max_batch: usize, wait: Duration) -> Vec<T> {
+    let mut batch = Vec::new();
+    // Block for the first item (or closure).
+    match rx.recv() {
+        Ok(item) => batch.push(item),
+        Err(_) => return batch,
+    }
+    let deadline = Instant::now() + wait;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_available_items_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = collect_batch(&rx, 3, Duration::from_millis(1));
+        assert_eq!(b, vec![0, 1, 2]);
+        let b2 = collect_batch(&rx, 8, Duration::from_millis(1));
+        assert_eq!(b2, vec![3, 4]);
+    }
+
+    #[test]
+    fn empty_on_closed_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_empty());
+    }
+
+    #[test]
+    fn waits_for_stragglers() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            let _ = tx.send(2);
+        });
+        let b = collect_batch(&rx, 4, Duration::from_millis(200));
+        handle.join().unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Coordinator configuration, loaded from the TOML-subset config files
+//! (`configs/*.toml`) with CLI overrides.
+
+use std::path::Path;
+
+use crate::util::toml::Doc;
+
+/// Serving + quantization deployment configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Model name (artifacts/<name>.bin).
+    pub model: String,
+    /// Quantization lane: "fp16" | "binary" | "btc".
+    pub backend: String,
+    /// BTC bits target when backend == "btc".
+    pub bits: f64,
+    /// Max requests fused into one decode batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch (ms).
+    pub batch_wait_ms: u64,
+    /// Per-request default max new tokens.
+    pub max_new_tokens: usize,
+    /// Greedy (0) vs sampled decoding temperature.
+    pub temperature: f64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            model: "tinylm_s".into(),
+            backend: "btc".into(),
+            bits: 0.8,
+            max_batch: 8,
+            batch_wait_ms: 5,
+            max_new_tokens: 32,
+            temperature: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from a TOML doc (section `[serve]` + `[quant]`).
+    pub fn from_doc(doc: &Doc) -> ServeConfig {
+        let d = ServeConfig::default();
+        ServeConfig {
+            model: doc.get_str("serve.model", &d.model).to_string(),
+            backend: doc.get_str("quant.backend", &d.backend).to_string(),
+            bits: doc.get_float("quant.bits", d.bits),
+            max_batch: doc.get_int("serve.max_batch", d.max_batch as i64) as usize,
+            batch_wait_ms: doc.get_int("serve.batch_wait_ms", d.batch_wait_ms as i64) as u64,
+            max_new_tokens: doc.get_int("serve.max_new_tokens", d.max_new_tokens as i64) as usize,
+            temperature: doc.get_float("serve.temperature", d.temperature),
+            seed: doc.get_int("serve.seed", d.seed as i64) as u64,
+        }
+    }
+
+    pub fn from_file(path: &Path) -> Result<ServeConfig, String> {
+        Ok(Self::from_doc(&crate::util::toml::parse_file(path)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml::parse;
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = ServeConfig::from_doc(&parse("").unwrap());
+        assert_eq!(c.model, "tinylm_s");
+        assert_eq!(c.max_batch, 8);
+    }
+
+    #[test]
+    fn overrides_from_toml() {
+        let doc = parse(
+            "[serve]\nmodel = \"tinylm_m\"\nmax_batch = 4\n[quant]\nbackend = \"binary\"\nbits = 1.0\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc);
+        assert_eq!(c.model, "tinylm_m");
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.backend, "binary");
+        assert_eq!(c.bits, 1.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Serving metrics: counters + latency reservoir, shared across the
+//! coordinator threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_size_sum: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_completion(&self, tokens: usize, latency_us: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(latency_us);
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let mut l = self.latencies_us.lock().unwrap().clone();
+        if l.is_empty() {
+            return 0;
+        }
+        l.sort_unstable();
+        l[(((l.len() - 1) as f64) * p.clamp(0.0, 1.0)).round() as usize]
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} completed={} tokens={} batches={} mean_batch={:.2} p50={}us p99={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency_percentile_us(0.5),
+            self.latency_percentile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        m.record_request();
+        m.record_request();
+        m.record_batch(2);
+        m.record_completion(10, 1000);
+        m.record_completion(20, 3000);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 30);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        assert_eq!(m.latency_percentile_us(0.0), 1000);
+        assert_eq!(m.latency_percentile_us(1.0), 3000);
+        assert!(!m.summary().is_empty());
+    }
+
+    #[test]
+    fn empty_percentile_is_zero() {
+        assert_eq!(Metrics::new().latency_percentile_us(0.5), 0);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: config system, serving loop with dynamic batching,
+//! and metrics. The paper's contribution lives at L1/L2 (kernel +
+//! quantization algorithm), so per DESIGN.md this layer is a thin but
+//! real deployment front-end: request queue → batcher → quantized
+//! engine → token streams, all on std threads + channels (tokio is not
+//! in the offline vendor set).
+
+pub mod batcher;
+pub mod config;
+pub mod metrics;
+pub mod server;
+
+pub use config::ServeConfig;
+pub use server::{GenRequest, GenResponse, Server};

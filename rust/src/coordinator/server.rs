@@ -1,0 +1,229 @@
+//! The serving loop: a worker thread owns the (quantized) model and
+//! processes dynamically-formed batches of generation requests;
+//! clients submit via a channel handle and receive completed responses
+//! on per-request channels.
+//!
+//! Decode is greedy (temperature 0) or softmax-sampled. Prefill runs
+//! per request through the incremental path (the KV cache); decode
+//! steps for the batch are interleaved round-robin so short requests
+//! retire early (continuous batching at token granularity).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::collect_batch;
+use super::metrics::Metrics;
+use crate::model::Transformer;
+use crate::util::rng::Rng;
+
+/// A generation request.
+#[derive(Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u16>,
+    pub max_new_tokens: usize,
+    pub temperature: f64,
+    pub respond: Sender<GenResponse>,
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct GenResponse {
+    pub tokens: Vec<u16>,
+    pub prompt_len: usize,
+    pub latency: Duration,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Option<Sender<GenRequest>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    /// Spawn the worker thread owning `model`.
+    pub fn start(model: Transformer, max_batch: usize, batch_wait: Duration, seed: u64) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = channel();
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            loop {
+                let batch = collect_batch(&rx, max_batch, batch_wait);
+                if batch.is_empty() {
+                    break; // channel closed
+                }
+                m.record_batch(batch.len());
+                run_batch(&model, batch, &m, &mut rng);
+            }
+        });
+        Server { tx: Some(tx), worker: Some(worker), metrics }
+    }
+
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, prompt: Vec<u16>, max_new_tokens: usize, temperature: f64) -> Receiver<GenResponse> {
+        let (rtx, rrx) = channel();
+        self.metrics.record_request();
+        self.tx
+            .as_ref()
+            .expect("server stopped")
+            .send(GenRequest { prompt, max_new_tokens, temperature, respond: rtx })
+            .expect("server worker gone");
+        rrx
+    }
+
+    /// Graceful shutdown: close the queue and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+struct Active {
+    req: GenRequest,
+    cache: crate::model::kvcache::KvCache,
+    tokens: Vec<u16>,
+    started: Instant,
+    done: bool,
+}
+
+fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as u16)
+            .unwrap_or(0);
+    }
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let probs: Vec<f64> =
+        logits.iter().map(|&v| (((v - max) as f64) / temperature).exp()).collect();
+    let total: f64 = probs.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (i, p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i as u16;
+        }
+    }
+    (probs.len() - 1) as u16
+}
+
+fn run_batch(model: &Transformer, batch: Vec<GenRequest>, metrics: &Metrics, rng: &mut Rng) {
+    let mut active: Vec<Active> = batch
+        .into_iter()
+        .map(|req| {
+            let cap = req.prompt.len() + req.max_new_tokens + 1;
+            Active {
+                cache: model.new_cache(cap),
+                tokens: req.prompt.clone(),
+                started: Instant::now(),
+                done: false,
+                req,
+            }
+        })
+        .collect();
+
+    // Prefill (per request; the engine amortizes within the request).
+    let mut next: Vec<u16> = Vec::with_capacity(active.len());
+    for a in active.iter_mut() {
+        let mut logits = Vec::new();
+        for &t in &a.req.prompt {
+            logits = model.decode_step(t, &mut a.cache);
+        }
+        next.push(sample(&logits, a.req.temperature, rng));
+    }
+
+    // Interleaved decode: one token per active request per round.
+    loop {
+        let mut any = false;
+        for (i, a) in active.iter_mut().enumerate() {
+            if a.done {
+                continue;
+            }
+            a.tokens.push(next[i]);
+            let produced = a.tokens.len() - a.req.prompt.len();
+            // '\n' ends a "sentence" in the tinywiki world.
+            if produced >= a.req.max_new_tokens || next[i] == b'\n' as u16 {
+                a.done = true;
+                let latency = a.started.elapsed();
+                metrics.record_completion(produced, latency.as_micros() as u64);
+                let _ = a.req.respond.send(GenResponse {
+                    tokens: a.tokens.clone(),
+                    prompt_len: a.req.prompt.len(),
+                    latency,
+                });
+                continue;
+            }
+            let logits = model.decode_step(next[i], &mut a.cache);
+            next[i] = sample(&logits, a.req.temperature, rng);
+            any = true;
+        }
+        if !any {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::tests::tiny_model;
+
+    #[test]
+    fn serves_single_request() {
+        let server = Server::start(tiny_model(1, 4), 4, Duration::from_millis(1), 7);
+        let rx = server.submit(vec![1, 2, 3], 5, 0.0);
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(resp.prompt_len, 3);
+        assert!(resp.tokens.len() > 3 && resp.tokens.len() <= 8);
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_batch() {
+        let server = Server::start(tiny_model(2, 4), 4, Duration::from_millis(20), 7);
+        let rxs: Vec<_> = (0..4).map(|i| server.submit(vec![i as u16 + 1, 2], 4, 0.0)).collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert!(resp.tokens.len() >= 3);
+        }
+        assert_eq!(server.metrics.completed.load(std::sync::atomic::Ordering::Relaxed), 4);
+        assert!(server.metrics.mean_batch_size() >= 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn greedy_decode_deterministic() {
+        let m = tiny_model(3, 4);
+        let run = || {
+            let server = Server::start(m.clone(), 1, Duration::from_millis(1), 7);
+            let rx = server.submit(vec![5, 6, 7], 6, 0.0);
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            server.shutdown();
+            r.tokens
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn sampling_respects_temperature_zero() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0f32, 5.0, 1.0];
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+    }
+}

@@ -1,0 +1,77 @@
+//! Calibration-set sampling (paper §D.2: 128 sequences from the
+//! training set drive the block-wise transform optimization and the
+//! ARB split-point statistics).
+
+use crate::util::rng::Rng;
+
+/// A calibration set: token sequences drawn from a corpus.
+#[derive(Debug, Clone)]
+pub struct CalibSet {
+    pub seqs: Vec<Vec<u16>>,
+    pub seq_len: usize,
+}
+
+impl CalibSet {
+    /// Sample `n` random crops of `seq_len` tokens from corpus bytes.
+    pub fn sample(corpus: &[u8], n: usize, seq_len: usize, seed: u64) -> Self {
+        assert!(corpus.len() > seq_len + 1, "corpus too small for calibration");
+        let mut rng = Rng::new(seed);
+        let hi = corpus.len() - seq_len - 1;
+        let seqs = (0..n)
+            .map(|_| {
+                let start = rng.below(hi);
+                corpus[start..start + seq_len].iter().map(|&b| b.min(127) as u16).collect()
+            })
+            .collect();
+        CalibSet { seqs, seq_len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Total token count.
+    pub fn tokens(&self) -> usize {
+        self.seqs.len() * self.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_shapes() {
+        let corpus: Vec<u8> = (0..10_000).map(|i| (i % 90 + 32) as u8).collect();
+        let cs = CalibSet::sample(&corpus, 16, 64, 42);
+        assert_eq!(cs.len(), 16);
+        assert!(cs.seqs.iter().all(|s| s.len() == 64));
+        assert_eq!(cs.tokens(), 1024);
+    }
+
+    #[test]
+    fn deterministic() {
+        let corpus: Vec<u8> = (0..5_000).map(|i| (i % 90 + 32) as u8).collect();
+        let a = CalibSet::sample(&corpus, 4, 32, 7);
+        let b = CalibSet::sample(&corpus, 4, 32, 7);
+        assert_eq!(a.seqs, b.seqs);
+    }
+
+    #[test]
+    fn tokens_bounded_by_vocab() {
+        let corpus: Vec<u8> = (0..3_000).map(|i| (i % 256) as u8).collect();
+        let cs = CalibSet::sample(&corpus, 4, 16, 1);
+        assert!(cs.seqs.iter().flatten().all(|&t| t < 128));
+    }
+
+    #[test]
+    #[should_panic(expected = "corpus too small")]
+    fn too_small_panics() {
+        let corpus = vec![0u8; 10];
+        CalibSet::sample(&corpus, 1, 64, 0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Rust port of the tinywiki PCFG generator
+//! (`python/compile/corpus.py`). Used for serving-workload generation
+//! and hermetic tests; training/eval read the artifacts files written
+//! by the python side. Same SplitMix64 core, same grammar families.
+
+use crate::util::rng::Rng;
+
+pub const NOUNS: &[(&str, &str)] = &[
+    ("cat", "cats"), ("dog", "dogs"), ("bird", "birds"), ("fox", "foxes"),
+    ("cow", "cows"), ("frog", "frogs"), ("crab", "crabs"), ("hen", "hens"),
+    ("rock", "rocks"), ("lamp", "lamps"), ("door", "doors"), ("cup", "cups"),
+    ("box", "boxes"), ("car", "cars"), ("ship", "ships"), ("coin", "coins"),
+];
+pub const ANIMALS: &[&str] = &["cat", "dog", "bird", "fox", "cow", "frog", "crab", "hen"];
+pub const VERBS: &[(&str, &str)] = &[
+    ("runs", "run"), ("sleeps", "sleep"), ("jumps", "jump"),
+    ("sings", "sing"), ("hides", "hide"), ("waits", "wait"),
+    ("turns", "turn"), ("falls", "fall"),
+];
+pub const ADJS: &[&str] = &["big", "small", "red", "blue", "old", "new", "slow", "fast"];
+pub const PLACES: &[&str] = &["barn", "lake", "hill", "road", "town", "yard", "cave", "dock"];
+pub const NUMBER_WORDS: &[&str] = &["one", "two", "three", "four", "five", "six", "seven", "eight"];
+
+pub fn is_animal(noun: &str) -> bool {
+    ANIMALS.contains(&noun)
+}
+
+fn noun_phrase(rng: &mut Rng, plural: bool) -> String {
+    let pair = rng.choice(NOUNS);
+    let noun = if plural { pair.1 } else { pair.0 };
+    if rng.uniform() < 0.4 {
+        format!("the {} {}", rng.choice(ADJS), noun)
+    } else {
+        format!("the {noun}")
+    }
+}
+
+pub fn sent_agreement(rng: &mut Rng) -> String {
+    let plural = rng.uniform() < 0.5;
+    let v = rng.choice(VERBS);
+    let verb = if plural { v.1 } else { v.0 };
+    format!("{} {} .", noun_phrase(rng, plural), verb)
+}
+
+pub fn sent_embedded(rng: &mut Rng) -> String {
+    let plural = rng.uniform() < 0.5;
+    let inner = rng.choice(NOUNS).0;
+    let v = rng.choice(VERBS);
+    let verb = if plural { v.1 } else { v.0 };
+    let h = rng.choice(NOUNS);
+    let head = if plural { h.1 } else { h.0 };
+    format!("the {head} that sees the {inner} {verb} .")
+}
+
+pub fn sent_category(rng: &mut Rng) -> String {
+    let noun = rng.choice(NOUNS).0;
+    let kind = if is_animal(noun) { "animal" } else { "object" };
+    format!("the {noun} is an {kind} .")
+}
+
+pub fn sent_place(rng: &mut Rng) -> String {
+    let plural = rng.uniform() < 0.3;
+    let v = rng.choice(VERBS);
+    let verb = if plural { v.1 } else { v.0 };
+    format!("{} {} near the {} .", noun_phrase(rng, plural), verb, rng.choice(PLACES))
+}
+
+pub fn sent_counting(rng: &mut Rng) -> String {
+    let start = rng.below(4);
+    let ln = 3 + rng.below(4);
+    let mut parts: Vec<&str> = Vec::new();
+    for w in NUMBER_WORDS.iter().skip(start).take(ln) {
+        parts.push(w);
+    }
+    format!("{} .", parts.join(" "))
+}
+
+pub fn sent_induction(rng: &mut Rng) -> String {
+    let a = rng.choice(NOUNS).0;
+    let b = rng.choice(PLACES);
+    let mid = rng.choice(ADJS);
+    format!("{a} {b} {mid} {a} {b} .")
+}
+
+pub fn sent_brackets(rng: &mut Rng) -> String {
+    let depth = 1 + rng.below(2);
+    let letters = ["a", "b", "c", "d", "e", "f", "g", "h"];
+    let mut out: Vec<&str> = Vec::new();
+    for _ in 0..depth {
+        out.push("(");
+        out.push(letters[rng.below(8)]);
+    }
+    out.push(letters[rng.below(8)]);
+    for _ in 0..depth {
+        out.push(")");
+    }
+    format!("{} .", out.join(" "))
+}
+
+/// One random sentence, weighted as in the python generator.
+pub fn sentence(rng: &mut Rng) -> String {
+    let u = rng.uniform();
+    let kinds: [(fn(&mut Rng) -> String, f64); 7] = [
+        (sent_agreement, 0.30),
+        (sent_embedded, 0.12),
+        (sent_category, 0.15),
+        (sent_place, 0.18),
+        (sent_counting, 0.10),
+        (sent_induction, 0.08),
+        (sent_brackets, 0.07),
+    ];
+    let mut acc = 0.0;
+    for (f, w) in kinds {
+        acc += w;
+        if u < acc {
+            return f(rng);
+        }
+    }
+    sent_agreement(rng)
+}
+
+/// Generate roughly `n_chars` of corpus text.
+pub fn generate(n_chars: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let mut parts = Vec::new();
+    let mut total = 0;
+    while total < n_chars {
+        let s = sentence(&mut rng);
+        total += s.len() + 1;
+        parts.push(s);
+    }
+    parts.join("\n") + "\n"
+}
+
+/// Generate `n` prompt strings (sentence prefixes) for serving
+/// workloads: the request trace the coordinator benches replay.
+pub fn prompts(n: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let s = sentence(&mut rng);
+            let words: Vec<&str> = s.split(' ').collect();
+            let keep = 1 + rng.below(words.len().max(2) - 1);
+            words[..keep].join(" ")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(5_000, 7), generate(5_000, 7));
+        assert_ne!(generate(5_000, 7), generate(5_000, 8));
+    }
+
+    #[test]
+    fn ascii_only_and_terminated() {
+        let text = generate(20_000, 42);
+        assert!(text.bytes().all(|b| b < 128));
+        for line in text.trim().lines() {
+            assert!(line.ends_with('.'), "{line}");
+        }
+    }
+
+    #[test]
+    fn category_facts_consistent() {
+        let text = generate(60_000, 42);
+        for line in text.lines() {
+            if line.contains(" is an animal") {
+                let noun = line.split(' ').nth(1).unwrap();
+                assert!(is_animal(noun), "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn brackets_balanced() {
+        let text = generate(60_000, 42);
+        for line in text.lines() {
+            if line.starts_with('(') {
+                let mut depth = 0i32;
+                for tok in line.split(' ') {
+                    match tok {
+                        "(" => depth += 1,
+                        ")" => depth -= 1,
+                        _ => {}
+                    }
+                    assert!(depth >= 0, "{line}");
+                }
+                assert_eq!(depth, 0, "{line}");
+            }
+        }
+    }
+
+    #[test]
+    fn prompts_nonempty_and_distinct() {
+        let ps = prompts(50, 1);
+        assert_eq!(ps.len(), 50);
+        assert!(ps.iter().all(|p| !p.is_empty()));
+        let uniq: std::collections::HashSet<_> = ps.iter().collect();
+        assert!(uniq.len() > 10); // overwhelmingly distinct
+    }
+
+    #[test]
+    fn agreement_morphology_present() {
+        let text = generate(60_000, 42);
+        assert!(text.contains(" runs .") || text.contains(" runs near"));
+        assert!(text.contains(" run .") || text.contains(" run near"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrate: byte-level tokenizer, the synthetic "tinywiki"
+//! corpus generator (Rust port, used for serving workloads and tests;
+//! the artifacts corpus from `python/compile/corpus.py` is the source
+//! of truth for training/eval), and calibration-set sampling.
+
+pub mod calib;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use tokenizer::ByteTokenizer;

@@ -1,0 +1,86 @@
+//! Byte-level tokenizer (vocab = 128 ASCII codepoints) — matches the
+//! training-side tokenization in `python/compile/train.py`, which feeds
+//! raw corpus bytes to the model.
+
+/// Byte-level tokenizer over 7-bit ASCII.
+#[derive(Debug, Clone)]
+pub struct ByteTokenizer {
+    pub vocab_size: usize,
+}
+
+impl Default for ByteTokenizer {
+    fn default() -> Self {
+        ByteTokenizer { vocab_size: 128 }
+    }
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab_size: usize) -> Self {
+        ByteTokenizer { vocab_size }
+    }
+
+    /// Encode text to token ids. Non-ASCII bytes are clamped to '?'.
+    pub fn encode(&self, text: &str) -> Vec<u16> {
+        text.bytes()
+            .map(|b| if (b as usize) < self.vocab_size { b as u16 } else { b'?' as u16 })
+            .collect()
+    }
+
+    /// Decode token ids back to text (lossless for ASCII input).
+    pub fn decode(&self, tokens: &[u16]) -> String {
+        tokens
+            .iter()
+            .map(|&t| if (t as usize) < self.vocab_size { t as u8 as char } else { '?' })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let tok = ByteTokenizer::default();
+        let s = "the cat runs .\n( a b ) .";
+        assert_eq!(tok.decode(&tok.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_property_on_corpus_alphabet() {
+        let tok = ByteTokenizer::default();
+        check(
+            "tokenizer roundtrip",
+            30,
+            |r| {
+                let alphabet = b"abcdefghijklmnopqrstuvwxyz (().\n";
+                (0..1 + r.below(100))
+                    .map(|_| alphabet[r.below(alphabet.len())] as char)
+                    .collect::<String>()
+            },
+            |s| {
+                if tok.decode(&tok.encode(s)) == *s {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn non_ascii_clamped() {
+        let tok = ByteTokenizer::default();
+        let enc = tok.encode("héllo");
+        assert!(enc.iter().all(|&t| (t as usize) < 128));
+    }
+
+    #[test]
+    fn ids_bounded_by_vocab() {
+        let tok = ByteTokenizer::new(96);
+        for &t in tok.encode("the {cat}~").iter() {
+            assert!((t as usize) < 128);
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Dense fp32 linear engine (baseline lane of Fig. 5, and the exact
+//! reference the quantized engines are tested against).
+
+use crate::tensor::Matrix;
+
+/// y = x @ Wᵀ (weights stored (out, in)).
+pub fn linear(x: &Matrix, w: &Matrix) -> Matrix {
+    x.matmul_bt(w)
+}
+
+/// Dequantize-then-GEMM path: reconstructs a dense weight first (the
+/// "native PyTorch" lane the paper's LUT kernel is compared against —
+/// the dequantization cost is the point).
+pub fn dequant_linear(x: &Matrix, reconstruct: impl FnOnce() -> Matrix) -> Matrix {
+    let w = reconstruct();
+    x.matmul_bt(&w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn linear_matches_matmul() {
+        let mut r = Rng::new(1);
+        let x = Matrix::randn(3, 8, &mut r);
+        let w = Matrix::randn(5, 8, &mut r);
+        assert_eq!(linear(&x, &w).data, x.matmul_bt(&w).data);
+    }
+
+    #[test]
+    fn dequant_path_equals_direct() {
+        let mut r = Rng::new(2);
+        let x = Matrix::randn(3, 8, &mut r);
+        let w = Matrix::randn(5, 8, &mut r);
+        let y = dequant_linear(&x, || w.clone());
+        assert_eq!(y.data, linear(&x, &w).data);
+    }
+}

@@ -1,0 +1,312 @@
+//! **Binary-Codebook LUT-GEMM engine** (paper App. H) — the sub-1-bit
+//! serving hot path. No dequantization, no multiplications on the
+//! per-output-row path:
+//!
+//! - Stage-I: per activation block `j` and segment `p` (μ elements),
+//!   build the 2^μ signed-sum table with the incremental rule
+//!   `LUT[s] = LUT[s − lowbit(s)] + 2·x[bit]` (one add per entry).
+//! - Stage-II: `CBLUT[j][k] = Σ_p LUT[j][p][key[k][p]]` using the
+//!   offline-packed μ-bit codebook keys.
+//! - Gather: `y[r] = Σ_j alpha[r,g(j)]·CBLUT[j][I[r,j]] + mu[r]·Σx`.
+//!
+//! CBLUT is built once per activation row and reused by every output
+//! row — the paper's "amortized over a large tile of output rows".
+//! Column groups must be block-aligned (enforced by `try_new`): the
+//! pipeline rounds split-point boundaries to `v`-blocks for deployment.
+
+use crate::quant::codebook::CodebookLayer;
+use crate::tensor::Matrix;
+
+/// Largest divisor of `v` that is <= 8 (the Stage-I segment width μ).
+pub fn pick_mu(v: usize) -> usize {
+    for mu in (1..=8).rev() {
+        if v % mu == 0 {
+            return mu;
+        }
+    }
+    1
+}
+
+/// Prepared LUT-GEMM engine for one codebook-compressed layer.
+#[derive(Debug, Clone)]
+pub struct LutGemmEngine {
+    pub out: usize,
+    pub cols: usize,
+    pub v: usize,
+    pub mu_bits: usize,
+    pub segs: usize,
+    pub nb: usize,
+    pub c: usize,
+    idx: Vec<u32>,
+    /// Codebook keys, c x segs, each a μ-bit pattern.
+    keys: Vec<u16>,
+    alpha: Vec<f32>,
+    mu: Vec<f32>,
+    /// Per-block group id (block-aligned column groups).
+    block_group: Vec<u16>,
+    n_groups: usize,
+}
+
+impl LutGemmEngine {
+    /// Build from a codebook layer. Returns `None` when column groups
+    /// are not block-aligned (caller falls back to the dequant path).
+    pub fn try_new(layer: &CodebookLayer) -> Option<LutGemmEngine> {
+        let v = layer.v;
+        let nb = layer.blocks_per_row();
+        // Verify block-aligned groups and collect per-block ids.
+        let mut block_group = Vec::with_capacity(nb);
+        for j in 0..nb {
+            let start = j * v;
+            let end = ((j + 1) * v).min(layer.cols);
+            let g = layer.col_group[start];
+            if layer.col_group[start..end].iter().any(|&x| x != g) {
+                return None;
+            }
+            block_group.push(g);
+        }
+        let mu_bits = pick_mu(v);
+        let segs = v / mu_bits;
+        let c = layer.codebook.c();
+        // Offline key packing: key[k][p] = μ sign bits of centroid k, segment p.
+        let mut keys = vec![0u16; c * segs];
+        for k in 0..c {
+            let w = layer.codebook.words[k];
+            for p in 0..segs {
+                keys[k * segs + p] = ((w >> (p * mu_bits)) & ((1u64 << mu_bits) - 1)) as u16;
+            }
+        }
+        Some(LutGemmEngine {
+            out: layer.rows,
+            cols: layer.cols,
+            v,
+            mu_bits,
+            segs,
+            nb,
+            c,
+            idx: layer.idx.clone(),
+            keys,
+            alpha: layer.alpha.clone(),
+            mu: layer.mu.clone(),
+            block_group,
+            n_groups: layer.n_groups,
+        })
+    }
+
+    /// y = x @ Ŵᵀ via lookup + accumulate. x: (m, cols) -> (m, out).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let m = x.rows;
+        let (v, mu_b, segs, nb, c) = (self.v, self.mu_bits, self.segs, self.nb, self.c);
+        let npat = 1usize << mu_b;
+        let mut y = Matrix::zeros(m, self.out);
+        // Scratch reused across rows.
+        let mut xpad = vec![0f32; nb * v];
+        let mut lut = vec![0f32; nb * segs * npat];
+        let mut cblut = vec![0f32; nb * c];
+        for i in 0..m {
+            let xrow = x.row(i);
+            let xsum: f32 = xrow.iter().sum();
+            xpad[..self.cols].copy_from_slice(xrow);
+            xpad[self.cols..].iter_mut().for_each(|p| *p = 0.0);
+
+            // Stage-I: incremental signed-sum tables.
+            for j in 0..nb {
+                for p in 0..segs {
+                    let seg = &xpad[j * v + p * mu_b..j * v + (p + 1) * mu_b];
+                    let t = &mut lut[(j * segs + p) * npat..(j * segs + p + 1) * npat];
+                    t[0] = -seg.iter().sum::<f32>();
+                    for s in 1..npat {
+                        let low = s & s.wrapping_neg();
+                        t[s] = t[s ^ low] + 2.0 * seg[low.trailing_zeros() as usize];
+                    }
+                }
+            }
+
+            // Stage-II: codebook LUT (lookup + add per segment).
+            for j in 0..nb {
+                let base_l = j * segs * npat;
+                let cb = &mut cblut[j * c..(j + 1) * c];
+                match segs {
+                    1 => {
+                        let t0 = &lut[base_l..base_l + npat];
+                        for (k, out) in cb.iter_mut().enumerate() {
+                            *out = t0[self.keys[k] as usize];
+                        }
+                    }
+                    2 => {
+                        let (t0, t1) = lut[base_l..base_l + 2 * npat].split_at(npat);
+                        for (k, out) in cb.iter_mut().enumerate() {
+                            let kk = &self.keys[k * 2..k * 2 + 2];
+                            *out = t0[kk[0] as usize] + t1[kk[1] as usize];
+                        }
+                    }
+                    _ => {
+                        for (k, out) in cb.iter_mut().enumerate() {
+                            let kk = &self.keys[k * segs..(k + 1) * segs];
+                            let mut s = 0f32;
+                            for (p, &key) in kk.iter().enumerate() {
+                                s += lut[base_l + p * npat + key as usize];
+                            }
+                            *out = s;
+                        }
+                    }
+                }
+            }
+
+            // Gather-accumulate.
+            let yrow = y.row_mut(i);
+            if self.n_groups == 1 {
+                for r in 0..self.out {
+                    let irow = &self.idx[r * nb..(r + 1) * nb];
+                    let mut s = 0f32;
+                    for (j, &k) in irow.iter().enumerate() {
+                        s += cblut[j * c + k as usize];
+                    }
+                    yrow[r] = self.alpha[r] * s + self.mu[r] * xsum;
+                }
+            } else {
+                for r in 0..self.out {
+                    let irow = &self.idx[r * nb..(r + 1) * nb];
+                    let arow = &self.alpha[r * self.n_groups..(r + 1) * self.n_groups];
+                    let mut s = 0f32;
+                    for (j, &k) in irow.iter().enumerate() {
+                        s += arow[self.block_group[j] as usize] * cblut[j * c + k as usize];
+                    }
+                    yrow[r] = s + self.mu[r] * xsum;
+                }
+            }
+        }
+        y
+    }
+
+    /// Shipped bytes: packed indices + keys + fp16 scales.
+    pub fn weight_bytes(&self) -> usize {
+        let idx_bits = (usize::BITS - (self.c.saturating_sub(1)).leading_zeros()).max(1) as usize;
+        (self.idx.len() * idx_bits).div_ceil(8)
+            + self.keys.len() * mu_key_bytes(self.mu_bits)
+            + (self.alpha.len() + self.mu.len()) * 2
+    }
+}
+
+fn mu_key_bytes(mu_bits: usize) -> usize {
+    if mu_bits <= 8 {
+        1
+    } else {
+        2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::binarize::BinaryLayer;
+    use crate::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
+    use crate::util::proptest::{assert_close, check};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn make_codebook_layer(rng: &mut Rng, rows: usize, cols: usize, v: usize, c: usize) -> CodebookLayer {
+        let w = Matrix::randn(rows, cols, rng);
+        let bl = BinaryLayer::quantize(&w);
+        let vectors = collect_vectors(&bl, v);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, v, c, 5);
+        CodebookLayer::from_assignments(&bl, Arc::new(cb), assign)
+    }
+
+    #[test]
+    fn pick_mu_divides() {
+        assert_eq!(pick_mu(16), 8);
+        assert_eq!(pick_mu(20), 5);
+        assert_eq!(pick_mu(10), 5);
+        assert_eq!(pick_mu(12), 6);
+        assert_eq!(pick_mu(7), 7);
+        assert_eq!(pick_mu(9), 3);
+    }
+
+    #[test]
+    fn matches_dequant_gemm_property() {
+        check(
+            "lut engine == dequant GEMM",
+            10,
+            |r: &mut Rng| {
+                let v = *r.choice(&[4usize, 8, 16]);
+                let cols = v * (1 + r.below(6));
+                let rows = 1 + r.below(24);
+                let c = 1 + r.below(40);
+                let cl = make_codebook_layer(r, rows, cols, v, c);
+                let x = Matrix::randn(1 + r.below(4), cols, r);
+                (cl, x)
+            },
+            |(cl, x)| {
+                let eng = LutGemmEngine::try_new(cl).ok_or("not block aligned")?;
+                let fast = eng.forward(x);
+                let slow = x.matmul_bt(&cl.reconstruct());
+                assert_close(&fast.data, &slow.data, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn ragged_cols_with_padding() {
+        // cols not divisible by v: padded blocks must not contribute.
+        let mut rng = Rng::new(5);
+        let cl = make_codebook_layer(&mut rng, 6, 21, 8, 16); // 21 = 2*8 + 5
+        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let x = Matrix::randn(3, 21, &mut rng);
+        let fast = eng.forward(&x);
+        let slow = x.matmul_bt(&cl.reconstruct());
+        assert_close(&fast.data, &slow.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn rejects_unaligned_groups() {
+        let mut rng = Rng::new(6);
+        let mut cl = make_codebook_layer(&mut rng, 4, 16, 8, 8);
+        // Make groups vary inside a block.
+        cl.n_groups = 2;
+        cl.col_group = (0..16).map(|c| (c % 2) as u16).collect();
+        cl.alpha = vec![1.0; 4 * 2];
+        assert!(LutGemmEngine::try_new(&cl).is_none());
+    }
+
+    #[test]
+    fn block_aligned_groups_supported() {
+        let mut rng = Rng::new(7);
+        let w = Matrix::randn(8, 32, &mut rng);
+        let groups: Vec<u16> = (0..32).map(|c| (c / 8) as u16).collect(); // v=8 aligned
+        let bl = crate::quant::arb::arb_quantize(&w, &groups, 4, 4);
+        let vectors = collect_vectors(&bl, 8);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 16, 5);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let x = Matrix::randn(2, 32, &mut rng);
+        assert_close(
+            &eng.forward(&x).data,
+            &x.matmul_bt(&cl.reconstruct()).data,
+            1e-3,
+            1e-3,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn stage1_lut_incremental_rule() {
+        // Hand-check the incremental table for one segment.
+        let mut rng = Rng::new(8);
+        let cl = make_codebook_layer(&mut rng, 2, 8, 8, 4);
+        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        assert_eq!(eng.mu_bits, 8);
+        assert_eq!(eng.segs, 1);
+        // forward already validated; here assert scratch dims derived.
+        assert_eq!(eng.nb, 1);
+    }
+
+    #[test]
+    fn weight_bytes_sub_byte_per_weight() {
+        let mut rng = Rng::new(9);
+        let cl = make_codebook_layer(&mut rng, 64, 256, 16, 256);
+        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let dense_bytes = 64 * 256 * 4;
+        assert!(eng.weight_bytes() * 8 < dense_bytes, "{}", eng.weight_bytes());
+    }
+}

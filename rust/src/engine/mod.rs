@@ -1,0 +1,16 @@
+//! CPU inference engines — the deployed counterparts of the L1 Pallas
+//! kernels (same math, validated against each other through the PJRT
+//! runtime parity tests):
+//!
+//! - [`dense`]: fp32 GEMM reference path (the "FP16" baseline lane).
+//! - [`xnor`]: W1A16 sign-GEMM over bit-packed ±1 weights (paper Fig. 5
+//!   1-bit lane) plus a true XNOR+POPCNT path for binary activations.
+//! - [`lutgemm`]: the two-stage Binary-Codebook LUT-GEMM (paper App. H)
+//!   — the sub-1-bit serving hot path, no dequantization.
+
+pub mod dense;
+pub mod lutgemm;
+pub mod xnor;
+
+pub use lutgemm::LutGemmEngine;
+pub use xnor::BinaryGemmEngine;

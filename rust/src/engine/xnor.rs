@@ -1,0 +1,230 @@
+//! W1A16 sign-GEMM engine over bit-packed ±1 weights (paper Fig. 5,
+//! 1-bit lane): `y[i,r] = Σ_g alpha[r,g]·Σ_{c∈g} ±x[i,c] + mu[r]·Σx`.
+//!
+//! No dequantized weight is ever materialized: the ±1 contraction uses
+//! the identity `Σ ±x = 2·Σ_{bits set} x − Σ x`, so each 64-column word
+//! costs one mask + one bit-iteration over the *set* bits (≈ cols/2
+//! adds). A true XNOR+POPCNT path ([`xnor_popcnt_gemm`]) is provided
+//! for binary activations (App. F / BNN-style fully-binary inference).
+
+use crate::bitops::{hamming_words, BitMatrix};
+use crate::quant::binarize::BinaryLayer;
+use crate::tensor::Matrix;
+
+/// Prepared W1A16 engine for one binarized layer.
+#[derive(Debug, Clone)]
+pub struct BinaryGemmEngine {
+    pub out: usize,
+    pub cols: usize,
+    pub n_groups: usize,
+    b: BitMatrix,
+    alpha: Vec<f32>,
+    mu: Vec<f32>,
+    /// Per-group column bitmask, one mask row of `words_per_row` words.
+    group_masks: Vec<Vec<u64>>,
+}
+
+impl BinaryGemmEngine {
+    pub fn new(layer: &BinaryLayer) -> BinaryGemmEngine {
+        let wpr = layer.b.words_per_row;
+        let mut group_masks = vec![vec![0u64; wpr]; layer.n_groups];
+        for (c, &g) in layer.col_group.iter().enumerate() {
+            group_masks[g as usize][c / 64] |= 1u64 << (c % 64);
+        }
+        BinaryGemmEngine {
+            out: layer.rows,
+            cols: layer.cols,
+            n_groups: layer.n_groups,
+            b: layer.b.clone(),
+            alpha: layer.alpha.clone(),
+            mu: layer.mu.clone(),
+            group_masks,
+        }
+    }
+
+    /// y = x @ Ŵᵀ without dequantization. x: (m, cols) -> (m, out).
+    pub fn forward(&self, x: &Matrix) -> Matrix {
+        if self.n_groups == 1 {
+            return self.forward_ungrouped(x);
+        }
+        self.forward_grouped(x)
+    }
+
+    /// Fast path (single scale group): `Σ±x = 2·Σ_{set bits}x − Σx`,
+    /// iterating only the SET bits of each weight word (≈cols/2 adds).
+    /// Perf §Perf note: a branchless sign-XOR variant
+    /// (`acc += f32::from_bits(x ^ flip)`) was tried and measured
+    /// ~1.7x SLOWER at the Fig. 5 shape — the per-lane variable shifts
+    /// defeat LLVM's vectorizer — so set-bit iteration stays.
+    fn forward_ungrouped(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let m = x.rows;
+        let mut y = Matrix::zeros(m, self.out);
+        let wpr = self.b.words_per_row;
+        for i in 0..m {
+            let xrow = x.row(i);
+            let xsum: f32 = xrow.iter().sum();
+            let yrow = y.row_mut(i);
+            for r in 0..self.out {
+                let brow = self.b.row(r);
+                let mut pos = 0f32;
+                for wi in 0..wpr {
+                    let mut w = brow[wi];
+                    let base = wi * 64;
+                    while w != 0 {
+                        let t = w.trailing_zeros() as usize;
+                        pos += xrow[base + t];
+                        w &= w - 1;
+                    }
+                }
+                yrow[r] = self.alpha[r] * (2.0 * pos - xsum) + self.mu[r] * xsum;
+            }
+        }
+        y
+    }
+
+    /// General path: per-(row, group) scales via masked bit iteration.
+    fn forward_grouped(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let m = x.rows;
+        let mut y = Matrix::zeros(m, self.out);
+        let wpr = self.b.words_per_row;
+        // Per-input-row group sums (Σ_{c in g} x_c) and total.
+        let mut group_sum = vec![0f32; self.n_groups];
+        for i in 0..m {
+            let xrow = x.row(i);
+            group_sum.iter_mut().for_each(|s| *s = 0.0);
+            let mut xsum = 0f32;
+            for (g, mask) in self.group_masks.iter().enumerate() {
+                let mut s = 0f32;
+                for (wi, &mw) in mask.iter().enumerate() {
+                    let mut w = mw;
+                    let base = wi * 64;
+                    while w != 0 {
+                        let t = w.trailing_zeros() as usize;
+                        s += xrow[base + t];
+                        w &= w - 1;
+                    }
+                }
+                group_sum[g] = s;
+                xsum += s;
+            }
+            let yrow = y.row_mut(i);
+            for r in 0..self.out {
+                let brow = self.b.row(r);
+                let mut acc = 0f32;
+                for g in 0..self.n_groups {
+                    // pos = Σ x over columns where sign=+1 within group g.
+                    let mask = &self.group_masks[g];
+                    let mut pos = 0f32;
+                    for wi in 0..wpr {
+                        let mut w = brow[wi] & mask[wi];
+                        let base = wi * 64;
+                        while w != 0 {
+                            let t = w.trailing_zeros() as usize;
+                            pos += xrow[base + t];
+                            w &= w - 1;
+                        }
+                    }
+                    acc += self.alpha[r * self.n_groups + g] * (2.0 * pos - group_sum[g]);
+                }
+                yrow[r] = acc + self.mu[r] * xsum;
+            }
+        }
+        y
+    }
+
+    /// Packed-weight storage in bytes (what actually ships).
+    pub fn weight_bytes(&self) -> usize {
+        self.b.storage_bytes() + (self.alpha.len() + self.mu.len()) * 2 // fp16
+    }
+}
+
+/// Fully-binary GEMM: both activations and weights are packed ±1;
+/// `y[i,r] = n − 2·d_H` via XNOR+POPCNT (one instruction pair per 64
+/// elements — the paper's Eq. 5 arithmetic).
+pub fn xnor_popcnt_gemm(x: &BitMatrix, w: &BitMatrix) -> Matrix {
+    assert_eq!(x.cols, w.cols);
+    let mask = x.tail_mask();
+    let mut y = Matrix::zeros(x.rows, w.rows);
+    for i in 0..x.rows {
+        let xrow = x.row(i);
+        let yrow = y.row_mut(i);
+        for r in 0..w.rows {
+            let d = hamming_words(xrow, w.row(r), mask);
+            yrow[r] = (x.cols as i32 - 2 * d as i32) as f32;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::arb::arb_quantize;
+    use crate::util::proptest::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_dequant_gemm_property() {
+        check(
+            "xnor engine == dequant GEMM",
+            12,
+            |r: &mut Rng| {
+                let (m, n, o) = (1 + r.below(4), 8 * (1 + r.below(12)), 1 + r.below(24));
+                (Matrix::randn(m, n, r), Matrix::randn(o, n, r))
+            },
+            |(x, w)| {
+                let q = BinaryLayer::quantize(w);
+                let eng = BinaryGemmEngine::new(&q);
+                let fast = eng.forward(x);
+                let slow = x.matmul_bt(&q.reconstruct());
+                assert_close(&fast.data, &slow.data, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn grouped_matches_dequant() {
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(12, 96, &mut rng);
+        let groups: Vec<u16> = (0..96).map(|c| (c / 32) as u16).collect();
+        let q = arb_quantize(&w, &groups, 3, 6);
+        let eng = BinaryGemmEngine::new(&q);
+        let x = Matrix::randn(4, 96, &mut rng);
+        let fast = eng.forward(&x);
+        let slow = x.matmul_bt(&q.reconstruct());
+        assert_close(&fast.data, &slow.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn xnor_popcnt_matches_fp_property() {
+        check(
+            "xnor popcnt == fp gemm",
+            12,
+            |r: &mut Rng| {
+                let (m, n, o) = (1 + r.below(4), 1 + r.below(200), 1 + r.below(16));
+                let xs: Vec<f32> = (0..m * n).map(|_| r.sign()).collect();
+                let ws: Vec<f32> = (0..o * n).map(|_| r.sign()).collect();
+                (m, n, o, xs, ws)
+            },
+            |(m, n, o, xs, ws)| {
+                let xb = BitMatrix::from_signs(*m, *n, xs);
+                let wb = BitMatrix::from_signs(*o, *n, ws);
+                let fast = xnor_popcnt_gemm(&xb, &wb);
+                let xm = Matrix::from_vec(*m, *n, xs.clone());
+                let wm = Matrix::from_vec(*o, *n, ws.clone());
+                assert_close(&fast.data, &xm.matmul_bt(&wm).data, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn weight_bytes_is_packed() {
+        let mut rng = Rng::new(4);
+        let w = Matrix::randn(64, 128, &mut rng);
+        let eng = BinaryGemmEngine::new(&BinaryLayer::quantize(&w));
+        // 64 rows x 2 words x 8 bytes + scales.
+        assert_eq!(eng.weight_bytes(), 64 * 2 * 8 + 2 * 64 * 2);
+    }
+}

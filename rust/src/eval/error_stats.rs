@@ -1,0 +1,93 @@
+//! Error & distribution statistics behind the paper's figures:
+//! Fig. 2 / 8-9 (activation distributions before/after the learnable
+//! transformation) and Figs. 6-7 (relative weight quantization error).
+
+use crate::model::transformer::{Capture, CaptureSite};
+use crate::model::Transformer;
+use crate::tensor::stats::{summarize, Summary};
+
+/// Per-(layer, site) activation summary: the raw activations the site
+/// produces and, when the consuming linear carries a transformation,
+/// the transformed activations the quantized GEMM actually sees.
+#[derive(Debug, Clone)]
+pub struct ActStats {
+    pub layer: usize,
+    pub site: &'static str,
+    pub raw: Summary,
+    pub transformed: Option<Summary>,
+}
+
+/// Capture activations on `tokens` and summarize per site (Fig. 2).
+pub fn activation_stats(model: &Transformer, tokens: &[u16], max_rows: usize) -> Vec<ActStats> {
+    let mut cap = Capture::new(max_rows);
+    {
+        let mut opt = Some(&mut cap);
+        model.forward_capture(tokens, &mut opt);
+    }
+    let sites: [(CaptureSite, &'static str); 4] = [
+        (CaptureSite::Ln1Out, "ln1_out(k_proj in)"),
+        (CaptureSite::AttnOut, "attn_out(o_proj in)"),
+        (CaptureSite::Ln2Out, "ln2_out(gate in)"),
+        (CaptureSite::FfnMid, "ffn_mid(down in)"),
+    ];
+    let mut out = Vec::new();
+    for li in 0..model.cfg.n_layer {
+        for (site, name) in sites.iter() {
+            let Some(x) = cap.matrix(li, *site) else { continue };
+            let raw = summarize(&x.data);
+            // The consuming linear (first of the group) may transform.
+            let lin = match site {
+                CaptureSite::Ln1Out => &model.blocks[li].wk,
+                CaptureSite::AttnOut => &model.blocks[li].wo,
+                CaptureSite::Ln2Out => &model.blocks[li].wgate,
+                CaptureSite::FfnMid => &model.blocks[li].wdown,
+            };
+            let transformed = lin.transform.as_ref().map(|t| summarize(&t.apply(&x).data));
+            out.push(ActStats { layer: li, site: name, raw, transformed });
+        }
+    }
+    out
+}
+
+/// Relative weight reconstruction error per linear of a quantized
+/// model vs its fp reference (Figs. 6-7).
+pub fn weight_errors(fp: &Transformer, quant: &Transformer) -> Vec<(usize, &'static str, f64)> {
+    let mut out = Vec::new();
+    for (li, (bf, bq)) in fp.blocks.iter().zip(quant.blocks.iter()).enumerate() {
+        for ((name, lf), (_, lq)) in bf.linears().iter().zip(bq.linears().iter()) {
+            // Compare in the quantized layer's (possibly transformed)
+            // coordinate system: reconstruct effective weight and map
+            // the fp weight with the same transform.
+            let wq = lq.backend.reconstruct();
+            let wf = match &lq.transform {
+                Some(t) => t.transform_weight(&lf.backend.reconstruct()),
+                None => lf.backend.reconstruct(),
+            };
+            out.push((li, *name, crate::tensor::stats::rel_error(&wf.data, &wq.data)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::tests::tiny_model;
+
+    #[test]
+    fn activation_stats_cover_all_sites() {
+        let m = tiny_model(1, 4);
+        let stats = activation_stats(&m, &[1, 2, 3, 4, 5], 64);
+        assert_eq!(stats.len(), 2 * 4);
+        assert!(stats.iter().all(|s| s.raw.max_abs.is_finite()));
+        assert!(stats.iter().all(|s| s.transformed.is_none())); // fp model
+    }
+
+    #[test]
+    fn weight_errors_zero_for_identical_models() {
+        let m = tiny_model(2, 4);
+        let errs = weight_errors(&m, &m);
+        assert_eq!(errs.len(), 2 * 7);
+        assert!(errs.iter().all(|(_, _, e)| *e < 1e-12));
+    }
+}

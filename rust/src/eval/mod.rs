@@ -1,0 +1,8 @@
+//! Evaluation harness: WikiText2-style perplexity, the 7 zero-shot
+//! probe tasks, memory/bits accounting (Table 3c) and the
+//! activation/weight error statistics behind Figs. 2 and 6-9.
+
+pub mod error_stats;
+pub mod memory;
+pub mod perplexity;
+pub mod zeroshot;

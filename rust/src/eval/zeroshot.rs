@@ -1,0 +1,206 @@
+//! The 7 zero-shot probe tasks (Table 2 analog).
+//!
+//! Each probe is a ranking task on the tinywiki grammar: the model
+//! scores a correct continuation against a distractor
+//! (`continuation_logprob`, the same protocol the lm-eval harness uses
+//! for Winogrande/ARC/etc.). Mapping to the paper's suite (DESIGN.md):
+//! agreement→Winogrande, embedded-agreement→RTE, category→OBQA,
+//! induction→HellaSwag, counting→ARC-e, brackets→BoolQ, adj-order→ARC-c.
+
+use crate::data::corpus::{ADJS, ANIMALS, NOUNS, NUMBER_WORDS, PLACES, VERBS};
+use crate::data::ByteTokenizer;
+use crate::eval::perplexity::continuation_logprob;
+use crate::model::Transformer;
+use crate::util::rng::Rng;
+
+/// One ranking example: prefix + correct/distractor continuations.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub prefix: String,
+    pub correct: String,
+    pub distractor: String,
+}
+
+/// The task roster.
+pub const TASK_NAMES: [&str; 7] =
+    ["agreement", "embedded", "category", "induction", "counting", "brackets", "adj-order"];
+
+/// Generate `n` examples for the named task.
+pub fn examples(task: &str, n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ 0xbeef);
+    (0..n)
+        .map(|_| match task {
+            "agreement" => {
+                let plural = rng.uniform() < 0.5;
+                let noun = rng.choice(NOUNS);
+                let verb = rng.choice(VERBS);
+                Example {
+                    prefix: format!("the {} ", if plural { noun.1 } else { noun.0 }),
+                    correct: (if plural { verb.1 } else { verb.0 }).to_string(),
+                    distractor: (if plural { verb.0 } else { verb.1 }).to_string(),
+                }
+            }
+            "embedded" => {
+                let plural = rng.uniform() < 0.5;
+                let head = rng.choice(NOUNS);
+                let inner = rng.choice(NOUNS).0;
+                let verb = rng.choice(VERBS);
+                Example {
+                    prefix: format!(
+                        "the {} that sees the {} ",
+                        if plural { head.1 } else { head.0 },
+                        inner
+                    ),
+                    correct: (if plural { verb.1 } else { verb.0 }).to_string(),
+                    distractor: (if plural { verb.0 } else { verb.1 }).to_string(),
+                }
+            }
+            "category" => {
+                let noun = rng.choice(NOUNS).0;
+                let animal = ANIMALS.contains(&noun);
+                Example {
+                    prefix: format!("the {noun} is an "),
+                    correct: (if animal { "animal" } else { "object" }).to_string(),
+                    distractor: (if animal { "object" } else { "animal" }).to_string(),
+                }
+            }
+            "induction" => {
+                let a = rng.choice(NOUNS).0;
+                let b = rng.choice(PLACES);
+                let mid = rng.choice(ADJS);
+                let mut wrong = rng.choice(PLACES);
+                while wrong == b {
+                    wrong = rng.choice(PLACES);
+                }
+                Example {
+                    prefix: format!("{a} {b} {mid} {a} "),
+                    correct: (*b).to_string(),
+                    distractor: (*wrong).to_string(),
+                }
+            }
+            "counting" => {
+                let start = rng.below(4);
+                let next = NUMBER_WORDS[start + 3];
+                let mut wrong = rng.choice(NUMBER_WORDS);
+                while *wrong == next {
+                    wrong = rng.choice(NUMBER_WORDS);
+                }
+                Example {
+                    prefix: format!(
+                        "{} {} {} ",
+                        NUMBER_WORDS[start],
+                        NUMBER_WORDS[start + 1],
+                        NUMBER_WORDS[start + 2]
+                    ),
+                    correct: next.to_string(),
+                    distractor: (*wrong).to_string(),
+                }
+            }
+            "brackets" => {
+                let letters = ["a", "b", "c", "d", "e", "f", "g", "h"];
+                let l1 = letters[rng.below(8)];
+                let l2 = letters[rng.below(8)];
+                let l3 = letters[rng.below(8)];
+                Example {
+                    prefix: format!("( {l1} ( {l2} {l3} ) "),
+                    correct: ")".to_string(),
+                    distractor: "(".to_string(),
+                }
+            }
+            "adj-order" => {
+                let adj = rng.choice(ADJS);
+                let noun = rng.choice(NOUNS).0;
+                let verb = rng.choice(VERBS).0;
+                Example {
+                    prefix: format!("the {adj} "),
+                    correct: noun.to_string(),
+                    distractor: verb.to_string(),
+                }
+            }
+            other => panic!("unknown task {other}"),
+        })
+        .collect()
+}
+
+/// Accuracy of one task: correct continuation must out-score the
+/// distractor (length-normalized log-prob, the lm-eval convention).
+pub fn task_accuracy(model: &Transformer, task: &str, n: usize, seed: u64) -> f64 {
+    let tok = ByteTokenizer::default();
+    let exs = examples(task, n, seed);
+    let mut hits = 0usize;
+    for ex in &exs {
+        let prefix = tok.encode(&ex.prefix);
+        let c = tok.encode(&ex.correct);
+        let d = tok.encode(&ex.distractor);
+        let lc = continuation_logprob(model, &prefix, &c) / c.len() as f64;
+        let ld = continuation_logprob(model, &prefix, &d) / d.len() as f64;
+        if lc > ld {
+            hits += 1;
+        }
+    }
+    100.0 * hits as f64 / exs.len() as f64
+}
+
+/// Run all 7 tasks; returns (name, accuracy) pairs plus the mean.
+pub fn run_all(model: &Transformer, n_per_task: usize, seed: u64) -> (Vec<(String, f64)>, f64) {
+    let mut results = Vec::new();
+    for task in TASK_NAMES {
+        results.push((task.to_string(), task_accuracy(model, task, n_per_task, seed)));
+    }
+    let mean = results.iter().map(|(_, a)| a).sum::<f64>() / results.len() as f64;
+    (results, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::tests::tiny_model;
+
+    #[test]
+    fn examples_deterministic_and_distinct_continuations() {
+        for task in TASK_NAMES {
+            let a = examples(task, 10, 7);
+            let b = examples(task, 10, 7);
+            assert_eq!(a.len(), 10);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prefix, y.prefix);
+                assert_ne!(x.correct, x.distractor, "{task}");
+            }
+        }
+    }
+
+    #[test]
+    fn category_examples_truthful() {
+        for ex in examples("category", 20, 3) {
+            let noun = ex.prefix.split(' ').nth(1).unwrap();
+            let is_animal = ANIMALS.contains(&noun);
+            assert_eq!(ex.correct == "animal", is_animal);
+        }
+    }
+
+    #[test]
+    fn accuracy_in_range_for_random_model() {
+        let m = tiny_model(1, 4);
+        // 32-vocab random model vs 128-vocab text: just bounds checking.
+        let acc = task_accuracy_bounded(&m);
+        assert!((0.0..=100.0).contains(&acc));
+    }
+
+    fn task_accuracy_bounded(m: &Transformer) -> f64 {
+        // tiny_model has vocab 32; clamp text bytes via tokenizer(32).
+        let tok = crate::data::ByteTokenizer::new(32);
+        let exs = examples("agreement", 4, 1);
+        let mut hits = 0;
+        for ex in &exs {
+            let p = tok.encode(&ex.prefix).iter().map(|&t| t % 32).collect::<Vec<_>>();
+            let c = tok.encode(&ex.correct).iter().map(|&t| t % 32).collect::<Vec<_>>();
+            let d = tok.encode(&ex.distractor).iter().map(|&t| t % 32).collect::<Vec<_>>();
+            let lc = continuation_logprob(m, &p, &c) / c.len() as f64;
+            let ld = continuation_logprob(m, &p, &d) / d.len() as f64;
+            if lc > ld {
+                hits += 1;
+            }
+        }
+        100.0 * hits as f64 / exs.len() as f64
+    }
+}

@@ -1,0 +1,7 @@
+//! Artifact IO: the TLM1 weight-blob reader/writer (interchange with
+//! `python/compile/blob.py`) and the QLM1 quantized-model container.
+
+pub mod qweights;
+pub mod weights;
+
+pub use weights::{load_model, ModelConfig, RawModel};

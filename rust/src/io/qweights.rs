@@ -1,0 +1,332 @@
+//! QLM1 quantized-model container: serialize a BTC-quantized model
+//! (binary / codebook backends + transforms + scales) so `btc-llm
+//! quantize` output can be shipped to `btc-llm serve` without
+//! re-running the pipeline.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic b"QLM1", u32 version
+//! TLM1-style model config block
+//! u8 has_codebook; codebook: u32 v, u32 c, u64 words[c]
+//! u32 n_linears; per linear:
+//!   u32 layer; u8 slot (0..7); u8 backend_tag (0 dense,1 binary,2 codebook)
+//!   u8 has_transform; transform: u32 dim,n1,n2; f32 sigma[dim],p1,p2
+//!   backend payload (see read/write_backend)
+//! ```
+//! Norms/embeddings stay fp32 in the companion TLM1 blob; this file
+//! carries only the quantized linears (the paper's W-bits subject).
+
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::bitops::BitMatrix;
+use crate::model::{Linear, LinearBackend, Transformer};
+use crate::quant::binarize::BinaryLayer;
+use crate::quant::codebook::{BinaryCodebook, CodebookLayer};
+use crate::quant::transform::Transform;
+use crate::tensor::Matrix;
+
+const SLOTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn r_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+fn r_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn write_binary(w: &mut impl Write, b: &BinaryLayer) -> Result<()> {
+    w_u32(w, b.rows as u32)?;
+    w_u32(w, b.cols as u32)?;
+    w_u32(w, b.n_groups as u32)?;
+    for word in &b.b.data {
+        w.write_all(&word.to_le_bytes())?;
+    }
+    w_f32s(w, &b.alpha)?;
+    w_f32s(w, &b.mu)?;
+    for g in &b.col_group {
+        w.write_all(&g.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_binary(r: &mut impl Read) -> Result<BinaryLayer> {
+    let rows = r_u32(r)? as usize;
+    let cols = r_u32(r)? as usize;
+    let n_groups = r_u32(r)? as usize;
+    let mut b = BitMatrix::zeros(rows, cols);
+    let mut bytes = vec![0u8; b.data.len() * 8];
+    r.read_exact(&mut bytes)?;
+    for (i, c) in bytes.chunks_exact(8).enumerate() {
+        b.data[i] = u64::from_le_bytes(c.try_into().unwrap());
+    }
+    let alpha = r_f32s(r, rows * n_groups)?;
+    let mu = r_f32s(r, rows)?;
+    let mut gb = vec![0u8; cols * 2];
+    r.read_exact(&mut gb)?;
+    let col_group = gb.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+    Ok(BinaryLayer { rows, cols, b, alpha, mu, col_group, n_groups })
+}
+
+/// Save a quantized model. Backends other than Dense/Binary/Codebook
+/// (baseline-only lanes) are rejected — they are not deployment formats.
+pub fn save(path: &Path, model: &Transformer) -> Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(b"QLM1")?;
+    w_u32(&mut w, 1)?;
+    let c = &model.cfg;
+    for v in [c.vocab, c.d_model, c.n_layer, c.n_head, c.n_kv_head, c.d_ff, c.max_seq] {
+        w_u32(&mut w, v as u32)?;
+    }
+    w.write_all(&c.rope_theta.to_le_bytes())?;
+
+    // Shared codebook (first one found).
+    let mut shared: Option<Arc<BinaryCodebook>> = None;
+    for b in &model.blocks {
+        for (_, lin) in b.linears() {
+            if let LinearBackend::Codebook(cl) = &lin.backend {
+                shared = Some(cl.codebook.clone());
+                break;
+            }
+        }
+    }
+    match &shared {
+        Some(cb) => {
+            w.write_all(&[1u8])?;
+            w_u32(&mut w, cb.v as u32)?;
+            w_u32(&mut w, cb.c() as u32)?;
+            for word in &cb.words {
+                w.write_all(&word.to_le_bytes())?;
+            }
+        }
+        None => w.write_all(&[0u8])?,
+    }
+
+    let n_linears = model.blocks.len() * 7;
+    w_u32(&mut w, n_linears as u32)?;
+    for (li, block) in model.blocks.iter().enumerate() {
+        for (slot, (name, lin)) in block.linears().iter().enumerate() {
+            let _ = name;
+            w_u32(&mut w, li as u32)?;
+            w.write_all(&[slot as u8])?;
+            let tag: u8 = match &lin.backend {
+                LinearBackend::Dense(_) => 0,
+                LinearBackend::Binary(_) => 1,
+                LinearBackend::Codebook(_) => 2,
+                other => bail!("backend {:?} is not a deployment format", std::mem::discriminant(other)),
+            };
+            w.write_all(&[tag])?;
+            match &lin.transform {
+                Some(t) => {
+                    w.write_all(&[1u8])?;
+                    w_u32(&mut w, t.dim() as u32)?;
+                    w_u32(&mut w, t.p1.rows as u32)?;
+                    w_u32(&mut w, t.p2.rows as u32)?;
+                    w_f32s(&mut w, &t.sigma)?;
+                    w_f32s(&mut w, &t.p1.data)?;
+                    w_f32s(&mut w, &t.p2.data)?;
+                }
+                None => w.write_all(&[0u8])?,
+            }
+            match &lin.backend {
+                LinearBackend::Dense(m) => {
+                    w_u32(&mut w, m.rows as u32)?;
+                    w_u32(&mut w, m.cols as u32)?;
+                    w_f32s(&mut w, &m.data)?;
+                }
+                LinearBackend::Binary(b) => write_binary(&mut w, b)?,
+                LinearBackend::Codebook(cl) => {
+                    w_u32(&mut w, cl.rows as u32)?;
+                    w_u32(&mut w, cl.cols as u32)?;
+                    w_u32(&mut w, cl.n_groups as u32)?;
+                    for &i in &cl.idx {
+                        w_u32(&mut w, i)?;
+                    }
+                    w_f32s(&mut w, &cl.alpha)?;
+                    w_f32s(&mut w, &cl.mu)?;
+                    for g in &cl.col_group {
+                        w.write_all(&g.to_le_bytes())?;
+                    }
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load quantized linears into a model previously built from the
+/// companion TLM1 blob (embeddings/norms come from there).
+pub fn load_into(path: &Path, model: &mut Transformer) -> Result<()> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"QLM1" {
+        bail!("bad QLM1 magic");
+    }
+    if r_u32(&mut r)? != 1 {
+        bail!("unsupported QLM1 version");
+    }
+    let mut hdr = [0usize; 7];
+    for h in hdr.iter_mut() {
+        *h = r_u32(&mut r)? as usize;
+    }
+    let mut theta = [0u8; 4];
+    r.read_exact(&mut theta)?;
+    if hdr[0] != model.cfg.vocab || hdr[1] != model.cfg.d_model || hdr[2] != model.cfg.n_layer {
+        bail!("QLM1 config mismatch with loaded model");
+    }
+
+    let shared: Option<Arc<BinaryCodebook>> = if r_u8(&mut r)? == 1 {
+        let v = r_u32(&mut r)? as usize;
+        let c = r_u32(&mut r)? as usize;
+        let mut bytes = vec![0u8; c * 8];
+        r.read_exact(&mut bytes)?;
+        let words = bytes.chunks_exact(8).map(|b| u64::from_le_bytes(b.try_into().unwrap())).collect();
+        Some(Arc::new(BinaryCodebook { v, words }))
+    } else {
+        None
+    };
+
+    let n = r_u32(&mut r)? as usize;
+    for _ in 0..n {
+        let li = r_u32(&mut r)? as usize;
+        let slot = r_u8(&mut r)? as usize;
+        let tag = r_u8(&mut r)?;
+        let transform = if r_u8(&mut r)? == 1 {
+            let dim = r_u32(&mut r)? as usize;
+            let n1 = r_u32(&mut r)? as usize;
+            let n2 = r_u32(&mut r)? as usize;
+            let sigma = r_f32s(&mut r, dim)?;
+            let p1 = Matrix::from_vec(n1, n1, r_f32s(&mut r, n1 * n1)?);
+            let p2 = Matrix::from_vec(n2, n2, r_f32s(&mut r, n2 * n2)?);
+            Some(Transform { sigma, p1, p2 })
+        } else {
+            None
+        };
+        let backend = match tag {
+            0 => {
+                let rows = r_u32(&mut r)? as usize;
+                let cols = r_u32(&mut r)? as usize;
+                LinearBackend::Dense(Matrix::from_vec(rows, cols, r_f32s(&mut r, rows * cols)?))
+            }
+            1 => LinearBackend::Binary(read_binary(&mut r)?),
+            2 => {
+                let cb = shared.clone().context("codebook layer without shared codebook")?;
+                let rows = r_u32(&mut r)? as usize;
+                let cols = r_u32(&mut r)? as usize;
+                let n_groups = r_u32(&mut r)? as usize;
+                let n_idx = rows * cols.div_ceil(cb.v);
+                let mut idx = Vec::with_capacity(n_idx);
+                for _ in 0..n_idx {
+                    idx.push(r_u32(&mut r)?);
+                }
+                let alpha = r_f32s(&mut r, rows * n_groups)?;
+                let mu = r_f32s(&mut r, rows)?;
+                let mut gb = vec![0u8; cols * 2];
+                r.read_exact(&mut gb)?;
+                let col_group =
+                    gb.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
+                LinearBackend::Codebook(CodebookLayer {
+                    rows,
+                    cols,
+                    v: cb.v,
+                    idx,
+                    codebook: cb,
+                    alpha,
+                    mu,
+                    col_group,
+                    n_groups,
+                })
+            }
+            t => bail!("unknown backend tag {t}"),
+        };
+        if li >= model.blocks.len() || slot >= 7 {
+            bail!("linear ({li}, {slot}) out of range");
+        }
+        let block = &mut model.blocks[li];
+        for (nm, lin) in block.linears_mut() {
+            if nm == SLOTS[slot] {
+                let mut new_lin = Linear::new(backend);
+                new_lin.transform = transform;
+                *lin = new_lin;
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus;
+    use crate::quant::pipeline::{quantize_model, QuantConfig};
+    use crate::util::proptest::assert_close;
+
+    #[test]
+    fn roundtrip_btc_model() {
+        // Quantize the pipeline fixture, save, reload, compare logits.
+        let (raw, text) = crate::quant::pipeline::tests::fixture_public();
+        let cfg = QuantConfig {
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            calib_rows: 48,
+            transform_outer: 2,
+            arb_iters: 4,
+            v: 8,
+            ..QuantConfig::btc(0.8)
+        };
+        let qm = quantize_model(&raw, &text, &cfg).unwrap();
+        let dir = std::env::temp_dir().join("btc_qlm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.qlm");
+        save(&path, &qm.model).unwrap();
+
+        let mut reloaded = Transformer::from_raw(&raw).unwrap();
+        load_into(&path, &mut reloaded).unwrap();
+        reloaded.cache_dense_all();
+        let toks = corpus::generate(200, 3)
+            .bytes()
+            .take(16)
+            .map(|b| b as u16)
+            .collect::<Vec<_>>();
+        let a = qm.model.forward(&toks);
+        let b = reloaded.forward(&toks);
+        assert_close(&a.data, &b.data, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("btc_qlm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.qlm");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        let (raw, _) = crate::quant::pipeline::tests::fixture_public();
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        assert!(load_into(&path, &mut m).is_err());
+    }
+}

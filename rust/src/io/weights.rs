@@ -1,0 +1,252 @@
+//! TLM1 weight-blob reader/writer.
+//!
+//! Byte-exact interchange with `python/compile/blob.py` (pinned by
+//! tests on both sides):
+//!
+//! ```text
+//! magic b"TLM1"
+//! u32   version (=1)
+//! u32   vocab, d_model, n_layer, n_head, n_kv_head, d_ff, max_seq
+//! f32   rope_theta
+//! u32   n_tensors
+//! per tensor: u32 name_len; name; u32 ndim; u32 dims[]; f32 data
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::tensor::Matrix;
+
+/// Model hyperparameters (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub n_kv_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_head
+    }
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_head * self.head_dim()
+    }
+    /// Total parameter count (embeddings + norms + linears).
+    pub fn param_count(&self) -> usize {
+        let per_layer = 2 * self.d_model * self.d_model
+            + 2 * self.kv_dim() * self.d_model
+            + 3 * self.d_model * self.d_ff
+            + 2 * self.d_model;
+        self.vocab * self.d_model + self.n_layer * per_layer + self.d_model
+    }
+    /// Parameters in *quantizable* linear layers only (the W-bits base).
+    pub fn linear_param_count(&self) -> usize {
+        let per_layer = 2 * self.d_model * self.d_model
+            + 2 * self.kv_dim() * self.d_model
+            + 3 * self.d_model * self.d_ff;
+        self.n_layer * per_layer
+    }
+}
+
+/// A loaded full-precision model: config + named tensors.
+#[derive(Debug, Clone)]
+pub struct RawModel {
+    pub config: ModelConfig,
+    /// name -> (dims, row-major data). 1-D tensors have dims.len()==1.
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl RawModel {
+    pub fn tensor(&self, name: &str) -> anyhow::Result<&(Vec<usize>, Vec<f32>)> {
+        self.tensors.get(name).with_context(|| format!("missing tensor {name}"))
+    }
+
+    /// Fetch a 2-D tensor as a Matrix view (copies).
+    pub fn matrix(&self, name: &str) -> anyhow::Result<Matrix> {
+        let (dims, data) = self.tensor(name)?;
+        if dims.len() != 2 {
+            bail!("tensor {name} is not 2-D: {dims:?}");
+        }
+        Ok(Matrix::from_vec(dims[0], dims[1], data.clone()))
+    }
+
+    /// Fetch a 1-D tensor.
+    pub fn vector(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        let (dims, data) = self.tensor(name)?;
+        if dims.len() != 1 {
+            bail!("tensor {name} is not 1-D: {dims:?}");
+        }
+        Ok(data.clone())
+    }
+
+    /// Names of the 7 quantizable linear weights of layer `i`.
+    pub fn linear_names(i: usize) -> [String; 7] {
+        ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"].map(|n| format!("l{i}.{n}"))
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f32(r: &mut impl Read) -> anyhow::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Load a TLM1 blob.
+pub fn load_model(path: &Path) -> anyhow::Result<RawModel> {
+    let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = std::io::BufReader::new(file);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != b"TLM1" {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let config = ModelConfig {
+        vocab: read_u32(&mut r)? as usize,
+        d_model: read_u32(&mut r)? as usize,
+        n_layer: read_u32(&mut r)? as usize,
+        n_head: read_u32(&mut r)? as usize,
+        n_kv_head: read_u32(&mut r)? as usize,
+        d_ff: read_u32(&mut r)? as usize,
+        max_seq: read_u32(&mut r)? as usize,
+        rope_theta: read_f32(&mut r)?,
+    };
+    let n_tensors = read_u32(&mut r)? as usize;
+    let mut tensors = BTreeMap::new();
+    for _ in 0..n_tensors {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("implausible tensor name length {name_len}");
+        }
+        let mut name_bytes = vec![0u8; name_len];
+        r.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes).context("tensor name utf8")?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 4 {
+            bail!("tensor {name}: implausible ndim {ndim}");
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.insert(name, (dims, data));
+    }
+    Ok(RawModel { config, tensors })
+}
+
+/// Write a TLM1 blob (tests + tooling; python is the usual writer).
+pub fn save_model(path: &Path, model: &RawModel) -> anyhow::Result<()> {
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(b"TLM1")?;
+    let c = &model.config;
+    for v in [1u32, c.vocab as u32, c.d_model as u32, c.n_layer as u32, c.n_head as u32,
+              c.n_kv_head as u32, c.d_ff as u32, c.max_seq as u32] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.write_all(&c.rope_theta.to_le_bytes())?;
+    w.write_all(&(model.tensors.len() as u32).to_le_bytes())?;
+    for (name, (dims, data)) in &model.tensors {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(dims.len() as u32).to_le_bytes())?;
+        for d in dims {
+            w.write_all(&(*d as u32).to_le_bytes())?;
+        }
+        for x in data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> RawModel {
+        let config = ModelConfig {
+            vocab: 128, d_model: 8, n_layer: 1, n_head: 2, n_kv_head: 2,
+            d_ff: 16, max_seq: 32, rope_theta: 10000.0,
+        };
+        let mut tensors = BTreeMap::new();
+        tensors.insert("emb".into(), (vec![128, 8], vec![0.5; 1024]));
+        tensors.insert("lnf".into(), (vec![8], vec![1.0; 8]));
+        RawModel { config, tensors }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("btc_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bin");
+        let m = tiny_model();
+        save_model(&path, &m).unwrap();
+        let m2 = load_model(&path).unwrap();
+        assert_eq!(m2.config, m.config);
+        assert_eq!(m2.tensors, m.tensors);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("btc_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE0000").unwrap();
+        assert!(load_model(&path).is_err());
+    }
+
+    #[test]
+    fn param_count_formula() {
+        // tinylm_s numbers pinned against python (344736 params).
+        let c = ModelConfig {
+            vocab: 128, d_model: 96, n_layer: 3, n_head: 3, n_kv_head: 3,
+            d_ff: 256, max_seq: 128, rope_theta: 10000.0,
+        };
+        assert_eq!(c.param_count(), 344_736);
+        assert!(c.linear_param_count() < c.param_count());
+    }
+
+    #[test]
+    fn matrix_and_vector_accessors() {
+        let m = tiny_model();
+        assert_eq!(m.matrix("emb").unwrap().rows, 128);
+        assert_eq!(m.vector("lnf").unwrap().len(), 8);
+        assert!(m.matrix("lnf").is_err());
+        assert!(m.tensor("nope").is_err());
+    }
+
+    #[test]
+    fn gqa_dims() {
+        let c = ModelConfig {
+            vocab: 128, d_model: 128, n_layer: 4, n_head: 4, n_kv_head: 2,
+            d_ff: 320, max_seq: 128, rope_theta: 10000.0,
+        };
+        assert_eq!(c.head_dim(), 32);
+        assert_eq!(c.kv_dim(), 64);
+    }
+}

@@ -1,0 +1,58 @@
+//! # BTC-LLM — sub-1-bit LLM quantization (ACL 2026) in Rust + JAX + Pallas
+//!
+//! Reproduction of "BTC-LLM: Efficient Sub-1-Bit LLM Quantization via
+//! Learnable Transformation and Binary Codebook".
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L1** Pallas kernels (`python/compile/kernels/`) — binary-codebook
+//!   LUT-GEMM and W1A16 sign-GEMM, AOT-lowered to HLO text.
+//! - **L2** JAX model (`python/compile/model.py`) — the TinyLM workload
+//!   family, trained at build time; python never runs at serve time.
+//! - **L3** this crate — the deployment system: quantization pipeline
+//!   (learnable transformation + ARB + binary codebook and every
+//!   baseline), a CPU inference engine (XNOR-POPCNT GEMM, two-stage
+//!   LUT-GEMM), evaluation harness, serving coordinator, and the PJRT
+//!   runtime that loads the AOT artifacts.
+//!
+//! The build image is offline with only the `xla` crate vendored, so all
+//! infrastructure (PRNG, CLI, TOML config, bench harness, property
+//! testing, threaded serving) lives in-repo under [`util`].
+
+pub mod benchsuite;
+pub mod bitops;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod io;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$BTC_ARTIFACTS` or ./artifacts,
+/// searching upward a couple of levels so tests/benches work from any
+/// cargo working directory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("BTC_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    for _ in 0..4 {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    ARTIFACTS_DIR.into()
+}

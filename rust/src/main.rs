@@ -1,0 +1,192 @@
+//! `btc-llm` launcher: the L3 CLI.
+//!
+//! ```text
+//! btc-llm info      [--model tinylm_m]                  model + memory report
+//! btc-llm quantize  [--model tinylm_m] [--method btc] [--bits 0.8] [--out m.qlm]
+//! btc-llm eval      [--model tinylm_m] [--method btc] [--bits 0.8] [--tokens 4096] [--zeroshot]
+//! btc-llm serve     [--config configs/serve.toml] [--requests 16]
+//! btc-llm parity                                        PJRT artifact cross-check
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+use btc_llm::coordinator::{Server, ServeConfig};
+use btc_llm::data::{corpus, ByteTokenizer};
+use btc_llm::eval::{memory, perplexity, zeroshot};
+use btc_llm::io::{load_model, qweights};
+use btc_llm::model::Transformer;
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::runtime::{PjrtRuntime, TensorArg};
+use btc_llm::util::argparse::Args;
+use btc_llm::{artifacts_dir, info};
+
+fn method_config(args: &Args) -> Result<QuantConfig> {
+    let bits = args.get_f64("bits", 0.8);
+    let mut cfg = match args.get_or("method", "btc") {
+        "fp16" => QuantConfig::fp16(),
+        "naive" => QuantConfig::naive(),
+        "billm" => QuantConfig::billm(),
+        "arb" | "arb-llm" => QuantConfig::arb_llm(),
+        "stbllm" => QuantConfig::stbllm(bits),
+        "fpvq" => QuantConfig::fpvq(bits),
+        "btc" => QuantConfig::btc(bits),
+        other => bail!("unknown method {other}"),
+    };
+    if let Some(v) = args.get("v") {
+        cfg.v = v.parse().context("--v")?;
+    }
+    if let Some(a) = args.get("act-bits") {
+        cfg.act_bits = a.parse().context("--act-bits")?;
+    }
+    cfg.n_splits = args.get_usize("splits", cfg.n_splits);
+    Ok(cfg)
+}
+
+fn load_raw(args: &Args) -> Result<(String, btc_llm::io::RawModel, Vec<u8>)> {
+    let name = args.get_or("model", "tinylm_m").to_string();
+    let dir = artifacts_dir();
+    let raw = load_model(&dir.join(format!("{name}.bin")))
+        .with_context(|| format!("load {name}.bin — run `make artifacts` first"))?;
+    let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt")).context("corpus_eval.txt")?;
+    Ok((name, raw, corpus_bytes))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let (name, raw, _) = load_raw(args)?;
+    let model = Transformer::from_raw(&raw)?;
+    let r = memory::report(&model);
+    println!("model {name}: {} params", raw.config.param_count());
+    println!(
+        "  d_model={} layers={} heads={}/{} d_ff={} vocab={}",
+        raw.config.d_model, raw.config.n_layer, raw.config.n_head, raw.config.n_kv_head,
+        raw.config.d_ff, raw.config.vocab
+    );
+    println!("  fp16 size: {}", memory::human_bytes(r.fp16_total_bytes));
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let (name, raw, corpus_bytes) = load_raw(args)?;
+    let cfg = method_config(args)?;
+    info!("quantizing {name} with {} @ {} bits", cfg.method.name(), cfg.target_bits);
+    let qm = quantize_model(&raw, &corpus_bytes, &cfg)?;
+    let r = memory::report(&qm.model);
+    println!(
+        "{} @ {:.2} bits: measured {:.3} bits/weight, rel err {:.4}, {} -> {} ({:.1}x)",
+        qm.stats.method,
+        qm.stats.target_bits,
+        r.linear_bits_per_weight,
+        qm.stats.mean_rel_error,
+        memory::human_bytes(r.fp16_total_bytes),
+        memory::human_bytes(r.total_bytes),
+        r.compression
+    );
+    if let Some(out) = args.get("out") {
+        qweights::save(std::path::Path::new(out), &qm.model)?;
+        println!("saved quantized model to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let (name, raw, corpus_bytes) = load_raw(args)?;
+    let cfg = method_config(args)?;
+    let qm = quantize_model(&raw, &corpus_bytes, &cfg)?;
+    let tok = ByteTokenizer::default();
+    let text = String::from_utf8_lossy(&corpus_bytes).into_owned();
+    let tokens = tok.encode(&text);
+    let max_tokens = args.get_usize("tokens", 4096);
+    let ppl = perplexity::perplexity(&qm.model, &tokens, 96, max_tokens);
+    println!("{name} {} @ {:.2}b: ppl {:.3}", qm.stats.method, qm.stats.target_bits, ppl);
+    if args.flag("zeroshot") {
+        let (per_task, mean) = zeroshot::run_all(&qm.model, args.get_usize("examples", 40), 7);
+        for (t, a) in &per_task {
+            println!("  {t:<10} {a:.1}%");
+        }
+        println!("  mean {mean:.2}%");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ServeConfig::from_file(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!("config: {e}"))?,
+        None => ServeConfig::default(),
+    };
+    let dir = artifacts_dir();
+    let raw = load_model(&dir.join(format!("{}.bin", cfg.model)))?;
+    let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt"))?;
+    let mut qcfg = match cfg.backend.as_str() {
+        "fp16" => QuantConfig::fp16(),
+        "binary" => QuantConfig::arb_llm(),
+        _ => QuantConfig::btc(cfg.bits),
+    };
+    qcfg.act_bits = 16;
+    info!("quantizing {} for serving ({})", cfg.model, cfg.backend);
+    let mut qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
+    qm.model.prepare_engines();
+    let server = Server::start(
+        qm.model,
+        cfg.max_batch,
+        Duration::from_millis(cfg.batch_wait_ms),
+        cfg.seed,
+    );
+    // Replay a request trace (offline image: no network listener; the
+    // trace IS the workload — see examples/serve.rs for the full driver).
+    let n = args.get_usize("requests", 16);
+    let tok = ByteTokenizer::default();
+    let prompts = corpus::prompts(n, cfg.seed);
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit(tok.encode(p), cfg.max_new_tokens, cfg.temperature))
+        .collect();
+    for (p, rx) in prompts.iter().zip(rxs) {
+        let resp = rx.recv().expect("response");
+        println!(
+            "'{p}' -> '{}' ({} tok, {:.1} ms)",
+            tok.decode(&resp.tokens[resp.prompt_len..]).trim_end(),
+            resp.tokens.len() - resp.prompt_len,
+            resp.latency.as_secs_f64() * 1e3
+        );
+    }
+    println!("{}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_parity(_args: &Args) -> Result<()> {
+    let dir = artifacts_dir();
+    let mut rt = PjrtRuntime::cpu(&dir)?;
+    println!("platform: {}", rt.platform());
+    // Smoke: run the binary_gemm kernel artifact on fixed inputs.
+    let (m, n, o) = (8usize, 96usize, 64usize);
+    let x = TensorArg::F32(vec![m, n], (0..m * n).map(|i| ((i % 13) as f32 - 6.0) * 0.1).collect());
+    let b = TensorArg::F32(vec![o, n], (0..o * n).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect());
+    let alpha = TensorArg::F32(vec![o], vec![0.5; o]);
+    let mu = TensorArg::F32(vec![o], vec![0.01; o]);
+    let out = rt.run_f32("binary_gemm.hlo.txt", &[x, b, alpha, mu])?;
+    println!("binary_gemm artifact: {} outputs, first={:.4}", out.len(), out[0]);
+    println!("parity OK (full cross-check: examples/hlo_parity.rs)");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("parity") => cmd_parity(&args),
+        _ => {
+            println!(
+                "btc-llm — sub-1-bit LLM quantization (BTC-LLM reproduction)\n\
+                 usage: btc-llm <info|quantize|eval|serve|parity> [--model NAME] \
+                 [--method fp16|naive|billm|arb|stbllm|fpvq|btc] [--bits B] ..."
+            );
+            Ok(())
+        }
+    }
+}

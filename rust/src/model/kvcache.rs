@@ -1,0 +1,92 @@
+//! Per-sequence KV cache for incremental decoding (the serving path).
+
+/// Growable key/value cache for one layer: rows are positions, columns
+/// are `kv_dim` channels.
+#[derive(Debug, Clone)]
+pub struct LayerKv {
+    pub kv_dim: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub len: usize,
+}
+
+impl LayerKv {
+    pub fn new(kv_dim: usize, capacity: usize) -> LayerKv {
+        LayerKv {
+            kv_dim,
+            k: Vec::with_capacity(capacity * kv_dim),
+            v: Vec::with_capacity(capacity * kv_dim),
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.kv_dim);
+        debug_assert_eq!(v_row.len(), self.kv_dim);
+        self.k.extend_from_slice(k_row);
+        self.v.extend_from_slice(v_row);
+        self.len += 1;
+    }
+
+    #[inline]
+    pub fn k_at(&self, pos: usize) -> &[f32] {
+        &self.k[pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+
+    #[inline]
+    pub fn v_at(&self, pos: usize) -> &[f32] {
+        &self.v[pos * self.kv_dim..(pos + 1) * self.kv_dim]
+    }
+}
+
+/// Full-model cache: one [`LayerKv`] per layer.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    pub layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    pub fn new(n_layer: usize, kv_dim: usize, capacity: usize) -> KvCache {
+        KvCache { layers: (0..n_layer).map(|_| LayerKv::new(kv_dim, capacity)).collect() }
+    }
+
+    /// Number of cached positions (same across layers).
+    pub fn len(&self) -> usize {
+        self.layers.first().map(|l| l.len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|l| (l.k.len() + l.v.len()) * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_read() {
+        let mut kv = LayerKv::new(4, 8);
+        kv.push(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0]);
+        kv.push(&[9.0; 4], &[0.0; 4]);
+        assert_eq!(kv.len, 2);
+        assert_eq!(kv.k_at(0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(kv.v_at(1), &[0.0; 4]);
+    }
+
+    #[test]
+    fn model_cache_accounting() {
+        let mut c = KvCache::new(3, 4, 16);
+        assert!(c.is_empty());
+        for l in c.layers.iter_mut() {
+            l.push(&[0.0; 4], &[0.0; 4]);
+        }
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 3 * 2 * 4 * 4);
+    }
+}

@@ -1,0 +1,18 @@
+//! Transformer inference substrate: RMSNorm + RoPE + causal MHA/GQA +
+//! SwiGLU decoder (the Rust twin of `python/compile/model.py`, loaded
+//! from the same TLM1 blobs and numerically cross-checked against the
+//! AOT-lowered JAX forward in `examples/hlo_parity.rs`).
+//!
+//! Every linear layer is a [`linear::Linear`] with a pluggable backend
+//! (dense fp32 / W1A16 sign-GEMM / binary-codebook LUT-GEMM / N:M
+//! sparse / fp-VQ), an optional learnable input transformation, and an
+//! optional activation quantizer — the deployment surface of the whole
+//! quantization pipeline.
+
+pub mod kvcache;
+pub mod linear;
+pub mod rope;
+pub mod transformer;
+
+pub use linear::{Linear, LinearBackend};
+pub use transformer::{CaptureSite, Transformer};

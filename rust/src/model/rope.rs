@@ -1,0 +1,96 @@
+//! Rotary position embeddings, split-half convention — bit-compatible
+//! with `python/compile/model.py::apply_rope` (first half = real part,
+//! second half = imaginary part).
+
+/// Precomputed cos/sin tables for positions `0..max_seq`.
+#[derive(Debug, Clone)]
+pub struct Rope {
+    pub head_dim: usize,
+    /// (max_seq, head_dim/2) each.
+    pub cos: Vec<f32>,
+    pub sin: Vec<f32>,
+    pub max_seq: usize,
+}
+
+impl Rope {
+    pub fn new(head_dim: usize, max_seq: usize, theta: f32) -> Rope {
+        assert!(head_dim % 2 == 0, "head_dim must be even for RoPE");
+        let half = head_dim / 2;
+        let mut cos = Vec::with_capacity(max_seq * half);
+        let mut sin = Vec::with_capacity(max_seq * half);
+        for pos in 0..max_seq {
+            for k in 0..half {
+                let inv = (theta as f64).powf(-((2 * k) as f64) / head_dim as f64);
+                let ang = pos as f64 * inv;
+                cos.push(ang.cos() as f32);
+                sin.push(ang.sin() as f32);
+            }
+        }
+        Rope { head_dim, cos, sin, max_seq }
+    }
+
+    /// Rotate one head vector in place at position `pos`.
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        assert!(pos < self.max_seq, "position {pos} beyond rope table");
+        let half = self.head_dim / 2;
+        let (c, s) = (&self.cos[pos * half..(pos + 1) * half], &self.sin[pos * half..(pos + 1) * half]);
+        for k in 0..half {
+            let (x1, x2) = (x[k], x[k + half]);
+            x[k] = x1 * c[k] - x2 * s[k];
+            x[k + half] = x1 * s[k] + x2 * c[k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let rope = Rope::new(8, 16, 10000.0);
+        let mut r = Rng::new(1);
+        let orig = r.normal_vec(8);
+        let mut x = orig.clone();
+        rope.apply(&mut x, 0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn preserves_norm() {
+        let rope = Rope::new(16, 32, 10000.0);
+        let mut r = Rng::new(2);
+        for pos in [1, 5, 31] {
+            let orig = r.normal_vec(16);
+            let mut x = orig.clone();
+            rope.apply(&mut x, pos);
+            let n0: f32 = orig.iter().map(|v| v * v).sum();
+            let n1: f32 = x.iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-4 * n0.max(1.0));
+        }
+    }
+
+    #[test]
+    fn relative_rotation_composes() {
+        // Rotating by pos a then checking the angle difference between
+        // consecutive positions is constant per frequency.
+        let rope = Rope::new(4, 8, 100.0);
+        // freq 0 angle at pos p is p * theta^0 = p.
+        let a1 = (rope.cos[1 * 2], rope.sin[1 * 2]);
+        let a2 = (rope.cos[2 * 2], rope.sin[2 * 2]);
+        // cos(2) == cos(1+1) = c1c1 - s1s1
+        assert!((a2.0 - (a1.0 * a1.0 - a1.1 * a1.1)).abs() < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond rope table")]
+    fn out_of_range_position_panics() {
+        let rope = Rope::new(4, 4, 100.0);
+        let mut x = vec![0.0; 4];
+        rope.apply(&mut x, 4);
+    }
+}

@@ -1,0 +1,451 @@
+//! The decoder-only transformer (Rust twin of
+//! `python/compile/model.py`): full-sequence forward for evaluation +
+//! calibration capture, and incremental decode for serving.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::kvcache::KvCache;
+use super::linear::Linear;
+use super::rope::Rope;
+use crate::io::weights::{ModelConfig, RawModel};
+use crate::tensor::Matrix;
+
+/// Where calibration activations are captured (inputs of the 7 linears).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CaptureSite {
+    /// ln1 output — shared input of wq/wk/wv.
+    Ln1Out,
+    /// attention mix — input of wo.
+    AttnOut,
+    /// ln2 output — shared input of wgate/wup.
+    Ln2Out,
+    /// silu(g)*u — input of wdown.
+    FfnMid,
+}
+
+/// Captured activation rows per (layer, site), capped at `max_rows`.
+#[derive(Debug, Default)]
+pub struct Capture {
+    pub max_rows: usize,
+    pub sites: HashMap<(usize, CaptureSite), Vec<Vec<f32>>>,
+}
+
+impl Capture {
+    pub fn new(max_rows: usize) -> Capture {
+        Capture { max_rows, sites: HashMap::new() }
+    }
+
+    fn push(&mut self, layer: usize, site: CaptureSite, x: &Matrix) {
+        let rows = self.sites.entry((layer, site)).or_default();
+        for r in 0..x.rows {
+            if rows.len() >= self.max_rows {
+                return;
+            }
+            rows.push(x.row(r).to_vec());
+        }
+    }
+
+    /// Materialize one site as a Matrix.
+    pub fn matrix(&self, layer: usize, site: CaptureSite) -> Option<Matrix> {
+        let rows = self.sites.get(&(layer, site))?;
+        if rows.is_empty() {
+            return None;
+        }
+        let cols = rows[0].len();
+        let mut m = Matrix::zeros(rows.len(), cols);
+        for (i, r) in rows.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(r);
+        }
+        Some(m)
+    }
+}
+
+/// One transformer block: 7 pluggable linears + 2 norms.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub ln1: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub wgate: Linear,
+    pub wup: Linear,
+    pub wdown: Linear,
+}
+
+impl Block {
+    /// Iterate the 7 linears with their names (pipeline, accounting).
+    pub fn linears_mut(&mut self) -> [(&'static str, &mut Linear); 7] {
+        [
+            ("wq", &mut self.wq),
+            ("wk", &mut self.wk),
+            ("wv", &mut self.wv),
+            ("wo", &mut self.wo),
+            ("wgate", &mut self.wgate),
+            ("wup", &mut self.wup),
+            ("wdown", &mut self.wdown),
+        ]
+    }
+
+    pub fn linears(&self) -> [(&'static str, &Linear); 7] {
+        [
+            ("wq", &self.wq),
+            ("wk", &self.wk),
+            ("wv", &self.wv),
+            ("wo", &self.wo),
+            ("wgate", &self.wgate),
+            ("wup", &self.wup),
+            ("wdown", &self.wdown),
+        ]
+    }
+}
+
+/// The model.
+#[derive(Debug, Clone)]
+pub struct Transformer {
+    pub cfg: ModelConfig,
+    pub emb: Matrix,
+    pub lnf: Vec<f32>,
+    pub blocks: Vec<Block>,
+    pub rope: Rope,
+}
+
+fn rmsnorm_rows(x: &Matrix, w: &[f32]) -> Matrix {
+    let mut out = x.clone();
+    for r in 0..out.rows {
+        let row = out.row_mut(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / row.len() as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (v, &wi) in row.iter_mut().zip(w.iter()) {
+            *v = *v * inv * wi;
+        }
+    }
+    out
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn softmax_inplace(xs: &mut [f32]) {
+    let max = xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let mut sum = 0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= sum;
+    }
+}
+
+impl Transformer {
+    /// Build from a TLM1 blob with dense fp32 backends.
+    pub fn from_raw(raw: &RawModel) -> Result<Transformer> {
+        let cfg = raw.config.clone();
+        let mut blocks = Vec::with_capacity(cfg.n_layer);
+        for i in 0..cfg.n_layer {
+            blocks.push(Block {
+                ln1: raw.vector(&format!("l{i}.ln1"))?,
+                ln2: raw.vector(&format!("l{i}.ln2"))?,
+                wq: Linear::dense(raw.matrix(&format!("l{i}.wq"))?),
+                wk: Linear::dense(raw.matrix(&format!("l{i}.wk"))?),
+                wv: Linear::dense(raw.matrix(&format!("l{i}.wv"))?),
+                wo: Linear::dense(raw.matrix(&format!("l{i}.wo"))?),
+                wgate: Linear::dense(raw.matrix(&format!("l{i}.wgate"))?),
+                wup: Linear::dense(raw.matrix(&format!("l{i}.wup"))?),
+                wdown: Linear::dense(raw.matrix(&format!("l{i}.wdown"))?),
+            });
+        }
+        let rope = Rope::new(cfg.head_dim(), cfg.max_seq.max(512), cfg.rope_theta);
+        Ok(Transformer {
+            emb: raw.matrix("emb")?,
+            lnf: raw.vector("lnf")?,
+            rope,
+            cfg,
+            blocks,
+        })
+    }
+
+    /// Full-sequence forward: tokens -> logits (seq, vocab).
+    pub fn forward(&self, tokens: &[u16]) -> Matrix {
+        self.forward_capture(tokens, &mut None)
+    }
+
+    /// Forward with optional calibration capture.
+    pub fn forward_capture(&self, tokens: &[u16], capture: &mut Option<&mut Capture>) -> Matrix {
+        let s = tokens.len();
+        let d = self.cfg.d_model;
+        let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
+        let rep = nh / nkv;
+        let mut x = Matrix::zeros(s, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.emb.row(t as usize));
+        }
+        for (li, block) in self.blocks.iter().enumerate() {
+            // ---- attention ----
+            let h = rmsnorm_rows(&x, &block.ln1);
+            if let Some(c) = capture.as_deref_mut() {
+                c.push(li, CaptureSite::Ln1Out, &h);
+            }
+            let mut q = block.wq.forward(&h); // (s, d)
+            let mut k = block.wk.forward(&h); // (s, kv_dim)
+            let v = block.wv.forward(&h); // (s, kv_dim)
+            for pos in 0..s {
+                let qrow = q.row_mut(pos);
+                for hh in 0..nh {
+                    self.rope.apply(&mut qrow[hh * hd..(hh + 1) * hd], pos);
+                }
+                let krow = k.row_mut(pos);
+                for hh in 0..nkv {
+                    self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], pos);
+                }
+            }
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn_out = Matrix::zeros(s, d);
+            let mut scores = vec![0f32; s];
+            for hh in 0..nh {
+                let kvh = hh / rep;
+                for qi in 0..s {
+                    let qv = &q.row(qi)[hh * hd..(hh + 1) * hd];
+                    for ki in 0..=qi {
+                        let kv = &k.row(ki)[kvh * hd..(kvh + 1) * hd];
+                        scores[ki] = crate::tensor::matrix::dot(qv, kv) * scale;
+                    }
+                    softmax_inplace(&mut scores[..=qi]);
+                    let orow = attn_out.row_mut(qi);
+                    for ki in 0..=qi {
+                        let vv = &v.row(ki)[kvh * hd..(kvh + 1) * hd];
+                        crate::tensor::matrix::axpy(scores[ki], vv, &mut orow[hh * hd..(hh + 1) * hd]);
+                    }
+                }
+            }
+            if let Some(c) = capture.as_deref_mut() {
+                c.push(li, CaptureSite::AttnOut, &attn_out);
+            }
+            x = x.add(&block.wo.forward(&attn_out));
+
+            // ---- ffn ----
+            let h2 = rmsnorm_rows(&x, &block.ln2);
+            if let Some(c) = capture.as_deref_mut() {
+                c.push(li, CaptureSite::Ln2Out, &h2);
+            }
+            let g = block.wgate.forward(&h2);
+            let u = block.wup.forward(&h2);
+            let mut mid = g;
+            for (mv, uv) in mid.data.iter_mut().zip(u.data.iter()) {
+                *mv = silu(*mv) * uv;
+            }
+            if let Some(c) = capture.as_deref_mut() {
+                c.push(li, CaptureSite::FfnMid, &mid);
+            }
+            x = x.add(&block.wdown.forward(&mid));
+        }
+        let xf = rmsnorm_rows(&x, &self.lnf);
+        xf.matmul_bt(&self.emb) // tied embedding
+    }
+
+    /// Incremental decode: run one token at position `cache.len()`,
+    /// appending K/V to the cache. Returns logits (vocab,).
+    pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
+        let d = self.cfg.d_model;
+        let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
+        let rep = nh / nkv;
+        let pos = cache.len();
+        let mut x = Matrix::zeros(1, d);
+        x.row_mut(0).copy_from_slice(self.emb.row(token as usize));
+        for (li, block) in self.blocks.iter().enumerate() {
+            let h = rmsnorm_rows(&x, &block.ln1);
+            let mut q = block.wq.forward(&h);
+            let mut k = block.wk.forward(&h);
+            let v = block.wv.forward(&h);
+            {
+                let qrow = q.row_mut(0);
+                for hh in 0..nh {
+                    self.rope.apply(&mut qrow[hh * hd..(hh + 1) * hd], pos);
+                }
+                let krow = k.row_mut(0);
+                for hh in 0..nkv {
+                    self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], pos);
+                }
+            }
+            cache.layers[li].push(k.row(0), v.row(0));
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn_out = Matrix::zeros(1, d);
+            let ctx = cache.layers[li].len;
+            let mut scores = vec![0f32; ctx];
+            for hh in 0..nh {
+                let kvh = hh / rep;
+                let qv = &q.row(0)[hh * hd..(hh + 1) * hd];
+                for ki in 0..ctx {
+                    let kv = &cache.layers[li].k_at(ki)[kvh * hd..(kvh + 1) * hd];
+                    scores[ki] = crate::tensor::matrix::dot(qv, kv) * scale;
+                }
+                softmax_inplace(&mut scores);
+                let orow = attn_out.row_mut(0);
+                for ki in 0..ctx {
+                    let vv = &cache.layers[li].v_at(ki)[kvh * hd..(kvh + 1) * hd];
+                    crate::tensor::matrix::axpy(scores[ki], vv, &mut orow[hh * hd..(hh + 1) * hd]);
+                }
+            }
+            x = x.add(&block.wo.forward(&attn_out));
+            let h2 = rmsnorm_rows(&x, &block.ln2);
+            let g = block.wgate.forward(&h2);
+            let u = block.wup.forward(&h2);
+            let mut mid = g;
+            for (mv, uv) in mid.data.iter_mut().zip(u.data.iter()) {
+                *mv = silu(*mv) * uv;
+            }
+            x = x.add(&block.wdown.forward(&mid));
+        }
+        let xf = rmsnorm_rows(&x, &self.lnf);
+        xf.matmul_bt(&self.emb).row(0).to_vec()
+    }
+
+    /// Prepare serving engines on every linear.
+    pub fn prepare_engines(&mut self) {
+        for b in self.blocks.iter_mut() {
+            for (_, lin) in b.linears_mut() {
+                lin.prepare_engine();
+            }
+        }
+    }
+
+    /// Cache dense reconstructions on every linear (fast eval).
+    pub fn cache_dense_all(&mut self) {
+        for b in self.blocks.iter_mut() {
+            for (_, lin) in b.linears_mut() {
+                lin.cache_dense();
+            }
+        }
+    }
+
+    /// Fresh KV cache sized for `capacity` positions.
+    pub fn new_cache(&self, capacity: usize) -> KvCache {
+        KvCache::new(self.cfg.n_layer, self.cfg.kv_dim(), capacity)
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::util::proptest::assert_close;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    /// A tiny random model for hermetic tests.
+    pub fn tiny_model(seed: u64, n_kv_head: usize) -> Transformer {
+        let mut rng = Rng::new(seed);
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layer: 2,
+            n_head: 4,
+            n_kv_head,
+            d_ff: 24,
+            max_seq: 64,
+            rope_theta: 10000.0,
+        };
+        let mut tensors = BTreeMap::new();
+        fn add(
+            tensors: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+            name: String,
+            rows: usize,
+            cols: usize,
+            rng: &mut Rng,
+        ) {
+            let m = Matrix::randn(rows, cols, rng).scale(0.15);
+            tensors.insert(name, (vec![rows, cols], m.data));
+        }
+        add(&mut tensors, "emb".into(), cfg.vocab, cfg.d_model, &mut rng);
+        tensors.insert("lnf".into(), (vec![cfg.d_model], vec![1.0; cfg.d_model]));
+        for i in 0..cfg.n_layer {
+            tensors.insert(format!("l{i}.ln1"), (vec![cfg.d_model], vec![1.0; cfg.d_model]));
+            tensors.insert(format!("l{i}.ln2"), (vec![cfg.d_model], vec![1.0; cfg.d_model]));
+            add(&mut tensors, format!("l{i}.wq"), cfg.d_model, cfg.d_model, &mut rng);
+            add(&mut tensors, format!("l{i}.wk"), cfg.kv_dim(), cfg.d_model, &mut rng);
+            add(&mut tensors, format!("l{i}.wv"), cfg.kv_dim(), cfg.d_model, &mut rng);
+            add(&mut tensors, format!("l{i}.wo"), cfg.d_model, cfg.d_model, &mut rng);
+            add(&mut tensors, format!("l{i}.wgate"), cfg.d_ff, cfg.d_model, &mut rng);
+            add(&mut tensors, format!("l{i}.wup"), cfg.d_ff, cfg.d_model, &mut rng);
+            add(&mut tensors, format!("l{i}.wdown"), cfg.d_model, cfg.d_ff, &mut rng);
+        }
+        Transformer::from_raw(&RawModel { config: cfg, tensors }).unwrap()
+    }
+
+    #[test]
+    fn forward_shape_and_finite() {
+        let m = tiny_model(1, 4);
+        let logits = m.forward(&[1, 2, 3, 4, 5]);
+        assert_eq!(logits.rows, 5);
+        assert_eq!(logits.cols, 32);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        let m = tiny_model(2, 4);
+        let l1 = m.forward(&[1, 2, 3, 4]);
+        let l2 = m.forward(&[1, 2, 3, 9]);
+        // logits at positions 0..2 must be identical.
+        for r in 0..3 {
+            assert_close(l1.row(r), l2.row(r), 1e-5, 1e-5).unwrap();
+        }
+        // position 3 must differ (different input).
+        assert!(l1.row(3).iter().zip(l2.row(3)).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn decode_matches_full_forward() {
+        // Incremental decoding must reproduce the full forward exactly.
+        for nkv in [4usize, 2] {
+            let m = tiny_model(3, nkv);
+            let tokens = [5u16, 9, 1, 30, 7];
+            let full = m.forward(&tokens);
+            let mut cache = m.new_cache(8);
+            let mut last = Vec::new();
+            for &t in &tokens {
+                last = m.decode_step(t, &mut cache);
+            }
+            assert_close(&last, full.row(tokens.len() - 1), 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("nkv={nkv}: {e}"));
+        }
+    }
+
+    #[test]
+    fn gqa_reduces_kv_dim() {
+        let m = tiny_model(4, 2);
+        assert_eq!(m.cfg.kv_dim(), 8);
+        let logits = m.forward(&[1, 2, 3]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn capture_collects_all_sites() {
+        let m = tiny_model(5, 4);
+        let mut cap = Capture::new(64);
+        let mut opt = Some(&mut cap);
+        m.forward_capture(&[1, 2, 3, 4], &mut opt);
+        for li in 0..2 {
+            for site in [CaptureSite::Ln1Out, CaptureSite::AttnOut, CaptureSite::Ln2Out, CaptureSite::FfnMid] {
+                let x = cap.matrix(li, site).unwrap();
+                assert_eq!(x.rows, 4);
+            }
+        }
+        // FfnMid has d_ff columns.
+        assert_eq!(cap.matrix(0, CaptureSite::FfnMid).unwrap().cols, 24);
+    }
+
+    #[test]
+    fn capture_respects_cap() {
+        let m = tiny_model(6, 4);
+        let mut cap = Capture::new(3);
+        let mut opt = Some(&mut cap);
+        m.forward_capture(&[1, 2, 3, 4, 5, 6], &mut opt);
+        assert_eq!(cap.matrix(0, CaptureSite::Ln1Out).unwrap().rows, 3);
+    }
+}

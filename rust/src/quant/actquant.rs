@@ -1,0 +1,136 @@
+//! Activation quantization (paper §5.3 Table 3d, App. F): symmetric
+//! min-max integer quantization with per-channel scales calibrated on
+//! sample activations. Simulated quantization (quantize-dequantize) —
+//! the standard way to measure WxAy accuracy.
+
+use crate::tensor::Matrix;
+
+/// Per-channel symmetric activation quantizer.
+#[derive(Debug, Clone)]
+pub struct ActQuant {
+    pub bits: u32,
+    /// Per-channel scale (absmax / qmax). Empty = identity (A16).
+    pub scale: Vec<f32>,
+}
+
+impl ActQuant {
+    /// A16 = no activation quantization.
+    pub fn identity() -> ActQuant {
+        ActQuant { bits: 16, scale: Vec::new() }
+    }
+
+    /// Calibrate per-channel scales from sample activations
+    /// (rows = tokens, cols = channels).
+    pub fn calibrate(samples: &Matrix, bits: u32) -> ActQuant {
+        assert!(bits >= 2 && bits <= 16);
+        if bits >= 16 {
+            return Self::identity();
+        }
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        let mut absmax = vec![0f32; samples.cols];
+        for r in 0..samples.rows {
+            for (c, &v) in samples.row(r).iter().enumerate() {
+                absmax[c] = absmax[c].max(v.abs());
+            }
+        }
+        let scale = absmax.iter().map(|&a| if a > 0.0 { a / qmax } else { 1.0 }).collect();
+        ActQuant { bits, scale }
+    }
+
+    /// Quantize-dequantize a batch of activations in place.
+    pub fn apply(&self, x: &mut Matrix) {
+        if self.scale.is_empty() {
+            return;
+        }
+        assert_eq!(x.cols, self.scale.len(), "channel mismatch");
+        let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
+        for r in 0..x.rows {
+            for (c, v) in x.row_mut(r).iter_mut().enumerate() {
+                let s = self.scale[c];
+                let q = (*v / s).round().clamp(-qmax - 1.0, qmax);
+                *v = q * s;
+            }
+        }
+    }
+
+    /// Max representable quantization step (worst-case rounding error).
+    pub fn max_step(&self) -> f32 {
+        self.scale.iter().fold(0.0f32, |m, &s| m.max(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_is_noop() {
+        let mut r = Rng::new(1);
+        let mut x = Matrix::randn(4, 8, &mut r);
+        let orig = x.clone();
+        ActQuant::identity().apply(&mut x);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step_property() {
+        check(
+            "actquant error <= scale/2",
+            20,
+            |r: &mut Rng| Matrix::randn(16, 6, r),
+            |x| {
+                let q = ActQuant::calibrate(x, 8);
+                let mut xq = x.clone();
+                q.apply(&mut xq);
+                for rr in 0..x.rows {
+                    for c in 0..x.cols {
+                        let err = (x.at(rr, c) - xq.at(rr, c)).abs();
+                        if err > q.scale[c] * 0.5 + 1e-6 {
+                            return Err(format!("err {err} > half-step {}", q.scale[c] * 0.5));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut r = Rng::new(2);
+        let x = Matrix::randn(64, 8, &mut r);
+        let err_at = |bits: u32| -> f64 {
+            let q = ActQuant::calibrate(&x, bits);
+            let mut xq = x.clone();
+            q.apply(&mut xq);
+            xq.sub(&x).fro2()
+        };
+        let (e4, e8) = (err_at(4), err_at(8));
+        assert!(e8 < e4, "A8 {e8} !< A4 {e4}");
+        assert!(err_at(16) == 0.0);
+    }
+
+    #[test]
+    fn values_land_on_grid() {
+        let mut r = Rng::new(3);
+        let x = Matrix::randn(8, 4, &mut r);
+        let q = ActQuant::calibrate(&x, 4);
+        let mut xq = x.clone();
+        q.apply(&mut xq);
+        for rr in 0..xq.rows {
+            for c in 0..xq.cols {
+                let steps = xq.at(rr, c) / q.scale[c];
+                assert!((steps - steps.round()).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_covers_range() {
+        let x = Matrix::from_vec(2, 1, vec![-4.0, 2.0]);
+        let q = ActQuant::calibrate(&x, 8);
+        assert!((q.scale[0] - 4.0 / 127.0).abs() < 1e-6);
+    }
+}

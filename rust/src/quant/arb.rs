@@ -1,0 +1,221 @@
+//! ARB: Alternating Refined Binarization (paper §3, after ARB-LLM).
+//!
+//! Iteratively refines, holding the others fixed:
+//!   mu    <- mu + row-mean of the residual            (bias refit)
+//!   alpha <- per-(row, group) least-squares scale      (scale refit)
+//!   B     <- sign(W - mu)                              (sign refit)
+//!
+//! Each step is the exact coordinate minimizer of the Frobenius
+//! objective, so the reconstruction error is monotonically
+//! non-increasing — pinned by a property test.
+
+use super::binarize::BinaryLayer;
+use crate::tensor::Matrix;
+
+/// Run `iters` rounds of alternating refinement starting from a plain
+/// grouped binarization of `w`.
+pub fn arb_quantize(w: &Matrix, col_group: &[u16], n_groups: usize, iters: usize) -> BinaryLayer {
+    let mut q = BinaryLayer::quantize_grouped(w, col_group, n_groups);
+    refine(&mut q, w, iters);
+    q
+}
+
+/// Refine an existing binarization in place.
+pub fn refine(q: &mut BinaryLayer, w: &Matrix, iters: usize) {
+    let (rows, cols, ng) = (q.rows, q.cols, q.n_groups);
+    let mut group_count = vec![0f64; ng];
+    for &g in &q.col_group {
+        group_count[g as usize] += 1.0;
+    }
+    let mut prev_err = f64::INFINITY;
+    for _ in 0..iters {
+        for r in 0..rows {
+            let wrow = w.row(r);
+            let signs = q.b.unpack_row(r);
+            let arow_off = r * ng;
+
+            // (1) bias refit: mu_r = mean(w - alpha*B) over the row.
+            let mut s = 0f64;
+            for c in 0..cols {
+                s += (wrow[c] - q.alpha[arow_off + q.col_group[c] as usize] * signs[c]) as f64;
+            }
+            q.mu[r] = (s / cols as f64) as f32;
+
+            // (2) scale refit: alpha_{r,g} = mean over group of B*(w-mu)
+            //     (exact LS because B in {-1,1} => B^T B = |group|).
+            let mut acc = vec![0f64; ng];
+            for c in 0..cols {
+                acc[q.col_group[c] as usize] += (signs[c] * (wrow[c] - q.mu[r])) as f64;
+            }
+            for g in 0..ng {
+                if group_count[g] > 0.0 {
+                    // Negative LS scale would flip all signs; clamp at 0
+                    // (sign refit below re-aligns B anyway).
+                    q.alpha[arow_off + g] = (acc[g] / group_count[g]).max(0.0) as f32;
+                }
+            }
+
+            // (3) sign refit: B = sign(w - mu).
+            for c in 0..cols {
+                q.b.set(r, c, wrow[c] - q.mu[r] >= 0.0);
+            }
+        }
+        // Early exit on convergence.
+        let err = q.error(w);
+        if prev_err - err < 1e-9 * prev_err.abs().max(1.0) {
+            break;
+        }
+        prev_err = err;
+    }
+}
+
+/// Residual second-order binarization (BiLLM-style, used for salient
+/// columns): quantize `w`, then binarize the residual on the given
+/// column subset and return both layers.
+#[derive(Debug, Clone)]
+pub struct ResidualBinary {
+    pub primary: BinaryLayer,
+    /// Residual signs over salient columns only (rows x n_salient).
+    pub residual: BinaryLayer,
+    /// The salient column indices the residual applies to.
+    pub salient_cols: Vec<usize>,
+}
+
+impl ResidualBinary {
+    pub fn quantize(
+        w: &Matrix,
+        col_group: &[u16],
+        n_groups: usize,
+        salient_cols: &[usize],
+        arb_iters: usize,
+    ) -> ResidualBinary {
+        let primary = if arb_iters > 0 {
+            arb_quantize(w, col_group, n_groups, arb_iters)
+        } else {
+            BinaryLayer::quantize_grouped(w, col_group, n_groups)
+        };
+        // Residual restricted to salient columns.
+        let rec = primary.reconstruct();
+        let mut res = Matrix::zeros(w.rows, salient_cols.len());
+        for r in 0..w.rows {
+            for (j, &c) in salient_cols.iter().enumerate() {
+                *res.at_mut(r, j) = w.at(r, c) - rec.at(r, c);
+            }
+        }
+        let residual = BinaryLayer::quantize(&res);
+        ResidualBinary { primary, residual, salient_cols: salient_cols.to_vec() }
+    }
+
+    pub fn reconstruct(&self) -> Matrix {
+        let mut out = self.primary.reconstruct();
+        let res = self.residual.reconstruct();
+        for r in 0..out.rows {
+            for (j, &c) in self.salient_cols.iter().enumerate() {
+                *out.at_mut(r, c) += res.at(r, j);
+            }
+        }
+        out
+    }
+
+    pub fn error(&self, w: &Matrix) -> f64 {
+        self.reconstruct().sub(w).fro2()
+    }
+
+    /// Storage bits: primary + residual signs/scales + salient bitmap.
+    pub fn storage_bits(&self) -> usize {
+        self.primary.storage_bits() + self.residual.storage_bits() + self.primary.cols
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        self.storage_bits() as f64 / (self.primary.rows * self.primary.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn arb_never_worse_than_naive_property() {
+        check(
+            "arb <= naive",
+            20,
+            |r: &mut Rng| Matrix::randn(6, 32, r),
+            |w| {
+                let naive = BinaryLayer::quantize(w).error(w);
+                let arb = arb_quantize(w, &vec![0u16; 32], 1, 15).error(w);
+                if arb <= naive + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("arb {arb} > naive {naive}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn arb_error_monotone_per_iteration() {
+        let mut rng = Rng::new(11);
+        let w = Matrix::from_fn(8, 64, |_, _| rng.heavy_tailed(0.05, 8.0));
+        let cg = vec![0u16; 64];
+        let mut prev = f64::INFINITY;
+        for iters in [0usize, 1, 2, 4, 8, 15] {
+            let q = arb_quantize(&w, &cg, 1, iters);
+            let e = q.error(&w);
+            assert!(e <= prev + 1e-6, "iters {iters}: {e} > {prev}");
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn arb_with_shifted_distribution() {
+        // ARB's bias refinement should handle a strong mean shift.
+        let mut rng = Rng::new(5);
+        let w = Matrix::from_fn(4, 48, |_, _| rng.normal() + 3.0);
+        let q = arb_quantize(&w, &vec![0u16; 48], 1, 10);
+        // mu should land near 3.
+        assert!(q.mu.iter().all(|&m| (m - 3.0).abs() < 0.5), "mu {:?}", q.mu);
+    }
+
+    #[test]
+    fn residual_reduces_error_on_salient() {
+        check(
+            "residual helps",
+            10,
+            |r: &mut Rng| Matrix::from_fn(6, 40, |_, c| r.normal() * if c < 4 { 10.0 } else { 1.0 }),
+            |w| {
+                let cg = vec![0u16; 40];
+                let plain = arb_quantize(w, &cg, 1, 8).error(w);
+                let sal: Vec<usize> = (0..4).collect();
+                let resid = ResidualBinary::quantize(w, &cg, 1, &sal, 8).error(w);
+                if resid <= plain + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {resid} > plain {plain}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn residual_bits_accounting() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(64, 128, &mut rng);
+        let sal: Vec<usize> = (0..13).collect(); // ~10% salient
+        let rb = ResidualBinary::quantize(&w, &vec![0u16; 128], 1, &sal, 4);
+        let bits = rb.bits_per_weight();
+        // 1 sign + ~0.1 residual signs + bitmap + fp16 scales. At this
+        // tiny width the per-row scales are a visible fraction (they
+        // amortize at LLM widths): expect [1.05, 1.8].
+        assert!(bits > 1.05 && bits < 1.8, "bits {bits}");
+        // Scale-free payload: 1 + 13/128 + bitmap 1/64... ≈ 1.11 —
+        // the paper's "1.11 bits" figure.
+        let payload =
+            (rb.primary.rows * rb.primary.cols + rb.residual.rows * rb.residual.cols
+                + rb.primary.cols) as f64
+                / (rb.primary.rows * rb.primary.cols) as f64;
+        assert!(payload > 1.05 && payload < 1.2, "payload {payload}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Core binarization (paper §3, Eq. 1-3).
+//!
+//! `W ≈ alpha ⊙ B + mu` row-wise: `mu_r` recenters the row,
+//! `alpha_r = mean |W_r − mu_r|` is the optimal L2 scale and
+//! `B = sign(W − mu)`. Column groups (from [`crate::quant::splits`])
+//! refine `alpha` per (row, group).
+
+use crate::bitops::BitMatrix;
+use crate::tensor::Matrix;
+
+/// A binarized weight matrix with per-row scale/bias and optional
+/// column-group-refined scales.
+#[derive(Debug, Clone)]
+pub struct BinaryLayer {
+    pub rows: usize,
+    pub cols: usize,
+    /// Packed sign matrix.
+    pub b: BitMatrix,
+    /// Per-(row, group) scales, indexed `r * n_groups + g`.
+    pub alpha: Vec<f32>,
+    /// Per-row bias.
+    pub mu: Vec<f32>,
+    /// Column -> group id (all zeros when ungrouped).
+    pub col_group: Vec<u16>,
+    pub n_groups: usize,
+}
+
+impl BinaryLayer {
+    /// Plain sign binarization with a single group (paper Eq. 2).
+    pub fn quantize(w: &Matrix) -> BinaryLayer {
+        Self::quantize_grouped(w, &vec![0u16; w.cols], 1)
+    }
+
+    /// Binarize with the given column grouping: per-row bias, per
+    /// (row, group) scale.
+    pub fn quantize_grouped(w: &Matrix, col_group: &[u16], n_groups: usize) -> BinaryLayer {
+        assert_eq!(col_group.len(), w.cols);
+        let (rows, cols) = (w.rows, w.cols);
+        let mu = w.row_means();
+        let mut signs = vec![0f32; rows * cols];
+        let mut alpha = vec![0f32; rows * n_groups];
+        let mut counts = vec![0f32; n_groups];
+        for (c, &g) in col_group.iter().enumerate() {
+            let _ = c;
+            counts[g as usize] += 1.0;
+        }
+        for r in 0..rows {
+            let wrow = w.row(r);
+            let m = mu[r];
+            let arow = &mut alpha[r * n_groups..(r + 1) * n_groups];
+            for (c, (&wv, &g)) in wrow.iter().zip(col_group.iter()).enumerate() {
+                let t = wv - m;
+                arow[g as usize] += t.abs();
+                // sign(0) = +1 (paper's tie rule).
+                signs[r * cols + c] = if t >= 0.0 { 1.0 } else { -1.0 };
+            }
+            for (g, a) in arow.iter_mut().enumerate() {
+                if counts[g] > 0.0 {
+                    *a /= counts[g];
+                }
+            }
+        }
+        BinaryLayer {
+            rows,
+            cols,
+            b: BitMatrix::from_signs(rows, cols, &signs),
+            alpha,
+            mu,
+            col_group: col_group.to_vec(),
+            n_groups,
+        }
+    }
+
+    /// Dequantize to a dense matrix.
+    pub fn reconstruct(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let signs = self.b.unpack_row(r);
+            let arow = &self.alpha[r * self.n_groups..(r + 1) * self.n_groups];
+            let orow = out.row_mut(r);
+            for c in 0..self.cols {
+                orow[c] = arow[self.col_group[c] as usize] * signs[c] + self.mu[r];
+            }
+        }
+        out
+    }
+
+    /// Frobenius² reconstruction error vs a reference matrix (Eq. 3).
+    pub fn error(&self, w: &Matrix) -> f64 {
+        self.reconstruct().sub(w).fro2()
+    }
+
+    /// Storage in bits: signs + fp16 alpha/mu + per-column group ids.
+    pub fn storage_bits(&self) -> usize {
+        let sign_bits = self.rows * self.cols;
+        let scale_bits = (self.alpha.len() + self.mu.len()) * 16;
+        let group_bits = if self.n_groups > 1 {
+            self.cols * (usize::BITS - (self.n_groups - 1).leading_zeros()) as usize
+        } else {
+            0
+        };
+        sign_bits + scale_bits + group_bits
+    }
+
+    /// Effective bits per weight.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.storage_bits() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstruct_exact_for_binary_input() {
+        // W already of form alpha*B + mu => zero error.
+        let w = Matrix::from_vec(2, 4, vec![1.5, -0.5, 1.5, -0.5, 3.0, -1.0, 3.0, -1.0]);
+        let q = BinaryLayer::quantize(&w);
+        assert!(q.error(&w) < 1e-10, "err {}", q.error(&w));
+    }
+
+    #[test]
+    fn alpha_is_mean_abs_residual() {
+        let w = Matrix::from_vec(1, 4, vec![3.0, -1.0, 1.0, -3.0]);
+        let q = BinaryLayer::quantize(&w);
+        assert_eq!(q.mu[0], 0.0);
+        assert_eq!(q.alpha[0], 2.0);
+    }
+
+    #[test]
+    fn optimality_of_scale_property() {
+        // alpha = mean|w-mu| minimizes ||w - mu - a*sign(w-mu)||^2 over a.
+        check(
+            "alpha optimal",
+            20,
+            |r: &mut Rng| Matrix::randn(3, 16, r),
+            |w| {
+                let q = BinaryLayer::quantize(w);
+                let base = q.error(w);
+                for scale in [0.8, 0.9, 1.1, 1.2] {
+                    let mut q2 = q.clone();
+                    for a in q2.alpha.iter_mut() {
+                        *a *= scale;
+                    }
+                    if q2.error(w) < base - 1e-6 {
+                        return Err(format!("scale {scale} beat optimal: {} < {base}", q2.error(w)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn grouped_never_worse_than_plain_property() {
+        // Splitting columns into magnitude groups can only reduce error.
+        check(
+            "grouped <= plain",
+            15,
+            |r: &mut Rng| {
+                let w = Matrix::from_fn(4, 32, |_, c| {
+                    // heavy columns at the end
+                    r.normal() * if c >= 24 { 5.0 } else { 1.0 }
+                });
+                w
+            },
+            |w| {
+                let plain = BinaryLayer::quantize(w).error(w);
+                let groups: Vec<u16> = (0..32).map(|c| if c >= 24 { 1 } else { 0 }).collect();
+                let grouped = BinaryLayer::quantize_grouped(w, &groups, 2).error(w);
+                if grouped <= plain + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("grouped {grouped} > plain {plain}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let mut r = Rng::new(1);
+        let w = Matrix::randn(64, 64, &mut r);
+        let q = BinaryLayer::quantize(&w);
+        // 1 sign bit + 2*64 fp16 scalars over 4096 weights = 1.5
+        assert!((q.bits_per_weight() - 1.5).abs() < 1e-9);
+        let groups: Vec<u16> = (0..64).map(|c| (c % 2) as u16).collect();
+        let qg = BinaryLayer::quantize_grouped(&w, &groups, 2);
+        assert!(qg.bits_per_weight() > q.bits_per_weight());
+    }
+
+    #[test]
+    fn sign_zero_is_plus() {
+        let w = Matrix::from_vec(1, 2, vec![1.0, 1.0]); // residual = 0,0
+        let q = BinaryLayer::quantize(&w);
+        assert_eq!(q.b.get(0, 0), 1.0);
+        assert_eq!(q.b.get(0, 1), 1.0);
+    }
+}

@@ -1,0 +1,547 @@
+//! **Flash & Accurate Binary Codebook** — the paper's primary
+//! contribution (§4.1, App. E/G).
+//!
+//! Clusters the length-`v` ±1 sub-vectors of binarized weight matrices
+//! into `c` binary centroids with a binary-specialized K-means:
+//!
+//! 1. **Init**: unique-vector census; if `M <= c` the codebook is the
+//!    unique set (exact, early termination); else top-`c` most frequent.
+//! 2. **E-step**: exact-match hash fast path, otherwise nearest centroid
+//!    under Hamming distance = one `XOR -> POPCNT` per candidate
+//!    (`||b-c||² = 4·d_H`, paper Eq. 4-5).
+//! 3. **M-step**: sign-of-mean majority vote per bit, `sign(0) = +1`.
+//!
+//! The EM loop runs over *unique* vectors weighted by frequency — an
+//! exact reformulation that cuts work by the duplication factor the
+//! paper's Figure 1 shows is large.
+//!
+//! Sub-vectors are packed into single `u64` words (`v <= 64`), so all
+//! distances are single-word XOR+POPCNT.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::binarize::BinaryLayer;
+use crate::tensor::Matrix;
+
+/// A binary codebook: `c` centroids of `v` bits each, packed one per u64.
+#[derive(Debug, Clone)]
+pub struct BinaryCodebook {
+    pub v: usize,
+    pub words: Vec<u64>,
+}
+
+/// Build statistics (reported by the benches).
+#[derive(Debug, Clone, Default)]
+pub struct BuildStats {
+    pub n_vectors: usize,
+    pub n_unique: usize,
+    pub c: usize,
+    pub iters_run: usize,
+    /// True when unique <= c: exact reconstruction, single pass.
+    pub exact: bool,
+    /// Total Hamming error (sum of 4*d_H) at convergence.
+    pub total_sq_err: u64,
+}
+
+#[inline]
+fn vmask(v: usize) -> u64 {
+    if v == 64 {
+        u64::MAX
+    } else {
+        (1u64 << v) - 1
+    }
+}
+
+impl BinaryCodebook {
+    pub fn c(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Index bits per sub-vector (ceil(log2 c), >= 1).
+    pub fn index_bits(&self) -> usize {
+        (usize::BITS - (self.c().saturating_sub(1)).leading_zeros()).max(1) as usize
+    }
+
+    /// Codebook storage in bits: c centroids x v bits (binary!).
+    pub fn storage_bits(&self) -> usize {
+        self.c() * self.v
+    }
+
+    /// Decode centroid `k` to ±1 values.
+    pub fn decode(&self, k: usize) -> Vec<f32> {
+        let w = self.words[k];
+        (0..self.v).map(|j| if w >> j & 1 == 1 { 1.0 } else { -1.0 }).collect()
+    }
+
+    /// Nearest centroid for a packed sub-vector (lowest index wins ties).
+    pub fn assign(&self, vec_word: u64) -> u32 {
+        let mask = vmask(self.v);
+        let x = vec_word & mask;
+        let mut best = (u32::MAX, 0u32);
+        for (k, &cw) in self.words.iter().enumerate() {
+            let d = (x ^ cw).count_ones();
+            if d < best.0 {
+                best = (d, k as u32);
+                if d == 0 {
+                    break;
+                }
+            }
+        }
+        best.1
+    }
+
+    /// Build a codebook from packed sub-vectors (Alg. 3). `c_target`
+    /// caps the codebook size; `max_iter` caps EM rounds (paper: 5).
+    pub fn build(vectors: &[u64], v: usize, c_target: usize, max_iter: usize) -> (BinaryCodebook, Vec<u32>, BuildStats) {
+        assert!(v >= 1 && v <= 64, "v must be in 1..=64");
+        assert!(!vectors.is_empty());
+        let mask = vmask(v);
+
+        // (1) Unique census.
+        let mut counts: HashMap<u64, u32> = HashMap::new();
+        for &raw in vectors {
+            *counts.entry(raw & mask).or_insert(0) += 1;
+        }
+        let n_unique = counts.len();
+        let mut uniq: Vec<(u64, u32)> = counts.into_iter().collect();
+        // Sort by frequency desc, then value for determinism.
+        uniq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+
+        let mut stats = BuildStats {
+            n_vectors: vectors.len(),
+            n_unique,
+            ..Default::default()
+        };
+
+        if n_unique <= c_target {
+            // Early exact termination: codebook = unique set.
+            let words: Vec<u64> = uniq.iter().map(|&(w, _)| w).collect();
+            let cb = BinaryCodebook { v, words };
+            let lookup: HashMap<u64, u32> =
+                cb.words.iter().enumerate().map(|(k, &w)| (w, k as u32)).collect();
+            let assignments = vectors.iter().map(|&x| lookup[&(x & mask)]).collect();
+            stats.c = cb.c();
+            stats.exact = true;
+            stats.iters_run = 1;
+            return (cb, assignments, stats);
+        }
+
+        // (2) Init with the top-c most frequent unique vectors.
+        let c = c_target.max(1);
+        let mut words: Vec<u64> = uniq.iter().take(c).map(|&(w, _)| w).collect();
+
+        // EM over unique vectors with frequency weights.
+        let mut assign_u: Vec<u32> = vec![0; n_unique];
+        let mut iters_run = 0;
+        for _ in 0..max_iter.max(1) {
+            iters_run += 1;
+            // E-step (exact-match fast path via hash).
+            let lookup: HashMap<u64, u32> =
+                words.iter().enumerate().map(|(k, &w)| (w, k as u32)).collect();
+            let mut changed = false;
+            for (ui, &(uw, _)) in uniq.iter().enumerate() {
+                let k = if let Some(&k) = lookup.get(&uw) {
+                    k
+                } else {
+                    let mut best = (u32::MAX, 0u32);
+                    for (k, &cw) in words.iter().enumerate() {
+                        let d = (uw ^ cw).count_ones();
+                        if d < best.0 {
+                            best = (d, k as u32);
+                        }
+                    }
+                    best.1
+                };
+                if assign_u[ui] != k {
+                    assign_u[ui] = k;
+                    changed = true;
+                }
+            }
+            if !changed && iters_run > 1 {
+                break;
+            }
+            // M-step: weighted majority vote per bit, sign(0) = +1.
+            let mut plus = vec![0u64; c * v];
+            let mut tot = vec![0u64; c];
+            for (ui, &(uw, cnt)) in uniq.iter().enumerate() {
+                let k = assign_u[ui] as usize;
+                tot[k] += cnt as u64;
+                let base = k * v;
+                for j in 0..v {
+                    if uw >> j & 1 == 1 {
+                        plus[base + j] += cnt as u64;
+                    }
+                }
+            }
+            for (k, w) in words.iter_mut().enumerate() {
+                if tot[k] == 0 {
+                    continue; // empty cluster: keep (paper skips)
+                }
+                let mut nw = 0u64;
+                for j in 0..v {
+                    // bit=1 (+1) when mean >= 0, i.e. 2*plus >= total.
+                    if 2 * plus[k * v + j] >= tot[k] {
+                        nw |= 1u64 << j;
+                    }
+                }
+                *w = nw;
+            }
+        }
+
+        let cb = BinaryCodebook { v, words };
+        // Final E-step refresh so assignments are optimal w.r.t. the
+        // *returned* centroids (the loop may exit right after an M-step).
+        let lookup: HashMap<u64, u32> =
+            cb.words.iter().enumerate().map(|(k, &w)| (w, k as u32)).collect();
+        for (ui, &(uw, _)) in uniq.iter().enumerate() {
+            assign_u[ui] = if let Some(&k) = lookup.get(&uw) {
+                k
+            } else {
+                let mut best = (u32::MAX, 0u32);
+                for (k, &cw) in cb.words.iter().enumerate() {
+                    let d = (uw ^ cw).count_ones();
+                    if d < best.0 {
+                        best = (d, k as u32);
+                    }
+                }
+                best.1
+            };
+        }
+        let uniq_to_k: HashMap<u64, u32> = uniq
+            .iter()
+            .enumerate()
+            .map(|(ui, &(uw, _))| (uw, assign_u[ui]))
+            .collect();
+        let mut total_sq_err = 0u64;
+        let assignments: Vec<u32> = vectors
+            .iter()
+            .map(|&x| {
+                let k = uniq_to_k[&(x & mask)];
+                total_sq_err += 4 * ((x & mask) ^ cb.words[k as usize]).count_ones() as u64;
+                k
+            })
+            .collect();
+        stats.c = cb.c();
+        stats.iters_run = iters_run;
+        stats.total_sq_err = total_sq_err;
+        (cb, assignments, stats)
+    }
+}
+
+/// Chunk a binarized layer's sign matrix into packed length-`v`
+/// sub-vector words, **per row** (blocks never straddle row
+/// boundaries — required by the LUT-GEMM engine's index-gather), with
+/// each row tail padded by alternating +1/-1 (paper Alg. 1/2).
+pub fn collect_vectors(bl: &BinaryLayer, v: usize) -> Vec<u64> {
+    let per_row = bl.cols.div_ceil(v);
+    let mut out = Vec::with_capacity(bl.rows * per_row);
+    for r in 0..bl.rows {
+        let mut word = 0u64;
+        let mut nbits = 0usize;
+        for c in 0..bl.cols {
+            if bl.b.get(r, c) > 0.0 {
+                word |= 1u64 << nbits;
+            }
+            nbits += 1;
+            if nbits == v {
+                out.push(word);
+                word = 0;
+                nbits = 0;
+            }
+        }
+        if nbits > 0 {
+            let mut j = nbits;
+            let mut plus = true;
+            while j < v {
+                if plus {
+                    word |= 1u64 << j;
+                }
+                plus = !plus;
+                j += 1;
+            }
+            out.push(word);
+        }
+    }
+    out
+}
+
+/// A codebook-compressed binarized layer (the deployed BTC format):
+/// indices into a shared [`BinaryCodebook`] + the scales/bias/groups
+/// carried over from the underlying [`BinaryLayer`].
+#[derive(Debug, Clone)]
+pub struct CodebookLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub v: usize,
+    pub idx: Vec<u32>,
+    pub codebook: Arc<BinaryCodebook>,
+    pub alpha: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub col_group: Vec<u16>,
+    pub n_groups: usize,
+}
+
+impl CodebookLayer {
+    /// Compress a binarized layer against a shared codebook.
+    pub fn from_binary(bl: &BinaryLayer, codebook: Arc<BinaryCodebook>) -> CodebookLayer {
+        let v = codebook.v;
+        let vectors = collect_vectors(bl, v);
+        let idx = vectors.iter().map(|&w| codebook.assign(w)).collect();
+        CodebookLayer {
+            rows: bl.rows,
+            cols: bl.cols,
+            v,
+            idx,
+            codebook,
+            alpha: bl.alpha.clone(),
+            mu: bl.mu.clone(),
+            col_group: bl.col_group.clone(),
+            n_groups: bl.n_groups,
+        }
+    }
+
+    /// Compress using precomputed assignments (from the builder, which
+    /// already assigned this layer's vector slice).
+    pub fn from_assignments(bl: &BinaryLayer, codebook: Arc<BinaryCodebook>, idx: Vec<u32>) -> CodebookLayer {
+        let v = codebook.v;
+        assert_eq!(idx.len(), bl.rows * bl.cols.div_ceil(v));
+        CodebookLayer {
+            rows: bl.rows,
+            cols: bl.cols,
+            v,
+            idx,
+            codebook,
+            alpha: bl.alpha.clone(),
+            mu: bl.mu.clone(),
+            col_group: bl.col_group.clone(),
+            n_groups: bl.n_groups,
+        }
+    }
+
+    /// Blocks per row (last block of each row may be padding-extended).
+    pub fn blocks_per_row(&self) -> usize {
+        self.cols.div_ceil(self.v)
+    }
+
+    /// Decode the sign matrix (±1 dense, row-major), dropping per-row
+    /// padding.
+    pub fn decode_signs(&self) -> Vec<f32> {
+        let per_row = self.blocks_per_row();
+        let mut flat = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            let mut row = Vec::with_capacity(per_row * self.v);
+            for j in 0..per_row {
+                row.extend(self.codebook.decode(self.idx[r * per_row + j] as usize));
+            }
+            row.truncate(self.cols);
+            flat.extend(row);
+        }
+        flat
+    }
+
+    /// Dequantize to a dense matrix.
+    pub fn reconstruct(&self) -> Matrix {
+        let signs = self.decode_signs();
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let arow = &self.alpha[r * self.n_groups..(r + 1) * self.n_groups];
+            let orow = out.row_mut(r);
+            for c in 0..self.cols {
+                orow[c] =
+                    arow[self.col_group[c] as usize] * signs[r * self.cols + c] + self.mu[r];
+            }
+        }
+        out
+    }
+
+    pub fn error(&self, w: &Matrix) -> f64 {
+        self.reconstruct().sub(w).fro2()
+    }
+
+    /// Per-layer storage bits: indices + fp16 scales + column groups.
+    /// (Codebook bits are shared — see [`BinaryCodebook::storage_bits`].)
+    pub fn storage_bits(&self) -> usize {
+        let idx_bits = self.codebook.index_bits();
+        let group_bits = if self.n_groups > 1 {
+            self.cols * (usize::BITS - (self.n_groups - 1).leading_zeros()) as usize
+        } else {
+            0
+        };
+        self.idx.len() * idx_bits + (self.alpha.len() + self.mu.len()) * 16 + group_bits
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        self.storage_bits() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn random_binary_layer(rng: &mut Rng, rows: usize, cols: usize) -> BinaryLayer {
+        let w = Matrix::randn(rows, cols, rng);
+        BinaryLayer::quantize(&w)
+    }
+
+    #[test]
+    fn exact_when_unique_fits() {
+        // Few distinct patterns, large c => exact reconstruction.
+        let mut rng = Rng::new(1);
+        let patterns = [0b1010u64, 0b0110u64, 0b1111u64];
+        let vectors: Vec<u64> = (0..500).map(|_| *rng.choice(&patterns)).collect();
+        let (cb, assign, stats) = BinaryCodebook::build(&vectors, 4, 16, 5);
+        assert!(stats.exact);
+        assert_eq!(cb.c(), 3);
+        for (i, &k) in assign.iter().enumerate() {
+            assert_eq!(cb.words[k as usize], vectors[i]);
+        }
+    }
+
+    #[test]
+    fn estep_assignment_is_optimal_property() {
+        // Every vector's assigned centroid must be at minimal Hamming
+        // distance among all centroids.
+        check(
+            "E-step optimality",
+            10,
+            |r: &mut Rng| {
+                let v = 4 + r.below(12);
+                let n = 200 + r.below(200);
+                let vectors: Vec<u64> = (0..n).map(|_| r.next_u64() & vmask(v)).collect();
+                (vectors, v)
+            },
+            |(vectors, v)| {
+                let (cb, assign, _) = BinaryCodebook::build(vectors, *v, 16, 5);
+                for (i, &x) in vectors.iter().enumerate() {
+                    let d_assigned = (x ^ cb.words[assign[i] as usize]).count_ones();
+                    for &cw in &cb.words {
+                        if (x ^ cw).count_ones() < d_assigned {
+                            return Err(format!("vector {i} not optimally assigned"));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn em_error_not_worse_than_init() {
+        // EM with majority-vote updates should beat (or match) the
+        // frequency-only init codebook.
+        let mut rng = Rng::new(3);
+        // Clustered data: 8 true centers + bit noise.
+        let centers: Vec<u64> = (0..8).map(|_| rng.next_u64() & vmask(16)).collect();
+        let vectors: Vec<u64> = (0..2000)
+            .map(|_| {
+                let mut x = *rng.choice(&centers);
+                for j in 0..16 {
+                    if rng.uniform() < 0.05 {
+                        x ^= 1 << j;
+                    }
+                }
+                x
+            })
+            .collect();
+        let err = |cb: &BinaryCodebook, asg: &[u32]| -> u64 {
+            vectors
+                .iter()
+                .zip(asg)
+                .map(|(&x, &k)| (x ^ cb.words[k as usize]).count_ones() as u64)
+                .sum()
+        };
+        let (cb1, asg1, _) = BinaryCodebook::build(&vectors, 16, 8, 1);
+        let (cb5, asg5, stats5) = BinaryCodebook::build(&vectors, 16, 8, 5);
+        assert!(err(&cb5, &asg5) <= err(&cb1, &asg1), "EM must not regress");
+        assert!(stats5.iters_run >= 1);
+        // With 5% noise around 8 centers, EM should recover them well:
+        // mean distance < 16 * 0.10.
+        assert!((err(&cb5, &asg5) as f64 / vectors.len() as f64) < 1.6);
+    }
+
+    #[test]
+    fn codebook_layer_roundtrip_when_exact() {
+        let mut rng = Rng::new(4);
+        let bl = random_binary_layer(&mut rng, 8, 32);
+        let vectors = collect_vectors(&bl, 8);
+        let (cb, assign, stats) = BinaryCodebook::build(&vectors, 8, 1 << 8, 5);
+        assert!(stats.exact || cb.c() == 256);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        // Exact codebook => reconstruction equals the BinaryLayer's.
+        let a = cl.reconstruct();
+        let b = bl.reconstruct();
+        crate::util::proptest::assert_close(&a.data, &b.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn codebook_error_at_least_binary_error_property() {
+        // Lossy codebook reconstruction error >= the underlying binary
+        // error (information can only be lost).
+        check(
+            "codebook >= binary err",
+            8,
+            |r: &mut Rng| Matrix::randn(8, 40, r),
+            |w| {
+                let bl = BinaryLayer::quantize(w);
+                let vectors = collect_vectors(&bl, 10);
+                let (cb, assign, _) = BinaryCodebook::build(&vectors, 10, 8, 5);
+                let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+                let eb = bl.error(w);
+                let ec = cl.error(w);
+                if ec >= eb - 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("codebook err {ec} < binary err {eb}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn collect_vectors_pads_alternating() {
+        let mut rng = Rng::new(5);
+        let bl = random_binary_layer(&mut rng, 1, 5); // 5 bits, v=4 => pad 3
+        let vecs = collect_vectors(&bl, 4);
+        assert_eq!(vecs.len(), 2);
+        // Second vector: bit0 = sign of element 4; bits 1..3 alternate +1,-1,+1.
+        let w = vecs[1];
+        assert_eq!(w >> 1 & 1, 1);
+        assert_eq!(w >> 2 & 1, 0);
+        assert_eq!(w >> 3 & 1, 1);
+    }
+
+    #[test]
+    fn bits_per_weight_sub_one() {
+        let mut rng = Rng::new(6);
+        let bl = random_binary_layer(&mut rng, 64, 320);
+        let vectors = collect_vectors(&bl, 16);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, 16, 256, 3);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        // 8 index bits / 16 weights = 0.5 + scales => well below 1.
+        assert!(cl.bits_per_weight() < 1.0, "bits {}", cl.bits_per_weight());
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let mut rng = Rng::new(7);
+        let vectors: Vec<u64> = (0..500).map(|_| rng.next_u64() & vmask(12)).collect();
+        let (cb1, a1, _) = BinaryCodebook::build(&vectors, 12, 32, 5);
+        let (cb2, a2, _) = BinaryCodebook::build(&vectors, 12, 32, 5);
+        assert_eq!(cb1.words, cb2.words);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn index_bits_formula() {
+        let cb = BinaryCodebook { v: 8, words: vec![0; 9] };
+        assert_eq!(cb.index_bits(), 4); // ceil(log2 9)
+        let cb2 = BinaryCodebook { v: 8, words: vec![0; 256] };
+        assert_eq!(cb2.index_bits(), 8);
+    }
+
+    use super::vmask;
+}

@@ -1,0 +1,190 @@
+//! Floating-point vector-quantization baseline (GPTVQ / VPTQ-style):
+//! Lloyd's k-means over length-`v` sub-vectors of the fp weight rows.
+//!
+//! Serves two roles in the reproduction:
+//! - the 2-bit VQ rows of Table 1 (where it is competitive), and
+//! - the sub-1-bit rows (where, as the paper reports, it collapses —
+//!   too few fp centroids for the vector space).
+//! Also the comparison target for the binary codebook's build-speed
+//! claim (App. C.4: ~2.3× faster), see `bench_codebook_speed`.
+
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// FP codebook compression of one weight matrix.
+#[derive(Debug, Clone)]
+pub struct FpVqLayer {
+    pub rows: usize,
+    pub cols: usize,
+    pub v: usize,
+    /// c x v centroids.
+    pub centroids: Vec<f32>,
+    pub c: usize,
+    /// One index per sub-vector, row-major over the flattened matrix.
+    pub idx: Vec<u32>,
+    /// Padding length added to flatten evenly.
+    pub pad: usize,
+}
+
+impl FpVqLayer {
+    /// k-means quantization: `c` centroids over length-`v` sub-vectors,
+    /// `iters` Lloyd iterations.
+    pub fn quantize(w: &Matrix, v: usize, c: usize, iters: usize, seed: u64) -> FpVqLayer {
+        let total = w.rows * w.cols;
+        let pad = (v - total % v) % v;
+        let mut flat = w.data.clone();
+        flat.extend(std::iter::repeat(0.0).take(pad));
+        let n_vec = flat.len() / v;
+        let c = c.min(n_vec).max(1);
+        let mut rng = Rng::new(seed);
+
+        // Init: random distinct sample of the data vectors.
+        let mut order: Vec<usize> = (0..n_vec).collect();
+        rng.shuffle(&mut order);
+        let mut centroids = vec![0f32; c * v];
+        for (k, &src) in order.iter().take(c).enumerate() {
+            centroids[k * v..(k + 1) * v].copy_from_slice(&flat[src * v..(src + 1) * v]);
+        }
+
+        let mut idx = vec![0u32; n_vec];
+        for _ in 0..iters.max(1) {
+            // E-step: nearest centroid by squared Euclidean distance.
+            let mut changed = false;
+            for i in 0..n_vec {
+                let x = &flat[i * v..(i + 1) * v];
+                let mut best = (f32::INFINITY, 0u32);
+                for k in 0..c {
+                    let cen = &centroids[k * v..(k + 1) * v];
+                    let mut d = 0f32;
+                    for j in 0..v {
+                        let t = x[j] - cen[j];
+                        d += t * t;
+                        if d >= best.0 {
+                            break; // early abandon
+                        }
+                    }
+                    if d < best.0 {
+                        best = (d, k as u32);
+                    }
+                }
+                if idx[i] != best.1 {
+                    changed = true;
+                    idx[i] = best.1;
+                }
+            }
+            // M-step: centroid means; reseed empty clusters.
+            let mut sums = vec![0f64; c * v];
+            let mut counts = vec![0usize; c];
+            for i in 0..n_vec {
+                let k = idx[i] as usize;
+                counts[k] += 1;
+                for j in 0..v {
+                    sums[k * v + j] += flat[i * v + j] as f64;
+                }
+            }
+            for k in 0..c {
+                if counts[k] == 0 {
+                    let src = rng.below(n_vec);
+                    centroids[k * v..(k + 1) * v].copy_from_slice(&flat[src * v..(src + 1) * v]);
+                } else {
+                    for j in 0..v {
+                        centroids[k * v + j] = (sums[k * v + j] / counts[k] as f64) as f32;
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        FpVqLayer { rows: w.rows, cols: w.cols, v, centroids, c, idx, pad }
+    }
+
+    pub fn reconstruct(&self) -> Matrix {
+        let total = self.rows * self.cols;
+        let mut flat = Vec::with_capacity(total + self.pad);
+        for &k in &self.idx {
+            let cen = &self.centroids[k as usize * self.v..(k as usize + 1) * self.v];
+            flat.extend_from_slice(cen);
+        }
+        flat.truncate(total);
+        Matrix::from_vec(self.rows, self.cols, flat)
+    }
+
+    pub fn error(&self, w: &Matrix) -> f64 {
+        self.reconstruct().sub(w).fro2()
+    }
+
+    /// Index bits per weight (ceil(log2 c) / v).
+    pub fn index_bits_per_weight(&self) -> f64 {
+        let idx_bits = (usize::BITS - (self.c - 1).leading_zeros()) as f64;
+        idx_bits / self.v as f64
+    }
+
+    /// Honest storage: indices + fp16 codebook.
+    pub fn storage_bits(&self) -> usize {
+        let idx_bits = (usize::BITS - (self.c - 1).leading_zeros()) as usize;
+        self.idx.len() * idx_bits + self.c * self.v * 16
+    }
+
+    pub fn bits_per_weight(&self) -> f64 {
+        self.storage_bits() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn exact_when_centroids_cover_data() {
+        // 2 distinct vector values, c=2 => perfect reconstruction.
+        let w = Matrix::from_vec(2, 4, vec![1.0, 2.0, 1.0, 2.0, 3.0, 4.0, 3.0, 4.0]);
+        let q = FpVqLayer::quantize(&w, 2, 2, 10, 0);
+        assert!(q.error(&w) < 1e-9, "err {}", q.error(&w));
+    }
+
+    #[test]
+    fn error_decreases_with_more_centroids_property() {
+        check(
+            "fpvq monotone in c",
+            10,
+            |r| Matrix::randn(8, 32, r),
+            |w| {
+                let e4 = FpVqLayer::quantize(w, 4, 4, 8, 1).error(w);
+                let e32 = FpVqLayer::quantize(w, 4, 32, 8, 1).error(w);
+                if e32 <= e4 + 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("c=32 err {e32} > c=4 err {e4}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn padding_roundtrip() {
+        let w = Matrix::from_vec(1, 5, vec![1.0, 2.0, 3.0, 4.0, 5.0]); // 5 % 2 != 0
+        let q = FpVqLayer::quantize(&w, 2, 3, 5, 2);
+        let rec = q.reconstruct();
+        assert_eq!(rec.rows, 1);
+        assert_eq!(rec.cols, 5);
+    }
+
+    #[test]
+    fn bits_accounting_2bit_config() {
+        // v=4, c=256 => 8/4 = 2 index bits per weight.
+        let mut r = crate::util::rng::Rng::new(5);
+        let w = Matrix::randn(64, 64, &mut r);
+        let q = FpVqLayer::quantize(&w, 4, 256, 2, 3);
+        assert!((q.index_bits_per_weight() - 2.0).abs() < 1e-9);
+        assert!(q.bits_per_weight() > q.index_bits_per_weight()); // + codebook
+    }
+
+    #[test]
+    fn centroid_cap_by_data_size() {
+        let w = Matrix::from_vec(1, 8, vec![0.0; 8]);
+        let q = FpVqLayer::quantize(&w, 4, 100, 2, 4);
+        assert!(q.c <= 2);
+    }
+}

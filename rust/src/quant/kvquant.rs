@@ -1,0 +1,131 @@
+//! KV-cache quantization (paper App. F — the "preliminary" extension):
+//! per-head symmetric int quantization of cached K/V with a
+//! recency-weighted saliency rule — the most recent `local_window`
+//! positions stay full-precision ("we preserve local windows binary
+//! representation without sub-bit quantization"), older entries are
+//! quantized to `bits`.
+
+use crate::model::kvcache::LayerKv;
+
+/// Configuration for cache quantization.
+#[derive(Debug, Clone, Copy)]
+pub struct KvQuantConfig {
+    /// Bits for old cache entries (2..=8; 16 disables).
+    pub bits: u32,
+    /// Most recent positions kept full precision.
+    pub local_window: usize,
+}
+
+impl Default for KvQuantConfig {
+    fn default() -> Self {
+        KvQuantConfig { bits: 4, local_window: 16 }
+    }
+}
+
+/// Quantize-dequantize one cache row in place (per-row absmax scale).
+fn quantize_row(row: &mut [f32], bits: u32) {
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if absmax == 0.0 {
+        return;
+    }
+    let scale = absmax / qmax;
+    for v in row.iter_mut() {
+        *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+    }
+}
+
+/// Apply App-F quantization to a layer cache: all but the trailing
+/// `local_window` positions are quantized to `bits`.
+pub fn quantize_layer_cache(kv: &mut LayerKv, cfg: &KvQuantConfig) {
+    if cfg.bits >= 16 || kv.len <= cfg.local_window {
+        return;
+    }
+    let kvd = kv.kv_dim;
+    let old = kv.len - cfg.local_window;
+    for pos in 0..old {
+        quantize_row(&mut kv.k[pos * kvd..(pos + 1) * kvd], cfg.bits);
+        quantize_row(&mut kv.v[pos * kvd..(pos + 1) * kvd], cfg.bits);
+    }
+}
+
+/// Worst-case memory the quantized layout would ship (bytes): int
+/// entries for old positions, fp16 for the local window + scales.
+pub fn quantized_cache_bytes(len: usize, kv_dim: usize, cfg: &KvQuantConfig) -> usize {
+    if cfg.bits >= 16 {
+        return len * kv_dim * 2 * 2; // k + v, fp16
+    }
+    let local = cfg.local_window.min(len);
+    let old = len - local;
+    let old_bits = old * kv_dim * cfg.bits as usize + old * 16; // + scale/row
+    let local_bits = local * kv_dim * 16;
+    2 * (old_bits + local_bits).div_ceil(8) // k and v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn filled_cache(len: usize, kvd: usize, seed: u64) -> LayerKv {
+        let mut rng = Rng::new(seed);
+        let mut kv = LayerKv::new(kvd, len);
+        for _ in 0..len {
+            let k = rng.normal_vec(kvd);
+            let v = rng.normal_vec(kvd);
+            kv.push(&k, &v);
+        }
+        kv
+    }
+
+    #[test]
+    fn local_window_untouched() {
+        let mut kv = filled_cache(32, 8, 1);
+        let before = kv.k.clone();
+        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 4, local_window: 8 });
+        // Last 8 positions identical.
+        assert_eq!(&kv.k[24 * 8..], &before[24 * 8..]);
+        // Some old position changed.
+        assert_ne!(&kv.k[..8], &before[..8]);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let mut kv = filled_cache(20, 16, 2);
+        let before = kv.k.clone();
+        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 8, local_window: 4 });
+        for pos in 0..16 {
+            let row_before = &before[pos * 16..(pos + 1) * 16];
+            let row_after = &kv.k[pos * 16..(pos + 1) * 16];
+            let absmax = row_before.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            let step = absmax / 127.0;
+            for (a, b) in row_after.iter().zip(row_before) {
+                assert!((a - b).abs() <= step * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn bits16_is_noop() {
+        let mut kv = filled_cache(10, 4, 3);
+        let before = kv.k.clone();
+        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 16, local_window: 2 });
+        assert_eq!(kv.k, before);
+    }
+
+    #[test]
+    fn memory_accounting_shrinks() {
+        let cfg = KvQuantConfig { bits: 4, local_window: 8 };
+        let fp = quantized_cache_bytes(128, 64, &KvQuantConfig { bits: 16, local_window: 0 });
+        let q = quantized_cache_bytes(128, 64, &cfg);
+        assert!(q < fp / 2, "q {q} fp {fp}");
+    }
+
+    #[test]
+    fn short_cache_untouched() {
+        let mut kv = filled_cache(4, 4, 5);
+        let before = kv.k.clone();
+        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 4, local_window: 8 });
+        assert_eq!(kv.k, before);
+    }
+}

@@ -1,0 +1,29 @@
+//! Quantization library: the paper's contribution (learnable
+//! transformation + binary codebook, `transform` / `codebook`) plus every
+//! baseline it is evaluated against (naive binarization, BiLLM-style
+//! salient residual, ARB alternating refinement, STBLLM N:M structured
+//! sparse binary, GPTVQ/VPTQ-style floating-point vector quantization)
+//! and the per-model pipeline driver.
+//!
+//! Conventions: weight matrices are (out, in) and applied as
+//! `y = x @ W^T`; binarization is per-output-row (`alpha`, `mu` indexed
+//! by row); column *groups* (salient / split-point groups) are shared
+//! across rows so group membership costs `ceil(log2 G)` bits per
+//! **column**, not per weight — the hardware-friendly structured layout
+//! the paper argues for.
+
+pub mod actquant;
+pub mod arb;
+pub mod billm;
+pub mod binarize;
+pub mod codebook;
+pub mod fpvq;
+pub mod kvquant;
+pub mod pipeline;
+pub mod splits;
+pub mod stbllm;
+pub mod transform;
+
+pub use binarize::BinaryLayer;
+pub use codebook::{BinaryCodebook, CodebookLayer};
+pub use pipeline::{QuantConfig, QuantMethod, QuantizedModel};

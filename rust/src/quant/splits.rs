@@ -1,0 +1,142 @@
+//! Column grouping via split points (paper §5.3 Table 3e, following
+//! BiLLM / ARB-LLM / STBLLM's non-salient weight partitioning).
+//!
+//! We use the *structured* (column-wise) variant: columns are ranked by
+//! an activation-aware importance score and partitioned into
+//! `n_splits + 1` groups by percentile thresholds. Group membership is
+//! then `ceil(log2 G)` bits per **column** — amortized to ~0 bits per
+//! weight — unlike element-wise bell-curve splits whose masks would blow
+//! the sub-1-bit budget (the paper's own critique of mask overhead).
+
+use crate::tensor::Matrix;
+
+/// Activation-aware column importance: `E[x_c^2] * ||W_{.,c}||_2^2`
+/// (diagonal-Hessian proxy, as in BiLLM/GPTQ). `act_sq` may be empty
+/// (uniform activations).
+pub fn column_importance(w: &Matrix, act_sq: &[f32]) -> Vec<f64> {
+    let mut imp = vec![0f64; w.cols];
+    for r in 0..w.rows {
+        for (c, &v) in w.row(r).iter().enumerate() {
+            imp[c] += (v as f64) * (v as f64);
+        }
+    }
+    if !act_sq.is_empty() {
+        assert_eq!(act_sq.len(), w.cols);
+        for (c, i) in imp.iter_mut().enumerate() {
+            *i *= act_sq[c] as f64;
+        }
+    }
+    imp
+}
+
+/// Partition columns into `n_splits + 1` groups by importance
+/// percentiles. Returns (col_group, n_groups); group 0 = least
+/// important. With `n_splits = 0` everything lands in group 0.
+pub fn split_columns(importance: &[f64], n_splits: usize) -> (Vec<u16>, usize) {
+    let n_groups = n_splits + 1;
+    if n_splits == 0 {
+        return (vec![0u16; importance.len()], 1);
+    }
+    let mut order: Vec<usize> = (0..importance.len()).collect();
+    order.sort_by(|&a, &b| importance[a].partial_cmp(&importance[b]).unwrap());
+    let mut groups = vec![0u16; importance.len()];
+    // Unequal buckets: most columns in the low groups, few in the top
+    // (mirrors the bell-curve concentration the paper exploits) —
+    // boundaries at 70% / 90% / 97%.
+    let bounds: Vec<f64> = match n_splits {
+        1 => vec![0.9],
+        2 => vec![0.7, 0.9],
+        _ => vec![0.7, 0.9, 0.97],
+    };
+    let n = importance.len();
+    for (rank, &col) in order.iter().enumerate() {
+        let frac = rank as f64 / n as f64;
+        let mut g = 0u16;
+        for (bi, &b) in bounds.iter().enumerate() {
+            if frac >= b {
+                g = (bi + 1) as u16;
+            }
+        }
+        groups[col] = g;
+    }
+    (groups, n_groups.min(bounds.len() + 1))
+}
+
+/// Top-`frac` most important columns (salient set for BiLLM residual
+/// binarization). Returns a sorted column index list.
+pub fn salient_columns(importance: &[f64], frac: f64) -> Vec<usize> {
+    let k = ((importance.len() as f64 * frac).round() as usize).clamp(1, importance.len());
+    let mut order: Vec<usize> = (0..importance.len()).collect();
+    order.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    let mut top: Vec<usize> = order[..k].to_vec();
+    top.sort();
+    top
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn importance_prefers_heavy_columns() {
+        let w = Matrix::from_fn(4, 8, |_, c| if c == 3 { 10.0 } else { 0.1 });
+        let imp = column_importance(&w, &[]);
+        let max_c = imp
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_c, 3);
+    }
+
+    #[test]
+    fn activation_weighting() {
+        let w = Matrix::filled(2, 3, 1.0);
+        let imp = column_importance(&w, &[1.0, 4.0, 0.25]);
+        assert!(imp[1] > imp[0] && imp[0] > imp[2]);
+    }
+
+    #[test]
+    fn split_zero_is_single_group() {
+        let (g, n) = split_columns(&[1.0, 2.0, 3.0], 0);
+        assert_eq!(n, 1);
+        assert!(g.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn split_counts_and_ordering() {
+        let imp: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let (g, n) = split_columns(&imp, 2);
+        assert_eq!(n, 3);
+        // Least-important columns are group 0, most important group 2.
+        assert_eq!(g[0], 0);
+        assert_eq!(g[99], 2);
+        let count2 = g.iter().filter(|&&x| x == 2).count();
+        assert_eq!(count2, 10); // top 10%
+        let count0 = g.iter().filter(|&&x| x == 0).count();
+        assert_eq!(count0, 70);
+    }
+
+    #[test]
+    fn groups_monotone_in_importance() {
+        let mut rng = Rng::new(3);
+        let imp: Vec<f64> = (0..50).map(|_| rng.uniform()).collect();
+        let (g, _) = split_columns(&imp, 2);
+        for a in 0..50 {
+            for b in 0..50 {
+                if imp[a] < imp[b] {
+                    assert!(g[a] <= g[b], "importance order violated");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn salient_selection() {
+        let imp = vec![0.0, 5.0, 1.0, 9.0];
+        assert_eq!(salient_columns(&imp, 0.5), vec![1, 3]);
+        assert_eq!(salient_columns(&imp, 0.01), vec![3]); // clamped to >= 1
+    }
+}

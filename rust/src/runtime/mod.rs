@@ -1,0 +1,7 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! lowered once by `python/compile/aot.py`) and executes them on the
+//! XLA CPU client — python never runs on this path.
+
+pub mod pjrt;
+
+pub use pjrt::{PjrtRuntime, TensorArg};

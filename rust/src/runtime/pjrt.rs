@@ -1,0 +1,91 @@
+//! Thin wrapper over the `xla` crate (PJRT C API, xla_extension 0.5.1):
+//! `HloModuleProto::from_text_file → XlaComputation → compile → execute`.
+//!
+//! Interchange is HLO **text** — jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids this XLA rejects; the text parser reassigns
+//! ids (see /opt/xla-example/README.md). All artifacts are lowered with
+//! `return_tuple=True`, so results unwrap via `to_tuple1()`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A typed input tensor for an AOT executable.
+#[derive(Debug, Clone)]
+pub enum TensorArg {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl TensorArg {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            TensorArg::F32(dims, data) => {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(data).reshape(&d)?
+            }
+            TensorArg::I32(dims, data) => {
+                let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                xla::Literal::vec1(data).reshape(&d)?
+            }
+        })
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache keyed by artifact path.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU runtime rooted at the artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client, artifacts_dir: artifacts_dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        let path = self.artifacts_dir.join(name);
+        if self.cache.contains_key(&path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        self.cache.insert(path, exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Returns the flattened f32 output of the
+    /// single tuple element (all our artifacts return 1-tuples).
+    pub fn run_f32(&mut self, name: &str, args: &[TensorArg]) -> Result<Vec<f32>> {
+        self.load(name)?;
+        let path = self.artifacts_dir.join(name);
+        let exe = self.cache.get(&path).unwrap();
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        let out = result.to_tuple1().context("unwrap 1-tuple")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Names of the loaded executables (diagnostics).
+    pub fn loaded(&self) -> Vec<String> {
+        self.cache.keys().filter_map(|p| p.file_name()).map(|s| s.to_string_lossy().into_owned()).collect()
+    }
+}
+
+// NOTE: runtime tests that need real artifacts live in
+// rust/tests/runtime_parity.rs (integration), because they depend on
+// `make artifacts` having run.

@@ -1,0 +1,278 @@
+//! Small-matrix linear algebra for the learnable transformation:
+//! LU inverse (for `P⁻¹ = P₁⁻¹ ⊗ P₂⁻¹`), Kronecker products, and a
+//! Jacobi symmetric eigensolver (for the Gram-spectrum auxiliary loss
+//! `L_sim = Tr(G) − Σ topK λ_i(G)`).
+//!
+//! These run on Kronecker *factors* (≤ 32×32) and sampled Gram matrices
+//! (≤ 64×64), so O(n³) dense algorithms are the right tool.
+
+use super::matrix::Matrix;
+
+/// Invert a square matrix via LU decomposition with partial pivoting.
+/// Returns `None` if singular (pivot below `1e-12`).
+pub fn invert(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols, "invert: square required");
+    let n = a.rows;
+    // Augmented [A | I] Gauss-Jordan in f64 for stability.
+    let mut aug = vec![0f64; n * 2 * n];
+    for r in 0..n {
+        for c in 0..n {
+            aug[r * 2 * n + c] = a.at(r, c) as f64;
+        }
+        aug[r * 2 * n + n + r] = 1.0;
+    }
+    for col in 0..n {
+        // Pivot: largest |value| in column.
+        let mut piv = col;
+        for r in col + 1..n {
+            if aug[r * 2 * n + col].abs() > aug[piv * 2 * n + col].abs() {
+                piv = r;
+            }
+        }
+        if aug[piv * 2 * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..2 * n {
+                aug.swap(col * 2 * n + c, piv * 2 * n + c);
+            }
+        }
+        let pval = aug[col * 2 * n + col];
+        for c in 0..2 * n {
+            aug[col * 2 * n + c] /= pval;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = aug[r * 2 * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for c in 0..2 * n {
+                aug[r * 2 * n + c] -= f * aug[col * 2 * n + c];
+            }
+        }
+    }
+    let mut out = Matrix::zeros(n, n);
+    for r in 0..n {
+        for c in 0..n {
+            out.data[r * n + c] = aug[r * 2 * n + n + c] as f32;
+        }
+    }
+    Some(out)
+}
+
+/// Kronecker product A ⊗ B: shape (a.rows·b.rows, a.cols·b.cols).
+pub fn kron(a: &Matrix, b: &Matrix) -> Matrix {
+    let (ra, ca, rb, cb) = (a.rows, a.cols, b.rows, b.cols);
+    let mut out = Matrix::zeros(ra * rb, ca * cb);
+    for i in 0..ra {
+        for j in 0..ca {
+            let av = a.at(i, j);
+            if av == 0.0 {
+                continue;
+            }
+            for p in 0..rb {
+                for q in 0..cb {
+                    *out.at_mut(i * rb + p, j * cb + q) = av * b.at(p, q);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Jacobi eigendecomposition of a symmetric matrix.
+/// Returns (eigenvalues descending, eigenvectors as columns of V).
+pub fn jacobi_eigh(a: &Matrix, max_sweeps: usize) -> (Vec<f32>, Matrix) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0f64;
+        for r in 0..n {
+            for c in r + 1..n {
+                off += m[r * n + c] * m[r * n + c];
+            }
+        }
+        if off.sqrt() < 1e-10 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-14 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p, q of M.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract + sort descending by eigenvalue.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let evals: Vec<f32> = pairs.iter().map(|(e, _)| *e as f32).collect();
+    let mut evecs = Matrix::zeros(n, n);
+    for (newc, (_, oldc)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            evecs.data[r * n + newc] = v[r * n + oldc] as f32;
+        }
+    }
+    (evals, evecs)
+}
+
+/// Matrix 1-norm condition estimate helper: ||A||_1.
+pub fn norm1(a: &Matrix) -> f32 {
+    let mut best = 0f32;
+    for c in 0..a.cols {
+        let mut s = 0f32;
+        for r in 0..a.rows {
+            s += a.at(r, c).abs();
+        }
+        best = best.max(s);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, check};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn invert_identity() {
+        let i = Matrix::eye(5);
+        assert_close(&invert(&i).unwrap().data, &i.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn invert_roundtrip_property() {
+        check(
+            "A*inv(A)=I",
+            20,
+            |r| {
+                let n = 1 + r.below(12);
+                // Diagonally-dominant => well-conditioned.
+                let mut a = Matrix::randn(n, n, r);
+                for i in 0..n {
+                    *a.at_mut(i, i) += 4.0;
+                }
+                a
+            },
+            |a| {
+                let inv = invert(a).ok_or("singular")?;
+                assert_close(&a.matmul(&inv).data, &Matrix::eye(a.rows).data, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn invert_singular_returns_none() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(invert(&a).is_none());
+    }
+
+    #[test]
+    fn kron_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::eye(2);
+        let k = kron(&a, &b);
+        assert_eq!(k.rows, 4);
+        assert_eq!(k.at(0, 0), 1.0);
+        assert_eq!(k.at(1, 1), 1.0);
+        assert_eq!(k.at(0, 2), 2.0);
+        assert_eq!(k.at(2, 0), 3.0);
+        assert_eq!(k.at(3, 3), 4.0);
+        assert_eq!(k.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn kron_inverse_is_inverse_of_kron() {
+        let mut r = Rng::new(3);
+        let mut p1 = Matrix::randn(3, 3, &mut r);
+        let mut p2 = Matrix::randn(4, 4, &mut r);
+        for i in 0..3 {
+            *p1.at_mut(i, i) += 3.0;
+        }
+        for i in 0..4 {
+            *p2.at_mut(i, i) += 3.0;
+        }
+        let big = kron(&p1, &p2);
+        let inv_small = kron(&invert(&p1).unwrap(), &invert(&p2).unwrap());
+        let prod = big.matmul(&inv_small);
+        assert_close(&prod.data, &Matrix::eye(12).data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn jacobi_diagonal() {
+        let d = Matrix::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let (evals, _) = jacobi_eigh(&d, 20);
+        assert_close(&evals, &[3.0, 2.0, 1.0], 1e-5, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn jacobi_reconstruction_property() {
+        check(
+            "V diag(l) V^T = A",
+            15,
+            |r| {
+                let n = 2 + r.below(8);
+                let b = Matrix::randn(n, n, r);
+                b.matmul_bt(&b) // symmetric PSD
+            },
+            |a| {
+                let n = a.rows;
+                let (evals, v) = jacobi_eigh(a, 50);
+                let mut d = Matrix::zeros(n, n);
+                for i in 0..n {
+                    d.data[i * n + i] = evals[i];
+                }
+                let rec = v.matmul(&d).matmul(&v.transpose());
+                assert_close(&rec.data, &a.data, 1e-2, 1e-2)
+            },
+        );
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        let mut r = Rng::new(5);
+        let b = Matrix::randn(6, 6, &mut r);
+        let a = b.matmul_bt(&b);
+        let (evals, _) = jacobi_eigh(&a, 50);
+        let tr: f32 = (0..6).map(|i| a.at(i, i)).sum();
+        let se: f32 = evals.iter().sum();
+        assert!((tr - se).abs() < 1e-2 * tr.abs().max(1.0));
+    }
+}

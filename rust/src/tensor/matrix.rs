@@ -1,0 +1,347 @@
+//! Row-major f32 matrix with the operations the quantization pipeline
+//! and inference engine are built on.
+//!
+//! GEMM kernels: `matmul` (A·B), `matmul_bt` (A·Bᵀ — the inference
+//! layout, weights stored (out, in)), `matmul_at` (Aᵀ·B — gradient
+//! accumulation). The hot path is `matmul_bt`: both operands stream
+//! row-major, so the inner loop is a pure dot product over contiguous
+//! slices that LLVM auto-vectorizes; the §Perf pass unrolled it into
+//! four accumulators (see EXPERIMENTS.md §Perf).
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Gaussian random matrix (tests, synthetic workloads).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    /// Random ±1 matrix.
+    pub fn rand_sign(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Matrix { rows, cols, data: (0..rows * cols).map(|_| rng.sign()).collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// C = A · B.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        // ikj loop order: C row accumulates scaled B rows (contiguous).
+        for i in 0..m {
+            let arow = self.row(i);
+            let crow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// C = A · Bᵀ — the inference layout (`y = x @ W^T`, W stored (out, in)).
+    pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_bt shape {}x{} · ({}x{})^T", self.rows, self.cols, b.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+            }
+        }
+        out
+    }
+
+    /// C = Aᵀ · B (gradient accumulation).
+    pub fn matmul_at(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_at shape ({}x{})^T · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        for kk in 0..k {
+            let arow = self.row(kk);
+            let brow = b.row(kk);
+            for (i, &a) in arow.iter().enumerate().take(m) {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (ov, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *ov += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn scale(&self, s: f32) -> Matrix {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|a| a * s).collect() }
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Row means, length `rows`.
+    pub fn row_means(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().sum::<f32>() / self.cols as f32)
+            .collect()
+    }
+
+    /// Mean of |x| per row.
+    pub fn row_abs_means(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|x| x.abs()).sum::<f32>() / self.cols as f32)
+            .collect()
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+}
+
+/// Unrolled dot product over contiguous slices — the GEMM inner loop.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += a[i] * b[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// y += alpha * x (axpy).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, check};
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_property() {
+        check(
+            "matmul==naive",
+            20,
+            |r| {
+                let (m, k, n) = (1 + r.below(12), 1 + r.below(12), 1 + r.below(12));
+                (Matrix::randn(m, k, r), Matrix::randn(k, n, r))
+            },
+            |(a, b)| assert_close(&a.matmul(b).data, &naive_matmul(a, b).data, 1e-4, 1e-4),
+        );
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose() {
+        check(
+            "matmul_bt==matmul(transpose)",
+            20,
+            |r| {
+                let (m, k, n) = (1 + r.below(10), 1 + r.below(16), 1 + r.below(10));
+                (Matrix::randn(m, k, r), Matrix::randn(n, k, r))
+            },
+            |(a, b)| assert_close(&a.matmul_bt(b).data, &a.matmul(&b.transpose()).data, 1e-4, 1e-4),
+        );
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose() {
+        check(
+            "matmul_at==transpose.matmul",
+            20,
+            |r| {
+                let (k, m, n) = (1 + r.below(10), 1 + r.below(10), 1 + r.below(10));
+                (Matrix::randn(k, m, r), Matrix::randn(k, n, r))
+            },
+            |(a, b)| assert_close(&a.matmul_at(b).data, &a.transpose().matmul(b).data, 1e-4, 1e-4),
+        );
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(9);
+        let a = Matrix::randn(5, 7, &mut r);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut r = Rng::new(10);
+        let a = Matrix::randn(6, 6, &mut r);
+        let i = Matrix::eye(6);
+        assert_close(&a.matmul(&i).data, &a.data, 1e-6, 1e-6).unwrap();
+        assert_close(&i.matmul(&a).data, &a.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        check(
+            "dot==naive",
+            30,
+            |r| {
+                let n = r.below(40);
+                (r.normal_vec(n), r.normal_vec(n))
+            },
+            |(a, b)| {
+                let naive: f32 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+                assert_close(&[dot(a, b)], &[naive], 1e-4, 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn row_stats() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, -1.0, -2.0, -3.0]);
+        assert_eq!(m.row_means(), vec![2.0, -2.0]);
+        assert_eq!(m.row_abs_means(), vec![2.0, 2.0]);
+        assert_eq!(m.max_abs(), 3.0);
+    }
+
+    #[test]
+    fn fro2_known() {
+        let m = Matrix::from_vec(1, 3, vec![1.0, 2.0, 2.0]);
+        assert!((m.fro2() - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense numeric substrate: row-major f32 matrices, blocked GEMM,
+//! small-matrix linear algebra (LU inverse, Kronecker products, Jacobi
+//! symmetric eigendecomposition) and streaming statistics.
+//!
+//! Everything the quantizers, the learnable transformation and the
+//! inference engine need — implemented from scratch (no BLAS in the
+//! offline image) and tuned in the §Perf pass.
+
+pub mod linalg;
+pub mod matrix;
+pub mod stats;
+
+pub use matrix::Matrix;

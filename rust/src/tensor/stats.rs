@@ -1,0 +1,128 @@
+//! Streaming / summary statistics used by the evaluation harness and the
+//! activation-distribution figures (paper Figs. 2, 8-9).
+
+/// Summary of a sample of f32 values.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f32,
+    pub max: f32,
+    pub max_abs: f32,
+    pub p50: f32,
+    pub p99: f32,
+    /// Excess kurtosis — the paper's outlier indicator for activations.
+    pub kurtosis: f64,
+}
+
+/// Compute a full summary (sorts a copy; fine for eval-sized samples).
+pub fn summarize(xs: &[f32]) -> Summary {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let var = xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+    let std = var.sqrt();
+    let m4 = xs.iter().map(|&x| (x as f64 - mean).powi(4)).sum::<f64>() / n as f64;
+    let kurtosis = if var > 0.0 { m4 / (var * var) - 3.0 } else { 0.0 };
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| sorted[(((n - 1) as f64) * p).round() as usize];
+    Summary {
+        n,
+        mean,
+        std,
+        min: sorted[0],
+        max: sorted[n - 1],
+        max_abs: sorted[0].abs().max(sorted[n - 1].abs()),
+        p50: pct(0.5),
+        p99: pct(0.99),
+        kurtosis,
+    }
+}
+
+/// Percentile of a sample (p in [0,1]).
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted[(((xs.len() - 1) as f64) * p.clamp(0.0, 1.0)).round() as usize]
+}
+
+/// Histogram with uniform bins over [lo, hi].
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        if x < lo || x > hi {
+            continue;
+        }
+        let b = (((x - lo) / w) as usize).min(bins - 1);
+        h[b] += 1;
+    }
+    h
+}
+
+/// Relative error ||a-b||_F / ||a||_F (weight-error figures 6-7).
+pub fn rel_error(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
+    let den: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_constant() {
+        let s = summarize(&[2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.max_abs, 2.0);
+    }
+
+    #[test]
+    fn summary_known() {
+        let s = summarize(&[-3.0, 0.0, 3.0]);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.min, -3.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.p50, 0.0);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 50.0);
+    }
+
+    #[test]
+    fn histogram_sums() {
+        let xs = vec![0.1, 0.2, 0.5, 0.9];
+        let h = histogram(&xs, 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        assert_eq!(h[0], 2);
+    }
+
+    #[test]
+    fn rel_error_zero_for_equal() {
+        let a = vec![1.0, -2.0, 3.0];
+        assert!(rel_error(&a, &a) < 1e-12);
+        let b = vec![0.0, 0.0, 0.0];
+        assert!((rel_error(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kurtosis_sign() {
+        // Heavy-tailed sample has positive excess kurtosis.
+        let mut xs = vec![0.0f32; 100];
+        xs[0] = 50.0;
+        xs[1] = -50.0;
+        assert!(summarize(&xs).kurtosis > 1.0);
+    }
+}

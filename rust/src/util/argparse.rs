@@ -1,0 +1,120 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --key value --flag positional` grammar:
+//! the launcher (`rust/src/main.rs`) and every example/bench use this.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (e.g. `quantize`, `serve`), if any.
+    pub subcommand: Option<String>,
+    /// `--key value` pairs. `--flag` with no value is stored as "true".
+    pub options: HashMap<String, String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) — `tokens` excludes argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(key) = t.strip_prefix("--") {
+                // --key=value or --key value or bare --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.options.insert(key.to_string(), "true".to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process command line.
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("quantize --model tinylm_m --bits 0.8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.get("model"), Some("tinylm_m"));
+        assert_eq!(a.get_f64("bits", 1.0), 0.8);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("eval --bits=0.7 --out=x.txt");
+        assert_eq!(a.get("bits"), Some("0.7"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("bench table1 table2 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["table1", "table2"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+        assert_eq!(a.get_usize("n", 5), 5);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn flag_before_positional_consumes_value() {
+        let a = parse("serve --port 8080");
+        assert_eq!(a.get_usize("port", 0), 8080);
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,173 @@
+//! In-repo micro/throughput benchmarking harness (criterion is not in
+//! the offline vendor set). Used by every `cargo bench` target.
+//!
+//! Method: warmup, then timed iterations with per-iteration samples;
+//! reports min/mean/p50/p95 and derived throughput. Benches print
+//! paper-shaped tables via [`Table`] and emit machine-readable
+//! `BENCHLINE` rows for EXPERIMENTS.md tooling.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples_ns: Vec<u64>,
+}
+
+impl BenchStats {
+    pub fn min_ns(&self) -> u64 {
+        *self.samples_ns.iter().min().unwrap_or(&0)
+    }
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64
+    }
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        if self.samples_ns.is_empty() {
+            return 0;
+        }
+        let mut s = self.samples_ns.clone();
+        s.sort_unstable();
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns() / 1e6
+    }
+    /// ops/sec given work per iteration.
+    pub fn throughput(&self, work_per_iter: f64) -> f64 {
+        work_per_iter / (self.mean_ns() / 1e9)
+    }
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: mean {:.3} ms  p50 {:.3} ms  p95 {:.3} ms  min {:.3} ms  (n={})",
+            self.name,
+            self.mean_ms(),
+            self.percentile_ns(0.5) as f64 / 1e6,
+            self.percentile_ns(0.95) as f64 / 1e6,
+            self.min_ns() as f64 / 1e6,
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    BenchStats { name: name.to_string(), samples_ns: samples }
+}
+
+/// Run `f` repeatedly until ~`budget_ms` of samples collected (at least
+/// `min_iters`). Adapts to very fast or very slow bodies.
+pub fn bench_for_ms<F: FnMut()>(name: &str, budget_ms: u64, min_iters: usize, mut f: F) -> BenchStats {
+    f(); // warmup / lazy init
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_millis() < budget_ms as u128 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+        if samples.len() > 1_000_000 {
+            break;
+        }
+    }
+    BenchStats { name: name.to_string(), samples_ns: samples }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-shaped output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+    pub fn rowv(&mut self, cells: Vec<String>) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", parts.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Machine-readable result line (grep-able into EXPERIMENTS.md).
+pub fn benchline(exp: &str, kv: &[(&str, String)]) {
+    let body: Vec<String> = kv.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    println!("BENCHLINE exp={} {}", exp, body.join(" "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0u64;
+        let stats = bench("t", 2, 10, || n += 1);
+        assert_eq!(stats.samples_ns.len(), 10);
+        assert_eq!(n, 12);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let stats = BenchStats { name: "x".into(), samples_ns: (1..=100).collect() };
+        assert!(stats.percentile_ns(0.5) <= stats.percentile_ns(0.95));
+        assert_eq!(stats.min_ns(), 1);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let stats = BenchStats { name: "x".into(), samples_ns: vec![1_000_000_000] };
+        let t = stats.throughput(100.0);
+        assert!((t - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print(); // must not panic
+    }
+}

@@ -1,0 +1,84 @@
+//! Tiny leveled logger (env-controlled via `BTC_LOG=debug|info|warn|error`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_level() -> u8 {
+    let lvl = match std::env::var("BTC_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    } as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn enabled(level: Level) -> bool {
+    let mut cur = LEVEL.load(Ordering::Relaxed);
+    if cur == 255 {
+        cur = init_level();
+    }
+    level as u8 >= cur
+}
+
+/// Override the level programmatically (tests, `--verbose`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log(level: Level, module: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default();
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{:>10}.{:03} {} {}] {}", t.as_secs(), t.subsec_millis(), tag, module, msg);
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

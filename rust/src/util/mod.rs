@@ -1,0 +1,13 @@
+//! In-repo infrastructure substrates.
+//!
+//! The offline image vendors only the `xla` crate's dependency tree, so
+//! the usual ecosystem crates (rand, clap, serde/toml, criterion,
+//! proptest, tokio) are unavailable. Each submodule here is a small,
+//! fully-tested replacement covering exactly what this project needs.
+
+pub mod argparse;
+pub mod benchkit;
+pub mod log;
+pub mod proptest;
+pub mod rng;
+pub mod toml;

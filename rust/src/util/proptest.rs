@@ -1,0 +1,108 @@
+//! Property-based testing helper (proptest/quickcheck are unavailable
+//! offline). Generates N random cases from a seeded [`Rng`]; on failure
+//! reports the case seed so the exact input reproduces with
+//! `check_with_seed`. Shrinking is replaced by deterministic replay —
+//! adequate for the numeric invariants this crate checks.
+
+use super::rng::Rng;
+
+/// Run `prop` on `cases` random inputs produced by `gen`.
+///
+/// Panics with the failing case seed + message on the first violation.
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let seed = 0x9E37_79B9u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(fxhash(name));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (for debugging).
+pub fn check_with_seed<T, G, P>(name: &str, seed: u64, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("property '{name}' failed (seed {seed:#x}): {msg}\ninput: {input:?}");
+    }
+}
+
+/// Tiny FNV-style string hash for per-property seed derivation.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("abs_nonneg", 50, |r| r.normal(), |x| {
+            if x.abs() >= 0.0 { Ok(()) } else { Err("abs < 0".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always_fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 3, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut seen1 = Vec::new();
+        check("det", 5, |r| r.next_u64(), |x| {
+            seen1.push(*x);
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        check("det", 5, |r| r.next_u64(), |x| {
+            seen2.push(*x);
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

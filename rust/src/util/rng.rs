@@ -1,0 +1,161 @@
+//! Deterministic PRNG: SplitMix64 core (bit-identical to
+//! `python/compile/corpus.py::SplitMix64` — pinned by tests on both
+//! sides) plus the distribution helpers the quantizers and workload
+//! generators need.
+
+/// SplitMix64: tiny, fast, full-period 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform integer in `[0, n)`. Matches the python generator's
+    /// simple modulo reduction (bias is irrelevant at our n << 2^64).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn uniform(&mut self) -> f64 {
+        self.next_u64() as f64 / 2f64.powi(64)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform() as f32
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (1.0 - self.uniform()).max(1e-300); // avoid ln(0)
+        let u2 = self.uniform();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Random sign in {-1.0, +1.0}.
+    pub fn sign(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Heavy-tailed "LLM-like" weight sample: mostly gaussian with a few
+    /// large-magnitude outliers (used by synthetic quantizer tests).
+    pub fn heavy_tailed(&mut self, outlier_prob: f64, outlier_scale: f32) -> f32 {
+        let base = self.normal();
+        if self.uniform() < outlier_prob {
+            base * outlier_scale
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Pinned in python/tests/test_corpus.py as well: the two sides
+        // must never drift.
+        let mut r = Rng::new(42);
+        assert_eq!(r.next_u64(), 13679457532755275413);
+        assert_eq!(r.next_u64(), 2949826092126892291);
+        assert_eq!(r.next_u64(), 5139283748462763858);
+    }
+
+    #[test]
+    fn determinism() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let xs = r.normal_vec(20_000);
+        let mean = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(4);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn signs_are_pm_one() {
+        let mut r = Rng::new(5);
+        let mut seen_pos = false;
+        let mut seen_neg = false;
+        for _ in 0..100 {
+            let s = r.sign();
+            assert!(s == 1.0 || s == -1.0);
+            seen_pos |= s == 1.0;
+            seen_neg |= s == -1.0;
+        }
+        assert!(seen_pos && seen_neg);
+    }
+}

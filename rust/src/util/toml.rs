@@ -1,0 +1,243 @@
+//! Minimal TOML-subset parser for the coordinator's config system
+//! (serde/toml are unavailable offline).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and flat scalar arrays, `#` comments.
+//! Values are exposed flattened as `"section.key"`.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: flattened `section.key -> Value`.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+    pub fn get_int(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+    pub fn get_float(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn parse_scalar(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        // Basic strings with simple escapes.
+        let inner = &s[1..s.len() - 1];
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("unparseable value: {s:?}"))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: bad section header", lineno + 1));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{}.{}", section, k.trim())
+        };
+        let vtrim = v.trim();
+        let value = if vtrim.starts_with('[') {
+            if !vtrim.ends_with(']') {
+                return Err(format!("line {}: unterminated array", lineno + 1));
+            }
+            let inner = &vtrim[1..vtrim.len() - 1];
+            let mut items = Vec::new();
+            if !inner.trim().is_empty() {
+                for part in inner.split(',') {
+                    if part.trim().is_empty() {
+                        continue; // trailing comma
+                    }
+                    items.push(parse_scalar(part).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+                }
+            }
+            Value::Array(items)
+        } else {
+            parse_scalar(vtrim).map_err(|e| format!("line {}: {e}", lineno + 1))?
+        };
+        doc.values.insert(key, value);
+    }
+    Ok(doc)
+}
+
+/// Parse a config file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<Doc, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_scalars() {
+        let doc = parse(
+            r#"
+# top comment
+name = "btc"
+[server]
+port = 8080
+rate = 1.5
+debug = true
+[quant.codebook]
+v = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name", ""), "btc");
+        assert_eq!(doc.get_int("server.port", 0), 8080);
+        assert_eq!(doc.get_float("server.rate", 0.0), 1.5);
+        assert!(doc.get_bool("server.debug", false));
+        assert_eq!(doc.get_int("quant.codebook.v", 0), 16);
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = parse("bits = [1.11, 0.9, 0.8, 0.7]\nnames = [\"a\", \"b\"]").unwrap();
+        match doc.get("bits").unwrap() {
+            Value::Array(xs) => {
+                assert_eq!(xs.len(), 4);
+                assert_eq!(xs[0].as_float(), Some(1.11));
+            }
+            _ => panic!(),
+        }
+        match doc.get("names").unwrap() {
+            Value::Array(xs) => assert_eq!(xs[1].as_str(), Some("b")),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn string_escapes_and_comments_in_strings() {
+        let doc = parse("s = \"a # not comment\\n\" # real comment").unwrap();
+        assert_eq!(doc.get_str("s", ""), "a # not comment\n");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("novalue").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("x = @bad").is_err());
+        assert!(parse("a = [1, 2").is_err());
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.get_int("missing", 7), 7);
+    }
+
+    #[test]
+    fn underscored_ints_and_negative() {
+        let doc = parse("n = 65_536\nm = -3").unwrap();
+        assert_eq!(doc.get_int("n", 0), 65536);
+        assert_eq!(doc.get_int("m", 0), -3);
+    }
+}

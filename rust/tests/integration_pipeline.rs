@@ -1,0 +1,98 @@
+//! Integration: full quantization pipeline on the real trained
+//! artifacts, checking the paper's quality orderings end-to-end.
+//! Skips (with a loud message) when `make artifacts` has not run.
+
+use btc_llm::benchsuite::{eval_lane, load_workload, Workload};
+use btc_llm::quant::pipeline::QuantConfig;
+
+fn workload() -> Option<Workload> {
+    match load_workload("tinylm_s") {
+        Ok(w) => Some(w),
+        Err(e) => {
+            eprintln!("SKIP integration_pipeline: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
+fn quality_ordering_across_methods() {
+    let Some(w) = workload() else { return };
+    let toks = 1200;
+    let fp = eval_lane(&w, &QuantConfig::fp16(), toks, None).unwrap();
+    let btc = eval_lane(&w, &QuantConfig::btc(1.11), toks, None).unwrap();
+    let arb = eval_lane(&w, &QuantConfig::arb_llm(), toks, None).unwrap();
+    let naive = eval_lane(&w, &QuantConfig::naive(), toks, None).unwrap();
+    // Paper Table 1 ordering at ~1 bit: FP16 < BTC <= ARB < naive.
+    assert!(fp.ppl < btc.ppl, "fp {} !< btc {}", fp.ppl, btc.ppl);
+    assert!(btc.ppl <= arb.ppl * 1.02, "btc {} !<= arb {}", btc.ppl, arb.ppl);
+    assert!(arb.ppl < naive.ppl, "arb {} !< naive {}", arb.ppl, naive.ppl);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
+fn btc_degrades_gracefully_with_bits() {
+    let Some(w) = workload() else { return };
+    let toks = 1200;
+    let mut prev = 0.0;
+    for bits in [1.11, 0.9, 0.8, 0.7] {
+        let r = eval_lane(&w, &QuantConfig::btc(bits), toks, None).unwrap();
+        assert!(r.ppl.is_finite() && r.ppl > 1.0);
+        assert!(
+            r.ppl >= prev * 0.95,
+            "ppl should not improve as bits shrink: {bits} -> {}",
+            r.ppl
+        );
+        // Never collapses (paper: BTC robust where VQ explodes).
+        assert!(r.ppl < 60.0, "collapse at {bits} bits: {}", r.ppl);
+        prev = r.ppl;
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
+fn fpvq_collapses_sub_one_bit() {
+    let Some(w) = workload() else { return };
+    let toks = 800;
+    let two = eval_lane(&w, &QuantConfig::fpvq(2.0), toks, None).unwrap();
+    let sub = eval_lane(&w, &QuantConfig::fpvq(0.7), toks, None).unwrap();
+    // The paper's VPTQ/GPTVQ rows: fine at 2 bits, collapse below 1.
+    assert!(two.ppl < 3.0, "fp-vq@2b should be near-lossless: {}", two.ppl);
+    assert!(sub.ppl > two.ppl * 1.5, "fp-vq@0.7 should degrade hard: {}", sub.ppl);
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
+fn payload_bits_honest() {
+    let Some(w) = workload() else { return };
+    let toks = 400;
+    let btc = eval_lane(&w, &QuantConfig::btc(0.8), toks, None).unwrap();
+    assert!(btc.payload_bits < 1.0, "BTC sub-1 payload {}", btc.payload_bits);
+    let stb = eval_lane(&w, &QuantConfig::stbllm(0.8), toks, None).unwrap();
+    assert!(stb.payload_bits > 1.0, "STBLLM mask overhead hidden: {}", stb.payload_bits);
+}
+
+#[test]
+fn zeroshot_above_chance_for_fp() {
+    let Some(w) = workload() else { return };
+    let fp = eval_lane(&w, &QuantConfig::fp16(), 400, Some(32)).unwrap();
+    // The trained model must actually know the grammar (well above 50%).
+    assert!(fp.mean_acc.unwrap() > 60.0, "fp mean acc {}", fp.mean_acc.unwrap());
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
+fn gqa_family_quantizes() {
+    let Some(w) = (match load_workload("tinyqwen_s") {
+        Ok(w) => Some(w),
+        Err(e) => {
+            eprintln!("SKIP gqa_family_quantizes: {e}");
+            None
+        }
+    }) else {
+        return;
+    };
+    let r = eval_lane(&w, &QuantConfig::btc(0.8), 800, None).unwrap();
+    assert!(r.ppl.is_finite() && r.ppl < 60.0);
+}

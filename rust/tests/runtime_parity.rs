@@ -1,0 +1,88 @@
+//! Integration: PJRT runtime loads the AOT HLO artifacts and the Rust
+//! engines match their numerics (the compact version of
+//! examples/hlo_parity.rs, kept in `cargo test`). Skips without
+//! artifacts.
+
+use btc_llm::bitops::BitMatrix;
+use btc_llm::engine::BinaryGemmEngine;
+use btc_llm::io::load_model;
+use btc_llm::model::Transformer;
+use btc_llm::quant::binarize::BinaryLayer;
+use btc_llm::runtime::{PjrtRuntime, TensorArg};
+use btc_llm::tensor::Matrix;
+use btc_llm::util::proptest::assert_close;
+use btc_llm::util::rng::Rng;
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = btc_llm::artifacts_dir();
+    if !dir.join("binary_gemm.hlo.txt").exists() {
+        eprintln!("SKIP runtime_parity: artifacts missing (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtRuntime::cpu(&dir).expect("PJRT CPU client"))
+}
+
+#[test]
+fn binary_gemm_kernel_parity() {
+    let Some(mut rt) = runtime() else { return };
+    let mut rng = Rng::new(1);
+    let (m, n, o) = (8usize, 96usize, 64usize);
+    let x = Matrix::randn(m, n, &mut rng);
+    let signs: Vec<f32> = (0..o * n).map(|_| rng.sign()).collect();
+    let alpha: Vec<f32> = (0..o).map(|_| rng.range_f32(0.2, 2.0)).collect();
+    let mu: Vec<f32> = (0..o).map(|_| rng.normal() * 0.1).collect();
+    let jax = rt
+        .run_f32(
+            "binary_gemm.hlo.txt",
+            &[
+                TensorArg::F32(vec![m, n], x.data.clone()),
+                TensorArg::F32(vec![o, n], signs.clone()),
+                TensorArg::F32(vec![o], alpha.clone()),
+                TensorArg::F32(vec![o], mu.clone()),
+            ],
+        )
+        .unwrap();
+    let layer = BinaryLayer {
+        rows: o,
+        cols: n,
+        b: BitMatrix::from_signs(o, n, &signs),
+        alpha,
+        mu,
+        col_group: vec![0; n],
+        n_groups: 1,
+    };
+    let rust = BinaryGemmEngine::new(&layer).forward(&x);
+    assert_close(&rust.data, &jax, 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn model_forward_parity() {
+    let Some(mut rt) = runtime() else { return };
+    let dir = btc_llm::artifacts_dir();
+    let seq = 32usize;
+    let tokens: Vec<u16> = (0..seq).map(|i| (35 + (i * 11) % 70) as u16).collect();
+    let raw = load_model(&dir.join("tinylm_s.bin")).unwrap();
+    let mut args =
+        vec![TensorArg::I32(vec![1, seq], tokens.iter().map(|&t| t as i32).collect())];
+    for (_, (dims, data)) in raw.tensors.iter() {
+        args.push(TensorArg::F32(dims.clone(), data.clone()));
+    }
+    let jax = rt.run_f32("tinylm_s_fwd.hlo.txt", &args).unwrap();
+    let model = Transformer::from_raw(&raw).unwrap();
+    let rust = model.forward(&tokens);
+    assert_close(&rust.data, &jax, 5e-2, 5e-3).unwrap();
+}
+
+#[test]
+fn runtime_caches_executables() {
+    let Some(mut rt) = runtime() else { return };
+    rt.load("binary_gemm.hlo.txt").unwrap();
+    rt.load("binary_gemm.hlo.txt").unwrap(); // second load = cache hit
+    assert_eq!(rt.loaded().len(), 1);
+}
+
+#[test]
+fn missing_artifact_is_error() {
+    let Some(mut rt) = runtime() else { return };
+    assert!(rt.load("does_not_exist.hlo.txt").is_err());
+}

@@ -1,0 +1,59 @@
+//! Integration: the coordinator serves a quantized model end-to-end
+//! (quantize real artifacts → prepare engines → batched generation).
+
+use std::time::Duration;
+
+use btc_llm::benchsuite::load_workload;
+use btc_llm::coordinator::Server;
+use btc_llm::data::{corpus, ByteTokenizer};
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
+fn serve_btc_quantized_model() {
+    let Ok(w) = load_workload("tinylm_s") else {
+        eprintln!("SKIP serve_btc_quantized_model: artifacts missing");
+        return;
+    };
+    let mut cfg = QuantConfig::btc(0.8);
+    cfg.transform_outer = 4; // keep the test fast
+    let mut qm = quantize_model(&w.raw, &w.corpus, &cfg).unwrap();
+    qm.model.prepare_engines();
+    let server = Server::start(qm.model, 4, Duration::from_millis(2), 3);
+    let tok = ByteTokenizer::default();
+    let prompts = corpus::prompts(6, 5);
+    let rxs: Vec<_> = prompts.iter().map(|p| server.submit(tok.encode(p), 12, 0.0)).collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("generation finished");
+        assert!(r.tokens.len() > r.prompt_len, "generated at least one token");
+        // Output must decode to ASCII (the model's world).
+        let text = tok.decode(&r.tokens);
+        assert!(text.is_ascii());
+    }
+    assert_eq!(
+        server.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        6
+    );
+    server.shutdown();
+}
+
+#[test]
+fn greedy_generation_continues_grammar() {
+    let Ok(w) = load_workload("tinylm_s") else {
+        eprintln!("SKIP greedy_generation_continues_grammar: artifacts missing");
+        return;
+    };
+    // FP model, greedy: prompts from the training grammar should
+    // complete with in-vocabulary words and end with '.' or newline.
+    let qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::fp16()).unwrap();
+    let server = Server::start(qm.model, 1, Duration::from_millis(1), 1);
+    let tok = ByteTokenizer::default();
+    let rx = server.submit(tok.encode("the cat "), 24, 0.0);
+    let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    let completion = tok.decode(&r.tokens[r.prompt_len..]);
+    assert!(
+        completion.chars().all(|c| c.is_ascii_lowercase() || " .()\n".contains(c)),
+        "unexpected characters in {completion:?}"
+    );
+    server.shutdown();
+}
