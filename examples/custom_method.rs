@@ -1,0 +1,190 @@
+//! A third-party quantization method in ONE file: defines a toy
+//! method ("mean-sign": per-row mean-magnitude scale, sign bits kept
+//! as raw bytes) with its own `Quantizer` strategy and `WeightBackend`
+//! storage format, registers both, and runs it end-to-end:
+//!
+//!   quantize (by registry name) → QLM1 serialize → reload → serve
+//!
+//! Nothing in the pipeline, model, container, or server knows this
+//! method exists — that is the point of the trait/registry redesign.
+//!
+//! ```bash
+//! cargo run --release --example custom_method
+//! ```
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use anyhow::Result;
+use btc_llm::coordinator::Server;
+use btc_llm::data::ByteTokenizer;
+use btc_llm::io::{qweights, wire};
+use btc_llm::model::{register_backend, BackendIoCtx, Transformer, WeightBackend};
+use btc_llm::quant::registry::{self, MethodEntry};
+use btc_llm::quant::{QuantConfig, QuantOutcome, Quantizer, SiteId};
+use btc_llm::tensor::Matrix;
+use btc_llm::util::fixture::tiny_raw_model;
+
+// ---- 1. the storage format ------------------------------------------
+
+/// Per-row scale + one sign byte per weight (deliberately naive; a
+/// real backend would bit-pack).
+#[derive(Debug, Clone)]
+struct MeanSign {
+    rows: usize,
+    cols: usize,
+    alpha: Vec<f32>,
+    signs: Vec<u8>, // 1 = +1, 0 = -1
+}
+
+impl MeanSign {
+    fn quantize(w: &Matrix) -> MeanSign {
+        let mut alpha = vec![0f32; w.rows];
+        let mut signs = vec![0u8; w.rows * w.cols];
+        for r in 0..w.rows {
+            let row = w.row(r);
+            alpha[r] = row.iter().map(|v| v.abs()).sum::<f32>() / row.len() as f32;
+            for (c, &v) in row.iter().enumerate() {
+                signs[r * w.cols + c] = (v >= 0.0) as u8;
+            }
+        }
+        MeanSign { rows: w.rows, cols: w.cols, alpha, signs }
+    }
+}
+
+impl WeightBackend for MeanSign {
+    fn tag(&self) -> &'static str {
+        "mean-sign"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols, |r, c| {
+            let s = if self.signs[r * self.cols + c] == 1 { 1.0 } else { -1.0 };
+            self.alpha[r] * s
+        })
+    }
+
+    fn storage_bits(&self) -> usize {
+        self.rows * self.cols + self.alpha.len() * 16
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        1.0
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        wire::w_u32(w, self.rows as u32)?;
+        wire::w_u32(w, self.cols as u32)?;
+        wire::w_f32s(w, &self.alpha)?;
+        w.write_all(&self.signs)?;
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+fn read_mean_sign(r: &mut dyn Read, _ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    let rows = wire::r_u32(r)? as usize;
+    let cols = wire::r_u32(r)? as usize;
+    wire::check_dims("mean-sign backend", rows, cols)?;
+    let alpha = wire::r_f32s(r, rows)?;
+    let mut signs = vec![0u8; rows * cols];
+    r.read_exact(&mut signs)?;
+    Ok(Box::new(MeanSign { rows, cols, alpha, signs }))
+}
+
+// ---- 2. the method strategy -----------------------------------------
+
+#[derive(Debug, Default)]
+struct MeanSignQuantizer;
+
+impl Quantizer for MeanSignQuantizer {
+    fn name(&self) -> String {
+        "Mean-Sign".to_string()
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        weff: &Matrix,
+        _act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        Ok(QuantOutcome::Ready(Box::new(MeanSign::quantize(weff))))
+    }
+}
+
+fn preset(bits: f64) -> QuantConfig {
+    QuantConfig { method: "mean-sign".into(), target_bits: bits, ..QuantConfig::default() }
+}
+
+fn make(_cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::<MeanSignQuantizer>::default()
+}
+
+fn main() -> Result<()> {
+    // The two registration lines — everything else is method-local code.
+    registry::register(MethodEntry {
+        key: "mean-sign",
+        display: "Mean-Sign",
+        aliases: &[],
+        takes_bits: true,
+        default_bits: 1.0,
+        preset,
+        make,
+    });
+    register_backend("mean-sign", read_mean_sign);
+
+    // A hermetic tiny model (no artifacts needed).
+    let (raw, corpus_bytes) = tiny_raw_model(17);
+
+    // Quantize by registry name — the pipeline has never heard of us.
+    let cfg = registry::get("mean-sign-1.0")?;
+    let qm = btc_llm::quant::quantize_model(&raw, &corpus_bytes, &cfg)?;
+    println!(
+        "quantized with {} @ {:.2} bits: payload {:.2} bits/weight, rel err {:.4}",
+        qm.stats.method, qm.stats.target_bits, qm.stats.payload_bits, qm.stats.mean_rel_error
+    );
+    assert_eq!(qm.model.blocks[0].wq.backend_name(), "mean-sign");
+
+    // Serialize through QLM1 and reload — the container round-trips
+    // the custom tag via the backend registry.
+    let dir = std::env::temp_dir().join("btc_custom_method");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("mean_sign.qlm");
+    qweights::save(&path, &qm.model)?;
+    let mut reloaded = Transformer::from_raw(&raw)?;
+    qweights::load_into(&path, &mut reloaded)?;
+    println!("QLM1 round-trip OK ({} bytes)", std::fs::metadata(&path)?.len());
+
+    let toks: Vec<u16> = corpus_bytes.iter().take(12).map(|&b| b as u16).collect();
+    let a = qm.model.forward(&toks);
+    reloaded.cache_dense_all();
+    let b = reloaded.forward(&toks);
+    assert_eq!(a.data, b.data, "reloaded logits must be bit-identical");
+    println!("reloaded forward logits bit-identical");
+
+    // Serve the reloaded model — the coordinator is method-agnostic.
+    reloaded.prepare_engines();
+    let server = Server::start(reloaded, 2, Duration::from_millis(2), 7);
+    let tok = ByteTokenizer::default();
+    let rx = server.submit(tok.encode("the cat "), 8, 0.0);
+    let resp = rx.recv().expect("response");
+    println!(
+        "served completion: {:?} ({} new tokens)",
+        tok.decode(&resp.tokens[resp.prompt_len..]),
+        resp.tokens.len() - resp.prompt_len
+    );
+    server.shutdown();
+    println!("custom method end-to-end OK");
+    Ok(())
+}

@@ -10,9 +10,11 @@ use crate::util::toml::Doc;
 pub struct ServeConfig {
     /// Model name (artifacts/<name>.bin).
     pub model: String,
-    /// Quantization lane: "fp16" | "binary" | "btc".
+    /// Quantization lane: any method-registry key ("fp16", "btc",
+    /// "arb-llm", "stbllm", …; "binary" is kept as an alias for the
+    /// ARB-LLM binary lane).
     pub backend: String,
-    /// BTC bits target when backend == "btc".
+    /// Bits target passed to the method preset.
     pub bits: f64,
     /// Max requests fused into one decode batch.
     pub max_batch: usize,

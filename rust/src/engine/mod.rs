@@ -7,6 +7,11 @@
 //!   1-bit lane) plus a true XNOR+POPCNT path for binary activations.
 //! - [`lutgemm`]: the two-stage Binary-Codebook LUT-GEMM (paper App. H)
 //!   — the sub-1-bit serving hot path, no dequantization.
+//!
+//! Engines are surfaced through the [`ComputeEngine`] trait so a
+//! [`crate::model::WeightBackend`] can hand its prepared serving path
+//! to [`crate::model::Linear`] without the model layer enumerating
+//! engine types.
 
 pub mod dense;
 pub mod lutgemm;
@@ -14,3 +19,39 @@ pub mod xnor;
 
 pub use lutgemm::LutGemmEngine;
 pub use xnor::BinaryGemmEngine;
+
+use crate::tensor::Matrix;
+
+/// A prepared GEMM engine for one weight backend: `y = x @ Ŵᵀ`.
+pub trait ComputeEngine: std::fmt::Debug + Send + Sync {
+    /// x: (m, in) -> (m, out).
+    fn forward(&self, x: &Matrix) -> Matrix;
+
+    fn clone_box(&self) -> Box<dyn ComputeEngine>;
+}
+
+impl Clone for Box<dyn ComputeEngine> {
+    fn clone(&self) -> Box<dyn ComputeEngine> {
+        self.clone_box()
+    }
+}
+
+impl ComputeEngine for BinaryGemmEngine {
+    fn forward(&self, x: &Matrix) -> Matrix {
+        BinaryGemmEngine::forward(self, x)
+    }
+
+    fn clone_box(&self) -> Box<dyn ComputeEngine> {
+        Box::new(self.clone())
+    }
+}
+
+impl ComputeEngine for LutGemmEngine {
+    fn forward(&self, x: &Matrix) -> Matrix {
+        LutGemmEngine::forward(self, x)
+    }
+
+    fn clone_box(&self) -> Box<dyn ComputeEngine> {
+        Box::new(self.clone())
+    }
+}

@@ -3,7 +3,7 @@
 //! indices, fp16 scales/biases, column-group ids, Kronecker transform
 //! factors, the shared codebook, and the fp16 embedding/norm residue.
 
-use crate::model::{LinearBackend, Transformer};
+use crate::model::Transformer;
 
 /// Full memory report for one model.
 #[derive(Debug, Clone, Default)]
@@ -48,9 +48,9 @@ pub fn report(model: &Transformer) -> MemoryReport {
             if let Some(t) = &lin.transform {
                 transform_bits += (t.p1.data.len() + t.p2.data.len()) * 16 + t.sigma.len();
             }
-            if let LinearBackend::Codebook(cl) = &lin.backend {
+            if let Some(cb) = lin.backend.shared_codebook() {
                 if !seen_codebook {
-                    codebook_bits = cl.codebook.storage_bits();
+                    codebook_bits = cb.storage_bits();
                     seen_codebook = true;
                 }
             }

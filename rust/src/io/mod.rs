@@ -3,5 +3,6 @@
 
 pub mod qweights;
 pub mod weights;
+pub mod wire;
 
 pub use weights::{load_model, ModelConfig, RawModel};

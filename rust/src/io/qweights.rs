@@ -1,277 +1,295 @@
-//! QLM1 quantized-model container: serialize a BTC-quantized model
-//! (binary / codebook backends + transforms + scales) so `btc-llm
-//! quantize` output can be shipped to `btc-llm serve` without
+//! QLM1 quantized-model container: serialize any quantized model so
+//! `btc-llm quantize` output can be shipped to `btc-llm serve` without
 //! re-running the pipeline.
 //!
-//! Layout (little-endian):
+//! v2 layout (little-endian):
 //! ```text
-//! magic b"QLM1", u32 version
+//! magic b"QLM1", u32 version = 2
 //! TLM1-style model config block
 //! u8 has_codebook; codebook: u32 v, u32 c, u64 words[c]
 //! u32 n_linears; per linear:
-//!   u32 layer; u8 slot (0..7); u8 backend_tag (0 dense,1 binary,2 codebook)
+//!   u32 layer; u8 slot (0..7)
+//!   u8 tag_len; tag bytes            (stable WeightBackend::tag)
 //!   u8 has_transform; transform: u32 dim,n1,n2; f32 sigma[dim],p1,p2
-//!   backend payload (see read/write_backend)
+//!   u8 has_act_quant; act-quant: u32 bits, u32 n, f32 scale[n]
+//!   backend payload                  (WeightBackend::write_payload)
 //! ```
-//! Norms/embeddings stay fp32 in the companion TLM1 blob; this file
-//! carries only the quantized linears (the paper's W-bits subject).
+//! v1 (tag = one byte: 0 dense, 1 binary, 2 codebook; no act-quant
+//! block — those models reload without activation quantization) still
+//! loads; v2 is always written. Backend payloads round-trip through
+//! the [`crate::model::register_backend`] registry, so **every**
+//! lane — not just BTC — ships, including custom backends registered
+//! at runtime. Norms/embeddings stay fp32 in the companion TLM1 blob;
+//! this file carries only the quantized linears (the paper's W-bits
+//! subject).
+//!
+//! All reads are bounded (see [`crate::io::wire`]): a corrupt file
+//! fails with the offending value and byte offset, never a huge
+//! allocation.
 
-use std::io::{Read, Write};
+use std::io::{BufReader, Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::bitops::BitMatrix;
-use crate::model::{Linear, LinearBackend, Transformer};
-use crate::quant::binarize::BinaryLayer;
-use crate::quant::codebook::{BinaryCodebook, CodebookLayer};
+use crate::io::wire::{self, CountingReader};
+use crate::model::{backend_reader, backend_tags, BackendIoCtx, Linear, Transformer};
+use crate::quant::actquant::ActQuant;
+use crate::quant::codebook::BinaryCodebook;
 use crate::quant::transform::Transform;
 use crate::tensor::Matrix;
 
 const SLOTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+const VERSION: u32 = 2;
 
-fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes())?;
-    Ok(())
-}
-fn w_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    for x in xs {
-        w.write_all(&x.to_le_bytes())?;
-    }
-    Ok(())
-}
-fn r_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-fn r_u8(r: &mut impl Read) -> Result<u8> {
-    let mut b = [0u8; 1];
-    r.read_exact(&mut b)?;
-    Ok(b[0])
-}
-fn r_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
-}
-
-fn write_binary(w: &mut impl Write, b: &BinaryLayer) -> Result<()> {
-    w_u32(w, b.rows as u32)?;
-    w_u32(w, b.cols as u32)?;
-    w_u32(w, b.n_groups as u32)?;
-    for word in &b.b.data {
-        w.write_all(&word.to_le_bytes())?;
-    }
-    w_f32s(w, &b.alpha)?;
-    w_f32s(w, &b.mu)?;
-    for g in &b.col_group {
-        w.write_all(&g.to_le_bytes())?;
-    }
-    Ok(())
-}
-
-fn read_binary(r: &mut impl Read) -> Result<BinaryLayer> {
-    let rows = r_u32(r)? as usize;
-    let cols = r_u32(r)? as usize;
-    let n_groups = r_u32(r)? as usize;
-    let mut b = BitMatrix::zeros(rows, cols);
-    let mut bytes = vec![0u8; b.data.len() * 8];
-    r.read_exact(&mut bytes)?;
-    for (i, c) in bytes.chunks_exact(8).enumerate() {
-        b.data[i] = u64::from_le_bytes(c.try_into().unwrap());
-    }
-    let alpha = r_f32s(r, rows * n_groups)?;
-    let mu = r_f32s(r, rows)?;
-    let mut gb = vec![0u8; cols * 2];
-    r.read_exact(&mut gb)?;
-    let col_group = gb.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
-    Ok(BinaryLayer { rows, cols, b, alpha, mu, col_group, n_groups })
-}
-
-/// Save a quantized model. Backends other than Dense/Binary/Codebook
-/// (baseline-only lanes) are rejected — they are not deployment formats.
+/// Save a quantized model. Works for every backend whose tag has a
+/// registered deserializer — i.e. all built-in lanes and any custom
+/// backend registered via [`crate::model::register_backend`].
 pub fn save(path: &Path, model: &Transformer) -> Result<()> {
     let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
     w.write_all(b"QLM1")?;
-    w_u32(&mut w, 1)?;
+    wire::w_u32(&mut w, VERSION)?;
     let c = &model.cfg;
     for v in [c.vocab, c.d_model, c.n_layer, c.n_head, c.n_kv_head, c.d_ff, c.max_seq] {
-        w_u32(&mut w, v as u32)?;
+        wire::w_u32(&mut w, v as u32)?;
     }
     w.write_all(&c.rope_theta.to_le_bytes())?;
 
-    // Shared codebook (first one found).
+    // Shared codebook (first one found; the build produces exactly one).
     let mut shared: Option<Arc<BinaryCodebook>> = None;
-    for b in &model.blocks {
+    'outer: for b in &model.blocks {
         for (_, lin) in b.linears() {
-            if let LinearBackend::Codebook(cl) = &lin.backend {
-                shared = Some(cl.codebook.clone());
-                break;
+            if let Some(cb) = lin.backend.shared_codebook() {
+                shared = Some(cb);
+                break 'outer;
             }
         }
     }
     match &shared {
         Some(cb) => {
-            w.write_all(&[1u8])?;
-            w_u32(&mut w, cb.v as u32)?;
-            w_u32(&mut w, cb.c() as u32)?;
-            for word in &cb.words {
-                w.write_all(&word.to_le_bytes())?;
-            }
+            wire::w_u8(&mut w, 1)?;
+            wire::w_u32(&mut w, cb.v as u32)?;
+            wire::w_u32(&mut w, cb.c() as u32)?;
+            wire::w_u64s(&mut w, &cb.words)?;
         }
-        None => w.write_all(&[0u8])?,
+        None => wire::w_u8(&mut w, 0)?,
     }
 
-    let n_linears = model.blocks.len() * 7;
-    w_u32(&mut w, n_linears as u32)?;
+    let n_linears = model.blocks.len() * SLOTS.len();
+    wire::w_u32(&mut w, n_linears as u32)?;
     for (li, block) in model.blocks.iter().enumerate() {
-        for (slot, (name, lin)) in block.linears().iter().enumerate() {
-            let _ = name;
-            w_u32(&mut w, li as u32)?;
-            w.write_all(&[slot as u8])?;
-            let tag: u8 = match &lin.backend {
-                LinearBackend::Dense(_) => 0,
-                LinearBackend::Binary(_) => 1,
-                LinearBackend::Codebook(_) => 2,
-                other => bail!("backend {:?} is not a deployment format", std::mem::discriminant(other)),
-            };
-            w.write_all(&[tag])?;
+        for (slot, (_, lin)) in block.linears().iter().enumerate() {
+            wire::w_u32(&mut w, li as u32)?;
+            wire::w_u8(&mut w, slot as u8)?;
+            let tag = lin.backend.tag();
+            if backend_reader(tag).is_none() {
+                bail!(
+                    "backend {tag:?} has no registered deserializer; \
+                     register_backend({tag:?}, ..) before saving"
+                );
+            }
+            // The container carries ONE shared codebook: a model whose
+            // layers reference different codebooks would reload
+            // silently corrupted, so refuse loudly.
+            if let Some(cb) = lin.backend.shared_codebook() {
+                let header_cb = shared.as_ref().expect("codebook scan covered all linears");
+                if !Arc::ptr_eq(&cb, header_cb) {
+                    bail!(
+                        "linear (layer {li}, slot {slot}) references a different shared \
+                         codebook than the container header; QLM1 carries exactly one"
+                    );
+                }
+            }
+            wire::w_tag(&mut w, tag)?;
             match &lin.transform {
                 Some(t) => {
-                    w.write_all(&[1u8])?;
-                    w_u32(&mut w, t.dim() as u32)?;
-                    w_u32(&mut w, t.p1.rows as u32)?;
-                    w_u32(&mut w, t.p2.rows as u32)?;
-                    w_f32s(&mut w, &t.sigma)?;
-                    w_f32s(&mut w, &t.p1.data)?;
-                    w_f32s(&mut w, &t.p2.data)?;
+                    wire::w_u8(&mut w, 1)?;
+                    wire::w_u32(&mut w, t.dim() as u32)?;
+                    wire::w_u32(&mut w, t.p1.rows as u32)?;
+                    wire::w_u32(&mut w, t.p2.rows as u32)?;
+                    wire::w_f32s(&mut w, &t.sigma)?;
+                    wire::w_f32s(&mut w, &t.p1.data)?;
+                    wire::w_f32s(&mut w, &t.p2.data)?;
                 }
-                None => w.write_all(&[0u8])?,
+                None => wire::w_u8(&mut w, 0)?,
             }
-            match &lin.backend {
-                LinearBackend::Dense(m) => {
-                    w_u32(&mut w, m.rows as u32)?;
-                    w_u32(&mut w, m.cols as u32)?;
-                    w_f32s(&mut w, &m.data)?;
+            match &lin.act_quant {
+                Some(aq) => {
+                    wire::w_u8(&mut w, 1)?;
+                    wire::w_u32(&mut w, aq.bits)?;
+                    wire::w_u32(&mut w, aq.scale.len() as u32)?;
+                    wire::w_f32s(&mut w, &aq.scale)?;
                 }
-                LinearBackend::Binary(b) => write_binary(&mut w, b)?,
-                LinearBackend::Codebook(cl) => {
-                    w_u32(&mut w, cl.rows as u32)?;
-                    w_u32(&mut w, cl.cols as u32)?;
-                    w_u32(&mut w, cl.n_groups as u32)?;
-                    for &i in &cl.idx {
-                        w_u32(&mut w, i)?;
-                    }
-                    w_f32s(&mut w, &cl.alpha)?;
-                    w_f32s(&mut w, &cl.mu)?;
-                    for g in &cl.col_group {
-                        w.write_all(&g.to_le_bytes())?;
-                    }
-                }
-                _ => unreachable!(),
+                None => wire::w_u8(&mut w, 0)?,
             }
+            lin.backend.write_payload(&mut w)?;
         }
     }
+    // BufWriter drop swallows flush errors — surface them here so a
+    // full disk can't yield a truncated container reported as success.
+    w.flush()?;
     Ok(())
+}
+
+fn read_transform(r: &mut dyn Read) -> Result<Option<Transform>> {
+    if wire::r_u8(r)? != 1 {
+        return Ok(None);
+    }
+    let dim = wire::r_u32(r)? as usize;
+    let n1 = wire::r_u32(r)? as usize;
+    let n2 = wire::r_u32(r)? as usize;
+    if dim == 0 || dim > wire::MAX_DIM {
+        bail!("transform: implausible dim {dim}");
+    }
+    if n1 == 0 || n2 == 0 || n1.saturating_mul(n2) != dim {
+        bail!("transform: Kronecker factors {n1}x{n2} do not cover dim {dim}");
+    }
+    let sigma = wire::r_f32s(r, dim)?;
+    let p1 = Matrix::from_vec(n1, n1, wire::r_f32s(r, n1 * n1)?);
+    let p2 = Matrix::from_vec(n2, n2, wire::r_f32s(r, n2 * n2)?);
+    Ok(Some(Transform { sigma, p1, p2 }))
+}
+
+fn read_act_quant(r: &mut dyn Read) -> Result<Option<ActQuant>> {
+    if wire::r_u8(r)? != 1 {
+        return Ok(None);
+    }
+    let bits = wire::r_u32(r)?;
+    if !(2..=16).contains(&bits) {
+        bail!("act-quant: implausible bits {bits}");
+    }
+    let n = wire::r_u32(r)? as usize;
+    if n > wire::MAX_DIM {
+        bail!("act-quant: implausible channel count {n}");
+    }
+    let scale = wire::r_f32s(r, n)?;
+    Ok(Some(ActQuant { bits, scale }))
 }
 
 /// Load quantized linears into a model previously built from the
 /// companion TLM1 blob (embeddings/norms come from there).
 pub fn load_into(path: &Path, model: &mut Transformer) -> Result<()> {
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut r = std::io::BufReader::new(file);
+    let mut r = CountingReader::new(BufReader::new(file));
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != b"QLM1" {
-        bail!("bad QLM1 magic");
+        bail!("bad QLM1 magic {magic:?}");
     }
-    if r_u32(&mut r)? != 1 {
-        bail!("unsupported QLM1 version");
+    let version = wire::r_u32(&mut r)?;
+    if !(1..=VERSION).contains(&version) {
+        bail!("unsupported QLM1 version {version} (this build reads 1..={VERSION})");
     }
     let mut hdr = [0usize; 7];
     for h in hdr.iter_mut() {
-        *h = r_u32(&mut r)? as usize;
+        *h = wire::r_u32(&mut r)? as usize;
     }
     let mut theta = [0u8; 4];
     r.read_exact(&mut theta)?;
-    if hdr[0] != model.cfg.vocab || hdr[1] != model.cfg.d_model || hdr[2] != model.cfg.n_layer {
-        bail!("QLM1 config mismatch with loaded model");
+    let expect = [
+        ("vocab", model.cfg.vocab),
+        ("d_model", model.cfg.d_model),
+        ("n_layer", model.cfg.n_layer),
+        ("n_head", model.cfg.n_head),
+        ("n_kv_head", model.cfg.n_kv_head),
+        ("d_ff", model.cfg.d_ff),
+        ("max_seq", model.cfg.max_seq),
+    ];
+    for (got, (field, want)) in hdr.iter().zip(expect.iter()) {
+        if got != want {
+            bail!("QLM1 config mismatch with loaded model: {field} is {got} in file, {want} in model");
+        }
     }
 
-    let shared: Option<Arc<BinaryCodebook>> = if r_u8(&mut r)? == 1 {
-        let v = r_u32(&mut r)? as usize;
-        let c = r_u32(&mut r)? as usize;
-        let mut bytes = vec![0u8; c * 8];
-        r.read_exact(&mut bytes)?;
-        let words = bytes.chunks_exact(8).map(|b| u64::from_le_bytes(b.try_into().unwrap())).collect();
-        Some(Arc::new(BinaryCodebook { v, words }))
+    let ctx = if wire::r_u8(&mut r)? == 1 {
+        let v = wire::r_u32(&mut r)? as usize;
+        let c = wire::r_u32(&mut r)? as usize;
+        if !(1..=64).contains(&v) {
+            bail!("shared codebook: sub-vector length v={v} out of 1..=64 (offset {})", r.offset());
+        }
+        if c == 0 || c > 1 << 22 {
+            bail!("shared codebook: implausible size c={c} (offset {})", r.offset());
+        }
+        let words = wire::r_u64s(&mut r, c)?;
+        BackendIoCtx { codebook: Some(Arc::new(BinaryCodebook { v, words })) }
     } else {
-        None
+        BackendIoCtx::default()
     };
 
-    let n = r_u32(&mut r)? as usize;
+    let n = wire::r_u32(&mut r)? as usize;
+    let max_linears = model.blocks.len() * SLOTS.len();
+    if n > max_linears {
+        bail!("QLM1 claims {n} linears but the model has only {max_linears}");
+    }
     for _ in 0..n {
-        let li = r_u32(&mut r)? as usize;
-        let slot = r_u8(&mut r)? as usize;
-        let tag = r_u8(&mut r)?;
-        let transform = if r_u8(&mut r)? == 1 {
-            let dim = r_u32(&mut r)? as usize;
-            let n1 = r_u32(&mut r)? as usize;
-            let n2 = r_u32(&mut r)? as usize;
-            let sigma = r_f32s(&mut r, dim)?;
-            let p1 = Matrix::from_vec(n1, n1, r_f32s(&mut r, n1 * n1)?);
-            let p2 = Matrix::from_vec(n2, n2, r_f32s(&mut r, n2 * n2)?);
-            Some(Transform { sigma, p1, p2 })
-        } else {
-            None
-        };
-        let backend = match tag {
-            0 => {
-                let rows = r_u32(&mut r)? as usize;
-                let cols = r_u32(&mut r)? as usize;
-                LinearBackend::Dense(Matrix::from_vec(rows, cols, r_f32s(&mut r, rows * cols)?))
-            }
-            1 => LinearBackend::Binary(read_binary(&mut r)?),
-            2 => {
-                let cb = shared.clone().context("codebook layer without shared codebook")?;
-                let rows = r_u32(&mut r)? as usize;
-                let cols = r_u32(&mut r)? as usize;
-                let n_groups = r_u32(&mut r)? as usize;
-                let n_idx = rows * cols.div_ceil(cb.v);
-                let mut idx = Vec::with_capacity(n_idx);
-                for _ in 0..n_idx {
-                    idx.push(r_u32(&mut r)?);
-                }
-                let alpha = r_f32s(&mut r, rows * n_groups)?;
-                let mu = r_f32s(&mut r, rows)?;
-                let mut gb = vec![0u8; cols * 2];
-                r.read_exact(&mut gb)?;
-                let col_group =
-                    gb.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect();
-                LinearBackend::Codebook(CodebookLayer {
-                    rows,
-                    cols,
-                    v: cb.v,
-                    idx,
-                    codebook: cb,
-                    alpha,
-                    mu,
-                    col_group,
-                    n_groups,
-                })
-            }
-            t => bail!("unknown backend tag {t}"),
-        };
-        if li >= model.blocks.len() || slot >= 7 {
-            bail!("linear ({li}, {slot}) out of range");
+        let li = wire::r_u32(&mut r)? as usize;
+        let slot = wire::r_u8(&mut r)? as usize;
+        if li >= model.blocks.len() || slot >= SLOTS.len() {
+            bail!("linear ({li}, {slot}) out of range (offset {})", r.offset());
         }
+        let tag: String = if version == 1 {
+            // v1 wrote a one-byte numeric tag.
+            match wire::r_u8(&mut r)? {
+                0 => "dense".to_string(),
+                1 => "binary".to_string(),
+                2 => "codebook".to_string(),
+                t => bail!("unknown v1 backend tag {t} at byte offset {}", r.offset()),
+            }
+        } else {
+            wire::r_tag(&mut r)?
+        };
+        let tag_offset = r.offset();
+        let transform = read_transform(&mut r)?;
+        let act_quant = if version >= 2 { read_act_quant(&mut r)? } else { None };
+        let reader = backend_reader(&tag).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown backend tag {tag:?} at byte offset {tag_offset} \
+                 (registered: {:?}); custom backends must call \
+                 register_backend before loading",
+                backend_tags()
+            )
+        })?;
+        let payload_offset = r.offset();
+        let backend = reader(&mut r, &ctx)
+            .with_context(|| format!("backend {tag:?} payload at offset {payload_offset}"))?;
         let block = &mut model.blocks[li];
         for (nm, lin) in block.linears_mut() {
             if nm == SLOTS[slot] {
+                // Fail at load, not at first forward: the record must
+                // match the linear it replaces.
+                let want = lin.backend.shape();
+                let got = backend.shape();
+                if got != want {
+                    bail!(
+                        "linear ({li}, {}): backend shape {got:?} does not match model \
+                         shape {want:?}",
+                        SLOTS[slot]
+                    );
+                }
+                if let Some(t) = &transform {
+                    if t.dim() != want.1 {
+                        bail!(
+                            "linear ({li}, {}): transform dim {} does not match in_features {}",
+                            SLOTS[slot],
+                            t.dim(),
+                            want.1
+                        );
+                    }
+                }
+                if let Some(aq) = &act_quant {
+                    if !aq.scale.is_empty() && aq.scale.len() != want.1 {
+                        bail!(
+                            "linear ({li}, {}): act-quant has {} channels, expected {}",
+                            SLOTS[slot],
+                            aq.scale.len(),
+                            want.1
+                        );
+                    }
+                }
                 let mut new_lin = Linear::new(backend);
                 new_lin.transform = transform;
+                new_lin.act_quant = act_quant;
                 *lin = new_lin;
                 break;
             }
@@ -287,6 +305,12 @@ mod tests {
     use crate::quant::pipeline::{quantize_model, QuantConfig};
     use crate::util::proptest::assert_close;
 
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("btc_qlm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
     #[test]
     fn roundtrip_btc_model() {
         // Quantize the pipeline fixture, save, reload, compare logits.
@@ -301,9 +325,7 @@ mod tests {
             ..QuantConfig::btc(0.8)
         };
         let qm = quantize_model(&raw, &text, &cfg).unwrap();
-        let dir = std::env::temp_dir().join("btc_qlm_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("m.qlm");
+        let path = tmp("m.qlm");
         save(&path, &qm.model).unwrap();
 
         let mut reloaded = Transformer::from_raw(&raw).unwrap();
@@ -320,13 +342,139 @@ mod tests {
     }
 
     #[test]
+    fn act_quant_roundtrips_in_v2() {
+        let (raw, text) = crate::quant::pipeline::tests::fixture_public();
+        let cfg = QuantConfig {
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            calib_rows: 48,
+            transform_outer: 1,
+            arb_iters: 2,
+            v: 8,
+            act_bits: 8,
+            ..QuantConfig::btc(0.8)
+        };
+        let qm = quantize_model(&raw, &text, &cfg).unwrap();
+        assert!(qm.model.blocks[0].wq.act_quant.is_some());
+        let path = tmp("actquant.qlm");
+        save(&path, &qm.model).unwrap();
+        let mut reloaded = Transformer::from_raw(&raw).unwrap();
+        load_into(&path, &mut reloaded).unwrap();
+        let aq = reloaded.blocks[0].wq.act_quant.as_ref().expect("act_quant restored");
+        let orig = qm.model.blocks[0].wq.act_quant.as_ref().unwrap();
+        assert_eq!(aq.bits, orig.bits);
+        assert_eq!(aq.scale, orig.scale);
+        reloaded.cache_dense_all();
+        let toks = [3u16, 1, 4, 1, 5];
+        assert_eq!(
+            qm.model.forward(&toks).data,
+            reloaded.forward(&toks).data,
+            "A8 logits must be bit-identical after reload"
+        );
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let dir = std::env::temp_dir().join("btc_qlm_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("bad.qlm");
+        let path = tmp("bad.qlm");
         std::fs::write(&path, b"NOPE....").unwrap();
         let (raw, _) = crate::quant::pipeline::tests::fixture_public();
         let mut m = Transformer::from_raw(&raw).unwrap();
         assert!(load_into(&path, &mut m).is_err());
+    }
+
+    #[test]
+    fn unknown_tag_error_names_tag_and_offset() {
+        // Write a valid container, then corrupt the first tag string.
+        let (raw, text) = crate::quant::pipeline::tests::fixture_public();
+        let cfg = QuantConfig {
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            calib_rows: 48,
+            arb_iters: 2,
+            ..QuantConfig::naive()
+        };
+        let qm = quantize_model(&raw, &text, &cfg).unwrap();
+        let path = tmp("tagged.qlm");
+        save(&path, &qm.model).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // First per-linear record starts after magic(4)+ver(4)+cfg(7*4)+
+        // theta(4)+has_cb(1)+n(4) = 45; tag begins at 45+4+1 = 50.
+        assert_eq!(bytes[50], b"binary".len() as u8);
+        assert_eq!(&bytes[51..57], b"binary");
+        bytes[51..57].copy_from_slice(b"bogus!");
+        let bad = tmp("bogus_tag.qlm");
+        std::fs::write(&bad, &bytes).unwrap();
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        let err = load_into(&bad, &mut m).unwrap_err().to_string();
+        assert!(err.contains("bogus!"), "{err}");
+        assert!(err.contains("offset"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_codebook_header_fails_loudly_without_huge_alloc() {
+        let (raw, text) = crate::quant::pipeline::tests::fixture_public();
+        let cfg = QuantConfig {
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            calib_rows: 48,
+            transform_outer: 1,
+            arb_iters: 2,
+            v: 8,
+            ..QuantConfig::btc(0.8)
+        };
+        let qm = quantize_model(&raw, &text, &cfg).unwrap();
+        let path = tmp("cb.qlm");
+        save(&path, &qm.model).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Codebook block: has_cb at 40, v at 41..45, c at 45..49.
+        assert_eq!(bytes[40], 1);
+        bytes[45..49].copy_from_slice(&u32::MAX.to_le_bytes()); // c = 4B
+        let bad = tmp("huge_cb.qlm");
+        std::fs::write(&bad, &bytes).unwrap();
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        let err = load_into(&bad, &mut m).unwrap_err().to_string();
+        assert!(err.contains("implausible size"), "{err}");
+
+        // Also: implausible v.
+        let mut bytes2 = std::fs::read(&path).unwrap();
+        bytes2[41..45].copy_from_slice(&100u32.to_le_bytes()); // v = 100 > 64
+        let bad2 = tmp("huge_v.qlm");
+        std::fs::write(&bad2, &bytes2).unwrap();
+        let err2 = load_into(&bad2, &mut m).unwrap_err().to_string();
+        assert!(err2.contains("v=100"), "{err2}");
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        // Hand-write a v1 container (numeric tags) with one binary
+        // linear and check it loads into slot wq of layer 0.
+        use crate::quant::binarize::{write_binary_payload, BinaryLayer};
+        let (raw, _) = crate::quant::pipeline::tests::fixture_public();
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        let w0 = m.blocks[0].wq.backend.reconstruct();
+        let bl = BinaryLayer::quantize(&w0);
+
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(b"QLM1");
+        wire::w_u32(&mut buf, 1).unwrap(); // version 1
+        let c = &m.cfg;
+        for v in [c.vocab, c.d_model, c.n_layer, c.n_head, c.n_kv_head, c.d_ff, c.max_seq] {
+            wire::w_u32(&mut buf, v as u32).unwrap();
+        }
+        buf.extend_from_slice(&c.rope_theta.to_le_bytes());
+        wire::w_u8(&mut buf, 0).unwrap(); // no shared codebook
+        wire::w_u32(&mut buf, 1).unwrap(); // one linear
+        wire::w_u32(&mut buf, 0).unwrap(); // layer 0
+        wire::w_u8(&mut buf, 0).unwrap(); // slot wq
+        wire::w_u8(&mut buf, 1).unwrap(); // v1 numeric tag: binary
+        wire::w_u8(&mut buf, 0).unwrap(); // no transform
+        write_binary_payload(&mut buf, &bl).unwrap();
+
+        let path = tmp("v1.qlm");
+        std::fs::write(&path, &buf).unwrap();
+        load_into(&path, &mut m).unwrap();
+        assert_eq!(m.blocks[0].wq.backend_name(), "binary");
+        let rec = m.blocks[0].wq.backend.reconstruct();
+        assert_close(&rec.data, &bl.reconstruct().data, 1e-6, 1e-6).unwrap();
     }
 }

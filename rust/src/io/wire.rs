@@ -1,0 +1,192 @@
+//! Little-endian wire helpers shared by the weight containers (TLM1 /
+//! QLM1) and by every [`crate::model::WeightBackend`] serializer.
+//!
+//! All readers are *bounded*: length fields pulled from a file are
+//! validated against generous plausibility caps before any allocation,
+//! so a corrupt or adversarial container fails with a loud error
+//! instead of a multi-gigabyte `Vec` reservation. [`CountingReader`]
+//! tracks the byte offset so those errors can say *where* the file went
+//! bad.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Largest plausible single matrix dimension in a weight container.
+pub const MAX_DIM: usize = 1 << 20;
+/// Largest plausible element count for one tensor payload.
+pub const MAX_ELEMS: usize = 1 << 28;
+
+/// A `Read` adapter that tracks the absolute byte offset, so parse
+/// errors can report where in the file they happened.
+pub struct CountingReader<R> {
+    inner: R,
+    pos: u64,
+}
+
+impl<R: Read> CountingReader<R> {
+    pub fn new(inner: R) -> CountingReader<R> {
+        CountingReader { inner, pos: 0 }
+    }
+
+    /// Bytes consumed so far.
+    pub fn offset(&self) -> u64 {
+        self.pos
+    }
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+/// Reject implausible (rows, cols) pulled from a file before allocating.
+pub fn check_dims(what: &str, rows: usize, cols: usize) -> Result<()> {
+    if rows == 0 || cols == 0 || rows > MAX_DIM || cols > MAX_DIM {
+        bail!("{what}: implausible shape {rows}x{cols}");
+    }
+    if rows.saturating_mul(cols) > MAX_ELEMS {
+        bail!("{what}: implausible element count {rows}x{cols}");
+    }
+    Ok(())
+}
+
+/// Reject an implausible element count pulled from a file.
+pub fn check_len(what: &str, n: usize, max: usize) -> Result<()> {
+    if n > max {
+        bail!("{what}: implausible length {n} (cap {max})");
+    }
+    Ok(())
+}
+
+pub fn w_u8(w: &mut dyn Write, v: u8) -> Result<()> {
+    w.write_all(&[v])?;
+    Ok(())
+}
+
+pub fn w_u32(w: &mut dyn Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn w_f32s(w: &mut dyn Write, xs: &[f32]) -> Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn w_u16s(w: &mut dyn Write, xs: &[u16]) -> Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn w_u32s(w: &mut dyn Write, xs: &[u32]) -> Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn w_u64s(w: &mut dyn Write, xs: &[u64]) -> Result<()> {
+    for x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Length-prefixed (u8) ASCII tag string.
+pub fn w_tag(w: &mut dyn Write, tag: &str) -> Result<()> {
+    let bytes = tag.as_bytes();
+    if bytes.len() > u8::MAX as usize {
+        bail!("backend tag {tag:?} too long to serialize");
+    }
+    w_u8(w, bytes.len() as u8)?;
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+pub fn r_u8(r: &mut dyn Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn r_u32(r: &mut dyn Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn r_f32s(r: &mut dyn Read, n: usize) -> Result<Vec<f32>> {
+    check_len("f32 payload", n, MAX_ELEMS)?;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+pub fn r_u16s(r: &mut dyn Read, n: usize) -> Result<Vec<u16>> {
+    check_len("u16 payload", n, MAX_ELEMS)?;
+    let mut bytes = vec![0u8; n * 2];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+}
+
+pub fn r_u32s(r: &mut dyn Read, n: usize) -> Result<Vec<u32>> {
+    check_len("u32 payload", n, MAX_ELEMS)?;
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+pub fn r_u64s(r: &mut dyn Read, n: usize) -> Result<Vec<u64>> {
+    check_len("u64 payload", n, MAX_ELEMS)?;
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+/// Length-prefixed (u8) ASCII tag string.
+pub fn r_tag(r: &mut dyn Read) -> Result<String> {
+    let n = r_u8(r)? as usize;
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    String::from_utf8(bytes).map_err(|e| anyhow::anyhow!("backend tag is not utf8: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_slices() {
+        let mut buf = Vec::new();
+        w_u32(&mut buf, 7).unwrap();
+        w_f32s(&mut buf, &[1.5, -2.0]).unwrap();
+        w_u16s(&mut buf, &[3, 9]).unwrap();
+        w_tag(&mut buf, "binary").unwrap();
+        let mut r = CountingReader::new(&buf[..]);
+        assert_eq!(r_u32(&mut r).unwrap(), 7);
+        assert_eq!(r_f32s(&mut r, 2).unwrap(), vec![1.5, -2.0]);
+        assert_eq!(r_u16s(&mut r, 2).unwrap(), vec![3, 9]);
+        assert_eq!(r_tag(&mut r).unwrap(), "binary");
+        assert_eq!(r.offset(), buf.len() as u64);
+    }
+
+    #[test]
+    fn bounded_reads_reject_huge_lengths() {
+        assert!(check_dims("w", usize::MAX, 2).is_err());
+        assert!(check_dims("w", 0, 2).is_err());
+        assert!(check_dims("w", 64, 64).is_ok());
+        let empty: &[u8] = &[];
+        assert!(r_f32s(&mut CountingReader::new(empty), MAX_ELEMS + 1).is_err());
+    }
+}

@@ -14,9 +14,17 @@
 //!   LUT-GEMM), evaluation harness, serving coordinator, and the PJRT
 //!   runtime that loads the AOT artifacts.
 //!
-//! The build image is offline with only the `xla` crate vendored, so all
-//! infrastructure (PRNG, CLI, TOML config, bench harness, property
-//! testing, threaded serving) lives in-repo under [`util`].
+//! The build image is offline, so all infrastructure (PRNG, CLI, TOML
+//! config, bench harness, property testing, threaded serving) lives
+//! in-repo under [`util`]; the only dependency is the vendored mini
+//! `anyhow` (rust/vendor/anyhow), and the PJRT/XLA client is gated
+//! behind the `pjrt` feature (see [`runtime`]).
+//!
+//! The quantization surface is **open** (DESIGN.md §3): methods
+//! implement [`quant::Quantizer`] and register by name in
+//! [`quant::registry`]; weight formats implement
+//! [`model::WeightBackend`] and register a deserializer by tag — see
+//! `examples/custom_method.rs` for a third-party lane in one file.
 
 pub mod benchsuite;
 pub mod bitops;

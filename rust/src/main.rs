@@ -10,29 +10,23 @@
 
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use btc_llm::coordinator::{Server, ServeConfig};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::eval::{memory, perplexity, zeroshot};
 use btc_llm::io::{load_model, qweights};
 use btc_llm::model::Transformer;
-use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::quant::pipeline::{quantize_model, registry, QuantConfig};
 use btc_llm::runtime::{PjrtRuntime, TensorArg};
 use btc_llm::util::argparse::Args;
 use btc_llm::{artifacts_dir, info};
 
+/// Resolve `--method NAME [--bits B]` through the method registry.
+/// NAME may itself carry a bits suffix (`--method btc-0.8`).
 fn method_config(args: &Args) -> Result<QuantConfig> {
-    let bits = args.get_f64("bits", 0.8);
-    let mut cfg = match args.get_or("method", "btc") {
-        "fp16" => QuantConfig::fp16(),
-        "naive" => QuantConfig::naive(),
-        "billm" => QuantConfig::billm(),
-        "arb" | "arb-llm" => QuantConfig::arb_llm(),
-        "stbllm" => QuantConfig::stbllm(bits),
-        "fpvq" => QuantConfig::fpvq(bits),
-        "btc" => QuantConfig::btc(bits),
-        other => bail!("unknown method {other}"),
-    };
+    let spec = args.get_or("method", "btc");
+    let bits = args.get("bits").map(|b| b.parse::<f64>()).transpose().context("--bits")?;
+    let mut cfg = registry::get_with_bits(spec, bits)?;
     if let Some(v) = args.get("v") {
         cfg.v = v.parse().context("--v")?;
     }
@@ -69,7 +63,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_quantize(args: &Args) -> Result<()> {
     let (name, raw, corpus_bytes) = load_raw(args)?;
     let cfg = method_config(args)?;
-    info!("quantizing {name} with {} @ {} bits", cfg.method.name(), cfg.target_bits);
+    let display: &str = registry::display_name(&cfg.method).unwrap_or(cfg.method.as_str());
+    info!("quantizing {name} with {display} @ {} bits", cfg.target_bits);
     let qm = quantize_model(&raw, &corpus_bytes, &cfg)?;
     let r = memory::report(&qm.model);
     println!(
@@ -118,11 +113,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir();
     let raw = load_model(&dir.join(format!("{}.bin", cfg.model)))?;
     let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt"))?;
-    let mut qcfg = match cfg.backend.as_str() {
-        "fp16" => QuantConfig::fp16(),
-        "binary" => QuantConfig::arb_llm(),
-        _ => QuantConfig::btc(cfg.bits),
+    // The serve config names a method by registry key ("binary" is the
+    // historical alias for the ARB-LLM binary lane). A bits suffix in
+    // the spec itself (backend = "btc-0.5") wins over the separate
+    // `bits` key, which otherwise applies.
+    let spec = match cfg.backend.as_str() {
+        "binary" => "arb-llm",
+        other => other,
     };
+    let mut qcfg = registry::get_with_fallback_bits(spec, Some(cfg.bits))?;
     qcfg.act_bits = 16;
     info!("quantizing {} for serving ({})", cfg.model, cfg.backend);
     let mut qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
@@ -184,7 +183,9 @@ fn main() -> Result<()> {
             println!(
                 "btc-llm — sub-1-bit LLM quantization (BTC-LLM reproduction)\n\
                  usage: btc-llm <info|quantize|eval|serve|parity> [--model NAME] \
-                 [--method fp16|naive|billm|arb|stbllm|fpvq|btc] [--bits B] ..."
+                 [--method SPEC] [--bits B] ...\n\
+                 methods: {} (SPEC may carry a bits suffix, e.g. btc-0.8)",
+                registry::names().join("|")
             );
             Ok(())
         }

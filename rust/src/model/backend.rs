@@ -1,0 +1,214 @@
+//! **`WeightBackend`** — the open weight-storage/compute trait that
+//! every quantized-weight format implements, replacing the old closed
+//! `LinearBackend` enum.
+//!
+//! A backend owns one weight matrix in some compressed representation
+//! and answers for it end to end: reconstruction, the GEMM
+//! (`matvec`, optionally via a prepared [`ComputeEngine`]), storage
+//! accounting, and QLM1 serialization. Deserializers are looked up in a
+//! process-wide registry keyed by the backend's stable [`tag`]
+//! (`WeightBackend::tag`), so a new format added in one file — plus one
+//! [`register_backend`] call — ships through `btc-llm quantize` →
+//! `.qlm` → `btc-llm serve` without touching the container code.
+//!
+//! Built-in tags: `dense`, `binary`, `residual`, `nm-sparse`, `fp-vq`,
+//! `codebook`. Tags are part of the QLM1 v2 on-disk format — never
+//! reuse or rename a shipped tag.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::Result;
+
+use crate::engine::ComputeEngine;
+use crate::io::wire;
+use crate::quant::codebook::BinaryCodebook;
+use crate::tensor::Matrix;
+
+/// A pluggable weight storage/compute backend (one linear layer's
+/// weight matrix in some — possibly compressed — representation).
+pub trait WeightBackend: std::fmt::Debug + Send + Sync {
+    /// Stable serialization tag, also the human-readable backend name.
+    /// Part of the QLM1 on-disk format: never reuse or rename.
+    fn tag(&self) -> &'static str;
+
+    /// (out_features, in_features).
+    fn shape(&self) -> (usize, usize);
+
+    /// Dequantize to a dense matrix.
+    fn reconstruct(&self) -> Matrix;
+
+    /// y = x @ Ŵᵀ. The default dequantizes; backends with a native
+    /// no-dequantization path override via [`make_engine`]
+    /// (`WeightBackend::make_engine`) instead, which the [`super::Linear`]
+    /// wrapper prepares once and reuses.
+    fn matvec(&self, x: &Matrix) -> Matrix {
+        x.matmul_bt(&self.reconstruct())
+    }
+
+    /// Weight storage bits (per-layer share; a shared codebook is
+    /// counted separately by the memory accounting).
+    fn storage_bits(&self) -> usize;
+
+    /// Payload bits per weight: signs/indices/masks ONLY — the number
+    /// the paper's tables report. Per-row fp16 scales are excluded
+    /// because they amortize at real LLM widths (4096+ columns) but
+    /// dominate at TinyLM widths; the full measured figure including
+    /// scales is [`storage_bits`] (`WeightBackend::storage_bits`).
+    fn payload_bits_per_weight(&self) -> f64;
+
+    /// Build the backend's prepared serving engine, if it has one
+    /// (sign-GEMM for binary, LUT-GEMM for codebook). `None` = the
+    /// caller falls back to a cached dense reconstruction.
+    fn make_engine(&self) -> Option<Box<dyn ComputeEngine>> {
+        None
+    }
+
+    /// The shared binary codebook this backend references, if any
+    /// (serialized once per QLM1 container, not per layer).
+    fn shared_codebook(&self) -> Option<Arc<BinaryCodebook>> {
+        None
+    }
+
+    /// Write the backend payload (everything needed to rebuild it,
+    /// *except* a shared codebook, which the container carries once).
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()>;
+
+    fn clone_box(&self) -> Box<dyn WeightBackend>;
+
+    /// Downcasting escape hatch for format-specific tooling.
+    fn as_any(&self) -> &dyn Any;
+}
+
+impl Clone for Box<dyn WeightBackend> {
+    fn clone(&self) -> Box<dyn WeightBackend> {
+        self.clone_box()
+    }
+}
+
+/// Context handed to backend deserializers: container-level shared
+/// state a per-layer payload may reference.
+#[derive(Default)]
+pub struct BackendIoCtx {
+    /// The container's shared binary codebook (QLM1 header), if present.
+    pub codebook: Option<Arc<BinaryCodebook>>,
+}
+
+/// A registered payload deserializer: reads exactly the bytes written
+/// by the matching [`WeightBackend::write_payload`].
+pub type BackendReader = fn(&mut dyn Read, &BackendIoCtx) -> Result<Box<dyn WeightBackend>>;
+
+fn registry() -> &'static RwLock<BTreeMap<String, BackendReader>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, BackendReader>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, BackendReader> = BTreeMap::new();
+        m.insert("dense".into(), read_dense as BackendReader);
+        m.insert("binary".into(), crate::quant::binarize::read_backend);
+        m.insert("residual".into(), crate::quant::arb::read_backend);
+        m.insert("nm-sparse".into(), crate::quant::stbllm::read_backend);
+        m.insert("fp-vq".into(), crate::quant::fpvq::read_backend);
+        m.insert("codebook".into(), crate::quant::codebook::read_backend);
+        RwLock::new(m)
+    })
+}
+
+/// Register (or replace) a payload deserializer for `tag`. Built-in
+/// tags are pre-registered; call this once per custom backend before
+/// loading QLM1 files that contain it.
+pub fn register_backend(tag: &str, reader: BackendReader) {
+    registry().write().unwrap().insert(tag.to_string(), reader);
+}
+
+/// Look up the deserializer for a tag.
+pub fn backend_reader(tag: &str) -> Option<BackendReader> {
+    registry().read().unwrap().get(tag).copied()
+}
+
+/// All registered backend tags (diagnostics / error messages).
+pub fn backend_tags() -> Vec<String> {
+    registry().read().unwrap().keys().cloned().collect()
+}
+
+// ---- dense backend (fp32 matrix; the FP16 lane of the paper) ---------
+
+impl WeightBackend for Matrix {
+    fn tag(&self) -> &'static str {
+        "dense"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        self.clone()
+    }
+
+    fn matvec(&self, x: &Matrix) -> Matrix {
+        x.matmul_bt(self)
+    }
+
+    fn storage_bits(&self) -> usize {
+        self.data.len() * 16 // fp16 shipping convention
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        16.0
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        wire::w_u32(w, self.rows as u32)?;
+        wire::w_u32(w, self.cols as u32)?;
+        wire::w_f32s(w, &self.data)
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+/// Deserializer for the `dense` tag.
+pub fn read_dense(r: &mut dyn Read, _ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    let rows = wire::r_u32(r)? as usize;
+    let cols = wire::r_u32(r)? as usize;
+    wire::check_dims("dense backend", rows, cols)?;
+    Ok(Box::new(Matrix::from_vec(rows, cols, wire::r_f32s(r, rows * cols)?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_backend_roundtrip() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(5, 7, &mut rng);
+        let mut buf = Vec::new();
+        w.write_payload(&mut buf).unwrap();
+        let back = read_dense(&mut &buf[..], &BackendIoCtx::default()).unwrap();
+        assert_eq!(back.tag(), "dense");
+        assert_eq!(back.shape(), (5, 7));
+        assert_eq!(back.reconstruct().data, w.data);
+        assert_eq!(back.payload_bits_per_weight(), 16.0);
+    }
+
+    #[test]
+    fn registry_has_builtins_and_accepts_custom() {
+        for tag in ["dense", "binary", "residual", "nm-sparse", "fp-vq", "codebook"] {
+            assert!(backend_reader(tag).is_some(), "missing builtin {tag}");
+        }
+        fn toy(_r: &mut dyn Read, _c: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+            Ok(Box::new(Matrix::zeros(1, 1)))
+        }
+        register_backend("toy-test-backend", toy);
+        assert!(backend_reader("toy-test-backend").is_some());
+        assert!(backend_tags().contains(&"toy-test-backend".to_string()));
+    }
+}

@@ -1,5 +1,7 @@
-//! Pluggable linear layer: one weight matrix, many storage/compute
-//! backends. The deployment surface of the quantization pipeline.
+//! Pluggable linear layer: one weight matrix behind a
+//! [`WeightBackend`] trait object — the deployment surface of the
+//! quantization pipeline. Any backend registered with
+//! [`crate::model::register_backend`] plugs in here without changes.
 //!
 //! `forward` order: optional input transformation `x → xT` (the
 //! learnable transformation of §4.2, applied online via Kronecker
@@ -9,130 +11,31 @@
 //! For evaluation a reconstructed dense weight can be cached
 //! (`cache_dense`) — numerically identical to the engine paths (the
 //! engines are tested for exact agreement) but faster on the tiny-model
-//! eval grid. Serving/latency benches run the real engines.
+//! eval grid. Serving/latency benches run the real engines, prepared
+//! from the backend via [`WeightBackend::make_engine`].
 
-use crate::engine::{BinaryGemmEngine, LutGemmEngine};
+use super::backend::WeightBackend;
+use crate::engine::ComputeEngine;
 use crate::quant::actquant::ActQuant;
-use crate::quant::arb::ResidualBinary;
-use crate::quant::binarize::BinaryLayer;
-use crate::quant::codebook::CodebookLayer;
-use crate::quant::fpvq::FpVqLayer;
-use crate::quant::stbllm::NmSparseBinary;
 use crate::quant::transform::Transform;
 use crate::tensor::Matrix;
 
-/// Weight storage/compute backends.
-#[derive(Debug, Clone)]
-pub enum LinearBackend {
-    /// fp32 dense (the FP16 lane of the paper's tables).
-    Dense(Matrix),
-    /// Binarized (W1A16 sign-GEMM engine).
-    Binary(BinaryLayer),
-    /// Salient residual binarization (BiLLM / ARB-LLM lanes).
-    Residual(ResidualBinary),
-    /// N:M structured sparse binary (STBLLM lane).
-    NmSparse(NmSparseBinary),
-    /// FP vector quantization (GPTVQ/VPTQ lane).
-    FpVq(FpVqLayer),
-    /// Binary codebook (the BTC sub-1-bit lane, LUT-GEMM engine).
-    Codebook(CodebookLayer),
-}
-
-impl LinearBackend {
-    pub fn reconstruct(&self) -> Matrix {
-        match self {
-            LinearBackend::Dense(w) => w.clone(),
-            LinearBackend::Binary(b) => b.reconstruct(),
-            LinearBackend::Residual(r) => r.reconstruct(),
-            LinearBackend::NmSparse(s) => s.reconstruct(),
-            LinearBackend::FpVq(v) => v.reconstruct(),
-            LinearBackend::Codebook(c) => c.reconstruct(),
-        }
-    }
-
-    pub fn shape(&self) -> (usize, usize) {
-        match self {
-            LinearBackend::Dense(w) => (w.rows, w.cols),
-            LinearBackend::Binary(b) => (b.rows, b.cols),
-            LinearBackend::Residual(r) => (r.primary.rows, r.primary.cols),
-            LinearBackend::NmSparse(s) => (s.rows, s.cols),
-            LinearBackend::FpVq(v) => (v.rows, v.cols),
-            LinearBackend::Codebook(c) => (c.rows, c.cols),
-        }
-    }
-
-    /// Weight storage bits (per-layer share; shared codebook counted
-    /// separately by the memory accounting).
-    pub fn storage_bits(&self) -> usize {
-        match self {
-            LinearBackend::Dense(w) => w.data.len() * 16, // fp16 convention
-            LinearBackend::Binary(b) => b.storage_bits(),
-            LinearBackend::Residual(r) => r.storage_bits(),
-            LinearBackend::NmSparse(s) => s.storage_bits(),
-            LinearBackend::FpVq(v) => v.storage_bits(),
-            LinearBackend::Codebook(c) => c.storage_bits(),
-        }
-    }
-
-    /// Payload bits per weight: signs/indices/masks ONLY — the number
-    /// the paper's tables report. Per-row fp16 scales are excluded
-    /// because they amortize at real LLM widths (4096+ columns) but
-    /// dominate at TinyLM widths; the full measured figure including
-    /// scales is `storage_bits()`.
-    pub fn payload_bits_per_weight(&self) -> f64 {
-        let (o, i) = self.shape();
-        let n = (o * i) as f64;
-        match self {
-            LinearBackend::Dense(_) => 16.0,
-            LinearBackend::Binary(b) => {
-                let group = if b.n_groups > 1 {
-                    b.cols * (usize::BITS - (b.n_groups - 1).leading_zeros()) as usize
-                } else {
-                    0
-                };
-                (b.rows * b.cols + group) as f64 / n
-            }
-            LinearBackend::Residual(r) => {
-                let p = &r.primary;
-                let group = if p.n_groups > 1 {
-                    p.cols * (usize::BITS - (p.n_groups - 1).leading_zeros()) as usize
-                } else {
-                    0
-                };
-                // primary signs + residual signs on salient cols + bitmap
-                (p.rows * p.cols + r.residual.rows * r.residual.cols + p.cols + group) as f64 / n
-            }
-            LinearBackend::NmSparse(s) => {
-                let mask = 64
-                    - (crate::quant::stbllm::binom(s.m as u64, s.n as u64).saturating_sub(1))
-                        .leading_zeros() as usize;
-                (s.n + mask) as f64 / s.m as f64
-            }
-            LinearBackend::FpVq(v) => {
-                let idx_bits = (usize::BITS - (v.c - 1).leading_zeros()) as f64;
-                idx_bits * v.idx.len() as f64 / n
-            }
-            LinearBackend::Codebook(c) => {
-                c.codebook.index_bits() as f64 * c.idx.len() as f64 / n
-            }
-        }
-    }
-}
-
-/// Compute engines prepared lazily from the backend.
+/// Compute path prepared lazily from the backend.
 #[derive(Debug, Clone, Default)]
 enum Engine {
+    /// No preparation: dequantize through the backend on every call.
     #[default]
     None,
+    /// Cached dense reconstruction (fast small-model evaluation).
     DenseCache(Matrix),
-    Xnor(BinaryGemmEngine),
-    Lut(LutGemmEngine),
+    /// The backend's own prepared serving engine.
+    Prepared(Box<dyn ComputeEngine>),
 }
 
 /// A linear layer with backend, optional transform and act-quant.
 #[derive(Debug, Clone)]
 pub struct Linear {
-    pub backend: LinearBackend,
+    pub backend: Box<dyn WeightBackend>,
     /// Online input transformation (x → xT); `None` = identity.
     pub transform: Option<Transform>,
     /// Activation quantizer applied after the transform.
@@ -141,12 +44,12 @@ pub struct Linear {
 }
 
 impl Linear {
-    pub fn new(backend: LinearBackend) -> Linear {
+    pub fn new(backend: Box<dyn WeightBackend>) -> Linear {
         Linear { backend, transform: None, act_quant: None, engine: Engine::None }
     }
 
     pub fn dense(w: Matrix) -> Linear {
-        Self::new(LinearBackend::Dense(w))
+        Self::new(Box::new(w))
     }
 
     pub fn out_features(&self) -> usize {
@@ -163,15 +66,12 @@ impl Linear {
     }
 
     /// Prepare the real serving engine for the backend (sign-GEMM for
-    /// binary, LUT-GEMM for codebook; others fall back to dense cache).
+    /// binary, LUT-GEMM for codebook; backends without a native engine
+    /// fall back to a dense cache).
     pub fn prepare_engine(&mut self) {
-        self.engine = match &self.backend {
-            LinearBackend::Binary(b) => Engine::Xnor(BinaryGemmEngine::new(b)),
-            LinearBackend::Codebook(c) => match LutGemmEngine::try_new(c) {
-                Some(e) => Engine::Lut(e),
-                None => Engine::DenseCache(self.backend.reconstruct()),
-            },
-            _ => Engine::DenseCache(self.backend.reconstruct()),
+        self.engine = match self.backend.make_engine() {
+            Some(e) => Engine::Prepared(e),
+            None => Engine::DenseCache(self.backend.reconstruct()),
         };
     }
 
@@ -186,28 +86,21 @@ impl Linear {
         }
         match &self.engine {
             Engine::DenseCache(w) => xt.matmul_bt(w),
-            Engine::Xnor(e) => e.forward(&xt),
-            Engine::Lut(e) => e.forward(&xt),
-            Engine::None => xt.matmul_bt(&self.backend.reconstruct()),
+            Engine::Prepared(e) => e.forward(&xt),
+            Engine::None => self.backend.matvec(&xt),
         }
     }
 
     /// Human-readable backend tag (logs/benches).
     pub fn backend_name(&self) -> &'static str {
-        match self.backend {
-            LinearBackend::Dense(_) => "dense",
-            LinearBackend::Binary(_) => "binary",
-            LinearBackend::Residual(_) => "residual",
-            LinearBackend::NmSparse(_) => "nm-sparse",
-            LinearBackend::FpVq(_) => "fp-vq",
-            LinearBackend::Codebook(_) => "codebook",
-        }
+        self.backend.tag()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::binarize::BinaryLayer;
     use crate::util::proptest::assert_close;
     use crate::util::rng::Rng;
 
@@ -225,7 +118,7 @@ mod tests {
         let mut r = Rng::new(2);
         let w = Matrix::randn(12, 32, &mut r);
         let x = Matrix::randn(2, 32, &mut r);
-        let mut lin = Linear::new(LinearBackend::Binary(BinaryLayer::quantize(&w)));
+        let mut lin = Linear::new(Box::new(BinaryLayer::quantize(&w)));
         let lazy = lin.forward(&x);
         lin.prepare_engine();
         let engine = lin.forward(&x);
@@ -272,7 +165,18 @@ mod tests {
         let mut r = Rng::new(5);
         let w = Matrix::randn(32, 64, &mut r);
         let dense = Linear::dense(w.clone()).backend.storage_bits();
-        let binary = LinearBackend::Binary(BinaryLayer::quantize(&w)).storage_bits();
+        let binary = Linear::new(Box::new(BinaryLayer::quantize(&w))).backend.storage_bits();
         assert!(binary < dense / 8, "binary {binary} vs dense {dense}");
+    }
+
+    #[test]
+    fn backend_name_is_stable_tag() {
+        let mut r = Rng::new(6);
+        let w = Matrix::randn(4, 8, &mut r);
+        assert_eq!(Linear::dense(w.clone()).backend_name(), "dense");
+        assert_eq!(
+            Linear::new(Box::new(BinaryLayer::quantize(&w))).backend_name(),
+            "binary"
+        );
     }
 }

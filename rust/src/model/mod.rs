@@ -3,16 +3,21 @@
 //! from the same TLM1 blobs and numerically cross-checked against the
 //! AOT-lowered JAX forward in `examples/hlo_parity.rs`).
 //!
-//! Every linear layer is a [`linear::Linear`] with a pluggable backend
-//! (dense fp32 / W1A16 sign-GEMM / binary-codebook LUT-GEMM / N:M
-//! sparse / fp-VQ), an optional learnable input transformation, and an
-//! optional activation quantizer — the deployment surface of the whole
-//! quantization pipeline.
+//! Every linear layer is a [`linear::Linear`] with a pluggable
+//! [`backend::WeightBackend`] (dense fp32 / W1A16 sign-GEMM /
+//! binary-codebook LUT-GEMM / N:M sparse / fp-VQ / anything registered
+//! via [`backend::register_backend`]), an optional learnable input
+//! transformation, and an optional activation quantizer — the
+//! deployment surface of the whole quantization pipeline.
 
+pub mod backend;
 pub mod kvcache;
 pub mod linear;
 pub mod rope;
 pub mod transformer;
 
-pub use linear::{Linear, LinearBackend};
+pub use backend::{
+    backend_reader, backend_tags, register_backend, BackendIoCtx, BackendReader, WeightBackend,
+};
+pub use linear::Linear;
 pub use transformer::{CaptureSite, Transformer};

@@ -9,7 +9,13 @@
 //! objective, so the reconstruction error is monotonically
 //! non-increasing — pinned by a property test.
 
-use super::binarize::BinaryLayer;
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use super::binarize::{read_binary_payload, write_binary_payload, BinaryLayer};
+use crate::io::wire;
+use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
 
 /// Run `iters` rounds of alternating refinement starting from a plain
@@ -129,6 +135,78 @@ impl ResidualBinary {
     pub fn bits_per_weight(&self) -> f64 {
         self.storage_bits() as f64 / (self.primary.rows * self.primary.cols) as f64
     }
+}
+
+impl WeightBackend for ResidualBinary {
+    fn tag(&self) -> &'static str {
+        "residual"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.primary.rows, self.primary.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        ResidualBinary::reconstruct(self)
+    }
+
+    fn storage_bits(&self) -> usize {
+        ResidualBinary::storage_bits(self)
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        let p = &self.primary;
+        let group = if p.n_groups > 1 {
+            p.cols * (usize::BITS - (p.n_groups - 1).leading_zeros()) as usize
+        } else {
+            0
+        };
+        // primary signs + residual signs on salient cols + bitmap
+        (p.rows * p.cols + self.residual.rows * self.residual.cols + p.cols + group) as f64
+            / (p.rows * p.cols) as f64
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        write_binary_payload(w, &self.primary)?;
+        write_binary_payload(w, &self.residual)?;
+        wire::w_u32(w, self.salient_cols.len() as u32)?;
+        wire::w_u32s(w, &self.salient_cols.iter().map(|&c| c as u32).collect::<Vec<_>>())
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Registered deserializer for the `residual` tag.
+pub fn read_backend(r: &mut dyn Read, _ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    let primary = read_binary_payload(r)?;
+    let residual = read_binary_payload(r)?;
+    let n_sal = wire::r_u32(r)? as usize;
+    if n_sal > primary.cols {
+        bail!(
+            "residual backend: {n_sal} salient columns exceed width {}",
+            primary.cols
+        );
+    }
+    if residual.cols != n_sal || residual.rows != primary.rows {
+        bail!(
+            "residual backend: residual block {}x{} does not match {} salient columns of {} rows",
+            residual.rows,
+            residual.cols,
+            n_sal,
+            primary.rows
+        );
+    }
+    let salient_cols: Vec<usize> = wire::r_u32s(r, n_sal)?.into_iter().map(|c| c as usize).collect();
+    if let Some(&c) = salient_cols.iter().find(|&&c| c >= primary.cols) {
+        bail!("residual backend: salient column {c} out of range (cols {})", primary.cols);
+    }
+    Ok(Box::new(ResidualBinary { primary, residual, salient_cols }))
 }
 
 #[cfg(test)]

@@ -9,7 +9,10 @@
 //! The BTC pipeline reuses the same machinery with the learnable
 //! transformation in front (see `transform.rs` / `pipeline.rs`).
 
+use anyhow::Result;
+
 use super::arb::ResidualBinary;
+use super::quantizer::{QuantOutcome, Quantizer, SiteId};
 use super::splits::{column_importance, salient_columns, split_columns};
 use crate::tensor::Matrix;
 
@@ -43,6 +46,36 @@ pub fn quantize(w: &Matrix, act_sq: &[f32], cfg: &SalientBinaryConfig) -> Residu
     let sal = salient_columns(&imp, cfg.salient_frac);
     let (groups, ng) = split_columns(&imp, cfg.n_splits);
     ResidualBinary::quantize(w, &groups, ng, &sal, cfg.arb_iters)
+}
+
+/// [`Quantizer`] over the salient-residual machinery: the BiLLM and
+/// ARB-LLM registry lanes (`billm` / `arb-llm`), differing only in
+/// preset and display name.
+#[derive(Debug)]
+pub struct SalientResidualQuantizer {
+    display: &'static str,
+    preset: SalientBinaryConfig,
+}
+
+impl SalientResidualQuantizer {
+    pub fn new(display: &'static str, preset: SalientBinaryConfig) -> Self {
+        SalientResidualQuantizer { display, preset }
+    }
+}
+
+impl Quantizer for SalientResidualQuantizer {
+    fn name(&self) -> String {
+        self.display.to_string()
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        weff: &Matrix,
+        act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        Ok(QuantOutcome::Ready(Box::new(quantize(weff, act_sq, &self.preset))))
+    }
 }
 
 #[cfg(test)]

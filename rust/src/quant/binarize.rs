@@ -5,7 +5,15 @@
 //! `B = sign(W − mu)`. Column groups (from [`crate::quant::splits`])
 //! refine `alpha` per (row, group).
 
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use super::quantizer::{QuantOutcome, Quantizer, SiteId};
 use crate::bitops::BitMatrix;
+use crate::engine::{BinaryGemmEngine, ComputeEngine};
+use crate::io::wire;
+use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
 
 /// A binarized weight matrix with per-row scale/bias and optional
@@ -105,6 +113,107 @@ impl BinaryLayer {
     /// Effective bits per weight.
     pub fn bits_per_weight(&self) -> f64 {
         self.storage_bits() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+impl WeightBackend for BinaryLayer {
+    fn tag(&self) -> &'static str {
+        "binary"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        BinaryLayer::reconstruct(self)
+    }
+
+    fn storage_bits(&self) -> usize {
+        BinaryLayer::storage_bits(self)
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        let group = if self.n_groups > 1 {
+            self.cols * (usize::BITS - (self.n_groups - 1).leading_zeros()) as usize
+        } else {
+            0
+        };
+        (self.rows * self.cols + group) as f64 / (self.rows * self.cols) as f64
+    }
+
+    fn make_engine(&self) -> Option<Box<dyn ComputeEngine>> {
+        Some(Box::new(BinaryGemmEngine::new(self)))
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        write_binary_payload(w, self)
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Raw payload writer, shared with [`super::arb::ResidualBinary`]
+/// (which embeds two binary blocks in its own payload).
+pub fn write_binary_payload(w: &mut dyn Write, b: &BinaryLayer) -> Result<()> {
+    wire::w_u32(w, b.rows as u32)?;
+    wire::w_u32(w, b.cols as u32)?;
+    wire::w_u32(w, b.n_groups as u32)?;
+    wire::w_u64s(w, &b.b.data)?;
+    wire::w_f32s(w, &b.alpha)?;
+    wire::w_f32s(w, &b.mu)?;
+    wire::w_u16s(w, &b.col_group)
+}
+
+/// Raw payload reader matching [`write_binary_payload`].
+pub fn read_binary_payload(r: &mut dyn Read) -> Result<BinaryLayer> {
+    let rows = wire::r_u32(r)? as usize;
+    let cols = wire::r_u32(r)? as usize;
+    let n_groups = wire::r_u32(r)? as usize;
+    wire::check_dims("binary backend", rows, cols)?;
+    if n_groups == 0 || n_groups > cols {
+        bail!("binary backend: implausible n_groups {n_groups} for {cols} columns");
+    }
+    let mut b = BitMatrix::zeros(rows, cols);
+    let n_words = b.data.len();
+    b.data = wire::r_u64s(r, n_words)?;
+    let alpha = wire::r_f32s(r, rows * n_groups)?;
+    let mu = wire::r_f32s(r, rows)?;
+    let col_group = wire::r_u16s(r, cols)?;
+    if let Some(&g) = col_group.iter().find(|&&g| g as usize >= n_groups) {
+        bail!("binary backend: column group id {g} out of range (n_groups {n_groups})");
+    }
+    Ok(BinaryLayer { rows, cols, b, alpha, mu, col_group, n_groups })
+}
+
+/// Registered deserializer for the `binary` tag.
+pub fn read_backend(r: &mut dyn Read, _ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    Ok(Box::new(read_binary_payload(r)?))
+}
+
+/// The `naive` method: plain sign binarization of every linear, no
+/// saliency, no grouping — the weakest lane of the paper's Table 1.
+#[derive(Debug, Default)]
+pub struct NaiveQuantizer;
+
+impl Quantizer for NaiveQuantizer {
+    fn name(&self) -> String {
+        "Naive".to_string()
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        weff: &Matrix,
+        _act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        Ok(QuantOutcome::Ready(Box::new(BinaryLayer::quantize(weff))))
     }
 }
 

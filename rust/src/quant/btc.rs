@@ -1,0 +1,175 @@
+//! The BTC-LLM method lane as a [`Quantizer`]: learnable
+//! transformation fit per capture-site group (§4.2) → grouped ARB
+//! binarization → either the salient-residual binary lane (the paper's
+//! 1.11-bit row, `target_bits >= 1`) or the **shared binary codebook**
+//! sub-1-bit lane (`target_bits < 1`).
+//!
+//! The codebook lane is the reason [`Quantizer`] has a `finalize`
+//! hook: every layer's sign vectors must be collected before the
+//! cross-layer codebook can be clustered (paper Alg. 3), so
+//! `quantize_group` defers those layers and `finalize` builds the
+//! codebook once and returns one [`CodebookLayer`] per deferred site.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::arb::{arb_quantize, ResidualBinary};
+use super::binarize::BinaryLayer;
+use super::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
+use super::pipeline::{QuantConfig, QuantStats};
+use super::quantizer::{QuantOutcome, Quantizer, SiteId};
+use super::splits::{column_importance, salient_columns, split_columns};
+use super::transform::{fit, FitConfig, Transform};
+use crate::model::WeightBackend;
+use crate::tensor::Matrix;
+
+/// Snap column groups to `v`-block granularity (block importance =
+/// sum of member columns) so the LUT-GEMM engine can fold per-group
+/// scales into the gather.
+pub fn block_aligned_split(importance: &[f64], n_splits: usize, v: usize) -> (Vec<u16>, usize) {
+    if n_splits == 0 {
+        return (vec![0u16; importance.len()], 1);
+    }
+    let nb = importance.len().div_ceil(v);
+    let block_imp: Vec<f64> = (0..nb)
+        .map(|b| importance[b * v..((b + 1) * v).min(importance.len())].iter().sum())
+        .collect();
+    let (bg, ng) = split_columns(&block_imp, n_splits);
+    let col_group: Vec<u16> = (0..importance.len()).map(|c| bg[c / v]).collect();
+    (col_group, ng)
+}
+
+/// BTC-LLM quantizer. Per-run state: the binarized layers awaiting the
+/// shared codebook build.
+#[derive(Debug)]
+pub struct BtcQuantizer {
+    target_bits: f64,
+    v: usize,
+    /// Codebook size, resolved once from [`QuantConfig::derived_c`].
+    c: usize,
+    em_iters: usize,
+    n_splits: usize,
+    salient_frac: f64,
+    arb_iters: usize,
+    transform_p: bool,
+    transform_sigma: bool,
+    transform_outer: usize,
+    /// Binarized layers deferred to the codebook build, in
+    /// `quantize_group` call order (matches the driver's site order).
+    pending: Vec<BinaryLayer>,
+}
+
+impl BtcQuantizer {
+    pub fn from_config(cfg: &QuantConfig) -> BtcQuantizer {
+        BtcQuantizer {
+            target_bits: cfg.target_bits,
+            v: cfg.v,
+            c: cfg.derived_c(),
+            em_iters: cfg.em_iters,
+            n_splits: cfg.n_splits,
+            salient_frac: cfg.salient_frac,
+            arb_iters: cfg.arb_iters,
+            transform_p: cfg.transform_p,
+            transform_sigma: cfg.transform_sigma,
+            transform_outer: cfg.transform_outer,
+            pending: Vec::new(),
+        }
+    }
+
+    /// Sub-1-bit targets engage the shared codebook; >= 1.0 is the
+    /// binary (no codebook) lane labelled 1.11 in the paper.
+    fn uses_codebook(&self) -> bool {
+        self.target_bits < 1.0
+    }
+}
+
+impl Quantizer for BtcQuantizer {
+    fn name(&self) -> String {
+        "BTC-LLM".to_string()
+    }
+
+    fn fit_transform(&mut self, x: &Matrix, ws: &[&Matrix]) -> Result<Option<Transform>> {
+        if !self.transform_p && !self.transform_sigma {
+            return Ok(None);
+        }
+        let fit_cfg = FitConfig {
+            outer_iters: self.transform_outer,
+            learn_p: self.transform_p,
+            learn_sigma: self.transform_sigma,
+            n_splits: self.n_splits,
+            ..Default::default()
+        };
+        let (t, _fit_stats) = fit(x, ws, &fit_cfg);
+        Ok(Some(t))
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        weff: &Matrix,
+        act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        let imp = column_importance(weff, act_sq);
+        if self.uses_codebook() {
+            // Block-aligned groups, no salient residual (sub-1-bit
+            // storage must stay mask-free).
+            let (groups, ng) = block_aligned_split(&imp, self.n_splits, self.v);
+            let bl = arb_quantize(weff, &groups, ng, self.arb_iters);
+            self.pending.push(bl);
+            Ok(QuantOutcome::Deferred)
+        } else {
+            // Binary lane (paper's 1.11-bit row).
+            let (groups, ng) = split_columns(&imp, self.n_splits);
+            let sal = salient_columns(&imp, self.salient_frac);
+            Ok(QuantOutcome::Ready(Box::new(ResidualBinary::quantize(
+                weff,
+                &groups,
+                ng,
+                &sal,
+                self.arb_iters,
+            ))))
+        }
+    }
+
+    fn finalize(&mut self, stats: &mut QuantStats) -> Result<Vec<Box<dyn WeightBackend>>> {
+        if self.pending.is_empty() {
+            return Ok(Vec::new());
+        }
+        let pending = std::mem::take(&mut self.pending);
+        let mut all_vectors: Vec<u64> = Vec::new();
+        let mut offsets = Vec::with_capacity(pending.len());
+        for bl in &pending {
+            offsets.push(all_vectors.len());
+            all_vectors.extend(collect_vectors(bl, self.v));
+        }
+        if all_vectors.is_empty() {
+            bail!("BTC codebook build: no sign vectors collected");
+        }
+        let (cb, assignments, build_stats) =
+            BinaryCodebook::build(&all_vectors, self.v, self.c, self.em_iters);
+        let cb = Arc::new(cb);
+        stats.codebook_bits = cb.storage_bits();
+        stats.codebook_stats = Some(build_stats);
+
+        // Sample aux losses on the final sign vectors (diagnostics).
+        let sample: Vec<Vec<f32>> = all_vectors
+            .iter()
+            .step_by((all_vectors.len() / 48).max(1))
+            .take(48)
+            .map(|&w| (0..self.v).map(|j| if w >> j & 1 == 1 { 1.0 } else { -1.0 }).collect())
+            .collect();
+        if sample.len() >= 4 {
+            stats.aux_losses = Some(super::transform::aux_losses(&sample, 8));
+        }
+
+        let mut out: Vec<Box<dyn WeightBackend>> = Vec::with_capacity(pending.len());
+        for (pi, bl) in pending.iter().enumerate() {
+            let start = offsets[pi];
+            let end = offsets.get(pi + 1).copied().unwrap_or(all_vectors.len());
+            let idx = assignments[start..end].to_vec();
+            out.push(Box::new(CodebookLayer::from_assignments(bl, cb.clone(), idx)));
+        }
+        Ok(out)
+    }
+}

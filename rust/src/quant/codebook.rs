@@ -19,9 +19,15 @@
 //! distances are single-word XOR+POPCNT.
 
 use std::collections::HashMap;
+use std::io::{Read, Write};
 use std::sync::Arc;
 
+use anyhow::{bail, Context, Result};
+
 use super::binarize::BinaryLayer;
+use crate::engine::{ComputeEngine, LutGemmEngine};
+use crate::io::wire;
+use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
 
 /// A binary codebook: `c` centroids of `v` bits each, packed one per u64.
@@ -374,6 +380,95 @@ impl CodebookLayer {
     pub fn bits_per_weight(&self) -> f64 {
         self.storage_bits() as f64 / (self.rows * self.cols) as f64
     }
+}
+
+impl WeightBackend for CodebookLayer {
+    fn tag(&self) -> &'static str {
+        "codebook"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        CodebookLayer::reconstruct(self)
+    }
+
+    fn storage_bits(&self) -> usize {
+        CodebookLayer::storage_bits(self)
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        self.codebook.index_bits() as f64 * self.idx.len() as f64
+            / (self.rows * self.cols) as f64
+    }
+
+    fn make_engine(&self) -> Option<Box<dyn ComputeEngine>> {
+        LutGemmEngine::try_new(self).map(|e| Box::new(e) as Box<dyn ComputeEngine>)
+    }
+
+    fn shared_codebook(&self) -> Option<Arc<BinaryCodebook>> {
+        Some(self.codebook.clone())
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        // The shared codebook itself is carried once by the container
+        // header, not per layer.
+        wire::w_u32(w, self.rows as u32)?;
+        wire::w_u32(w, self.cols as u32)?;
+        wire::w_u32(w, self.n_groups as u32)?;
+        wire::w_u32s(w, &self.idx)?;
+        wire::w_f32s(w, &self.alpha)?;
+        wire::w_f32s(w, &self.mu)?;
+        wire::w_u16s(w, &self.col_group)
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Registered deserializer for the `codebook` tag. Requires the
+/// container's shared codebook in the [`BackendIoCtx`].
+pub fn read_backend(r: &mut dyn Read, ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    let cb = ctx
+        .codebook
+        .clone()
+        .context("codebook backend payload but the container has no shared codebook")?;
+    let rows = wire::r_u32(r)? as usize;
+    let cols = wire::r_u32(r)? as usize;
+    let n_groups = wire::r_u32(r)? as usize;
+    wire::check_dims("codebook backend", rows, cols)?;
+    if n_groups == 0 || n_groups > cols {
+        bail!("codebook backend: implausible n_groups {n_groups} for {cols} columns");
+    }
+    let n_idx = rows * cols.div_ceil(cb.v);
+    let idx = wire::r_u32s(r, n_idx)?;
+    if let Some(&k) = idx.iter().find(|&&k| k as usize >= cb.c()) {
+        bail!("codebook backend: centroid index {k} out of range (c={})", cb.c());
+    }
+    let alpha = wire::r_f32s(r, rows * n_groups)?;
+    let mu = wire::r_f32s(r, rows)?;
+    let col_group = wire::r_u16s(r, cols)?;
+    if let Some(&g) = col_group.iter().find(|&&g| g as usize >= n_groups) {
+        bail!("codebook backend: column group id {g} out of range (n_groups {n_groups})");
+    }
+    Ok(Box::new(CodebookLayer {
+        rows,
+        cols,
+        v: cb.v,
+        idx,
+        codebook: cb,
+        alpha,
+        mu,
+        col_group,
+        n_groups,
+    }))
 }
 
 #[cfg(test)]

@@ -8,6 +8,13 @@
 //! Also the comparison target for the binary codebook's build-speed
 //! claim (App. C.4: ~2.3× faster), see `bench_codebook_speed`.
 
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use super::quantizer::{QuantOutcome, Quantizer, SiteId};
+use crate::io::wire;
+use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
 use crate::util::rng::Rng;
 
@@ -128,6 +135,100 @@ impl FpVqLayer {
 
     pub fn bits_per_weight(&self) -> f64 {
         self.storage_bits() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+impl WeightBackend for FpVqLayer {
+    fn tag(&self) -> &'static str {
+        "fp-vq"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        FpVqLayer::reconstruct(self)
+    }
+
+    fn storage_bits(&self) -> usize {
+        FpVqLayer::storage_bits(self)
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        let idx_bits = (usize::BITS - (self.c - 1).leading_zeros()) as f64;
+        idx_bits * self.idx.len() as f64 / (self.rows * self.cols) as f64
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        wire::w_u32(w, self.rows as u32)?;
+        wire::w_u32(w, self.cols as u32)?;
+        wire::w_u32(w, self.v as u32)?;
+        wire::w_u32(w, self.c as u32)?;
+        wire::w_u32(w, self.pad as u32)?;
+        wire::w_f32s(w, &self.centroids)?;
+        wire::w_u32s(w, &self.idx)
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Registered deserializer for the `fp-vq` tag.
+pub fn read_backend(r: &mut dyn Read, _ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    let rows = wire::r_u32(r)? as usize;
+    let cols = wire::r_u32(r)? as usize;
+    let v = wire::r_u32(r)? as usize;
+    let c = wire::r_u32(r)? as usize;
+    let pad = wire::r_u32(r)? as usize;
+    wire::check_dims("fp-vq backend", rows, cols)?;
+    if v == 0 || v > 4096 {
+        bail!("fp-vq backend: implausible sub-vector length v={v}");
+    }
+    if c == 0 || c > 1 << 22 {
+        bail!("fp-vq backend: implausible codebook size c={c}");
+    }
+    if pad >= v || (rows * cols + pad) % v != 0 {
+        bail!("fp-vq backend: padding {pad} inconsistent with {rows}x{cols} / v={v}");
+    }
+    let centroids = wire::r_f32s(r, c * v)?;
+    let n_vec = (rows * cols + pad) / v;
+    let idx = wire::r_u32s(r, n_vec)?;
+    if let Some(&k) = idx.iter().find(|&&k| k as usize >= c) {
+        bail!("fp-vq backend: index {k} out of range (c={c})");
+    }
+    Ok(Box::new(FpVqLayer { rows, cols, v, centroids, c, idx, pad }))
+}
+
+/// The `fp-vq` method lane (GPTVQ / VPTQ-style): Lloyd k-means over fp
+/// sub-vectors of every linear.
+#[derive(Debug)]
+pub struct FpVqQuantizer {
+    pub v: usize,
+    pub c: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Quantizer for FpVqQuantizer {
+    fn name(&self) -> String {
+        "FP-VQ".to_string()
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        weff: &Matrix,
+        _act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        Ok(QuantOutcome::Ready(Box::new(FpVqLayer::quantize(
+            weff, self.v, self.c, self.iters, self.seed,
+        ))))
     }
 }
 

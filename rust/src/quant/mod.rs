@@ -5,6 +5,13 @@
 //! sparse binary, GPTVQ/VPTQ-style floating-point vector quantization)
 //! and the per-model pipeline driver.
 //!
+//! The surface is **open**: methods implement the [`Quantizer`]
+//! strategy trait and register by name in [`registry`]
+//! (`quant::registry::get("btc-0.8")`); weight formats implement
+//! [`crate::model::WeightBackend`] and register their deserializer by
+//! tag. Adding a lane touches one new file plus one registration call —
+//! no enum, no pipeline edits.
+//!
 //! Conventions: weight matrices are (out, in) and applied as
 //! `y = x @ W^T`; binarization is per-output-row (`alpha`, `mu` indexed
 //! by row); column *groups* (salient / split-point groups) are shared
@@ -16,14 +23,18 @@ pub mod actquant;
 pub mod arb;
 pub mod billm;
 pub mod binarize;
+pub mod btc;
 pub mod codebook;
 pub mod fpvq;
 pub mod kvquant;
 pub mod pipeline;
+pub mod quantizer;
 pub mod splits;
 pub mod stbllm;
 pub mod transform;
 
 pub use binarize::BinaryLayer;
 pub use codebook::{BinaryCodebook, CodebookLayer};
-pub use pipeline::{QuantConfig, QuantMethod, QuantizedModel};
+pub use pipeline::registry;
+pub use pipeline::{quantize_model, QuantConfig, QuantStats, QuantizedModel};
+pub use quantizer::{CalibView, QuantOutcome, Quantizer, SiteId};

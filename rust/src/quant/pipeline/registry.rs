@@ -1,0 +1,424 @@
+//! Method registry: quantization lanes resolved **by name**, so the
+//! CLI, benches and serving coordinator never enumerate methods.
+//!
+//! A spec is either a bare key (`"btc"`, `"arb-llm"`) or a key plus a
+//! bits suffix (`"btc-0.8"`, `"stbllm-0.7"`). Built-in lanes are
+//! pre-registered; adding a lane at runtime is one [`register`] call:
+//!
+//! ```no_run
+//! use btc_llm::quant::pipeline::registry::{self, MethodEntry};
+//! # fn preset(_b: f64) -> btc_llm::quant::QuantConfig { todo!() }
+//! # fn make(_c: &btc_llm::quant::QuantConfig) -> Box<dyn btc_llm::quant::Quantizer> { todo!() }
+//! registry::register(MethodEntry {
+//!     key: "my-method",
+//!     display: "My-Method",
+//!     aliases: &[],
+//!     takes_bits: true,
+//!     default_bits: 1.0,
+//!     preset,
+//!     make,
+//! });
+//! let cfg = registry::get("my-method-0.5").unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+use anyhow::{bail, Result};
+
+use super::QuantConfig;
+use crate::quant::billm::{SalientBinaryConfig, SalientResidualQuantizer};
+use crate::quant::binarize::NaiveQuantizer;
+use crate::quant::btc::BtcQuantizer;
+use crate::quant::fpvq::FpVqQuantizer;
+use crate::quant::quantizer::{QuantOutcome, Quantizer, SiteId};
+use crate::quant::stbllm::StbllmQuantizer;
+
+/// One registered quantization method.
+#[derive(Debug, Clone, Copy)]
+pub struct MethodEntry {
+    /// Registry key; also the value of [`QuantConfig::method`].
+    pub key: &'static str,
+    /// Display name for tables/logs (e.g. "ARB-LLM").
+    pub display: &'static str,
+    /// Alternative lookup keys (e.g. `"arb"` for `"arb-llm"`).
+    pub aliases: &'static [&'static str],
+    /// Whether the method is parameterized by a bits target. When
+    /// false, a `<key>-<bits>` spec is rejected instead of silently
+    /// ignoring the suffix.
+    pub takes_bits: bool,
+    /// Bits target used when the spec has no suffix.
+    pub default_bits: f64,
+    /// Build the paper-preset config for a bits target.
+    pub preset: fn(f64) -> QuantConfig,
+    /// Instantiate the per-run strategy from a config.
+    pub make: fn(&QuantConfig) -> Box<dyn Quantizer>,
+}
+
+fn table() -> &'static RwLock<BTreeMap<String, MethodEntry>> {
+    static T: OnceLock<RwLock<BTreeMap<String, MethodEntry>>> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut m = BTreeMap::new();
+        for e in builtin_entries() {
+            insert(&mut m, e);
+        }
+        RwLock::new(m)
+    })
+}
+
+fn insert(m: &mut BTreeMap<String, MethodEntry>, e: MethodEntry) {
+    m.insert(e.key.to_string(), e);
+    for a in e.aliases {
+        m.insert(a.to_string(), e);
+    }
+}
+
+/// Register (or replace) a method. The entry is looked up under its
+/// key and every alias.
+pub fn register(entry: MethodEntry) {
+    insert(&mut table().write().unwrap(), entry);
+}
+
+/// Primary keys of all registered methods (aliases excluded).
+pub fn names() -> Vec<String> {
+    let t = table().read().unwrap();
+    t.iter().filter(|(k, e)| k.as_str() == e.key).map(|(k, _)| k.clone()).collect()
+}
+
+/// Single source of truth for spec resolution: exact key first, then
+/// `<key>-<bits>` suffix form. Returns the entry plus the suffix bits
+/// (if the spec carried one).
+fn lookup<'a>(
+    t: &'a BTreeMap<String, MethodEntry>,
+    spec: &str,
+) -> Option<(&'a MethodEntry, Option<f64>)> {
+    if let Some(e) = t.get(spec) {
+        return Some((e, None));
+    }
+    if let Some((prefix, suffix)) = spec.rsplit_once('-') {
+        if let Ok(bits) = suffix.parse::<f64>() {
+            if let Some(e) = t.get(prefix) {
+                return Some((e, Some(bits)));
+            }
+        }
+    }
+    None
+}
+
+/// Reject `<key>-<bits>` specs for methods that are not parameterized
+/// by bits — silently ignoring the suffix would run at a different
+/// width than the user asked for.
+fn check_suffix(e: &MethodEntry, suffix_bits: Option<f64>, spec: &str) -> Result<()> {
+    if suffix_bits.is_some() && !e.takes_bits {
+        bail!("method {:?} does not take a bits target (spec {spec:?})", e.key);
+    }
+    Ok(())
+}
+
+/// Resolve a spec (`"btc"`, `"btc-0.8"`, `"stbllm-0.7"`, …) to its
+/// paper-preset [`QuantConfig`].
+pub fn get(spec: &str) -> Result<QuantConfig> {
+    let t = table().read().unwrap();
+    match lookup(&t, spec) {
+        Some((e, suffix_bits)) => {
+            check_suffix(e, suffix_bits, spec)?;
+            Ok((e.preset)(suffix_bits.unwrap_or(e.default_bits)))
+        }
+        None => bail!("unknown quantization method {spec:?}; registered: {:?}", keys_of(&t)),
+    }
+}
+
+/// Resolve a method name with an explicit bits override (`None` =
+/// the method's default, or the suffix if `name` carries one; an
+/// explicit override wins over a suffix).
+pub fn get_with_bits(name: &str, bits: Option<f64>) -> Result<QuantConfig> {
+    match bits {
+        None => get(name),
+        Some(b) => {
+            let t = table().read().unwrap();
+            match lookup(&t, name) {
+                Some((e, suffix_bits)) => {
+                    check_suffix(e, suffix_bits, name)?;
+                    Ok((e.preset)(b))
+                }
+                None => {
+                    bail!("unknown quantization method {name:?}; registered: {:?}", keys_of(&t))
+                }
+            }
+        }
+    }
+}
+
+/// Resolve a spec where a bits suffix in the spec wins, then
+/// `fallback`, then the method default — serve-config semantics: the
+/// config file always supplies a bits value, and it must not mask a
+/// more specific suffix in the spec (`backend = "btc-0.5"`).
+pub fn get_with_fallback_bits(spec: &str, fallback: Option<f64>) -> Result<QuantConfig> {
+    let t = table().read().unwrap();
+    match lookup(&t, spec) {
+        Some((e, suffix_bits)) => {
+            check_suffix(e, suffix_bits, spec)?;
+            Ok((e.preset)(suffix_bits.or(fallback).unwrap_or(e.default_bits)))
+        }
+        None => bail!("unknown quantization method {spec:?}; registered: {:?}", keys_of(&t)),
+    }
+}
+
+/// Display name for a registered method key or spec.
+pub fn display_name(spec: &str) -> Option<&'static str> {
+    let t = table().read().unwrap();
+    lookup(&t, spec).map(|(e, _)| e.display)
+}
+
+/// Instantiate the strategy for a config's method key.
+pub fn quantizer_for(cfg: &QuantConfig) -> Result<Box<dyn Quantizer>> {
+    let t = table().read().unwrap();
+    match t.get(&cfg.method) {
+        Some(e) => Ok((e.make)(cfg)),
+        None => {
+            bail!(
+                "unknown quantization method {:?}; registered: {:?}",
+                cfg.method,
+                keys_of(&t)
+            )
+        }
+    }
+}
+
+fn keys_of(t: &BTreeMap<String, MethodEntry>) -> Vec<String> {
+    t.keys().cloned().collect()
+}
+
+// ---- built-in lanes --------------------------------------------------
+
+/// The FP16 identity lane: dense weights shipped as-is.
+#[derive(Debug, Default)]
+pub struct Fp16Quantizer;
+
+impl Quantizer for Fp16Quantizer {
+    fn name(&self) -> String {
+        "FP16".to_string()
+    }
+
+    fn is_identity(&self) -> bool {
+        true
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        _weff: &crate::tensor::Matrix,
+        _act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        bail!("FP16 is an identity lane; the driver skips quantization")
+    }
+}
+
+fn make_fp16(_cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::<Fp16Quantizer>::default()
+}
+
+fn make_naive(_cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::<NaiveQuantizer>::default()
+}
+
+fn salient_preset(cfg: &QuantConfig) -> SalientBinaryConfig {
+    SalientBinaryConfig {
+        salient_frac: cfg.salient_frac,
+        n_splits: cfg.n_splits,
+        arb_iters: cfg.arb_iters,
+    }
+}
+
+fn make_billm(cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::new(SalientResidualQuantizer::new("BiLLM", salient_preset(cfg)))
+}
+
+fn make_arb(cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::new(SalientResidualQuantizer::new("ARB-LLM", salient_preset(cfg)))
+}
+
+fn make_stbllm(cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::new(StbllmQuantizer { n: cfg.nm.0, m: cfg.nm.1 })
+}
+
+fn make_fpvq(cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::new(FpVqQuantizer { v: cfg.fpvq.0, c: cfg.fpvq.1, iters: 8, seed: cfg.seed })
+}
+
+fn make_btc(cfg: &QuantConfig) -> Box<dyn Quantizer> {
+    Box::new(BtcQuantizer::from_config(cfg))
+}
+
+fn builtin_entries() -> [MethodEntry; 7] {
+    [
+        MethodEntry {
+            key: "fp16",
+            display: "FP16",
+            aliases: &[],
+            takes_bits: false,
+            default_bits: 16.0,
+            preset: |_b| QuantConfig::fp16(),
+            make: make_fp16,
+        },
+        MethodEntry {
+            key: "naive",
+            display: "Naive",
+            aliases: &[],
+            takes_bits: false,
+            default_bits: 1.0,
+            preset: |_b| QuantConfig::naive(),
+            make: make_naive,
+        },
+        MethodEntry {
+            key: "billm",
+            display: "BiLLM",
+            aliases: &[],
+            takes_bits: false,
+            default_bits: 1.11,
+            preset: |_b| QuantConfig::billm(),
+            make: make_billm,
+        },
+        MethodEntry {
+            key: "arb-llm",
+            display: "ARB-LLM",
+            aliases: &["arb"],
+            takes_bits: false,
+            default_bits: 1.11,
+            preset: |_b| QuantConfig::arb_llm(),
+            make: make_arb,
+        },
+        MethodEntry {
+            key: "stbllm",
+            display: "STBLLM",
+            aliases: &[],
+            takes_bits: true,
+            default_bits: 0.8,
+            preset: QuantConfig::stbllm,
+            make: make_stbllm,
+        },
+        MethodEntry {
+            key: "fp-vq",
+            display: "FP-VQ",
+            aliases: &["fpvq"],
+            // Matches the historical CLI default (`--method fpvq`
+            // without --bits ran the sub-1-bit lane).
+            takes_bits: true,
+            default_bits: 0.8,
+            preset: QuantConfig::fpvq,
+            make: make_fpvq,
+        },
+        MethodEntry {
+            key: "btc",
+            display: "BTC-LLM",
+            aliases: &[],
+            takes_bits: true,
+            default_bits: 0.8,
+            preset: QuantConfig::btc,
+            make: make_btc,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::WeightBackend;
+    use crate::quant::binarize::BinaryLayer;
+    use crate::quant::pipeline::{quantize_model, tests as pipeline_tests};
+    use crate::tensor::Matrix;
+
+    #[test]
+    fn specs_resolve_with_and_without_bits() {
+        let c = get("btc-0.8").unwrap();
+        assert_eq!(c.method, "btc");
+        assert!((c.target_bits - 0.8).abs() < 1e-12);
+        let c = get("btc").unwrap();
+        assert!((c.target_bits - 0.8).abs() < 1e-12);
+        let c = get("stbllm-0.7").unwrap();
+        assert_eq!(c.nm, (7, 10));
+        let c = get("arb-llm").unwrap();
+        assert_eq!(c.method, "arb-llm");
+        let c = get("arb").unwrap();
+        assert_eq!(c.method, "arb-llm");
+        assert!(get("nope-1.0").is_err());
+        let err = get("nope").unwrap_err().to_string();
+        assert!(err.contains("btc") && err.contains("stbllm"), "{err}");
+        // Bits suffix on a method that isn't bits-parameterized is an
+        // error, not a silently-ignored number.
+        let err = get("billm-0.5").unwrap_err().to_string();
+        assert!(err.contains("does not take a bits target"), "{err}");
+    }
+
+    #[test]
+    fn fallback_bits_yield_to_spec_suffix() {
+        // Serve semantics: a suffix in the spec wins over the config's
+        // bits value; a bare key takes the fallback; no fallback = the
+        // method default (fp-vq keeps the historical CLI 0.8).
+        let c = get_with_fallback_bits("btc-0.5", Some(0.8)).unwrap();
+        assert!((c.target_bits - 0.5).abs() < 1e-12);
+        let c = get_with_fallback_bits("btc", Some(0.7)).unwrap();
+        assert!((c.target_bits - 0.7).abs() < 1e-12);
+        let c = get_with_fallback_bits("fp-vq", None).unwrap();
+        assert!((c.target_bits - 0.8).abs() < 1e-12);
+        assert!(get_with_fallback_bits("nope", Some(1.0)).is_err());
+    }
+
+    #[test]
+    fn names_cover_builtins() {
+        let n = names();
+        for key in ["fp16", "naive", "billm", "arb-llm", "stbllm", "fp-vq", "btc"] {
+            assert!(n.contains(&key.to_string()), "missing {key} in {n:?}");
+        }
+    }
+
+    #[test]
+    fn custom_method_registers_and_runs_end_to_end() {
+        // A toy method defined entirely here: binarize with plain
+        // signs. One register call makes it a first-class lane.
+        #[derive(Debug, Default)]
+        struct ToySign;
+        impl Quantizer for ToySign {
+            fn name(&self) -> String {
+                "Toy-Sign".to_string()
+            }
+            fn quantize_group(
+                &mut self,
+                _site: &SiteId,
+                weff: &Matrix,
+                _act_sq: &[f32],
+            ) -> Result<QuantOutcome> {
+                Ok(QuantOutcome::Ready(Box::new(BinaryLayer::quantize(weff))))
+            }
+        }
+        fn toy_preset(bits: f64) -> QuantConfig {
+            QuantConfig {
+                method: "toy-sign-test".into(),
+                target_bits: bits,
+                ..pipeline_tests::quick(QuantConfig::default())
+            }
+        }
+        fn toy_make(_cfg: &QuantConfig) -> Box<dyn Quantizer> {
+            Box::<ToySign>::default()
+        }
+        register(MethodEntry {
+            key: "toy-sign-test",
+            display: "Toy-Sign",
+            aliases: &[],
+            takes_bits: true,
+            default_bits: 1.0,
+            preset: toy_preset,
+            make: toy_make,
+        });
+
+        let (raw, corpus) = pipeline_tests::fixture_public();
+        let cfg = get("toy-sign-test-1.0").unwrap();
+        let qm = quantize_model(&raw, &corpus, &cfg).unwrap();
+        assert_eq!(qm.stats.method, "Toy-Sign");
+        assert_eq!(qm.model.blocks[0].wq.backend_name(), "binary");
+        let logits = qm.model.forward(&[3, 1, 4]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        let bits = qm.model.blocks[0].wq.backend.storage_bits();
+        assert!(bits > 0);
+    }
+}

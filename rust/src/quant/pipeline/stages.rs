@@ -1,0 +1,250 @@
+//! The pipeline's stages, factored out of the driver so each is
+//! testable and method-agnostic: every method-specific decision lives
+//! behind the [`Quantizer`] trait.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::{QuantConfig, QuantStats};
+use crate::data::calib::CalibSet;
+use crate::model::transformer::{Capture, CaptureSite, Transformer};
+use crate::model::{Linear, WeightBackend};
+use crate::quant::actquant::ActQuant;
+use crate::quant::quantizer::{QuantOutcome, Quantizer, SiteId};
+use crate::quant::transform::Transform;
+use crate::tensor::Matrix;
+
+/// One capture site and the linears fed by it.
+pub struct SiteGroup {
+    pub site: CaptureSite,
+    pub names: &'static [&'static str],
+}
+
+/// The 7 linears of a block, grouped by shared input.
+pub const SITE_GROUPS: [SiteGroup; 4] = [
+    SiteGroup { site: CaptureSite::Ln1Out, names: &["wq", "wk", "wv"] },
+    SiteGroup { site: CaptureSite::AttnOut, names: &["wo"] },
+    SiteGroup { site: CaptureSite::Ln2Out, names: &["wgate", "wup"] },
+    SiteGroup { site: CaptureSite::FfnMid, names: &["wdown"] },
+];
+
+/// CalibStage: run calibration sequences through the fp model,
+/// capturing activations at every site until `calib_rows` is reached.
+pub fn calib_stage(model: &Transformer, corpus: &[u8], cfg: &QuantConfig) -> Capture {
+    let calib = CalibSet::sample(corpus, cfg.calib_seqs, cfg.calib_seq_len, cfg.seed);
+    let mut capture = Capture::new(cfg.calib_rows);
+    for seq in &calib.seqs {
+        if capture
+            .matrix(0, CaptureSite::Ln1Out)
+            .map(|m| m.rows >= cfg.calib_rows)
+            .unwrap_or(false)
+        {
+            break;
+        }
+        let mut opt = Some(&mut capture);
+        model.forward_capture(seq, &mut opt);
+    }
+    capture
+}
+
+/// Per-input-channel mean squared activation.
+pub fn act_sq_of(x: &Matrix) -> Vec<f32> {
+    let mut v = vec![0f32; x.cols];
+    for r in 0..x.rows {
+        for (c, &val) in x.row(r).iter().enumerate() {
+            v[c] += val * val;
+        }
+    }
+    for val in v.iter_mut() {
+        *val /= x.rows.max(1) as f32;
+    }
+    v
+}
+
+/// Pull the current (dense) weights of one site group.
+pub fn group_weights(model: &Transformer, li: usize, names: &[&str]) -> Vec<Matrix> {
+    names
+        .iter()
+        .map(|n| {
+            let block = &model.blocks[li];
+            block
+                .linears()
+                .iter()
+                .find(|(nm, _)| nm == n)
+                .expect("known linear slot")
+                .1
+                .backend
+                .reconstruct()
+        })
+        .collect()
+}
+
+/// TransformStage output for one site group.
+pub struct GroupPrep {
+    pub transform: Option<Transform>,
+    pub act_quant: Option<ActQuant>,
+    /// Mean squared activation per channel, in transformed space.
+    pub act_sq: Vec<f32>,
+}
+
+/// TransformStage: let the quantizer fit its input transformation for
+/// the group, then calibrate the activation quantizer in transformed
+/// space.
+pub fn transform_stage(
+    quantizer: &mut dyn Quantizer,
+    x: &Matrix,
+    ws: &[Matrix],
+    cfg: &QuantConfig,
+    stats: &mut QuantStats,
+) -> Result<GroupPrep> {
+    let t0 = Instant::now();
+    let refs: Vec<&Matrix> = ws.iter().collect();
+    let transform = quantizer.fit_transform(x, &refs)?;
+    stats.transform_secs += t0.elapsed().as_secs_f64();
+    if let Some(t) = &transform {
+        stats.transform_bits += (t.p1.data.len() + t.p2.data.len()) * 16 + t.sigma.len();
+    }
+    let xt = match &transform {
+        Some(t) => t.apply(x),
+        None => x.clone(),
+    };
+    let act_sq = act_sq_of(&xt);
+    let act_quant = if cfg.act_bits < 16 {
+        Some(ActQuant::calibrate(&xt, cfg.act_bits))
+    } else {
+        None
+    };
+    Ok(GroupPrep { transform, act_quant, act_sq })
+}
+
+/// Running totals across QuantStage / CodebookStage.
+#[derive(Default)]
+pub struct Accum {
+    /// Sites whose backend is deferred to the quantizer's finalize.
+    pub deferred: Vec<SiteId>,
+    pub total_weight_bits: usize,
+    pub total_weights: usize,
+    pub rel_err_sum: f64,
+    pub n_linears: usize,
+}
+
+fn install_backend(
+    model: &mut Transformer,
+    li: usize,
+    name: &str,
+    backend: Box<dyn WeightBackend>,
+    prep: &GroupPrep,
+) {
+    let block = &mut model.blocks[li];
+    for (nm, lin) in block.linears_mut() {
+        if nm == name {
+            let mut new_lin = Linear::new(backend);
+            new_lin.transform = prep.transform.clone();
+            new_lin.act_quant = prep.act_quant.clone();
+            *lin = new_lin;
+            break;
+        }
+    }
+}
+
+/// QuantStage: quantize every linear of one site group through the
+/// quantizer, installing ready backends immediately and dense
+/// placeholders for deferred ones.
+#[allow(clippy::too_many_arguments)]
+pub fn quant_stage(
+    quantizer: &mut dyn Quantizer,
+    model: &mut Transformer,
+    li: usize,
+    names: &'static [&'static str],
+    ws: &[Matrix],
+    prep: &GroupPrep,
+    acc: &mut Accum,
+    stats: &mut QuantStats,
+) -> Result<()> {
+    let t0 = Instant::now();
+    for (&name, w) in names.iter().zip(ws.iter()) {
+        let weff = match &prep.transform {
+            Some(t) => t.transform_weight(w),
+            None => w.clone(),
+        };
+        acc.n_linears += 1;
+        acc.total_weights += weff.rows * weff.cols;
+        let site = SiteId { layer: li, name };
+        let backend: Box<dyn WeightBackend> =
+            match quantizer.quantize_group(&site, &weff, &prep.act_sq)? {
+                QuantOutcome::Ready(b) => {
+                    let rec = b.reconstruct();
+                    acc.rel_err_sum += crate::tensor::stats::rel_error(&weff.data, &rec.data);
+                    acc.total_weight_bits += b.storage_bits();
+                    b
+                }
+                QuantOutcome::Deferred => {
+                    acc.deferred.push(site);
+                    // Dense placeholder holding the effective weight;
+                    // replaced (and error-accounted) at CodebookStage.
+                    Box::new(weff)
+                }
+            };
+        install_backend(model, li, name, backend, prep);
+    }
+    stats.quant_secs += t0.elapsed().as_secs_f64();
+    Ok(())
+}
+
+/// CodebookStage: resolve deferred sites through the quantizer's
+/// cross-layer finalize (the shared-codebook build for BTC), swapping
+/// each placeholder for its final backend.
+pub fn codebook_stage(
+    quantizer: &mut dyn Quantizer,
+    model: &mut Transformer,
+    acc: &mut Accum,
+    stats: &mut QuantStats,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let finals = quantizer.finalize(stats)?;
+    if finals.len() != acc.deferred.len() {
+        bail!(
+            "quantizer finalized {} backends for {} deferred sites",
+            finals.len(),
+            acc.deferred.len()
+        );
+    }
+    if finals.is_empty() {
+        return Ok(());
+    }
+    for (site, backend) in acc.deferred.iter().zip(finals) {
+        let block = &mut model.blocks[site.layer];
+        for (nm, lin) in block.linears_mut() {
+            if nm == site.name {
+                // The placeholder reconstructs to the effective weight.
+                let weff = lin.backend.reconstruct();
+                acc.rel_err_sum +=
+                    crate::tensor::stats::rel_error(&weff.data, &backend.reconstruct().data);
+                acc.total_weight_bits += backend.storage_bits();
+                lin.backend = backend;
+                break;
+            }
+        }
+    }
+    stats.codebook_secs = t0.elapsed().as_secs_f64();
+    Ok(())
+}
+
+/// StatsStage: measured/payload bits per weight and mean relative
+/// reconstruction error.
+pub fn stats_stage(model: &Transformer, acc: &Accum, stats: &mut QuantStats) {
+    stats.measured_bits = acc.total_weight_bits as f64 / acc.total_weights.max(1) as f64;
+    let mut payload_weighted = 0f64;
+    let mut wtot = 0usize;
+    for block in &model.blocks {
+        for (_, lin) in block.linears() {
+            let (o, i) = lin.backend.shape();
+            payload_weighted += lin.backend.payload_bits_per_weight() * (o * i) as f64;
+            wtot += o * i;
+        }
+    }
+    stats.payload_bits = payload_weighted / wtot.max(1) as f64;
+    stats.mean_rel_error = acc.rel_err_sum / acc.n_linears.max(1) as f64;
+    stats.n_linears = acc.n_linears;
+}

@@ -1,0 +1,103 @@
+//! **`Quantizer`** — the open method-strategy trait the pipeline driver
+//! runs every lane through, replacing the old closed `QuantMethod`
+//! enum's match arms.
+//!
+//! Lifecycle (one call sequence per model, driven by
+//! [`super::pipeline::quantize_model`]):
+//!
+//! ```text
+//! calibrate(capture)                       once, after activation capture
+//! per (layer, capture-site) group:
+//!   fit_transform(x, weights)              optional learnable transformation
+//!   per linear in the group:
+//!     quantize_group(site, W̃, act_sq)      -> Ready(backend) | Deferred
+//! finalize(stats)                          -> backends for Deferred sites
+//! ```
+//!
+//! The `Deferred` outcome plus the `finalize` hook exist for
+//! cross-layer state: BTC's shared binary codebook must see the sign
+//! vectors of *every* layer before any codebook layer can be built, so
+//! its quantizer accumulates binarized layers during `quantize_group`
+//! and resolves them all at `finalize`. Methods without cross-layer
+//! state simply return `Ready` and inherit the default `finalize`.
+//!
+//! Methods are instantiated by name through
+//! [`super::registry`] (`quant::registry::get("btc-0.8")`), so adding a
+//! lane = one new file with a `Quantizer` impl + one
+//! `registry::register` call.
+
+use anyhow::Result;
+
+use super::pipeline::QuantStats;
+use super::transform::Transform;
+use crate::model::transformer::Capture;
+use crate::model::WeightBackend;
+use crate::tensor::Matrix;
+
+/// Identifies one linear while the pipeline runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SiteId {
+    pub layer: usize,
+    /// Linear slot name ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown").
+    pub name: &'static str,
+}
+
+/// Result of quantizing one linear.
+pub enum QuantOutcome {
+    /// Backend ready to install.
+    Ready(Box<dyn WeightBackend>),
+    /// Resolution deferred to [`Quantizer::finalize`] (cross-layer
+    /// state, e.g. a shared codebook). The driver installs a dense
+    /// placeholder meanwhile and records the site.
+    Deferred,
+}
+
+/// Read-only view of the calibration capture handed to
+/// [`Quantizer::calibrate`].
+pub struct CalibView<'a> {
+    pub capture: &'a Capture,
+    pub n_layers: usize,
+}
+
+/// One quantization method (a Table 1 lane, or anything registered at
+/// runtime). Implementations hold their own per-run state; the driver
+/// constructs a fresh instance per `quantize_model` call.
+pub trait Quantizer {
+    /// Display name for stats/tables (e.g. "BTC-LLM").
+    fn name(&self) -> String;
+
+    /// Identity lane (FP16): the driver skips calibration and
+    /// quantization entirely and ships the dense weights.
+    fn is_identity(&self) -> bool {
+        false
+    }
+
+    /// Called once after calibration capture, before any group.
+    fn calibrate(&mut self, _calib: &CalibView) -> Result<()> {
+        Ok(())
+    }
+
+    /// Fit the learnable input transformation for one capture-site
+    /// group (`x`: captured activations, `ws`: the fp weights sharing
+    /// that input). Default: no transformation.
+    fn fit_transform(&mut self, _x: &Matrix, _ws: &[&Matrix]) -> Result<Option<Transform>> {
+        Ok(None)
+    }
+
+    /// Quantize one linear's effective (already transformed) weight.
+    /// `act_sq` is the per-input-channel mean squared activation in the
+    /// transformed space.
+    fn quantize_group(
+        &mut self,
+        site: &SiteId,
+        weff: &Matrix,
+        act_sq: &[f32],
+    ) -> Result<QuantOutcome>;
+
+    /// Cross-layer finalize: return backends for every `Deferred`
+    /// site, in the order the deferrals were returned. Method-specific
+    /// stats (codebook size/build stats, aux losses) go into `stats`.
+    fn finalize(&mut self, _stats: &mut QuantStats) -> Result<Vec<Box<dyn WeightBackend>>> {
+        Ok(Vec::new())
+    }
+}

@@ -8,6 +8,13 @@
 //! (intro example: 2:4 = 1.25 bits/weight). We report both the nominal
 //! (mask-free) and measured figures.
 
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+use super::quantizer::{QuantOutcome, Quantizer, SiteId};
+use crate::io::wire;
+use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
 
 /// N:M structured sparse binary layer.
@@ -116,6 +123,11 @@ impl NmSparseBinary {
         self.storage_bits() as f64 / (self.rows * self.cols) as f64
     }
 
+    /// Bit cost of one group's combination mask: `ceil(log2 C(M,N))`.
+    pub fn mask_bits(n: usize, m: usize) -> usize {
+        64 - (binom(m as u64, n as u64).saturating_sub(1)).leading_zeros() as usize
+    }
+
     /// Validate the N:M structural invariant.
     pub fn is_valid_nm(&self) -> bool {
         for r in 0..self.rows {
@@ -130,6 +142,94 @@ impl NmSparseBinary {
             }
         }
         true
+    }
+}
+
+impl WeightBackend for NmSparseBinary {
+    fn tag(&self) -> &'static str {
+        "nm-sparse"
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn reconstruct(&self) -> Matrix {
+        NmSparseBinary::reconstruct(self)
+    }
+
+    fn storage_bits(&self) -> usize {
+        NmSparseBinary::storage_bits(self)
+    }
+
+    fn payload_bits_per_weight(&self) -> f64 {
+        (self.n + Self::mask_bits(self.n, self.m)) as f64 / self.m as f64
+    }
+
+    fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
+        wire::w_u32(w, self.rows as u32)?;
+        wire::w_u32(w, self.cols as u32)?;
+        wire::w_u32(w, self.n as u32)?;
+        wire::w_u32(w, self.m as u32)?;
+        wire::w_f32s(w, &self.alpha)?;
+        wire::w_f32s(w, &self.mu)?;
+        let bytes: Vec<u8> = self.tern.iter().map(|&t| t as u8).collect();
+        w.write_all(&bytes)?;
+        Ok(())
+    }
+
+    fn clone_box(&self) -> Box<dyn WeightBackend> {
+        Box::new(self.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// Registered deserializer for the `nm-sparse` tag.
+pub fn read_backend(r: &mut dyn Read, _ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
+    let rows = wire::r_u32(r)? as usize;
+    let cols = wire::r_u32(r)? as usize;
+    let n = wire::r_u32(r)? as usize;
+    let m = wire::r_u32(r)? as usize;
+    wire::check_dims("nm-sparse backend", rows, cols)?;
+    if n == 0 || m == 0 || n > m || m > 1024 {
+        bail!("nm-sparse backend: implausible N:M = {n}:{m}");
+    }
+    let alpha = wire::r_f32s(r, rows)?;
+    let mu = wire::r_f32s(r, rows)?;
+    let mut bytes = vec![0u8; rows * cols];
+    r.read_exact(&mut bytes)?;
+    let tern: Vec<i8> = bytes.into_iter().map(|b| b as i8).collect();
+    if let Some(&t) = tern.iter().find(|&&t| !(-1..=1).contains(&t)) {
+        bail!("nm-sparse backend: ternary value {t} out of {{-1,0,1}}");
+    }
+    Ok(Box::new(NmSparseBinary { rows, cols, n, m, alpha, mu, tern }))
+}
+
+/// The `stbllm` method lane: activation-aware N:M structured sparse
+/// binarization of every linear.
+#[derive(Debug)]
+pub struct StbllmQuantizer {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl Quantizer for StbllmQuantizer {
+    fn name(&self) -> String {
+        "STBLLM".to_string()
+    }
+
+    fn quantize_group(
+        &mut self,
+        _site: &SiteId,
+        weff: &Matrix,
+        act_sq: &[f32],
+    ) -> Result<QuantOutcome> {
+        Ok(QuantOutcome::Ready(Box::new(NmSparseBinary::quantize(
+            weff, act_sq, self.n, self.m,
+        ))))
     }
 }
 

@@ -1,7 +1,20 @@
 //! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
 //! lowered once by `python/compile/aot.py`) and executes them on the
 //! XLA CPU client — python never runs on this path.
+//!
+//! The real client wraps the vendored `xla` crate (xla_extension
+//! 0.5.1), which only exists on the build image. Default builds use a
+//! stub with the same API whose constructor fails at runtime, so the
+//! crate compiles anywhere; enable the `pjrt` feature on the image
+//! (after adding the vendored `xla` path dependency) for the real
+//! thing. Parity tests skip when artifacts are missing, so the stub
+//! never breaks `cargo test`.
 
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use pjrt::{PjrtRuntime, TensorArg};

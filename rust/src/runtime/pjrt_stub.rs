@@ -1,0 +1,51 @@
+//! API-compatible stand-in for [`super::pjrt`] used when the crate is
+//! built without the `pjrt` feature (the vendored `xla` crate only
+//! exists on the build image). Construction fails with a clear error;
+//! everything downstream (CLI `parity`, hlo_parity example, runtime
+//! parity tests) already handles that by skipping.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// A typed input tensor for an AOT executable.
+#[derive(Debug, Clone)]
+pub enum TensorArg {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+/// Stub PJRT client: carries the same API as the real runtime but can
+/// never be constructed.
+pub struct PjrtRuntime {
+    _private: (),
+}
+
+impl PjrtRuntime {
+    /// Always fails: this build has no XLA client.
+    pub fn cpu(_artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (the vendored xla_extension crate only exists on the build image)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Load + compile an HLO text artifact (cached).
+    pub fn load(&mut self, _name: &str) -> Result<()> {
+        bail!("PJRT runtime unavailable (pjrt feature disabled)")
+    }
+
+    /// Execute an artifact.
+    pub fn run_f32(&mut self, _name: &str, _args: &[TensorArg]) -> Result<Vec<f32>> {
+        bail!("PJRT runtime unavailable (pjrt feature disabled)")
+    }
+
+    /// Names of the loaded executables (diagnostics).
+    pub fn loaded(&self) -> Vec<String> {
+        Vec::new()
+    }
+}

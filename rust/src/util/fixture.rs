@@ -1,0 +1,76 @@
+//! Hermetic tiny-model fixtures shared by unit tests, integration
+//! tests, and examples (no `make artifacts` needed). Not part of the
+//! library's supported API surface.
+
+use std::collections::BTreeMap;
+
+use crate::data::corpus;
+use crate::io::weights::{ModelConfig, RawModel};
+use crate::tensor::Matrix;
+use crate::util::rng::Rng;
+
+/// A small random TinyLM-shaped model (vocab 128, d_model 16, 2
+/// layers) plus a synthetic calibration/eval corpus.
+pub fn tiny_raw_model(seed: u64) -> (RawModel, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let cfg = ModelConfig {
+        vocab: 128,
+        d_model: 16,
+        n_layer: 2,
+        n_head: 2,
+        n_kv_head: 2,
+        d_ff: 24,
+        max_seq: 64,
+        rope_theta: 10000.0,
+    };
+    let mut tensors = BTreeMap::new();
+    fn add(
+        tensors: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+        name: String,
+        rows: usize,
+        cols: usize,
+        rng: &mut Rng,
+    ) {
+        let m = Matrix::randn(rows, cols, rng).scale(0.2);
+        tensors.insert(name, (vec![rows, cols], m.data));
+    }
+    add(&mut tensors, "emb".into(), cfg.vocab, cfg.d_model, &mut rng);
+    tensors.insert("lnf".into(), (vec![cfg.d_model], vec![1.0; cfg.d_model]));
+    for i in 0..cfg.n_layer {
+        tensors.insert(format!("l{i}.ln1"), (vec![cfg.d_model], vec![1.0; cfg.d_model]));
+        tensors.insert(format!("l{i}.ln2"), (vec![cfg.d_model], vec![1.0; cfg.d_model]));
+        add(&mut tensors, format!("l{i}.wq"), cfg.d_model, cfg.d_model, &mut rng);
+        add(&mut tensors, format!("l{i}.wk"), cfg.kv_dim(), cfg.d_model, &mut rng);
+        add(&mut tensors, format!("l{i}.wv"), cfg.kv_dim(), cfg.d_model, &mut rng);
+        add(&mut tensors, format!("l{i}.wo"), cfg.d_model, cfg.d_model, &mut rng);
+        add(&mut tensors, format!("l{i}.wgate"), cfg.d_ff, cfg.d_model, &mut rng);
+        add(&mut tensors, format!("l{i}.wup"), cfg.d_ff, cfg.d_model, &mut rng);
+        add(&mut tensors, format!("l{i}.wdown"), cfg.d_model, cfg.d_ff, &mut rng);
+    }
+    let raw = RawModel { config: cfg, tensors };
+    (raw, corpus::generate(4000, 1).into_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Transformer;
+
+    #[test]
+    fn fixture_builds_a_runnable_model() {
+        let (raw, corpus) = tiny_raw_model(9);
+        assert!(!corpus.is_empty());
+        let m = Transformer::from_raw(&raw).unwrap();
+        let logits = m.forward(&[1, 2, 3]);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fixture_is_deterministic_per_seed() {
+        let (a, _) = tiny_raw_model(9);
+        let (b, _) = tiny_raw_model(9);
+        assert_eq!(a.tensors["emb"].1, b.tensors["emb"].1);
+        let (c, _) = tiny_raw_model(10);
+        assert_ne!(a.tensors["emb"].1, c.tensors["emb"].1);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod argparse;
 pub mod benchkit;
+pub mod fixture;
 pub mod log;
 pub mod proptest;
 pub mod rng;

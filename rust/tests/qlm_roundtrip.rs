@@ -1,0 +1,71 @@
+//! Integration: the QLM1 v2 container round-trips **every** backend
+//! kind — quantize each lane on a hermetic fixture, save, reload, and
+//! require bit-identical reconstructed weights and forward logits.
+//! (Hermetic: no artifacts needed.)
+
+use btc_llm::data::corpus;
+use btc_llm::io::qweights;
+use btc_llm::model::Transformer;
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::fixture::tiny_raw_model;
+
+fn quick(cfg: QuantConfig) -> QuantConfig {
+    QuantConfig {
+        calib_seqs: 4,
+        calib_seq_len: 24,
+        calib_rows: 48,
+        transform_outer: 2,
+        arb_iters: 4,
+        v: 8,
+        ..cfg
+    }
+}
+
+#[test]
+fn qlm_roundtrips_every_backend_kind_bit_identically() {
+    let (raw, text) = tiny_raw_model(9);
+    let dir = std::env::temp_dir().join("btc_qlm_roundtrip_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let toks: Vec<u16> = corpus::generate(200, 3).bytes().take(16).map(|b| b as u16).collect();
+
+    let lanes: [(QuantConfig, &str); 6] = [
+        (QuantConfig::fp16(), "dense"),
+        (QuantConfig::naive(), "binary"),
+        (QuantConfig::arb_llm(), "residual"),
+        (QuantConfig::stbllm(0.8), "nm-sparse"),
+        (QuantConfig::fpvq(2.0), "fp-vq"),
+        (QuantConfig::btc(0.8), "codebook"),
+    ];
+    for (cfg, expect_tag) in lanes {
+        let qm = quantize_model(&raw, &text, &quick(cfg)).unwrap();
+        assert_eq!(
+            qm.model.blocks[0].wq.backend_name(),
+            expect_tag,
+            "{} produced an unexpected backend",
+            qm.stats.method
+        );
+        let path = dir.join(format!("{expect_tag}.qlm"));
+        qweights::save(&path, &qm.model).unwrap();
+
+        let mut reloaded = Transformer::from_raw(&raw).unwrap();
+        qweights::load_into(&path, &mut reloaded).unwrap();
+
+        // Every linear: reconstructed weights must be bit-identical.
+        for (ba, bb) in qm.model.blocks.iter().zip(reloaded.blocks.iter()) {
+            for ((name, la), (_, lb)) in ba.linears().iter().zip(bb.linears().iter()) {
+                assert_eq!(la.backend.tag(), lb.backend.tag(), "{expect_tag}/{name}");
+                assert_eq!(
+                    la.backend.reconstruct().data,
+                    lb.backend.reconstruct().data,
+                    "{expect_tag}/{name}: reconstruction not bit-identical"
+                );
+            }
+        }
+
+        // Forward logits: bit-identical through the same eval path.
+        reloaded.cache_dense_all();
+        let a = qm.model.forward(&toks);
+        let b = reloaded.forward(&toks);
+        assert_eq!(a.data, b.data, "{expect_tag}: logits not bit-identical after reload");
+    }
+}
