@@ -12,7 +12,8 @@ use btc_llm::engine::{dense, BinaryGemmEngine, LutGemmEngine};
 use btc_llm::quant::binarize::BinaryLayer;
 use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
 use btc_llm::tensor::Matrix;
-use btc_llm::util::benchkit::{bench_for_ms, benchline, black_box, Table};
+use btc_llm::util::benchkit::{bench_for_ms, benchline, black_box, JsonReport, Table};
+use btc_llm::util::parallel;
 use btc_llm::util::rng::Rng;
 use std::sync::Arc;
 
@@ -34,6 +35,8 @@ fn main() -> anyhow::Result<()> {
 
     let budget = if quick { 150 } else { 500 };
     let ms: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16, 32] };
+    let threads = parallel::threads();
+    let mut report = JsonReport::new("fig5");
     let mut t = Table::new(&["M", "fp32 GEMM", "dequant+GEMM", "W1A16 sign", "LUT-GEMM", "LUT vs dequant"]);
     for &m in ms {
         let x = Matrix::randn(m, n, &mut rng);
@@ -58,14 +61,18 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}ms", lg.mean_ms()),
             format!("{speedup:.2}x"),
         ]);
-        benchline("fig5", &[("m", m.to_string()),
-                            ("fp_ms", format!("{:.4}", fp.mean_ms())),
-                            ("dequant_ms", format!("{:.4}", dq.mean_ms())),
-                            ("sign_ms", format!("{:.4}", sg.mean_ms())),
-                            ("lut_ms", format!("{:.4}", lg.mean_ms()))]);
+        let kv = [("m", m.to_string()),
+                  ("fp_ms", format!("{:.4}", fp.mean_ms())),
+                  ("dequant_ms", format!("{:.4}", dq.mean_ms())),
+                  ("sign_ms", format!("{:.4}", sg.mean_ms())),
+                  ("lut_ms", format!("{:.4}", lg.mean_ms())),
+                  ("threads", threads.to_string())];
+        benchline("fig5", &kv);
+        report.row(&kv);
     }
-    println!("\nFigure 5 (kernel latency, {o}x{n}, v={v}, c={c})");
+    println!("\nFigure 5 (kernel latency, {o}x{n}, v={v}, c={c}, {threads} threads)");
     t.print();
+    let _ = report.write_if_enabled();
 
     // Memory panel.
     let mut mt = Table::new(&["format", "weight bytes", "vs fp32"]);

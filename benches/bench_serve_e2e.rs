@@ -1,59 +1,117 @@
 //! §5.3 latency / end-to-end serving — the coordinator with dynamic
 //! batching replaying a request trace over three weight backends:
 //! FP16 dense, W1A16 binary (sign-GEMM engine) and BTC sub-1-bit
-//! (LUT-GEMM engine). Reports tokens/s and latency percentiles.
+//! (LUT-GEMM engine). Sweeps the batch size (B=1/4/16) and reports
+//! tokens/s, latency percentiles and the prefill/decode µs-per-token
+//! split.
+//!
+//! Hermetic: when the trained artifacts are absent (`make artifacts`
+//! not run — e.g. the CI perf-smoke job) the bench falls back to a
+//! synthetic serving-shaped model so the numbers stay comparable
+//! run-over-run.
 
 use std::time::Duration;
 
 use btc_llm::benchsuite::{load_workload, quick_mode};
 use btc_llm::coordinator::Server;
 use btc_llm::data::{corpus, ByteTokenizer};
+use btc_llm::io::weights::{ModelConfig, RawModel};
 use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
-use btc_llm::util::benchkit::{benchline, Table};
+use btc_llm::util::benchkit::{benchline, JsonReport, Table};
+use btc_llm::util::fixture::synth_raw_model;
+use btc_llm::util::parallel;
+
+fn workload() -> (RawModel, Vec<u8>, &'static str) {
+    match load_workload("tinylm_s") {
+        Ok(w) => (w.raw, w.corpus, "tinylm_s"),
+        Err(_) => {
+            let cfg = ModelConfig {
+                vocab: 192,
+                d_model: 96,
+                n_layer: 2,
+                n_head: 6,
+                n_kv_head: 3,
+                d_ff: 192,
+                max_seq: 160,
+                rope_theta: 10000.0,
+            };
+            let (raw, corpus) = synth_raw_model(11, cfg);
+            (raw, corpus, "synthetic")
+        }
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let quick = quick_mode();
-    let w = load_workload("tinylm_s")?;
-    let n_requests = if quick { 8 } else { 32 };
+    let (raw, corpus_bytes, wl_name) = workload();
     let max_new = if quick { 16 } else { 32 };
+    let batches: &[usize] = if quick { &[1, 4] } else { &[1, 4, 16] };
     let tok = ByteTokenizer::default();
-    let prompts = corpus::prompts(n_requests, 7);
+    let threads = parallel::threads();
 
     let lanes = [
         ("FP16", QuantConfig::fp16()),
         ("W1A16 binary", QuantConfig::naive()),
         ("BTC 0.8 (LUT)", QuantConfig::btc(0.8)),
     ];
-    let mut t = Table::new(&["backend", "tokens/s", "p50 lat", "p99 lat", "mean batch"]);
+    let mut t = Table::new(&[
+        "backend", "B", "tokens/s", "p50 lat", "p99 lat", "mean batch", "prefill us/tok", "decode us/tok",
+    ]);
+    let mut report = JsonReport::new("serve");
     for (label, cfg) in lanes {
-        let mut qm = quantize_model(&w.raw, &w.corpus, &cfg)?;
+        let mut qm = quantize_model(&raw, &corpus_bytes, &cfg)?;
+        // Prepare engines once per lane; the per-batch-size clones
+        // carry them, so Server::start's ensure_engines is a no-op.
         qm.model.prepare_engines();
-        let server = Server::start(qm.model, 8, Duration::from_millis(2), 7);
-        let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = prompts
-            .iter()
-            .map(|p| server.submit(tok.encode(p), max_new, 0.0))
-            .collect();
-        let mut total_tokens = 0usize;
-        for rx in rxs {
-            let r = rx.recv().expect("response");
-            total_tokens += r.tokens.len() - r.prompt_len;
+        for &bsz in batches {
+            let n_requests = bsz * if quick { 2 } else { 4 };
+            let prompts = corpus::prompts(n_requests, 7);
+            let server = Server::start(qm.model.clone(), bsz, Duration::from_millis(2), 7);
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = prompts
+                .iter()
+                .map(|p| server.submit(tok.encode(p), max_new, 0.0))
+                .collect();
+            let mut total_tokens = 0usize;
+            for rx in rxs {
+                let r = rx.recv().expect("response");
+                total_tokens += r.tokens.len() - r.prompt_len;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let tps = total_tokens as f64 / wall;
+            let m = &server.metrics;
+            let (pf_us, dc_us) = (m.prefill_us_per_token(), m.decode_us_per_token());
+            t.row(&[
+                label.to_string(),
+                bsz.to_string(),
+                format!("{tps:.1}"),
+                format!("{:.1}ms", m.latency_percentile_us(0.5) as f64 / 1e3),
+                format!("{:.1}ms", m.latency_percentile_us(0.99) as f64 / 1e3),
+                format!("{:.2}", m.mean_batch_size()),
+                format!("{pf_us:.0}"),
+                format!("{dc_us:.0}"),
+            ]);
+            let kv = [
+                ("backend", label.replace(' ', "_")),
+                ("batch", bsz.to_string()),
+                ("tokens_per_s", format!("{tps:.2}")),
+                ("p50_ms", format!("{:.2}", m.latency_percentile_us(0.5) as f64 / 1e3)),
+                ("p99_ms", format!("{:.2}", m.latency_percentile_us(0.99) as f64 / 1e3)),
+                ("prefill_us_per_tok", format!("{pf_us:.1}")),
+                ("decode_us_per_tok", format!("{dc_us:.1}")),
+                ("threads", threads.to_string()),
+                ("workload", wl_name.to_string()),
+            ];
+            benchline("serve_e2e", &kv);
+            report.row(&kv);
+            server.shutdown();
         }
-        let wall = t0.elapsed().as_secs_f64();
-        let tps = total_tokens as f64 / wall;
-        t.row(&[
-            label.to_string(),
-            format!("{tps:.1}"),
-            format!("{:.1}ms", server.metrics.latency_percentile_us(0.5) as f64 / 1e3),
-            format!("{:.1}ms", server.metrics.latency_percentile_us(0.99) as f64 / 1e3),
-            format!("{:.2}", server.metrics.mean_batch_size()),
-        ]);
-        benchline("serve_e2e", &[("backend", label.replace(' ', "_")),
-                                 ("tokens_per_s", format!("{tps:.2}"))]);
-        server.shutdown();
     }
-    println!("\nEnd-to-end serving ({} requests, <= {max_new} new tokens each)", n_requests);
+    println!(
+        "\nEnd-to-end serving ({wl_name}, <= {max_new} new tokens/request, {threads} threads)"
+    );
     t.print();
+    let _ = report.write_if_enabled();
     println!("\nNote: at TinyLM widths the decode hot path is attention + norm overhead;");
     println!("the weight-GEMM speedup shows at MLP shapes — see bench_fig5_latency.");
     Ok(())

@@ -3,7 +3,7 @@
 //! from the tinywiki prompt generator, and report latency/throughput.
 //!
 //! ```bash
-//! cargo run --release --example serve -- --model tinylm_s --bits 0.8 --requests 24
+//! cargo run --release --example serve -- --model tinylm_s --bits 0.8 --requests 24 --threads 4
 //! ```
 
 use std::time::Duration;
@@ -21,17 +21,20 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.get_usize("requests", 24);
     let max_new = args.get_usize("max-new-tokens", 32);
     let max_batch = args.get_usize("max-batch", 8);
+    let threads = args.get_usize("threads", 0); // 0 = auto
 
     let w = load_workload(&model)?;
     println!("quantizing {model} at {bits} bits for serving…");
-    let mut qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::btc(bits))?;
-    qm.model.prepare_engines(); // sign-GEMM / LUT-GEMM engines
+    let qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::btc(bits))?;
     println!(
         "ready: {} ({} linears, payload {:.2} bits/weight)",
         qm.stats.method, qm.stats.n_linears, qm.stats.payload_bits
     );
 
-    let server = Server::start(qm.model, max_batch, Duration::from_millis(2), 7);
+    // Server::start prepares the sign-GEMM / LUT-GEMM engines itself.
+    let server =
+        Server::start_with_threads(qm.model, max_batch, Duration::from_millis(2), 7, threads);
+    println!("serving with {} kernel thread(s)", server.threads);
     let tok = ByteTokenizer::default();
     let prompts = corpus::prompts(n_requests, 11);
     let t0 = std::time::Instant::now();

@@ -25,6 +25,9 @@ pub struct ServeConfig {
     /// Greedy (0) vs sampled decoding temperature.
     pub temperature: f64,
     pub seed: u64,
+    /// Kernel worker threads (0 = auto: `PALLAS_THREADS` env, else the
+    /// hardware parallelism). Validated/clamped at server start.
+    pub threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -38,6 +41,7 @@ impl Default for ServeConfig {
             max_new_tokens: 32,
             temperature: 0.0,
             seed: 42,
+            threads: 0,
         }
     }
 }
@@ -55,6 +59,7 @@ impl ServeConfig {
             max_new_tokens: doc.get_int("serve.max_new_tokens", d.max_new_tokens as i64) as usize,
             temperature: doc.get_float("serve.temperature", d.temperature),
             seed: doc.get_int("serve.seed", d.seed as i64) as u64,
+            threads: doc.get_int("serve.threads", d.threads as i64).max(0) as usize,
         }
     }
 
@@ -78,7 +83,7 @@ mod tests {
     #[test]
     fn overrides_from_toml() {
         let doc = parse(
-            "[serve]\nmodel = \"tinylm_m\"\nmax_batch = 4\n[quant]\nbackend = \"binary\"\nbits = 1.0\n",
+            "[serve]\nmodel = \"tinylm_m\"\nmax_batch = 4\nthreads = 3\n[quant]\nbackend = \"binary\"\nbits = 1.0\n",
         )
         .unwrap();
         let c = ServeConfig::from_doc(&doc);
@@ -86,5 +91,12 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.backend, "binary");
         assert_eq!(c.bits, 1.0);
+        assert_eq!(c.threads, 3);
+    }
+
+    #[test]
+    fn threads_defaults_to_auto() {
+        let c = ServeConfig::from_doc(&parse("").unwrap());
+        assert_eq!(c.threads, 0);
     }
 }

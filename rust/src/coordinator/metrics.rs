@@ -12,6 +12,12 @@ pub struct Metrics {
     pub tokens_generated: AtomicU64,
     pub batches: AtomicU64,
     pub batch_size_sum: AtomicU64,
+    /// Per-phase accounting: prompt tokens prefilled / decode forwards
+    /// run, and the wall time spent in each phase.
+    pub prefill_tokens: AtomicU64,
+    pub prefill_us: AtomicU64,
+    pub decode_tokens: AtomicU64,
+    pub decode_us: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -35,6 +41,36 @@ impl Metrics {
         self.latencies_us.lock().unwrap().push(latency_us);
     }
 
+    /// `tokens` prompt tokens prefilled in `us` wall-microseconds.
+    pub fn record_prefill(&self, tokens: usize, us: u64) {
+        self.prefill_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.prefill_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// One decode round producing `tokens` next-token logits in `us`.
+    pub fn record_decode(&self, tokens: usize, us: u64) {
+        self.decode_tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.decode_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Mean prefill cost per prompt token (µs); 0 before any prefill.
+    pub fn prefill_us_per_token(&self) -> f64 {
+        let t = self.prefill_tokens.load(Ordering::Relaxed);
+        if t == 0 {
+            return 0.0;
+        }
+        self.prefill_us.load(Ordering::Relaxed) as f64 / t as f64
+    }
+
+    /// Mean decode cost per generated token (µs); 0 before any decode.
+    pub fn decode_us_per_token(&self) -> f64 {
+        let t = self.decode_tokens.load(Ordering::Relaxed);
+        if t == 0 {
+            return 0.0;
+        }
+        self.decode_us.load(Ordering::Relaxed) as f64 / t as f64
+    }
+
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
         let mut l = self.latencies_us.lock().unwrap().clone();
         if l.is_empty() {
@@ -54,7 +90,8 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "requests={} completed={} tokens={} batches={} mean_batch={:.2} p50={}us p99={}us",
+            "requests={} completed={} tokens={} batches={} mean_batch={:.2} p50={}us p99={}us \
+             prefill={:.0}us/tok decode={:.0}us/tok",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -62,6 +99,8 @@ impl Metrics {
             self.mean_batch_size(),
             self.latency_percentile_us(0.5),
             self.latency_percentile_us(0.99),
+            self.prefill_us_per_token(),
+            self.decode_us_per_token(),
         )
     }
 }
@@ -89,5 +128,18 @@ mod tests {
     #[test]
     fn empty_percentile_is_zero() {
         assert_eq!(Metrics::new().latency_percentile_us(0.5), 0);
+    }
+
+    #[test]
+    fn per_phase_rates() {
+        let m = Metrics::new();
+        assert_eq!(m.prefill_us_per_token(), 0.0);
+        assert_eq!(m.decode_us_per_token(), 0.0);
+        m.record_prefill(10, 500);
+        m.record_prefill(10, 300);
+        m.record_decode(4, 100);
+        assert_eq!(m.prefill_us_per_token(), 40.0);
+        assert_eq!(m.decode_us_per_token(), 25.0);
+        assert!(m.summary().contains("prefill=40us/tok"));
     }
 }

@@ -4,9 +4,12 @@
 //! on per-request channels.
 //!
 //! Decode is greedy (temperature 0) or softmax-sampled. Prefill runs
-//! per request through the incremental path (the KV cache); decode
-//! steps for the batch are interleaved round-robin so short requests
-//! retire early (continuous batching at token granularity).
+//! each prompt through the batched full-sequence path (one (s, d)
+//! GEMM per linear, K/V appended to the request's cache); decode
+//! rounds then stack the active requests' next tokens into one fused
+//! [`Transformer::decode_batch`] forward per round, compacting the
+//! active set as requests retire (continuous batching at token
+//! granularity with no bubbles).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -15,7 +18,9 @@ use std::time::{Duration, Instant};
 
 use super::batcher::collect_batch;
 use super::metrics::Metrics;
+use crate::model::kvcache::KvCache;
 use crate::model::Transformer;
+use crate::util::parallel;
 use crate::util::rng::Rng;
 
 /// A generation request.
@@ -40,11 +45,35 @@ pub struct Server {
     tx: Option<Sender<GenRequest>>,
     worker: Option<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    /// Effective worker-thread count the kernels run with.
+    pub threads: usize,
 }
 
 impl Server {
-    /// Spawn the worker thread owning `model`.
+    /// Spawn the worker thread owning `model`, with the kernel thread
+    /// count resolved automatically (`PALLAS_THREADS` env, else the
+    /// hardware parallelism).
     pub fn start(model: Transformer, max_batch: usize, batch_wait: Duration, seed: u64) -> Server {
+        Self::start_with_threads(model, max_batch, batch_wait, seed, 0)
+    }
+
+    /// [`Server::start`] with an explicit kernel thread count
+    /// (`0` = keep the current global setting, resolving it if unset).
+    /// The count is validated/clamped, and serving engines are
+    /// prepared on any linear that lacks one, so callers can hand over
+    /// a freshly-quantized model directly.
+    pub fn start_with_threads(
+        mut model: Transformer,
+        max_batch: usize,
+        batch_wait: Duration,
+        seed: u64,
+        threads: usize,
+    ) -> Server {
+        // 0 must not clobber a count a library user already set via
+        // `parallel::set_threads` — only an explicit value overrides.
+        let threads =
+            if threads == 0 { parallel::threads() } else { parallel::set_threads(threads) };
+        model.ensure_engines();
         let metrics = Arc::new(Metrics::new());
         let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = channel();
         let m = metrics.clone();
@@ -59,7 +88,7 @@ impl Server {
                 run_batch(&model, batch, &m, &mut rng);
             }
         });
-        Server { tx: Some(tx), worker: Some(worker), metrics }
+        Server { tx: Some(tx), worker: Some(worker), metrics, threads }
     }
 
     /// Submit a request; returns the response receiver.
@@ -92,20 +121,29 @@ impl Drop for Server {
     }
 }
 
+/// One in-flight request in the decode loop. Caches live in a parallel
+/// `Vec<KvCache>` so [`Transformer::decode_batch`] sees a contiguous
+/// slice.
 struct Active {
     req: GenRequest,
-    cache: crate::model::kvcache::KvCache,
     tokens: Vec<u16>,
     started: Instant,
-    done: bool,
+    /// Next token to feed (sampled from the last logits).
+    next: u16,
 }
 
 fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
+    if logits.is_empty() {
+        return 0;
+    }
     if temperature <= 0.0 {
+        // NaN-safe greedy: NaN logits are skipped (a NaN must never
+        // panic the worker that owns the model), ties break low.
         return logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .filter(|(_, v)| !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i as u16)
             .unwrap_or(0);
     }
@@ -123,58 +161,63 @@ fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
     (probs.len() - 1) as u16
 }
 
-fn run_batch(model: &Transformer, batch: Vec<GenRequest>, metrics: &Metrics, rng: &mut Rng) {
-    let mut active: Vec<Active> = batch
-        .into_iter()
-        .map(|req| {
-            let cap = req.prompt.len() + req.max_new_tokens + 1;
-            Active {
-                cache: model.new_cache(cap),
-                tokens: req.prompt.clone(),
-                started: Instant::now(),
-                done: false,
-                req,
-            }
-        })
-        .collect();
+fn finish(a: Active, metrics: &Metrics) {
+    let produced = a.tokens.len() - a.req.prompt.len();
+    let latency = a.started.elapsed();
+    metrics.record_completion(produced, latency.as_micros() as u64);
+    let _ = a.req.respond.send(GenResponse {
+        tokens: a.tokens,
+        prompt_len: a.req.prompt.len(),
+        latency,
+    });
+}
 
-    // Prefill (per request; the engine amortizes within the request).
-    let mut next: Vec<u16> = Vec::with_capacity(active.len());
-    for a in active.iter_mut() {
-        let mut logits = Vec::new();
-        for &t in &a.req.prompt {
-            logits = model.decode_step(t, &mut a.cache);
-        }
-        next.push(sample(&logits, a.req.temperature, rng));
+fn run_batch(model: &Transformer, batch: Vec<GenRequest>, metrics: &Metrics, rng: &mut Rng) {
+    let mut active: Vec<Active> = Vec::with_capacity(batch.len());
+    let mut caches: Vec<KvCache> = Vec::with_capacity(batch.len());
+
+    // Batched prefill: the full prompt in one sequence-level forward
+    // per request (one GEMM per linear), K/V appended as it goes.
+    // Latency clocks start at batch admission (queueing behind other
+    // prefills in the batch counts, as it always did).
+    let admitted = Instant::now();
+    for req in batch {
+        let cap = req.prompt.len() + req.max_new_tokens + 1;
+        let mut cache = model.new_cache(cap);
+        let t0 = Instant::now();
+        let logits = model.prefill(&req.prompt, &mut cache);
+        metrics.record_prefill(req.prompt.len(), t0.elapsed().as_micros() as u64);
+        let next = sample(&logits, req.temperature, rng);
+        active.push(Active { tokens: req.prompt.clone(), started: admitted, next, req });
+        caches.push(cache);
     }
 
-    // Interleaved decode: one token per active request per round.
+    // Fused decode: each round stacks every active request's token
+    // into one (B, d) forward. Retired requests are swap-compacted out
+    // (with their caches) so later rounds carry no bubbles.
     loop {
-        let mut any = false;
-        for (i, a) in active.iter_mut().enumerate() {
-            if a.done {
-                continue;
-            }
-            a.tokens.push(next[i]);
+        let mut i = 0;
+        while i < active.len() {
+            let a = &mut active[i];
+            a.tokens.push(a.next);
             let produced = a.tokens.len() - a.req.prompt.len();
             // '\n' ends a "sentence" in the tinywiki world.
-            if produced >= a.req.max_new_tokens || next[i] == b'\n' as u16 {
-                a.done = true;
-                let latency = a.started.elapsed();
-                metrics.record_completion(produced, latency.as_micros() as u64);
-                let _ = a.req.respond.send(GenResponse {
-                    tokens: a.tokens.clone(),
-                    prompt_len: a.req.prompt.len(),
-                    latency,
-                });
-                continue;
+            if produced >= a.req.max_new_tokens || a.next == b'\n' as u16 {
+                finish(active.swap_remove(i), metrics);
+                caches.swap_remove(i);
+            } else {
+                i += 1;
             }
-            let logits = model.decode_step(next[i], &mut a.cache);
-            next[i] = sample(&logits, a.req.temperature, rng);
-            any = true;
         }
-        if !any {
+        if active.is_empty() {
             break;
+        }
+        let toks: Vec<u16> = active.iter().map(|a| a.next).collect();
+        let t0 = Instant::now();
+        let logits = model.decode_batch(&toks, &mut caches);
+        metrics.record_decode(toks.len(), t0.elapsed().as_micros() as u64);
+        for (b, a) in active.iter_mut().enumerate() {
+            a.next = sample(logits.row(b), a.req.temperature, rng);
         }
     }
 }
@@ -221,9 +264,73 @@ mod tests {
     }
 
     #[test]
+    fn batched_equals_single_request_greedy() {
+        // The fused decode path must generate exactly what each request
+        // would get served alone (greedy; per-request determinism).
+        let m = tiny_model(9, 4);
+        let prompts: Vec<Vec<u16>> = vec![vec![5, 6, 7], vec![1, 2], vec![9, 3, 4, 8], vec![12]];
+        let solo: Vec<Vec<u16>> = prompts
+            .iter()
+            .map(|p| {
+                let server = Server::start(m.clone(), 1, Duration::from_millis(1), 7);
+                let rx = server.submit(p.clone(), 6, 0.0);
+                let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                server.shutdown();
+                r.tokens
+            })
+            .collect();
+        let server = Server::start(m.clone(), 4, Duration::from_millis(50), 7);
+        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+        for (rx, expect) in rxs.into_iter().zip(solo) {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.tokens, expect);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn records_per_phase_timing() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let server = Server::start(tiny_model(4, 4), 2, Duration::from_millis(1), 7);
+        let rx = server.submit(vec![1, 2, 3, 4], 4, 0.0);
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let produced = resp.tokens.len() - resp.prompt_len;
+        let m = &server.metrics;
+        assert_eq!(m.prefill_tokens.load(Relaxed), 4, "all prompt tokens prefilled");
+        // Token 1 comes from the prefill logits; each further token is
+        // one decode-round participation.
+        assert_eq!(m.decode_tokens.load(Relaxed) as usize, produced - 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn start_validates_thread_count() {
+        let server =
+            Server::start_with_threads(tiny_model(5, 4), 1, Duration::from_millis(1), 7, 1_000_000);
+        assert!(server.threads >= 1 && server.threads <= crate::util::parallel::MAX_THREADS);
+        let rx = server.submit(vec![1, 2], 3, 0.0);
+        assert!(rx.recv_timeout(Duration::from_secs(30)).is_ok());
+        server.shutdown();
+        // Restore auto so concurrently-running tests don't inherit the
+        // clamped-but-huge count for the rest of the process.
+        crate::util::parallel::set_threads(0);
+    }
+
+    #[test]
     fn sampling_respects_temperature_zero() {
         let mut rng = Rng::new(1);
         let logits = vec![0.0f32, 5.0, 1.0];
         assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn greedy_sampling_survives_nan_logits() {
+        let mut rng = Rng::new(1);
+        // NaN must neither panic nor be selected.
+        assert_eq!(sample(&[1.0, f32::NAN, 5.0, f32::NAN], 0.0, &mut rng), 2);
+        // All-NaN and empty degenerate to token 0.
+        assert_eq!(sample(&[f32::NAN, f32::NAN], 0.0, &mut rng), 0);
+        assert_eq!(sample(&[], 0.0, &mut rng), 0);
+        assert_eq!(sample(&[], 1.0, &mut rng), 0);
     }
 }

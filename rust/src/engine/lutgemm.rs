@@ -16,6 +16,7 @@
 
 use crate::quant::codebook::CodebookLayer;
 use crate::tensor::Matrix;
+use crate::util::parallel;
 
 /// Largest divisor of `v` that is <= 8 (the Stage-I segment width μ).
 pub fn pick_mu(v: usize) -> usize {
@@ -27,6 +28,11 @@ pub fn pick_mu(v: usize) -> usize {
     1
 }
 
+/// Output-row tile width of the gather stage: a tile of rows walks the
+/// blocks together so each block's `cblut` row stays hot in cache
+/// across the whole tile.
+const GATHER_TILE: usize = 32;
+
 /// Prepared LUT-GEMM engine for one codebook-compressed layer.
 #[derive(Debug, Clone)]
 pub struct LutGemmEngine {
@@ -37,7 +43,10 @@ pub struct LutGemmEngine {
     pub segs: usize,
     pub nb: usize,
     pub c: usize,
-    idx: Vec<u32>,
+    /// Centroid indices stored block-major (`idx_t[j*out + r]`): the
+    /// gather walks a tile of output rows per block, so this transpose
+    /// makes the per-block index reads contiguous.
+    idx_t: Vec<u32>,
     /// Codebook keys, c x segs, each a μ-bit pattern.
     keys: Vec<u16>,
     alpha: Vec<f32>,
@@ -45,6 +54,15 @@ pub struct LutGemmEngine {
     /// Per-block group id (block-aligned column groups).
     block_group: Vec<u16>,
     n_groups: usize,
+}
+
+/// Per-thread activation scratch: padded row, Stage-I tables, Stage-II
+/// codebook LUT. `xpad`'s tail past `cols` is zeroed once here and
+/// never dirtied (rows only overwrite `[..cols]`).
+struct Scratch {
+    xpad: Vec<f32>,
+    lut: Vec<f32>,
+    cblut: Vec<f32>,
 }
 
 impl LutGemmEngine {
@@ -75,15 +93,23 @@ impl LutGemmEngine {
                 keys[k * segs + p] = ((w >> (p * mu_bits)) & ((1u64 << mu_bits) - 1)) as u16;
             }
         }
+        // Transpose indices to block-major for the tiled gather.
+        let out = layer.rows;
+        let mut idx_t = vec![0u32; layer.idx.len()];
+        for r in 0..out {
+            for j in 0..nb {
+                idx_t[j * out + r] = layer.idx[r * nb + j];
+            }
+        }
         Some(LutGemmEngine {
-            out: layer.rows,
+            out,
             cols: layer.cols,
             v,
             mu_bits,
             segs,
             nb,
             c,
-            idx: layer.idx.clone(),
+            idx_t,
             keys,
             alpha: layer.alpha.clone(),
             mu: layer.mu.clone(),
@@ -92,97 +118,149 @@ impl LutGemmEngine {
         })
     }
 
+    fn scratch(&self) -> Scratch {
+        Scratch {
+            xpad: vec![0f32; self.nb * self.v],
+            lut: vec![0f32; self.nb * self.segs * (1usize << self.mu_bits)],
+            cblut: vec![0f32; self.nb * self.c],
+        }
+    }
+
     /// y = x @ Ŵᵀ via lookup + accumulate. x: (m, cols) -> (m, out).
+    ///
+    /// Thread-parallel: batched inputs (prefill / fused batch decode)
+    /// split *input* rows across workers, each with its own scratch;
+    /// a single row (GEMV decode) builds its tables once and splits
+    /// the gather's output-row ranges instead. Both splits leave every
+    /// output value's accumulation order unchanged (bit-identical to
+    /// the serial path).
     pub fn forward(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.cols);
         let m = x.rows;
-        let (v, mu_b, segs, nb, c) = (self.v, self.mu_bits, self.segs, self.nb, self.c);
-        let npat = 1usize << mu_b;
-        let mut y = Matrix::zeros(m, self.out);
-        // Scratch reused across rows.
-        let mut xpad = vec![0f32; nb * v];
-        let mut lut = vec![0f32; nb * segs * npat];
-        let mut cblut = vec![0f32; nb * c];
-        for i in 0..m {
-            let xrow = x.row(i);
-            let xsum: f32 = xrow.iter().sum();
-            xpad[..self.cols].copy_from_slice(xrow);
-            xpad[self.cols..].iter_mut().for_each(|p| *p = 0.0);
-
-            // Stage-I: incremental signed-sum tables.
-            for j in 0..nb {
-                for p in 0..segs {
-                    let seg = &xpad[j * v + p * mu_b..j * v + (p + 1) * mu_b];
-                    let t = &mut lut[(j * segs + p) * npat..(j * segs + p + 1) * npat];
-                    t[0] = -seg.iter().sum::<f32>();
-                    for s in 1..npat {
-                        let low = s & s.wrapping_neg();
-                        t[s] = t[s ^ low] + 2.0 * seg[low.trailing_zeros() as usize];
-                    }
+        let out_n = self.out;
+        let mut y = Matrix::zeros(m, out_n);
+        let row_work =
+            self.nb * (self.segs << self.mu_bits) + self.nb * self.c + out_n * self.nb;
+        let nt = parallel::threads_for(m * row_work);
+        if m > 1 && nt > 1 {
+            parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+                let mut sc = self.scratch();
+                for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+                    let xsum = self.build_tables(x.row(i0 + ii), &mut sc);
+                    self.gather(&sc.cblut, xsum, 0, yrow);
                 }
-            }
-
-            // Stage-II: codebook LUT (lookup + add per segment).
-            for j in 0..nb {
-                let base_l = j * segs * npat;
-                let cb = &mut cblut[j * c..(j + 1) * c];
-                match segs {
-                    1 => {
-                        let t0 = &lut[base_l..base_l + npat];
-                        for (k, out) in cb.iter_mut().enumerate() {
-                            *out = t0[self.keys[k] as usize];
-                        }
-                    }
-                    2 => {
-                        let (t0, t1) = lut[base_l..base_l + 2 * npat].split_at(npat);
-                        for (k, out) in cb.iter_mut().enumerate() {
-                            let kk = &self.keys[k * 2..k * 2 + 2];
-                            *out = t0[kk[0] as usize] + t1[kk[1] as usize];
-                        }
-                    }
-                    _ => {
-                        for (k, out) in cb.iter_mut().enumerate() {
-                            let kk = &self.keys[k * segs..(k + 1) * segs];
-                            let mut s = 0f32;
-                            for (p, &key) in kk.iter().enumerate() {
-                                s += lut[base_l + p * npat + key as usize];
-                            }
-                            *out = s;
-                        }
-                    }
-                }
-            }
-
-            // Gather-accumulate.
-            let yrow = y.row_mut(i);
-            if self.n_groups == 1 {
-                for r in 0..self.out {
-                    let irow = &self.idx[r * nb..(r + 1) * nb];
-                    let mut s = 0f32;
-                    for (j, &k) in irow.iter().enumerate() {
-                        s += cblut[j * c + k as usize];
-                    }
-                    yrow[r] = self.alpha[r] * s + self.mu[r] * xsum;
-                }
-            } else {
-                for r in 0..self.out {
-                    let irow = &self.idx[r * nb..(r + 1) * nb];
-                    let arow = &self.alpha[r * self.n_groups..(r + 1) * self.n_groups];
-                    let mut s = 0f32;
-                    for (j, &k) in irow.iter().enumerate() {
-                        s += arow[self.block_group[j] as usize] * cblut[j * c + k as usize];
-                    }
-                    yrow[r] = s + self.mu[r] * xsum;
-                }
+            });
+        } else {
+            let mut sc = self.scratch();
+            for i in 0..m {
+                let xsum = self.build_tables(x.row(i), &mut sc);
+                let cblut = &sc.cblut;
+                parallel::par_row_ranges_with(nt, y.row_mut(i), 1, |r0, chunk| {
+                    self.gather(cblut, xsum, r0, chunk);
+                });
             }
         }
         y
     }
 
+    /// Stage-I + Stage-II for one activation row; returns Σx.
+    fn build_tables(&self, xrow: &[f32], sc: &mut Scratch) -> f32 {
+        let (v, mu_b, segs, nb, c) = (self.v, self.mu_bits, self.segs, self.nb, self.c);
+        let npat = 1usize << mu_b;
+        let xsum: f32 = xrow.iter().sum();
+        // Tail past `cols` was zeroed at construction and is never
+        // written, so only the live prefix needs refreshing.
+        sc.xpad[..self.cols].copy_from_slice(xrow);
+
+        // Stage-I: incremental signed-sum tables.
+        for j in 0..nb {
+            for p in 0..segs {
+                let seg = &sc.xpad[j * v + p * mu_b..j * v + (p + 1) * mu_b];
+                let t = &mut sc.lut[(j * segs + p) * npat..(j * segs + p + 1) * npat];
+                t[0] = -seg.iter().sum::<f32>();
+                for s in 1..npat {
+                    let low = s & s.wrapping_neg();
+                    t[s] = t[s ^ low] + 2.0 * seg[low.trailing_zeros() as usize];
+                }
+            }
+        }
+
+        // Stage-II: codebook LUT (lookup + add per segment). Keys are
+        // walked with `chunks_exact` so the per-centroid slice bound
+        // checks stay out of the k-loop.
+        for j in 0..nb {
+            let base_l = j * segs * npat;
+            let cb = &mut sc.cblut[j * c..(j + 1) * c];
+            match segs {
+                1 => {
+                    let t0 = &sc.lut[base_l..base_l + npat];
+                    for (out, &key) in cb.iter_mut().zip(&self.keys[..c]) {
+                        *out = t0[key as usize];
+                    }
+                }
+                2 => {
+                    let (t0, t1) = sc.lut[base_l..base_l + 2 * npat].split_at(npat);
+                    for (out, kk) in cb.iter_mut().zip(self.keys.chunks_exact(2)) {
+                        *out = t0[kk[0] as usize] + t1[kk[1] as usize];
+                    }
+                }
+                _ => {
+                    let lut = &sc.lut;
+                    for (out, kk) in cb.iter_mut().zip(self.keys.chunks_exact(segs)) {
+                        let mut s = 0f32;
+                        for (p, &key) in kk.iter().enumerate() {
+                            s += lut[base_l + p * npat + key as usize];
+                        }
+                        *out = s;
+                    }
+                }
+            }
+        }
+        xsum
+    }
+
+    /// Gather-accumulate output rows `r0..r0+ys.len()` from a built
+    /// `cblut`, tiled so each block's `cblut` row is reused across a
+    /// whole tile of output rows (block-major `idx_t` makes the index
+    /// reads contiguous). Per output row the accumulation order stays
+    /// j = 0..nb, so tiling is bit-identical to the row-at-a-time loop.
+    fn gather(&self, cblut: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
+        let (nb, c, out_n) = (self.nb, self.c, self.out);
+        let mut r = r0;
+        for tile in ys.chunks_mut(GATHER_TILE) {
+            let tl = tile.len();
+            let mut acc = [0f32; GATHER_TILE];
+            for j in 0..nb {
+                let cb = &cblut[j * c..(j + 1) * c];
+                let it = &self.idx_t[j * out_n + r..j * out_n + r + tl];
+                if self.n_groups == 1 {
+                    for (a, &k) in acc[..tl].iter_mut().zip(it) {
+                        *a += cb[k as usize];
+                    }
+                } else {
+                    let g = self.block_group[j] as usize;
+                    for (rr, (a, &k)) in acc[..tl].iter_mut().zip(it).enumerate() {
+                        *a += self.alpha[(r + rr) * self.n_groups + g] * cb[k as usize];
+                    }
+                }
+            }
+            if self.n_groups == 1 {
+                for (rr, yv) in tile.iter_mut().enumerate() {
+                    *yv = self.alpha[r + rr] * acc[rr] + self.mu[r + rr] * xsum;
+                }
+            } else {
+                for (rr, yv) in tile.iter_mut().enumerate() {
+                    *yv = acc[rr] + self.mu[r + rr] * xsum;
+                }
+            }
+            r += tl;
+        }
+    }
+
     /// Shipped bytes: packed indices + keys + fp16 scales.
     pub fn weight_bytes(&self) -> usize {
         let idx_bits = (usize::BITS - (self.c.saturating_sub(1)).leading_zeros()).max(1) as usize;
-        (self.idx.len() * idx_bits).div_ceil(8)
+        (self.idx_t.len() * idx_bits).div_ceil(8)
             + self.keys.len() * mu_key_bytes(self.mu_bits)
             + (self.alpha.len() + self.mu.len()) * 2
     }
@@ -299,6 +377,45 @@ mod tests {
         assert_eq!(eng.segs, 1);
         // forward already validated; here assert scratch dims derived.
         assert_eq!(eng.nb, 1);
+    }
+
+    #[test]
+    fn batched_forward_bitwise_matches_per_row() {
+        // Batch (parallel input-row split, tiled gather) must agree
+        // bit-for-bit with each row run alone through the GEMV path.
+        let mut rng = Rng::new(10);
+        for c in [16usize, 40] {
+            let cl = make_codebook_layer(&mut rng, 70, 64, 16, c);
+            let eng = LutGemmEngine::try_new(&cl).unwrap();
+            let x = Matrix::randn(6, 64, &mut rng);
+            let y = eng.forward(&x);
+            for i in 0..x.rows {
+                let xi = Matrix::from_vec(1, 64, x.row(i).to_vec());
+                let yi = eng.forward(&xi);
+                assert_eq!(y.row(i), yi.row(0), "c={c} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_gather_matches_dequant() {
+        // Grouped scales through the tiled gather (out > GATHER_TILE).
+        let mut rng = Rng::new(11);
+        let w = Matrix::randn(70, 32, &mut rng);
+        let groups: Vec<u16> = (0..32).map(|c| (c / 16) as u16).collect(); // v=8 aligned
+        let bl = crate::quant::arb::arb_quantize(&w, &groups, 4, 4);
+        let vectors = collect_vectors(&bl, 8);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 12, 5);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let x = Matrix::randn(3, 32, &mut rng);
+        assert_close(
+            &eng.forward(&x).data,
+            &x.matmul_bt(&cl.reconstruct()).data,
+            1e-3,
+            1e-3,
+        )
+        .unwrap();
     }
 
     #[test]

@@ -10,6 +10,7 @@
 use crate::bitops::{hamming_words, BitMatrix};
 use crate::quant::binarize::BinaryLayer;
 use crate::tensor::Matrix;
+use crate::util::parallel;
 
 /// Prepared W1A16 engine for one binarized layer.
 #[derive(Debug, Clone)]
@@ -56,20 +57,114 @@ impl BinaryGemmEngine {
     /// (`acc += f32::from_bits(x ^ flip)`) was tried and measured
     /// ~1.7x SLOWER at the Fig. 5 shape — the per-lane variable shifts
     /// defeat LLVM's vectorizer — so set-bit iteration stays.
+    ///
+    /// Thread-parallel over input rows (batch decode / prefill) or,
+    /// at m == 1, over output-row chunks; each output value is
+    /// computed by the same scalar loop either way (bit-identical).
     fn forward_ungrouped(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.cols);
         let m = x.rows;
-        let mut y = Matrix::zeros(m, self.out);
-        let wpr = self.b.words_per_row;
-        for i in 0..m {
-            let xrow = x.row(i);
+        let out_n = self.out;
+        let mut y = Matrix::zeros(m, out_n);
+        let nt = parallel::threads_for(m * out_n * (self.cols / 2).max(1));
+        if m == 1 {
+            let xrow = x.row(0);
             let xsum: f32 = xrow.iter().sum();
-            let yrow = y.row_mut(i);
-            for r in 0..self.out {
-                let brow = self.b.row(r);
+            parallel::par_row_ranges_with(nt, &mut y.data, 1, |r0, chunk| {
+                self.outs_ungrouped(xrow, xsum, r0, chunk);
+            });
+        } else {
+            parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+                for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+                    let xrow = x.row(i0 + ii);
+                    let xsum: f32 = xrow.iter().sum();
+                    self.outs_ungrouped(xrow, xsum, 0, yrow);
+                }
+            });
+        }
+        y
+    }
+
+    /// Output rows `r0..r0+ys.len()` for one activation row.
+    fn outs_ungrouped(&self, xrow: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
+        let wpr = self.b.words_per_row;
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            let r = r0 + rr;
+            let brow = self.b.row(r);
+            let mut pos = 0f32;
+            for wi in 0..wpr {
+                let mut w = brow[wi];
+                let base = wi * 64;
+                while w != 0 {
+                    let t = w.trailing_zeros() as usize;
+                    pos += xrow[base + t];
+                    w &= w - 1;
+                }
+            }
+            *yv = self.alpha[r] * (2.0 * pos - xsum) + self.mu[r] * xsum;
+        }
+    }
+
+    /// General path: per-(row, group) scales via masked bit iteration.
+    /// Parallel split mirrors [`Self::forward_ungrouped`].
+    fn forward_grouped(&self, x: &Matrix) -> Matrix {
+        assert_eq!(x.cols, self.cols);
+        let m = x.rows;
+        let out_n = self.out;
+        let mut y = Matrix::zeros(m, out_n);
+        let nt = parallel::threads_for(m * out_n * (self.cols / 2).max(1));
+        if m == 1 {
+            let xrow = x.row(0);
+            let (group_sum, xsum) = self.group_sums(xrow);
+            parallel::par_row_ranges_with(nt, &mut y.data, 1, |r0, chunk| {
+                self.outs_grouped(xrow, &group_sum, xsum, r0, chunk);
+            });
+        } else {
+            parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+                for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+                    let xrow = x.row(i0 + ii);
+                    let (group_sum, xsum) = self.group_sums(xrow);
+                    self.outs_grouped(xrow, &group_sum, xsum, 0, yrow);
+                }
+            });
+        }
+        y
+    }
+
+    /// Per-group sums (Σ_{c in g} x_c) and their total for one row.
+    fn group_sums(&self, xrow: &[f32]) -> (Vec<f32>, f32) {
+        let mut group_sum = vec![0f32; self.n_groups];
+        let mut xsum = 0f32;
+        for (g, mask) in self.group_masks.iter().enumerate() {
+            let mut s = 0f32;
+            for (wi, &mw) in mask.iter().enumerate() {
+                let mut w = mw;
+                let base = wi * 64;
+                while w != 0 {
+                    let t = w.trailing_zeros() as usize;
+                    s += xrow[base + t];
+                    w &= w - 1;
+                }
+            }
+            group_sum[g] = s;
+            xsum += s;
+        }
+        (group_sum, xsum)
+    }
+
+    /// Grouped output rows `r0..r0+ys.len()` for one activation row.
+    fn outs_grouped(&self, xrow: &[f32], group_sum: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
+        let wpr = self.b.words_per_row;
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            let r = r0 + rr;
+            let brow = self.b.row(r);
+            let mut acc = 0f32;
+            for g in 0..self.n_groups {
+                // pos = Σ x over columns where sign=+1 within group g.
+                let mask = &self.group_masks[g];
                 let mut pos = 0f32;
                 for wi in 0..wpr {
-                    let mut w = brow[wi];
+                    let mut w = brow[wi] & mask[wi];
                     let base = wi * 64;
                     while w != 0 {
                         let t = w.trailing_zeros() as usize;
@@ -77,61 +172,10 @@ impl BinaryGemmEngine {
                         w &= w - 1;
                     }
                 }
-                yrow[r] = self.alpha[r] * (2.0 * pos - xsum) + self.mu[r] * xsum;
+                acc += self.alpha[r * self.n_groups + g] * (2.0 * pos - group_sum[g]);
             }
+            *yv = acc + self.mu[r] * xsum;
         }
-        y
-    }
-
-    /// General path: per-(row, group) scales via masked bit iteration.
-    fn forward_grouped(&self, x: &Matrix) -> Matrix {
-        assert_eq!(x.cols, self.cols);
-        let m = x.rows;
-        let mut y = Matrix::zeros(m, self.out);
-        let wpr = self.b.words_per_row;
-        // Per-input-row group sums (Σ_{c in g} x_c) and total.
-        let mut group_sum = vec![0f32; self.n_groups];
-        for i in 0..m {
-            let xrow = x.row(i);
-            group_sum.iter_mut().for_each(|s| *s = 0.0);
-            let mut xsum = 0f32;
-            for (g, mask) in self.group_masks.iter().enumerate() {
-                let mut s = 0f32;
-                for (wi, &mw) in mask.iter().enumerate() {
-                    let mut w = mw;
-                    let base = wi * 64;
-                    while w != 0 {
-                        let t = w.trailing_zeros() as usize;
-                        s += xrow[base + t];
-                        w &= w - 1;
-                    }
-                }
-                group_sum[g] = s;
-                xsum += s;
-            }
-            let yrow = y.row_mut(i);
-            for r in 0..self.out {
-                let brow = self.b.row(r);
-                let mut acc = 0f32;
-                for g in 0..self.n_groups {
-                    // pos = Σ x over columns where sign=+1 within group g.
-                    let mask = &self.group_masks[g];
-                    let mut pos = 0f32;
-                    for wi in 0..wpr {
-                        let mut w = brow[wi] & mask[wi];
-                        let base = wi * 64;
-                        while w != 0 {
-                            let t = w.trailing_zeros() as usize;
-                            pos += xrow[base + t];
-                            w &= w - 1;
-                        }
-                    }
-                    acc += self.alpha[r * self.n_groups + g] * (2.0 * pos - group_sum[g]);
-                }
-                yrow[r] = acc + self.mu[r] * xsum;
-            }
-        }
-        y
     }
 
     /// Packed-weight storage in bytes (what actually ships).
@@ -142,19 +186,24 @@ impl BinaryGemmEngine {
 
 /// Fully-binary GEMM: both activations and weights are packed ±1;
 /// `y[i,r] = n − 2·d_H` via XNOR+POPCNT (one instruction pair per 64
-/// elements — the paper's Eq. 5 arithmetic).
+/// elements — the paper's Eq. 5 arithmetic). Thread-parallel over
+/// activation rows; each output is an independent popcount reduction,
+/// so the split cannot change results.
 pub fn xnor_popcnt_gemm(x: &BitMatrix, w: &BitMatrix) -> Matrix {
     assert_eq!(x.cols, w.cols);
     let mask = x.tail_mask();
-    let mut y = Matrix::zeros(x.rows, w.rows);
-    for i in 0..x.rows {
-        let xrow = x.row(i);
-        let yrow = y.row_mut(i);
-        for r in 0..w.rows {
-            let d = hamming_words(xrow, w.row(r), mask);
-            yrow[r] = (x.cols as i32 - 2 * d as i32) as f32;
+    let out_n = w.rows;
+    let mut y = Matrix::zeros(x.rows, out_n);
+    let nt = parallel::threads_for(x.rows * out_n * (x.cols / 32).max(1));
+    parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+        for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+            let xrow = x.row(i0 + ii);
+            for (r, yv) in yrow.iter_mut().enumerate() {
+                let d = hamming_words(xrow, w.row(r), mask);
+                *yv = (x.cols as i32 - 2 * d as i32) as f32;
+            }
         }
-    }
+    });
     y
 }
 
@@ -217,6 +266,23 @@ mod tests {
                 assert_close(&fast.data, &xm.matmul_bt(&wm).data, 1e-3, 1e-3)
             },
         );
+    }
+
+    #[test]
+    fn batched_forward_bitwise_matches_per_row() {
+        // Crossing the parallel threshold must not change a single bit
+        // vs running each activation row alone.
+        let mut rng = Rng::new(8);
+        let w = Matrix::randn(96, 256, &mut rng);
+        let q = BinaryLayer::quantize(&w);
+        let eng = BinaryGemmEngine::new(&q);
+        let x = Matrix::randn(8, 256, &mut rng);
+        let y = eng.forward(&x);
+        for i in 0..x.rows {
+            let xi = Matrix::from_vec(1, 256, x.row(i).to_vec());
+            let yi = eng.forward(&xi);
+            assert_eq!(y.row(i), yi.row(0), "row {i}");
+        }
     }
 
     #[test]

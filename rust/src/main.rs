@@ -4,7 +4,7 @@
 //! btc-llm info      [--model tinylm_m]                  model + memory report
 //! btc-llm quantize  [--model tinylm_m] [--method btc] [--bits 0.8] [--out m.qlm]
 //! btc-llm eval      [--model tinylm_m] [--method btc] [--bits 0.8] [--tokens 4096] [--zeroshot]
-//! btc-llm serve     [--config configs/serve.toml] [--requests 16]
+//! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N]
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
 
@@ -105,11 +105,14 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let cfg = match args.get("config") {
+    let mut cfg = match args.get("config") {
         Some(path) => ServeConfig::from_file(std::path::Path::new(path))
             .map_err(|e| anyhow::anyhow!("config: {e}"))?,
         None => ServeConfig::default(),
     };
+    // CLI override for the kernel worker count (0 = auto; the server
+    // validates/clamps and the effective value is reported below).
+    cfg.threads = args.get_usize("threads", cfg.threads);
     let dir = artifacts_dir();
     let raw = load_model(&dir.join(format!("{}.bin", cfg.model)))?;
     let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt"))?;
@@ -124,14 +127,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut qcfg = registry::get_with_fallback_bits(spec, Some(cfg.bits))?;
     qcfg.act_bits = 16;
     info!("quantizing {} for serving ({})", cfg.model, cfg.backend);
-    let mut qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
-    qm.model.prepare_engines();
-    let server = Server::start(
+    let qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
+    // Server::start prepares any missing engines itself.
+    let server = Server::start_with_threads(
         qm.model,
         cfg.max_batch,
         Duration::from_millis(cfg.batch_wait_ms),
         cfg.seed,
+        cfg.threads,
     );
+    info!("serving with {} kernel thread(s)", server.threads);
     // Replay a request trace (offline image: no network listener; the
     // trace IS the workload — see examples/serve.rs for the full driver).
     let n = args.get_usize("requests", 16);

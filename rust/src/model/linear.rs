@@ -75,6 +75,14 @@ impl Linear {
         };
     }
 
+    /// Prepare an engine only if none is prepared yet (a cached dense
+    /// reconstruction counts as prepared — the caller chose it).
+    pub fn ensure_engine(&mut self) {
+        if matches!(self.engine, Engine::None) {
+            self.prepare_engine();
+        }
+    }
+
     /// y = f(x): transform → act-quant → GEMM. x: (m, in) -> (m, out).
     pub fn forward(&self, x: &Matrix) -> Matrix {
         let mut xt = match &self.transform {

@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::kvcache::KvCache;
+use super::kvcache::{KvCache, LayerKv};
 use super::linear::Linear;
 use super::rope::Rope;
 use crate::io::weights::{ModelConfig, RawModel};
@@ -143,6 +143,38 @@ fn softmax_inplace(xs: &mut [f32]) {
     }
 }
 
+/// One query row attending over the first `ctx` positions of a cached
+/// layer (GQA: `rep` query heads share each KV head). Shared by
+/// [`Transformer::decode_batch`] and [`Transformer::prefill`] so their
+/// attention arithmetic cannot drift apart (the bit-identity
+/// contract).
+#[allow(clippy::too_many_arguments)]
+fn attend_cached(
+    qrow: &[f32],
+    layer_kv: &LayerKv,
+    ctx: usize,
+    nh: usize,
+    rep: usize,
+    hd: usize,
+    scale: f32,
+    orow: &mut [f32],
+) {
+    let mut scores = vec![0f32; ctx];
+    for hh in 0..nh {
+        let kvh = hh / rep;
+        let qv = &qrow[hh * hd..(hh + 1) * hd];
+        for ki in 0..ctx {
+            let kv = &layer_kv.k_at(ki)[kvh * hd..(kvh + 1) * hd];
+            scores[ki] = crate::tensor::matrix::dot(qv, kv) * scale;
+        }
+        softmax_inplace(&mut scores);
+        for ki in 0..ctx {
+            let vv = &layer_kv.v_at(ki)[kvh * hd..(kvh + 1) * hd];
+            crate::tensor::matrix::axpy(scores[ki], vv, &mut orow[hh * hd..(hh + 1) * hd]);
+        }
+    }
+}
+
 impl Transformer {
     /// Build from a TLM1 blob with dense fp32 backends.
     pub fn from_raw(raw: &RawModel) -> Result<Transformer> {
@@ -251,46 +283,55 @@ impl Transformer {
 
     /// Incremental decode: run one token at position `cache.len()`,
     /// appending K/V to the cache. Returns logits (vocab,).
+    ///
+    /// Single-request view of [`Self::decode_batch`]; bit-identical to
+    /// a batch of one by construction.
     pub fn decode_step(&self, token: u16, cache: &mut KvCache) -> Vec<f32> {
+        self.decode_batch(&[token], std::slice::from_mut(cache)).row(0).to_vec()
+    }
+
+    /// Fused batch decode: one token per request, each at its own
+    /// cache position. Stacks the B single-token rows into one (B, d)
+    /// activation so every linear/engine forward runs **once** per
+    /// layer per round (the batch amortization the serving loop relies
+    /// on). Returns logits (B, vocab); row `b` is bit-identical to
+    /// `decode_step(tokens[b], &mut caches[b])` run alone, because
+    /// every kernel on the path computes output rows independently.
+    pub fn decode_batch(&self, tokens: &[u16], caches: &mut [KvCache]) -> Matrix {
+        assert_eq!(tokens.len(), caches.len(), "one cache per request");
+        let bsz = tokens.len();
+        if bsz == 0 {
+            return Matrix::zeros(0, self.cfg.vocab);
+        }
         let d = self.cfg.d_model;
         let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
         let rep = nh / nkv;
-        let pos = cache.len();
-        let mut x = Matrix::zeros(1, d);
-        x.row_mut(0).copy_from_slice(self.emb.row(token as usize));
+        let pos: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+        let mut x = Matrix::zeros(bsz, d);
+        for (b, &t) in tokens.iter().enumerate() {
+            x.row_mut(b).copy_from_slice(self.emb.row(t as usize));
+        }
         for (li, block) in self.blocks.iter().enumerate() {
             let h = rmsnorm_rows(&x, &block.ln1);
             let mut q = block.wq.forward(&h);
             let mut k = block.wk.forward(&h);
             let v = block.wv.forward(&h);
-            {
-                let qrow = q.row_mut(0);
+            for b in 0..bsz {
+                let qrow = q.row_mut(b);
                 for hh in 0..nh {
-                    self.rope.apply(&mut qrow[hh * hd..(hh + 1) * hd], pos);
+                    self.rope.apply(&mut qrow[hh * hd..(hh + 1) * hd], pos[b]);
                 }
-                let krow = k.row_mut(0);
+                let krow = k.row_mut(b);
                 for hh in 0..nkv {
-                    self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], pos);
+                    self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], pos[b]);
                 }
+                caches[b].layers[li].push(k.row(b), v.row(b));
             }
-            cache.layers[li].push(k.row(0), v.row(0));
             let scale = 1.0 / (hd as f32).sqrt();
-            let mut attn_out = Matrix::zeros(1, d);
-            let ctx = cache.layers[li].len;
-            let mut scores = vec![0f32; ctx];
-            for hh in 0..nh {
-                let kvh = hh / rep;
-                let qv = &q.row(0)[hh * hd..(hh + 1) * hd];
-                for ki in 0..ctx {
-                    let kv = &cache.layers[li].k_at(ki)[kvh * hd..(kvh + 1) * hd];
-                    scores[ki] = crate::tensor::matrix::dot(qv, kv) * scale;
-                }
-                softmax_inplace(&mut scores);
-                let orow = attn_out.row_mut(0);
-                for ki in 0..ctx {
-                    let vv = &cache.layers[li].v_at(ki)[kvh * hd..(kvh + 1) * hd];
-                    crate::tensor::matrix::axpy(scores[ki], vv, &mut orow[hh * hd..(hh + 1) * hd]);
-                }
+            let mut attn_out = Matrix::zeros(bsz, d);
+            for b in 0..bsz {
+                let layer_kv = &caches[b].layers[li];
+                attend_cached(q.row(b), layer_kv, layer_kv.len, nh, rep, hd, scale, attn_out.row_mut(b));
             }
             x = x.add(&block.wo.forward(&attn_out));
             let h2 = rmsnorm_rows(&x, &block.ln2);
@@ -303,6 +344,68 @@ impl Transformer {
             x = x.add(&block.wdown.forward(&mid));
         }
         let xf = rmsnorm_rows(&x, &self.lnf);
+        xf.matmul_bt(&self.emb)
+    }
+
+    /// Batched prefill: run the whole prompt through the full-sequence
+    /// path (one (s, d) GEMM per linear instead of s GEMVs), appending
+    /// K/V for every position to `cache`. Supports chunked prefill:
+    /// positions start at `cache.len()`. Returns the logits of the
+    /// **last** prompt token (the only row decoding needs) —
+    /// bit-identical to feeding the tokens through `decode_step` one
+    /// at a time. Empty `tokens` returns an empty vec.
+    pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        let s = tokens.len();
+        if s == 0 {
+            return Vec::new();
+        }
+        let d = self.cfg.d_model;
+        let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
+        let rep = nh / nkv;
+        let base = cache.len();
+        let mut x = Matrix::zeros(s, d);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(self.emb.row(t as usize));
+        }
+        for (li, block) in self.blocks.iter().enumerate() {
+            let h = rmsnorm_rows(&x, &block.ln1);
+            let mut q = block.wq.forward(&h); // (s, d)
+            let mut k = block.wk.forward(&h); // (s, kv_dim)
+            let v = block.wv.forward(&h); // (s, kv_dim)
+            for i in 0..s {
+                let qrow = q.row_mut(i);
+                for hh in 0..nh {
+                    self.rope.apply(&mut qrow[hh * hd..(hh + 1) * hd], base + i);
+                }
+                let krow = k.row_mut(i);
+                for hh in 0..nkv {
+                    self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], base + i);
+                }
+                cache.layers[li].push(k.row(i), v.row(i));
+            }
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut attn_out = Matrix::zeros(s, d);
+            let layer_kv = &cache.layers[li];
+            for i in 0..s {
+                // Causal: query at absolute position base+i sees cache
+                // positions 0..=base+i (its own K/V already pushed).
+                attend_cached(q.row(i), layer_kv, base + i + 1, nh, rep, hd, scale, attn_out.row_mut(i));
+            }
+            x = x.add(&block.wo.forward(&attn_out));
+            let h2 = rmsnorm_rows(&x, &block.ln2);
+            let g = block.wgate.forward(&h2);
+            let u = block.wup.forward(&h2);
+            let mut mid = g;
+            for (mv, uv) in mid.data.iter_mut().zip(u.data.iter()) {
+                *mv = silu(*mv) * uv;
+            }
+            x = x.add(&block.wdown.forward(&mid));
+        }
+        // Logit only the last position: one (1, vocab) GEMV instead of
+        // the s lm-head GEMVs the incremental prefill paid.
+        let mut last = Matrix::zeros(1, d);
+        last.row_mut(0).copy_from_slice(x.row(s - 1));
+        let xf = rmsnorm_rows(&last, &self.lnf);
         xf.matmul_bt(&self.emb).row(0).to_vec()
     }
 
@@ -311,6 +414,16 @@ impl Transformer {
         for b in self.blocks.iter_mut() {
             for (_, lin) in b.linears_mut() {
                 lin.prepare_engine();
+            }
+        }
+    }
+
+    /// Prepare engines only where none is prepared yet (idempotent —
+    /// the server calls this at startup without redoing caller work).
+    pub fn ensure_engines(&mut self) {
+        for b in self.blocks.iter_mut() {
+            for (_, lin) in b.linears_mut() {
+                lin.ensure_engine();
             }
         }
     }
@@ -414,6 +527,82 @@ pub mod tests {
             assert_close(&last, full.row(tokens.len() - 1), 1e-4, 1e-4)
                 .unwrap_or_else(|e| panic!("nkv={nkv}: {e}"));
         }
+    }
+
+    /// Bitwise equality of two caches (positions, K and V payloads).
+    fn assert_caches_identical(a: &KvCache, b: &KvCache) {
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(b.layers.iter()) {
+            assert_eq!(la.len, lb.len);
+            assert_eq!(la.k, lb.k, "K payload differs");
+            assert_eq!(la.v, lb.v, "V payload differs");
+        }
+    }
+
+    #[test]
+    fn prefill_bit_identical_to_decode_steps() {
+        for nkv in [4usize, 2] {
+            let m = tiny_model(7, nkv);
+            let tokens = [3u16, 17, 2, 29, 11, 5];
+            let mut c_fast = m.new_cache(8);
+            let fast = m.prefill(&tokens, &mut c_fast);
+            let mut c_slow = m.new_cache(8);
+            let mut slow = Vec::new();
+            for &t in &tokens {
+                slow = m.decode_step(t, &mut c_slow);
+            }
+            assert_eq!(fast, slow, "nkv={nkv}: prefill logits differ");
+            assert_caches_identical(&c_fast, &c_slow);
+        }
+    }
+
+    #[test]
+    fn prefill_empty_prompt_is_noop() {
+        let m = tiny_model(8, 4);
+        let mut c = m.new_cache(4);
+        assert!(m.prefill(&[], &mut c).is_empty());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_whole_prompt() {
+        let m = tiny_model(9, 2);
+        let tokens = [4u16, 9, 23, 1, 16];
+        let mut c_whole = m.new_cache(8);
+        let whole = m.prefill(&tokens, &mut c_whole);
+        let mut c_chunk = m.new_cache(8);
+        m.prefill(&tokens[..2], &mut c_chunk);
+        let chunked = m.prefill(&tokens[2..], &mut c_chunk);
+        assert_eq!(whole, chunked);
+        assert_caches_identical(&c_whole, &c_chunk);
+    }
+
+    #[test]
+    fn decode_batch_bit_identical_to_single_steps() {
+        let m = tiny_model(10, 4);
+        // Mixed-length histories: request b prefilled with b+1 tokens.
+        let histories: [&[u16]; 3] = [&[5], &[7, 2], &[9, 1, 30]];
+        let mut batch_caches: Vec<_> = (0..3).map(|_| m.new_cache(8)).collect();
+        let mut solo_caches: Vec<_> = (0..3).map(|_| m.new_cache(8)).collect();
+        for (b, h) in histories.iter().enumerate() {
+            m.prefill(h, &mut batch_caches[b]);
+            m.prefill(h, &mut solo_caches[b]);
+        }
+        let next = [12u16, 3, 25];
+        let batched = m.decode_batch(&next, &mut batch_caches);
+        for b in 0..3 {
+            let solo = m.decode_step(next[b], &mut solo_caches[b]);
+            assert_eq!(batched.row(b), &solo[..], "row {b} differs");
+            assert_caches_identical(&batch_caches[b], &solo_caches[b]);
+        }
+    }
+
+    #[test]
+    fn decode_batch_empty_is_empty() {
+        let m = tiny_model(11, 4);
+        let out = m.decode_batch(&[], &mut []);
+        assert_eq!(out.rows, 0);
+        assert_eq!(out.cols, m.cfg.vocab);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! accumulation). The hot path is `matmul_bt`: both operands stream
 //! row-major, so the inner loop is a pure dot product over contiguous
 //! slices that LLVM auto-vectorizes; the §Perf pass unrolled it into
-//! four accumulators (see EXPERIMENTS.md §Perf).
+//! four accumulators (see EXPERIMENTS.md §Perf). Above
+//! [`crate::util::parallel::PAR_MIN_WORK`] scalar ops, `matmul_bt`
+//! fans output rows (or GEMV column chunks) across scoped threads —
+//! bit-identical to the serial path (see DESIGN.md §6).
 
 use crate::util::rng::Rng;
 
@@ -115,16 +118,33 @@ impl Matrix {
     }
 
     /// C = A · Bᵀ — the inference layout (`y = x @ W^T`, W stored (out, in)).
+    ///
+    /// Thread-parallel over output rows (or over column chunks when
+    /// m == 1, the GEMV decode shape); every `C[i,j]` is one `dot` in
+    /// a fixed order, so the parallel result is bit-identical to the
+    /// serial one.
     pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
         assert_eq!(self.cols, b.cols, "matmul_bt shape {}x{} · ({}x{})^T", self.rows, self.cols, b.rows, b.cols);
         let (m, k, n) = (self.rows, self.cols, b.rows);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
-            }
+        let nt = crate::util::parallel::threads_for(m * k * n);
+        if m == 1 && nt > 1 {
+            let arow = self.row(0);
+            crate::util::parallel::par_row_ranges_with(nt, &mut out.data, 1, |j0, chunk| {
+                for (jj, ov) in chunk.iter_mut().enumerate() {
+                    let j = j0 + jj;
+                    *ov = dot(arow, &b.data[j * k..(j + 1) * k]);
+                }
+            });
+        } else {
+            crate::util::parallel::par_row_ranges_with(nt, &mut out.data, n, |i0, chunk| {
+                for (ii, orow) in chunk.chunks_mut(n).enumerate() {
+                    let arow = self.row(i0 + ii);
+                    for (j, ov) in orow.iter_mut().enumerate() {
+                        *ov = dot(arow, &b.data[j * k..(j + 1) * k]);
+                    }
+                }
+            });
         }
         out
     }
@@ -289,6 +309,28 @@ mod tests {
             },
             |(a, b)| assert_close(&a.matmul_at(b).data, &a.transpose().matmul(b).data, 1e-4, 1e-4),
         );
+    }
+
+    #[test]
+    fn matmul_bt_parallel_paths_bitwise_serial() {
+        // Shapes crossing PAR_MIN_WORK exercise both parallel splits
+        // (row split for m>1, column split for m==1); results must be
+        // bit-identical to the per-element serial reference.
+        let mut r = Rng::new(31);
+        let a = Matrix::randn(4, 64, &mut r);
+        let b = Matrix::randn(300, 64, &mut r); // 4*64*300 > PAR_MIN_WORK
+        let par = a.matmul_bt(&b);
+        for i in 0..a.rows {
+            for j in 0..b.rows {
+                assert_eq!(par.at(i, j).to_bits(), dot(a.row(i), b.row(j)).to_bits());
+            }
+        }
+        let a1 = Matrix::randn(1, 300, &mut r);
+        let b1 = Matrix::randn(250, 300, &mut r); // 1*300*250 > PAR_MIN_WORK
+        let par1 = a1.matmul_bt(&b1);
+        for j in 0..b1.rows {
+            assert_eq!(par1.at(0, j).to_bits(), dot(a1.row(0), b1.row(j)).to_bits());
+        }
     }
 
     #[test]

@@ -138,6 +138,76 @@ pub fn benchline(exp: &str, kv: &[(&str, String)]) {
     println!("BENCHLINE exp={} {}", exp, body.join(" "));
 }
 
+/// Accumulates bench rows and writes them as `BENCH_<exp>.json` when
+/// the `BENCH_JSON` env var is set (the CI perf-smoke job uploads these
+/// as artifacts; committed snapshots seed the perf trajectory).
+pub struct JsonReport {
+    exp: String,
+    rows: Vec<Vec<(String, String)>>,
+}
+
+impl JsonReport {
+    pub fn new(exp: &str) -> JsonReport {
+        JsonReport { exp: exp.to_string(), rows: Vec::new() }
+    }
+
+    /// Record one result row (same shape as a [`benchline`] call).
+    pub fn row(&mut self, kv: &[(&str, String)]) {
+        self.rows.push(kv.iter().map(|(k, v)| (k.to_string(), v.clone())).collect());
+    }
+
+    fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("{{\n  \"exp\": \"{}\",\n  \"rows\": [\n", json_escape(&self.exp)));
+        for (i, row) in self.rows.iter().enumerate() {
+            let cells: Vec<String> = row
+                .iter()
+                .map(|(k, v)| format!("\"{}\": {}", json_escape(k), json_value(v)))
+                .collect();
+            s.push_str(&format!("    {{{}}}{}\n", cells.join(", "), if i + 1 < self.rows.len() { "," } else { "" }));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `BENCH_<exp>.json` into the current directory if the
+    /// `BENCH_JSON` env var is set. Returns the path written, if any.
+    pub fn write_if_enabled(&self) -> Option<std::path::PathBuf> {
+        std::env::var("BENCH_JSON").ok()?;
+        let path = std::path::PathBuf::from(format!("BENCH_{}.json", self.exp));
+        match std::fs::write(&path, self.render()) {
+            Ok(()) => {
+                println!("wrote {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("BENCH_JSON write failed ({}): {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Numbers pass through raw; everything else is a quoted string.
+fn json_value(v: &str) -> String {
+    match v.parse::<f64>() {
+        Ok(x) if x.is_finite() => v.to_string(),
+        _ => format!("\"{}\"", json_escape(v)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +239,22 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         t.print(); // must not panic
+    }
+
+    #[test]
+    fn json_report_renders_numbers_and_strings() {
+        let mut r = JsonReport::new("serve");
+        r.row(&[("backend", "BTC 0.8".to_string()), ("tokens_per_s", "123.5".to_string())]);
+        let s = r.render();
+        assert!(s.contains("\"exp\": \"serve\""));
+        assert!(s.contains("\"backend\": \"BTC 0.8\""));
+        assert!(s.contains("\"tokens_per_s\": 123.5"));
+    }
+
+    #[test]
+    fn json_escapes_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_value("nan"), "\"nan\"");
+        assert_eq!(json_value("-3.25"), "-3.25");
     }
 }

@@ -12,7 +12,6 @@ use crate::util::rng::Rng;
 /// A small random TinyLM-shaped model (vocab 128, d_model 16, 2
 /// layers) plus a synthetic calibration/eval corpus.
 pub fn tiny_raw_model(seed: u64) -> (RawModel, Vec<u8>) {
-    let mut rng = Rng::new(seed);
     let cfg = ModelConfig {
         vocab: 128,
         d_model: 16,
@@ -23,6 +22,14 @@ pub fn tiny_raw_model(seed: u64) -> (RawModel, Vec<u8>) {
         max_seq: 64,
         rope_theta: 10000.0,
     };
+    synth_raw_model(seed, cfg)
+}
+
+/// A random model of an arbitrary (valid) shape plus a synthetic
+/// corpus — the serving benches fall back to this when the trained
+/// artifacts are absent, so perf smoke runs stay hermetic.
+pub fn synth_raw_model(seed: u64, cfg: ModelConfig) -> (RawModel, Vec<u8>) {
+    let mut rng = Rng::new(seed);
     let mut tensors = BTreeMap::new();
     fn add(
         tensors: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,

@@ -9,6 +9,7 @@ pub mod argparse;
 pub mod benchkit;
 pub mod fixture;
 pub mod log;
+pub mod parallel;
 pub mod proptest;
 pub mod rng;
 pub mod toml;

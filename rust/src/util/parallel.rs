@@ -1,0 +1,205 @@
+//! Scoped-thread data parallelism for the serving kernels (no external
+//! thread-pool crates — plain `std::thread::scope`).
+//!
+//! The unit of work is a *range of output rows*: every hot kernel
+//! (`matmul_bt`, sign-GEMM, LUT-GEMM gather) writes disjoint rows of a
+//! row-major output buffer, so [`par_row_ranges`] splits the buffer
+//! into contiguous whole-row chunks and runs one chunk per thread.
+//! Each row is computed by exactly the same scalar code in the same
+//! order regardless of the split, so parallel results are bit-identical
+//! to the single-threaded path (pinned by tests here and in the
+//! engines).
+//!
+//! Thread count resolution: explicit [`set_threads`] (serve config /
+//! CLI `--threads`) > `PALLAS_THREADS` env > `available_parallelism`.
+//! `0` always means "auto". Kernels gate on [`threads_for`] so tiny
+//! problems never pay the spawn cost.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Upper bound on the worker count (sanity clamp for config typos).
+pub const MAX_THREADS: usize = 256;
+
+/// Kernels with fewer scalar ops than this stay single-threaded — a
+/// scoped spawn costs ~10µs, so parallelism below this floor loses.
+pub const PAR_MIN_WORK: usize = 1 << 16;
+
+/// 0 = not yet resolved.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn hardware_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Validate/resolve a requested thread count: `0` resolves to
+/// `PALLAS_THREADS` (if set and positive) else the hardware count;
+/// explicit values are clamped to `[1, MAX_THREADS]`.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        if let Ok(s) = std::env::var("PALLAS_THREADS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n > 0 {
+                    return n.min(MAX_THREADS);
+                }
+            }
+        }
+        hardware_threads().min(MAX_THREADS)
+    } else {
+        requested.clamp(1, MAX_THREADS)
+    }
+}
+
+/// Set the global worker count (returns the effective, validated
+/// value). Called by the server at startup; `0` = auto.
+pub fn set_threads(requested: usize) -> usize {
+    let n = resolve_threads(requested);
+    THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// The current global worker count (lazily resolved on first use).
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let n = resolve_threads(0);
+            THREADS.store(n, Ordering::Relaxed);
+            n
+        }
+        n => n,
+    }
+}
+
+/// Worker count for a kernel invocation doing ~`work` scalar ops:
+/// 1 below the spawn-amortization floor, else the global count.
+pub fn threads_for(work: usize) -> usize {
+    if work < PAR_MIN_WORK {
+        1
+    } else {
+        threads()
+    }
+}
+
+/// Split `data` (a row-major buffer of rows of `row_len` elements)
+/// into contiguous whole-row chunks and call `f(first_row, chunk)` on
+/// each, one chunk per worker. With `nt <= 1` this is a plain call
+/// `f(0, data)` — callers write the row loop once and get both paths.
+pub fn par_row_ranges_with<T, F>(nt: usize, data: &mut [T], row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(row_len > 0, "row_len must be positive");
+    debug_assert_eq!(data.len() % row_len, 0, "buffer not a whole number of rows");
+    let rows = data.len() / row_len;
+    let mut nt = nt.min(rows);
+    if nt == 0 {
+        nt = 1;
+    }
+    if nt == 1 {
+        f(0, data);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut first_row = 0;
+        loop {
+            let take = (rows_per * row_len).min(rest.len());
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let start = first_row;
+            first_row += take / row_len;
+            if rest.is_empty() {
+                // Final chunk runs on the calling thread — it would
+                // only block in the scope join otherwise, and this
+                // saves one spawn per invocation.
+                f(start, chunk);
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(start, chunk));
+        }
+    });
+}
+
+/// [`par_row_ranges_with`] at the global worker count.
+pub fn par_row_ranges<T, F>(data: &mut [T], row_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    par_row_ranges_with(threads(), data, row_len, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_clamps_and_defaults() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert_eq!(resolve_threads(1_000_000), MAX_THREADS);
+    }
+
+    #[test]
+    fn covers_every_row_exactly_once() {
+        for nt in [1usize, 2, 3, 7, 16] {
+            let rows = 13;
+            let row_len = 4;
+            let mut data = vec![0u32; rows * row_len];
+            par_row_ranges_with(nt, &mut data, row_len, |first_row, chunk| {
+                for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                    for v in row.iter_mut() {
+                        *v += (first_row + i) as u32 + 1;
+                    }
+                }
+            });
+            let expect: Vec<u32> =
+                (0..rows).flat_map(|r| std::iter::repeat(r as u32 + 1).take(row_len)).collect();
+            assert_eq!(data, expect, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        // Same per-row computation => identical buffers for any split.
+        let rows = 29;
+        let row_len = 3;
+        let run = |nt: usize| {
+            let mut data = vec![0f32; rows * row_len];
+            par_row_ranges_with(nt, &mut data, row_len, |first_row, chunk| {
+                for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                    let r = first_row + i;
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v = ((r * 31 + c) as f32).sin() * 0.37 + (r as f32).sqrt();
+                    }
+                }
+            });
+            data
+        };
+        let serial = run(1);
+        for nt in [2usize, 4, 8] {
+            assert_eq!(run(nt), serial, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn threads_for_gates_small_work() {
+        assert_eq!(threads_for(8), 1);
+        assert!(threads_for(PAR_MIN_WORK) >= 1);
+    }
+
+    #[test]
+    fn single_row_buffer_column_split() {
+        // row_len == 1 treats each element as a row (column split of a
+        // single GEMV output).
+        let mut data = vec![0usize; 10];
+        par_row_ranges_with(4, &mut data, 1, |first, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = first + i;
+            }
+        });
+        assert_eq!(data, (0..10).collect::<Vec<_>>());
+    }
+}

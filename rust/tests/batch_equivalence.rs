@@ -1,0 +1,94 @@
+//! The batched serving hot path must be *bit-identical* to the
+//! sequential single-request path, per backend lane:
+//!
+//! - `prefill` ≡ repeated `decode_step` (last-token logits AND the
+//!   K/V cache contents), and
+//! - `decode_batch` ≡ per-request `decode_step` for mixed-length
+//!   batches,
+//!
+//! across the dense (fp16), binary (sign-GEMM) and BTC codebook
+//! (LUT-GEMM) backends, with the real serving engines prepared. All
+//! on the hermetic fixture, so this runs without `make artifacts`.
+
+use btc_llm::model::kvcache::KvCache;
+use btc_llm::model::Transformer;
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::fixture::tiny_raw_model;
+use btc_llm::util::rng::Rng;
+
+fn lanes() -> Vec<(&'static str, QuantConfig)> {
+    let mut btc = QuantConfig::btc(0.8);
+    btc.transform_outer = 2; // keep the fixture quantization fast
+    vec![("fp16", QuantConfig::fp16()), ("binary", QuantConfig::naive()), ("btc", btc)]
+}
+
+fn lane_model(cfg: &QuantConfig) -> Transformer {
+    let (raw, corpus) = tiny_raw_model(21);
+    let mut qm = quantize_model(&raw, &corpus, cfg).expect("quantize fixture");
+    qm.model.prepare_engines(); // the real serving engines
+    qm.model
+}
+
+fn assert_caches_identical(label: &str, a: &KvCache, b: &KvCache) {
+    assert_eq!(a.layers.len(), b.layers.len());
+    for (li, (la, lb)) in a.layers.iter().zip(b.layers.iter()).enumerate() {
+        assert_eq!(la.len, lb.len, "{label}: layer {li} position count");
+        assert_eq!(la.k, lb.k, "{label}: layer {li} K payload");
+        assert_eq!(la.v, lb.v, "{label}: layer {li} V payload");
+    }
+}
+
+#[test]
+fn prefill_equals_repeated_decode_step_all_backends() {
+    let mut rng = Rng::new(3);
+    for (label, cfg) in lanes() {
+        let model = lane_model(&cfg);
+        for trial in 0..3 {
+            let len = 1 + rng.below(10);
+            let prompt: Vec<u16> = (0..len).map(|_| rng.below(128) as u16).collect();
+            let cap = prompt.len() + 4;
+            let mut c_fast = model.new_cache(cap);
+            let fast = model.prefill(&prompt, &mut c_fast);
+            let mut c_slow = model.new_cache(cap);
+            let mut slow = Vec::new();
+            for &t in &prompt {
+                slow = model.decode_step(t, &mut c_slow);
+            }
+            assert_eq!(fast, slow, "{label} trial {trial}: prefill logits differ");
+            assert_caches_identical(label, &c_fast, &c_slow);
+        }
+    }
+}
+
+#[test]
+fn decode_batch_equals_per_request_decode_step_all_backends() {
+    let mut rng = Rng::new(4);
+    for (label, cfg) in lanes() {
+        let model = lane_model(&cfg);
+        // Mixed-length histories, then 3 fused decode rounds.
+        let bsz = 4usize;
+        let histories: Vec<Vec<u16>> = (0..bsz)
+            .map(|b| (0..b + 1).map(|_| rng.below(128) as u16).collect())
+            .collect();
+        let cap = 16;
+        let mut batch_caches: Vec<KvCache> = (0..bsz).map(|_| model.new_cache(cap)).collect();
+        let mut solo_caches: Vec<KvCache> = (0..bsz).map(|_| model.new_cache(cap)).collect();
+        for b in 0..bsz {
+            model.prefill(&histories[b], &mut batch_caches[b]);
+            model.prefill(&histories[b], &mut solo_caches[b]);
+        }
+        for round in 0..3 {
+            let next: Vec<u16> = (0..bsz).map(|_| rng.below(128) as u16).collect();
+            let batched = model.decode_batch(&next, &mut batch_caches);
+            for b in 0..bsz {
+                let solo = model.decode_step(next[b], &mut solo_caches[b]);
+                assert_eq!(
+                    batched.row(b),
+                    &solo[..],
+                    "{label} round {round} row {b}: fused decode logits differ"
+                );
+                assert_caches_identical(label, &batch_caches[b], &solo_caches[b]);
+            }
+        }
+    }
+}
