@@ -74,13 +74,15 @@ fn main() -> anyhow::Result<()> {
     t.print();
     let _ = report.write_if_enabled();
 
-    // Memory panel.
-    let mut mt = Table::new(&["format", "weight bytes", "vs fp32"]);
+    // Memory panel — *measured* resident bytes of each engine's owned
+    // buffers (not a shipping estimate; see eval::memory for the
+    // accounted-vs-resident split).
+    let mut mt = Table::new(&["format", "resident bytes", "vs fp32"]);
     let fp_bytes = o * n * 4;
     for (name, bytes) in [
         ("fp32 dense", fp_bytes),
-        ("W1A16 packed", xnor.weight_bytes()),
-        ("LUT codebook (idx+keys)", lut.weight_bytes()),
+        ("W1A16 packed", xnor.resident_bytes()),
+        ("LUT codebook (idx+keys)", lut.resident_bytes()),
     ] {
         mt.row(&[name.to_string(), bytes.to_string(), format!("{:.1}x", fp_bytes as f64 / bytes as f64)]);
     }

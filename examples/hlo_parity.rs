@@ -21,6 +21,7 @@ use btc_llm::quant::binarize::BinaryLayer;
 use btc_llm::quant::codebook::{BinaryCodebook, CodebookLayer};
 use btc_llm::runtime::{PjrtRuntime, TensorArg};
 use btc_llm::tensor::Matrix;
+use btc_llm::util::f16;
 use btc_llm::util::proptest::assert_close;
 use btc_llm::util::rng::Rng;
 
@@ -64,31 +65,28 @@ fn main() -> anyhow::Result<()> {
     let cb_signs: Vec<f32> = (0..c * v).map(|_| rng.sign()).collect();
     let nb = n / v;
     let idx: Vec<i32> = (0..o * nb).map(|_| rng.below(c) as i32).collect();
+    // CodebookLayer rounds its scales to f16 (the shipping precision),
+    // so feed the JAX kernel the same rounded values to keep the
+    // comparison apples-to-apples.
+    let alpha16 = f16::decode_vec(&f16::encode_vec(&alpha));
+    let mu16 = f16::decode_vec(&f16::encode_vec(&mu));
     let jax_out = rt.run_f32(
         "lut_gemm.hlo.txt",
         &[
             TensorArg::F32(vec![m, n], x.data.clone()),
             TensorArg::F32(vec![c, v], cb_signs.clone()),
             TensorArg::I32(vec![o, nb], idx.clone()),
-            TensorArg::F32(vec![o], alpha.clone()),
-            TensorArg::F32(vec![o], mu.clone()),
+            TensorArg::F32(vec![o], alpha16.clone()),
+            TensorArg::F32(vec![o], mu16.clone()),
         ],
     )?;
     let cb_words: Vec<u64> = (0..c)
         .map(|k| btc_llm::bitops::pack::pack_signs(&cb_signs[k * v..(k + 1) * v])[0])
         .collect();
     let codebook = Arc::new(BinaryCodebook { v, words: cb_words });
-    let cl = CodebookLayer {
-        rows: o,
-        cols: n,
-        v,
-        idx: idx.iter().map(|&i| i as u32).collect(),
-        codebook,
-        alpha,
-        mu,
-        col_group: vec![0; n],
-        n_groups: 1,
-    };
+    let idx_u32: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+    let ungrouped = vec![0u16; n];
+    let cl = CodebookLayer::new(o, n, codebook, &idx_u32, &alpha16, &mu16, &ungrouped, 1);
     let rust_out = LutGemmEngine::try_new(&cl).unwrap().forward(&x);
     assert_close(&rust_out.data, &jax_out, 1e-3, 1e-3)
         .map_err(|e| anyhow::anyhow!("lut_gemm parity: {e}"))?;

@@ -1,8 +1,11 @@
-//! Bit-level substrate for binary weights: ±1 ↔ packed-u64 conversion
-//! and XOR/POPCNT Hamming kernels (paper Eq. 4-5, Alg. 3).
+//! Bit-level substrate for binary weights: ±1 ↔ packed-u64 conversion,
+//! XOR/POPCNT Hamming kernels (paper Eq. 4-5, Alg. 3), and the k-bit
+//! [`PackedPlane`] behind sub-byte codebook index storage.
 
 pub mod hamming;
 pub mod pack;
+pub mod plane;
 
 pub use hamming::{hamming, hamming_words, xnor_dot};
 pub use pack::BitMatrix;
+pub use plane::PackedPlane;

@@ -1,0 +1,260 @@
+//! **`PackedPlane`** — a dense plane of k-bit unsigned integers
+//! (1 <= k <= 32), the storage substrate that makes codebook index
+//! planes *actually* sub-byte in RAM (paper's "eliminates sparse
+//! masks" memory claim, §4.1/App. H).
+//!
+//! Layout: row-major; each row is an independent little-endian
+//! bitstream padded to whole u64 words, so row starts are word-aligned
+//! and rows can be decoded independently (the LUT-GEMM gather decodes
+//! one block-row tile at a time). Elements may straddle a word
+//! boundary inside a row (k <= 32, so at most two words).
+//!
+//! The wire format is *tighter* than this in-memory layout: QLM1 v3
+//! serializes planes as unpadded bitstreams via
+//! [`crate::io::wire::w_bits`] / [`crate::io::wire::r_bits`], so row
+//! padding never reaches disk.
+
+/// A bit-packed matrix of k-bit unsigned values with word-aligned rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedPlane {
+    pub rows: usize,
+    pub cols: usize,
+    /// Bits per element (1..=32).
+    pub k: usize,
+    pub words_per_row: usize,
+    pub data: Vec<u64>,
+}
+
+impl PackedPlane {
+    /// All-zero plane. `k` must be in 1..=32.
+    pub fn zeros(rows: usize, cols: usize, k: usize) -> PackedPlane {
+        assert!((1..=32).contains(&k), "PackedPlane element width {k} out of 1..=32");
+        let wpr = (cols * k).div_ceil(64);
+        PackedPlane { rows, cols, k, words_per_row: wpr, data: vec![0; rows * wpr] }
+    }
+
+    /// Pack row-major values. Every value must fit in `k` bits.
+    pub fn from_u32s(rows: usize, cols: usize, k: usize, values: &[u32]) -> PackedPlane {
+        assert_eq!(values.len(), rows * cols, "value count != rows*cols");
+        let mut p = Self::zeros(rows, cols, k);
+        for r in 0..rows {
+            for c in 0..cols {
+                p.set(r, c, values[r * cols + c]);
+            }
+        }
+        p
+    }
+
+    /// Number of logical elements.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    #[inline]
+    fn mask(&self) -> u64 {
+        (1u64 << self.k) - 1
+    }
+
+    #[inline]
+    fn row_words(&self, r: usize) -> &[u64] {
+        &self.data[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        let row = self.row_words(r);
+        let bit = c * self.k;
+        let (w, off) = (bit >> 6, bit & 63);
+        let mut v = row[w] >> off;
+        if off + self.k > 64 {
+            v |= row[w + 1] << (64 - off);
+        }
+        (v & self.mask()) as u32
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: u32) {
+        let k = self.k;
+        let mask = self.mask();
+        assert!((v as u64) <= mask, "value {v} does not fit in {k} bits");
+        debug_assert!(r < self.rows && c < self.cols);
+        let base = r * self.words_per_row;
+        let bit = c * k;
+        let (w, off) = (bit >> 6, bit & 63);
+        self.data[base + w] = (self.data[base + w] & !(mask << off)) | ((v as u64) << off);
+        if off + k > 64 {
+            let lo = 64 - off; // bits already placed in the first word
+            let w2 = &mut self.data[base + w + 1];
+            *w2 = (*w2 & !(mask >> lo)) | ((v as u64) >> lo);
+        }
+    }
+
+    /// Bulk-decode elements `c0..c0+out.len()` of row `r` into a
+    /// caller-provided (typically stack) buffer — the hot-path
+    /// accessor: one running bit cursor, no per-element div/mod.
+    #[inline]
+    pub fn decode_range(&self, r: usize, c0: usize, out: &mut [u32]) {
+        debug_assert!(c0 + out.len() <= self.cols, "decode_range out of bounds");
+        let k = self.k;
+        let mask = self.mask();
+        let row = self.row_words(r);
+        let mut bit = c0 * k;
+        for o in out.iter_mut() {
+            let (w, off) = (bit >> 6, bit & 63);
+            let mut v = row[w] >> off;
+            if off + k > 64 {
+                v |= row[w + 1] << (64 - off);
+            }
+            *o = (v & mask) as u32;
+            bit += k;
+        }
+    }
+
+    /// Decode one whole row.
+    pub fn decode_row(&self, r: usize) -> Vec<u32> {
+        let mut out = vec![0u32; self.cols];
+        self.decode_range(r, 0, &mut out);
+        out
+    }
+
+    /// Decode the whole plane row-major.
+    pub fn to_u32s(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.len());
+        for r in 0..self.rows {
+            out.extend(self.decode_row(r));
+        }
+        out
+    }
+
+    /// Decode the whole plane row-major, widened to u64 (the shape the
+    /// generic packed wire writer takes).
+    pub fn to_u64s(&self) -> Vec<u64> {
+        let mut out = Vec::with_capacity(self.len());
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.push(self.get(r, c) as u64);
+            }
+        }
+        out
+    }
+
+    /// Transposed copy (rows x cols -> cols x rows, same k) — used to
+    /// build the LUT-GEMM engine's block-major index plane from a
+    /// layer's row-major one.
+    pub fn transposed(&self) -> PackedPlane {
+        let mut t = Self::zeros(self.cols, self.rows, self.k);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.set(c, r, self.get(r, c));
+            }
+        }
+        t
+    }
+
+    /// Actually-resident bytes of the packed buffer.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_property_all_widths() {
+        check(
+            "plane pack/unpack roundtrip",
+            40,
+            |r: &mut Rng| {
+                let k = 1 + r.below(32);
+                let rows = 1 + r.below(6);
+                let cols = 1 + r.below(40);
+                let cap = if k == 32 { u64::from(u32::MAX) + 1 } else { 1u64 << k };
+                let vals: Vec<u32> =
+                    (0..rows * cols).map(|_| (r.next_u64() % cap) as u32).collect();
+                (rows, cols, k, vals)
+            },
+            |(rows, cols, k, vals)| {
+                let p = PackedPlane::from_u32s(*rows, *cols, *k, vals);
+                if &p.to_u32s() == vals { Ok(()) } else { Err("roundtrip mismatch".into()) }
+            },
+        );
+    }
+
+    #[test]
+    fn straddles_word_boundaries() {
+        // k=13 makes elements cross u64 boundaries inside a row.
+        let vals: Vec<u32> = (0..20).map(|i| (i * 397) % (1 << 13)).collect();
+        let p = PackedPlane::from_u32s(2, 10, 13, &vals);
+        assert_eq!(p.words_per_row, 3); // 130 bits -> 3 words
+        for r in 0..2 {
+            for c in 0..10 {
+                assert_eq!(p.get(r, c), vals[r * 10 + c], "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_range_matches_get() {
+        let mut rng = Rng::new(7);
+        let vals: Vec<u32> = (0..3 * 33).map(|_| (rng.next_u64() % (1 << 11)) as u32).collect();
+        let p = PackedPlane::from_u32s(3, 33, 11, &vals);
+        for c0 in [0usize, 1, 7, 30] {
+            let n = 33 - c0;
+            let mut buf = vec![0u32; n];
+            p.decode_range(1, c0, &mut buf);
+            for (i, &b) in buf.iter().enumerate() {
+                assert_eq!(b, p.get(1, c0 + i), "c0={c0} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(8);
+        let vals: Vec<u32> = (0..5 * 9).map(|_| (rng.next_u64() % (1 << 6)) as u32).collect();
+        let p = PackedPlane::from_u32s(5, 9, 6, &vals);
+        let t = p.transposed();
+        assert_eq!((t.rows, t.cols), (9, 5));
+        for r in 0..5 {
+            for c in 0..9 {
+                assert_eq!(t.get(c, r), p.get(r, c));
+            }
+        }
+        assert_eq!(t.transposed(), p);
+    }
+
+    #[test]
+    fn set_overwrites_cleanly() {
+        let mut p = PackedPlane::zeros(1, 8, 5);
+        p.set(0, 3, 0b11111);
+        p.set(0, 3, 0b01010);
+        assert_eq!(p.get(0, 3), 0b01010);
+        assert_eq!(p.get(0, 2), 0);
+        assert_eq!(p.get(0, 4), 0);
+    }
+
+    #[test]
+    fn rows_are_word_aligned() {
+        // 3 cols x 5 bits = 15 bits/row -> 1 word/row; rows independent.
+        let p = PackedPlane::from_u32s(2, 3, 5, &[1, 2, 3, 29, 30, 31]);
+        assert_eq!(p.words_per_row, 1);
+        assert_eq!(p.data.len(), 2);
+        assert_eq!(p.decode_row(0), vec![1, 2, 3]);
+        assert_eq!(p.decode_row(1), vec![29, 30, 31]);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let p = PackedPlane::zeros(10, 100, 13); // 1300 bits -> 21 words/row
+        assert_eq!(p.storage_bytes(), 10 * 21 * 8);
+        assert_eq!(p.len(), 1000);
+    }
+}

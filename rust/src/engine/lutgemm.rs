@@ -14,6 +14,7 @@
 //! Column groups must be block-aligned (enforced by `try_new`): the
 //! pipeline rounds split-point boundaries to `v`-blocks for deployment.
 
+use crate::bitops::PackedPlane;
 use crate::quant::codebook::CodebookLayer;
 use crate::tensor::Matrix;
 use crate::util::parallel;
@@ -43,12 +44,18 @@ pub struct LutGemmEngine {
     pub segs: usize,
     pub nb: usize,
     pub c: usize,
-    /// Centroid indices stored block-major (`idx_t[j*out + r]`): the
-    /// gather walks a tile of output rows per block, so this transpose
-    /// makes the per-block index reads contiguous.
-    idx_t: Vec<u32>,
+    /// Centroid indices stored *packed* (`index_bits()` bits each) and
+    /// block-major (plane row `j` holds block j's index for every
+    /// output row): the gather walks a tile of output rows per block,
+    /// decoding one tile into a stack buffer at a time, so the
+    /// per-block index reads stay contiguous and the resident plane is
+    /// genuinely sub-byte.
+    idx_t: PackedPlane,
     /// Codebook keys, c x segs, each a μ-bit pattern.
     keys: Vec<u16>,
+    /// Scales decoded from the layer's f16 once at build time (the
+    /// hot loop multiplies f32; resident cost is reported honestly by
+    /// [`Self::resident_bytes`]).
     alpha: Vec<f32>,
     mu: Vec<f32>,
     /// Per-block group id (block-aligned column groups).
@@ -72,12 +79,13 @@ impl LutGemmEngine {
         let v = layer.v;
         let nb = layer.blocks_per_row();
         // Verify block-aligned groups and collect per-block ids.
+        let col_group = layer.col_groups();
         let mut block_group = Vec::with_capacity(nb);
         for j in 0..nb {
             let start = j * v;
             let end = ((j + 1) * v).min(layer.cols);
-            let g = layer.col_group[start];
-            if layer.col_group[start..end].iter().any(|&x| x != g) {
+            let g = col_group[start];
+            if col_group[start..end].iter().any(|&x| x != g) {
                 return None;
             }
             block_group.push(g);
@@ -93,14 +101,11 @@ impl LutGemmEngine {
                 keys[k * segs + p] = ((w >> (p * mu_bits)) & ((1u64 << mu_bits) - 1)) as u16;
             }
         }
-        // Transpose indices to block-major for the tiled gather.
+        // Transpose the packed plane to block-major for the tiled
+        // gather (k bits per index are preserved — no widening).
         let out = layer.rows;
-        let mut idx_t = vec![0u32; layer.idx.len()];
-        for r in 0..out {
-            for j in 0..nb {
-                idx_t[j * out + r] = layer.idx[r * nb + j];
-            }
-        }
+        let idx_t = layer.idx.transposed();
+        debug_assert_eq!((idx_t.rows, idx_t.cols), (nb, out));
         Some(LutGemmEngine {
             out,
             cols: layer.cols,
@@ -111,8 +116,8 @@ impl LutGemmEngine {
             c,
             idx_t,
             keys,
-            alpha: layer.alpha.clone(),
-            mu: layer.mu.clone(),
+            alpha: layer.alpha_f32(),
+            mu: layer.mu_f32(),
             block_group,
             n_groups: layer.n_groups,
         })
@@ -221,25 +226,28 @@ impl LutGemmEngine {
 
     /// Gather-accumulate output rows `r0..r0+ys.len()` from a built
     /// `cblut`, tiled so each block's `cblut` row is reused across a
-    /// whole tile of output rows (block-major `idx_t` makes the index
-    /// reads contiguous). Per output row the accumulation order stays
-    /// j = 0..nb, so tiling is bit-identical to the row-at-a-time loop.
+    /// whole tile of output rows. The block-major packed plane is
+    /// decoded `GATHER_TILE` indices at a time into a stack buffer, so
+    /// the inner loop is a branch-light table walk over plain u32s.
+    /// Per output row the accumulation order stays j = 0..nb, so
+    /// tiling is bit-identical to the row-at-a-time loop.
     fn gather(&self, cblut: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
-        let (nb, c, out_n) = (self.nb, self.c, self.out);
+        let (nb, c) = (self.nb, self.c);
+        let mut ibuf = [0u32; GATHER_TILE];
         let mut r = r0;
         for tile in ys.chunks_mut(GATHER_TILE) {
             let tl = tile.len();
             let mut acc = [0f32; GATHER_TILE];
             for j in 0..nb {
                 let cb = &cblut[j * c..(j + 1) * c];
-                let it = &self.idx_t[j * out_n + r..j * out_n + r + tl];
+                self.idx_t.decode_range(j, r, &mut ibuf[..tl]);
                 if self.n_groups == 1 {
-                    for (a, &k) in acc[..tl].iter_mut().zip(it) {
+                    for (a, &k) in acc[..tl].iter_mut().zip(&ibuf[..tl]) {
                         *a += cb[k as usize];
                     }
                 } else {
                     let g = self.block_group[j] as usize;
-                    for (rr, (a, &k)) in acc[..tl].iter_mut().zip(it).enumerate() {
+                    for (rr, (a, &k)) in acc[..tl].iter_mut().zip(&ibuf[..tl]).enumerate() {
                         *a += self.alpha[(r + rr) * self.n_groups + g] * cb[k as usize];
                     }
                 }
@@ -257,20 +265,16 @@ impl LutGemmEngine {
         }
     }
 
-    /// Shipped bytes: packed indices + keys + fp16 scales.
-    pub fn weight_bytes(&self) -> usize {
-        let idx_bits = (usize::BITS - (self.c.saturating_sub(1)).leading_zeros()).max(1) as usize;
-        (self.idx_t.len() * idx_bits).div_ceil(8)
-            + self.keys.len() * mu_key_bytes(self.mu_bits)
-            + (self.alpha.len() + self.mu.len()) * 2
-    }
-}
-
-fn mu_key_bytes(mu_bits: usize) -> usize {
-    if mu_bits <= 8 {
-        1
-    } else {
-        2
+    /// Actually-resident bytes of the engine's owned buffers: the
+    /// packed block-major index plane, the u16 key table, the decoded
+    /// f32 scales, and the per-block group ids. This is a measurement,
+    /// not the (previously fictional) shipping estimate — pinned equal
+    /// to the buffer sizes by a unit test.
+    pub fn resident_bytes(&self) -> usize {
+        self.idx_t.storage_bytes()
+            + self.keys.len() * 2
+            + (self.alpha.len() + self.mu.len()) * 4
+            + self.block_group.len() * 2
     }
 }
 
@@ -339,11 +343,19 @@ mod tests {
     #[test]
     fn rejects_unaligned_groups() {
         let mut rng = Rng::new(6);
-        let mut cl = make_codebook_layer(&mut rng, 4, 16, 8, 8);
-        // Make groups vary inside a block.
-        cl.n_groups = 2;
-        cl.col_group = (0..16).map(|c| (c % 2) as u16).collect();
-        cl.alpha = vec![1.0; 4 * 2];
+        let base = make_codebook_layer(&mut rng, 4, 16, 8, 8);
+        // Rebuild with groups varying inside a block.
+        let col_group: Vec<u16> = (0..16).map(|c| (c % 2) as u16).collect();
+        let cl = CodebookLayer::new(
+            4,
+            16,
+            base.codebook.clone(),
+            &base.idx.to_u32s(),
+            &[1.0f32; 8],
+            &base.mu_f32(),
+            &col_group,
+            2,
+        );
         assert!(LutGemmEngine::try_new(&cl).is_none());
     }
 
@@ -419,11 +431,76 @@ mod tests {
     }
 
     #[test]
-    fn weight_bytes_sub_byte_per_weight() {
+    fn resident_bytes_equal_sum_of_owned_buffers() {
+        // The memory estimate must be a measurement of the buffers the
+        // engine actually owns — not a hypothetical packed size.
         let mut rng = Rng::new(9);
-        let cl = make_codebook_layer(&mut rng, 64, 256, 16, 256);
+        let cl = make_codebook_layer(&mut rng, 70, 256, 16, 256);
         let eng = LutGemmEngine::try_new(&cl).unwrap();
-        let dense_bytes = 64 * 256 * 4;
-        assert!(eng.weight_bytes() * 8 < dense_bytes, "{}", eng.weight_bytes());
+        let expect = eng.idx_t.storage_bytes()
+            + eng.keys.len() * 2
+            + (eng.alpha.len() + eng.mu.len()) * 4
+            + eng.block_group.len() * 2;
+        assert_eq!(eng.resident_bytes(), expect);
+        // And the index plane dominates far below 8 bits/weight.
+        let dense_bytes = 70 * 256 * 4;
+        assert!(eng.resident_bytes() * 8 < dense_bytes, "{}", eng.resident_bytes());
+        // Packed block-major plane: 8-bit codes, nb=16 rows of 70.
+        assert_eq!(eng.idx_t.storage_bytes(), 16 * (70 * 8usize).div_ceil(64) * 8);
+    }
+
+    #[test]
+    fn packed_gather_bit_identical_to_dense_index_reference() {
+        // Reference path: same Stage-I/II tables, but the gather walks
+        // a dense u32 transposed index plane (the pre-packing layout).
+        // The packed-plane gather must agree bit-for-bit.
+        let mut rng = Rng::new(14);
+        for (rows, cols, v, c) in [(70usize, 64usize, 16usize, 40usize), (33, 48, 8, 200)] {
+            let cl = make_codebook_layer(&mut rng, rows, cols, v, c);
+            let eng = LutGemmEngine::try_new(&cl).unwrap();
+            let dense_idx_t: Vec<u32> = {
+                let mut t = vec![0u32; rows * eng.nb];
+                let idx = cl.idx.to_u32s();
+                for r in 0..rows {
+                    for j in 0..eng.nb {
+                        t[j * rows + r] = idx[r * eng.nb + j];
+                    }
+                }
+                t
+            };
+            let x = Matrix::randn(1, cols, &mut rng);
+            let mut sc = eng.scratch();
+            let xsum = eng.build_tables(x.row(0), &mut sc);
+            let mut want = vec![0f32; rows];
+            let mut r = 0usize;
+            for tile in want.chunks_mut(GATHER_TILE) {
+                let tl = tile.len();
+                let mut acc = [0f32; GATHER_TILE];
+                for j in 0..eng.nb {
+                    let cb = &sc.cblut[j * eng.c..(j + 1) * eng.c];
+                    let it = &dense_idx_t[j * rows + r..j * rows + r + tl];
+                    if eng.n_groups == 1 {
+                        for (a, &k) in acc[..tl].iter_mut().zip(it) {
+                            *a += cb[k as usize];
+                        }
+                    } else {
+                        let g = eng.block_group[j] as usize;
+                        for (rr, (a, &k)) in acc[..tl].iter_mut().zip(it).enumerate() {
+                            *a += eng.alpha[(r + rr) * eng.n_groups + g] * cb[k as usize];
+                        }
+                    }
+                }
+                for (rr, yv) in tile.iter_mut().enumerate() {
+                    *yv = if eng.n_groups == 1 {
+                        eng.alpha[r + rr] * acc[rr] + eng.mu[r + rr] * xsum
+                    } else {
+                        acc[rr] + eng.mu[r + rr] * xsum
+                    };
+                }
+                r += tl;
+            }
+            let got = eng.forward(&x);
+            assert_eq!(got.row(0), &want[..], "{rows}x{cols} v={v} c={c}");
+        }
     }
 }

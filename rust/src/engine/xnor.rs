@@ -178,9 +178,15 @@ impl BinaryGemmEngine {
         }
     }
 
-    /// Packed-weight storage in bytes (what actually ships).
-    pub fn weight_bytes(&self) -> usize {
-        self.b.storage_bytes() + (self.alpha.len() + self.mu.len()) * 2 // fp16
+    /// Actually-resident bytes of the engine's owned buffers: packed
+    /// sign matrix, f32 scales (held full-width for the hot loop) and
+    /// the per-group column masks. A measurement, not the fp16
+    /// shipping convention — see `WeightBackend::storage_bits` for the
+    /// accounted number.
+    pub fn resident_bytes(&self) -> usize {
+        self.b.storage_bytes()
+            + (self.alpha.len() + self.mu.len()) * 4
+            + self.group_masks.iter().map(|m| m.len() * 8).sum::<usize>()
     }
 }
 
@@ -286,11 +292,11 @@ mod tests {
     }
 
     #[test]
-    fn weight_bytes_is_packed() {
+    fn resident_bytes_equal_sum_of_owned_buffers() {
         let mut rng = Rng::new(4);
         let w = Matrix::randn(64, 128, &mut rng);
         let eng = BinaryGemmEngine::new(&BinaryLayer::quantize(&w));
-        // 64 rows x 2 words x 8 bytes + scales.
-        assert_eq!(eng.weight_bytes(), 64 * 2 * 8 + 2 * 64 * 2);
+        // 64 rows x 2 words x 8 bytes + f32 scales + 1 group mask row.
+        assert_eq!(eng.resident_bytes(), 64 * 2 * 8 + 2 * 64 * 4 + 2 * 8);
     }
 }

@@ -1,7 +1,14 @@
 //! Memory / effective-bits accounting (Table 3c and the W-Bits columns
-//! of every table). Counts what actually ships: packed signs or
-//! indices, fp16 scales/biases, column-group ids, Kronecker transform
-//! factors, the shared codebook, and the fp16 embedding/norm residue.
+//! of every table) **plus the measured truth**: next to the accounted
+//! bits (packed signs or indices, fp16 scales/biases, column-group
+//! ids, Kronecker transform factors, the shared codebook, the fp16
+//! embedding/norm residue) this report now carries what each backend
+//! *actually* holds resident in RAM ([`crate::model::WeightBackend::resident_bytes`])
+//! and what it serializes to the QLM1 wire
+//! ([`crate::model::WeightBackend::wire_bytes`]), so any regression of
+//! the accounted-vs-real gap is visible in tests and benches.
+
+use std::collections::BTreeSet;
 
 use crate::model::Transformer;
 
@@ -10,17 +17,34 @@ use crate::model::Transformer;
 pub struct MemoryReport {
     /// fp16 baseline for the whole model (the paper's "FP16" row).
     pub fp16_total_bytes: usize,
-    /// Quantized linear-weight payload (signs/indices + scales + groups).
+    /// Quantized linear-weight payload (signs/indices + scales +
+    /// groups), by the accounting convention.
     pub linear_bytes: usize,
-    /// Shared codebook payload.
+    /// Measured: bytes the linear backends actually hold in RAM.
+    pub linear_resident_bytes: usize,
+    /// Measured: bytes the linear backends serialize to the QLM1 wire.
+    pub linear_wire_bytes: usize,
+    /// Shared codebook payload (accounted: c x v bits). All *distinct*
+    /// codebooks are summed (deduped by Arc identity), so
+    /// multi-codebook models are not under-reported.
     pub codebook_bytes: usize,
-    /// Transform factors (+ sigma bitmaps).
+    /// Measured: bytes the distinct codebooks hold resident (one u64
+    /// per centroid for the XOR/POPCNT hot paths).
+    pub codebook_resident_bytes: usize,
+    /// Transform factors (f32 Kronecker matrices + sigma ±1 bitmaps) —
+    /// p1/p2 are counted at the f32 width they ship and occupy.
     pub transform_bytes: usize,
     /// Embeddings + norms kept in fp16.
     pub residual_fp16_bytes: usize,
-    /// Linear-weight bits per linear weight (the W-bits measurement).
+    /// Accounted linear-weight bits per linear weight (the W-bits
+    /// measurement the paper's tables report).
     pub linear_bits_per_weight: f64,
-    /// Total model bytes after quantization.
+    /// Measured resident linear bits per weight: after the packed-plane
+    /// refactor this matches the accounted number for the codebook
+    /// lane; lanes that keep wider buffers (dense f32, unpacked masks)
+    /// show their real cost here.
+    pub resident_bits_per_weight: f64,
+    /// Total model bytes after quantization (accounting convention).
     pub total_bytes: usize,
     /// fp16_total / total.
     pub compression: f64,
@@ -36,22 +60,30 @@ pub fn report(model: &Transformer) -> MemoryReport {
         (cfg.vocab * cfg.d_model + cfg.d_model + cfg.n_layer * 2 * cfg.d_model) * 2;
 
     let mut linear_bits = 0usize;
+    let mut linear_resident_bytes = 0usize;
+    let mut linear_wire_bytes = 0usize;
     let mut linear_weights = 0usize;
     let mut transform_bits = 0usize;
     let mut codebook_bits = 0usize;
-    let mut seen_codebook = false;
+    let mut codebook_resident_bytes = 0usize;
+    // Distinct shared codebooks, deduped by Arc identity: custom
+    // methods may attach per-family codebooks, and each one is real
+    // memory.
+    let mut seen_codebooks: BTreeSet<usize> = BTreeSet::new();
     for block in &model.blocks {
         for (_, lin) in block.linears() {
             let (o, i) = lin.backend.shape();
             linear_weights += o * i;
             linear_bits += lin.backend.storage_bits();
+            linear_resident_bytes += lin.backend.resident_bytes();
+            linear_wire_bytes += lin.backend.wire_bytes();
             if let Some(t) = &lin.transform {
-                transform_bits += (t.p1.data.len() + t.p2.data.len()) * 16 + t.sigma.len();
+                transform_bits += (t.p1.data.len() + t.p2.data.len()) * 32 + t.sigma.len();
             }
             if let Some(cb) = lin.backend.shared_codebook() {
-                if !seen_codebook {
-                    codebook_bits = cb.storage_bits();
-                    seen_codebook = true;
+                if seen_codebooks.insert(std::sync::Arc::as_ptr(&cb) as usize) {
+                    codebook_bits += cb.storage_bits();
+                    codebook_resident_bytes += cb.resident_bytes();
                 }
             }
         }
@@ -63,10 +95,15 @@ pub fn report(model: &Transformer) -> MemoryReport {
     MemoryReport {
         fp16_total_bytes,
         linear_bytes,
+        linear_resident_bytes,
+        linear_wire_bytes,
         codebook_bytes,
+        codebook_resident_bytes,
         transform_bytes,
         residual_fp16_bytes,
         linear_bits_per_weight: linear_bits as f64 / linear_weights.max(1) as f64,
+        resident_bits_per_weight: (linear_resident_bytes * 8) as f64
+            / linear_weights.max(1) as f64,
         total_bytes,
         compression: fp16_total_bytes as f64 / total_bytes.max(1) as f64,
         codebook_overhead: codebook_bytes as f64 / total_bytes.max(1) as f64,
@@ -96,10 +133,13 @@ mod tests {
         let m = tiny_model(1, 4);
         let r = report(&m);
         assert_eq!(r.fp16_total_bytes, m.cfg.param_count() * 2);
-        // Dense backends count at fp16 => compression ~1.
+        // Dense backends count at fp16 => compression ~1...
         assert!((r.linear_bits_per_weight - 16.0).abs() < 1e-9);
         assert!(r.compression > 0.9 && r.compression < 1.1);
         assert_eq!(r.codebook_bytes, 0);
+        // ...but the *measured* resident number tells the truth: the
+        // dense lane actually holds f32.
+        assert!((r.resident_bits_per_weight - 32.0).abs() < 1e-9);
     }
 
     #[test]
@@ -123,6 +163,70 @@ mod tests {
         assert!(r.linear_bits_per_weight < 8.0, "bits {}", r.linear_bits_per_weight);
         assert!(r.compression > 1.5, "compression {}", r.compression);
         assert!(r.codebook_overhead > 0.0 && r.codebook_overhead < 0.6);
+        // Measured truth: resident and wire bytes now track the
+        // accounted number. At d=16 the per-row word padding of the
+        // packed planes is the dominant slack, so the bound is loose
+        // here; the release-mode memory bench pins <= 5% at a real
+        // shape. Pre-refactor these were ~4x (u32 indices, f32 scales).
+        assert!(r.linear_resident_bytes > 0 && r.linear_wire_bytes > 0);
+        assert!(
+            r.linear_resident_bytes < 3 * r.linear_bytes,
+            "resident {} vs accounted {}",
+            r.linear_resident_bytes,
+            r.linear_bytes
+        );
+        assert!(
+            r.linear_wire_bytes < 2 * r.linear_bytes,
+            "wire {} vs accounted {}",
+            r.linear_wire_bytes,
+            r.linear_bytes
+        );
+        assert!(r.codebook_resident_bytes >= r.codebook_bytes);
+    }
+
+    #[test]
+    fn distinct_codebooks_are_all_counted() {
+        use crate::quant::binarize::BinaryLayer;
+        use crate::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
+        use crate::model::Linear;
+        use crate::tensor::Matrix;
+        use crate::util::rng::Rng;
+        use std::sync::Arc;
+
+        let mut m = tiny_model(1, 4);
+        let mut rng = Rng::new(21);
+        let mut make = |rows: usize, cols: usize, c: usize| {
+            let w = Matrix::randn(rows, cols, &mut rng);
+            let bl = BinaryLayer::quantize(&w);
+            let vectors = collect_vectors(&bl, 8);
+            let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, c, 3);
+            CodebookLayer::from_assignments(&bl, Arc::new(cb), assign)
+        };
+        let (rows, cols) = m.blocks[0].wq.backend.shape();
+        let cl1 = make(rows, cols, 8);
+        let cl2 = make(rows, cols, 4);
+        let shared = cl1.codebook.clone();
+        let bits1 = shared.storage_bits();
+        let bits2 = cl2.codebook.storage_bits();
+        m.blocks[0].wq = Linear::new(Box::new(cl1.clone()));
+        m.blocks[0].wo = Linear::new(Box::new(cl2));
+        // A second layer referencing the SAME Arc must not double-count.
+        m.blocks[0].wk = Linear::new(Box::new(CodebookLayer::new(
+            rows,
+            cols,
+            shared.clone(),
+            &cl1.idx.to_u32s(),
+            &cl1.alpha_f32(),
+            &cl1.mu_f32(),
+            &cl1.col_groups(),
+            cl1.n_groups,
+        )));
+        let r = report(&m);
+        assert_eq!(r.codebook_bytes, (bits1 + bits2).div_ceil(8));
+        assert_eq!(
+            r.codebook_resident_bytes,
+            (shared.c() + m.blocks[0].wo.backend.shared_codebook().unwrap().c()) * 8
+        );
     }
 
     #[test]

@@ -2,26 +2,40 @@
 //! `btc-llm quantize` output can be shipped to `btc-llm serve` without
 //! re-running the pipeline.
 //!
-//! v2 layout (little-endian):
+//! v3 layout (little-endian) — file bytes equal the accounted storage
+//! bits (sub-byte payloads ship as unpadded bitstreams, scales as
+//! IEEE f16):
 //! ```text
-//! magic b"QLM1", u32 version = 2
+//! magic b"QLM1", u32 version = 3
 //! TLM1-style model config block
-//! u8 has_codebook; codebook: u32 v, u32 c, u64 words[c]
+//! u8 has_codebook; codebook: u32 v, u32 c, then c v-bit centroids
+//!   packed (wire::w_bits — c*v bits, not c u64 words)
 //! u32 n_linears; per linear:
 //!   u32 layer; u8 slot (0..7)
 //!   u8 tag_len; tag bytes            (stable WeightBackend::tag)
-//!   u8 has_transform; transform: u32 dim,n1,n2; f32 sigma[dim],p1,p2
+//!   u8 has_transform; transform: u32 dim,n1,n2;
+//!     u8 sigma_packed; sigma as a dim-bit ±1 bitmap (1) or f32[dim]
+//!     (0, for non-sign diagonals); f32 p1[n1²], p2[n2²]
 //!   u8 has_act_quant; act-quant: u32 bits, u32 n, f32 scale[n]
-//!   backend payload                  (WeightBackend::write_payload)
+//!   backend payload                  (WeightBackend::write_payload;
+//!     the codebook backend writes packed index planes + u16 scales)
 //! ```
-//! v1 (tag = one byte: 0 dense, 1 binary, 2 codebook; no act-quant
-//! block — those models reload without activation quantization) still
-//! loads; v2 is always written. Backend payloads round-trip through
-//! the [`crate::model::register_backend`] registry, so **every**
-//! lane — not just BTC — ships, including custom backends registered
-//! at runtime. Norms/embeddings stay fp32 in the companion TLM1 blob;
-//! this file carries only the quantized linears (the paper's W-bits
-//! subject).
+//! Older containers still load: v1 (one-byte numeric tags, no
+//! act-quant block) and v2 (string tags, u64 codebook words, f32
+//! sigma, dense u32 codebook indices + f32 scales — layout pinned by
+//! the committed golden fixture in `rust/tests/fixtures/`). One
+//! deliberate semantic change on pre-v3 codebook payloads: their f32
+//! alpha/mu are rounded **once** to f16 at load (nearest-even), the
+//! shipping precision the storage accounting always claimed — scales
+//! that were already f16-representable (anything written by this
+//! crate's pipeline, whose layers round at quantization) reload
+//! bit-identically. v3 is always written. Backend payloads round-trip through the
+//! [`crate::model::register_backend`] registry, so **every** lane —
+//! not just BTC — ships, including custom backends registered at
+//! runtime (a [`BackendIoCtx::version`] tells them which container
+//! revision they are reading). Norms/embeddings stay fp32 in the
+//! companion TLM1 blob; this file carries only the quantized linears
+//! (the paper's W-bits subject).
 //!
 //! All reads are bounded (see [`crate::io::wire`]): a corrupt file
 //! fails with the offending value and byte offset, never a huge
@@ -41,7 +55,10 @@ use crate::quant::transform::Transform;
 use crate::tensor::Matrix;
 
 const SLOTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
-const VERSION: u32 = 2;
+/// Current QLM1 container version (written by [`save`]; [`load_into`]
+/// reads every version back to 1).
+pub const QLM_VERSION: u32 = 3;
+const VERSION: u32 = QLM_VERSION;
 
 /// Save a quantized model. Works for every backend whose tag has a
 /// registered deserializer — i.e. all built-in lanes and any custom
@@ -71,7 +88,9 @@ pub fn save(path: &Path, model: &Transformer) -> Result<()> {
             wire::w_u8(&mut w, 1)?;
             wire::w_u32(&mut w, cb.v as u32)?;
             wire::w_u32(&mut w, cb.c() as u32)?;
-            wire::w_u64s(&mut w, &cb.words)?;
+            // v3: centroids ship at their true v bits each (v2 wrote
+            // one u64 per centroid — up to 8x the accounted size).
+            wire::w_bits(&mut w, cb.v, &cb.words)?;
         }
         None => wire::w_u8(&mut w, 0)?,
     }
@@ -108,7 +127,19 @@ pub fn save(path: &Path, model: &Transformer) -> Result<()> {
                     wire::w_u32(&mut w, t.dim() as u32)?;
                     wire::w_u32(&mut w, t.p1.rows as u32)?;
                     wire::w_u32(&mut w, t.p2.rows as u32)?;
-                    wire::w_f32s(&mut w, &t.sigma)?;
+                    // sigma is a ±1 diagonal in every fitted transform:
+                    // ship it as a 1-bit-per-entry sign bitmap (v3).
+                    // Anything else (custom transforms) falls back to
+                    // f32, flagged.
+                    if t.sigma.iter().all(|&s| s == 1.0 || s == -1.0) {
+                        wire::w_u8(&mut w, 1)?;
+                        let bits: Vec<u64> =
+                            t.sigma.iter().map(|&s| u64::from(s == 1.0)).collect();
+                        wire::w_bits(&mut w, 1, &bits)?;
+                    } else {
+                        wire::w_u8(&mut w, 0)?;
+                        wire::w_f32s(&mut w, &t.sigma)?;
+                    }
                     wire::w_f32s(&mut w, &t.p1.data)?;
                     wire::w_f32s(&mut w, &t.p2.data)?;
                 }
@@ -132,7 +163,7 @@ pub fn save(path: &Path, model: &Transformer) -> Result<()> {
     Ok(())
 }
 
-fn read_transform(r: &mut dyn Read) -> Result<Option<Transform>> {
+fn read_transform(r: &mut dyn Read, version: u32) -> Result<Option<Transform>> {
     if wire::r_u8(r)? != 1 {
         return Ok(None);
     }
@@ -145,7 +176,13 @@ fn read_transform(r: &mut dyn Read) -> Result<Option<Transform>> {
     if n1 == 0 || n2 == 0 || n1.saturating_mul(n2) != dim {
         bail!("transform: Kronecker factors {n1}x{n2} do not cover dim {dim}");
     }
-    let sigma = wire::r_f32s(r, dim)?;
+    let sigma = if version >= 3 && wire::r_u8(r)? == 1 {
+        // v3 sign bitmap: bit 1 = +1, bit 0 = -1 (exact ±1 round-trip).
+        wire::r_bits(r, dim, 1)?.into_iter().map(|b| if b == 1 { 1.0 } else { -1.0 }).collect()
+    } else {
+        // v1/v2 layout, or a v3 non-sign diagonal (flag byte 0).
+        wire::r_f32s(r, dim)?
+    };
     let p1 = Matrix::from_vec(n1, n1, wire::r_f32s(r, n1 * n1)?);
     let p2 = Matrix::from_vec(n2, n2, wire::r_f32s(r, n2 * n2)?);
     Ok(Some(Transform { sigma, p1, p2 }))
@@ -211,10 +248,14 @@ pub fn load_into(path: &Path, model: &mut Transformer) -> Result<()> {
         if c == 0 || c > 1 << 22 {
             bail!("shared codebook: implausible size c={c} (offset {})", r.offset());
         }
-        let words = wire::r_u64s(&mut r, c)?;
-        BackendIoCtx { codebook: Some(Arc::new(BinaryCodebook { v, words })) }
+        let words = if version >= 3 {
+            wire::r_bits(&mut r, c, v)? // packed v-bit centroids
+        } else {
+            wire::r_u64s(&mut r, c)? // v1/v2: one u64 per centroid
+        };
+        BackendIoCtx { codebook: Some(Arc::new(BinaryCodebook { v, words })), version }
     } else {
-        BackendIoCtx::default()
+        BackendIoCtx { codebook: None, version }
     };
 
     let n = wire::r_u32(&mut r)? as usize;
@@ -240,7 +281,7 @@ pub fn load_into(path: &Path, model: &mut Transformer) -> Result<()> {
             wire::r_tag(&mut r)?
         };
         let tag_offset = r.offset();
-        let transform = read_transform(&mut r)?;
+        let transform = read_transform(&mut r, version)?;
         let act_quant = if version >= 2 { read_act_quant(&mut r)? } else { None };
         let reader = backend_reader(&tag).ok_or_else(|| {
             anyhow::anyhow!(

@@ -100,6 +100,130 @@ pub fn w_u64s(w: &mut dyn Write, xs: &[u64]) -> Result<()> {
     Ok(())
 }
 
+/// Incremental unpadded little-endian bitstream writer for `k`-bit
+/// elements — the streaming form of [`w_bits`], for payloads too large
+/// to densify first (a 13B-class index plane). Push values one at a
+/// time, then call [`BitWriter::finish`] to flush the trailing partial
+/// byte. Values are masked to `k` bits.
+pub struct BitWriter<'a> {
+    w: &'a mut dyn Write,
+    k: usize,
+    mask: u64,
+    acc: u128,
+    nbits: usize,
+    buf: Vec<u8>,
+}
+
+/// Internal staging size for [`BitWriter`] before hitting the sink.
+const BIT_WRITER_CHUNK: usize = 8192;
+
+impl<'a> BitWriter<'a> {
+    pub fn new(w: &'a mut dyn Write, k: usize) -> Result<BitWriter<'a>> {
+        if !(1..=64).contains(&k) {
+            bail!("packed payload: bits-per-element {k} out of 1..=64");
+        }
+        let mask = if k == 64 { u64::MAX } else { (1u64 << k) - 1 };
+        Ok(BitWriter { w, k, mask, acc: 0, nbits: 0, buf: Vec::with_capacity(BIT_WRITER_CHUNK) })
+    }
+
+    pub fn push(&mut self, v: u64) -> Result<()> {
+        self.acc |= ((v & self.mask) as u128) << self.nbits;
+        self.nbits += self.k;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xff) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+        if self.buf.len() >= BIT_WRITER_CHUNK {
+            self.w.write_all(&self.buf)?;
+            self.buf.clear();
+        }
+        Ok(())
+    }
+
+    /// Flush the trailing partial byte and staged bytes to the sink.
+    pub fn finish(mut self) -> Result<()> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xff) as u8);
+        }
+        self.w.write_all(&self.buf)?;
+        Ok(())
+    }
+}
+
+/// Write `vals` as an unpadded little-endian bitstream of `k`-bit
+/// elements (`ceil(n*k/8)` bytes — the sub-byte payloads of QLM1 v3:
+/// codebook centroids, index planes, group ids, sigma sign bitmaps).
+/// Values are masked to `k` bits.
+pub fn w_bits(w: &mut dyn Write, k: usize, vals: &[u64]) -> Result<()> {
+    let mut bw = BitWriter::new(w, k)?;
+    for &v in vals {
+        bw.push(v)?;
+    }
+    bw.finish()
+}
+
+/// Bounded reader matching [`w_bits`]: `n` `k`-bit elements.
+pub fn r_bits(r: &mut dyn Read, n: usize, k: usize) -> Result<Vec<u64>> {
+    if !(1..=64).contains(&k) {
+        bail!("packed payload: bits-per-element {k} out of 1..=64");
+    }
+    check_len("packed payload", n, MAX_ELEMS)?;
+    let mut bytes = vec![0u8; (n * k).div_ceil(8)];
+    r.read_exact(&mut bytes)?;
+    let mask = if k == 64 { u64::MAX } else { (1u64 << k) - 1 };
+    let mut out = Vec::with_capacity(n);
+    let mut acc: u128 = 0;
+    let mut nbits = 0usize;
+    let mut bi = 0usize;
+    for _ in 0..n {
+        while nbits < k {
+            acc |= (bytes[bi] as u128) << nbits;
+            bi += 1;
+            nbits += 8;
+        }
+        out.push((acc as u64) & mask);
+        acc >>= k;
+        nbits -= k;
+    }
+    Ok(out)
+}
+
+/// [`w_bits`] over u32 values (index planes, group ids).
+pub fn w_packed_u32s(w: &mut dyn Write, k: usize, vals: &[u32]) -> Result<()> {
+    if k > 32 {
+        bail!("packed u32 payload: bits-per-element {k} out of 1..=32");
+    }
+    let wide: Vec<u64> = vals.iter().map(|&v| v as u64).collect();
+    w_bits(w, k, &wide)
+}
+
+/// Bounded reader matching [`w_packed_u32s`].
+pub fn r_packed_u32s(r: &mut dyn Read, n: usize, k: usize) -> Result<Vec<u32>> {
+    if !(1..=32).contains(&k) {
+        bail!("packed u32 payload: bits-per-element {k} out of 1..=32");
+    }
+    Ok(r_bits(r, n, k)?.into_iter().map(|v| v as u32).collect())
+}
+
+/// A `Write` sink that only counts bytes — used to measure a
+/// backend's wire footprint without serializing anywhere.
+#[derive(Default)]
+pub struct CountingWriter {
+    pub bytes: usize,
+}
+
+impl Write for CountingWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.bytes += buf.len();
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 /// Length-prefixed (u8) ASCII tag string.
 pub fn w_tag(w: &mut dyn Write, tag: &str) -> Result<()> {
     let bytes = tag.as_bytes();
@@ -179,6 +303,58 @@ mod tests {
         assert_eq!(r_u16s(&mut r, 2).unwrap(), vec![3, 9]);
         assert_eq!(r_tag(&mut r).unwrap(), "binary");
         assert_eq!(r.offset(), buf.len() as u64);
+    }
+
+    #[test]
+    fn packed_bits_roundtrip_property() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(11);
+        for _ in 0..40 {
+            let k = 1 + rng.below(64);
+            let n = 1 + rng.below(90);
+            let mask = if k == 64 { u64::MAX } else { (1u64 << k) - 1 };
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+            let mut buf = Vec::new();
+            w_bits(&mut buf, k, &vals).unwrap();
+            assert_eq!(buf.len(), (n * k).div_ceil(8), "tight bitstream, k={k} n={n}");
+            let back = r_bits(&mut CountingReader::new(&buf[..]), n, k).unwrap();
+            assert_eq!(back, vals, "k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn bit_writer_streams_across_chunk_flushes() {
+        // Enough 13-bit values to force several mid-stream buffer
+        // flushes (~65 KB of output vs the 8 KB staging chunk).
+        let vals: Vec<u64> =
+            (0..40_000u64).map(|i| i.wrapping_mul(2654435761) & 0x1fff).collect();
+        let mut buf = Vec::new();
+        w_bits(&mut buf, 13, &vals).unwrap();
+        assert_eq!(buf.len(), (40_000usize * 13).div_ceil(8));
+        let back = r_bits(&mut CountingReader::new(&buf[..]), 40_000, 13).unwrap();
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn packed_u32_wrappers_roundtrip_and_reject_wide_k() {
+        let vals: Vec<u32> = (0..37).map(|i| (i * 613) % (1 << 13)).collect();
+        let mut buf = Vec::new();
+        w_packed_u32s(&mut buf, 13, &vals).unwrap();
+        let back = r_packed_u32s(&mut CountingReader::new(&buf[..]), 37, 13).unwrap();
+        assert_eq!(back, vals);
+        let mut sink: Vec<u8> = Vec::new();
+        assert!(w_packed_u32s(&mut sink, 33, &vals).is_err());
+        let empty: &[u8] = &[];
+        assert!(r_packed_u32s(&mut CountingReader::new(empty), 1, 0).is_err());
+        assert!(r_bits(&mut CountingReader::new(empty), MAX_ELEMS + 1, 8).is_err());
+    }
+
+    #[test]
+    fn counting_writer_counts() {
+        let mut cw = CountingWriter::default();
+        w_u32(&mut cw, 9).unwrap();
+        w_bits(&mut cw, 3, &[1, 2, 3]).unwrap(); // 9 bits -> 2 bytes
+        assert_eq!(cw.bytes, 6);
     }
 
     #[test]

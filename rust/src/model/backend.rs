@@ -52,6 +52,27 @@ pub trait WeightBackend: std::fmt::Debug + Send + Sync {
     /// counted separately by the memory accounting).
     fn storage_bits(&self) -> usize;
 
+    /// Bytes this backend actually holds resident in RAM (owned buffer
+    /// sizes, not the accounting convention). The default assumes the
+    /// representation is as tight as [`storage_bits`]
+    /// (`WeightBackend::storage_bits`) claims; backends whose in-memory
+    /// buffers are wider (dense f32, unpacked masks, …) must override
+    /// so the resident-vs-accounted truth gap stays visible in
+    /// [`crate::eval::memory`].
+    fn resident_bytes(&self) -> usize {
+        self.storage_bits().div_ceil(8)
+    }
+
+    /// Bytes this backend's payload occupies on the QLM1 wire —
+    /// measured by serializing into a counting sink, so it is exact by
+    /// construction for any backend.
+    fn wire_bytes(&self) -> usize {
+        let mut cw = wire::CountingWriter::default();
+        // A counting sink cannot fail; a backend that errors writes 0.
+        let _ = self.write_payload(&mut cw);
+        cw.bytes
+    }
+
     /// Payload bits per weight: signs/indices/masks ONLY — the number
     /// the paper's tables report. Per-row fp16 scales are excluded
     /// because they amortize at real LLM widths (4096+ columns) but
@@ -90,10 +111,19 @@ impl Clone for Box<dyn WeightBackend> {
 
 /// Context handed to backend deserializers: container-level shared
 /// state a per-layer payload may reference.
-#[derive(Default)]
 pub struct BackendIoCtx {
     /// The container's shared binary codebook (QLM1 header), if present.
     pub codebook: Option<Arc<BinaryCodebook>>,
+    /// The container's QLM1 format version — lets a backend keep
+    /// reading payload layouts from older containers (e.g. the
+    /// codebook backend's v2 dense-u32 indices vs v3 packed planes).
+    pub version: u32,
+}
+
+impl Default for BackendIoCtx {
+    fn default() -> BackendIoCtx {
+        BackendIoCtx { codebook: None, version: crate::io::qweights::QLM_VERSION }
+    }
 }
 
 /// A registered payload deserializer: reads exactly the bytes written
@@ -154,6 +184,10 @@ impl WeightBackend for Matrix {
         self.data.len() * 16 // fp16 shipping convention
     }
 
+    fn resident_bytes(&self) -> usize {
+        self.data.len() * 4 // actually held as f32 (the honest number)
+    }
+
     fn payload_bits_per_weight(&self) -> f64 {
         16.0
     }
@@ -197,6 +231,17 @@ mod tests {
         assert_eq!(back.shape(), (5, 7));
         assert_eq!(back.reconstruct().data, w.data);
         assert_eq!(back.payload_bits_per_weight(), 16.0);
+    }
+
+    #[test]
+    fn dense_resident_and_wire_bytes_are_measured() {
+        let mut rng = Rng::new(2);
+        let w = Matrix::randn(3, 4, &mut rng);
+        // Resident: the actual f32 buffer (2x the fp16 accounting).
+        assert_eq!(WeightBackend::resident_bytes(&w), 12 * 4);
+        assert_eq!(WeightBackend::storage_bits(&w).div_ceil(8), 12 * 2);
+        // Wire: rows + cols u32s then 12 f32s.
+        assert_eq!(WeightBackend::wire_bytes(&w), 8 + 12 * 4);
     }
 
     #[test]

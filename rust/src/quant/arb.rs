@@ -154,6 +154,12 @@ impl WeightBackend for ResidualBinary {
         ResidualBinary::storage_bits(self)
     }
 
+    fn resident_bytes(&self) -> usize {
+        self.primary.resident_bytes()
+            + self.residual.resident_bytes()
+            + self.salient_cols.len() * std::mem::size_of::<usize>()
+    }
+
     fn payload_bits_per_weight(&self) -> f64 {
         let p = &self.primary;
         let group = if p.n_groups > 1 {

@@ -114,6 +114,13 @@ impl BinaryLayer {
     pub fn bits_per_weight(&self) -> f64 {
         self.storage_bits() as f64 / (self.rows * self.cols) as f64
     }
+
+    /// Actually-resident bytes: packed signs, but f32 scales and u16
+    /// group ids (wider than the fp16/packed accounting claims — the
+    /// truth gap [`crate::eval::memory`] makes visible).
+    pub fn resident_bytes(&self) -> usize {
+        self.b.storage_bytes() + (self.alpha.len() + self.mu.len()) * 4 + self.col_group.len() * 2
+    }
 }
 
 impl WeightBackend for BinaryLayer {
@@ -131,6 +138,10 @@ impl WeightBackend for BinaryLayer {
 
     fn storage_bits(&self) -> usize {
         BinaryLayer::storage_bits(self)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        BinaryLayer::resident_bytes(self)
     }
 
     fn payload_bits_per_weight(&self) -> f64 {

@@ -25,10 +25,12 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::binarize::BinaryLayer;
+use crate::bitops::PackedPlane;
 use crate::engine::{ComputeEngine, LutGemmEngine};
 use crate::io::wire;
 use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
+use crate::util::f16;
 
 /// A binary codebook: `c` centroids of `v` bits each, packed one per u64.
 #[derive(Debug, Clone)]
@@ -72,6 +74,13 @@ impl BinaryCodebook {
     /// Codebook storage in bits: c centroids x v bits (binary!).
     pub fn storage_bits(&self) -> usize {
         self.c() * self.v
+    }
+
+    /// Actually-resident bytes: centroids are kept one-per-u64 for the
+    /// XOR/POPCNT hot paths, so RAM holds 64 bits per centroid even
+    /// when `v < 64`. The QLM1 v3 wire packs them to `v` bits.
+    pub fn resident_bytes(&self) -> usize {
+        self.words.len() * 8
     }
 
     /// Decode centroid `k` to ±1 values.
@@ -272,57 +281,88 @@ pub fn collect_vectors(bl: &BinaryLayer, v: usize) -> Vec<u64> {
     out
 }
 
+/// Bits needed for a group id (`0` when there is a single group —
+/// matching the storage accounting, which charges nothing for it).
+fn group_id_bits(n_groups: usize) -> usize {
+    if n_groups > 1 {
+        (usize::BITS - (n_groups - 1).leading_zeros()) as usize
+    } else {
+        0
+    }
+}
+
 /// A codebook-compressed binarized layer (the deployed BTC format):
-/// indices into a shared [`BinaryCodebook`] + the scales/bias/groups
-/// carried over from the underlying [`BinaryLayer`].
+/// a *packed* plane of indices into a shared [`BinaryCodebook`] +
+/// half-precision scales/bias and packed column-group ids carried over
+/// from the underlying [`BinaryLayer`]. Everything is stored at the
+/// width the accounting claims (`index_bits()` per index, 16 bits per
+/// scale, `ceil(log2 n_groups)` per group id), so resident bytes ==
+/// accounted bits — the paper's sub-1-bit number is what actually
+/// sits in RAM.
 #[derive(Debug, Clone)]
 pub struct CodebookLayer {
     pub rows: usize,
     pub cols: usize,
     pub v: usize,
-    pub idx: Vec<u32>,
+    /// Centroid indices, `rows x blocks_per_row` at
+    /// `codebook.index_bits()` bits each.
+    pub idx: PackedPlane,
     pub codebook: Arc<BinaryCodebook>,
-    pub alpha: Vec<f32>,
-    pub mu: Vec<f32>,
-    pub col_group: Vec<u16>,
+    /// Per-(row, group) scales as IEEE binary16 bits (decode on use).
+    pub alpha: Vec<u16>,
+    /// Per-row bias as IEEE binary16 bits (decode on use).
+    pub mu: Vec<u16>,
+    /// Packed per-column group ids (`1 x cols`); empty when
+    /// `n_groups == 1` (every column is group 0).
+    pub groups: PackedPlane,
     pub n_groups: usize,
 }
 
 impl CodebookLayer {
+    /// Assemble from dense parts, packing indices/groups and rounding
+    /// scales to their shipping precision (f16, nearest-even).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        codebook: Arc<BinaryCodebook>,
+        idx: &[u32],
+        alpha: &[f32],
+        mu: &[f32],
+        col_group: &[u16],
+        n_groups: usize,
+    ) -> CodebookLayer {
+        let v = codebook.v;
+        let nb = cols.div_ceil(v);
+        assert_eq!(idx.len(), rows * nb, "index count != rows * blocks_per_row");
+        assert_eq!(mu.len(), rows);
+        assert_eq!(alpha.len(), rows * n_groups);
+        assert_eq!(col_group.len(), cols);
+        let k = codebook.index_bits();
+        CodebookLayer {
+            rows,
+            cols,
+            v,
+            idx: PackedPlane::from_u32s(rows, nb, k, idx),
+            codebook,
+            alpha: f16::encode_vec(alpha),
+            mu: f16::encode_vec(mu),
+            groups: pack_groups(col_group, n_groups),
+            n_groups,
+        }
+    }
+
     /// Compress a binarized layer against a shared codebook.
     pub fn from_binary(bl: &BinaryLayer, codebook: Arc<BinaryCodebook>) -> CodebookLayer {
-        let v = codebook.v;
-        let vectors = collect_vectors(bl, v);
-        let idx = vectors.iter().map(|&w| codebook.assign(w)).collect();
-        CodebookLayer {
-            rows: bl.rows,
-            cols: bl.cols,
-            v,
-            idx,
-            codebook,
-            alpha: bl.alpha.clone(),
-            mu: bl.mu.clone(),
-            col_group: bl.col_group.clone(),
-            n_groups: bl.n_groups,
-        }
+        let vectors = collect_vectors(bl, codebook.v);
+        let idx: Vec<u32> = vectors.iter().map(|&w| codebook.assign(w)).collect();
+        Self::new(bl.rows, bl.cols, codebook, &idx, &bl.alpha, &bl.mu, &bl.col_group, bl.n_groups)
     }
 
     /// Compress using precomputed assignments (from the builder, which
     /// already assigned this layer's vector slice).
     pub fn from_assignments(bl: &BinaryLayer, codebook: Arc<BinaryCodebook>, idx: Vec<u32>) -> CodebookLayer {
-        let v = codebook.v;
-        assert_eq!(idx.len(), bl.rows * bl.cols.div_ceil(v));
-        CodebookLayer {
-            rows: bl.rows,
-            cols: bl.cols,
-            v,
-            idx,
-            codebook,
-            alpha: bl.alpha.clone(),
-            mu: bl.mu.clone(),
-            col_group: bl.col_group.clone(),
-            n_groups: bl.n_groups,
-        }
+        Self::new(bl.rows, bl.cols, codebook, &idx, &bl.alpha, &bl.mu, &bl.col_group, bl.n_groups)
     }
 
     /// Blocks per row (last block of each row may be padding-extended).
@@ -330,15 +370,42 @@ impl CodebookLayer {
         self.cols.div_ceil(self.v)
     }
 
+    /// Group id of column `c`.
+    #[inline]
+    pub fn group(&self, c: usize) -> usize {
+        if self.n_groups == 1 {
+            0
+        } else {
+            self.groups.get(0, c) as usize
+        }
+    }
+
+    /// Decode the per-column group ids (dense u16, for engine setup).
+    pub fn col_groups(&self) -> Vec<u16> {
+        (0..self.cols).map(|c| self.group(c) as u16).collect()
+    }
+
+    /// Decode the per-(row, group) scales to f32.
+    pub fn alpha_f32(&self) -> Vec<f32> {
+        f16::decode_vec(&self.alpha)
+    }
+
+    /// Decode the per-row biases to f32.
+    pub fn mu_f32(&self) -> Vec<f32> {
+        f16::decode_vec(&self.mu)
+    }
+
     /// Decode the sign matrix (±1 dense, row-major), dropping per-row
     /// padding.
     pub fn decode_signs(&self) -> Vec<f32> {
         let per_row = self.blocks_per_row();
         let mut flat = Vec::with_capacity(self.rows * self.cols);
+        let mut ibuf = vec![0u32; per_row];
         for r in 0..self.rows {
+            self.idx.decode_range(r, 0, &mut ibuf);
             let mut row = Vec::with_capacity(per_row * self.v);
-            for j in 0..per_row {
-                row.extend(self.codebook.decode(self.idx[r * per_row + j] as usize));
+            for &k in &ibuf {
+                row.extend(self.codebook.decode(k as usize));
             }
             row.truncate(self.cols);
             flat.extend(row);
@@ -346,16 +413,18 @@ impl CodebookLayer {
         flat
     }
 
-    /// Dequantize to a dense matrix.
+    /// Dequantize to a dense matrix (scales decoded from f16 on use).
     pub fn reconstruct(&self) -> Matrix {
         let signs = self.decode_signs();
+        let alpha = self.alpha_f32();
+        let mu = self.mu_f32();
+        let col_group = self.col_groups();
         let mut out = Matrix::zeros(self.rows, self.cols);
         for r in 0..self.rows {
-            let arow = &self.alpha[r * self.n_groups..(r + 1) * self.n_groups];
+            let arow = &alpha[r * self.n_groups..(r + 1) * self.n_groups];
             let orow = out.row_mut(r);
             for c in 0..self.cols {
-                orow[c] =
-                    arow[self.col_group[c] as usize] * signs[r * self.cols + c] + self.mu[r];
+                orow[c] = arow[col_group[c] as usize] * signs[r * self.cols + c] + mu[r];
             }
         }
         out
@@ -369,17 +438,23 @@ impl CodebookLayer {
     /// (Codebook bits are shared — see [`BinaryCodebook::storage_bits`].)
     pub fn storage_bits(&self) -> usize {
         let idx_bits = self.codebook.index_bits();
-        let group_bits = if self.n_groups > 1 {
-            self.cols * (usize::BITS - (self.n_groups - 1).leading_zeros()) as usize
-        } else {
-            0
-        };
+        let group_bits = self.cols * group_id_bits(self.n_groups);
         self.idx.len() * idx_bits + (self.alpha.len() + self.mu.len()) * 16 + group_bits
     }
 
     pub fn bits_per_weight(&self) -> f64 {
         self.storage_bits() as f64 / (self.rows * self.cols) as f64
     }
+}
+
+/// Pack per-column group ids; a single group packs to nothing.
+fn pack_groups(col_group: &[u16], n_groups: usize) -> PackedPlane {
+    let gk = group_id_bits(n_groups);
+    if gk == 0 {
+        return PackedPlane::zeros(0, 0, 1);
+    }
+    let vals: Vec<u32> = col_group.iter().map(|&g| g as u32).collect();
+    PackedPlane::from_u32s(1, col_group.len(), gk, &vals)
 }
 
 impl WeightBackend for CodebookLayer {
@@ -399,6 +474,12 @@ impl WeightBackend for CodebookLayer {
         CodebookLayer::storage_bits(self)
     }
 
+    fn resident_bytes(&self) -> usize {
+        self.idx.storage_bytes()
+            + self.groups.storage_bytes()
+            + (self.alpha.len() + self.mu.len()) * 2
+    }
+
     fn payload_bits_per_weight(&self) -> f64 {
         self.codebook.index_bits() as f64 * self.idx.len() as f64
             / (self.rows * self.cols) as f64
@@ -413,15 +494,34 @@ impl WeightBackend for CodebookLayer {
     }
 
     fn write_payload(&self, w: &mut dyn Write) -> Result<()> {
-        // The shared codebook itself is carried once by the container
-        // header, not per layer.
+        // QLM1 v3 layout. The shared codebook itself is carried once by
+        // the container header, not per layer. Indices and group ids go
+        // out as unpadded bitstreams (in-memory row padding never
+        // ships), streamed row by row so saving never densifies the
+        // plane — the transient is one row's decode buffer, not a
+        // plane-sized u32 vector.
         wire::w_u32(w, self.rows as u32)?;
         wire::w_u32(w, self.cols as u32)?;
         wire::w_u32(w, self.n_groups as u32)?;
-        wire::w_u32s(w, &self.idx)?;
-        wire::w_f32s(w, &self.alpha)?;
-        wire::w_f32s(w, &self.mu)?;
-        wire::w_u16s(w, &self.col_group)
+        let mut bw = wire::BitWriter::new(w, self.codebook.index_bits())?;
+        let mut ibuf = vec![0u32; self.idx.cols];
+        for r in 0..self.idx.rows {
+            self.idx.decode_range(r, 0, &mut ibuf);
+            for &v in &ibuf {
+                bw.push(v as u64)?;
+            }
+        }
+        bw.finish()?;
+        wire::w_u16s(w, &self.alpha)?;
+        wire::w_u16s(w, &self.mu)?;
+        if self.n_groups > 1 {
+            let mut bw = wire::BitWriter::new(w, group_id_bits(self.n_groups))?;
+            for &g in &self.groups.decode_row(0) {
+                bw.push(g as u64)?;
+            }
+            bw.finish()?;
+        }
+        Ok(())
     }
 
     fn clone_box(&self) -> Box<dyn WeightBackend> {
@@ -434,7 +534,10 @@ impl WeightBackend for CodebookLayer {
 }
 
 /// Registered deserializer for the `codebook` tag. Requires the
-/// container's shared codebook in the [`BackendIoCtx`].
+/// container's shared codebook in the [`BackendIoCtx`]. Reads the v3
+/// packed layout, or the v1/v2 dense layout (u32 indices, f32 scales,
+/// u16 group ids) for older containers — the dense values are packed
+/// on load, so old files land in the same sub-byte resident format.
 pub fn read_backend(r: &mut dyn Read, ctx: &BackendIoCtx) -> Result<Box<dyn WeightBackend>> {
     let cb = ctx
         .codebook
@@ -447,14 +550,34 @@ pub fn read_backend(r: &mut dyn Read, ctx: &BackendIoCtx) -> Result<Box<dyn Weig
     if n_groups == 0 || n_groups > cols {
         bail!("codebook backend: implausible n_groups {n_groups} for {cols} columns");
     }
-    let n_idx = rows * cols.div_ceil(cb.v);
-    let idx = wire::r_u32s(r, n_idx)?;
+    let nb = cols.div_ceil(cb.v);
+    let n_idx = rows * nb;
+    let kbits = cb.index_bits();
+    let (idx, alpha, mu, col_group) = if ctx.version >= 3 {
+        let idx = wire::r_packed_u32s(r, n_idx, kbits)?;
+        let alpha = wire::r_u16s(r, rows * n_groups)?;
+        let mu = wire::r_u16s(r, rows)?;
+        let col_group: Vec<u16> = if n_groups > 1 {
+            wire::r_packed_u32s(r, cols, group_id_bits(n_groups))?
+                .into_iter()
+                .map(|g| g as u16)
+                .collect()
+        } else {
+            vec![0u16; cols]
+        };
+        (idx, alpha, mu, col_group)
+    } else {
+        let idx = wire::r_u32s(r, n_idx)?;
+        // Pre-v3 files carried full f32 scales; round once to the f16
+        // shipping precision the accounting always claimed.
+        let alpha = f16::encode_vec(&wire::r_f32s(r, rows * n_groups)?);
+        let mu = f16::encode_vec(&wire::r_f32s(r, rows)?);
+        let col_group = wire::r_u16s(r, cols)?;
+        (idx, alpha, mu, col_group)
+    };
     if let Some(&k) = idx.iter().find(|&&k| k as usize >= cb.c()) {
         bail!("codebook backend: centroid index {k} out of range (c={})", cb.c());
     }
-    let alpha = wire::r_f32s(r, rows * n_groups)?;
-    let mu = wire::r_f32s(r, rows)?;
-    let col_group = wire::r_u16s(r, cols)?;
     if let Some(&g) = col_group.iter().find(|&&g| g as usize >= n_groups) {
         bail!("codebook backend: column group id {g} out of range (n_groups {n_groups})");
     }
@@ -462,11 +585,11 @@ pub fn read_backend(r: &mut dyn Read, ctx: &BackendIoCtx) -> Result<Box<dyn Weig
         rows,
         cols,
         v: cb.v,
-        idx,
+        idx: PackedPlane::from_u32s(rows, nb, kbits, &idx),
         codebook: cb,
         alpha,
         mu,
-        col_group,
+        groups: pack_groups(&col_group, n_groups),
         n_groups,
     }))
 }
@@ -565,11 +688,68 @@ mod tests {
         let vectors = collect_vectors(&bl, 8);
         let (cb, assign, stats) = BinaryCodebook::build(&vectors, 8, 1 << 8, 5);
         assert!(stats.exact || cb.c() == 256);
-        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
-        // Exact codebook => reconstruction equals the BinaryLayer's.
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign.clone());
+        // Packed indices round-trip losslessly.
+        assert_eq!(cl.idx.to_u32s(), assign);
+        // Exact codebook => identical sign matrix.
+        assert_eq!(cl.decode_signs(), bl.b.unpack());
+        // Reconstruction equals the BinaryLayer's with scales rounded
+        // to their f16 shipping precision — bit-exactly.
         let a = cl.reconstruct();
-        let b = bl.reconstruct();
-        crate::util::proptest::assert_close(&a.data, &b.data, 1e-6, 1e-6).unwrap();
+        let alpha16 = f16::decode_vec(&f16::encode_vec(&bl.alpha));
+        let mu16 = f16::decode_vec(&f16::encode_vec(&bl.mu));
+        let signs = bl.b.unpack();
+        for r in 0..bl.rows {
+            for c in 0..bl.cols {
+                let want = alpha16[r] * signs[r * bl.cols + c] + mu16[r];
+                assert_eq!(a.at(r, c), want, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn v3_payload_roundtrips_bit_identically_and_is_tight() {
+        let mut rng = Rng::new(12);
+        let w = Matrix::randn(6, 40, &mut rng);
+        let groups: Vec<u16> = (0..40).map(|c| (c / 20) as u16).collect();
+        let bl = crate::quant::arb::arb_quantize(&w, &groups, 2, 3);
+        let vectors = collect_vectors(&bl, 10);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, 10, 8, 5);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        let mut buf = Vec::new();
+        WeightBackend::write_payload(&cl, &mut buf).unwrap();
+        // Wire bytes equal the accounted layout exactly: dims + packed
+        // indices + u16 scales + packed group ids. No padding ships.
+        let expect = 12
+            + (cl.idx.len() * cl.codebook.index_bits()).div_ceil(8)
+            + (cl.alpha.len() + cl.mu.len()) * 2
+            + cl.cols.div_ceil(8); // 1 bit per column for 2 groups
+        assert_eq!(buf.len(), expect);
+        assert_eq!(WeightBackend::wire_bytes(&cl), buf.len());
+        let ctx = BackendIoCtx { codebook: Some(cl.codebook.clone()), ..Default::default() };
+        let back = read_backend(&mut &buf[..], &ctx).unwrap();
+        let bcl = back.as_any().downcast_ref::<CodebookLayer>().unwrap();
+        assert_eq!(bcl.idx, cl.idx);
+        assert_eq!(bcl.alpha, cl.alpha);
+        assert_eq!(bcl.mu, cl.mu);
+        assert_eq!(bcl.groups, cl.groups);
+        assert_eq!(back.reconstruct().data, CodebookLayer::reconstruct(&cl).data);
+    }
+
+    #[test]
+    fn resident_bytes_are_owned_buffer_sizes() {
+        let mut rng = Rng::new(13);
+        let bl = random_binary_layer(&mut rng, 64, 320);
+        let vectors = collect_vectors(&bl, 16);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, 16, 256, 3);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        let expect = cl.idx.storage_bytes()
+            + cl.groups.storage_bytes()
+            + (cl.alpha.len() + cl.mu.len()) * 2;
+        assert_eq!(WeightBackend::resident_bytes(&cl), expect);
+        // The resident plane really is sub-byte per index: 8-bit codes
+        // over v=16 blocks, 20 blocks/row -> 160 bits -> 3 words/row.
+        assert_eq!(cl.idx.storage_bytes(), 64 * 3 * 8);
     }
 
     #[test]

@@ -155,6 +155,12 @@ impl WeightBackend for FpVqLayer {
         FpVqLayer::storage_bits(self)
     }
 
+    fn resident_bytes(&self) -> usize {
+        // Indices held as full u32, centroids as f32 — wider than the
+        // ceil(log2 c)-bit / fp16 accounting; reported honestly.
+        self.idx.len() * 4 + self.centroids.len() * 4
+    }
+
     fn payload_bits_per_weight(&self) -> f64 {
         let idx_bits = (usize::BITS - (self.c - 1).leading_zeros()) as f64;
         idx_bits * self.idx.len() as f64 / (self.rows * self.cols) as f64

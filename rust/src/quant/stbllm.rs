@@ -162,6 +162,12 @@ impl WeightBackend for NmSparseBinary {
         NmSparseBinary::storage_bits(self)
     }
 
+    fn resident_bytes(&self) -> usize {
+        // The ternary matrix is held dense (one byte per element) —
+        // far wider than the packed accounting; reported honestly.
+        self.tern.len() + (self.alpha.len() + self.mu.len()) * 4
+    }
+
     fn payload_bits_per_weight(&self) -> f64 {
         (self.n + Self::mask_bits(self.n, self.m)) as f64 / self.m as f64
     }

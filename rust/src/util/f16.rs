@@ -1,0 +1,158 @@
+//! IEEE 754 binary16 ("half") conversion — the shipping precision of
+//! every per-row scale (`alpha`/`mu`) in the quantized formats. The
+//! vendored-only build has no `half` crate, so this is a minimal,
+//! fully-tested software round-trip: `encode` rounds to nearest-even
+//! (the IEEE default), `decode` is exact.
+//!
+//! Invariant relied on by the QLM1 round-trip tests: for every non-NaN
+//! half `h`, `encode(decode(h)) == h` — so scales quantized to f16 once
+//! survive arbitrarily many save/load cycles bit-identically.
+
+/// f32 -> f16 bits, round-to-nearest-even. Overflow goes to ±inf,
+/// underflow to (sub)normals then ±0; NaNs stay NaN (quieted).
+pub fn encode(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xff) as i32;
+    let man = b & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf stays inf; NaN keeps (the top of) its payload, quieted so
+        // the mantissa can never collapse to the inf encoding.
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 | (man >> 13) as u16 };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // >= 2^16: past the largest half
+    }
+    if unbiased < -25 {
+        return sign; // < half of the smallest subnormal: to zero
+    }
+    if unbiased < -14 {
+        // Subnormal half: value = M * 2^-24 with M = mant24 >> shift.
+        let mant24 = man | 0x0080_0000;
+        let shift = (-unbiased - 1) as u32; // 14..=24
+        let half = mant24 >> shift;
+        let rem = mant24 & ((1u32 << shift) - 1);
+        let tie = 1u32 << (shift - 1);
+        let m = half + u32::from(rem > tie || (rem == tie && half & 1 == 1));
+        // A carry out of the mantissa lands exactly on the smallest
+        // normal encoding (0x0400) — still correct.
+        return sign | m as u16;
+    }
+    // Normal half.
+    let e = (unbiased + 15) as u32; // 1..=31
+    let half = (e << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let h = half + u32::from(rem > 0x1000 || (rem == 0x1000 && half & 1 == 1));
+    // A mantissa carry bumps the exponent (possibly to inf) — correct.
+    sign | h as u16
+}
+
+/// f16 bits -> f32 (exact: every half is representable).
+pub fn decode(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x3ff) as u32;
+    let bits = match exp {
+        0 => {
+            if man == 0 {
+                sign // ±0
+            } else {
+                // Subnormal: normalize into an f32 exponent.
+                let mut e = 127 - 15 + 1;
+                let mut m = man;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+            }
+        }
+        0x1f => sign | 0x7f80_0000 | (man << 13), // inf / NaN
+        _ => sign | ((exp as u32 + 127 - 15) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode a slice (row scales -> shipped u16s).
+pub fn encode_vec(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| encode(x)).collect()
+}
+
+/// Decode a slice (shipped u16s -> working f32s).
+pub fn decode_vec(hs: &[u16]) -> Vec<f32> {
+    hs.iter().map(|&h| decode(h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(encode(0.0), 0x0000);
+        assert_eq!(encode(-0.0), 0x8000);
+        assert_eq!(encode(1.0), 0x3c00);
+        assert_eq!(encode(-2.0), 0xc000);
+        assert_eq!(encode(0.5), 0x3800);
+        assert_eq!(encode(65504.0), 0x7bff); // largest finite half
+        assert_eq!(encode(f32::INFINITY), 0x7c00);
+        assert_eq!(encode(f32::NEG_INFINITY), 0xfc00);
+        assert_eq!(decode(0x3c00), 1.0);
+        assert_eq!(decode(0x3555), 0.333_251_953_125); // ~1/3
+        assert_eq!(decode(0x0001), 2f32.powi(-24)); // smallest subnormal
+        assert_eq!(decode(0x0400), 2f32.powi(-14)); // smallest normal
+    }
+
+    #[test]
+    fn rounding_is_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1 + 2^-10:
+        // ties-to-even keeps the even mantissa (1.0).
+        assert_eq!(encode(1.0 + 2f32.powi(-11)), 0x3c00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds up
+        // to the even mantissa 2.
+        assert_eq!(encode(1.0 + 3.0 * 2f32.powi(-11)), 0x3c02);
+        // Just above the tie rounds up.
+        assert_eq!(encode(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3c01);
+        // 65520 is halfway between 65504 and 2^16: ties to inf.
+        assert_eq!(encode(65520.0), 0x7c00);
+        assert_eq!(encode(65519.0), 0x7bff);
+        // Subnormal ties: 2^-25 is halfway between 0 and 2^-24 -> 0.
+        assert_eq!(encode(2f32.powi(-25)), 0x0000);
+        assert_eq!(encode(3.0 * 2f32.powi(-26)), 0x0001); // 0.75 ulp -> up
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(encode(1e9), 0x7c00);
+        assert_eq!(encode(-1e9), 0xfc00);
+        assert_eq!(encode(1e-10), 0x0000);
+        assert_eq!(encode(-1e-10), 0x8000);
+        assert!(decode(encode(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn exhaustive_half_roundtrip() {
+        // Every non-NaN half must survive decode -> encode exactly;
+        // NaNs must stay NaN.
+        for h in 0..=u16::MAX {
+            let is_nan = h & 0x7c00 == 0x7c00 && h & 0x3ff != 0;
+            let f = decode(h);
+            if is_nan {
+                assert!(f.is_nan(), "h={h:#06x}");
+                assert!(decode(encode(f)).is_nan());
+            } else {
+                assert_eq!(encode(f), h, "h={h:#06x} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn encode_error_bounded() {
+        // Relative error of one f16 rounding is <= 2^-11 for normals.
+        for &x in &[1.2345f32, -987.25, 3.0e-3, 7.77e3, 0.1] {
+            let y = decode(encode(x));
+            assert!(((y - x) / x).abs() <= 2f32.powi(-11), "{x} -> {y}");
+        }
+    }
+}

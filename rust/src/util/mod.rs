@@ -7,6 +7,7 @@
 
 pub mod argparse;
 pub mod benchkit;
+pub mod f16;
 pub mod fixture;
 pub mod log;
 pub mod parallel;

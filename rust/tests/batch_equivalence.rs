@@ -92,3 +92,56 @@ fn decode_batch_equals_per_request_decode_step_all_backends() {
         }
     }
 }
+
+#[test]
+fn packed_engine_forward_equals_dense_reconstruction_all_backends() {
+    // Packed-vs-unpacked equivalence: the prepared serving engines
+    // (sign-GEMM over BitMatrix, LUT-GEMM over the packed block-major
+    // index plane) must agree with a dense reconstruction of the SAME
+    // backends (cache_dense_all unpacks every packed plane to f32 and
+    // runs plain GEMMs). Quantization is deterministic per seed, so
+    // the two models hold identical weights.
+    use btc_llm::util::proptest::assert_close;
+    let mut rng = Rng::new(7);
+    for (label, cfg) in lanes() {
+        let (raw, corpus) = tiny_raw_model(33);
+        let mut packed = quantize_model(&raw, &corpus, &cfg).expect("quantize fixture").model;
+        packed.prepare_engines();
+        let mut dense = quantize_model(&raw, &corpus, &cfg).expect("quantize fixture").model;
+        dense.cache_dense_all();
+        for trial in 0..3 {
+            let len = 1 + rng.below(8);
+            let prompt: Vec<u16> = (0..len).map(|_| rng.below(128) as u16).collect();
+            let a = packed.forward(&prompt);
+            let b = dense.forward(&prompt);
+            assert_close(&a.data, &b.data, 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("{label} trial {trial}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn btc_resident_bytes_track_accounted_bits() {
+    // The codebook lane's packed storage: measured resident bytes of
+    // every codebook linear stay close to the accounted storage_bits
+    // (per-row word alignment is the only slack; at this tiny d=16
+    // fixture it is the worst case, so the bound is generous — the
+    // release memory bench pins <= 5% at a realistic shape).
+    let model = lane_model(&lanes().pop().expect("btc lane").1);
+    let mut saw_codebook = false;
+    for block in &model.blocks {
+        for (name, lin) in block.linears() {
+            if lin.backend.tag() != "codebook" {
+                continue;
+            }
+            saw_codebook = true;
+            let accounted = lin.backend.storage_bits().div_ceil(8);
+            let resident = lin.backend.resident_bytes();
+            assert!(
+                resident < 3 * accounted,
+                "{name}: resident {resident} vs accounted {accounted}"
+            );
+        }
+    }
+    assert!(saw_codebook, "btc lane produced no codebook linears");
+}

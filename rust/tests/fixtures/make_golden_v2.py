@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Regenerate qlm_v2_codebook.qlm — a hand-assembled QLM1 **v2**
+container (the pre-packed-plane layout: u64 codebook words, dense u32
+centroid indices, f32 scales) targeting the hermetic tiny fixture model
+(vocab 128, d_model 16, 2 layers).
+
+The committed bytes are a golden back-compat fixture: the Rust loader
+must keep reading them bit-identically after any future container
+bump. Values are chosen to be exactly representable in f16 so the
+load-time f32->f16 scale rounding is lossless and the Rust test can
+compare exactly.
+
+Run from anywhere: python3 rust/tests/fixtures/make_golden_v2.py
+"""
+
+import os
+import struct
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "qlm_v2_codebook.qlm")
+
+# Tiny fixture model config (util::fixture::tiny_raw_model).
+VOCAB, D_MODEL, N_LAYER, N_HEAD, N_KV_HEAD, D_FF, MAX_SEQ = 128, 16, 2, 2, 2, 24, 64
+ROPE_THETA = 10000.0
+
+# Shared codebook: v=8, c=4.
+V, C = 8, 4
+WORDS = [0x00, 0xFF, 0x0F, 0x3C]
+
+# One codebook linear: layer 0, slot 0 (wq, 16x16) -> 2 blocks/row.
+ROWS, COLS, N_GROUPS = 16, 16, 1
+IDX = [(i * 7) % C for i in range(ROWS * (COLS // V))]
+ALPHA = [0.5 + (i % 8) * 0.25 for i in range(ROWS)]
+MU = [(i % 4) * 0.125 - 0.25 for i in range(ROWS)]
+COL_GROUP = [0] * COLS
+
+
+def main():
+    b = bytearray()
+    b += b"QLM1"
+    b += struct.pack("<I", 2)  # version 2
+    for x in (VOCAB, D_MODEL, N_LAYER, N_HEAD, N_KV_HEAD, D_FF, MAX_SEQ):
+        b += struct.pack("<I", x)
+    b += struct.pack("<f", ROPE_THETA)
+    # Shared codebook header (v2: one u64 per centroid).
+    b += struct.pack("<B", 1)
+    b += struct.pack("<II", V, C)
+    for w in WORDS:
+        b += struct.pack("<Q", w)
+    # One linear record.
+    b += struct.pack("<I", 1)
+    b += struct.pack("<I", 0)  # layer 0
+    b += struct.pack("<B", 0)  # slot wq
+    tag = b"codebook"
+    b += struct.pack("<B", len(tag)) + tag
+    b += struct.pack("<B", 0)  # no transform
+    b += struct.pack("<B", 0)  # no act-quant
+    # v2 codebook payload: dims, dense u32 idx, f32 scales, u16 groups.
+    b += struct.pack("<III", ROWS, COLS, N_GROUPS)
+    for k in IDX:
+        b += struct.pack("<I", k)
+    for a in ALPHA:
+        b += struct.pack("<f", a)
+    for m in MU:
+        b += struct.pack("<f", m)
+    for g in COL_GROUP:
+        b += struct.pack("<H", g)
+    with open(OUT, "wb") as f:
+        f.write(bytes(b))
+    print(f"wrote {OUT} ({len(b)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+//! Wire back-compat: a **committed** QLM1 v2 byte fixture (generated
+//! by `rust/tests/fixtures/make_golden_v2.py` — the pre-packed-plane
+//! layout with u64 codebook words, dense u32 indices and f32 scales)
+//! must keep loading bit-identically after the v3 bump, and must
+//! survive a v2 -> v3 re-save round trip unchanged.
+//!
+//! The fixture's scale values are exactly f16-representable, so the
+//! load-time f32 -> f16 rounding is lossless and every comparison here
+//! is exact equality, not a tolerance.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use btc_llm::model::Transformer;
+use btc_llm::quant::codebook::{BinaryCodebook, CodebookLayer};
+use btc_llm::util::fixture::tiny_raw_model;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures/qlm_v2_codebook.qlm")
+}
+
+/// The exact content `make_golden_v2.py` wrote into the fixture.
+fn golden_layer() -> CodebookLayer {
+    let cb = Arc::new(BinaryCodebook { v: 8, words: vec![0x00, 0xFF, 0x0F, 0x3C] });
+    let idx: Vec<u32> = (0..32).map(|i| (i * 7) % 4).collect();
+    let alpha: Vec<f32> = (0..16).map(|i| 0.5 + (i % 8) as f32 * 0.25).collect();
+    let mu: Vec<f32> = (0..16).map(|i| (i % 4) as f32 * 0.125 - 0.25).collect();
+    CodebookLayer::new(16, 16, cb, &idx, &alpha, &mu, &[0u16; 16], 1)
+}
+
+#[test]
+fn golden_v2_file_loads_bit_identically() {
+    let (raw, _) = tiny_raw_model(5);
+    let mut m = Transformer::from_raw(&raw).unwrap();
+    btc_llm::io::qweights::load_into(&fixture_path(), &mut m).unwrap();
+
+    assert_eq!(m.blocks[0].wq.backend_name(), "codebook");
+    let got = m.blocks[0]
+        .wq
+        .backend
+        .as_any()
+        .downcast_ref::<CodebookLayer>()
+        .expect("codebook backend");
+    let want = golden_layer();
+    // Indices survive the dense-u32 -> packed-plane conversion exactly.
+    assert_eq!(got.idx, want.idx);
+    // f32 scales round to the same f16 bits the in-memory format uses.
+    assert_eq!(got.alpha, want.alpha);
+    assert_eq!(got.mu, want.mu);
+    assert_eq!(got.n_groups, 1);
+    assert_eq!(got.codebook.words, want.codebook.words);
+    // And the dequantized weight is bit-identical.
+    assert_eq!(got.reconstruct().data, want.reconstruct().data);
+}
+
+#[test]
+fn golden_v2_survives_v3_resave_round_trip() {
+    let (raw, _) = tiny_raw_model(5);
+    let mut m = Transformer::from_raw(&raw).unwrap();
+    btc_llm::io::qweights::load_into(&fixture_path(), &mut m).unwrap();
+
+    let dir = std::env::temp_dir().join("btc_qlm_golden_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let v3_path = dir.join("resaved_v3.qlm");
+    btc_llm::io::qweights::save(&v3_path, &m).unwrap();
+
+    let mut reloaded = Transformer::from_raw(&raw).unwrap();
+    btc_llm::io::qweights::load_into(&v3_path, &mut reloaded).unwrap();
+    let a = m.blocks[0].wq.backend.as_any().downcast_ref::<CodebookLayer>().unwrap();
+    let b = reloaded.blocks[0].wq.backend.as_any().downcast_ref::<CodebookLayer>().unwrap();
+    assert_eq!(a.idx, b.idx);
+    assert_eq!(a.alpha, b.alpha);
+    assert_eq!(a.mu, b.mu);
+    assert_eq!(a.codebook.words, b.codebook.words);
+    assert_eq!(a.reconstruct().data, b.reconstruct().data);
+
+    // The v3 record for this layer is strictly smaller on the wire
+    // than the v2 encoding it came from: 2-bit packed indices instead
+    // of u32s, u16 scales instead of f32s, v-bit codebook centroids
+    // instead of u64 words.
+    use btc_llm::model::WeightBackend;
+    let v2_payload_bytes = 12 + 32 * 4 + 16 * 4 + 16 * 4 + 16 * 2;
+    let v3_payload_bytes = a.wire_bytes();
+    assert_eq!(v3_payload_bytes, 12 + (32 * 2usize).div_ceil(8) + 32 * 2);
+    assert!(v3_payload_bytes * 3 < v2_payload_bytes, "{v3_payload_bytes} vs {v2_payload_bytes}");
+}
