@@ -1,23 +1,33 @@
-//! §5.3 latency / end-to-end serving — the coordinator with dynamic
-//! batching replaying a request trace over three weight backends:
+//! §5.3 latency / end-to-end serving — the continuous-batching
+//! coordinator replaying request traces over three weight backends:
 //! FP16 dense, W1A16 binary (sign-GEMM engine) and BTC sub-1-bit
-//! (LUT-GEMM engine). Sweeps the batch size (B=1/4/16) and reports
-//! tokens/s, latency percentiles and the prefill/decode µs-per-token
-//! split.
+//! (LUT-GEMM engine). Two scenarios per backend:
+//!
+//! - `batch`: the classic closed-loop sweep (B=1/4/16) reporting
+//!   tokens/s, latency percentiles and the prefill/decode
+//!   µs-per-token split;
+//! - `staggered`: one long-running background generation plus short
+//!   requests arriving while it decodes — the in-flight admission
+//!   path — reporting time-to-first-token and inter-token latency
+//!   percentiles plus how many short requests completed before the
+//!   long one (head-of-line-blocking truth; with the old
+//!   batch-to-completion loop this is 0).
 //!
 //! Hermetic: when the trained artifacts are absent (`make artifacts`
 //! not run — e.g. the CI perf-smoke job) the bench falls back to a
 //! synthetic serving-shaped model so the numbers stay comparable
-//! run-over-run.
+//! run-over-run. `BENCH_JSON=1` writes `BENCH_serve.json`, which the
+//! CI perf gate compares against `benches/baseline/` (see
+//! examples/perf_compare.rs).
 
 use std::time::Duration;
 
 use btc_llm::benchsuite::{load_workload, quick_mode};
-use btc_llm::coordinator::Server;
+use btc_llm::coordinator::{Server, ServerOptions, StopSet};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::io::weights::{ModelConfig, RawModel};
 use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
-use btc_llm::util::benchkit::{benchline, JsonReport, Table};
+use btc_llm::util::benchkit::{benchline, percentile_sorted, JsonReport, Table};
 use btc_llm::util::fixture::synth_raw_model;
 use btc_llm::util::parallel;
 
@@ -41,6 +51,10 @@ fn workload() -> (RawModel, Vec<u8>, &'static str) {
     }
 }
 
+fn percentile_ms(sorted_us: &[u64], p: f64) -> f64 {
+    percentile_sorted(sorted_us, p) as f64 / 1e3
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = quick_mode();
     let (raw, corpus_bytes, wl_name) = workload();
@@ -57,12 +71,17 @@ fn main() -> anyhow::Result<()> {
     let mut t = Table::new(&[
         "backend", "B", "tokens/s", "p50 lat", "p99 lat", "mean batch", "prefill us/tok", "decode us/tok",
     ]);
+    let mut stag = Table::new(&[
+        "backend", "shorts", "ttft p50", "ttft p95", "itl p50", "done before long",
+    ]);
     let mut report = JsonReport::new("serve");
     for (label, cfg) in lanes {
         let mut qm = quantize_model(&raw, &corpus_bytes, &cfg)?;
-        // Prepare engines once per lane; the per-batch-size clones
-        // carry them, so Server::start's ensure_engines is a no-op.
+        // Prepare engines once per lane; the per-scenario clones carry
+        // them, so Server::start's ensure_engines is a no-op.
         qm.model.prepare_engines();
+
+        // --- Scenario 1: closed-loop batch sweep ---------------------
         for &bsz in batches {
             let n_requests = bsz * if quick { 2 } else { 4 };
             let prompts = corpus::prompts(n_requests, 7);
@@ -70,7 +89,7 @@ fn main() -> anyhow::Result<()> {
             let t0 = std::time::Instant::now();
             let rxs: Vec<_> = prompts
                 .iter()
-                .map(|p| server.submit(tok.encode(p), max_new, 0.0))
+                .map(|p| server.submit(tok.encode(p), max_new, 0.0).expect("submit"))
                 .collect();
             let mut total_tokens = 0usize;
             for rx in rxs {
@@ -92,6 +111,7 @@ fn main() -> anyhow::Result<()> {
                 format!("{dc_us:.0}"),
             ]);
             let kv = [
+                ("scenario", "batch".to_string()),
                 ("backend", label.replace(' ', "_")),
                 ("batch", bsz.to_string()),
                 ("tokens_per_s", format!("{tps:.2}")),
@@ -106,11 +126,99 @@ fn main() -> anyhow::Result<()> {
             report.row(&kv);
             server.shutdown();
         }
+
+        // --- Scenario 2: staggered arrivals under a long generation --
+        // One long request decodes in the background; short requests
+        // trickle in and must be admitted in flight. TTFT/ITL come
+        // from the per-request response stamps; `done_before_long`
+        // counts short completions with a smaller completion sequence
+        // number than the long request (0 under batch-to-completion).
+        // Prompt positions + generated tokens must stay within the
+        // model's RoPE table (max_seq 160 on both workloads).
+        let long_new = if quick { 48 } else { 96 };
+        let n_short = if quick { 4 } else { 8 };
+        let short_new = 8;
+        let opts = ServerOptions {
+            max_batch: 4,
+            batch_wait: Duration::from_millis(1),
+            seed: 7,
+            prefill_chunk: 16,
+            // Run to the token budget: comparable work per run.
+            stop: StopSet::none(),
+            ..ServerOptions::default()
+        };
+        let server = Server::start_with_opts(qm.model.clone(), opts);
+        let prompts = corpus::prompts(n_short + 1, 13);
+        let t0 = std::time::Instant::now();
+        let long_rx = server
+            .submit(tok.encode(&prompts[0]), long_new, 0.0)
+            .expect("submit long");
+        let short_rxs: Vec<_> = prompts[1..]
+            .iter()
+            .map(|p| {
+                // Arrivals staggered across the long decode.
+                std::thread::sleep(Duration::from_millis(2));
+                server.submit(tok.encode(p), short_new, 0.0).expect("submit short")
+            })
+            .collect();
+        let shorts: Vec<_> = short_rxs.into_iter().map(|rx| rx.recv().expect("short")).collect();
+        let long = long_rx.recv().expect("long");
+        let wall = t0.elapsed().as_secs_f64();
+        let total_tokens: usize = shorts
+            .iter()
+            .map(|r| r.tokens.len() - r.prompt_len)
+            .sum::<usize>()
+            + (long.tokens.len() - long.prompt_len);
+        let mut ttfts_us: Vec<u64> = shorts.iter().map(|r| r.ttft.as_micros() as u64).collect();
+        ttfts_us.sort_unstable();
+        let mut itls_us: Vec<u64> = shorts
+            .iter()
+            .filter(|r| r.tokens.len() - r.prompt_len > 1)
+            .map(|r| {
+                ((r.latency - r.ttft).as_micros() as u64)
+                    / (r.tokens.len() - r.prompt_len - 1) as u64
+            })
+            .collect();
+        itls_us.sort_unstable();
+        let done_before_long = shorts.iter().filter(|r| r.seq < long.seq).count();
+        let (ttft_p50, ttft_p95) = (percentile_ms(&ttfts_us, 0.5), percentile_ms(&ttfts_us, 0.95));
+        let itl_p50 = percentile_ms(&itls_us, 0.5);
+        stag.row(&[
+            label.to_string(),
+            n_short.to_string(),
+            format!("{ttft_p50:.1}ms"),
+            format!("{ttft_p95:.1}ms"),
+            format!("{itl_p50:.2}ms"),
+            format!("{done_before_long}/{n_short}"),
+        ]);
+        let kv = [
+            ("scenario", "staggered".to_string()),
+            ("backend", label.replace(' ', "_")),
+            ("batch", "4".to_string()),
+            ("long_new_tokens", long_new.to_string()),
+            ("n_short", n_short.to_string()),
+            ("tokens_per_s", format!("{:.2}", total_tokens as f64 / wall)),
+            ("ttft_p50_ms", format!("{ttft_p50:.2}")),
+            ("ttft_p95_ms", format!("{ttft_p95:.2}")),
+            ("itl_p50_ms", format!("{itl_p50:.3}")),
+            ("done_before_long", done_before_long.to_string()),
+            ("threads", threads.to_string()),
+            ("workload", wl_name.to_string()),
+        ];
+        benchline("serve_e2e", &kv);
+        report.row(&kv);
+        server.shutdown();
     }
     println!(
         "\nEnd-to-end serving ({wl_name}, <= {max_new} new tokens/request, {threads} threads)"
     );
     t.print();
+    let n_short = if quick { 4 } else { 8 };
+    println!(
+        "\nStaggered arrivals ({wl_name}: {n_short} short requests of 8 tokens behind one long \
+         generation; TTFT measured submit → first token)"
+    );
+    stag.print();
     let _ = report.write_if_enabled();
     println!("\nNote: at TinyLM widths the decode hot path is attention + norm overhead;");
     println!("the weight-GEMM speedup shows at MLP shapes — see bench_fig5_latency.");

@@ -177,7 +177,7 @@ fn main() -> Result<()> {
     reloaded.prepare_engines();
     let server = Server::start(reloaded, 2, Duration::from_millis(2), 7);
     let tok = ByteTokenizer::default();
-    let rx = server.submit(tok.encode("the cat "), 8, 0.0);
+    let rx = server.submit(tok.encode("the cat "), 8, 0.0)?;
     let resp = rx.recv().expect("response");
     println!(
         "served completion: {:?} ({} new tokens)",

@@ -1,0 +1,140 @@
+//! CI perf-regression gate: compare the current run's `BENCH_*.json`
+//! against the committed snapshots in `benches/baseline/`, fail (exit
+//! 1) when a gated metric regresses beyond tolerance, and write a
+//! markdown delta table (to `--summary` and, when set, to the file
+//! named by `$GITHUB_STEP_SUMMARY`) so every PR shows its point on the
+//! perf trajectory.
+//!
+//! ```bash
+//! BENCH_JSON=1 cargo bench --bench bench_serve_e2e -- --quick   # emit BENCH_serve.json
+//! cargo run --release --example perf_compare -- \
+//!     --baseline benches/baseline --current . --threshold 30
+//! # refresh the committed baseline from the current run:
+//! cargo run --release --example perf_compare -- --write-baseline
+//! ```
+//!
+//! Missing files are handled gracefully: no baseline snapshot means
+//! "recording only" (exit 0) so the gate can be introduced before the
+//! first baseline lands; a missing current file just skips that
+//! experiment. See benches/baseline/README.md for the refresh
+//! protocol.
+
+use std::path::Path;
+
+use btc_llm::util::argparse::Args;
+use btc_llm::util::benchkit::{compare_reports, parse_report, Gate};
+
+/// The gated experiments: row-identity keys + per-metric gates.
+/// Latency-shaped metrics get the (noisy-CI-runner) default
+/// tolerance; the memory experiment is deterministic, so its gates
+/// are tight regardless of `--threshold`.
+fn spec_for(exp: &str, pct: f64) -> (Vec<&'static str>, Vec<Gate>) {
+    match exp {
+        "serve" => (
+            vec!["scenario", "backend", "batch", "workload"],
+            vec![
+                Gate::higher("tokens_per_s", pct),
+                Gate::lower("p50_ms", pct),
+                Gate::lower("ttft_p50_ms", pct),
+                Gate::lower("itl_p50_ms", pct),
+            ],
+        ),
+        "fig5" => (
+            vec!["m", "threads"],
+            vec![
+                Gate::lower("fp_ms", pct),
+                Gate::lower("sign_ms", pct),
+                Gate::lower("lut_ms", pct),
+            ],
+        ),
+        "memory" => (
+            vec![],
+            vec![
+                Gate::lower("resident_bits_per_weight", 1.0),
+                Gate::lower("accounted_bits_per_weight", 1.0),
+                Gate::lower("file_bytes", 1.0),
+            ],
+        ),
+        _ => (vec![], vec![]),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let baseline_dir = args.get_or("baseline", "benches/baseline").to_string();
+    let current_dir = args.get_or("current", ".").to_string();
+    let threshold = args.get_f64("threshold", 30.0);
+    let write_baseline = args.flag("write-baseline");
+
+    let mut md = String::from("## Perf trajectory vs committed baseline\n\n");
+    let mut regressions = 0usize;
+    let mut missing_rows = 0usize;
+    let mut compared = 0usize;
+
+    for exp in ["serve", "fig5", "memory"] {
+        let cur_path = Path::new(&current_dir).join(format!("BENCH_{exp}.json"));
+        let base_path = Path::new(&baseline_dir).join(format!("BENCH_{exp}.json"));
+        let Ok(cur_text) = std::fs::read_to_string(&cur_path) else {
+            md.push_str(&format!(
+                "- `{exp}`: no current run ({}) — skipped\n",
+                cur_path.display()
+            ));
+            continue;
+        };
+        if write_baseline {
+            std::fs::create_dir_all(&baseline_dir)?;
+            std::fs::write(&base_path, &cur_text)?;
+            md.push_str(&format!("- `{exp}`: baseline refreshed → {}\n", base_path.display()));
+            continue;
+        }
+        let Ok(base_text) = std::fs::read_to_string(&base_path) else {
+            md.push_str(&format!(
+                "- `{exp}`: no baseline snapshot ({}) — recording only; see \
+                 benches/baseline/README.md\n",
+                base_path.display()
+            ));
+            continue;
+        };
+        let cur = parse_report(&cur_text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", cur_path.display()))?;
+        let base = parse_report(&base_text)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", base_path.display()))?;
+        let (keys, gates) = spec_for(exp, threshold);
+        let out = compare_reports(&base, &cur, &keys, &gates);
+        regressions += out.regressions();
+        // A baseline row with no current counterpart means the gate
+        // silently stopped covering that scenario (renamed label,
+        // changed runner shape, dropped grid point) — fail loudly and
+        // force a baseline refresh rather than gating fiction.
+        missing_rows += out.only_in_baseline.len();
+        compared += out.deltas.len();
+        md.push_str(&out.markdown(exp));
+        md.push('\n');
+    }
+
+    md.push_str(&format!(
+        "\n**{compared} gated metrics compared, {regressions} regression(s), \
+         {missing_rows} baseline row(s) with no current match** (tolerance {threshold}%)\n"
+    ));
+    println!("{md}");
+
+    if let Some(path) = args.get("summary") {
+        std::fs::write(path, &md)?;
+    }
+    // GitHub Actions step summary: append, don't clobber other steps.
+    if let Ok(path) = std::env::var("GITHUB_STEP_SUMMARY") {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(md.as_bytes())?;
+    }
+
+    if regressions > 0 || missing_rows > 0 {
+        eprintln!(
+            "perf gate FAILED: {regressions} gated metric(s) regressed > tolerance, \
+             {missing_rows} baseline row(s) unmatched (refresh benches/baseline if the \
+             grid/runner changed — see benches/baseline/README.md)"
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,15 +1,18 @@
 //! Serving driver: start the coordinator with a BTC-quantized model
 //! (LUT-GEMM engines on the hot path), replay a batched request trace
-//! from the tinywiki prompt generator, and report latency/throughput.
+//! from the tinywiki prompt generator, and report latency/throughput —
+//! or, with `--stream`, watch tokens arrive one by one over the
+//! per-request streaming channel.
 //!
 //! ```bash
 //! cargo run --release --example serve -- --model tinylm_s --bits 0.8 --requests 24 --threads 4
+//! cargo run --release --example serve -- --stream --requests 4
 //! ```
 
 use std::time::Duration;
 
 use btc_llm::benchsuite::load_workload;
-use btc_llm::coordinator::Server;
+use btc_llm::coordinator::{Server, ServerOptions};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
 use btc_llm::util::argparse::Args;
@@ -22,6 +25,8 @@ fn main() -> anyhow::Result<()> {
     let max_new = args.get_usize("max-new-tokens", 32);
     let max_batch = args.get_usize("max-batch", 8);
     let threads = args.get_usize("threads", 0); // 0 = auto
+    let prefill_chunk = args.get_usize("prefill-chunk", 32);
+    let stream_mode = args.flag("stream");
 
     let w = load_workload(&model)?;
     println!("quantizing {model} at {bits} bits for serving…");
@@ -31,23 +36,60 @@ fn main() -> anyhow::Result<()> {
         qm.stats.method, qm.stats.n_linears, qm.stats.payload_bits
     );
 
-    // Server::start prepares the sign-GEMM / LUT-GEMM engines itself.
-    let server =
-        Server::start_with_threads(qm.model, max_batch, Duration::from_millis(2), 7, threads);
+    // start_with_opts prepares the sign-GEMM / LUT-GEMM engines itself.
+    let server = Server::start_with_opts(
+        qm.model,
+        ServerOptions {
+            max_batch,
+            batch_wait: Duration::from_millis(2),
+            seed: 7,
+            threads,
+            prefill_chunk,
+            ..ServerOptions::default()
+        },
+    );
     println!("serving with {} kernel thread(s)", server.threads);
     let tok = ByteTokenizer::default();
     let prompts = corpus::prompts(n_requests, 11);
+
+    if stream_mode {
+        // Live per-token delivery, one request at a time.
+        use std::io::Write;
+        for p in &prompts {
+            let (tokens, resp_rx) = server.submit_streaming(tok.encode(p), max_new, 0.0)?;
+            print!("{:>28} | ", format!("'{p}'"));
+            std::io::stdout().flush()?;
+            for t in tokens.iter() {
+                print!("{}", tok.decode(&[t]).replace('\n', "\\n"));
+                std::io::stdout().flush()?;
+            }
+            let r = resp_rx.recv()?;
+            println!(
+                "  [{:?}, ttft {:.1} ms, {:.1} ms total]",
+                r.finish,
+                r.ttft.as_secs_f64() * 1e3,
+                r.latency.as_secs_f64() * 1e3
+            );
+        }
+        println!("\n{}", server.metrics.summary());
+        server.shutdown();
+        return Ok(());
+    }
+
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> =
-        prompts.iter().map(|p| server.submit(tok.encode(p), max_new, 0.0)).collect();
+    let rxs = prompts
+        .iter()
+        .map(|p| server.submit(tok.encode(p), max_new, 0.0))
+        .collect::<Result<Vec<_>, _>>()?;
     let mut total_new = 0usize;
     for (p, rx) in prompts.iter().zip(rxs) {
         let r = rx.recv().expect("response");
         total_new += r.tokens.len() - r.prompt_len;
         println!(
-            "{:>28} | {} ({:.1} ms)",
+            "{:>28} | {} (ttft {:.1} ms, {:.1} ms total)",
             format!("'{p}'"),
             tok.decode(&r.tokens[r.prompt_len..]).trim_end().replace('\n', "\\n"),
+            r.ttft.as_secs_f64() * 1e3,
             r.latency.as_secs_f64() * 1e3
         );
     }

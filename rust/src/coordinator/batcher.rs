@@ -1,7 +1,12 @@
-//! Dynamic batcher: drains the request queue into batches of up to
-//! `max_batch`, waiting at most `wait` for stragglers once the first
-//! request arrives (the standard continuous-batching admission policy,
-//! scaled to this coordinator's decode loop).
+//! Idle-side admission: drains the request queue into batches of up
+//! to `max_batch`, waiting at most `wait` for stragglers once the
+//! first request arrives. The serving worker uses this only when
+//! nothing is in flight; once busy, the [`Scheduler`] drains the
+//! queue non-blockingly between decode rounds instead (see
+//! [`Scheduler::admit_ready`]).
+//!
+//! [`Scheduler`]: super::scheduler::Scheduler
+//! [`Scheduler::admit_ready`]: super::scheduler::Scheduler::admit_ready
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

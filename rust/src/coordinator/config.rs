@@ -3,7 +3,8 @@
 
 use std::path::Path;
 
-use crate::util::toml::Doc;
+use super::server::StopSet;
+use crate::util::toml::{Doc, Value};
 
 /// Serving + quantization deployment configuration.
 #[derive(Debug, Clone)]
@@ -16,12 +17,21 @@ pub struct ServeConfig {
     pub backend: String,
     /// Bits target passed to the method preset.
     pub bits: f64,
-    /// Max requests fused into one decode batch.
+    /// Max in-flight requests fused into one decode round.
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch (ms).
+    /// How long an idle worker lingers for co-arrivals (ms); once
+    /// busy, admission between decode rounds never waits.
     pub batch_wait_ms: u64,
+    /// Max prompt tokens prefilled per scheduling round, shared
+    /// across newly-admitted requests (bounds how long new prompts
+    /// stall in-flight decoders).
+    pub prefill_chunk: usize,
     /// Per-request default max new tokens.
     pub max_new_tokens: usize,
+    /// EOS token id; negative = no EOS.
+    pub eos_token: i64,
+    /// Stop-token ids (generation ends after emitting one).
+    pub stop_tokens: Vec<u16>,
     /// Greedy (0) vs sampled decoding temperature.
     pub temperature: f64,
     pub seed: u64,
@@ -38,7 +48,10 @@ impl Default for ServeConfig {
             bits: 0.8,
             max_batch: 8,
             batch_wait_ms: 5,
+            prefill_chunk: 32,
             max_new_tokens: 32,
+            eos_token: -1,
+            stop_tokens: vec![b'\n' as u16],
             temperature: 0.0,
             seed: 42,
             threads: 0,
@@ -56,7 +69,19 @@ impl ServeConfig {
             bits: doc.get_float("quant.bits", d.bits),
             max_batch: doc.get_int("serve.max_batch", d.max_batch as i64) as usize,
             batch_wait_ms: doc.get_int("serve.batch_wait_ms", d.batch_wait_ms as i64) as u64,
+            prefill_chunk: doc.get_int("serve.prefill_chunk", d.prefill_chunk as i64).max(1)
+                as usize,
             max_new_tokens: doc.get_int("serve.max_new_tokens", d.max_new_tokens as i64) as usize,
+            eos_token: doc.get_int("serve.eos_token", d.eos_token),
+            stop_tokens: match doc.get("serve.stop_tokens") {
+                Some(Value::Array(items)) => items
+                    .iter()
+                    .filter_map(|v| v.as_int())
+                    .filter(|t| (0..=u16::MAX as i64).contains(t))
+                    .map(|t| t as u16)
+                    .collect(),
+                _ => d.stop_tokens.clone(),
+            },
             temperature: doc.get_float("serve.temperature", d.temperature),
             seed: doc.get_int("serve.seed", d.seed as i64) as u64,
             threads: doc.get_int("serve.threads", d.threads as i64).max(0) as usize,
@@ -65,6 +90,16 @@ impl ServeConfig {
 
     pub fn from_file(path: &Path) -> Result<ServeConfig, String> {
         Ok(Self::from_doc(&crate::util::toml::parse_file(path)?))
+    }
+
+    /// The stop conditions this config describes (EOS id + stop set).
+    pub fn stop_set(&self) -> StopSet {
+        let eos = if (0..=u16::MAX as i64).contains(&self.eos_token) {
+            Some(self.eos_token as u16)
+        } else {
+            None
+        };
+        StopSet { eos, stops: self.stop_tokens.clone() }
     }
 }
 
@@ -78,6 +113,29 @@ mod tests {
         let c = ServeConfig::from_doc(&parse("").unwrap());
         assert_eq!(c.model, "tinylm_s");
         assert_eq!(c.max_batch, 8);
+        assert_eq!(c.prefill_chunk, 32);
+        // Historical behavior: no EOS, '\n' in the stop set.
+        assert_eq!(c.eos_token, -1);
+        assert_eq!(c.stop_tokens, vec![b'\n' as u16]);
+        let s = c.stop_set();
+        assert_eq!(s.eos, None);
+        assert_eq!(s.stops, vec![b'\n' as u16]);
+    }
+
+    #[test]
+    fn stop_conditions_from_toml() {
+        let doc = parse(
+            "[serve]\nprefill_chunk = 8\neos_token = 2\nstop_tokens = [10, 46]\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc);
+        assert_eq!(c.prefill_chunk, 8);
+        let s = c.stop_set();
+        assert_eq!(s.eos, Some(2));
+        assert_eq!(s.stops, vec![10, 46]);
+        // Out-of-range ids are dropped, not wrapped.
+        let doc = parse("[serve]\nstop_tokens = [70000, 5]\n").unwrap();
+        assert_eq!(ServeConfig::from_doc(&doc).stop_tokens, vec![5]);
     }
 
     #[test]

@@ -1,8 +1,50 @@
-//! Serving metrics: counters + latency reservoir, shared across the
-//! coordinator threads.
+//! Serving metrics: counters + bounded latency reservoirs, shared
+//! across the coordinator threads. Besides end-to-end latency, the
+//! scheduler records per-request queue wait (submit → slot admission),
+//! time-to-first-token (submit → first generated token) and the
+//! inter-token gaps between consecutive generated tokens — the
+//! numbers that matter once admission is in-flight rather than
+//! batch-to-completion. Reservoirs are capped (Algorithm R uniform
+//! sampling) so a long-running server holds constant memory per
+//! metric no matter how many tokens it serves.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+use crate::util::benchkit::percentile_sorted;
+
+/// Per-reservoir sample cap: enough for stable p50/p95/p99 estimates,
+/// constant memory for a server generating billions of tokens.
+const RESERVOIR_CAP: usize = 4096;
+
+/// Capacity-bounded uniform sample of a stream (Vitter's Algorithm R):
+/// the first `RESERVOIR_CAP` observations are kept verbatim, then each
+/// n-th observation replaces a random slot with probability cap/n, so
+/// the retained set stays a uniform sample of everything offered.
+#[derive(Debug, Default)]
+struct Reservoir {
+    samples: Vec<u64>,
+    /// Total observations ever offered (>= samples.len()).
+    seen: u64,
+    /// Cheap deterministic LCG state for slot selection.
+    lcg: u64,
+}
+
+impl Reservoir {
+    fn offer(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+            return;
+        }
+        self.lcg =
+            self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let j = (self.lcg >> 33) % self.seen;
+        if (j as usize) < RESERVOIR_CAP {
+            self.samples[j as usize] = v;
+        }
+    }
+}
 
 /// Shared metrics registry.
 #[derive(Debug, Default)]
@@ -10,6 +52,7 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub tokens_generated: AtomicU64,
+    /// Decode rounds run (continuous batching: one "batch" per round).
     pub batches: AtomicU64,
     pub batch_size_sum: AtomicU64,
     /// Per-phase accounting: prompt tokens prefilled / decode forwards
@@ -18,7 +61,25 @@ pub struct Metrics {
     pub prefill_us: AtomicU64,
     pub decode_tokens: AtomicU64,
     pub decode_us: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies_us: Mutex<Reservoir>,
+    /// Submit → slot admission, one sample per request.
+    queue_wait_us: Mutex<Reservoir>,
+    /// Submit → first generated token, one sample per request.
+    ttft_us: Mutex<Reservoir>,
+    /// Gap between consecutive generated tokens, one sample per gap.
+    itl_us: Mutex<Reservoir>,
+}
+
+fn percentile_of(values: &Mutex<Reservoir>, p: f64) -> u64 {
+    percentile_sorted(&sorted_clone(values), p)
+}
+
+/// One lock + one sort per reservoir, however many percentiles are
+/// read from it afterwards (summary() reads several).
+fn sorted_clone(values: &Mutex<Reservoir>) -> Vec<u64> {
+    let mut v = values.lock().unwrap().samples.clone();
+    v.sort_unstable();
+    v
 }
 
 impl Metrics {
@@ -30,15 +91,35 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One decode round over `size` in-flight requests.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
     }
 
-    pub fn record_completion(&self, tokens: usize, latency_us: u64) {
-        self.completed.fetch_add(1, Ordering::Relaxed);
+    /// Request finished; returns its completion sequence number
+    /// (0-based, server-global: finished-earlier means smaller).
+    pub fn record_completion(&self, tokens: usize, latency_us: u64) -> u64 {
+        let seq = self.completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(latency_us);
+        self.latencies_us.lock().unwrap().offer(latency_us);
+        seq
+    }
+
+    /// Request admitted into an in-flight slot after `wait_us` in the
+    /// queue.
+    pub fn record_admission(&self, wait_us: u64) {
+        self.queue_wait_us.lock().unwrap().offer(wait_us);
+    }
+
+    /// First generated token `us` after submission.
+    pub fn record_ttft(&self, us: u64) {
+        self.ttft_us.lock().unwrap().offer(us);
+    }
+
+    /// One inter-token gap of `us`.
+    pub fn record_itl(&self, us: u64) {
+        self.itl_us.lock().unwrap().offer(us);
     }
 
     /// `tokens` prompt tokens prefilled in `us` wall-microseconds.
@@ -71,15 +152,27 @@ impl Metrics {
         self.decode_us.load(Ordering::Relaxed) as f64 / t as f64
     }
 
+    /// End-to-end latency percentile (µs); 0 when empty.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let mut l = self.latencies_us.lock().unwrap().clone();
-        if l.is_empty() {
-            return 0;
-        }
-        l.sort_unstable();
-        l[(((l.len() - 1) as f64) * p.clamp(0.0, 1.0)).round() as usize]
+        percentile_of(&self.latencies_us, p)
     }
 
+    /// Queue-wait percentile (µs); 0 when empty.
+    pub fn queue_wait_percentile_us(&self, p: f64) -> u64 {
+        percentile_of(&self.queue_wait_us, p)
+    }
+
+    /// Time-to-first-token percentile (µs); 0 when empty.
+    pub fn ttft_percentile_us(&self, p: f64) -> u64 {
+        percentile_of(&self.ttft_us, p)
+    }
+
+    /// Inter-token-latency percentile (µs); 0 when empty.
+    pub fn itl_percentile_us(&self, p: f64) -> u64 {
+        percentile_of(&self.itl_us, p)
+    }
+
+    /// Mean decode-round width.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -89,16 +182,25 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let lat = sorted_clone(&self.latencies_us);
+        let ttft = sorted_clone(&self.ttft_us);
+        let itl = sorted_clone(&self.itl_us);
         format!(
-            "requests={} completed={} tokens={} batches={} mean_batch={:.2} p50={}us p99={}us \
+            "requests={} completed={} tokens={} rounds={} mean_batch={:.2} p50={}us p99={}us \
+             qwait_p50={}us ttft_p50={}us ttft_p95={}us itl_p50={}us itl_p95={}us \
              prefill={:.0}us/tok decode={:.0}us/tok",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
-            self.latency_percentile_us(0.5),
-            self.latency_percentile_us(0.99),
+            percentile_sorted(&lat, 0.5),
+            percentile_sorted(&lat, 0.99),
+            self.queue_wait_percentile_us(0.5),
+            percentile_sorted(&ttft, 0.5),
+            percentile_sorted(&ttft, 0.95),
+            percentile_sorted(&itl, 0.5),
+            percentile_sorted(&itl, 0.95),
             self.prefill_us_per_token(),
             self.decode_us_per_token(),
         )
@@ -115,8 +217,8 @@ mod tests {
         m.record_request();
         m.record_request();
         m.record_batch(2);
-        m.record_completion(10, 1000);
-        m.record_completion(20, 3000);
+        assert_eq!(m.record_completion(10, 1000), 0);
+        assert_eq!(m.record_completion(20, 3000), 1, "seq increases per completion");
         assert_eq!(m.requests.load(Ordering::Relaxed), 2);
         assert_eq!(m.tokens_generated.load(Ordering::Relaxed), 30);
         assert_eq!(m.mean_batch_size(), 2.0);
@@ -127,7 +229,11 @@ mod tests {
 
     #[test]
     fn empty_percentile_is_zero() {
-        assert_eq!(Metrics::new().latency_percentile_us(0.5), 0);
+        let m = Metrics::new();
+        assert_eq!(m.latency_percentile_us(0.5), 0);
+        assert_eq!(m.ttft_percentile_us(0.5), 0);
+        assert_eq!(m.itl_percentile_us(0.5), 0);
+        assert_eq!(m.queue_wait_percentile_us(0.5), 0);
     }
 
     #[test]
@@ -141,5 +247,40 @@ mod tests {
         assert_eq!(m.prefill_us_per_token(), 40.0);
         assert_eq!(m.decode_us_per_token(), 25.0);
         assert!(m.summary().contains("prefill=40us/tok"));
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_and_representative() {
+        let mut r = Reservoir::default();
+        for _ in 0..100_000 {
+            r.offer(5);
+        }
+        assert_eq!(r.samples.len(), RESERVOIR_CAP, "capped at RESERVOIR_CAP");
+        assert_eq!(r.seen, 100_000);
+        assert!(r.samples.iter().all(|&v| v == 5), "uniform stream stays uniform");
+        // Via the public surface: a million ITL samples cost constant
+        // memory and the percentile still reflects the stream.
+        let m = Metrics::new();
+        for _ in 0..50_000 {
+            m.record_itl(7);
+        }
+        assert_eq!(m.itl_percentile_us(0.5), 7);
+    }
+
+    #[test]
+    fn serving_latency_reservoirs() {
+        let m = Metrics::new();
+        m.record_admission(5);
+        m.record_ttft(100);
+        m.record_ttft(300);
+        m.record_itl(10);
+        m.record_itl(20);
+        m.record_itl(90);
+        assert_eq!(m.queue_wait_percentile_us(0.5), 5);
+        assert_eq!(m.ttft_percentile_us(0.0), 100);
+        assert_eq!(m.ttft_percentile_us(1.0), 300);
+        assert_eq!(m.itl_percentile_us(0.5), 20);
+        let s = m.summary();
+        assert!(s.contains("ttft_p50=") && s.contains("itl_p50=") && s.contains("qwait_p50="));
     }
 }

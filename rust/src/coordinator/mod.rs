@@ -1,14 +1,32 @@
-//! L3 coordinator: config system, serving loop with dynamic batching,
+//! L3 coordinator: config system, continuous-batching serving loop,
 //! and metrics. The paper's contribution lives at L1/L2 (kernel +
 //! quantization algorithm), so per DESIGN.md this layer is a thin but
-//! real deployment front-end: request queue → batcher → quantized
-//! engine → token streams, all on std threads + channels (tokio is not
-//! in the offline vendor set).
+//! real deployment front-end, all on std threads + channels (tokio is
+//! not in the offline vendor set):
+//!
+//! request queue → in-flight scheduler → quantized engine → per-token
+//! streams + responses.
+//!
+//! The [`Scheduler`] admits requests *between decode rounds* (no
+//! head-of-line blocking behind a long generation), prefills prompts
+//! in bounded chunks interleaved with in-flight decoding, applies stop
+//! conditions (EOS + stop sets, [`StopSet`]) and delivers tokens as
+//! they are accepted over optional streaming channels. [`Metrics`]
+//! tracks queue wait, time-to-first-token and inter-token latency
+//! alongside the per-phase prefill/decode rates. With greedy sampling
+//! each request's output is bit-identical regardless of co-traffic —
+//! see DESIGN.md §6 for the determinism contract.
+//!
+//! [`Metrics`]: metrics::Metrics
 
 pub mod batcher;
 pub mod config;
 pub mod metrics;
+pub mod scheduler;
 pub mod server;
 
 pub use config::ServeConfig;
-pub use server::{GenRequest, GenResponse, Server};
+pub use scheduler::Scheduler;
+pub use server::{
+    FinishReason, GenRequest, GenResponse, ServeError, Server, ServerOptions, StopSet,
+};

@@ -1,0 +1,514 @@
+//! In-flight continuous-batching scheduler: owns the active request
+//! set and advances it one *round* at a time, admitting new arrivals
+//! between rounds instead of running each admitted batch to
+//! completion (no head-of-line blocking behind a long generation).
+//!
+//! A round is: (1) requests still in their prompt phase advance
+//! through [`Transformer::prefill`] (which supports chunked prefill
+//! from `cache.len()`) within a *shared* budget of `prefill_chunk`
+//! prompt tokens per round, so even a burst of long prompts never
+//! stalls in-flight decoders for more than one bounded chunk;
+//! (2) every decoding request contributes its next token to one
+//! fused [`Transformer::decode_batch`] forward; (3) finished requests
+//! are swap-compacted out and their responses (and streaming channels)
+//! flushed. The [`Server`](super::server::Server) worker drives this
+//! loop, draining its request channel non-blockingly before each round
+//! (see [`Scheduler::admit_ready`]) up to `max_batch` in-flight slots.
+//!
+//! **Determinism contract:** with greedy sampling (temperature 0) a
+//! request's output tokens are bit-identical regardless of what else
+//! is in flight: every kernel on the path computes output rows
+//! independently (see DESIGN.md §6), chunked prefill appends exactly
+//! the K/V a whole-prompt prefill would, and `decode_batch` row `b` is
+//! bit-identical to a solo `decode_step`. Pinned by tests here and in
+//! `rust/tests/scheduling.rs`.
+
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::server::{FinishReason, GenRequest, GenResponse};
+use crate::model::kvcache::KvCache;
+use crate::model::Transformer;
+use crate::util::rng::Rng;
+
+/// Where one in-flight request stands in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotState {
+    /// Prompt tokens `0..consumed` are in the KV cache; more to feed.
+    Prefill { consumed: usize },
+    /// Prompt done; `next` is the sampled-but-not-yet-fed token.
+    Decode { next: u16 },
+    /// Finished this round; response flushed at the next compaction.
+    Done(FinishReason),
+}
+
+/// One in-flight request: its KV cache lives inside the slot and is
+/// lent to [`Transformer::decode_batch`] for the duration of a round
+/// (cheap `Vec`-header moves — no K/V data is copied).
+struct Slot {
+    req: GenRequest,
+    cache: KvCache,
+    /// Prompt + generated tokens (the response payload).
+    tokens: Vec<u16>,
+    state: SlotState,
+    /// Submit → slot admission.
+    queue_wait: Duration,
+    /// Submit → first generated token (zero until the first token).
+    ttft: Duration,
+    /// When the previous token was accepted (inter-token gaps).
+    last_token_at: Option<Instant>,
+}
+
+/// Continuous-batching scheduler. [`Server`](super::server::Server)
+/// owns one inside its worker thread; it is also usable directly for
+/// custom serving loops (admit + step until idle).
+pub struct Scheduler {
+    model: Transformer,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    prefill_chunk: usize,
+    slots: Vec<Slot>,
+}
+
+impl Scheduler {
+    /// `max_batch` bounds the in-flight slot count; `prefill_chunk`
+    /// bounds how many prompt tokens may be prefilled per round in
+    /// total, across all prefilling slots (both clamped to at
+    /// least 1).
+    pub fn new(
+        model: Transformer,
+        metrics: Arc<Metrics>,
+        max_batch: usize,
+        prefill_chunk: usize,
+    ) -> Scheduler {
+        Scheduler {
+            model,
+            metrics,
+            max_batch: max_batch.max(1),
+            prefill_chunk: prefill_chunk.max(1),
+            slots: Vec::new(),
+        }
+    }
+
+    /// No requests in flight.
+    pub fn is_idle(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// In-flight request count.
+    pub fn in_flight(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Free in-flight slots.
+    pub fn free_slots(&self) -> usize {
+        self.max_batch - self.slots.len().min(self.max_batch)
+    }
+
+    /// Admit one request into a fresh slot (records its queue wait).
+    pub fn admit(&mut self, req: GenRequest) {
+        let now = Instant::now();
+        let queue_wait = now.duration_since(req.submitted);
+        self.metrics.record_admission(queue_wait.as_micros() as u64);
+        let cache = self.model.new_cache(req.prompt.len() + req.max_new_tokens + 1);
+        let tokens = req.prompt.clone();
+        self.slots.push(Slot {
+            req,
+            cache,
+            tokens,
+            state: SlotState::Prefill { consumed: 0 },
+            queue_wait,
+            ttft: Duration::ZERO,
+            last_token_at: None,
+        });
+    }
+
+    /// Drain `rx` non-blockingly into free slots (the between-rounds
+    /// admission path). Returns `false` once the channel is
+    /// disconnected — no further arrivals will ever come.
+    pub fn admit_ready(&mut self, rx: &Receiver<GenRequest>) -> bool {
+        while self.free_slots() > 0 {
+            match rx.try_recv() {
+                Ok(req) => self.admit(req),
+                Err(TryRecvError::Empty) => return true,
+                Err(TryRecvError::Disconnected) => return false,
+            }
+        }
+        true
+    }
+
+    /// One scheduling round: bounded prefill chunks, one fused decode,
+    /// retirements compacted out. Does nothing when idle.
+    pub fn step(&mut self, rng: &mut Rng) {
+        self.prefill_round(rng);
+        self.retire_done();
+        self.decode_round(rng);
+        self.retire_done();
+    }
+
+    /// Advance prefilling slots within a shared per-round budget of
+    /// `prefill_chunk` prompt tokens — shared, not per-slot, so a
+    /// burst of concurrent new prompts still stalls in-flight decoders
+    /// by at most one chunk per round. A slot that consumes its last
+    /// prompt token samples its first output token from the chunk's
+    /// logits (prefill returns the last position's logits) and joins
+    /// the decode set this same round; slots past the budget simply
+    /// wait for the next round (prompts are finite, so none starves).
+    fn prefill_round(&mut self, rng: &mut Rng) {
+        let mut budget = self.prefill_chunk;
+        for i in 0..self.slots.len() {
+            if budget == 0 {
+                break;
+            }
+            let SlotState::Prefill { consumed } = self.slots[i].state else {
+                continue;
+            };
+            let slot = &mut self.slots[i];
+            let plen = slot.req.prompt.len();
+            let n = (plen - consumed).min(budget);
+            budget -= n;
+            let t0 = Instant::now();
+            if consumed + n >= plen {
+                // Final chunk: its logits seed the first output token.
+                let logits =
+                    self.model.prefill(&slot.req.prompt[consumed..consumed + n], &mut slot.cache);
+                self.metrics.record_prefill(n, t0.elapsed().as_micros() as u64);
+                let next = sample(&logits, slot.req.temperature, rng);
+                self.accept(i, next);
+            } else {
+                // Mid-prompt chunk: nobody reads these logits — skip
+                // the lm-head projection entirely.
+                self.model
+                    .prefill_extend(&slot.req.prompt[consumed..consumed + n], &mut slot.cache);
+                self.metrics.record_prefill(n, t0.elapsed().as_micros() as u64);
+                slot.state = SlotState::Prefill { consumed: consumed + n };
+            }
+        }
+    }
+
+    /// One fused decode forward over every decoding slot.
+    fn decode_round(&mut self, rng: &mut Rng) {
+        let ids: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| matches!(self.slots[i].state, SlotState::Decode { .. }))
+            .collect();
+        if ids.is_empty() {
+            return;
+        }
+        self.metrics.record_batch(ids.len());
+        let toks: Vec<u16> = ids
+            .iter()
+            .map(|&i| match self.slots[i].state {
+                SlotState::Decode { next } => next,
+                _ => unreachable!("filtered to Decode slots"),
+            })
+            .collect();
+        // decode_batch needs a contiguous `&mut [KvCache]`: lend it the
+        // active slots' caches for the round.
+        let mut caches: Vec<KvCache> = ids
+            .iter()
+            .map(|&i| std::mem::replace(&mut self.slots[i].cache, KvCache::new(0, 0, 0)))
+            .collect();
+        let t0 = Instant::now();
+        let logits = self.model.decode_batch(&toks, &mut caches);
+        self.metrics.record_decode(toks.len(), t0.elapsed().as_micros() as u64);
+        for (j, cache) in caches.into_iter().enumerate() {
+            self.slots[ids[j]].cache = cache;
+        }
+        for (b, &i) in ids.iter().enumerate() {
+            let next = sample(logits.row(b), self.slots[i].req.temperature, rng);
+            self.accept(i, next);
+        }
+    }
+
+    /// Accept a sampled token into slot `i`: append it, stream it,
+    /// stamp TTFT / inter-token gaps, and apply the stop conditions
+    /// (the stop/EOS token itself is included in the output, exactly
+    /// as the pre-scheduler loop did with `'\n'`).
+    fn accept(&mut self, i: usize, next: u16) {
+        let slot = &mut self.slots[i];
+        let now = Instant::now();
+        slot.tokens.push(next);
+        if let Some(stream) = &slot.req.stream {
+            let _ = stream.send(next); // client may have hung up
+        }
+        match slot.last_token_at {
+            None => {
+                slot.ttft = now.duration_since(slot.req.submitted);
+                self.metrics.record_ttft(slot.ttft.as_micros() as u64);
+            }
+            Some(prev) => self.metrics.record_itl(now.duration_since(prev).as_micros() as u64),
+        }
+        slot.last_token_at = Some(now);
+        let produced = slot.tokens.len() - slot.req.prompt.len();
+        slot.state = match slot.req.stop.classify(next) {
+            Some(reason) => SlotState::Done(reason),
+            None if produced >= slot.req.max_new_tokens => SlotState::Done(FinishReason::Length),
+            None => SlotState::Decode { next },
+        };
+    }
+
+    /// Swap-compact every finished slot out, flushing its response.
+    fn retire_done(&mut self) {
+        let mut i = 0;
+        while i < self.slots.len() {
+            if matches!(self.slots[i].state, SlotState::Done(_)) {
+                let slot = self.slots.swap_remove(i);
+                self.finish(slot);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn finish(&self, slot: Slot) {
+        let SlotState::Done(finish) = slot.state else {
+            unreachable!("finish() called on unfinished slot");
+        };
+        let produced = slot.tokens.len() - slot.req.prompt.len();
+        let latency = slot.req.submitted.elapsed();
+        let seq = self.metrics.record_completion(produced, latency.as_micros() as u64);
+        // Dropping `slot.req` afterwards closes the streaming channel,
+        // so a streaming client sees all tokens, then the response,
+        // then end-of-stream.
+        let _ = slot.req.respond.send(GenResponse {
+            tokens: slot.tokens,
+            prompt_len: slot.req.prompt.len(),
+            latency,
+            queue_wait: slot.queue_wait,
+            ttft: slot.ttft,
+            finish,
+            seq,
+        });
+    }
+}
+
+/// Sample a token from logits: greedy argmax at temperature <= 0
+/// (NaN-safe: NaNs are skipped, ties break low, empty logits degrade
+/// to token 0 — a bad forward must never panic the worker that owns
+/// the model), else softmax sampling at the given temperature.
+pub(crate) fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
+    if logits.is_empty() {
+        return 0;
+    }
+    if temperature <= 0.0 {
+        return logits
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_nan())
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as u16)
+            .unwrap_or(0);
+    }
+    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    let probs: Vec<f64> =
+        logits.iter().map(|&v| (((v - max) as f64) / temperature).exp()).collect();
+    let total: f64 = probs.iter().sum();
+    let mut u = rng.uniform() * total;
+    for (i, p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return i as u16;
+        }
+    }
+    (probs.len() - 1) as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{Server, ServerOptions, StopSet};
+    use crate::model::transformer::tests::tiny_model;
+
+    fn opts(max_batch: usize, prefill_chunk: usize) -> ServerOptions {
+        ServerOptions {
+            max_batch,
+            prefill_chunk,
+            batch_wait: Duration::from_millis(1),
+            seed: 7,
+            ..ServerOptions::default()
+        }
+    }
+
+    fn run_one(server: &Server, prompt: Vec<u16>, max_new: usize, stop: StopSet) -> GenResponse {
+        let rx = server.submit_with(prompt, max_new, 0.0, stop, None).expect("submit");
+        rx.recv_timeout(Duration::from_secs(60)).expect("response")
+    }
+
+    #[test]
+    fn sampling_respects_temperature_zero() {
+        let mut rng = Rng::new(1);
+        let logits = vec![0.0f32, 5.0, 1.0];
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn greedy_sampling_survives_nan_logits() {
+        let mut rng = Rng::new(1);
+        // NaN must neither panic nor be selected.
+        assert_eq!(sample(&[1.0, f32::NAN, 5.0, f32::NAN], 0.0, &mut rng), 2);
+        // All-NaN and empty degenerate to token 0.
+        assert_eq!(sample(&[f32::NAN, f32::NAN], 0.0, &mut rng), 0);
+        assert_eq!(sample(&[], 0.0, &mut rng), 0);
+        assert_eq!(sample(&[], 1.0, &mut rng), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_whole_prefill() {
+        // The same request must generate identical tokens whether its
+        // prompt is prefilled in 1-, 2- or whole-prompt chunks.
+        let m = tiny_model(11, 4);
+        let prompt: Vec<u16> = vec![3, 9, 1, 7, 5, 2, 8];
+        let runs: Vec<Vec<u16>> = [1usize, 2, 64]
+            .iter()
+            .map(|&chunk| {
+                let server = Server::start_with_opts(m.clone(), opts(2, chunk));
+                let r = run_one(&server, prompt.clone(), 6, StopSet::none());
+                server.shutdown();
+                r.tokens
+            })
+            .collect();
+        assert_eq!(runs[0], runs[1], "chunk=1 vs chunk=2");
+        assert_eq!(runs[1], runs[2], "chunk=2 vs whole-prompt");
+    }
+
+    fn request(
+        prompt: Vec<u16>,
+        max_new: usize,
+        respond: std::sync::mpsc::Sender<GenResponse>,
+    ) -> GenRequest {
+        GenRequest {
+            prompt,
+            max_new_tokens: max_new,
+            temperature: 0.0,
+            stop: StopSet::none(),
+            stream: None,
+            respond,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn short_request_overtakes_long() {
+        // No head-of-line blocking: a short request admitted *while a
+        // long one is mid-decode* must retire first (strictly smaller
+        // completion sequence number). Driving the scheduler directly
+        // makes the interleaving deterministic — no wall-clock races.
+        let m = tiny_model(2, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m, metrics, 2, 4);
+        let mut rng = Rng::new(7);
+        let (ltx, lrx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2, 3], 48, ltx));
+        // The long request decodes for three rounds before the short
+        // one arrives — exactly the mid-flight admission case.
+        for _ in 0..3 {
+            sched.step(&mut rng);
+        }
+        assert_eq!(sched.in_flight(), 1, "long still decoding");
+        let (stx, srx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![4, 5], 2, stx));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000, "scheduler failed to drain");
+        }
+        let long = lrx.try_recv().expect("long finished");
+        let short = srx.try_recv().expect("short finished");
+        assert!(
+            short.seq < long.seq,
+            "short (seq {}) must retire before long (seq {})",
+            short.seq,
+            long.seq
+        );
+        assert_eq!(long.tokens.len() - long.prompt_len, 48);
+        assert_eq!(short.tokens.len() - short.prompt_len, 2);
+    }
+
+    #[test]
+    fn greedy_identical_with_and_without_cotraffic() {
+        // Determinism contract: greedy outputs are bit-identical no
+        // matter what else is in flight.
+        let m = tiny_model(5, 4);
+        let prompt: Vec<u16> = vec![6, 1, 9];
+        let solo = {
+            let server = Server::start_with_opts(m.clone(), opts(1, 64));
+            let r = run_one(&server, prompt.clone(), 8, StopSet::none());
+            server.shutdown();
+            r.tokens
+        };
+        let busy = {
+            let server = Server::start_with_opts(m.clone(), opts(4, 2));
+            // Background traffic: one long and one mid request.
+            let bg1 = server
+                .submit_with(vec![2, 3, 4, 5, 6], 48, 0.0, StopSet::none(), None)
+                .expect("submit");
+            let bg2 = server.submit_with(vec![7], 20, 0.0, StopSet::none(), None).expect("submit");
+            let r = run_one(&server, prompt.clone(), 8, StopSet::none());
+            bg1.recv_timeout(Duration::from_secs(60)).unwrap();
+            bg2.recv_timeout(Duration::from_secs(60)).unwrap();
+            server.shutdown();
+            r.tokens
+        };
+        assert_eq!(solo, busy);
+    }
+
+    #[test]
+    fn streamed_tokens_match_final_response() {
+        let m = tiny_model(8, 4);
+        let server = Server::start_with_opts(m, opts(2, 4));
+        let (stream, rx) = server.submit_streaming(vec![1, 2, 3, 4, 5], 6, 0.0).expect("submit");
+        let resp = rx.recv_timeout(Duration::from_secs(60)).expect("response");
+        // The sender side is dropped at retirement, so the stream
+        // iterator terminates after the last token.
+        let streamed: Vec<u16> = stream.iter().collect();
+        assert_eq!(streamed, resp.tokens[resp.prompt_len..].to_vec());
+        assert!(resp.ttft <= resp.latency);
+        server.shutdown();
+    }
+
+    #[test]
+    fn eos_token_stops_generation() {
+        let m = tiny_model(4, 4);
+        // Learn the first greedy token, then declare it the EOS.
+        let first = {
+            let server = Server::start_with_opts(m.clone(), opts(1, 64));
+            let r = run_one(&server, vec![3, 1], 1, StopSet::none());
+            server.shutdown();
+            r.tokens[r.prompt_len]
+        };
+        let server = Server::start_with_opts(m, opts(1, 64));
+        let r = run_one(&server, vec![3, 1], 10, StopSet::none().with_eos(first));
+        assert_eq!(r.tokens.len() - r.prompt_len, 1, "EOS after the first token");
+        assert_eq!(r.finish, FinishReason::Eos);
+        server.shutdown();
+    }
+
+    #[test]
+    fn length_cap_reports_finish_reason() {
+        let m = tiny_model(6, 4);
+        let server = Server::start_with_opts(m, opts(1, 64));
+        let r = run_one(&server, vec![2, 4], 5, StopSet::none());
+        assert_eq!(r.tokens.len() - r.prompt_len, 5);
+        assert_eq!(r.finish, FinishReason::Length);
+        assert!(r.queue_wait <= r.ttft && r.ttft <= r.latency);
+        server.shutdown();
+    }
+
+    #[test]
+    fn ttft_and_itl_metrics_populated() {
+        let m = tiny_model(9, 4);
+        let server = Server::start_with_opts(m, opts(2, 4));
+        let r = run_one(&server, vec![1, 2, 3], 6, StopSet::none());
+        assert_eq!(r.tokens.len() - r.prompt_len, 6);
+        let mt = &server.metrics;
+        assert!(mt.ttft_percentile_us(0.5) > 0, "TTFT recorded");
+        // ITL gaps on a tiny model can floor to 0µs in release; the
+        // reservoir behavior itself is pinned in metrics.rs tests.
+        let s = mt.summary();
+        assert!(s.contains("ttft_p50=") && s.contains("itl_p50="), "summary carries TTFT/ITL: {s}");
+        server.shutdown();
+    }
+}

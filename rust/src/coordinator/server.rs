@@ -1,43 +1,198 @@
-//! The serving loop: a worker thread owns the (quantized) model and
-//! processes dynamically-formed batches of generation requests;
-//! clients submit via a channel handle and receive completed responses
-//! on per-request channels.
+//! The serving front-end: a worker thread owns the (quantized) model
+//! and drives a continuous-batching [`Scheduler`]; clients submit via
+//! a channel handle and receive per-token streams and/or a completed
+//! response on per-request channels.
 //!
-//! Decode is greedy (temperature 0) or softmax-sampled. Prefill runs
-//! each prompt through the batched full-sequence path (one (s, d)
-//! GEMM per linear, K/V appended to the request's cache); decode
-//! rounds then stack the active requests' next tokens into one fused
-//! [`Transformer::decode_batch`] forward per round, compacting the
-//! active set as requests retire (continuous batching at token
-//! granularity with no bubbles).
+//! Unlike a batch-to-completion loop, new requests are admitted
+//! *between decode rounds* (up to `max_batch` in-flight slots), so a
+//! short request submitted behind a long-running generation overtakes
+//! it instead of queueing until the whole batch drains. Prompts are
+//! prefilled in bounded chunks so a long prompt can't stall in-flight
+//! decoders either. See `coordinator/scheduler.rs` and DESIGN.md §6.
 
+use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::collect_batch;
+use super::config::ServeConfig;
 use super::metrics::Metrics;
-use crate::model::kvcache::KvCache;
+use super::scheduler::Scheduler;
 use crate::model::Transformer;
 use crate::util::parallel;
 use crate::util::rng::Rng;
 
-/// A generation request.
+/// Why a generation finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit `max_new_tokens`.
+    Length,
+    /// Emitted a token from the stop set.
+    Stop,
+    /// Emitted the EOS token.
+    Eos,
+}
+
+/// Stop conditions for one request: an optional EOS token id plus a
+/// set of stop tokens. The matched token is still appended to the
+/// output (historical behavior of the `'\n'` sentence terminator).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StopSet {
+    /// End-of-sequence token id, if any.
+    pub eos: Option<u16>,
+    /// Additional stop-token ids (small set; scanned linearly).
+    pub stops: Vec<u16>,
+}
+
+impl StopSet {
+    /// No stop conditions: generation runs to `max_new_tokens`.
+    pub fn none() -> StopSet {
+        StopSet { eos: None, stops: Vec::new() }
+    }
+
+    /// The historical default: `'\n'` ends a "sentence" in the
+    /// tinywiki world.
+    pub fn newline() -> StopSet {
+        StopSet { eos: None, stops: vec![b'\n' as u16] }
+    }
+
+    /// Builder-style EOS assignment.
+    pub fn with_eos(mut self, eos: u16) -> StopSet {
+        self.eos = Some(eos);
+        self
+    }
+
+    /// Builder-style extra stop token.
+    pub fn with_stop(mut self, token: u16) -> StopSet {
+        self.stops.push(token);
+        self
+    }
+
+    /// Does `token` end the generation, and why? EOS wins over the
+    /// stop set when a token is both.
+    pub fn classify(&self, token: u16) -> Option<FinishReason> {
+        if self.eos == Some(token) {
+            return Some(FinishReason::Eos);
+        }
+        if self.stops.contains(&token) {
+            return Some(FinishReason::Stop);
+        }
+        None
+    }
+}
+
+impl Default for StopSet {
+    fn default() -> StopSet {
+        StopSet::newline()
+    }
+}
+
+/// A generation request (what the scheduler consumes). Built by the
+/// [`Server::submit`] family; constructible directly for custom
+/// scheduling loops.
 #[derive(Debug)]
 pub struct GenRequest {
     pub prompt: Vec<u16>,
     pub max_new_tokens: usize,
     pub temperature: f64,
+    /// Stop conditions (EOS + stop tokens).
+    pub stop: StopSet,
+    /// Per-token streaming channel: every generated token is sent as
+    /// soon as it is accepted; the channel closes after the final
+    /// response is delivered.
+    pub stream: Option<Sender<u16>>,
     pub respond: Sender<GenResponse>,
+    /// When the client submitted (queue wait / TTFT clock origin).
+    pub submitted: Instant,
 }
 
 /// A completed generation.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    /// Prompt + generated tokens.
     pub tokens: Vec<u16>,
     pub prompt_len: usize,
+    /// Submit → completion (includes queue wait).
     pub latency: Duration,
+    /// Submit → admission into an in-flight slot.
+    pub queue_wait: Duration,
+    /// Submit → first generated token.
+    pub ttft: Duration,
+    pub finish: FinishReason,
+    /// Server-global completion sequence number (0-based): request A
+    /// finished before request B iff `A.seq < B.seq`.
+    pub seq: u64,
+}
+
+/// Submission failed because the worker thread is gone (it panicked —
+/// e.g. a poisoned model — or the server was shut down).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeError {
+    WorkerGone,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::WorkerGone => {
+                write!(f, "server worker is gone (panicked or shut down); request not accepted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Tunables for [`Server::start_with_opts`].
+#[derive(Debug, Clone)]
+pub struct ServerOptions {
+    /// Max in-flight requests (fused into one decode round).
+    pub max_batch: usize,
+    /// How long an *idle* worker lingers for co-arrivals after the
+    /// first request before starting a round. Once busy, admission is
+    /// non-blocking between rounds and never waits.
+    pub batch_wait: Duration,
+    /// Sampling seed (temperature > 0 lanes).
+    pub seed: u64,
+    /// Kernel worker threads (0 = keep the current global setting,
+    /// resolving it if unset). Validated/clamped at start.
+    pub threads: usize,
+    /// Max prompt tokens prefilled per scheduling round, shared
+    /// across all newly-admitted requests (bounds how long new
+    /// prompts — even a burst of them — can stall in-flight
+    /// decoders).
+    pub prefill_chunk: usize,
+    /// Default stop conditions applied by [`Server::submit`] /
+    /// [`Server::submit_streaming`].
+    pub stop: StopSet,
+}
+
+impl Default for ServerOptions {
+    fn default() -> ServerOptions {
+        ServerOptions {
+            max_batch: 8,
+            batch_wait: Duration::from_millis(2),
+            seed: 42,
+            threads: 0,
+            prefill_chunk: 32,
+            stop: StopSet::newline(),
+        }
+    }
+}
+
+impl From<&ServeConfig> for ServerOptions {
+    fn from(c: &ServeConfig) -> ServerOptions {
+        ServerOptions {
+            max_batch: c.max_batch.max(1),
+            batch_wait: Duration::from_millis(c.batch_wait_ms),
+            seed: c.seed,
+            threads: c.threads,
+            prefill_chunk: c.prefill_chunk.max(1),
+            stop: c.stop_set(),
+        }
+    }
 }
 
 /// Handle to a running server.
@@ -47,63 +202,145 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     /// Effective worker-thread count the kernels run with.
     pub threads: usize,
+    /// Default stop conditions for [`Server::submit`].
+    stop: StopSet,
 }
 
 impl Server {
-    /// Spawn the worker thread owning `model`, with the kernel thread
-    /// count resolved automatically (`PALLAS_THREADS` env, else the
-    /// hardware parallelism).
+    /// Spawn the worker thread owning `model` with default scheduling
+    /// options (newline stop set, default prefill chunk, kernel thread
+    /// count resolved automatically).
     pub fn start(model: Transformer, max_batch: usize, batch_wait: Duration, seed: u64) -> Server {
-        Self::start_with_threads(model, max_batch, batch_wait, seed, 0)
+        Self::start_with_opts(
+            model,
+            ServerOptions { max_batch, batch_wait, seed, ..ServerOptions::default() },
+        )
     }
 
     /// [`Server::start`] with an explicit kernel thread count
     /// (`0` = keep the current global setting, resolving it if unset).
-    /// The count is validated/clamped, and serving engines are
-    /// prepared on any linear that lacks one, so callers can hand over
-    /// a freshly-quantized model directly.
     pub fn start_with_threads(
-        mut model: Transformer,
+        model: Transformer,
         max_batch: usize,
         batch_wait: Duration,
         seed: u64,
         threads: usize,
     ) -> Server {
-        // 0 must not clobber a count a library user already set via
-        // `parallel::set_threads` — only an explicit value overrides.
-        let threads =
-            if threads == 0 { parallel::threads() } else { parallel::set_threads(threads) };
+        Self::start_with_opts(
+            model,
+            ServerOptions { max_batch, batch_wait, seed, threads, ..ServerOptions::default() },
+        )
+    }
+
+    /// Spawn the worker thread owning `model`. The thread count is
+    /// validated/clamped (0 must not clobber a count a library user
+    /// already set via `parallel::set_threads` — only an explicit
+    /// value overrides), and serving engines are prepared on any
+    /// linear that lacks one, so callers can hand over a
+    /// freshly-quantized model directly.
+    pub fn start_with_opts(mut model: Transformer, opts: ServerOptions) -> Server {
+        let threads = if opts.threads == 0 {
+            parallel::threads()
+        } else {
+            parallel::set_threads(opts.threads)
+        };
         model.ensure_engines();
         let metrics = Arc::new(Metrics::new());
         let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = channel();
         let m = metrics.clone();
+        let ServerOptions { max_batch, batch_wait, seed, prefill_chunk, stop, .. } = opts;
         let worker = std::thread::spawn(move || {
             let mut rng = Rng::new(seed);
+            let mut sched = Scheduler::new(model, m, max_batch, prefill_chunk);
             loop {
-                let batch = collect_batch(&rx, max_batch, batch_wait);
-                if batch.is_empty() {
-                    break; // channel closed
+                if sched.is_idle() {
+                    // Nothing in flight: block for work (and linger
+                    // `batch_wait` for co-arrivals, as the batch-mode
+                    // loop always did).
+                    let batch = collect_batch(&rx, max_batch, batch_wait);
+                    if batch.is_empty() {
+                        break; // channel closed and drained
+                    }
+                    for req in batch {
+                        sched.admit(req);
+                    }
+                } else {
+                    // Busy: admit whatever is already queued, without
+                    // waiting — in-flight requests keep decoding.
+                    let _ = sched.admit_ready(&rx);
                 }
-                m.record_batch(batch.len());
-                run_batch(&model, batch, &m, &mut rng);
+                sched.step(&mut rng);
             }
         });
-        Server { tx: Some(tx), worker: Some(worker), metrics, threads }
+        Server { tx: Some(tx), worker: Some(worker), metrics, threads, stop }
     }
 
-    /// Submit a request; returns the response receiver.
-    pub fn submit(&self, prompt: Vec<u16>, max_new_tokens: usize, temperature: f64) -> Receiver<GenResponse> {
+    /// Submit a request with the server's default stop conditions;
+    /// returns the response receiver, or [`ServeError::WorkerGone`] if
+    /// the worker thread died (a poisoned model must not take down
+    /// callers).
+    pub fn submit(
+        &self,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+    ) -> Result<Receiver<GenResponse>, ServeError> {
+        self.submit_with(prompt, max_new_tokens, temperature, self.stop.clone(), None)
+    }
+
+    /// Submit with per-token streaming delivery: returns the token
+    /// stream (closed after the final token) and the response
+    /// receiver.
+    pub fn submit_streaming(
+        &self,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+    ) -> Result<(Receiver<u16>, Receiver<GenResponse>), ServeError> {
+        self.submit_streaming_with(prompt, max_new_tokens, temperature, self.stop.clone())
+    }
+
+    /// [`Server::submit_streaming`] with explicit stop conditions.
+    pub fn submit_streaming_with(
+        &self,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+        stop: StopSet,
+    ) -> Result<(Receiver<u16>, Receiver<GenResponse>), ServeError> {
+        let (stx, srx) = channel();
+        let rrx = self.submit_with(prompt, max_new_tokens, temperature, stop, Some(stx))?;
+        Ok((srx, rrx))
+    }
+
+    /// Fully-explicit submission: stop conditions and an optional
+    /// streaming sender.
+    pub fn submit_with(
+        &self,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+        stop: StopSet,
+        stream: Option<Sender<u16>>,
+    ) -> Result<Receiver<GenResponse>, ServeError> {
         let (rtx, rrx) = channel();
+        let req = GenRequest {
+            prompt,
+            max_new_tokens,
+            temperature,
+            stop,
+            stream,
+            respond: rtx,
+            submitted: Instant::now(),
+        };
+        let tx = self.tx.as_ref().ok_or(ServeError::WorkerGone)?;
+        tx.send(req).map_err(|_| ServeError::WorkerGone)?;
         self.metrics.record_request();
-        self.tx
-            .as_ref()
-            .expect("server stopped")
-            .send(GenRequest { prompt, max_new_tokens, temperature, respond: rtx })
-            .expect("server worker gone");
-        rrx
+        Ok(rrx)
     }
 
-    /// Graceful shutdown: close the queue and join the worker.
+    /// Graceful shutdown: close the queue and join the worker (which
+    /// finishes everything already submitted first).
     pub fn shutdown(mut self) {
         drop(self.tx.take());
         if let Some(w) = self.worker.take() {
@@ -121,107 +358,6 @@ impl Drop for Server {
     }
 }
 
-/// One in-flight request in the decode loop. Caches live in a parallel
-/// `Vec<KvCache>` so [`Transformer::decode_batch`] sees a contiguous
-/// slice.
-struct Active {
-    req: GenRequest,
-    tokens: Vec<u16>,
-    started: Instant,
-    /// Next token to feed (sampled from the last logits).
-    next: u16,
-}
-
-fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
-    if logits.is_empty() {
-        return 0;
-    }
-    if temperature <= 0.0 {
-        // NaN-safe greedy: NaN logits are skipped (a NaN must never
-        // panic the worker that owns the model), ties break low.
-        return logits
-            .iter()
-            .enumerate()
-            .filter(|(_, v)| !v.is_nan())
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i as u16)
-            .unwrap_or(0);
-    }
-    let max = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
-    let probs: Vec<f64> =
-        logits.iter().map(|&v| (((v - max) as f64) / temperature).exp()).collect();
-    let total: f64 = probs.iter().sum();
-    let mut u = rng.uniform() * total;
-    for (i, p) in probs.iter().enumerate() {
-        u -= p;
-        if u <= 0.0 {
-            return i as u16;
-        }
-    }
-    (probs.len() - 1) as u16
-}
-
-fn finish(a: Active, metrics: &Metrics) {
-    let produced = a.tokens.len() - a.req.prompt.len();
-    let latency = a.started.elapsed();
-    metrics.record_completion(produced, latency.as_micros() as u64);
-    let _ = a.req.respond.send(GenResponse {
-        tokens: a.tokens,
-        prompt_len: a.req.prompt.len(),
-        latency,
-    });
-}
-
-fn run_batch(model: &Transformer, batch: Vec<GenRequest>, metrics: &Metrics, rng: &mut Rng) {
-    let mut active: Vec<Active> = Vec::with_capacity(batch.len());
-    let mut caches: Vec<KvCache> = Vec::with_capacity(batch.len());
-
-    // Batched prefill: the full prompt in one sequence-level forward
-    // per request (one GEMM per linear), K/V appended as it goes.
-    // Latency clocks start at batch admission (queueing behind other
-    // prefills in the batch counts, as it always did).
-    let admitted = Instant::now();
-    for req in batch {
-        let cap = req.prompt.len() + req.max_new_tokens + 1;
-        let mut cache = model.new_cache(cap);
-        let t0 = Instant::now();
-        let logits = model.prefill(&req.prompt, &mut cache);
-        metrics.record_prefill(req.prompt.len(), t0.elapsed().as_micros() as u64);
-        let next = sample(&logits, req.temperature, rng);
-        active.push(Active { tokens: req.prompt.clone(), started: admitted, next, req });
-        caches.push(cache);
-    }
-
-    // Fused decode: each round stacks every active request's token
-    // into one (B, d) forward. Retired requests are swap-compacted out
-    // (with their caches) so later rounds carry no bubbles.
-    loop {
-        let mut i = 0;
-        while i < active.len() {
-            let a = &mut active[i];
-            a.tokens.push(a.next);
-            let produced = a.tokens.len() - a.req.prompt.len();
-            // '\n' ends a "sentence" in the tinywiki world.
-            if produced >= a.req.max_new_tokens || a.next == b'\n' as u16 {
-                finish(active.swap_remove(i), metrics);
-                caches.swap_remove(i);
-            } else {
-                i += 1;
-            }
-        }
-        if active.is_empty() {
-            break;
-        }
-        let toks: Vec<u16> = active.iter().map(|a| a.next).collect();
-        let t0 = Instant::now();
-        let logits = model.decode_batch(&toks, &mut caches);
-        metrics.record_decode(toks.len(), t0.elapsed().as_micros() as u64);
-        for (b, a) in active.iter_mut().enumerate() {
-            a.next = sample(logits.row(b), a.req.temperature, rng);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,7 +366,7 @@ mod tests {
     #[test]
     fn serves_single_request() {
         let server = Server::start(tiny_model(1, 4), 4, Duration::from_millis(1), 7);
-        let rx = server.submit(vec![1, 2, 3], 5, 0.0);
+        let rx = server.submit(vec![1, 2, 3], 5, 0.0).expect("submit");
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert_eq!(resp.prompt_len, 3);
         assert!(resp.tokens.len() > 3 && resp.tokens.len() <= 8);
@@ -240,7 +376,8 @@ mod tests {
     #[test]
     fn serves_concurrent_batch() {
         let server = Server::start(tiny_model(2, 4), 4, Duration::from_millis(20), 7);
-        let rxs: Vec<_> = (0..4).map(|i| server.submit(vec![i as u16 + 1, 2], 4, 0.0)).collect();
+        let rxs: Vec<_> =
+            (0..4).map(|i| server.submit(vec![i as u16 + 1, 2], 4, 0.0).expect("submit")).collect();
         for rx in rxs {
             let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
             assert!(resp.tokens.len() >= 3);
@@ -255,7 +392,7 @@ mod tests {
         let m = tiny_model(3, 4);
         let run = || {
             let server = Server::start(m.clone(), 1, Duration::from_millis(1), 7);
-            let rx = server.submit(vec![5, 6, 7], 6, 0.0);
+            let rx = server.submit(vec![5, 6, 7], 6, 0.0).expect("submit");
             let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
             server.shutdown();
             r.tokens
@@ -273,14 +410,15 @@ mod tests {
             .iter()
             .map(|p| {
                 let server = Server::start(m.clone(), 1, Duration::from_millis(1), 7);
-                let rx = server.submit(p.clone(), 6, 0.0);
+                let rx = server.submit(p.clone(), 6, 0.0).expect("submit");
                 let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
                 server.shutdown();
                 r.tokens
             })
             .collect();
         let server = Server::start(m.clone(), 4, Duration::from_millis(50), 7);
-        let rxs: Vec<_> = prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0)).collect();
+        let rxs: Vec<_> =
+            prompts.iter().map(|p| server.submit(p.clone(), 6, 0.0).expect("submit")).collect();
         for (rx, expect) in rxs.into_iter().zip(solo) {
             let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
             assert_eq!(r.tokens, expect);
@@ -292,7 +430,7 @@ mod tests {
     fn records_per_phase_timing() {
         use std::sync::atomic::Ordering::Relaxed;
         let server = Server::start(tiny_model(4, 4), 2, Duration::from_millis(1), 7);
-        let rx = server.submit(vec![1, 2, 3, 4], 4, 0.0);
+        let rx = server.submit(vec![1, 2, 3, 4], 4, 0.0).expect("submit");
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         let produced = resp.tokens.len() - resp.prompt_len;
         let m = &server.metrics;
@@ -308,7 +446,7 @@ mod tests {
         let server =
             Server::start_with_threads(tiny_model(5, 4), 1, Duration::from_millis(1), 7, 1_000_000);
         assert!(server.threads >= 1 && server.threads <= crate::util::parallel::MAX_THREADS);
-        let rx = server.submit(vec![1, 2], 3, 0.0);
+        let rx = server.submit(vec![1, 2], 3, 0.0).expect("submit");
         assert!(rx.recv_timeout(Duration::from_secs(30)).is_ok());
         server.shutdown();
         // Restore auto so concurrently-running tests don't inherit the
@@ -317,20 +455,38 @@ mod tests {
     }
 
     #[test]
-    fn sampling_respects_temperature_zero() {
-        let mut rng = Rng::new(1);
-        let logits = vec![0.0f32, 5.0, 1.0];
-        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+    fn stop_set_classification() {
+        let s = StopSet::newline().with_eos(2).with_stop(7);
+        assert_eq!(s.classify(2), Some(FinishReason::Eos));
+        assert_eq!(s.classify(7), Some(FinishReason::Stop));
+        assert_eq!(s.classify(b'\n' as u16), Some(FinishReason::Stop));
+        assert_eq!(s.classify(1), None);
+        assert_eq!(StopSet::none().classify(b'\n' as u16), None);
+        // EOS wins when a token is in both sets.
+        assert_eq!(StopSet::none().with_eos(7).with_stop(7).classify(7), Some(FinishReason::Eos));
     }
 
     #[test]
-    fn greedy_sampling_survives_nan_logits() {
-        let mut rng = Rng::new(1);
-        // NaN must neither panic nor be selected.
-        assert_eq!(sample(&[1.0, f32::NAN, 5.0, f32::NAN], 0.0, &mut rng), 2);
-        // All-NaN and empty degenerate to token 0.
-        assert_eq!(sample(&[f32::NAN, f32::NAN], 0.0, &mut rng), 0);
-        assert_eq!(sample(&[], 0.0, &mut rng), 0);
-        assert_eq!(sample(&[], 1.0, &mut rng), 0);
+    fn submit_fails_after_worker_death_instead_of_panicking() {
+        // Token 999 is out of the tiny model's vocab (32): the worker
+        // panics on the embedding lookup. Callers must get an Err from
+        // subsequent submits, not a panic.
+        let server = Server::start(tiny_model(7, 4), 2, Duration::from_millis(1), 7);
+        let poisoned = server.submit(vec![999], 3, 0.0).expect("queue accepts before death");
+        // The poisoned request's response channel closes without a
+        // response once the worker dies.
+        assert!(poisoned.recv_timeout(Duration::from_secs(30)).is_err());
+        let mut saw_error = false;
+        for _ in 0..500 {
+            match server.submit(vec![1], 1, 0.0) {
+                Err(ServeError::WorkerGone) => {
+                    saw_error = true;
+                    break;
+                }
+                Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+            }
+        }
+        assert!(saw_error, "submit must surface the dead worker as an error");
+        server.shutdown();
     }
 }

@@ -8,10 +8,8 @@
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
 
-use std::time::Duration;
-
 use anyhow::{Context, Result};
-use btc_llm::coordinator::{Server, ServeConfig};
+use btc_llm::coordinator::{ServeConfig, Server, ServerOptions};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::eval::{memory, perplexity, zeroshot};
 use btc_llm::io::{load_model, qweights};
@@ -128,30 +126,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     qcfg.act_bits = 16;
     info!("quantizing {} for serving ({})", cfg.model, cfg.backend);
     let qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
-    // Server::start prepares any missing engines itself.
-    let server = Server::start_with_threads(
-        qm.model,
-        cfg.max_batch,
-        Duration::from_millis(cfg.batch_wait_ms),
-        cfg.seed,
-        cfg.threads,
-    );
+    // start_with_opts prepares any missing engines itself; the config
+    // also carries the scheduler knobs (prefill chunk, stop set).
+    let server = Server::start_with_opts(qm.model, ServerOptions::from(&cfg));
     info!("serving with {} kernel thread(s)", server.threads);
     // Replay a request trace (offline image: no network listener; the
     // trace IS the workload — see examples/serve.rs for the full driver).
     let n = args.get_usize("requests", 16);
     let tok = ByteTokenizer::default();
     let prompts = corpus::prompts(n, cfg.seed);
-    let rxs: Vec<_> = prompts
+    let rxs = prompts
         .iter()
         .map(|p| server.submit(tok.encode(p), cfg.max_new_tokens, cfg.temperature))
-        .collect();
+        .collect::<Result<Vec<_>, _>>()
+        .context("server rejected a request")?;
     for (p, rx) in prompts.iter().zip(rxs) {
         let resp = rx.recv().expect("response");
         println!(
-            "'{p}' -> '{}' ({} tok, {:.1} ms)",
+            "'{p}' -> '{}' ({} tok, ttft {:.1} ms, {:.1} ms)",
             tok.decode(&resp.tokens[resp.prompt_len..]).trim_end(),
             resp.tokens.len() - resp.prompt_len,
+            resp.ttft.as_secs_f64() * 1e3,
             resp.latency.as_secs_f64() * 1e3
         );
     }

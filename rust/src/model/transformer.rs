@@ -355,9 +355,33 @@ impl Transformer {
     /// bit-identical to feeding the tokens through `decode_step` one
     /// at a time. Empty `tokens` returns an empty vec.
     pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
+        match self.prefill_hidden(tokens, cache) {
+            // Logit only the last position: one (1, vocab) GEMV
+            // instead of the s lm-head GEMVs the incremental prefill
+            // paid.
+            Some(last) => {
+                let xf = rmsnorm_rows(&last, &self.lnf);
+                xf.matmul_bt(&self.emb).row(0).to_vec()
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// [`Self::prefill`] without the lm-head projection — for
+    /// mid-prompt chunks whose logits nobody reads (the continuous-
+    /// batching scheduler only samples from the *final* chunk). K/V
+    /// side effects are identical to [`Self::prefill`].
+    pub fn prefill_extend(&self, tokens: &[u16], cache: &mut KvCache) {
+        let _ = self.prefill_hidden(tokens, cache);
+    }
+
+    /// Shared prefill body: appends K/V for every position and returns
+    /// the last position's final hidden state as a (1, d) matrix
+    /// (pre-lnf), or `None` for empty `tokens`.
+    fn prefill_hidden(&self, tokens: &[u16], cache: &mut KvCache) -> Option<Matrix> {
         let s = tokens.len();
         if s == 0 {
-            return Vec::new();
+            return None;
         }
         let d = self.cfg.d_model;
         let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
@@ -401,12 +425,9 @@ impl Transformer {
             }
             x = x.add(&block.wdown.forward(&mid));
         }
-        // Logit only the last position: one (1, vocab) GEMV instead of
-        // the s lm-head GEMVs the incremental prefill paid.
         let mut last = Matrix::zeros(1, d);
         last.row_mut(0).copy_from_slice(x.row(s - 1));
-        let xf = rmsnorm_rows(&last, &self.lnf);
-        xf.matmul_bt(&self.emb).row(0).to_vec()
+        Some(last)
     }
 
     /// Prepare serving engines on every linear.
@@ -575,6 +596,13 @@ pub mod tests {
         let chunked = m.prefill(&tokens[2..], &mut c_chunk);
         assert_eq!(whole, chunked);
         assert_caches_identical(&c_whole, &c_chunk);
+        // prefill_extend (no lm head) must leave the identical cache,
+        // so extend-then-final-prefill matches the whole prompt too.
+        let mut c_ext = m.new_cache(8);
+        m.prefill_extend(&tokens[..3], &mut c_ext);
+        let extended = m.prefill(&tokens[3..], &mut c_ext);
+        assert_eq!(whole, extended);
+        assert_caches_identical(&c_whole, &c_ext);
     }
 
     #[test]

@@ -3,17 +3,23 @@
 //! XLA CPU client — python never runs on this path.
 //!
 //! The real client wraps the vendored `xla` crate (xla_extension
-//! 0.5.1), which only exists on the build image. Default builds use a
-//! stub with the same API whose constructor fails at runtime, so the
-//! crate compiles anywhere; enable the `pjrt` feature on the image
-//! (after adding the vendored `xla` path dependency) for the real
-//! thing. Parity tests skip when artifacts are missing, so the stub
-//! never breaks `cargo test`.
+//! 0.5.1), which only exists on the build image. Default builds — and
+//! `--features pjrt` builds off the image — use a stub with the same
+//! API whose constructor fails at runtime, so the crate compiles
+//! anywhere; on the image, enable the `pjrt` feature AND pass
+//! `RUSTFLAGS="--cfg xla_runtime"` (after adding the vendored `xla`
+//! path dependency) for the real thing. Parity tests skip when
+//! artifacts are missing, so the stub never breaks `cargo test`.
 
-#[cfg(feature = "pjrt")]
+// The real client needs BOTH the `pjrt` feature and the build image's
+// vendored `xla` crate (signalled via `--cfg xla_runtime` in
+// RUSTFLAGS, declared in Cargo.toml's `[lints.rust]` check-cfg).
+// `--features pjrt` alone compiles the stub everywhere, so CI can
+// build-check the feature without the image.
+#[cfg(all(feature = "pjrt", xla_runtime))]
 pub mod pjrt;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", xla_runtime)))]
 #[path = "pjrt_stub.rs"]
 pub mod pjrt;
 

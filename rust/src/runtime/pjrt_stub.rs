@@ -1,8 +1,9 @@
-//! API-compatible stand-in for [`super::pjrt`] used when the crate is
-//! built without the `pjrt` feature (the vendored `xla` crate only
-//! exists on the build image). Construction fails with a clear error;
-//! everything downstream (CLI `parity`, hlo_parity example, runtime
-//! parity tests) already handles that by skipping.
+//! API-compatible stand-in for the real PJRT client, used unless the
+//! crate is built with the `pjrt` feature AND `--cfg xla_runtime`
+//! (the vendored `xla` crate only exists on the build image).
+//! Construction fails with a clear error; everything downstream (CLI
+//! `parity`, hlo_parity example, runtime parity tests) already
+//! handles that by skipping.
 
 use std::path::Path;
 
@@ -25,7 +26,7 @@ impl PjrtRuntime {
     /// Always fails: this build has no XLA client.
     pub fn cpu(_artifacts_dir: &Path) -> Result<PjrtRuntime> {
         bail!(
-            "PJRT runtime unavailable: built without the `pjrt` feature \
+            "PJRT runtime unavailable: built without the `pjrt` feature + `--cfg xla_runtime` \
              (the vendored xla_extension crate only exists on the build image)"
         )
     }

@@ -5,6 +5,12 @@
 //! reports min/mean/p50/p95 and derived throughput. Benches print
 //! paper-shaped tables via [`Table`] and emit machine-readable
 //! `BENCHLINE` rows for EXPERIMENTS.md tooling.
+//!
+//! The JSON side round-trips: [`JsonReport`] writes `BENCH_<exp>.json`
+//! and [`parse_report`] reads it back, so [`compare_reports`] can gate
+//! a current run against a committed baseline snapshot (per-metric
+//! direction + regression tolerance via [`Gate`]) and render a
+//! markdown delta table for CI — see examples/perf_compare.rs.
 
 use std::time::Instant;
 
@@ -26,13 +32,9 @@ impl BenchStats {
         self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64
     }
     pub fn percentile_ns(&self, p: f64) -> u64 {
-        if self.samples_ns.is_empty() {
-            return 0;
-        }
         let mut s = self.samples_ns.clone();
         s.sort_unstable();
-        let idx = ((s.len() - 1) as f64 * p).round() as usize;
-        s[idx]
+        percentile_sorted(&s, p)
     }
     pub fn mean_ms(&self) -> f64 {
         self.mean_ns() / 1e6
@@ -52,6 +54,16 @@ impl BenchStats {
             self.samples_ns.len()
         )
     }
+}
+
+/// Nearest-rank percentile of an already-sorted sample set (0 when
+/// empty; `p` clamped to [0, 1]). The single percentile definition
+/// shared by benches and the serving metrics.
+pub fn percentile_sorted(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[(((sorted.len() - 1) as f64) * p.clamp(0.0, 1.0)).round() as usize]
 }
 
 /// Run `f` for `warmup` untimed + `iters` timed iterations.
@@ -188,6 +200,388 @@ impl JsonReport {
     }
 }
 
+// ---------------------------------------------------------------------
+// Compare mode: parse committed BENCH_*.json snapshots back in and gate
+// named metrics against a baseline (the CI perf-regression step — see
+// examples/perf_compare.rs and benches/baseline/README.md).
+// ---------------------------------------------------------------------
+
+/// A scalar cell from a parsed bench report.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonVal {
+    Num(f64),
+    Str(String),
+}
+
+impl JsonVal {
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonVal::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Render for row-identity keys: integers without a trailing `.0`.
+    fn key_text(&self) -> String {
+        match self {
+            JsonVal::Str(s) => s.clone(),
+            JsonVal::Num(v) if v.fract() == 0.0 && v.abs() < 1e15 => format!("{:.0}", v),
+            JsonVal::Num(v) => format!("{v}"),
+        }
+    }
+}
+
+/// A parsed `BENCH_<exp>.json` report (the [`JsonReport`] shape).
+#[derive(Debug, Clone)]
+pub struct ParsedReport {
+    pub exp: String,
+    pub rows: Vec<Vec<(String, JsonVal)>>,
+}
+
+impl ParsedReport {
+    pub fn field<'a>(row: &'a [(String, JsonVal)], name: &str) -> Option<&'a JsonVal> {
+        row.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+}
+
+enum Node {
+    Num(f64),
+    Str(String),
+    Arr(Vec<Node>),
+    Obj(Vec<(String, Node)>),
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.ws();
+        self.b.get(self.i).copied().ok_or_else(|| "unexpected end of JSON".to_string())
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        let got = self.peek()?;
+        if got != c {
+            return Err(format!(
+                "expected '{}' at byte {}, found '{}'",
+                c as char, self.i, got as char
+            ));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or("unterminated string")?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or("truncated \\u escape")?;
+                            self.i += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                16,
+                            )
+                            .map_err(|_| "bad \\u escape")?;
+                            out.push(char::from_u32(code).ok_or("bad \\u codepoint")?);
+                        }
+                        other => return Err(format!("unknown escape '\\{}'", other as char)),
+                    }
+                }
+                _ => {
+                    // Re-join multi-byte UTF-8 sequences.
+                    let start = self.i - 1;
+                    let mut end = self.i;
+                    while end < self.b.len() && self.b[end] & 0xC0 == 0x80 {
+                        end += 1;
+                    }
+                    let s = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| "invalid UTF-8 in string")?;
+                    out.push_str(s);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<f64, String> {
+        self.ws();
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn node(&mut self) -> Result<Node, String> {
+        match self.peek()? {
+            b'"' => Ok(Node::Str(self.string()?)),
+            b'{' => {
+                self.eat(b'{')?;
+                let mut fields = Vec::new();
+                if self.peek()? == b'}' {
+                    self.i += 1;
+                    return Ok(Node::Obj(fields));
+                }
+                loop {
+                    let key = self.string()?;
+                    self.eat(b':')?;
+                    fields.push((key, self.node()?));
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b'}' => {
+                            self.i += 1;
+                            return Ok(Node::Obj(fields));
+                        }
+                        c => return Err(format!("expected ',' or '}}', found '{}'", c as char)),
+                    }
+                }
+            }
+            b'[' => {
+                self.eat(b'[')?;
+                let mut items = Vec::new();
+                if self.peek()? == b']' {
+                    self.i += 1;
+                    return Ok(Node::Arr(items));
+                }
+                loop {
+                    items.push(self.node()?);
+                    match self.peek()? {
+                        b',' => self.i += 1,
+                        b']' => {
+                            self.i += 1;
+                            return Ok(Node::Arr(items));
+                        }
+                        c => return Err(format!("expected ',' or ']', found '{}'", c as char)),
+                    }
+                }
+            }
+            _ => Ok(Node::Num(self.number()?)),
+        }
+    }
+}
+
+/// Parse a `BENCH_<exp>.json` report (the exact subset [`JsonReport`]
+/// emits: a top-level object with a string `exp` and a `rows` array of
+/// flat string/number objects).
+pub fn parse_report(text: &str) -> Result<ParsedReport, String> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    let Node::Obj(top) = p.node()? else {
+        return Err("report root must be an object".into());
+    };
+    let mut exp = None;
+    let mut rows = Vec::new();
+    for (key, node) in top {
+        match (key.as_str(), node) {
+            ("exp", Node::Str(s)) => exp = Some(s),
+            ("rows", Node::Arr(items)) => {
+                for item in items {
+                    let Node::Obj(fields) = item else {
+                        return Err("each row must be an object".into());
+                    };
+                    let mut row = Vec::with_capacity(fields.len());
+                    for (k, v) in fields {
+                        let cell = match v {
+                            Node::Num(n) => JsonVal::Num(n),
+                            Node::Str(s) => JsonVal::Str(s),
+                            _ => return Err(format!("row field '{k}' must be scalar")),
+                        };
+                        row.push((k, cell));
+                    }
+                    rows.push(row);
+                }
+            }
+            _ => {} // ignore unknown top-level fields
+        }
+    }
+    Ok(ParsedReport { exp: exp.ok_or("report missing 'exp'")?, rows })
+}
+
+/// One gated metric: which direction is good, and how much regression
+/// (percent, in the bad direction) the gate tolerates.
+#[derive(Debug, Clone)]
+pub struct Gate {
+    pub metric: String,
+    pub higher_is_better: bool,
+    pub max_regress_pct: f64,
+}
+
+impl Gate {
+    pub fn higher(metric: &str, max_regress_pct: f64) -> Gate {
+        Gate { metric: metric.to_string(), higher_is_better: true, max_regress_pct }
+    }
+
+    pub fn lower(metric: &str, max_regress_pct: f64) -> Gate {
+        Gate { metric: metric.to_string(), higher_is_better: false, max_regress_pct }
+    }
+}
+
+/// One baseline-vs-current metric comparison.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub row_key: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed raw change: `(current - baseline) / baseline * 100`.
+    pub change_pct: f64,
+    /// Movement in the *bad* direction for this gate (>= 0).
+    pub regress_pct: f64,
+    /// `regress_pct` exceeded the gate's tolerance.
+    pub regressed: bool,
+}
+
+/// Outcome of comparing one experiment's report pair.
+#[derive(Debug, Clone, Default)]
+pub struct CompareOutcome {
+    pub deltas: Vec<Delta>,
+    /// Row keys present only in the current run (new scenarios).
+    pub only_in_current: Vec<String>,
+    /// Row keys present only in the baseline (dropped scenarios).
+    pub only_in_baseline: Vec<String>,
+}
+
+impl CompareOutcome {
+    pub fn regressions(&self) -> usize {
+        self.deltas.iter().filter(|d| d.regressed).count()
+    }
+
+    /// GitHub-flavored markdown delta table (for
+    /// `$GITHUB_STEP_SUMMARY`).
+    pub fn markdown(&self, title: &str) -> String {
+        fn num(v: f64) -> String {
+            if v.fract() == 0.0 && v.abs() < 1e15 {
+                format!("{:.0}", v)
+            } else {
+                format!("{:.4}", v)
+            }
+        }
+        let mut s = format!("### {title}\n\n");
+        if self.deltas.is_empty() {
+            s.push_str("_no comparable gated metrics_\n");
+        } else {
+            s.push_str("| row | metric | baseline | current | change | status |\n");
+            s.push_str("|---|---|---|---|---|---|\n");
+            for d in &self.deltas {
+                s.push_str(&format!(
+                    "| {} | {} | {} | {} | {:+.1}% | {} |\n",
+                    d.row_key,
+                    d.metric,
+                    num(d.baseline),
+                    num(d.current),
+                    d.change_pct,
+                    if d.regressed { "❌ regressed" } else { "✅" },
+                ));
+            }
+        }
+        for k in &self.only_in_current {
+            s.push_str(&format!("\n- `{k}`: new in current run (no baseline row)"));
+        }
+        for k in &self.only_in_baseline {
+            s.push_str(&format!("\n- `{k}`: present in baseline but missing from current run"));
+        }
+        s.push('\n');
+        s
+    }
+}
+
+/// Identity of a row for baseline matching: the values of `keys` in
+/// order (missing fields render as `-`).
+pub fn row_key(row: &[(String, JsonVal)], keys: &[&str]) -> String {
+    if keys.is_empty() {
+        return "all".to_string();
+    }
+    keys.iter()
+        .map(|k| ParsedReport::field(row, k).map(|v| v.key_text()).unwrap_or_else(|| "-".into()))
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Compare `current` against `baseline`: rows are matched by the
+/// `keys` fields, and every [`Gate`]d metric present (as a number) in
+/// both matched rows produces a [`Delta`]. Rows with a non-positive
+/// baseline value for a metric are skipped (percent change is
+/// meaningless).
+pub fn compare_reports(
+    baseline: &ParsedReport,
+    current: &ParsedReport,
+    keys: &[&str],
+    gates: &[Gate],
+) -> CompareOutcome {
+    let mut out = CompareOutcome::default();
+    let base_keys: Vec<String> = baseline.rows.iter().map(|r| row_key(r, keys)).collect();
+    let mut matched_base = vec![false; baseline.rows.len()];
+    for crow in &current.rows {
+        let ckey = row_key(crow, keys);
+        let Some(bi) = base_keys.iter().position(|k| *k == ckey) else {
+            out.only_in_current.push(ckey);
+            continue;
+        };
+        matched_base[bi] = true;
+        let brow = &baseline.rows[bi];
+        for gate in gates {
+            let (Some(b), Some(c)) = (
+                ParsedReport::field(brow, &gate.metric).and_then(JsonVal::as_num),
+                ParsedReport::field(crow, &gate.metric).and_then(JsonVal::as_num),
+            ) else {
+                continue;
+            };
+            if b <= 0.0 {
+                continue;
+            }
+            let change_pct = (c - b) / b * 100.0;
+            let regress_pct =
+                if gate.higher_is_better { -change_pct } else { change_pct }.max(0.0);
+            out.deltas.push(Delta {
+                row_key: ckey.clone(),
+                metric: gate.metric.clone(),
+                baseline: b,
+                current: c,
+                change_pct,
+                regress_pct,
+                regressed: regress_pct > gate.max_regress_pct,
+            });
+        }
+    }
+    for (bi, key) in base_keys.into_iter().enumerate() {
+        if !matched_base[bi] {
+            out.only_in_baseline.push(key);
+        }
+    }
+    out
+}
+
 fn json_escape(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
@@ -256,5 +650,102 @@ mod tests {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
         assert_eq!(json_value("nan"), "\"nan\"");
         assert_eq!(json_value("-3.25"), "-3.25");
+    }
+
+    #[test]
+    fn parse_roundtrips_rendered_report() {
+        let mut r = JsonReport::new("serve");
+        r.row(&[
+            ("backend", "BTC 0.8 (LUT)".to_string()),
+            ("batch", "4".to_string()),
+            ("tokens_per_s", "123.5".to_string()),
+        ]);
+        r.row(&[("backend", "quote\"s\nand\\slashes".to_string()), ("batch", "1".to_string())]);
+        let p = parse_report(&r.render()).expect("parse own output");
+        assert_eq!(p.exp, "serve");
+        assert_eq!(p.rows.len(), 2);
+        assert_eq!(
+            ParsedReport::field(&p.rows[0], "backend"),
+            Some(&JsonVal::Str("BTC 0.8 (LUT)".into()))
+        );
+        assert_eq!(ParsedReport::field(&p.rows[0], "batch"), Some(&JsonVal::Num(4.0)));
+        assert_eq!(ParsedReport::field(&p.rows[0], "tokens_per_s"), Some(&JsonVal::Num(123.5)));
+        assert_eq!(
+            ParsedReport::field(&p.rows[1], "backend"),
+            Some(&JsonVal::Str("quote\"s\nand\\slashes".into()))
+        );
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_report("").is_err());
+        assert!(parse_report("[1,2]").is_err());
+        assert!(parse_report("{\"rows\": []}").is_err(), "missing exp");
+        assert!(parse_report("{\"exp\": \"x\", \"rows\": [{\"a\": [1]}]}").is_err());
+    }
+
+    fn report(exp: &str, rows: &[&[(&str, &str)]]) -> ParsedReport {
+        let mut r = JsonReport::new(exp);
+        for row in rows {
+            let kv: Vec<(&str, String)> = row.iter().map(|(k, v)| (*k, v.to_string())).collect();
+            r.row(&kv);
+        }
+        parse_report(&r.render()).unwrap()
+    }
+
+    #[test]
+    fn compare_flags_regressions_by_direction() {
+        let base = report(
+            "serve",
+            &[
+                &[("backend", "FP16"), ("batch", "1"), ("tokens_per_s", "100"), ("p50_ms", "10")],
+                &[("backend", "FP16"), ("batch", "4"), ("tokens_per_s", "300"), ("p50_ms", "12")],
+            ],
+        );
+        let cur = report(
+            "serve",
+            &[
+                // tokens/s -40% (regression for higher-is-better),
+                // p50 -50% (improvement for lower-is-better).
+                &[("backend", "FP16"), ("batch", "1"), ("tokens_per_s", "60"), ("p50_ms", "5")],
+                // +10% tokens/s: fine. p50 +60%: regression.
+                &[("backend", "FP16"), ("batch", "4"), ("tokens_per_s", "330"), ("p50_ms", "19.2")],
+            ],
+        );
+        let gates = [Gate::higher("tokens_per_s", 25.0), Gate::lower("p50_ms", 25.0)];
+        let out = compare_reports(&base, &cur, &["backend", "batch"], &gates);
+        assert_eq!(out.deltas.len(), 4);
+        assert_eq!(out.regressions(), 2);
+        let d0 = &out.deltas[0];
+        assert_eq!(d0.row_key, "FP16/1");
+        assert!(d0.regressed && (d0.regress_pct - 40.0).abs() < 1e-9);
+        let d1 = &out.deltas[1]; // p50 improved
+        assert!(!d1.regressed && d1.regress_pct == 0.0);
+        let md = out.markdown("serve");
+        assert!(md.contains("❌") && md.contains("✅") && md.contains("FP16/4"));
+    }
+
+    #[test]
+    fn compare_reports_row_mismatches() {
+        let base =
+            report("m", &[&[("scenario", "a"), ("x", "1")], &[("scenario", "b"), ("x", "1")]]);
+        let cur =
+            report("m", &[&[("scenario", "a"), ("x", "1")], &[("scenario", "c"), ("x", "2")]]);
+        let out = compare_reports(&base, &cur, &["scenario"], &[Gate::lower("x", 10.0)]);
+        assert_eq!(out.only_in_current, vec!["c".to_string()]);
+        assert_eq!(out.only_in_baseline, vec!["b".to_string()]);
+        assert_eq!(out.deltas.len(), 1, "only the matched row compares");
+        assert!(!out.deltas[0].regressed);
+    }
+
+    #[test]
+    fn compare_skips_missing_and_nonpositive_metrics() {
+        let base = report("m", &[&[("k", "a"), ("x", "0"), ("y", "5")]]);
+        let cur = report("m", &[&[("k", "a"), ("x", "9"), ("z", "1")]]);
+        let gates = [Gate::lower("x", 10.0), Gate::lower("y", 10.0), Gate::lower("z", 10.0)];
+        let out = compare_reports(&base, &cur, &["k"], &gates);
+        // x skipped (baseline 0), y skipped (missing in current),
+        // z skipped (missing in baseline).
+        assert!(out.deltas.is_empty());
     }
 }

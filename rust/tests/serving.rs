@@ -22,7 +22,8 @@ fn serve_btc_quantized_model() {
     let server = Server::start(qm.model, 4, Duration::from_millis(2), 3);
     let tok = ByteTokenizer::default();
     let prompts = corpus::prompts(6, 5);
-    let rxs: Vec<_> = prompts.iter().map(|p| server.submit(tok.encode(p), 12, 0.0)).collect();
+    let rxs: Vec<_> =
+        prompts.iter().map(|p| server.submit(tok.encode(p), 12, 0.0).expect("submit")).collect();
     for rx in rxs {
         let r = rx.recv_timeout(Duration::from_secs(120)).expect("generation finished");
         assert!(r.tokens.len() > r.prompt_len, "generated at least one token");
@@ -48,7 +49,7 @@ fn greedy_generation_continues_grammar() {
     let qm = quantize_model(&w.raw, &w.corpus, &QuantConfig::fp16()).unwrap();
     let server = Server::start(qm.model, 1, Duration::from_millis(1), 1);
     let tok = ByteTokenizer::default();
-    let rx = server.submit(tok.encode("the cat "), 24, 0.0);
+    let rx = server.submit(tok.encode("the cat "), 24, 0.0).expect("submit");
     let r = rx.recv_timeout(Duration::from_secs(60)).unwrap();
     let completion = tok.decode(&r.tokens[r.prompt_len..]);
     assert!(
