@@ -11,7 +11,14 @@
 //!   path — reporting time-to-first-token and inter-token latency
 //!   percentiles plus how many short requests completed before the
 //!   long one (head-of-line-blocking truth; with the old
-//!   batch-to-completion loop this is 0).
+//!   batch-to-completion loop this is 0);
+//! - `prefix`: the KV-memory scenario — N long-context requests
+//!   sharing a common prompt prefix, run once with an f32 KV pool and
+//!   once with `kv_bits=4` cold-block quantization, reporting pool
+//!   utilization, peak blocks per request, prefix-shared positions,
+//!   peak KV resident bytes (f32 vs int4) and the in-flight peak vs
+//!   what worst-case flat reservation would have admitted under the
+//!   same block budget.
 //!
 //! Hermetic: when the trained artifacts are absent (`make artifacts`
 //! not run — e.g. the CI perf-smoke job) the bench falls back to a
@@ -73,6 +80,9 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut stag = Table::new(&[
         "backend", "shorts", "ttft p50", "ttft p95", "itl p50", "done before long",
+    ]);
+    let mut prefix_t = Table::new(&[
+        "backend", "kv", "tokens/s", "kv peak", "blk/req", "shared pos", "inflight peak", "util",
     ]);
     let mut report = JsonReport::new("serve");
     for (label, cfg) in lanes {
@@ -208,6 +218,129 @@ fn main() -> anyhow::Result<()> {
         benchline("serve_e2e", &kv);
         report.row(&kv);
         server.shutdown();
+
+        // --- Scenario 3: long context + shared prefix (KV memory) ----
+        // N requests share a block-aligned prompt prefix and each
+        // generate a long continuation. A base request warms the
+        // prefix (streaming: its first token proves the prompt is
+        // prefilled + registered), then the rest attach its blocks.
+        // Run twice — f32 pool vs kv_bits=4 — and report the measured
+        // pool numbers the ROADMAP's memory story turns on.
+        let ms = raw.config.max_seq;
+        let kv_block = 8usize;
+        let prefix_len = 4 * kv_block; // four shareable full blocks
+        let suffix_len = 8usize;
+        let gen_len =
+            ms.saturating_sub(prefix_len + suffix_len + 4).min(100).max(8);
+        let n_requests = if quick { 4 } else { 6 };
+        let worst_blocks = (prefix_len + suffix_len + gen_len + 1).div_ceil(kv_block);
+        // Budget sized to the *actual* shared-prefix demand — well
+        // under n_requests worst cases, so worst-case flat reservation
+        // could only admit `budget / worst_blocks` requests at once
+        // while the paged pool runs all of them.
+        let shared_blocks = prefix_len / kv_block;
+        let budget_blocks = shared_blocks + n_requests * (worst_blocks - shared_blocks) + 1;
+        let vocab = raw.config.vocab as u16;
+        let prefix: Vec<u16> = (0..prefix_len).map(|i| ((i * 7 + 3) % vocab as usize) as u16).collect();
+        let mut peak_bytes_by_cfg = Vec::new();
+        for kv_bits in [16u32, 4] {
+            let opts = ServerOptions {
+                max_batch: n_requests.max(2),
+                batch_wait: Duration::from_millis(1),
+                seed: 7,
+                prefill_chunk: 32,
+                stop: StopSet::none(),
+                kv_block,
+                kv_pool_blocks: budget_blocks,
+                kv_bits,
+                kv_local_window: 8,
+                ..ServerOptions::default()
+            };
+            let server = Server::start_with_opts(qm.model.clone(), opts);
+            let t0 = std::time::Instant::now();
+            let suffix = |r: usize| -> Vec<u16> {
+                (0..suffix_len).map(|i| (((i * 5 + r * 11 + 1) % vocab as usize) as u16)).collect()
+            };
+            let mut base_prompt = prefix.clone();
+            base_prompt.extend(suffix(0));
+            let (stream, base_rx) = server
+                .submit_streaming_with(base_prompt, gen_len, 0.0, StopSet::none())
+                .expect("submit base");
+            // First token => base prompt fully prefilled, prefix
+            // blocks registered and attachable.
+            stream.recv().expect("base first token");
+            let rxs: Vec<_> = (1..n_requests)
+                .map(|r| {
+                    let mut p = prefix.clone();
+                    p.extend(suffix(r));
+                    server.submit_with(p, gen_len, 0.0, StopSet::none(), None).expect("submit")
+                })
+                .collect();
+            let mut total_tokens = 0usize;
+            for rx in rxs {
+                let r = rx.recv().expect("prefix response");
+                total_tokens += r.tokens.len() - r.prompt_len;
+            }
+            let base = base_rx.recv().expect("base response");
+            total_tokens += base.tokens.len() - base.prompt_len;
+            drop(stream);
+            let wall = t0.elapsed().as_secs_f64();
+            use std::sync::atomic::Ordering::Relaxed;
+            let m = &server.metrics;
+            let peak_blocks = m.kv_blocks_peak.load(Relaxed);
+            let peak_bytes = m.kv_resident_peak_bytes.load(Relaxed);
+            let shared_pos = m.kv_shared_positions.load(Relaxed);
+            let inflight_peak = m.peak_in_flight.load(Relaxed);
+            let quant_peak = m.kv_quant_blocks_peak.load(Relaxed);
+            let tps = total_tokens as f64 / wall;
+            let util = peak_blocks as f64 / budget_blocks as f64;
+            peak_bytes_by_cfg.push(peak_bytes);
+            prefix_t.row(&[
+                label.to_string(),
+                if kv_bits >= 16 { "f32".into() } else { format!("int{kv_bits}") },
+                format!("{tps:.1}"),
+                format!("{:.0}KB", peak_bytes as f64 / 1024.0),
+                format!("{:.1}", peak_blocks as f64 / n_requests as f64),
+                shared_pos.to_string(),
+                format!("{inflight_peak} (flat {})", budget_blocks / worst_blocks),
+                format!("{util:.2}"),
+            ]);
+            let kv = [
+                ("scenario", "prefix".to_string()),
+                ("backend", label.replace(' ', "_")),
+                ("kv_bits", kv_bits.to_string()),
+                ("n_requests", n_requests.to_string()),
+                ("prefix_len", prefix_len.to_string()),
+                ("gen_len", gen_len.to_string()),
+                ("kv_block", kv_block.to_string()),
+                ("kv_pool_blocks", budget_blocks.to_string()),
+                ("tokens_per_s", format!("{tps:.2}")),
+                ("kv_peak_blocks", peak_blocks.to_string()),
+                ("kv_peak_bytes", peak_bytes.to_string()),
+                ("kv_quant_blocks_peak", quant_peak.to_string()),
+                ("kv_blocks_per_request", format!("{:.2}", peak_blocks as f64 / n_requests as f64)),
+                ("kv_shared_positions", shared_pos.to_string()),
+                ("inflight_peak", inflight_peak.to_string()),
+                ("worst_case_flat_slots", (budget_blocks / worst_blocks).to_string()),
+                ("pool_utilization", format!("{util:.3}")),
+                ("threads", threads.to_string()),
+                ("workload", wl_name.to_string()),
+            ];
+            benchline("serve_e2e", &kv);
+            report.row(&kv);
+            server.shutdown();
+        }
+        // The sub-1-bit memory story, continuously enforced on the
+        // hermetic synthetic workload (trained artifacts may have
+        // shapes where the margin differs; there we only report).
+        let ratio = peak_bytes_by_cfg[0] as f64 / peak_bytes_by_cfg[1].max(1) as f64;
+        println!("  {label}: KV peak bytes f32/int4 = {ratio:.2}x");
+        if wl_name == "synthetic" {
+            assert!(
+                ratio >= 3.0,
+                "{label}: int4 KV pool must shrink >= 3x vs f32 (got {ratio:.2}x)"
+            );
+        }
     }
     println!(
         "\nEnd-to-end serving ({wl_name}, <= {max_new} new tokens/request, {threads} threads)"
@@ -219,6 +352,12 @@ fn main() -> anyhow::Result<()> {
          generation; TTFT measured submit → first token)"
     );
     stag.print();
+    println!(
+        "\nLong context + shared prefix ({wl_name}: block-paged KV pool, refcounted prefix \
+         blocks, int4 cold blocks vs f32; 'inflight peak (flat N)' compares sustained \
+         concurrency against worst-case flat reservation under the same block budget)"
+    );
+    prefix_t.print();
     let _ = report.write_if_enabled();
     println!("\nNote: at TinyLM widths the decode hot path is attention + norm overhead;");
     println!("the weight-GEMM speedup shows at MLP shapes — see bench_fig5_latency.");

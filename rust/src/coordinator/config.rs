@@ -38,6 +38,16 @@ pub struct ServeConfig {
     /// Kernel worker threads (0 = auto: `PALLAS_THREADS` env, else the
     /// hardware parallelism). Validated/clamped at server start.
     pub threads: usize,
+    /// Bits for cold KV-cache blocks (2..=8; >= 16 = off, pure f32 —
+    /// the default, so existing configs are byte-for-byte unchanged).
+    pub kv_bits: u32,
+    /// Trailing positions kept f32 when `kv_bits` is active.
+    pub kv_local_window: usize,
+    /// KV-pool block size (positions per block).
+    pub kv_block: usize,
+    /// KV-pool budget in blocks (0 = auto: worst-case-equivalent
+    /// capacity per in-flight slot, allocated lazily).
+    pub kv_pool_blocks: usize,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +65,10 @@ impl Default for ServeConfig {
             temperature: 0.0,
             seed: 42,
             threads: 0,
+            kv_bits: 16,
+            kv_local_window: 16,
+            kv_block: 32,
+            kv_pool_blocks: 0,
         }
     }
 }
@@ -85,6 +99,16 @@ impl ServeConfig {
             temperature: doc.get_float("serve.temperature", d.temperature),
             seed: doc.get_int("serve.seed", d.seed as i64) as u64,
             threads: doc.get_int("serve.threads", d.threads as i64).max(0) as usize,
+            kv_bits: crate::quant::kvquant::KvQuantConfig::sanitize_bits(
+                doc.get_int("serve.kv_bits", d.kv_bits as i64).max(0) as u32,
+            ),
+            kv_local_window: doc
+                .get_int("serve.kv_local_window", d.kv_local_window as i64)
+                .max(0) as usize,
+            kv_block: doc.get_int("serve.kv_block", d.kv_block as i64).max(1) as usize,
+            kv_pool_blocks: doc
+                .get_int("serve.kv_pool_blocks", d.kv_pool_blocks as i64)
+                .max(0) as usize,
         }
     }
 
@@ -156,5 +180,33 @@ mod tests {
     fn threads_defaults_to_auto() {
         let c = ServeConfig::from_doc(&parse("").unwrap());
         assert_eq!(c.threads, 0);
+    }
+
+    #[test]
+    fn kv_quant_defaults_off_and_parses() {
+        // Defaults: quantization off, auto pool — existing configs
+        // behave exactly as before.
+        let c = ServeConfig::from_doc(&parse("").unwrap());
+        assert_eq!((c.kv_bits, c.kv_local_window), (16, 16));
+        assert_eq!((c.kv_block, c.kv_pool_blocks), (32, 0));
+        let doc = parse(
+            "[serve]\nkv_bits = 4\nkv_local_window = 8\nkv_block = 16\nkv_pool_blocks = 256\n",
+        )
+        .unwrap();
+        let c = ServeConfig::from_doc(&doc);
+        assert_eq!((c.kv_bits, c.kv_local_window), (4, 8));
+        assert_eq!((c.kv_block, c.kv_pool_blocks), (16, 256));
+        // Out-of-range bits clamp instead of wrapping; the formatless
+        // 9..=15 band snaps down to 8 rather than panicking the
+        // worker at the first cold block; 0 means off (the auto/off
+        // convention of threads/kv_pool_blocks), not int2.
+        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 1\n").unwrap());
+        assert_eq!(c.kv_bits, 2);
+        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 12\n").unwrap());
+        assert_eq!(c.kv_bits, 8);
+        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 32\n").unwrap());
+        assert_eq!(c.kv_bits, 16);
+        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 0\n").unwrap());
+        assert_eq!(c.kv_bits, 16);
     }
 }

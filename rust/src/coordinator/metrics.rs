@@ -11,6 +11,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::model::kvcache::KvPoolStats;
 use crate::util::benchkit::percentile_sorted;
 
 /// Per-reservoir sample cap: enough for stable p50/p95/p99 estimates,
@@ -61,6 +62,31 @@ pub struct Metrics {
     pub prefill_us: AtomicU64,
     pub decode_tokens: AtomicU64,
     pub decode_us: AtomicU64,
+    /// Most requests ever simultaneously slotted (the concurrency the
+    /// memory-aware admission actually sustained).
+    pub peak_in_flight: AtomicU64,
+    /// KV pool gauges, republished by the scheduler each round
+    /// (`set_kv_pool`): the bounded block budget, current/peak blocks
+    /// in use, measured resident bytes (f32 + quantized payloads, with
+    /// a monotone peak), quantized-block count and prompt positions
+    /// served from the prefix map.
+    pub kv_blocks_total: AtomicU64,
+    pub kv_blocks_in_use: AtomicU64,
+    pub kv_blocks_peak: AtomicU64,
+    pub kv_resident_bytes: AtomicU64,
+    pub kv_resident_peak_bytes: AtomicU64,
+    pub kv_quant_blocks: AtomicU64,
+    /// Sticky: most quantized blocks ever resident at once (gauges
+    /// drain to zero once requests retire; the peak proves the cold
+    /// path ran).
+    pub kv_quant_blocks_peak: AtomicU64,
+    pub kv_shared_positions: AtomicU64,
+    /// Counters: admissions parked for lack of free blocks, in-round
+    /// allocation deferrals, and preemptions (newest slot evicted to
+    /// let an older one grow).
+    pub kv_admission_deferrals: AtomicU64,
+    pub kv_round_deferrals: AtomicU64,
+    pub kv_preemptions: AtomicU64,
     latencies_us: Mutex<Reservoir>,
     /// Submit → slot admission, one sample per request.
     queue_wait_us: Mutex<Reservoir>,
@@ -134,6 +160,39 @@ impl Metrics {
         self.decode_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// `n` requests are currently slotted (tracks the peak).
+    pub fn record_in_flight(&self, n: usize) {
+        self.peak_in_flight.fetch_max(n as u64, Ordering::Relaxed);
+    }
+
+    /// The queue head started a parked stretch because the pool lacks
+    /// free blocks (one event per stretch, not per re-check).
+    pub fn record_kv_admission_deferral(&self) {
+        self.kv_admission_deferrals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A slot sat a round out waiting for pool memory.
+    pub fn record_kv_round_deferral(&self) {
+        self.kv_round_deferrals.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The newest slot was evicted so an older one could grow.
+    pub fn record_kv_preemption(&self) {
+        self.kv_preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Republish the KV pool gauges (scheduler, once per round).
+    pub fn set_kv_pool(&self, s: &KvPoolStats) {
+        self.kv_blocks_total.store(s.budget_blocks as u64, Ordering::Relaxed);
+        self.kv_blocks_in_use.store(s.blocks_in_use as u64, Ordering::Relaxed);
+        self.kv_blocks_peak.store(s.peak_blocks as u64, Ordering::Relaxed);
+        self.kv_resident_bytes.store(s.resident_bytes as u64, Ordering::Relaxed);
+        self.kv_resident_peak_bytes.fetch_max(s.resident_bytes as u64, Ordering::Relaxed);
+        self.kv_quant_blocks.store(s.quant_blocks as u64, Ordering::Relaxed);
+        self.kv_quant_blocks_peak.fetch_max(s.quant_blocks as u64, Ordering::Relaxed);
+        self.kv_shared_positions.store(s.shared_positions, Ordering::Relaxed);
+    }
+
     /// Mean prefill cost per prompt token (µs); 0 before any prefill.
     pub fn prefill_us_per_token(&self) -> f64 {
         let t = self.prefill_tokens.load(Ordering::Relaxed);
@@ -188,7 +247,9 @@ impl Metrics {
         format!(
             "requests={} completed={} tokens={} rounds={} mean_batch={:.2} p50={}us p99={}us \
              qwait_p50={}us ttft_p50={}us ttft_p95={}us itl_p50={}us itl_p95={}us \
-             prefill={:.0}us/tok decode={:.0}us/tok",
+             prefill={:.0}us/tok decode={:.0}us/tok inflight_peak={} \
+             kv_blocks={}/{} kv_blocks_peak={} kv_bytes={} kv_bytes_peak={} kv_quant_blocks={} \
+             kv_shared_pos={} kv_defer={}+{} kv_preempt={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -203,6 +264,17 @@ impl Metrics {
             percentile_sorted(&itl, 0.95),
             self.prefill_us_per_token(),
             self.decode_us_per_token(),
+            self.peak_in_flight.load(Ordering::Relaxed),
+            self.kv_blocks_in_use.load(Ordering::Relaxed),
+            self.kv_blocks_total.load(Ordering::Relaxed),
+            self.kv_blocks_peak.load(Ordering::Relaxed),
+            self.kv_resident_bytes.load(Ordering::Relaxed),
+            self.kv_resident_peak_bytes.load(Ordering::Relaxed),
+            self.kv_quant_blocks.load(Ordering::Relaxed),
+            self.kv_shared_positions.load(Ordering::Relaxed),
+            self.kv_admission_deferrals.load(Ordering::Relaxed),
+            self.kv_round_deferrals.load(Ordering::Relaxed),
+            self.kv_preemptions.load(Ordering::Relaxed),
         )
     }
 }
@@ -265,6 +337,38 @@ mod tests {
             m.record_itl(7);
         }
         assert_eq!(m.itl_percentile_us(0.5), 7);
+    }
+
+    #[test]
+    fn kv_pool_gauges_and_counters() {
+        let m = Metrics::new();
+        m.record_in_flight(2);
+        m.record_in_flight(5);
+        m.record_in_flight(3);
+        assert_eq!(m.peak_in_flight.load(Ordering::Relaxed), 5, "peak is monotone");
+        m.record_kv_preemption();
+        m.record_kv_admission_deferral();
+        m.record_kv_round_deferral();
+        let s1 = KvPoolStats {
+            budget_blocks: 16,
+            blocks_in_use: 7,
+            peak_blocks: 9,
+            resident_bytes: 4096,
+            quant_blocks: 2,
+            shared_positions: 12,
+            ..KvPoolStats::default()
+        };
+        m.set_kv_pool(&s1);
+        // Gauges track the latest snapshot; the bytes peak is sticky.
+        let s2 = KvPoolStats { blocks_in_use: 3, resident_bytes: 1024, ..s1 };
+        m.set_kv_pool(&s2);
+        assert_eq!(m.kv_blocks_in_use.load(Ordering::Relaxed), 3);
+        assert_eq!(m.kv_resident_bytes.load(Ordering::Relaxed), 1024);
+        assert_eq!(m.kv_resident_peak_bytes.load(Ordering::Relaxed), 4096);
+        let s = m.summary();
+        assert!(s.contains("kv_blocks=3/16"), "summary carries pool gauges: {s}");
+        assert!(s.contains("kv_preempt=1") && s.contains("kv_defer=1+1"), "{s}");
+        assert!(s.contains("inflight_peak=5"), "{s}");
     }
 
     #[test]

@@ -11,11 +11,16 @@
 //! head-of-line blocking behind a long generation), prefills prompts
 //! in bounded chunks interleaved with in-flight decoding, applies stop
 //! conditions (EOS + stop sets, [`StopSet`]) and delivers tokens as
-//! they are accepted over optional streaming channels. [`Metrics`]
-//! tracks queue wait, time-to-first-token and inter-token latency
-//! alongside the per-phase prefill/decode rates. With greedy sampling
-//! each request's output is bit-identical regardless of co-traffic —
-//! see DESIGN.md §6 for the determinism contract.
+//! they are accepted over optional streaming channels. It also owns
+//! the block-paged KV pool (`model/kvcache.rs`): admission is
+//! memory-aware (free blocks for the prompt, no worst-case
+//! reservation), prompts sharing a token prefix share refcounted
+//! blocks, and cold blocks optionally store packed int K/V
+//! (`serve.kv_bits`) — see DESIGN.md §8. [`Metrics`] tracks queue
+//! wait, time-to-first-token and inter-token latency alongside the
+//! per-phase prefill/decode rates and the KV-pool gauges. With greedy
+//! sampling each request's output is bit-identical regardless of
+//! co-traffic — see DESIGN.md §6 for the determinism contract.
 //!
 //! [`Metrics`]: metrics::Metrics
 

@@ -1,42 +1,60 @@
 //! In-flight continuous-batching scheduler: owns the active request
-//! set and advances it one *round* at a time, admitting new arrivals
-//! between rounds instead of running each admitted batch to
-//! completion (no head-of-line blocking behind a long generation).
+//! set **and the KV block pool**, and advances both one *round* at a
+//! time, admitting new arrivals between rounds instead of running each
+//! admitted batch to completion (no head-of-line blocking behind a
+//! long generation).
 //!
 //! A round is: (1) requests still in their prompt phase advance
-//! through [`Transformer::prefill`] (which supports chunked prefill
-//! from `cache.len()`) within a *shared* budget of `prefill_chunk`
-//! prompt tokens per round, so even a burst of long prompts never
-//! stalls in-flight decoders for more than one bounded chunk;
-//! (2) every decoding request contributes its next token to one
-//! fused [`Transformer::decode_batch`] forward; (3) finished requests
-//! are swap-compacted out and their responses (and streaming channels)
-//! flushed. The [`Server`](super::server::Server) worker drives this
-//! loop, draining its request channel non-blockingly before each round
-//! (see [`Scheduler::admit_ready`]) up to `max_batch` in-flight slots.
+//! through [`Transformer::prefill_paged`] (chunked from
+//! `cache.len()`) within a *shared* budget of `prefill_chunk` prompt
+//! tokens per round; (2) every decoding request contributes its next
+//! token to one fused [`Transformer::decode_batch_paged`] forward;
+//! (3) finished requests are swap-compacted out and their responses
+//! (and streaming channels) flushed. The
+//! [`Server`](super::server::Server) worker drives this loop, draining
+//! its request channel non-blockingly before each round (see
+//! [`Scheduler::admit_ready`]) up to `max_batch` in-flight slots.
+//!
+//! **Memory-aware admission (DESIGN.md §8).** Requests wait in a FIFO
+//! pending queue until a slot is free **and** the pool has free blocks
+//! for their prompt — no worst-case reservation: blocks are allocated
+//! incrementally as sequences grow, so the pool oversubscribes
+//! generation headroom and sustains strictly more in-flight requests
+//! than `prompt + max_new + 1` reservation would. When growth does
+//! exhaust the pool mid-flight, the *newest* slot is preempted
+//! (blocks released, state reset to re-prefill its accumulated tokens
+//! when memory frees up — recompute, not swap), so the oldest request
+//! always makes progress and every request eventually retires; a full
+//! pool defers admission rather than panicking. Prompts that share a
+//! token prefix share refcounted pool blocks (attached at admission,
+//! registered after prefill) instead of recomputing them.
 //!
 //! **Determinism contract:** with greedy sampling (temperature 0) a
 //! request's output tokens are bit-identical regardless of what else
-//! is in flight: every kernel on the path computes output rows
-//! independently (see DESIGN.md §6), chunked prefill appends exactly
-//! the K/V a whole-prompt prefill would, and `decode_batch` row `b` is
-//! bit-identical to a solo `decode_step`. Pinned by tests here and in
-//! `rust/tests/scheduling.rs`.
+//! is in flight — including across preemption/re-prefill (prefill ≡
+//! repeated decode, so recompute reproduces the dropped state
+//! exactly) and prefix sharing (a shared block holds exactly the
+//! bytes the attaching request would have computed). Pinned by tests
+//! here and in `rust/tests/scheduling.rs` /
+//! `rust/tests/batch_equivalence.rs`.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
 use super::server::{FinishReason, GenRequest, GenResponse};
-use crate::model::kvcache::KvCache;
+use crate::model::kvcache::{KvPool, PagedKvCache, PoolConfig};
 use crate::model::Transformer;
 use crate::util::rng::Rng;
 
 /// Where one in-flight request stands in its lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum SlotState {
-    /// Prompt tokens `0..consumed` are in the KV cache; more to feed.
+    /// Tokens `0..consumed` are in the KV cache; more to feed. The
+    /// prefill source is `Slot::tokens` — the prompt on first
+    /// admission, prompt + generated-so-far after a preemption.
     Prefill { consumed: usize },
     /// Prompt done; `next` is the sampled-but-not-yet-fed token.
     Decode { next: u16 },
@@ -44,15 +62,21 @@ enum SlotState {
     Done(FinishReason),
 }
 
-/// One in-flight request: its KV cache lives inside the slot and is
-/// lent to [`Transformer::decode_batch`] for the duration of a round
-/// (cheap `Vec`-header moves — no K/V data is copied).
+/// One in-flight request. Its K/V lives in the shared pool; the slot
+/// holds the paged handle, lent to the fused forwards per round
+/// (cheap header moves — no K/V data is copied).
 struct Slot {
     req: GenRequest,
-    cache: KvCache,
-    /// Prompt + generated tokens (the response payload).
+    cache: PagedKvCache,
+    /// Prompt + generated tokens (the response payload, and the
+    /// re-prefill source after a preemption).
     tokens: Vec<u16>,
     state: SlotState,
+    /// Effective generation cap (request's `max_new_tokens`, clamped
+    /// so the sequence can always fit the pool alone).
+    max_new: usize,
+    /// Admission order; preemption always evicts the newest.
+    admitted: u64,
     /// Submit → slot admission.
     queue_wait: Duration,
     /// Submit → first generated token (zero until the first token).
@@ -69,37 +93,74 @@ pub struct Scheduler {
     metrics: Arc<Metrics>,
     max_batch: usize,
     prefill_chunk: usize,
+    pool: KvPool,
     slots: Vec<Slot>,
+    /// FIFO of requests waiting for a slot + pool memory.
+    pending: VecDeque<GenRequest>,
+    admit_seq: u64,
+    /// The queue head is currently parked on pool memory — dedupes
+    /// the admission-deferral counter to one event per parked
+    /// stretch, however many times the admission loop re-checks it.
+    head_deferred: bool,
 }
 
 impl Scheduler {
     /// `max_batch` bounds the in-flight slot count; `prefill_chunk`
     /// bounds how many prompt tokens may be prefilled per round in
     /// total, across all prefilling slots (both clamped to at
-    /// least 1).
+    /// least 1). The KV pool defaults to worst-case-equivalent
+    /// capacity (lazily allocated), so behavior matches the old flat
+    /// reservation unless a tighter [`PoolConfig`] is given via
+    /// [`Scheduler::with_pool`].
     pub fn new(
         model: Transformer,
         metrics: Arc<Metrics>,
         max_batch: usize,
         prefill_chunk: usize,
     ) -> Scheduler {
-        Scheduler {
+        Self::with_pool(model, metrics, max_batch, prefill_chunk, PoolConfig::default())
+    }
+
+    /// [`Scheduler::new`] with an explicit KV pool shape. A
+    /// `budget_blocks` of 0 auto-sizes to `max_batch` worst-case
+    /// sequences.
+    pub fn with_pool(
+        model: Transformer,
+        metrics: Arc<Metrics>,
+        max_batch: usize,
+        prefill_chunk: usize,
+        pool_cfg: PoolConfig,
+    ) -> Scheduler {
+        let max_batch = max_batch.max(1);
+        let pool = model.new_pool(&pool_cfg, max_batch);
+        let s = Scheduler {
             model,
             metrics,
-            max_batch: max_batch.max(1),
+            max_batch,
             prefill_chunk: prefill_chunk.max(1),
+            pool,
             slots: Vec::new(),
-        }
+            pending: VecDeque::new(),
+            admit_seq: 0,
+            head_deferred: false,
+        };
+        s.publish_kv_metrics();
+        s
     }
 
-    /// No requests in flight.
+    /// No requests in flight or pending.
     pub fn is_idle(&self) -> bool {
-        self.slots.is_empty()
+        self.slots.is_empty() && self.pending.is_empty()
     }
 
-    /// In-flight request count.
+    /// In-flight request count (slotted; excludes the pending queue).
     pub fn in_flight(&self) -> usize {
         self.slots.len()
+    }
+
+    /// Requests waiting for a slot or for pool memory.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
     }
 
     /// Free in-flight slots.
@@ -107,45 +168,186 @@ impl Scheduler {
         self.max_batch - self.slots.len().min(self.max_batch)
     }
 
-    /// Admit one request into a fresh slot (records its queue wait).
+    /// The KV block pool (diagnostics / tests / benches).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Enqueue one request; it enters a slot immediately if a slot and
+    /// pool memory are available, otherwise at a later round.
     pub fn admit(&mut self, req: GenRequest) {
+        self.pending.push_back(req);
+        self.try_admit_pending();
+    }
+
+    /// Drain `rx` non-blockingly into the pending queue and admit what
+    /// fits (the between-rounds admission path). Returns `false` once
+    /// the channel is disconnected — no further arrivals will ever
+    /// come.
+    pub fn admit_ready(&mut self, rx: &Receiver<GenRequest>) -> bool {
+        let mut open = true;
+        loop {
+            match rx.try_recv() {
+                Ok(req) => self.pending.push_back(req),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        self.try_admit_pending();
+        open
+    }
+
+    /// Move pending requests into slots while both a slot and enough
+    /// free blocks for their prompt exist. FIFO: a blocked head defers
+    /// everything behind it (no starvation). Admission checks — and
+    /// reserves — the *prompt* footprint only; generation headroom is
+    /// allocated incrementally, which is exactly the oversubscription
+    /// that lets the pool hold more in-flight requests than
+    /// worst-case reservation would.
+    fn try_admit_pending(&mut self) {
+        while self.slots.len() < self.max_batch {
+            let Some(req) = self.pending.front() else { break };
+            let plen = req.prompt.len();
+            if plen + 1 > self.seq_position_cap() {
+                // Can never be served — the whole pool or the RoPE
+                // table couldn't hold it: fail fast instead of
+                // wedging the FIFO (or panicking the worker mid-
+                // forward on a rope-table overrun).
+                let req = self.pending.pop_front().unwrap();
+                self.head_deferred = false;
+                self.reject_oversized(req);
+                continue;
+            }
+            if !self.pool.can_fit_new(plen + 1) {
+                if !self.head_deferred {
+                    self.head_deferred = true;
+                    self.metrics.record_kv_admission_deferral();
+                }
+                break;
+            }
+            let req = self.pending.pop_front().unwrap();
+            self.head_deferred = false;
+            self.admit_slot(req);
+        }
+    }
+
+    fn admit_slot(&mut self, req: GenRequest) {
         let now = Instant::now();
         let queue_wait = now.duration_since(req.submitted);
         self.metrics.record_admission(queue_wait.as_micros() as u64);
-        let cache = self.model.new_cache(req.prompt.len() + req.max_new_tokens + 1);
+        let mut cache = self.pool.new_cache();
+        // Prefix sharing: attach whatever full prompt blocks are
+        // already resident; prefill starts after them.
+        let shared = self.pool.attach_prefix(&mut cache, &req.prompt);
+        // Reserve the prompt footprint (+1 for the first decode
+        // position) NOW, so the admission gate's free-block check is
+        // real: a same-round burst cannot all be admitted against the
+        // same free count and then thrash on preemption during
+        // prefill. Cannot fail — the gate checked the unshared worst
+        // case against the same single-threaded pool.
+        let need = (req.prompt.len() + 1).saturating_sub(cache.len());
+        let reserved = self.pool.ensure_append(&mut cache, need);
+        debug_assert!(reserved, "admission gate checked free blocks");
+        // Feasibility clamp: a sequence must always be able to finish
+        // alone in the pool (the preemption progress guarantee) AND
+        // stay inside the RoPE table (no mid-forward panic).
+        let max_new = req.max_new_tokens.min(self.seq_position_cap() - req.prompt.len());
         let tokens = req.prompt.clone();
+        self.admit_seq += 1;
         self.slots.push(Slot {
             req,
             cache,
             tokens,
-            state: SlotState::Prefill { consumed: 0 },
+            state: SlotState::Prefill { consumed: shared },
+            max_new,
+            admitted: self.admit_seq,
             queue_wait,
             ttft: Duration::ZERO,
             last_token_at: None,
         });
+        self.metrics.record_in_flight(self.slots.len());
     }
 
-    /// Drain `rx` non-blockingly into free slots (the between-rounds
-    /// admission path). Returns `false` once the channel is
-    /// disconnected — no further arrivals will ever come.
-    pub fn admit_ready(&mut self, rx: &Receiver<GenRequest>) -> bool {
-        while self.free_slots() > 0 {
-            match rx.try_recv() {
-                Ok(req) => self.admit(req),
-                Err(TryRecvError::Empty) => return true,
-                Err(TryRecvError::Disconnected) => return false,
-            }
-        }
-        true
+    /// Hard per-sequence position bound: one sequence can never
+    /// exceed the whole pool's budget, nor the model's RoPE table.
+    fn seq_position_cap(&self) -> usize {
+        self.pool.position_capacity().min(self.model.max_positions())
     }
 
-    /// One scheduling round: bounded prefill chunks, one fused decode,
-    /// retirements compacted out. Does nothing when idle.
+    /// A prompt larger than the entire pool (or the RoPE table) can
+    /// never be served: complete it immediately with zero generated
+    /// tokens rather than blocking the queue forever.
+    fn reject_oversized(&self, req: GenRequest) {
+        let GenRequest { prompt, respond, submitted, .. } = req;
+        let latency = submitted.elapsed();
+        let seq = self.metrics.record_completion(0, latency.as_micros() as u64);
+        let prompt_len = prompt.len();
+        let _ = respond.send(GenResponse {
+            tokens: prompt,
+            prompt_len,
+            latency,
+            queue_wait: latency,
+            ttft: Duration::ZERO,
+            finish: FinishReason::Length,
+            seq,
+        });
+    }
+
+    /// One scheduling round: admissions, bounded prefill chunks, one
+    /// fused decode, retirements compacted out, cold blocks
+    /// re-encoded, pool gauges published. Does nothing when idle.
     pub fn step(&mut self, rng: &mut Rng) {
+        self.try_admit_pending();
         self.prefill_round(rng);
         self.retire_done();
         self.decode_round(rng);
         self.retire_done();
+        self.try_admit_pending();
+        self.housekeep();
+    }
+
+    /// Ensure slot `i` can append `extra` positions, preempting
+    /// strictly **newer** slots (newest first) until it fits. Returns
+    /// `false` when `i` should defer instead — some older slot owns
+    /// the memory and will retire first. Capacity is *reserved* (not
+    /// just checked), so a later slot's check cannot steal it.
+    fn ensure_capacity_for(&mut self, i: usize, extra: usize) -> bool {
+        loop {
+            if self.pool.ensure_append(&mut self.slots[i].cache, extra) {
+                return true;
+            }
+            let me = self.slots[i].admitted;
+            let victim = self
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(j, s)| {
+                    *j != i
+                        && s.admitted > me
+                        && s.cache.blocks() > 0
+                        && !matches!(s.state, SlotState::Done(_))
+                })
+                .max_by_key(|(_, s)| s.admitted)
+                .map(|(j, _)| j);
+            match victim {
+                Some(j) => self.preempt(j),
+                None => return false,
+            }
+        }
+    }
+
+    /// Evict slot `j`'s K/V (refcounts drop; shared blocks survive
+    /// under their other holders) and reset it to re-prefill its
+    /// accumulated tokens once memory frees up. Greedy outputs are
+    /// unaffected: re-prefilling `tokens` reproduces the dropped K/V
+    /// and the pending next token bit-identically.
+    fn preempt(&mut self, j: usize) {
+        self.metrics.record_kv_preemption();
+        self.pool.release(&mut self.slots[j].cache);
+        self.slots[j].state = SlotState::Prefill { consumed: 0 };
     }
 
     /// Advance prefilling slots within a shared per-round budget of
@@ -153,9 +355,10 @@ impl Scheduler {
     /// burst of concurrent new prompts still stalls in-flight decoders
     /// by at most one chunk per round. A slot that consumes its last
     /// prompt token samples its first output token from the chunk's
-    /// logits (prefill returns the last position's logits) and joins
-    /// the decode set this same round; slots past the budget simply
-    /// wait for the next round (prompts are finite, so none starves).
+    /// logits and joins the decode set this same round; slots past the
+    /// budget (or waiting for pool memory) simply wait for a later
+    /// round. Chunks shrink to the memory actually available before
+    /// any preemption is considered.
     fn prefill_round(&mut self, rng: &mut Rng) {
         let mut budget = self.prefill_chunk;
         for i in 0..self.slots.len() {
@@ -165,58 +368,97 @@ impl Scheduler {
             let SlotState::Prefill { consumed } = self.slots[i].state else {
                 continue;
             };
-            let slot = &mut self.slots[i];
-            let plen = slot.req.prompt.len();
-            let n = (plen - consumed).min(budget);
+            let plen = self.slots[i].tokens.len();
+            let mut n = (plen - consumed).min(budget);
+            if n > 0 {
+                let fit = self.pool.max_append(&self.slots[i].cache).min(n);
+                if fit > 0 {
+                    n = fit;
+                } else if self.ensure_capacity_for(i, 1) {
+                    // Preemption freed memory; take what fits now.
+                    n = self.pool.max_append(&self.slots[i].cache).min(n).max(1);
+                } else {
+                    self.metrics.record_kv_round_deferral();
+                    continue;
+                }
+                // Reserve before the forward so it cannot fail.
+                if !self.pool.ensure_append(&mut self.slots[i].cache, n) {
+                    debug_assert!(false, "capacity was just measured as available");
+                    self.metrics.record_kv_round_deferral();
+                    continue;
+                }
+            }
             budget -= n;
             let t0 = Instant::now();
             if consumed + n >= plen {
-                // Final chunk: its logits seed the first output token.
-                let logits =
-                    self.model.prefill(&slot.req.prompt[consumed..consumed + n], &mut slot.cache);
+                // Final chunk: its logits seed the next output token.
+                let slot = &mut self.slots[i];
+                let logits = self.model.prefill_paged(
+                    &slot.tokens[consumed..consumed + n],
+                    &mut slot.cache,
+                    &mut self.pool,
+                );
                 self.metrics.record_prefill(n, t0.elapsed().as_micros() as u64);
-                let next = sample(&logits, slot.req.temperature, rng);
+                self.pool
+                    .register_prompt_blocks(&self.slots[i].cache, &self.slots[i].req.prompt);
+                let next = sample(&logits, self.slots[i].req.temperature, rng);
                 self.accept(i, next);
             } else {
                 // Mid-prompt chunk: nobody reads these logits — skip
                 // the lm-head projection entirely.
-                self.model
-                    .prefill_extend(&slot.req.prompt[consumed..consumed + n], &mut slot.cache);
+                let slot = &mut self.slots[i];
+                self.model.prefill_extend_paged(
+                    &slot.tokens[consumed..consumed + n],
+                    &mut slot.cache,
+                    &mut self.pool,
+                );
                 self.metrics.record_prefill(n, t0.elapsed().as_micros() as u64);
-                slot.state = SlotState::Prefill { consumed: consumed + n };
+                self.slots[i].state = SlotState::Prefill { consumed: consumed + n };
+                self.pool
+                    .register_prompt_blocks(&self.slots[i].cache, &self.slots[i].req.prompt);
             }
         }
     }
 
-    /// One fused decode forward over every decoding slot.
+    /// One fused decode forward over every decoding slot that has (or
+    /// can get) room for one more position.
     fn decode_round(&mut self, rng: &mut Rng) {
-        let ids: Vec<usize> = (0..self.slots.len())
-            .filter(|&i| matches!(self.slots[i].state, SlotState::Decode { .. }))
-            .collect();
-        if ids.is_empty() {
+        let mut ready: Vec<usize> = Vec::new();
+        for i in 0..self.slots.len() {
+            if !matches!(self.slots[i].state, SlotState::Decode { .. }) {
+                continue;
+            }
+            if self.ensure_capacity_for(i, 1) {
+                ready.push(i);
+            } else {
+                self.metrics.record_kv_round_deferral();
+            }
+        }
+        // A later slot's preemption may have reset an earlier "ready"
+        // slot back to Prefill: keep only the still-decoding ones.
+        ready.retain(|&i| matches!(self.slots[i].state, SlotState::Decode { .. }));
+        if ready.is_empty() {
             return;
         }
-        self.metrics.record_batch(ids.len());
-        let toks: Vec<u16> = ids
+        self.metrics.record_batch(ready.len());
+        let toks: Vec<u16> = ready
             .iter()
             .map(|&i| match self.slots[i].state {
                 SlotState::Decode { next } => next,
                 _ => unreachable!("filtered to Decode slots"),
             })
             .collect();
-        // decode_batch needs a contiguous `&mut [KvCache]`: lend it the
-        // active slots' caches for the round.
-        let mut caches: Vec<KvCache> = ids
-            .iter()
-            .map(|&i| std::mem::replace(&mut self.slots[i].cache, KvCache::new(0, 0, 0)))
-            .collect();
+        // decode_batch_paged needs a contiguous `&mut [PagedKvCache]`:
+        // lend it the active slots' handles for the round.
+        let mut caches: Vec<PagedKvCache> =
+            ready.iter().map(|&i| std::mem::take(&mut self.slots[i].cache)).collect();
         let t0 = Instant::now();
-        let logits = self.model.decode_batch(&toks, &mut caches);
+        let logits = self.model.decode_batch_paged(&toks, &mut caches, &mut self.pool);
         self.metrics.record_decode(toks.len(), t0.elapsed().as_micros() as u64);
         for (j, cache) in caches.into_iter().enumerate() {
-            self.slots[ids[j]].cache = cache;
+            self.slots[ready[j]].cache = cache;
         }
-        for (b, &i) in ids.iter().enumerate() {
+        for (b, &i) in ready.iter().enumerate() {
             let next = sample(logits.row(b), self.slots[i].req.temperature, rng);
             self.accept(i, next);
         }
@@ -244,12 +486,13 @@ impl Scheduler {
         let produced = slot.tokens.len() - slot.req.prompt.len();
         slot.state = match slot.req.stop.classify(next) {
             Some(reason) => SlotState::Done(reason),
-            None if produced >= slot.req.max_new_tokens => SlotState::Done(FinishReason::Length),
+            None if produced >= slot.max_new => SlotState::Done(FinishReason::Length),
             None => SlotState::Decode { next },
         };
     }
 
-    /// Swap-compact every finished slot out, flushing its response.
+    /// Swap-compact every finished slot out, flushing its response and
+    /// returning its blocks to the pool.
     fn retire_done(&mut self) {
         let mut i = 0;
         while i < self.slots.len() {
@@ -262,10 +505,11 @@ impl Scheduler {
         }
     }
 
-    fn finish(&self, slot: Slot) {
+    fn finish(&mut self, mut slot: Slot) {
         let SlotState::Done(finish) = slot.state else {
             unreachable!("finish() called on unfinished slot");
         };
+        self.pool.release(&mut slot.cache);
         let produced = slot.tokens.len() - slot.req.prompt.len();
         let latency = slot.req.submitted.elapsed();
         let seq = self.metrics.record_completion(produced, latency.as_micros() as u64);
@@ -281,6 +525,19 @@ impl Scheduler {
             finish,
             seq,
         });
+    }
+
+    /// Post-round maintenance: re-encode cold blocks and publish the
+    /// pool gauges.
+    fn housekeep(&mut self) {
+        for i in 0..self.slots.len() {
+            self.pool.quantize_cold(&self.slots[i].cache);
+        }
+        self.publish_kv_metrics();
+    }
+
+    fn publish_kv_metrics(&self) {
+        self.metrics.set_kv_pool(&self.pool.stats());
     }
 }
 
@@ -320,6 +577,7 @@ mod tests {
     use super::*;
     use crate::coordinator::server::{Server, ServerOptions, StopSet};
     use crate::model::transformer::tests::tiny_model;
+    use crate::quant::kvquant::KvQuantConfig;
 
     fn opts(max_batch: usize, prefill_chunk: usize) -> ServerOptions {
         ServerOptions {
@@ -510,5 +768,232 @@ mod tests {
         let s = mt.summary();
         assert!(s.contains("ttft_p50=") && s.contains("itl_p50="), "summary carries TTFT/ITL: {s}");
         server.shutdown();
+    }
+
+    // -- memory-aware scheduling --------------------------------------------
+
+    fn tight_pool(block_size: usize, budget_blocks: usize) -> PoolConfig {
+        PoolConfig { block_size, budget_blocks, quant: KvQuantConfig::off() }
+    }
+
+    /// Reference outputs from an ample-pool scheduler, one job at a
+    /// time.
+    fn solo_tokens(m: &Transformer, jobs: &[(Vec<u16>, usize)]) -> Vec<Vec<u16>> {
+        jobs.iter()
+            .map(|(p, max_new)| {
+                let metrics = Arc::new(Metrics::new());
+                let mut sched = Scheduler::new(m.clone(), metrics, 1, 64);
+                let mut rng = Rng::new(7);
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request(p.clone(), *max_new, tx));
+                let mut rounds = 0;
+                while !sched.is_idle() {
+                    sched.step(&mut rng);
+                    rounds += 1;
+                    assert!(rounds < 1000, "solo run failed to drain");
+                }
+                rx.try_recv().expect("solo response").tokens
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_exhaustion_defers_preempts_and_drains() {
+        // 8 blocks x 4 positions = 32 total; each request grows to
+        // prompt 6 + 10 generated = 16 positions (4 blocks). Worst-case
+        // flat reservation (prompt + max_new + 1 = 17 -> 5 blocks)
+        // would admit ONE request at a time; the memory-aware pool
+        // runs all four concurrently and resolves the oversubscription
+        // by preempting the newest slot — no panic, every request
+        // retires, and (greedy) every output is bit-identical to its
+        // solo run even across preempt/re-prefill.
+        let m = tiny_model(12, 4);
+        let jobs: Vec<(Vec<u16>, usize)> = (0..4u16)
+            .map(|k| ((0..6).map(|j| (j * 3 + k * 7 + 1) as u16 % 30).collect(), 10))
+            .collect();
+        let solo = solo_tokens(&m, &jobs);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched =
+            Scheduler::with_pool(m, metrics.clone(), 4, 8, tight_pool(4, 8));
+        let mut rng = Rng::new(7);
+        let rxs: Vec<_> = jobs
+            .iter()
+            .map(|(p, max_new)| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request(p.clone(), *max_new, tx));
+                rx
+            })
+            .collect();
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 5000, "exhausted pool must still drain");
+        }
+        assert_eq!(sched.pool().blocks_in_use(), 0, "all blocks returned");
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.try_recv().expect("response despite pool pressure");
+            assert_eq!(r.tokens.len() - r.prompt_len, 10, "request {i} ran to its cap");
+            assert_eq!(r.tokens, solo[i], "request {i} diverged under memory pressure");
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        // Strictly more concurrency than worst-case reservation (1).
+        assert!(
+            metrics.peak_in_flight.load(Relaxed) > 1,
+            "oversubscription must beat worst-case reservation"
+        );
+        // Memory pressure actually bit: growth had to preempt.
+        assert!(metrics.kv_preemptions.load(Relaxed) > 0, "preemption path exercised");
+        assert!(
+            sched.pool().peak_blocks() <= 8,
+            "budget respected: peak {}",
+            sched.pool().peak_blocks()
+        );
+    }
+
+    #[test]
+    fn admission_defers_until_memory_frees() {
+        // Pool of 4 blocks x 4 = 16 positions. First request occupies
+        // ~3 blocks; the second's prompt needs 3 — more than the free
+        // blocks — so its admission must wait (not panic, not drop)
+        // until the first retires.
+        let m = tiny_model(3, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched =
+            Scheduler::with_pool(m, metrics.clone(), 4, 32, tight_pool(4, 4));
+        let mut rng = Rng::new(7);
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2, 3, 4, 5, 6, 7, 8], 4, tx1));
+        sched.step(&mut rng); // prefill: 8 positions -> 2 blocks + growth
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        sched.admit(request(vec![9, 8, 7, 6, 5, 4, 3, 2, 1, 10, 11], 3, tx2));
+        assert_eq!(sched.in_flight(), 1, "second request parked in the pending queue");
+        assert_eq!(sched.pending_len(), 1);
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000, "deferred admission must still drain");
+        }
+        assert!(rx1.try_recv().is_ok());
+        let r2 = rx2.try_recv().expect("deferred request served");
+        assert_eq!(r2.tokens.len() - r2.prompt_len, 3);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(metrics.kv_admission_deferrals.load(Relaxed) > 0, "deferral recorded");
+    }
+
+    #[test]
+    fn prefix_sharing_skips_recompute_across_requests() {
+        // Two requests with the same prompt: the second attaches the
+        // first's full prompt blocks (metrics-visible) and generates
+        // the identical greedy continuation.
+        let m = tiny_model(15, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched =
+            Scheduler::with_pool(m, metrics.clone(), 4, 64, tight_pool(4, 64));
+        let mut rng = Rng::new(7);
+        let prompt: Vec<u16> = vec![5, 9, 1, 30, 7, 2, 18, 4, 22, 13, 6, 27];
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        sched.admit(request(prompt.clone(), 5, tx1));
+        sched.step(&mut rng); // A's prompt fully prefilled + registered
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        sched.admit(request(prompt.clone(), 5, tx2));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000);
+        }
+        let a = rx1.try_recv().expect("first response");
+        let b = rx2.try_recv().expect("second response");
+        assert_eq!(a.tokens, b.tokens, "shared prefix must not change greedy output");
+        // (12 - 1) / 4 = 2 full blocks = 8 positions served from the
+        // prefix map instead of recomputation.
+        assert_eq!(sched.pool().stats().shared_positions, 8);
+        // The shared positions were *not* re-prefilled: total prefill
+        // work is strictly less than two full prompts.
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(
+            sched.metrics.prefill_tokens.load(Relaxed),
+            (2 * prompt.len() - 8) as u64
+        );
+    }
+
+    #[test]
+    fn oversized_prompt_fails_fast_without_wedging_the_queue() {
+        // A prompt bigger than the whole pool completes immediately
+        // with zero generated tokens; requests behind it still run.
+        let m = tiny_model(4, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::with_pool(m, metrics, 2, 32, tight_pool(4, 2));
+        let mut rng = Rng::new(7);
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        sched.admit(request((0..20).map(|i| i as u16).collect(), 4, tx1));
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2], 2, tx2));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000);
+        }
+        let r1 = rx1.try_recv().expect("oversized prompt still answered");
+        assert_eq!(r1.tokens.len(), r1.prompt_len, "zero tokens generated");
+        assert_eq!(r1.finish, FinishReason::Length);
+        let r2 = rx2.try_recv().expect("queue not wedged");
+        assert_eq!(r2.tokens.len() - r2.prompt_len, 2);
+    }
+
+    #[test]
+    fn rope_bound_rejects_instead_of_panicking_the_worker() {
+        // With the generous auto pool (1088 positions here) a
+        // 600-token prompt still exceeds the model's 512-entry RoPE
+        // table: it must fail fast at admission — not pass the pool
+        // check and panic Rope::apply mid-forward.
+        let m = tiny_model(8, 4);
+        assert_eq!(m.max_positions(), 512);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m, metrics, 2, 64);
+        let mut rng = Rng::new(7);
+        let (tx, rx) = std::sync::mpsc::channel();
+        sched.admit(request((0..600).map(|i| (i % 30) as u16).collect(), 4, tx));
+        let r = rx.try_recv().expect("rejected immediately");
+        assert_eq!(r.tokens.len(), r.prompt_len, "zero tokens generated");
+        assert_eq!(r.finish, FinishReason::Length);
+        assert!(sched.is_idle());
+        // The worker survives: a feasible request still serves.
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2], 3, tx2));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 100);
+        }
+        let r2 = rx2.try_recv().expect("follow-up served");
+        assert_eq!(r2.tokens.len() - r2.prompt_len, 3);
+    }
+
+    #[test]
+    fn generation_cap_clamped_to_pool_capacity() {
+        // max_new_tokens larger than the pool can ever hold is clamped
+        // (the preemption progress guarantee); the request finishes
+        // with Length instead of looping forever.
+        let m = tiny_model(7, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::with_pool(m, metrics, 1, 32, tight_pool(4, 3));
+        let mut rng = Rng::new(7);
+        let (tx, rx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2, 3], 1000, tx));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000, "clamped request must terminate");
+        }
+        let r = rx.try_recv().expect("response");
+        assert_eq!(r.finish, FinishReason::Length);
+        // position_capacity 12 - prompt 3 = 9 generated tokens.
+        assert_eq!(r.tokens.len() - r.prompt_len, 9);
     }
 }

@@ -20,7 +20,9 @@ use super::batcher::collect_batch;
 use super::config::ServeConfig;
 use super::metrics::Metrics;
 use super::scheduler::Scheduler;
+use crate::model::kvcache::PoolConfig;
 use crate::model::Transformer;
+use crate::quant::kvquant::KvQuantConfig;
 use crate::util::parallel;
 use crate::util::rng::Rng;
 
@@ -167,6 +169,17 @@ pub struct ServerOptions {
     /// Default stop conditions applied by [`Server::submit`] /
     /// [`Server::submit_streaming`].
     pub stop: StopSet,
+    /// KV-pool block size (positions per block).
+    pub kv_block: usize,
+    /// KV-pool budget in blocks; 0 = auto (worst-case-equivalent
+    /// capacity per in-flight slot — default configs behave exactly
+    /// like the old flat reservation, just allocated lazily).
+    pub kv_pool_blocks: usize,
+    /// Bits for cold KV blocks (2..=8; >= 16 keeps everything f32 —
+    /// the default, preserving bit-identical outputs).
+    pub kv_bits: u32,
+    /// Trailing positions kept f32 when `kv_bits` is active.
+    pub kv_local_window: usize,
 }
 
 impl Default for ServerOptions {
@@ -178,6 +191,10 @@ impl Default for ServerOptions {
             threads: 0,
             prefill_chunk: 32,
             stop: StopSet::newline(),
+            kv_block: 32,
+            kv_pool_blocks: 0,
+            kv_bits: 16,
+            kv_local_window: 16,
         }
     }
 }
@@ -191,6 +208,10 @@ impl From<&ServeConfig> for ServerOptions {
             threads: c.threads,
             prefill_chunk: c.prefill_chunk.max(1),
             stop: c.stop_set(),
+            kv_block: c.kv_block.max(1),
+            kv_pool_blocks: c.kv_pool_blocks,
+            kv_bits: c.kv_bits,
+            kv_local_window: c.kv_local_window,
         }
     }
 }
@@ -248,10 +269,26 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = channel();
         let m = metrics.clone();
-        let ServerOptions { max_batch, batch_wait, seed, prefill_chunk, stop, .. } = opts;
+        let ServerOptions {
+            max_batch,
+            batch_wait,
+            seed,
+            prefill_chunk,
+            stop,
+            kv_block,
+            kv_pool_blocks,
+            kv_bits,
+            kv_local_window,
+            ..
+        } = opts;
+        let pool_cfg = PoolConfig {
+            block_size: kv_block.max(1),
+            budget_blocks: kv_pool_blocks,
+            quant: KvQuantConfig { bits: kv_bits, local_window: kv_local_window },
+        };
         let worker = std::thread::spawn(move || {
             let mut rng = Rng::new(seed);
-            let mut sched = Scheduler::new(model, m, max_batch, prefill_chunk);
+            let mut sched = Scheduler::with_pool(model, m, max_batch, prefill_chunk, pool_cfg);
             loop {
                 if sched.is_idle() {
                     // Nothing in flight: block for work (and linger
@@ -452,6 +489,36 @@ mod tests {
         // Restore auto so concurrently-running tests don't inherit the
         // clamped-but-huge count for the rest of the process.
         crate::util::parallel::set_threads(0);
+    }
+
+    #[test]
+    fn serves_with_quantized_kv_cache() {
+        use std::sync::atomic::Ordering::Relaxed;
+        // kv_bits=4 with a small block + window: cold blocks really
+        // re-encode mid-flight and the request still completes.
+        let server = Server::start_with_opts(
+            tiny_model(6, 4),
+            ServerOptions {
+                max_batch: 2,
+                batch_wait: Duration::from_millis(1),
+                seed: 7,
+                kv_bits: 4,
+                kv_local_window: 4,
+                kv_block: 4,
+                ..ServerOptions::default()
+            },
+        );
+        let rx = server
+            .submit_with(vec![1, 2, 3, 4, 5, 6, 7, 8], 12, 0.0, StopSet::none(), None)
+            .expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.tokens.len() - r.prompt_len, 12);
+        assert!(
+            server.metrics.kv_quant_blocks_peak.load(Relaxed) >= 1,
+            "cold blocks were quantized in flight"
+        );
+        assert!(server.metrics.kv_resident_peak_bytes.load(Relaxed) > 0);
+        server.shutdown();
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use std::collections::BTreeSet;
 
+use crate::model::kvcache::{KvPool, KvPoolStats};
 use crate::model::Transformer;
 
 /// Full memory report for one model.
@@ -107,6 +108,40 @@ pub fn report(model: &Transformer) -> MemoryReport {
         total_bytes,
         compression: fp16_total_bytes as f64 / total_bytes.max(1) as f64,
         codebook_overhead: codebook_bytes as f64 / total_bytes.max(1) as f64,
+    }
+}
+
+/// KV-pool residency report — the serving-time counterpart of the
+/// weight numbers above, for code that holds a [`KvPool`] directly
+/// (custom serving loops, tests, tools). Once weights are sub-1-bit,
+/// the KV cache is the dominant resident allocation. The in-process
+/// `Server` publishes the same underlying numbers through its
+/// `Metrics` KV gauges each round (the pool lives inside the worker
+/// thread), which is what `bench_serve_e2e` emits into
+/// `BENCH_serve.json` next to the weight residency from [`report`].
+#[derive(Debug, Clone, Copy)]
+pub struct KvPoolReport {
+    /// Raw pool snapshot (blocks, measured resident bytes, peaks,
+    /// prefix-sharing hits).
+    pub stats: KvPoolStats,
+    /// `blocks_in_use / budget_blocks`.
+    pub utilization: f64,
+    /// What the same in-use blocks would hold resident all-f32.
+    pub f32_equivalent_bytes: usize,
+    /// `f32_equivalent_bytes / resident_bytes` (1.0 with quantization
+    /// off; > 1 once cold blocks pack down).
+    pub compression: f64,
+}
+
+/// Snapshot a pool's residency.
+pub fn kv_report(pool: &KvPool) -> KvPoolReport {
+    let stats = pool.stats();
+    let f32_equivalent_bytes = stats.blocks_in_use * pool.f32_block_bytes();
+    KvPoolReport {
+        stats,
+        utilization: stats.blocks_in_use as f64 / stats.budget_blocks.max(1) as f64,
+        f32_equivalent_bytes,
+        compression: f32_equivalent_bytes as f64 / stats.resident_bytes.max(1) as f64,
     }
 }
 
@@ -227,6 +262,32 @@ mod tests {
             r.codebook_resident_bytes,
             (shared.c() + m.blocks[0].wo.backend.shared_codebook().unwrap().c()) * 8
         );
+    }
+
+    #[test]
+    fn kv_pool_report_tracks_quantization() {
+        use crate::model::kvcache::PoolConfig;
+        use crate::quant::kvquant::KvQuantConfig;
+        let m = tiny_model(2, 4); // kv_dim 16: quantized rows word-align
+        let cfg = PoolConfig {
+            block_size: 4,
+            budget_blocks: 16,
+            quant: KvQuantConfig { bits: 4, local_window: 4 },
+        };
+        let mut pool = m.new_pool(&cfg, 1);
+        let mut cache = pool.new_cache();
+        let prompt: Vec<u16> = (1..=12).collect();
+        m.prefill_paged(&prompt, &mut cache, &mut pool);
+        let r0 = kv_report(&pool);
+        assert_eq!(r0.stats.blocks_in_use, 3);
+        assert!(r0.utilization > 0.0 && r0.utilization <= 1.0);
+        assert!((r0.compression - 1.0).abs() < 1e-9, "all-f32 pool is 1x");
+        pool.quantize_cold(&cache);
+        let r1 = kv_report(&pool);
+        assert_eq!(r1.stats.quant_blocks, 2, "(12 - 4) / 4 cold blocks");
+        assert!(r1.stats.resident_bytes < r0.stats.resident_bytes);
+        assert!(r1.compression > 1.5, "cold blocks packed: {}", r1.compression);
+        pool.release(&mut cache);
     }
 
     #[test]

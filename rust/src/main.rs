@@ -4,7 +4,7 @@
 //! btc-llm info      [--model tinylm_m]                  model + memory report
 //! btc-llm quantize  [--model tinylm_m] [--method btc] [--bits 0.8] [--out m.qlm]
 //! btc-llm eval      [--model tinylm_m] [--method btc] [--bits 0.8] [--tokens 4096] [--zeroshot]
-//! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N]
+//! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N] [--kv-bits B]
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
 
@@ -111,6 +111,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // CLI override for the kernel worker count (0 = auto; the server
     // validates/clamps and the effective value is reported below).
     cfg.threads = args.get_usize("threads", cfg.threads);
+    // CLI override for KV-cache quantization: `--kv-bits 4` packs cold
+    // cache blocks to int4 (+f16 row scales); 0 or >= 16 (the
+    // default) keeps the cache f32 and outputs bit-identical. 9..=15
+    // have no storage format and snap down to 8.
+    cfg.kv_bits = btc_llm::quant::kvquant::KvQuantConfig::sanitize_bits(
+        args.get_usize("kv-bits", cfg.kv_bits as usize) as u32,
+    );
     let dir = artifacts_dir();
     let raw = load_model(&dir.join(format!("{}.bin", cfg.model)))?;
     let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt"))?;

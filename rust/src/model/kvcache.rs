@@ -1,4 +1,46 @@
-//! Per-sequence KV cache for incremental decoding (the serving path).
+//! KV memory substrate for serving (DESIGN.md §8).
+//!
+//! Two cache shapes live here:
+//!
+//! - [`KvCache`] — the flat per-sequence cache (contiguous f32 rows
+//!   per layer). It remains the reference implementation: simple,
+//!   allocation-per-request, used by the single-request eval paths and
+//!   as the bit-identity oracle for the paged path.
+//! - [`KvPool`] + [`PagedKvCache`] — the serving substrate. A
+//!   server-owned pool hands out fixed-size **blocks** (`block_size`
+//!   positions × `kv_dim` channels × `n_layer` layers, K and V) from a
+//!   bounded budget; each request holds a *block table* instead of
+//!   contiguous rows, so allocation is incremental as sequences grow
+//!   and admission can be memory-aware instead of reserving worst
+//!   case.
+//!
+//! **Prefix sharing.** Full blocks of *prompt* K/V are content-
+//!   addressed by `(parent_block, token_chunk)` in the pool's prefix
+//!   map: a request whose prompt begins with an already-resident chunk
+//!   chain attaches those blocks (refcount bump) instead of
+//!   recomputing them. K/V for a token prefix is deterministic
+//!   (positions are absolute), so shared blocks are bit-identical to
+//!   what the attaching request would have computed. Writes never
+//!   touch a shared block: appends only land in the tail, and
+//!   [`KvPool::ensure_append`] copy-on-write-splits a shared tail
+//!   first (the [`KvPool::fork`] path).
+//!
+//! **Quantized cold blocks.** With
+//!   [`KvQuantConfig::enabled`](crate::quant::kvquant::KvQuantConfig)
+//!   set, full blocks that have fallen entirely behind the owner's
+//!   recency `local_window` are re-encoded in place as
+//!   [`QuantizedRows`](crate::quant::kvquant::QuantizedRows) (packed
+//!   int2..8 + f16 per-row scales — the paper's App. F rule, now a
+//!   real storage format); hot blocks stay f32. Only sole-owner
+//!   (refcount 1) blocks are quantized, so sharing never changes
+//!   another request's hot window. Attention gathers block-wise
+//!   ([`KvPool::gather`]), borrowing f32 blocks in place and
+//!   dequantizing cold blocks into a reusable scratch — with
+//!   quantization off the gathered bytes are exactly the flat cache's.
+
+use std::collections::HashMap;
+
+use crate::quant::kvquant::{KvQuantConfig, QuantizedRows};
 
 /// Growable key/value cache for one layer: rows are positions, columns
 /// are `kv_dim` channels.
@@ -39,7 +81,7 @@ impl LayerKv {
     }
 }
 
-/// Full-model cache: one [`LayerKv`] per layer.
+/// Full-model flat cache: one [`LayerKv`] per layer.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     pub layers: Vec<LayerKv>,
@@ -65,9 +107,610 @@ impl KvCache {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Paged pool
+// ---------------------------------------------------------------------------
+
+/// Sentinel parent id for the first block of a prompt chain.
+const ROOT_PARENT: usize = usize::MAX;
+
+/// Pool shape knobs (resolved by the scheduler/server from
+/// `ServeConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Positions per block.
+    pub block_size: usize,
+    /// Total block budget; 0 = auto (sized by the owner for its
+    /// worst case, so default configs behave exactly like the old
+    /// flat reservation).
+    pub budget_blocks: usize,
+    /// Cold-block quantization (off by default: pure f32).
+    pub quant: KvQuantConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> PoolConfig {
+        PoolConfig { block_size: 32, budget_blocks: 0, quant: KvQuantConfig::off() }
+    }
+}
+
+/// One block's payload. Rows are `(layer, offset)` pairs laid out
+/// layer-major (`row = layer * block_size + offset`), so one layer's
+/// in-block rows are contiguous and gather per layer is a single
+/// slice.
+#[derive(Debug, Clone)]
+enum BlockData {
+    /// Hot: plain f32 rows (`n_layer * block_size * kv_dim` each).
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    /// Cold: packed int rows + f16 scales (`quant/kvquant.rs`).
+    Quant { k: QuantizedRows, v: QuantizedRows },
+    /// On the free list (payload dropped).
+    Free,
+}
+
+#[derive(Debug, Clone)]
+struct Block {
+    refs: u32,
+    data: BlockData,
+    /// Reverse link into the prefix map (removed when freed).
+    prefix_key: Option<(usize, Vec<u16>)>,
+}
+
+/// A contiguous run of gathered K/V rows handed to attention: `n`
+/// rows of `kv_dim` f32 channels each.
+#[derive(Debug, Clone, Copy)]
+pub struct KvChunk<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub n: usize,
+}
+
+/// Reusable buffers for [`KvPool::gather`]: cold blocks dequantize in
+/// here; one scratch serves a whole forward.
+#[derive(Debug, Default)]
+pub struct GatherScratch {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    codes: Vec<u32>,
+}
+
+impl GatherScratch {
+    pub fn new() -> GatherScratch {
+        GatherScratch::default()
+    }
+}
+
+/// Aggregate pool accounting (scanned on demand; the serving loop
+/// publishes it into `Metrics` each round).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KvPoolStats {
+    pub budget_blocks: usize,
+    pub blocks_in_use: usize,
+    pub peak_blocks: usize,
+    pub f32_blocks: usize,
+    pub quant_blocks: usize,
+    /// Measured bytes all in-use block payloads hold resident.
+    pub resident_bytes: usize,
+    pub f32_bytes: usize,
+    pub quant_bytes: usize,
+    pub block_size: usize,
+    /// `budget_blocks * block_size`.
+    pub position_capacity: usize,
+    /// Prompt positions ever served from the prefix map instead of
+    /// being recomputed.
+    pub shared_positions: u64,
+}
+
+/// Server-owned block pool: the single allocator behind every
+/// in-flight request's K/V. See the module doc for the contracts.
+#[derive(Debug)]
+pub struct KvPool {
+    n_layer: usize,
+    kv_dim: usize,
+    block_size: usize,
+    budget: usize,
+    quant: KvQuantConfig,
+    blocks: Vec<Block>,
+    free: Vec<usize>,
+    in_use: usize,
+    peak_in_use: usize,
+    /// `(parent_block, prompt_token_chunk)` → full prompt block.
+    prefix: HashMap<(usize, Vec<u16>), usize>,
+    shared_positions: u64,
+}
+
+impl KvPool {
+    /// A pool of `budget_blocks` blocks of `block_size` positions.
+    /// Blocks are allocated lazily, so a generous budget costs nothing
+    /// until used.
+    pub fn new(
+        n_layer: usize,
+        kv_dim: usize,
+        block_size: usize,
+        budget_blocks: usize,
+        quant: KvQuantConfig,
+    ) -> KvPool {
+        assert!(block_size >= 1, "block_size must be >= 1");
+        assert!(budget_blocks >= 1, "pool budget must be >= 1 block");
+        KvPool {
+            n_layer,
+            kv_dim,
+            block_size,
+            budget: budget_blocks,
+            // Normalize unrepresentable bit widths (9..=15) here so a
+            // mis-set config degrades to int8 instead of panicking the
+            // serving worker at the first cold block.
+            quant: quant.sanitized(),
+            blocks: Vec::new(),
+            free: Vec::new(),
+            in_use: 0,
+            peak_in_use: 0,
+            prefix: HashMap::new(),
+            shared_positions: 0,
+        }
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn budget_blocks(&self) -> usize {
+        self.budget
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_in_use
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.budget - self.in_use
+    }
+
+    /// Max positions the whole pool can ever hold.
+    pub fn position_capacity(&self) -> usize {
+        self.budget * self.block_size
+    }
+
+    /// Bytes one fully-f32 block holds resident (K + V, all layers) —
+    /// the baseline quantized blocks are compared against.
+    pub fn f32_block_bytes(&self) -> usize {
+        2 * self.n_layer * self.block_size * self.kv_dim * 4
+    }
+
+    /// Blocks needed to hold `positions`.
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_size)
+    }
+
+    /// Would a *fresh* sequence of `positions` fit right now? (The
+    /// admission check: conservative — prefix sharing can only reduce
+    /// the real need.)
+    pub fn can_fit_new(&self, positions: usize) -> bool {
+        self.blocks_for(positions) <= self.free_blocks()
+    }
+
+    /// An empty cache bound to this pool's geometry.
+    pub fn new_cache(&self) -> PagedKvCache {
+        PagedKvCache { block_size: self.block_size, len: 0, block_table: Vec::new() }
+    }
+
+    fn alloc_block(&mut self) -> Option<usize> {
+        let payload = self.n_layer * self.block_size * self.kv_dim;
+        let id = if let Some(id) = self.free.pop() {
+            self.blocks[id].refs = 1;
+            self.blocks[id].data =
+                BlockData::F32 { k: vec![0.0; payload], v: vec![0.0; payload] };
+            id
+        } else if self.blocks.len() < self.budget {
+            self.blocks.push(Block {
+                refs: 1,
+                data: BlockData::F32 { k: vec![0.0; payload], v: vec![0.0; payload] },
+                prefix_key: None,
+            });
+            self.blocks.len() - 1
+        } else {
+            return None;
+        };
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        Some(id)
+    }
+
+    fn dec_ref(&mut self, id: usize) {
+        let b = &mut self.blocks[id];
+        debug_assert!(b.refs > 0, "double free of block {id}");
+        b.refs -= 1;
+        if b.refs == 0 {
+            if let Some(key) = b.prefix_key.take() {
+                if self.prefix.get(&key).copied() == Some(id) {
+                    self.prefix.remove(&key);
+                }
+            }
+            self.blocks[id].data = BlockData::Free;
+            self.free.push(id);
+            self.in_use -= 1;
+        }
+    }
+
+    /// Refcount of one block (tests / diagnostics).
+    pub fn block_refs(&self, id: usize) -> u32 {
+        self.blocks[id].refs
+    }
+
+    /// How many positions `cache` could append right now without
+    /// exceeding the budget (accounts for the copy-on-write block a
+    /// shared partial tail would need first).
+    pub fn max_append(&self, cache: &PagedKvCache) -> usize {
+        let bs = self.block_size;
+        let cap_rem = cache.block_table.len() * bs - cache.len;
+        let cow = usize::from(
+            cache.len % bs != 0
+                && self.blocks[*cache.block_table.last().expect("partial tail implies a block")]
+                    .refs
+                    > 1,
+        );
+        let free = self.free_blocks();
+        if cow > free {
+            return 0; // cannot even make the tail writable
+        }
+        cap_rem + (free - cow) * bs
+    }
+
+    /// Grow `cache` so `extra` more positions can be appended:
+    /// copy-on-write-split a shared partial tail, then allocate the
+    /// missing blocks. Returns `false` (having changed nothing) when
+    /// the budget cannot cover it — callers defer or preempt, they
+    /// never panic.
+    pub fn ensure_append(&mut self, cache: &mut PagedKvCache, extra: usize) -> bool {
+        let bs = self.block_size;
+        let need_blocks =
+            (cache.len + extra).div_ceil(bs).saturating_sub(cache.block_table.len());
+        let cow = usize::from(
+            extra > 0
+                && cache.len % bs != 0
+                && self.blocks[*cache.block_table.last().expect("partial tail implies a block")]
+                    .refs
+                    > 1,
+        );
+        if need_blocks + cow > self.free_blocks() {
+            return false;
+        }
+        if cow == 1 {
+            let old = *cache.block_table.last().unwrap();
+            let new = self.alloc_block().expect("free blocks checked above");
+            let (ck, cv) = match &self.blocks[old].data {
+                BlockData::F32 { k, v } => (k.clone(), v.clone()),
+                // A partially-filled tail is still being written, and
+                // writable tails are f32 by construction (only full
+                // sole-owner blocks quantize).
+                _ => unreachable!("shared partial tail must be f32"),
+            };
+            match &mut self.blocks[new].data {
+                BlockData::F32 { k, v } => {
+                    k.copy_from_slice(&ck);
+                    v.copy_from_slice(&cv);
+                }
+                _ => unreachable!("fresh blocks are f32"),
+            }
+            *cache.block_table.last_mut().unwrap() = new;
+            self.dec_ref(old);
+        }
+        for _ in 0..need_blocks {
+            let id = self.alloc_block().expect("free blocks checked above");
+            cache.block_table.push(id);
+        }
+        true
+    }
+
+    /// Write one position's K/V row for one layer. Capacity must have
+    /// been ensured; `pos` is the absolute position (the caller
+    /// advances `cache.len` once all layers of a position are in).
+    pub fn append_row(
+        &mut self,
+        cache: &PagedKvCache,
+        li: usize,
+        pos: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert_eq!(k_row.len(), self.kv_dim);
+        debug_assert_eq!(v_row.len(), self.kv_dim);
+        let bs = self.block_size;
+        let id = cache.block_table[pos / bs];
+        let row = li * bs + pos % bs;
+        let kvd = self.kv_dim;
+        match &mut self.blocks[id].data {
+            BlockData::F32 { k, v } => {
+                k[row * kvd..(row + 1) * kvd].copy_from_slice(k_row);
+                v[row * kvd..(row + 1) * kvd].copy_from_slice(v_row);
+            }
+            _ => panic!("append into a non-f32 block (quantized or freed)"),
+        }
+    }
+
+    /// Block-wise read view of the first `ctx` positions of `cache`
+    /// for layer `li`: f32 blocks are borrowed in place, quantized
+    /// blocks dequantize into `scratch`. Chunks come back in position
+    /// order, so attention over them is bit-identical to the flat
+    /// cache whenever every block is f32.
+    pub fn gather<'a>(
+        &'a self,
+        cache: &PagedKvCache,
+        li: usize,
+        ctx: usize,
+        scratch: &'a mut GatherScratch,
+    ) -> Vec<KvChunk<'a>> {
+        let bs = self.block_size;
+        let kvd = self.kv_dim;
+        debug_assert!(ctx <= cache.block_table.len() * bs, "gather beyond capacity");
+        let nblocks = ctx.div_ceil(bs);
+        scratch.k.clear();
+        scratch.v.clear();
+        scratch.codes.resize(kvd, 0);
+        // Phase 1: dequantize cold blocks into the scratch arena.
+        let mut cold_starts = Vec::new();
+        for bi in 0..nblocks {
+            let id = cache.block_table[bi];
+            if let BlockData::Quant { k, v } = &self.blocks[id].data {
+                let n = (ctx - bi * bs).min(bs);
+                cold_starts.push(scratch.k.len());
+                for off in 0..n {
+                    let row = li * bs + off;
+                    let base = scratch.k.len();
+                    scratch.k.resize(base + kvd, 0.0);
+                    k.dequantize_into(row, &mut scratch.codes, &mut scratch.k[base..]);
+                    let vbase = scratch.v.len();
+                    scratch.v.resize(vbase + kvd, 0.0);
+                    v.dequantize_into(row, &mut scratch.codes, &mut scratch.v[vbase..]);
+                }
+            }
+        }
+        // Phase 2: assemble position-ordered chunks (scratch is
+        // read-only from here on).
+        let scratch: &'a GatherScratch = scratch;
+        let mut chunks = Vec::with_capacity(nblocks);
+        let mut cold = 0;
+        for bi in 0..nblocks {
+            let id = cache.block_table[bi];
+            let n = (ctx - bi * bs).min(bs);
+            match &self.blocks[id].data {
+                BlockData::F32 { k, v } => chunks.push(KvChunk {
+                    k: &k[li * bs * kvd..(li * bs + n) * kvd],
+                    v: &v[li * bs * kvd..(li * bs + n) * kvd],
+                    n,
+                }),
+                BlockData::Quant { .. } => {
+                    let s = cold_starts[cold];
+                    cold += 1;
+                    chunks.push(KvChunk {
+                        k: &scratch.k[s..s + n * kvd],
+                        v: &scratch.v[s..s + n * kvd],
+                        n,
+                    });
+                }
+                BlockData::Free => unreachable!("gather over a freed block"),
+            }
+        }
+        chunks
+    }
+
+    /// Materialize the full gathered context of one layer (tests and
+    /// slow tooling).
+    pub fn materialize(&self, cache: &PagedKvCache, li: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut scratch = GatherScratch::new();
+        let chunks = self.gather(cache, li, cache.len, &mut scratch);
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for ch in &chunks {
+            k.extend_from_slice(ch.k);
+            v.extend_from_slice(ch.v);
+        }
+        (k, v)
+    }
+
+    /// Attach as many shared full prompt blocks as the prefix map
+    /// holds for `prompt`, starting from an **empty** cache. Returns
+    /// the number of positions now resident (a multiple of
+    /// `block_size`), always leaving at least the final prompt token
+    /// to recompute — its logits seed the first sampled token.
+    ///
+    /// Hot-window invariant: a block another request already
+    /// quantized is attached only if it lies entirely *behind* this
+    /// prompt's `local_window` — the attacher's hot positions are
+    /// never served from dequantized int rows (they get recomputed in
+    /// f32 instead).
+    pub fn attach_prefix(&mut self, cache: &mut PagedKvCache, prompt: &[u16]) -> usize {
+        assert!(cache.block_table.is_empty() && cache.len == 0, "attach into a used cache");
+        if prompt.len() < 2 {
+            return 0;
+        }
+        let bs = self.block_size;
+        let max_blocks = (prompt.len() - 1) / bs;
+        let hot_from = prompt.len().saturating_sub(self.quant.local_window);
+        let mut parent = ROOT_PARENT;
+        let mut shared = 0usize;
+        for j in 0..max_blocks {
+            let key = (parent, prompt[j * bs..(j + 1) * bs].to_vec());
+            match self.prefix.get(&key).copied() {
+                Some(id) => {
+                    let quantized = matches!(self.blocks[id].data, BlockData::Quant { .. });
+                    if quantized && (j + 1) * bs > hot_from {
+                        break; // would sit inside the attacher's hot window
+                    }
+                    self.blocks[id].refs += 1;
+                    cache.block_table.push(id);
+                    parent = id;
+                    shared += bs;
+                }
+                None => break,
+            }
+        }
+        cache.len = shared;
+        self.shared_positions += shared as u64;
+        shared
+    }
+
+    /// Register every fully-computed, fully-prompt-covered block of
+    /// `cache` in the prefix map (idempotent; first writer of a chunk
+    /// chain wins). Called by the scheduler after prefill chunks.
+    pub fn register_prompt_blocks(&mut self, cache: &PagedKvCache, prompt: &[u16]) {
+        let bs = self.block_size;
+        let full = cache.len.min(prompt.len()) / bs;
+        let mut parent = ROOT_PARENT;
+        for j in 0..full {
+            let id = cache.block_table[j];
+            if self.blocks[id].prefix_key.is_none() {
+                let key = (parent, prompt[j * bs..(j + 1) * bs].to_vec());
+                if !self.prefix.contains_key(&key) {
+                    self.prefix.insert(key.clone(), id);
+                    self.blocks[id].prefix_key = Some(key);
+                }
+            }
+            parent = id;
+        }
+    }
+
+    /// Clone `cache`'s block table, bumping every refcount — the
+    /// copy-on-write fork primitive (divergent appends split via
+    /// [`Self::ensure_append`]).
+    pub fn fork(&mut self, cache: &PagedKvCache) -> PagedKvCache {
+        for &id in &cache.block_table {
+            self.blocks[id].refs += 1;
+        }
+        PagedKvCache {
+            block_size: cache.block_size,
+            len: cache.len,
+            block_table: cache.block_table.clone(),
+        }
+    }
+
+    /// Return every block of `cache` to the pool (freed once the last
+    /// sharer releases). The cache is empty afterwards.
+    pub fn release(&mut self, cache: &mut PagedKvCache) {
+        let table = std::mem::take(&mut cache.block_table);
+        for id in table {
+            self.dec_ref(id);
+        }
+        cache.len = 0;
+    }
+
+    /// Re-encode `cache`'s cold blocks (full blocks entirely behind
+    /// `len - local_window`) as packed ints. Only sole-owner blocks
+    /// are touched: a block still shared with another request may sit
+    /// inside *that* request's hot window. No-op when quantization is
+    /// off.
+    pub fn quantize_cold(&mut self, cache: &PagedKvCache) {
+        if !self.quant.enabled() {
+            return;
+        }
+        let bs = self.block_size;
+        let rows = self.n_layer * bs;
+        let kvd = self.kv_dim;
+        let bits = self.quant.bits;
+        let cold_blocks = cache.len.saturating_sub(self.quant.local_window) / bs;
+        for j in 0..cold_blocks {
+            let id = cache.block_table[j];
+            let b = &mut self.blocks[id];
+            if b.refs != 1 {
+                continue;
+            }
+            let requantized = match &b.data {
+                BlockData::F32 { k, v } => Some((
+                    QuantizedRows::quantize(k, rows, kvd, bits),
+                    QuantizedRows::quantize(v, rows, kvd, bits),
+                )),
+                _ => None,
+            };
+            if let Some((qk, qv)) = requantized {
+                b.data = BlockData::Quant { k: qk, v: qv };
+            }
+        }
+    }
+
+    /// Scan the pool's in-use blocks into an accounting snapshot.
+    pub fn stats(&self) -> KvPoolStats {
+        let mut s = KvPoolStats {
+            budget_blocks: self.budget,
+            blocks_in_use: self.in_use,
+            peak_blocks: self.peak_in_use,
+            block_size: self.block_size,
+            position_capacity: self.position_capacity(),
+            shared_positions: self.shared_positions,
+            ..KvPoolStats::default()
+        };
+        for b in &self.blocks {
+            match &b.data {
+                BlockData::F32 { k, v } => {
+                    s.f32_blocks += 1;
+                    s.f32_bytes += (k.len() + v.len()) * 4;
+                }
+                BlockData::Quant { k, v } => {
+                    s.quant_blocks += 1;
+                    s.quant_bytes += k.resident_bytes() + v.resident_bytes();
+                }
+                BlockData::Free => {}
+            }
+        }
+        s.resident_bytes = s.f32_bytes + s.quant_bytes;
+        s
+    }
+}
+
+/// One request's cache: a block table into a [`KvPool`] plus the
+/// position count. All storage lives in the pool; this struct is a
+/// handle (cheap to move between scheduler slots).
+#[derive(Debug, Default)]
+pub struct PagedKvCache {
+    block_size: usize,
+    len: usize,
+    block_table: Vec<usize>,
+}
+
+impl PagedKvCache {
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions the current block table can hold.
+    pub fn capacity(&self) -> usize {
+        self.block_table.len() * self.block_size
+    }
+
+    /// Blocks currently held (shared blocks count once per holder).
+    pub fn blocks(&self) -> usize {
+        self.block_table.len()
+    }
+
+    /// The physical block ids (tests / diagnostics).
+    pub fn table(&self) -> &[usize] {
+        &self.block_table
+    }
+
+    /// Commit `n` appended positions (every layer's rows must already
+    /// be in via [`KvPool::append_row`]).
+    pub fn advance(&mut self, n: usize) {
+        debug_assert!(self.len + n <= self.capacity(), "advance past ensured capacity");
+        self.len += n;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn push_and_read() {
@@ -88,5 +731,235 @@ mod tests {
         }
         assert_eq!(c.len(), 1);
         assert_eq!(c.bytes(), 3 * 2 * 4 * 4);
+    }
+
+    // -- pool ---------------------------------------------------------------
+
+    fn pool(budget: usize, quant: KvQuantConfig) -> KvPool {
+        KvPool::new(2, 4, 4, budget, quant) // 2 layers, kv_dim 4, block 4
+    }
+
+    /// A pool at a word-aligned width (32 channels * 4 bits = 2 whole
+    /// u64 words/row) where quantized-block sizes are meaningful.
+    fn wide_pool(budget: usize, quant: KvQuantConfig) -> KvPool {
+        KvPool::new(2, 32, 4, budget, quant)
+    }
+
+    /// Append `n` deterministic positions (all layers) to `cache`.
+    fn fill(pool: &mut KvPool, cache: &mut PagedKvCache, n: usize, seed: u64) {
+        let kvd = pool.kv_dim();
+        let mut rng = Rng::new(seed.wrapping_add(cache.len() as u64));
+        assert!(pool.ensure_append(cache, n), "test pool too small");
+        for _ in 0..n {
+            let pos = cache.len();
+            for li in 0..2 {
+                let k = rng.normal_vec(kvd);
+                let v = rng.normal_vec(kvd);
+                pool.append_row(cache, li, pos, &k, &v);
+            }
+            cache.advance(1);
+        }
+    }
+
+    #[test]
+    fn incremental_alloc_and_release() {
+        let mut p = pool(4, KvQuantConfig::off());
+        let mut c = p.new_cache();
+        assert_eq!(p.free_blocks(), 4);
+        fill(&mut p, &mut c, 1, 1);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (1, 1, 1));
+        fill(&mut p, &mut c, 6, 1); // 7 positions -> 2 blocks
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (7, 2, 2));
+        assert_eq!(p.peak_blocks(), 2);
+        p.release(&mut c);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (0, 0, 0));
+        assert_eq!(p.free_blocks(), 4);
+        // Freed blocks are recycled.
+        let mut c2 = p.new_cache();
+        fill(&mut p, &mut c2, 16, 2);
+        assert_eq!(p.blocks_in_use(), 4);
+        assert!(!p.ensure_append(&mut c2, 1), "budget exhausted defers, no panic");
+        assert_eq!(p.max_append(&c2), 0);
+        p.release(&mut c2);
+    }
+
+    #[test]
+    fn gather_roundtrips_f32_rows_bitwise() {
+        let mut p = pool(8, KvQuantConfig::off());
+        let mut c = p.new_cache();
+        // Mirror into a flat reference.
+        let mut flat = KvCache::new(2, 4, 16);
+        let mut rng = Rng::new(3);
+        assert!(p.ensure_append(&mut c, 11));
+        for pos in 0..11 {
+            for li in 0..2 {
+                let k = rng.normal_vec(4);
+                let v = rng.normal_vec(4);
+                p.append_row(&c, li, pos, &k, &v);
+                flat.layers[li].push(&k, &v);
+            }
+            c.advance(1);
+        }
+        for li in 0..2 {
+            let (k, v) = p.materialize(&c, li);
+            assert_eq!(k, flat.layers[li].k, "layer {li} K differs");
+            assert_eq!(v, flat.layers[li].v, "layer {li} V differs");
+            // Partial-context gather too (chunk boundaries inside).
+            let mut scratch = GatherScratch::new();
+            let chunks = p.gather(&c, li, 6, &mut scratch);
+            let total: usize = chunks.iter().map(|ch| ch.n).sum();
+            assert_eq!(total, 6);
+            let gathered: Vec<f32> =
+                chunks.iter().flat_map(|ch| ch.k.iter().copied()).collect();
+            assert_eq!(&gathered[..], &flat.layers[li].k[..6 * 4]);
+        }
+        p.release(&mut c);
+    }
+
+    #[test]
+    fn prefix_sharing_refcounts_blocks() {
+        let mut p = pool(8, KvQuantConfig::off());
+        let prompt: Vec<u16> = (0..9).map(|i| i as u16 + 10).collect();
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 9, 7);
+        p.register_prompt_blocks(&a, &prompt);
+        // A second identical prompt shares the full blocks: (9-1)/4
+        // = 2 blocks = 8 positions; the last position recomputes.
+        let mut b = p.new_cache();
+        let shared = p.attach_prefix(&mut b, &prompt);
+        assert_eq!(shared, 8);
+        assert_eq!(b.len(), 8);
+        assert_eq!(&b.table()[..2], &a.table()[..2]);
+        assert_eq!(p.block_refs(a.table()[0]), 2);
+        // Shared payload is byte-identical, not a copy.
+        assert_eq!(p.materialize(&b, 0).0, p.materialize(&a, 0).0[..8 * 4]);
+        // A divergent prompt shares only the common chunk chain.
+        let mut divergent = prompt.clone();
+        divergent[5] = 99;
+        let mut d = p.new_cache();
+        assert_eq!(p.attach_prefix(&mut d, &divergent), 4, "first block only");
+        // Release A: shared blocks survive under B/D, the rest free.
+        let a0 = a.table()[0];
+        p.release(&mut a);
+        assert_eq!(p.block_refs(a0), 3 - 1, "B and D still hold block 0");
+        p.release(&mut b);
+        p.release(&mut d);
+        assert_eq!(p.blocks_in_use(), 0);
+        // Freed blocks left the prefix map: nothing to attach now.
+        let mut e = p.new_cache();
+        assert_eq!(p.attach_prefix(&mut e, &prompt), 0);
+    }
+
+    #[test]
+    fn fork_is_copy_on_write_on_divergence() {
+        let mut p = pool(8, KvQuantConfig::off());
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 6, 11); // block 0 full, block 1 holds 2 rows
+        let mut b = p.fork(&a);
+        assert_eq!(b.len(), 6);
+        assert_eq!(p.block_refs(a.table()[1]), 2);
+        let a_tail_before = p.materialize(&a, 1);
+        // Appending to the fork must split the shared partial tail.
+        fill(&mut p, &mut b, 1, 99);
+        assert_ne!(a.table()[1], b.table()[1], "tail split on first divergent write");
+        assert_eq!(a.table()[0], b.table()[0], "full prefix block still shared");
+        assert_eq!(p.block_refs(a.table()[1]), 1);
+        // A's rows are untouched by B's append...
+        assert_eq!(p.materialize(&a, 1), a_tail_before);
+        // ...and B kept A's first 6 positions bit-identically.
+        let (bk, _) = p.materialize(&b, 1);
+        assert_eq!(&bk[..6 * 4], &a_tail_before.0[..]);
+        assert_eq!(b.len(), 7);
+        p.release(&mut a);
+        p.release(&mut b);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn cold_blocks_quantize_and_shrink() {
+        let quant = KvQuantConfig { bits: 4, local_window: 2 };
+        let mut p = wide_pool(8, quant);
+        let kvd = p.kv_dim();
+        let mut c = p.new_cache();
+        fill(&mut p, &mut c, 14, 5);
+        let before = p.materialize(&c, 0);
+        let f32_stats = p.stats();
+        p.quantize_cold(&c);
+        let s = p.stats();
+        // (14 - 2) / 4 = 3 cold full blocks.
+        assert_eq!(s.quant_blocks, 3);
+        assert_eq!(s.f32_blocks, 1);
+        assert!(
+            s.resident_bytes < f32_stats.resident_bytes / 2,
+            "quantized pool must shrink: {} vs {}",
+            s.resident_bytes,
+            f32_stats.resident_bytes
+        );
+        // Hot window bytes (positions 12..14) are untouched.
+        let after = p.materialize(&c, 0);
+        assert_eq!(&after.0[12 * kvd..], &before.0[12 * kvd..]);
+        // Cold rows are within the int4 quantization error bound.
+        for (a, b) in after.0[..12 * kvd].iter().zip(&before.0[..12 * kvd]) {
+            assert!((a - b).abs() < 0.6, "cold row error too large: {a} vs {b}");
+        }
+        // Idempotent.
+        p.quantize_cold(&c);
+        assert_eq!(p.stats().quant_blocks, 3);
+        p.release(&mut c);
+    }
+
+    #[test]
+    fn shared_blocks_are_not_quantized() {
+        let quant = KvQuantConfig { bits: 4, local_window: 0 };
+        let mut p = wide_pool(8, quant);
+        let prompt: Vec<u16> = (0..8).map(|i| i as u16).collect();
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 8, 9);
+        p.register_prompt_blocks(&a, &prompt);
+        let mut b = p.fork(&a);
+        p.quantize_cold(&a);
+        assert_eq!(p.stats().quant_blocks, 0, "refcount > 1 blocks stay f32");
+        p.release(&mut b);
+        p.quantize_cold(&a);
+        assert_eq!(p.stats().quant_blocks, 2, "sole-owner cold blocks quantize");
+        p.release(&mut a);
+    }
+
+    #[test]
+    fn attach_skips_quantized_blocks_inside_the_hot_window() {
+        let quant = KvQuantConfig { bits: 4, local_window: 6 };
+        let mut p = wide_pool(16, quant);
+        let prompt: Vec<u16> = (0..12).map(|i| i as u16).collect();
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 12, 21);
+        p.register_prompt_blocks(&a, &prompt);
+        // A runs ahead; its whole prompt falls cold and quantizes.
+        fill(&mut p, &mut a, 8, 22);
+        p.quantize_cold(&a);
+        assert_eq!(p.stats().quant_blocks, 3);
+        // B's hot window is prompt positions 6..12: block 1 (4..8)
+        // intersects it and is quantized — sharing must stop before
+        // it so B's hot rows are recomputed in f32.
+        let mut b = p.new_cache();
+        assert_eq!(p.attach_prefix(&mut b, &prompt), 4, "only the cold-for-B block shared");
+        p.release(&mut b);
+        p.release(&mut a);
+    }
+
+    #[test]
+    fn quantized_append_capacity_is_checked() {
+        // max_append accounts for the COW block a shared tail needs.
+        let mut p = pool(2, KvQuantConfig::off());
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 6, 13); // 2 blocks, tail partial
+        let b = p.fork(&a);
+        // Pool full (2/2 in use): the fork cannot even COW its tail.
+        assert_eq!(p.max_append(&a), 0);
+        assert!(!p.ensure_append(&mut a, 1));
+        let mut b = b;
+        p.release(&mut b);
+        // Sole owner again: two free rows in the tail, no COW needed.
+        assert_eq!(p.max_append(&a), 2);
+        p.release(&mut a);
     }
 }

@@ -19,5 +19,6 @@ pub mod transformer;
 pub use backend::{
     backend_reader, backend_tags, register_backend, BackendIoCtx, BackendReader, WeightBackend,
 };
+pub use kvcache::{KvCache, KvPool, KvPoolStats, PagedKvCache, PoolConfig};
 pub use linear::Linear;
 pub use transformer::{CaptureSite, Transformer};

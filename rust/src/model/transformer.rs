@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use super::kvcache::{KvCache, LayerKv};
+use super::kvcache::{GatherScratch, KvCache, KvChunk, KvPool, PagedKvCache, PoolConfig};
 use super::linear::Linear;
 use super::rope::Rope;
 use crate::io::weights::{ModelConfig, RawModel};
@@ -143,34 +143,187 @@ fn softmax_inplace(xs: &mut [f32]) {
     }
 }
 
-/// One query row attending over the first `ctx` positions of a cached
-/// layer (GQA: `rep` query heads share each KV head). Shared by
-/// [`Transformer::decode_batch`] and [`Transformer::prefill`] so their
-/// attention arithmetic cannot drift apart (the bit-identity
-/// contract).
+/// One query row attending over a gathered context (GQA: `rep` query
+/// heads share each KV head). The context arrives as position-ordered
+/// [`KvChunk`]s — one for a flat cache, one per block for a paged
+/// cache — and the per-head score/softmax/axpy order is identical
+/// however the rows are chunked, so the flat and paged paths cannot
+/// drift apart (the bit-identity contract). Shared by
+/// [`Transformer::decode_batch`] and [`Transformer::prefill`] in both
+/// cache shapes.
 #[allow(clippy::too_many_arguments)]
-fn attend_cached(
+fn attend_chunks(
     qrow: &[f32],
-    layer_kv: &LayerKv,
-    ctx: usize,
+    chunks: &[KvChunk<'_>],
+    kv_dim: usize,
     nh: usize,
     rep: usize,
     hd: usize,
     scale: f32,
     orow: &mut [f32],
 ) {
+    let ctx: usize = chunks.iter().map(|c| c.n).sum();
     let mut scores = vec![0f32; ctx];
     for hh in 0..nh {
         let kvh = hh / rep;
         let qv = &qrow[hh * hd..(hh + 1) * hd];
-        for ki in 0..ctx {
-            let kv = &layer_kv.k_at(ki)[kvh * hd..(kvh + 1) * hd];
-            scores[ki] = crate::tensor::matrix::dot(qv, kv) * scale;
+        let mut base = 0;
+        for ch in chunks {
+            for i in 0..ch.n {
+                let kv = &ch.k[i * kv_dim + kvh * hd..i * kv_dim + (kvh + 1) * hd];
+                scores[base + i] = crate::tensor::matrix::dot(qv, kv) * scale;
+            }
+            base += ch.n;
         }
         softmax_inplace(&mut scores);
-        for ki in 0..ctx {
-            let vv = &layer_kv.v_at(ki)[kvh * hd..(kvh + 1) * hd];
-            crate::tensor::matrix::axpy(scores[ki], vv, &mut orow[hh * hd..(hh + 1) * hd]);
+        let out = &mut orow[hh * hd..(hh + 1) * hd];
+        base = 0;
+        for ch in chunks {
+            for i in 0..ch.n {
+                let vv = &ch.v[i * kv_dim + kvh * hd..i * kv_dim + (kvh + 1) * hd];
+                crate::tensor::matrix::axpy(scores[base + i], vv, out);
+            }
+            base += ch.n;
+        }
+    }
+}
+
+/// Truncate a position-ordered chunk list to its first `ctx` rows
+/// (the causal prefix a prefill query row may see). Pure slicing — the
+/// gathered bytes are untouched, so attention over the clipped list is
+/// bit-identical to a fresh gather of `ctx` rows.
+fn clip_chunks<'a>(chunks: &[KvChunk<'a>], ctx: usize, kv_dim: usize) -> Vec<KvChunk<'a>> {
+    let mut out = Vec::with_capacity(chunks.len());
+    let mut remaining = ctx;
+    for ch in chunks {
+        if remaining == 0 {
+            break;
+        }
+        let n = ch.n.min(remaining);
+        out.push(KvChunk { k: &ch.k[..n * kv_dim], v: &ch.v[..n * kv_dim], n });
+        remaining -= n;
+    }
+    debug_assert_eq!(remaining, 0, "clip past the gathered context");
+    out
+}
+
+/// Where a forward's K/V lives: flat per-request caches or paged
+/// caches backed by a shared [`KvPool`]. The decode/prefill bodies are
+/// written once against this, so the two storage shapes can never
+/// diverge arithmetically.
+enum KvTarget<'a> {
+    Flat(&'a mut [KvCache]),
+    Paged { caches: &'a mut [PagedKvCache], pool: &'a mut KvPool },
+}
+
+impl KvTarget<'_> {
+    fn count(&self) -> usize {
+        match self {
+            KvTarget::Flat(c) => c.len(),
+            KvTarget::Paged { caches, .. } => caches.len(),
+        }
+    }
+
+    fn len(&self, b: usize) -> usize {
+        match self {
+            KvTarget::Flat(c) => c[b].len(),
+            KvTarget::Paged { caches, .. } => caches[b].len(),
+        }
+    }
+
+    /// Make room for `extra` appended positions. The paged pool is
+    /// bounded: the serving scheduler checks capacity *before* running
+    /// a forward (deferring or preempting when full), so exhaustion
+    /// here is an API-misuse panic, not a serving-path event.
+    fn reserve(&mut self, b: usize, extra: usize) {
+        if let KvTarget::Paged { caches, pool } = self {
+            assert!(
+                pool.ensure_append(&mut caches[b], extra),
+                "KV pool exhausted mid-forward: callers must check capacity first \
+                 (scheduler defers/preempts; see DESIGN.md §8)"
+            );
+        }
+    }
+
+    fn push(&mut self, b: usize, li: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        match self {
+            KvTarget::Flat(c) => c[b].layers[li].push(k_row, v_row),
+            KvTarget::Paged { caches, pool } => pool.append_row(&caches[b], li, pos, k_row, v_row),
+        }
+    }
+
+    /// Commit `n` appended positions on request `b` (flat caches track
+    /// length per layer push; paged caches commit once per forward).
+    fn advance(&mut self, b: usize, n: usize) {
+        if let KvTarget::Paged { caches, .. } = self {
+            caches[b].advance(n);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attend(
+        &self,
+        scratch: &mut GatherScratch,
+        b: usize,
+        li: usize,
+        ctx: usize,
+        qrow: &[f32],
+        nh: usize,
+        rep: usize,
+        hd: usize,
+        scale: f32,
+        orow: &mut [f32],
+    ) {
+        match self {
+            KvTarget::Flat(c) => {
+                let l = &c[b].layers[li];
+                let one = [KvChunk { k: &l.k[..ctx * l.kv_dim], v: &l.v[..ctx * l.kv_dim], n: ctx }];
+                attend_chunks(qrow, &one, l.kv_dim, nh, rep, hd, scale, orow);
+            }
+            KvTarget::Paged { caches, pool } => {
+                let chunks = pool.gather(&caches[b], li, ctx, scratch);
+                attend_chunks(qrow, &chunks, pool.kv_dim(), nh, rep, hd, scale, orow);
+            }
+        }
+    }
+
+    /// Attend every prefill row of `q` against its causal prefix
+    /// (`ctx = base + i + 1`). One gather per layer — cold blocks
+    /// dequantize once, and each row sees a clipped view of the same
+    /// chunk list (bit-identical to per-row gathers).
+    #[allow(clippy::too_many_arguments)]
+    fn attend_rows(
+        &self,
+        scratch: &mut GatherScratch,
+        b: usize,
+        li: usize,
+        base: usize,
+        q: &Matrix,
+        nh: usize,
+        rep: usize,
+        hd: usize,
+        scale: f32,
+        attn_out: &mut Matrix,
+    ) {
+        let s = q.rows;
+        match self {
+            KvTarget::Flat(c) => {
+                let l = &c[b].layers[li];
+                for i in 0..s {
+                    let ctx = base + i + 1;
+                    let one =
+                        [KvChunk { k: &l.k[..ctx * l.kv_dim], v: &l.v[..ctx * l.kv_dim], n: ctx }];
+                    attend_chunks(q.row(i), &one, l.kv_dim, nh, rep, hd, scale, attn_out.row_mut(i));
+                }
+            }
+            KvTarget::Paged { caches, pool } => {
+                let kvd = pool.kv_dim();
+                let chunks = pool.gather(&caches[b], li, base + s, scratch);
+                for i in 0..s {
+                    let clipped = clip_chunks(&chunks, base + i + 1, kvd);
+                    attend_chunks(q.row(i), &clipped, kvd, nh, rep, hd, scale, attn_out.row_mut(i));
+                }
+            }
         }
     }
 }
@@ -298,7 +451,28 @@ impl Transformer {
     /// `decode_step(tokens[b], &mut caches[b])` run alone, because
     /// every kernel on the path computes output rows independently.
     pub fn decode_batch(&self, tokens: &[u16], caches: &mut [KvCache]) -> Matrix {
-        assert_eq!(tokens.len(), caches.len(), "one cache per request");
+        self.decode_batch_impl(tokens, KvTarget::Flat(caches))
+    }
+
+    /// [`Self::decode_batch`] over paged caches backed by `pool`.
+    /// With quantization off the logits and gathered K/V bytes are
+    /// bit-identical to the flat path (pinned by
+    /// `rust/tests/batch_equivalence.rs`); with quantization on, cold
+    /// context reads the dequantized int rows. Capacity for one
+    /// position per cache must be available — the scheduler checks
+    /// before every round (deferring or preempting when the pool is
+    /// full), so exhaustion here panics as API misuse.
+    pub fn decode_batch_paged(
+        &self,
+        tokens: &[u16],
+        caches: &mut [PagedKvCache],
+        pool: &mut KvPool,
+    ) -> Matrix {
+        self.decode_batch_impl(tokens, KvTarget::Paged { caches, pool })
+    }
+
+    fn decode_batch_impl(&self, tokens: &[u16], mut kv: KvTarget<'_>) -> Matrix {
+        assert_eq!(tokens.len(), kv.count(), "one cache per request");
         let bsz = tokens.len();
         if bsz == 0 {
             return Matrix::zeros(0, self.cfg.vocab);
@@ -306,7 +480,11 @@ impl Transformer {
         let d = self.cfg.d_model;
         let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
         let rep = nh / nkv;
-        let pos: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+        let pos: Vec<usize> = (0..bsz).map(|b| kv.len(b)).collect();
+        for b in 0..bsz {
+            kv.reserve(b, 1);
+        }
+        let mut scratch = GatherScratch::new();
         let mut x = Matrix::zeros(bsz, d);
         for (b, &t) in tokens.iter().enumerate() {
             x.row_mut(b).copy_from_slice(self.emb.row(t as usize));
@@ -325,13 +503,23 @@ impl Transformer {
                 for hh in 0..nkv {
                     self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], pos[b]);
                 }
-                caches[b].layers[li].push(k.row(b), v.row(b));
+                kv.push(b, li, pos[b], k.row(b), v.row(b));
             }
             let scale = 1.0 / (hd as f32).sqrt();
             let mut attn_out = Matrix::zeros(bsz, d);
             for b in 0..bsz {
-                let layer_kv = &caches[b].layers[li];
-                attend_cached(q.row(b), layer_kv, layer_kv.len, nh, rep, hd, scale, attn_out.row_mut(b));
+                kv.attend(
+                    &mut scratch,
+                    b,
+                    li,
+                    pos[b] + 1,
+                    q.row(b),
+                    nh,
+                    rep,
+                    hd,
+                    scale,
+                    attn_out.row_mut(b),
+                );
             }
             x = x.add(&block.wo.forward(&attn_out));
             let h2 = rmsnorm_rows(&x, &block.ln2);
@@ -342,6 +530,9 @@ impl Transformer {
                 *mv = silu(*mv) * uv;
             }
             x = x.add(&block.wdown.forward(&mid));
+        }
+        for b in 0..bsz {
+            kv.advance(b, 1);
         }
         let xf = rmsnorm_rows(&x, &self.lnf);
         xf.matmul_bt(&self.emb)
@@ -355,10 +546,27 @@ impl Transformer {
     /// bit-identical to feeding the tokens through `decode_step` one
     /// at a time. Empty `tokens` returns an empty vec.
     pub fn prefill(&self, tokens: &[u16], cache: &mut KvCache) -> Vec<f32> {
-        match self.prefill_hidden(tokens, cache) {
-            // Logit only the last position: one (1, vocab) GEMV
-            // instead of the s lm-head GEMVs the incremental prefill
-            // paid.
+        self.last_logits(self.prefill_hidden(tokens, KvTarget::Flat(std::slice::from_mut(cache))))
+    }
+
+    /// [`Self::prefill`] over a paged cache backed by `pool` (chunked
+    /// prefill supported the same way: positions continue from
+    /// `cache.len()`). Capacity for `tokens.len()` more positions must
+    /// be available — the scheduler checks first; exhaustion panics.
+    pub fn prefill_paged(
+        &self,
+        tokens: &[u16],
+        cache: &mut PagedKvCache,
+        pool: &mut KvPool,
+    ) -> Vec<f32> {
+        let caches = std::slice::from_mut(cache);
+        self.last_logits(self.prefill_hidden(tokens, KvTarget::Paged { caches, pool }))
+    }
+
+    /// Logit only the last position: one (1, vocab) GEMV instead of
+    /// the s lm-head GEMVs the incremental prefill paid.
+    fn last_logits(&self, last: Option<Matrix>) -> Vec<f32> {
+        match last {
             Some(last) => {
                 let xf = rmsnorm_rows(&last, &self.lnf);
                 xf.matmul_bt(&self.emb).row(0).to_vec()
@@ -372,13 +580,24 @@ impl Transformer {
     /// batching scheduler only samples from the *final* chunk). K/V
     /// side effects are identical to [`Self::prefill`].
     pub fn prefill_extend(&self, tokens: &[u16], cache: &mut KvCache) {
-        let _ = self.prefill_hidden(tokens, cache);
+        let _ = self.prefill_hidden(tokens, KvTarget::Flat(std::slice::from_mut(cache)));
+    }
+
+    /// Paged twin of [`Self::prefill_extend`].
+    pub fn prefill_extend_paged(
+        &self,
+        tokens: &[u16],
+        cache: &mut PagedKvCache,
+        pool: &mut KvPool,
+    ) {
+        let caches = std::slice::from_mut(cache);
+        let _ = self.prefill_hidden(tokens, KvTarget::Paged { caches, pool });
     }
 
     /// Shared prefill body: appends K/V for every position and returns
     /// the last position's final hidden state as a (1, d) matrix
     /// (pre-lnf), or `None` for empty `tokens`.
-    fn prefill_hidden(&self, tokens: &[u16], cache: &mut KvCache) -> Option<Matrix> {
+    fn prefill_hidden(&self, tokens: &[u16], mut kv: KvTarget<'_>) -> Option<Matrix> {
         let s = tokens.len();
         if s == 0 {
             return None;
@@ -386,7 +605,9 @@ impl Transformer {
         let d = self.cfg.d_model;
         let (nh, nkv, hd) = (self.cfg.n_head, self.cfg.n_kv_head, self.cfg.head_dim());
         let rep = nh / nkv;
-        let base = cache.len();
+        let base = kv.len(0);
+        kv.reserve(0, s);
+        let mut scratch = GatherScratch::new();
         let mut x = Matrix::zeros(s, d);
         for (i, &t) in tokens.iter().enumerate() {
             x.row_mut(i).copy_from_slice(self.emb.row(t as usize));
@@ -405,16 +626,14 @@ impl Transformer {
                 for hh in 0..nkv {
                     self.rope.apply(&mut krow[hh * hd..(hh + 1) * hd], base + i);
                 }
-                cache.layers[li].push(k.row(i), v.row(i));
+                kv.push(0, li, base + i, k.row(i), v.row(i));
             }
             let scale = 1.0 / (hd as f32).sqrt();
             let mut attn_out = Matrix::zeros(s, d);
-            let layer_kv = &cache.layers[li];
-            for i in 0..s {
-                // Causal: query at absolute position base+i sees cache
-                // positions 0..=base+i (its own K/V already pushed).
-                attend_cached(q.row(i), layer_kv, base + i + 1, nh, rep, hd, scale, attn_out.row_mut(i));
-            }
+            // Causal: query at absolute position base+i sees cache
+            // positions 0..=base+i (its own K/V already pushed). One
+            // gather per layer; rows attend over clipped views.
+            kv.attend_rows(&mut scratch, 0, li, base, &q, nh, rep, hd, scale, &mut attn_out);
             x = x.add(&block.wo.forward(&attn_out));
             let h2 = rmsnorm_rows(&x, &block.ln2);
             let g = block.wgate.forward(&h2);
@@ -425,6 +644,7 @@ impl Transformer {
             }
             x = x.add(&block.wdown.forward(&mid));
         }
+        kv.advance(0, s);
         let mut last = Matrix::zeros(1, d);
         last.row_mut(0).copy_from_slice(x.row(s - 1));
         Some(last)
@@ -461,6 +681,27 @@ impl Transformer {
     /// Fresh KV cache sized for `capacity` positions.
     pub fn new_cache(&self, capacity: usize) -> KvCache {
         KvCache::new(self.cfg.n_layer, self.cfg.kv_dim(), capacity)
+    }
+
+    /// Max positions one sequence can ever occupy (the RoPE table
+    /// bound — the same limit the flat path has always had).
+    pub fn max_positions(&self) -> usize {
+        self.cfg.max_seq.max(512)
+    }
+
+    /// A [`KvPool`] shaped for this model. `cfg.budget_blocks == 0`
+    /// auto-sizes for `slots` worst-case sequences
+    /// ([`Self::max_positions`] each) — the single resolution point of
+    /// the auto sentinel, so every entry path (scheduler, tests,
+    /// tools) means the same thing by it. Blocks allocate lazily, so a
+    /// generous budget costs nothing until used.
+    pub fn new_pool(&self, cfg: &PoolConfig, slots: usize) -> KvPool {
+        let budget = if cfg.budget_blocks == 0 {
+            slots.max(1) * (self.max_positions() + 1).div_ceil(cfg.block_size)
+        } else {
+            cfg.budget_blocks
+        };
+        KvPool::new(self.cfg.n_layer, self.cfg.kv_dim(), cfg.block_size, budget, cfg.quant)
     }
 }
 
@@ -631,6 +872,84 @@ pub mod tests {
         let out = m.decode_batch(&[], &mut []);
         assert_eq!(out.rows, 0);
         assert_eq!(out.cols, m.cfg.vocab);
+    }
+
+    /// Paged bitwise oracle: gathered pool rows == flat cache rows.
+    fn assert_paged_matches_flat(pool: &KvPool, paged: &PagedKvCache, flat: &KvCache) {
+        assert_eq!(paged.len(), flat.len());
+        for (li, l) in flat.layers.iter().enumerate() {
+            let (k, v) = pool.materialize(paged, li);
+            assert_eq!(k, l.k, "layer {li} K payload differs");
+            assert_eq!(v, l.v, "layer {li} V payload differs");
+        }
+    }
+
+    #[test]
+    fn paged_prefill_and_decode_bit_identical_to_flat() {
+        // Block size 3 deliberately does not divide anything: every
+        // gather crosses block boundaries.
+        for nkv in [4usize, 2] {
+            let m = tiny_model(13, nkv);
+            let cfg = PoolConfig { block_size: 3, budget_blocks: 0, ..PoolConfig::default() };
+            let mut pool = m.new_pool(&cfg, 1);
+            let prompt = [3u16, 17, 2, 29, 11, 5, 7];
+            let mut flat = m.new_cache(16);
+            let flat_logits = m.prefill(&prompt, &mut flat);
+            let mut paged = pool.new_cache();
+            let paged_logits = m.prefill_paged(&prompt, &mut paged, &mut pool);
+            assert_eq!(flat_logits, paged_logits, "nkv={nkv}: prefill logits differ");
+            assert_paged_matches_flat(&pool, &paged, &flat);
+            // Chunked paged prefill (extend + final) matches too.
+            let mut paged2 = pool.new_cache();
+            m.prefill_extend_paged(&prompt[..4], &mut paged2, &mut pool);
+            let chunked = m.prefill_paged(&prompt[4..], &mut paged2, &mut pool);
+            assert_eq!(flat_logits, chunked);
+            // Decode rounds: fused paged batch vs fused flat batch.
+            let mut flat2 = m.new_cache(16);
+            m.prefill(&[9, 1], &mut flat2);
+            let mut paged3 = pool.new_cache();
+            m.prefill_paged(&[9, 1], &mut paged3, &mut pool);
+            let mut flats = [flat, flat2];
+            let mut pageds = [paged, paged3];
+            for round in 0..4 {
+                let next = [(round * 5 + 2) as u16, (round * 3 + 8) as u16];
+                let a = m.decode_batch(&next, &mut flats);
+                let b = m.decode_batch_paged(&next, &mut pageds, &mut pool);
+                assert_eq!(a.data, b.data, "nkv={nkv} round {round}: decode logits differ");
+                for i in 0..2 {
+                    assert_paged_matches_flat(&pool, &pageds[i], &flats[i]);
+                }
+            }
+            for mut c in pageds {
+                pool.release(&mut c);
+            }
+            pool.release(&mut paged2);
+            assert_eq!(pool.blocks_in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn paged_decode_reads_shared_prefix_blocks() {
+        // A request attached to another's prompt blocks decodes
+        // exactly as if it had computed them itself.
+        let m = tiny_model(14, 4);
+        let cfg = PoolConfig { block_size: 4, budget_blocks: 32, ..PoolConfig::default() };
+        let mut pool = m.new_pool(&cfg, 1);
+        let prompt: Vec<u16> = vec![5, 9, 1, 30, 7, 2, 18, 4, 22];
+        let mut a = pool.new_cache();
+        let solo_logits = m.prefill_paged(&prompt, &mut a, &mut pool);
+        pool.register_prompt_blocks(&a, &prompt);
+        let mut b = pool.new_cache();
+        let shared = pool.attach_prefix(&mut b, &prompt);
+        assert_eq!(shared, 8, "two full blocks shared");
+        let tail_logits = m.prefill_paged(&prompt[shared..], &mut b, &mut pool);
+        assert_eq!(solo_logits, tail_logits, "shared-prefix prefill must be bit-identical");
+        // And the next decoded token agrees with an unshared run.
+        let la = m.decode_batch_paged(&[11], std::slice::from_mut(&mut a), &mut pool);
+        let lb = m.decode_batch_paged(&[11], std::slice::from_mut(&mut b), &mut pool);
+        assert_eq!(la.data, lb.data);
+        pool.release(&mut a);
+        pool.release(&mut b);
     }
 
     #[test]

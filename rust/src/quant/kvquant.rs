@@ -1,16 +1,27 @@
-//! KV-cache quantization (paper App. F — the "preliminary" extension):
-//! per-head symmetric int quantization of cached K/V with a
-//! recency-weighted saliency rule — the most recent `local_window`
-//! positions stay full-precision ("we preserve local windows binary
-//! representation without sub-bit quantization"), older entries are
-//! quantized to `bits`.
+//! KV-cache quantization (paper App. F) as a **real storage format**,
+//! not an in-place fake-quant: [`QuantizedRows`] packs K/V rows into a
+//! [`bitops::PackedPlane`](crate::bitops::PackedPlane) at `bits` bits
+//! per entry with one IEEE binary16 absmax scale per row
+//! ([`util::f16`](crate::util::f16)), so the bytes the accounting
+//! bills are the bytes actually resident. The paged KV pool
+//! ([`crate::model::kvcache::KvPool`]) stores *cold* blocks —
+//! everything behind the recency `local_window` — in this format
+//! ("we preserve local windows binary representation without sub-bit
+//! quantization"); hot rows stay f32 and are never touched.
+//!
+//! Quantization is symmetric per row: `scale = absmax / (2^(bits-1)-1)`
+//! rounded once to f16, entries stored biased-unsigned
+//! (`q + 2^(bits-1)` in `bits` bits). The *f16-decoded* scale is used
+//! on both the quantize and dequantize side, so a row round-trips to
+//! exactly the values attention will read.
 
-use crate::model::kvcache::LayerKv;
+use crate::bitops::PackedPlane;
+use crate::util::f16;
 
 /// Configuration for cache quantization.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct KvQuantConfig {
-    /// Bits for old cache entries (2..=8; 16 disables).
+    /// Bits for cold cache entries (2..=8; >= 16 disables).
     pub bits: u32,
     /// Most recent positions kept full precision.
     pub local_window: usize,
@@ -22,42 +33,149 @@ impl Default for KvQuantConfig {
     }
 }
 
-/// Quantize-dequantize one cache row in place (per-row absmax scale).
-fn quantize_row(row: &mut [f32], bits: u32) {
-    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
-    let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
-    if absmax == 0.0 {
-        return;
+impl KvQuantConfig {
+    /// Quantization disabled: every position stays f32.
+    pub fn off() -> KvQuantConfig {
+        KvQuantConfig { bits: 16, local_window: 16 }
     }
-    let scale = absmax / qmax;
-    for v in row.iter_mut() {
-        *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
+
+    /// Is cold-block quantization active?
+    pub fn enabled(&self) -> bool {
+        (2..16).contains(&self.bits)
+    }
+
+    /// Snap an arbitrary bits value onto the representable lattice:
+    /// 0 (the "auto/off" convention every other serve knob uses) and
+    /// >= 16 mean off (f32); anything else clamps into the packed
+    /// 2..=8 range. 9..=15 has no storage format — rounding down to 8
+    /// beats panicking the serving worker on the first cold block.
+    pub fn sanitize_bits(bits: u32) -> u32 {
+        if bits == 0 || bits >= 16 {
+            16
+        } else {
+            bits.clamp(2, 8)
+        }
+    }
+
+    /// Self with [`Self::sanitize_bits`] applied.
+    pub fn sanitized(self) -> KvQuantConfig {
+        KvQuantConfig { bits: Self::sanitize_bits(self.bits), ..self }
     }
 }
 
-/// Apply App-F quantization to a layer cache: all but the trailing
-/// `local_window` positions are quantized to `bits`.
-pub fn quantize_layer_cache(kv: &mut LayerKv, cfg: &KvQuantConfig) {
-    if cfg.bits >= 16 || kv.len <= cfg.local_window {
-        return;
+/// A batch of quantized rows: the resident format of a cold KV block.
+/// `rows x width` entries packed at `bits` bits each, plus one f16
+/// absmax scale per row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedRows {
+    plane: PackedPlane,
+    /// IEEE binary16 per-row scales (decoded on use).
+    scales: Vec<u16>,
+    bits: u32,
+}
+
+impl QuantizedRows {
+    /// Quantize `rows * width` f32 values (row-major). `bits` in 2..=8.
+    pub fn quantize(values: &[f32], rows: usize, width: usize, bits: u32) -> QuantizedRows {
+        assert!((2..=8).contains(&bits), "kv quant bits {bits} out of 2..=8");
+        assert_eq!(values.len(), rows * width, "value count != rows*width");
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let offset = 1i32 << (bits - 1);
+        let mut plane = PackedPlane::zeros(rows, width, bits as usize);
+        let mut scales = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &values[r * width..(r + 1) * width];
+            let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+            // Round the scale to f16 FIRST; quantize against the
+            // rounded value so dequantization is exact w.r.t. what we
+            // actually ship. A scale that falls off the f16 range —
+            // underflow to zero OR overflow to inf (absmax beyond
+            // 65504*qmax, whose dequant would be 0*inf = NaN) — or a
+            // zero/non-finite row degrades to an all-zero row.
+            let h = f16::encode(absmax / qmax);
+            let s = f16::decode(h);
+            let usable = s.is_finite() && s > 0.0;
+            scales.push(if usable { h } else { 0 });
+            if usable {
+                for (c, &v) in row.iter().enumerate() {
+                    let q = (v / s).round().clamp(-(offset as f32), qmax) as i32;
+                    plane.set(r, c, (q + offset) as u32);
+                }
+            } else {
+                for c in 0..width {
+                    plane.set(r, c, offset as u32);
+                }
+            }
+        }
+        QuantizedRows { plane, scales, bits }
     }
-    let kvd = kv.kv_dim;
-    let old = kv.len - cfg.local_window;
-    for pos in 0..old {
-        quantize_row(&mut kv.k[pos * kvd..(pos + 1) * kvd], cfg.bits);
-        quantize_row(&mut kv.v[pos * kvd..(pos + 1) * kvd], cfg.bits);
+
+    pub fn rows(&self) -> usize {
+        self.plane.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.plane.cols
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Dequantize row `r` into `dst` (len == width), using `codes` as
+    /// a caller-provided decode scratch (len == width) so the hot
+    /// gather path never allocates.
+    pub fn dequantize_into(&self, r: usize, codes: &mut [u32], dst: &mut [f32]) {
+        debug_assert_eq!(codes.len(), self.plane.cols);
+        debug_assert_eq!(dst.len(), self.plane.cols);
+        let s = f16::decode(self.scales[r]);
+        let offset = 1i32 << (self.bits - 1);
+        self.plane.decode_range(r, 0, codes);
+        for (d, &u) in dst.iter_mut().zip(codes.iter()) {
+            *d = (u as i32 - offset) as f32 * s;
+        }
+    }
+
+    /// Dequantize row `r` as a fresh Vec (tests / slow paths).
+    pub fn dequantize_row(&self, r: usize) -> Vec<f32> {
+        let mut codes = vec![0u32; self.plane.cols];
+        let mut out = vec![0f32; self.plane.cols];
+        self.dequantize_into(r, &mut codes, &mut out);
+        out
+    }
+
+    /// Measured bytes this struct actually holds resident: the packed
+    /// plane words plus the u16 scales.
+    pub fn resident_bytes(&self) -> usize {
+        self.plane.storage_bytes() + self.scales.len() * 2
     }
 }
 
-/// Worst-case memory the quantized layout would ship (bytes): int
-/// entries for old positions, fp16 for the local window + scales.
+/// Accounted bits for one quantized row of `width` entries: the packed
+/// payload plus its 16-bit (f16) scale. Matches [`QuantizedRows`]
+/// bytes-in-RAM exactly when `width * bits` is a multiple of 64 (the
+/// plane's per-row word alignment is the only slack).
+pub fn quantized_row_bits(width: usize, bits: u32) -> usize {
+    width * bits as usize + 16
+}
+
+/// **Paper-convention estimate** (App. F) of what a cache of `len`
+/// positions would occupy under `cfg` (bytes): packed int entries +
+/// **f16** scales for cold positions, f16 entries for the local
+/// window. The scale term matches the `QuantizedRows` storage format
+/// (u16 per row) — bytes-on-the-books equal bytes-in-RAM for the cold
+/// region. Note this is the *accounting* the paper's tables use, not
+/// a measurement of the serving pool: the pool keeps hot blocks in
+/// f32 (not f16) and pads to whole blocks — measure the real thing
+/// via `KvPoolStats::resident_bytes` /
+/// `eval::memory::kv_report`.
 pub fn quantized_cache_bytes(len: usize, kv_dim: usize, cfg: &KvQuantConfig) -> usize {
-    if cfg.bits >= 16 {
+    if !cfg.enabled() {
         return len * kv_dim * 2 * 2; // k + v, fp16
     }
     let local = cfg.local_window.min(len);
     let old = len - local;
-    let old_bits = old * kv_dim * cfg.bits as usize + old * 16; // + scale/row
+    let old_bits = old * quantized_row_bits(kv_dim, cfg.bits);
     let local_bits = local * kv_dim * 16;
     2 * (old_bits + local_bits).div_ceil(8) // k and v
 }
@@ -67,65 +185,122 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn filled_cache(len: usize, kvd: usize, seed: u64) -> LayerKv {
+    fn random_rows(rows: usize, width: usize, seed: u64) -> Vec<f32> {
         let mut rng = Rng::new(seed);
-        let mut kv = LayerKv::new(kvd, len);
-        for _ in 0..len {
-            let k = rng.normal_vec(kvd);
-            let v = rng.normal_vec(kvd);
-            kv.push(&k, &v);
-        }
-        kv
+        (0..rows * width).map(|_| rng.normal()).collect()
     }
 
     #[test]
-    fn local_window_untouched() {
-        let mut kv = filled_cache(32, 8, 1);
-        let before = kv.k.clone();
-        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 4, local_window: 8 });
-        // Last 8 positions identical.
-        assert_eq!(&kv.k[24 * 8..], &before[24 * 8..]);
-        // Some old position changed.
-        assert_ne!(&kv.k[..8], &before[..8]);
-    }
-
-    #[test]
-    fn error_bounded_by_half_step() {
-        let mut kv = filled_cache(20, 16, 2);
-        let before = kv.k.clone();
-        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 8, local_window: 4 });
-        for pos in 0..16 {
-            let row_before = &before[pos * 16..(pos + 1) * 16];
-            let row_after = &kv.k[pos * 16..(pos + 1) * 16];
-            let absmax = row_before.iter().fold(0f32, |m, &v| m.max(v.abs()));
-            let step = absmax / 127.0;
-            for (a, b) in row_after.iter().zip(row_before) {
-                assert!((a - b).abs() <= step * 0.5 + 1e-6);
+    fn roundtrip_error_bounded_by_half_step() {
+        for bits in [2u32, 4, 8] {
+            let vals = random_rows(12, 16, 7 + bits as u64);
+            let q = QuantizedRows::quantize(&vals, 12, 16, bits);
+            let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+            for r in 0..12 {
+                let row = &vals[r * 16..(r + 1) * 16];
+                let absmax = row.iter().fold(0f32, |m, &v| m.max(v.abs()));
+                // The shipped (f16-rounded) scale defines the step.
+                let step = f16::decode(f16::encode(absmax / qmax));
+                let deq = q.dequantize_row(r);
+                for (a, b) in deq.iter().zip(row) {
+                    assert!(
+                        (a - b).abs() <= step * 0.5 + 1e-6,
+                        "bits={bits} r={r}: |{a} - {b}| > {}",
+                        step * 0.5
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn bits16_is_noop() {
-        let mut kv = filled_cache(10, 4, 3);
-        let before = kv.k.clone();
-        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 16, local_window: 2 });
-        assert_eq!(kv.k, before);
+    fn negative_extreme_uses_full_range() {
+        // The most negative code (-2^(b-1)) is representable: a value
+        // at -absmax stays within half a step.
+        let vals = vec![-4.0f32, 4.0, 0.0, 2.0];
+        let q = QuantizedRows::quantize(&vals, 1, 4, 4);
+        let deq = q.dequantize_row(0);
+        assert!((deq[0] + 4.0).abs() <= 4.0 / 7.0 * 0.5 + 1e-6);
+        assert!((deq[1] - 4.0).abs() <= 4.0 / 7.0 * 0.5 + 1e-6);
+        assert_eq!(deq[2], 0.0);
     }
 
     #[test]
-    fn memory_accounting_shrinks() {
+    fn zero_tiny_and_huge_rows_are_safe() {
+        // All-zero rows, f16-underflow scales AND f16-overflow scales
+        // (absmax beyond 65504*qmax would dequantize as 0*inf = NaN)
+        // must all degrade to zero rows, never to non-finite values.
+        let mut vals = vec![0f32; 8];
+        vals.extend_from_slice(&[1e-30; 8]);
+        vals.extend_from_slice(&[1e9; 8]);
+        let q = QuantizedRows::quantize(&vals, 3, 8, 4);
+        for r in 0..3 {
+            for v in q.dequantize_row(r) {
+                assert_eq!(v, 0.0, "row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn accounting_equals_measured_resident_bytes() {
+        // The satellite contract: with f16 scales, bytes-on-the-books
+        // equal bytes-in-RAM at word-aligned widths (width*bits % 64
+        // == 0, so the plane has no per-row padding).
+        for (width, bits) in [(16usize, 4u32), (32, 4), (8, 8), (64, 2)] {
+            let rows = 10;
+            let vals = random_rows(rows, width, 3);
+            let q = QuantizedRows::quantize(&vals, rows, width, bits);
+            let accounted_bits = rows * quantized_row_bits(width, bits);
+            assert_eq!(
+                q.resident_bytes(),
+                accounted_bits / 8,
+                "width={width} bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_accounting_shrinks_and_matches_format() {
         let cfg = KvQuantConfig { bits: 4, local_window: 8 };
         let fp = quantized_cache_bytes(128, 64, &KvQuantConfig { bits: 16, local_window: 0 });
         let q = quantized_cache_bytes(128, 64, &cfg);
         assert!(q < fp / 2, "q {q} fp {fp}");
+        // Cold region accounted exactly as the QuantizedRows format.
+        let cold_rows = 120;
+        let measured = QuantizedRows::quantize(
+            &random_rows(cold_rows, 64, 9),
+            cold_rows,
+            64,
+            4,
+        )
+        .resident_bytes();
+        let accounted_cold = cold_rows * quantized_row_bits(64, 4) / 8;
+        assert_eq!(measured, accounted_cold);
     }
 
     #[test]
-    fn short_cache_untouched() {
-        let mut kv = filled_cache(4, 4, 5);
-        let before = kv.k.clone();
-        quantize_layer_cache(&mut kv, &KvQuantConfig { bits: 4, local_window: 8 });
-        assert_eq!(kv.k, before);
+    fn disabled_config_reports_fp16() {
+        assert!(!KvQuantConfig::off().enabled());
+        assert!(KvQuantConfig::default().enabled());
+        assert_eq!(
+            quantized_cache_bytes(10, 4, &KvQuantConfig::off()),
+            10 * 4 * 2 * 2
+        );
+    }
+
+    #[test]
+    fn sanitize_snaps_onto_representable_widths() {
+        // 0 follows the serve-config "auto/off" convention.
+        assert_eq!(KvQuantConfig::sanitize_bits(0), 16);
+        assert_eq!(KvQuantConfig::sanitize_bits(1), 2);
+        assert_eq!(KvQuantConfig::sanitize_bits(4), 4);
+        assert_eq!(KvQuantConfig::sanitize_bits(8), 8);
+        // 9..=15 have no packed format: down to 8, not a worker panic.
+        assert_eq!(KvQuantConfig::sanitize_bits(12), 8);
+        assert_eq!(KvQuantConfig::sanitize_bits(15), 8);
+        assert_eq!(KvQuantConfig::sanitize_bits(16), 16);
+        assert_eq!(KvQuantConfig::sanitize_bits(99), 16);
+        let c = KvQuantConfig { bits: 13, local_window: 4 }.sanitized();
+        assert_eq!((c.bits, c.local_window), (8, 4));
     }
 }

@@ -124,6 +124,62 @@ fn concurrent_submitters_all_complete_and_match_solo() {
 }
 
 #[test]
+fn tight_kv_pool_preserves_determinism_under_load() {
+    // The same mixed workload as above, but through a KV pool far too
+    // small to hold every request's worst case at once (8 blocks x 8
+    // positions = 64 vs ~16 requests x up to 18 positions): admission
+    // defers, growth preempts — and every greedy output must STILL be
+    // bit-identical to its isolated run, because deferral recomputes
+    // nothing and preemption re-prefills exactly the dropped tokens.
+    let model = tiny_serving_model();
+    let jobs = jobs();
+    let solo_server = Server::start(model.clone(), 1, Duration::from_millis(1), 7);
+    let solo: Vec<Vec<u16>> = jobs
+        .iter()
+        .map(|(p, m)| {
+            solo_server
+                .submit_with(p.clone(), *m, 0.0, StopSet::none(), None)
+                .expect("submit")
+                .recv_timeout(Duration::from_secs(120))
+                .expect("solo response")
+                .tokens
+        })
+        .collect();
+    solo_server.shutdown();
+
+    let server = Server::start_with_opts(
+        model,
+        ServerOptions {
+            max_batch: 4,
+            prefill_chunk: 4,
+            batch_wait: Duration::from_millis(2),
+            seed: 7,
+            kv_block: 8,
+            kv_pool_blocks: 8,
+            ..ServerOptions::default()
+        },
+    );
+    let rxs: Vec<_> = jobs
+        .iter()
+        .map(|(p, m)| {
+            server.submit_with(p.clone(), *m, 0.0, StopSet::none(), None).expect("submit")
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(120)).expect("response under pool pressure");
+        assert_eq!(r.tokens, solo[i], "request {i} diverged under a tight KV pool");
+    }
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(server.metrics.completed.load(Relaxed), jobs.len() as u64);
+    assert!(
+        server.metrics.kv_blocks_peak.load(Relaxed) <= 8,
+        "pool budget respected: {}",
+        server.metrics.kv_blocks_peak.load(Relaxed)
+    );
+    server.shutdown();
+}
+
+#[test]
 fn no_head_of_line_blocking_under_real_pipeline() {
     // Drive the scheduler directly over the real quantized pipeline
     // model: the interleaving is deterministic (no wall-clock races),
