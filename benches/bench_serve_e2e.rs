@@ -12,6 +12,12 @@
 //!   percentiles plus how many short requests completed before the
 //!   long one (head-of-line-blocking truth; with the old
 //!   batch-to-completion loop this is 0);
+//! - `adversarial` (BTC lane only): the multi-tenant QoS scenario —
+//!   one flooding tenant against two well-behaved ones, run under
+//!   FIFO and weighted-round-robin admission, reporting per-tenant
+//!   p95 TTFT/ITL and the ratio against each tenant's solo run (the
+//!   fairness bar: WRR keeps well-behaved tenants within 2x of solo;
+//!   FIFO does not);
 //! - `prefix`: the KV-memory scenario — N long-context requests
 //!   sharing a common prompt prefix, run once with an f32 KV pool and
 //!   once with `kv_bits=4` cold-block quantization, reporting pool
@@ -30,7 +36,9 @@
 use std::time::Duration;
 
 use btc_llm::benchsuite::{load_workload, quick_mode};
-use btc_llm::coordinator::{Server, ServerOptions, StopSet};
+use btc_llm::coordinator::{
+    AdmitPolicy, EvictionKind, QosConfig, Server, ServerOptions, StopSet, TenantSpec,
+};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::io::weights::{ModelConfig, RawModel};
 use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
@@ -83,6 +91,9 @@ fn main() -> anyhow::Result<()> {
     ]);
     let mut prefix_t = Table::new(&[
         "backend", "kv", "tokens/s", "kv peak", "blk/req", "shared pos", "inflight peak", "util",
+    ]);
+    let mut qos_t = Table::new(&[
+        "policy", "tenant", "ttft p95", "itl p95", "solo ttft p95", "vs solo",
     ]);
     let mut report = JsonReport::new("serve");
     for (label, cfg) in lanes {
@@ -341,6 +352,147 @@ fn main() -> anyhow::Result<()> {
                 "{label}: int4 KV pool must shrink >= 3x vs f32 (got {ratio:.2}x)"
             );
         }
+
+        // --- Scenario 4: adversarial multi-tenant mix (QoS) ----------
+        // One flooding tenant (weight 1, class 1) dumps a burst of
+        // short requests; two well-behaved tenants (weight 2, class 0)
+        // then submit a couple of normal requests into the backlog.
+        // Under FIFO the polite tenants queue behind the whole flood;
+        // under weighted round-robin their class drains first, so
+        // their p95 TTFT stays within 2x of a solo run. QoS ordering
+        // is backend-independent, so the scenario runs on the BTC
+        // lane only.
+        if label.starts_with("BTC") {
+            let vocab = raw.config.vocab as usize;
+            let flood_n = if quick { 24 } else { 40 };
+            let flood_prompts: Vec<Vec<u16>> = (0..flood_n)
+                .map(|i| (0..4).map(|j| ((j * 3 + i * 5 + 1) % vocab) as u16).collect())
+                .collect();
+            let polite_prompt = |t: usize, k: usize| -> Vec<u16> {
+                (0..96).map(|j| ((j * 7 + t * 17 + k * 29 + 2) % vocab) as u16).collect()
+            };
+            let qos_opts = |admission: AdmitPolicy| ServerOptions {
+                max_batch: 4,
+                batch_wait: Duration::from_millis(1),
+                seed: 7,
+                prefill_chunk: 32,
+                stop: StopSet::none(),
+                qos: QosConfig {
+                    admission,
+                    eviction: EvictionKind::Newest,
+                    tenants: vec![
+                        TenantSpec { id: "flood".into(), weight: 1, priority: 1, max_pending: 0 },
+                        TenantSpec { id: "alice".into(), weight: 2, priority: 0, max_pending: 0 },
+                        TenantSpec { id: "bob".into(), weight: 2, priority: 0, max_pending: 0 },
+                    ],
+                },
+                ..ServerOptions::default()
+            };
+            // Solo references: each polite tenant alone on the server,
+            // same options, same prompts — the baseline the fairness
+            // claim is measured against.
+            let mut solo_ttft_ms = std::collections::BTreeMap::new();
+            for (ti, tenant) in ["alice", "bob"].into_iter().enumerate() {
+                let server = Server::start_with_opts(
+                    qm.model.clone(),
+                    qos_opts(AdmitPolicy::WeightedRoundRobin),
+                );
+                let rxs: Vec<_> = (0..2)
+                    .map(|k| {
+                        server
+                            .submit_qos(tenant, polite_prompt(ti, k), 8, 0.0, Some(StopSet::none()), None)
+                            .expect("solo submit")
+                    })
+                    .collect();
+                for rx in rxs {
+                    rx.recv().expect("solo response");
+                }
+                solo_ttft_ms.insert(
+                    tenant,
+                    server.metrics.tenant_ttft_percentile_us(tenant, 0.95) as f64 / 1e3,
+                );
+                server.shutdown();
+            }
+            for policy in [AdmitPolicy::Fifo, AdmitPolicy::WeightedRoundRobin] {
+                let server = Server::start_with_opts(qm.model.clone(), qos_opts(policy));
+                let flood_rxs: Vec<_> = flood_prompts
+                    .iter()
+                    .map(|p| {
+                        server
+                            .submit_qos("flood", p.clone(), 4, 0.0, Some(StopSet::none()), None)
+                            .expect("flood submit")
+                    })
+                    .collect();
+                // Let the flood occupy the batch and build a backlog
+                // before the polite tenants arrive.
+                std::thread::sleep(Duration::from_millis(10));
+                let polite_rxs: Vec<_> = (0..2usize)
+                    .flat_map(|k| [("alice", 0usize, k), ("bob", 1usize, k)])
+                    .map(|(t, ti, k)| {
+                        server
+                            .submit_qos(t, polite_prompt(ti, k), 8, 0.0, Some(StopSet::none()), None)
+                            .expect("polite submit")
+                    })
+                    .collect();
+                for rx in polite_rxs.into_iter().chain(flood_rxs) {
+                    rx.recv().expect("adversarial response");
+                }
+                for tenant in ["alice", "bob", "flood"] {
+                    let ttft_p95 =
+                        server.metrics.tenant_ttft_percentile_us(tenant, 0.95) as f64 / 1e3;
+                    let itl_p95 =
+                        server.metrics.tenant_itl_percentile_us(tenant, 0.95) as f64 / 1e3;
+                    let solo = solo_ttft_ms.get(tenant).copied();
+                    let vs_solo = solo.map(|s| ttft_p95 / s.max(1e-6));
+                    qos_t.row(&[
+                        policy.as_str().to_string(),
+                        tenant.to_string(),
+                        format!("{ttft_p95:.1}ms"),
+                        format!("{itl_p95:.2}ms"),
+                        solo.map_or("-".into(), |s| format!("{s:.1}ms")),
+                        vs_solo.map_or("-".into(), |r| format!("{r:.2}x")),
+                    ]);
+                    let mut kv = vec![
+                        ("scenario", "adversarial".to_string()),
+                        ("backend", label.replace(' ', "_")),
+                        ("batch", "4".to_string()),
+                        ("policy", policy.as_str().to_string()),
+                        ("tenant", tenant.to_string()),
+                        ("flood_n", flood_n.to_string()),
+                        ("ttft_p95_ms", format!("{ttft_p95:.2}")),
+                        ("itl_p95_ms", format!("{itl_p95:.3}")),
+                    ];
+                    if let (Some(s), Some(r)) = (solo, vs_solo) {
+                        kv.push(("solo_ttft_p95_ms", format!("{s:.2}")));
+                        kv.push(("ttft_vs_solo", format!("{r:.2}")));
+                    }
+                    kv.push(("threads", threads.to_string()));
+                    kv.push(("workload", wl_name.to_string()));
+                    benchline("serve_e2e", &kv);
+                    report.row(&kv);
+                    // The fairness claim, continuously enforced on the
+                    // hermetic workload: WRR keeps well-behaved p95
+                    // TTFT within 2x of solo; FIFO demonstrably does
+                    // not (the flood backlog is far larger than that).
+                    if wl_name == "synthetic" {
+                        if let Some(r) = vs_solo {
+                            match policy {
+                                AdmitPolicy::WeightedRoundRobin => assert!(
+                                    r <= 2.0,
+                                    "{tenant} under wrr: ttft p95 {r:.2}x solo (must be <= 2x)"
+                                ),
+                                AdmitPolicy::Fifo => assert!(
+                                    r > 2.0,
+                                    "{tenant} under fifo: ttft p95 {r:.2}x solo (flood backlog \
+                                     should dominate; is the scenario still adversarial?)"
+                                ),
+                            }
+                        }
+                    }
+                }
+                server.shutdown();
+            }
+        }
     }
     println!(
         "\nEnd-to-end serving ({wl_name}, <= {max_new} new tokens/request, {threads} threads)"
@@ -358,6 +510,12 @@ fn main() -> anyhow::Result<()> {
          concurrency against worst-case flat reservation under the same block budget)"
     );
     prefix_t.print();
+    println!(
+        "\nAdversarial multi-tenant mix (BTC lane: one flooding tenant w=1/class 1 vs two \
+         well-behaved tenants w=2/class 0; 'vs solo' compares each tenant's p95 TTFT in the mix \
+         against the same tenant running alone)"
+    );
+    qos_t.print();
     let _ = report.write_if_enabled();
     println!("\nNote: at TinyLM widths the decode hot path is attention + norm overhead;");
     println!("the weight-GEMM speedup shows at MLP shapes — see bench_fig5_latency.");

@@ -31,12 +31,17 @@ use btc_llm::util::benchkit::{compare_reports, parse_report, Gate};
 fn spec_for(exp: &str, pct: f64) -> (Vec<&'static str>, Vec<Gate>) {
     match exp {
         "serve" => (
-            vec!["scenario", "backend", "batch", "workload"],
+            // `policy`/`tenant` only exist on adversarial-scenario
+            // rows; elsewhere they render as "-" and stay inert in
+            // the row key.
+            vec!["scenario", "backend", "batch", "policy", "tenant", "workload"],
             vec![
                 Gate::higher("tokens_per_s", pct),
                 Gate::lower("p50_ms", pct),
                 Gate::lower("ttft_p50_ms", pct),
                 Gate::lower("itl_p50_ms", pct),
+                Gate::lower("ttft_p95_ms", pct),
+                Gate::lower("itl_p95_ms", pct),
             ],
         ),
         "fig5" => (

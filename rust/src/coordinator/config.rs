@@ -1,8 +1,12 @@
 //! Coordinator configuration, loaded from the TOML-subset config files
-//! (`configs/*.toml`) with CLI overrides.
+//! (`configs/*.toml`) with CLI overrides. Malformed serve/QoS tables
+//! (bad listen address, zero tenant weight, duplicate tenant id,
+//! mismatched `[tenants]` arrays) surface as `Err` here — at load
+//! time — instead of panicking the worker thread later.
 
 use std::path::Path;
 
+use super::qos::{AdmitPolicy, EvictionKind, QosConfig, TenantSpec};
 use super::server::StopSet;
 use crate::util::toml::{Doc, Value};
 
@@ -48,6 +52,20 @@ pub struct ServeConfig {
     /// KV-pool budget in blocks (0 = auto: worst-case-equivalent
     /// capacity per in-flight slot, allocated lazily).
     pub kv_pool_blocks: usize,
+    /// TCP listen address for the network front-end (`[serve] listen`,
+    /// e.g. "127.0.0.1:8090"; port 0 = OS-assigned). `None` keeps the
+    /// in-process-only server.
+    pub listen: Option<String>,
+    /// Pending-queue admission policy (`[serve] admission`): "fifo"
+    /// (default, the PR 4/5 behavior) or "wrr".
+    pub admission: AdmitPolicy,
+    /// Preemption victim selection (`[serve] eviction`): "newest"
+    /// (default), "lowest-priority", or "largest-kv".
+    pub eviction: EvictionKind,
+    /// Tenant table from `[tenants]` parallel arrays (`ids`,
+    /// `weights`, `priorities`, `max_pending`); empty = the implicit
+    /// single "default" tenant.
+    pub tenants: Vec<TenantSpec>,
 }
 
 impl Default for ServeConfig {
@@ -69,15 +87,128 @@ impl Default for ServeConfig {
             kv_local_window: 16,
             kv_block: 32,
             kv_pool_blocks: 0,
+            listen: None,
+            admission: AdmitPolicy::Fifo,
+            eviction: EvictionKind::Newest,
+            tenants: Vec::new(),
         }
     }
 }
 
+/// `[tenants]` is parallel scalar arrays (the TOML subset has no
+/// table arrays): `ids` is required when the section is present;
+/// `weights`/`priorities`/`max_pending` are optional but must match
+/// `ids` in length when given.
+fn parse_tenants(doc: &Doc) -> Result<Vec<TenantSpec>, String> {
+    let ids: Vec<String> = match doc.get("tenants.ids") {
+        Some(Value::Array(items)) => {
+            let mut out = Vec::new();
+            for v in items {
+                match v.as_str() {
+                    Some(s) => out.push(s.to_string()),
+                    None => return Err("[tenants] ids must be strings".into()),
+                }
+            }
+            out
+        }
+        Some(_) => return Err("[tenants] ids must be an array of strings".into()),
+        None => {
+            for k in ["tenants.weights", "tenants.priorities", "tenants.max_pending"] {
+                if doc.get(k).is_some() {
+                    return Err(format!("[tenants] has {k} but no ids array"));
+                }
+            }
+            return Ok(Vec::new());
+        }
+    };
+    let ints = |key: &str, default: i64| -> Result<Vec<i64>, String> {
+        match doc.get(key) {
+            Some(Value::Array(items)) => {
+                if items.len() != ids.len() {
+                    return Err(format!(
+                        "[tenants] {key} has {} entries but ids has {}",
+                        items.len(),
+                        ids.len()
+                    ));
+                }
+                items
+                    .iter()
+                    .map(|v| v.as_int().ok_or_else(|| format!("[tenants] {key} must be integers")))
+                    .collect()
+            }
+            Some(_) => Err(format!("[tenants] {key} must be an array of integers")),
+            None => Ok(vec![default; ids.len()]),
+        }
+    };
+    let weights = ints("tenants.weights", 1)?;
+    let priorities = ints("tenants.priorities", 0)?;
+    let max_pending = ints("tenants.max_pending", 0)?;
+    let mut tenants = Vec::with_capacity(ids.len());
+    for i in 0..ids.len() {
+        if !(1..=u32::MAX as i64).contains(&weights[i]) {
+            return Err(format!(
+                "[tenants] tenant '{}' has weight {} (must be >= 1)",
+                ids[i], weights[i]
+            ));
+        }
+        if !(0..=u8::MAX as i64).contains(&priorities[i]) {
+            return Err(format!(
+                "[tenants] tenant '{}' has priority {} (must be 0..=255)",
+                ids[i], priorities[i]
+            ));
+        }
+        if max_pending[i] < 0 {
+            return Err(format!(
+                "[tenants] tenant '{}' has max_pending {} (must be >= 0; 0 = unbounded)",
+                ids[i], max_pending[i]
+            ));
+        }
+        tenants.push(TenantSpec {
+            id: ids[i].clone(),
+            weight: weights[i] as u32,
+            priority: priorities[i] as u8,
+            max_pending: max_pending[i] as usize,
+        });
+    }
+    Ok(tenants)
+}
+
 impl ServeConfig {
-    /// Parse from a TOML doc (section `[serve]` + `[quant]`).
-    pub fn from_doc(doc: &Doc) -> ServeConfig {
+    /// Parse from a TOML doc (sections `[serve]`, `[quant]`,
+    /// `[tenants]`). Structural QoS errors — unparseable listen
+    /// address, bad policy name, malformed tenant table — are `Err`,
+    /// not worker panics.
+    pub fn from_doc(doc: &Doc) -> Result<ServeConfig, String> {
         let d = ServeConfig::default();
-        ServeConfig {
+        let listen = match doc.get("serve.listen") {
+            Some(v) => match v.as_str() {
+                Some(s) => {
+                    s.parse::<std::net::SocketAddr>()
+                        .map_err(|e| format!("[serve] listen '{s}': {e}"))?;
+                    Some(s.to_string())
+                }
+                None => return Err("[serve] listen must be a string address".into()),
+            },
+            None => None,
+        };
+        let admission = match doc.get("serve.admission") {
+            Some(v) => {
+                let s =
+                    v.as_str().ok_or_else(|| "[serve] admission must be a string".to_string())?;
+                AdmitPolicy::parse(s).map_err(|e| format!("[serve] admission: {e}"))?
+            }
+            None => d.admission,
+        };
+        let eviction = match doc.get("serve.eviction") {
+            Some(v) => {
+                let s =
+                    v.as_str().ok_or_else(|| "[serve] eviction must be a string".to_string())?;
+                EvictionKind::parse(s).map_err(|e| format!("[serve] eviction: {e}"))?
+            }
+            None => d.eviction,
+        };
+        let tenants = parse_tenants(doc)?;
+        let cfg = ServeConfig {
             model: doc.get_str("serve.model", &d.model).to_string(),
             backend: doc.get_str("quant.backend", &d.backend).to_string(),
             bits: doc.get_float("quant.bits", d.bits),
@@ -109,11 +240,20 @@ impl ServeConfig {
             kv_pool_blocks: doc
                 .get_int("serve.kv_pool_blocks", d.kv_pool_blocks as i64)
                 .max(0) as usize,
-        }
+            listen,
+            admission,
+            eviction,
+            tenants,
+        };
+        // Semantic QoS validation (duplicate/empty ids) lives in
+        // QosConfig::validate — run it here so a bad file fails at
+        // load, not at Server start.
+        cfg.qos_config().validate()?;
+        Ok(cfg)
     }
 
     pub fn from_file(path: &Path) -> Result<ServeConfig, String> {
-        Ok(Self::from_doc(&crate::util::toml::parse_file(path)?))
+        Self::from_doc(&crate::util::toml::parse_file(path)?)
     }
 
     /// The stop conditions this config describes (EOS id + stop set).
@@ -125,6 +265,18 @@ impl ServeConfig {
         };
         StopSet { eos, stops: self.stop_tokens.clone() }
     }
+
+    /// The QoS policy bundle this config describes. An empty
+    /// `[tenants]` table yields the implicit single "default" tenant,
+    /// so single-tenant deployments never have to write one.
+    pub fn qos_config(&self) -> QosConfig {
+        let tenants = if self.tenants.is_empty() {
+            vec![TenantSpec::new("default")]
+        } else {
+            self.tenants.clone()
+        };
+        QosConfig { admission: self.admission, eviction: self.eviction, tenants }
+    }
 }
 
 #[cfg(test)]
@@ -132,9 +284,13 @@ mod tests {
     use super::*;
     use crate::util::toml::parse;
 
+    fn from_str(s: &str) -> Result<ServeConfig, String> {
+        ServeConfig::from_doc(&parse(s).unwrap())
+    }
+
     #[test]
     fn defaults_when_empty() {
-        let c = ServeConfig::from_doc(&parse("").unwrap());
+        let c = from_str("").unwrap();
         assert_eq!(c.model, "tinylm_s");
         assert_eq!(c.max_batch, 8);
         assert_eq!(c.prefill_chunk, 32);
@@ -144,31 +300,37 @@ mod tests {
         let s = c.stop_set();
         assert_eq!(s.eos, None);
         assert_eq!(s.stops, vec![b'\n' as u16]);
+        // QoS defaults: no listener, FIFO, newest-slot eviction, the
+        // implicit single tenant.
+        assert_eq!(c.listen, None);
+        assert_eq!(c.admission, AdmitPolicy::Fifo);
+        assert_eq!(c.eviction, EvictionKind::Newest);
+        assert!(c.tenants.is_empty());
+        let q = c.qos_config();
+        assert_eq!(q.tenants.len(), 1);
+        assert_eq!(q.tenants[0].id, "default");
+        q.validate().unwrap();
     }
 
     #[test]
     fn stop_conditions_from_toml() {
-        let doc = parse(
-            "[serve]\nprefill_chunk = 8\neos_token = 2\nstop_tokens = [10, 46]\n",
-        )
-        .unwrap();
-        let c = ServeConfig::from_doc(&doc);
+        let c = from_str("[serve]\nprefill_chunk = 8\neos_token = 2\nstop_tokens = [10, 46]\n")
+            .unwrap();
         assert_eq!(c.prefill_chunk, 8);
         let s = c.stop_set();
         assert_eq!(s.eos, Some(2));
         assert_eq!(s.stops, vec![10, 46]);
         // Out-of-range ids are dropped, not wrapped.
-        let doc = parse("[serve]\nstop_tokens = [70000, 5]\n").unwrap();
-        assert_eq!(ServeConfig::from_doc(&doc).stop_tokens, vec![5]);
+        let c = from_str("[serve]\nstop_tokens = [70000, 5]\n").unwrap();
+        assert_eq!(c.stop_tokens, vec![5]);
     }
 
     #[test]
     fn overrides_from_toml() {
-        let doc = parse(
+        let c = from_str(
             "[serve]\nmodel = \"tinylm_m\"\nmax_batch = 4\nthreads = 3\n[quant]\nbackend = \"binary\"\nbits = 1.0\n",
         )
         .unwrap();
-        let c = ServeConfig::from_doc(&doc);
         assert_eq!(c.model, "tinylm_m");
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.backend, "binary");
@@ -178,7 +340,7 @@ mod tests {
 
     #[test]
     fn threads_defaults_to_auto() {
-        let c = ServeConfig::from_doc(&parse("").unwrap());
+        let c = from_str("").unwrap();
         assert_eq!(c.threads, 0);
     }
 
@@ -186,27 +348,74 @@ mod tests {
     fn kv_quant_defaults_off_and_parses() {
         // Defaults: quantization off, auto pool — existing configs
         // behave exactly as before.
-        let c = ServeConfig::from_doc(&parse("").unwrap());
+        let c = from_str("").unwrap();
         assert_eq!((c.kv_bits, c.kv_local_window), (16, 16));
         assert_eq!((c.kv_block, c.kv_pool_blocks), (32, 0));
-        let doc = parse(
+        let c = from_str(
             "[serve]\nkv_bits = 4\nkv_local_window = 8\nkv_block = 16\nkv_pool_blocks = 256\n",
         )
         .unwrap();
-        let c = ServeConfig::from_doc(&doc);
         assert_eq!((c.kv_bits, c.kv_local_window), (4, 8));
         assert_eq!((c.kv_block, c.kv_pool_blocks), (16, 256));
         // Out-of-range bits clamp instead of wrapping; the formatless
         // 9..=15 band snaps down to 8 rather than panicking the
         // worker at the first cold block; 0 means off (the auto/off
         // convention of threads/kv_pool_blocks), not int2.
-        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 1\n").unwrap());
-        assert_eq!(c.kv_bits, 2);
-        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 12\n").unwrap());
-        assert_eq!(c.kv_bits, 8);
-        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 32\n").unwrap());
-        assert_eq!(c.kv_bits, 16);
-        let c = ServeConfig::from_doc(&parse("[serve]\nkv_bits = 0\n").unwrap());
-        assert_eq!(c.kv_bits, 16);
+        assert_eq!(from_str("[serve]\nkv_bits = 1\n").unwrap().kv_bits, 2);
+        assert_eq!(from_str("[serve]\nkv_bits = 12\n").unwrap().kv_bits, 8);
+        assert_eq!(from_str("[serve]\nkv_bits = 32\n").unwrap().kv_bits, 16);
+        assert_eq!(from_str("[serve]\nkv_bits = 0\n").unwrap().kv_bits, 16);
+    }
+
+    #[test]
+    fn listen_and_policies_parse() {
+        let c = from_str(
+            "[serve]\nlisten = \"127.0.0.1:0\"\nadmission = \"wrr\"\neviction = \"largest-kv\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(c.admission, AdmitPolicy::WeightedRoundRobin);
+        assert_eq!(c.eviction, EvictionKind::LargestKv);
+    }
+
+    #[test]
+    fn tenant_table_parses_with_defaults() {
+        let c = from_str(
+            "[tenants]\nids = [\"alice\", \"bob\", \"flood\"]\nweights = [2, 2, 1]\n\
+             priorities = [0, 0, 1]\nmax_pending = [0, 0, 8]\n",
+        )
+        .unwrap();
+        assert_eq!(c.tenants.len(), 3);
+        assert_eq!(c.tenants[0].id, "alice");
+        assert_eq!(c.tenants[2].weight, 1);
+        assert_eq!(c.tenants[2].priority, 1);
+        assert_eq!(c.tenants[2].max_pending, 8);
+        assert_eq!(c.qos_config().tenants.len(), 3);
+        // ids alone: weight 1, class 0, unbounded for everyone.
+        let c = from_str("[tenants]\nids = [\"a\", \"b\"]\n").unwrap();
+        assert_eq!(c.tenants[1].weight, 1);
+        assert_eq!(c.tenants[1].priority, 0);
+        assert_eq!(c.tenants[1].max_pending, 0);
+    }
+
+    #[test]
+    fn config_errors_surface_at_load_time() {
+        // Bad listen address.
+        let e = from_str("[serve]\nlisten = \"not-an-addr\"\n").unwrap_err();
+        assert!(e.contains("listen"), "{e}");
+        // Unknown policy names.
+        assert!(from_str("[serve]\nadmission = \"lifo\"\n").is_err());
+        assert!(from_str("[serve]\neviction = \"oldest\"\n").is_err());
+        // Zero weight.
+        let e = from_str("[tenants]\nids = [\"a\"]\nweights = [0]\n").unwrap_err();
+        assert!(e.contains("weight"), "{e}");
+        // Duplicate tenant id (semantic check via QosConfig).
+        let e = from_str("[tenants]\nids = [\"a\", \"a\"]\n").unwrap_err();
+        assert!(e.contains("duplicate"), "{e}");
+        // Length mismatch between parallel arrays.
+        let e = from_str("[tenants]\nids = [\"a\", \"b\"]\nweights = [1]\n").unwrap_err();
+        assert!(e.contains("entries"), "{e}");
+        // Satellite arrays without ids.
+        assert!(from_str("[tenants]\nweights = [1]\n").is_err());
     }
 }

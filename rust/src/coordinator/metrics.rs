@@ -8,6 +8,7 @@
 //! sampling) so a long-running server holds constant memory per
 //! metric no matter how many tokens it serves.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -94,6 +95,24 @@ pub struct Metrics {
     ttft_us: Mutex<Reservoir>,
     /// Gap between consecutive generated tokens, one sample per gap.
     itl_us: Mutex<Reservoir>,
+    /// Per-tenant QoS breakdown, keyed by tenant id. Created lazily on
+    /// first record; bounded by the configured tenant table (the
+    /// scheduler clamps unknown indices into it), so the map cannot
+    /// grow with attacker-supplied ids.
+    per_tenant: Mutex<BTreeMap<String, TenantStats>>,
+}
+
+/// Per-tenant latency reservoirs + counters (DESIGN.md §9): the
+/// fairness numbers the adversarial-mix bench gates on.
+#[derive(Debug, Default)]
+struct TenantStats {
+    ttft_us: Reservoir,
+    itl_us: Reservoir,
+    queue_wait_us: Reservoir,
+    completed: u64,
+    /// Submissions bounced at the per-tenant pending bound (the wire
+    /// layer's 429s).
+    rejected: u64,
 }
 
 fn percentile_of(values: &Mutex<Reservoir>, p: f64) -> u64 {
@@ -191,6 +210,106 @@ impl Metrics {
         self.kv_quant_blocks.store(s.quant_blocks as u64, Ordering::Relaxed);
         self.kv_quant_blocks_peak.fetch_max(s.quant_blocks as u64, Ordering::Relaxed);
         self.kv_shared_positions.store(s.shared_positions, Ordering::Relaxed);
+    }
+
+    fn with_tenant<R>(&self, tenant: &str, f: impl FnOnce(&mut TenantStats) -> R) -> R {
+        let mut map = self.per_tenant.lock().unwrap();
+        f(map.entry(tenant.to_string()).or_default())
+    }
+
+    /// Tenant `tenant`'s request admitted after `wait_us` queued.
+    pub fn record_tenant_admission(&self, tenant: &str, wait_us: u64) {
+        self.with_tenant(tenant, |t| t.queue_wait_us.offer(wait_us));
+    }
+
+    /// Tenant `tenant` saw its first generated token `us` after submit.
+    pub fn record_tenant_ttft(&self, tenant: &str, us: u64) {
+        self.with_tenant(tenant, |t| t.ttft_us.offer(us));
+    }
+
+    /// One inter-token gap for `tenant`.
+    pub fn record_tenant_itl(&self, tenant: &str, us: u64) {
+        self.with_tenant(tenant, |t| t.itl_us.offer(us));
+    }
+
+    /// A request of `tenant` retired.
+    pub fn record_tenant_completion(&self, tenant: &str) {
+        self.with_tenant(tenant, |t| t.completed += 1);
+    }
+
+    /// A submission of `tenant` bounced at its pending bound (429).
+    pub fn record_tenant_rejection(&self, tenant: &str) {
+        self.with_tenant(tenant, |t| t.rejected += 1);
+    }
+
+    fn tenant_percentile(&self, tenant: &str, p: f64, pick: impl Fn(&TenantStats) -> &Reservoir) -> u64 {
+        let map = self.per_tenant.lock().unwrap();
+        match map.get(tenant) {
+            Some(t) => {
+                let mut v = pick(t).samples.clone();
+                v.sort_unstable();
+                percentile_sorted(&v, p)
+            }
+            None => 0,
+        }
+    }
+
+    /// Per-tenant TTFT percentile (µs); 0 for unknown tenants.
+    pub fn tenant_ttft_percentile_us(&self, tenant: &str, p: f64) -> u64 {
+        self.tenant_percentile(tenant, p, |t| &t.ttft_us)
+    }
+
+    /// Per-tenant inter-token-latency percentile (µs); 0 if unknown.
+    pub fn tenant_itl_percentile_us(&self, tenant: &str, p: f64) -> u64 {
+        self.tenant_percentile(tenant, p, |t| &t.itl_us)
+    }
+
+    /// Per-tenant queue-wait percentile (µs); 0 if unknown.
+    pub fn tenant_queue_wait_percentile_us(&self, tenant: &str, p: f64) -> u64 {
+        self.tenant_percentile(tenant, p, |t| &t.queue_wait_us)
+    }
+
+    /// Completed request count for `tenant`.
+    pub fn tenant_completed(&self, tenant: &str) -> u64 {
+        let map = self.per_tenant.lock().unwrap();
+        map.get(tenant).map_or(0, |t| t.completed)
+    }
+
+    /// Bounced submission count for `tenant`.
+    pub fn tenant_rejected(&self, tenant: &str) -> u64 {
+        let map = self.per_tenant.lock().unwrap();
+        map.get(tenant).map_or(0, |t| t.rejected)
+    }
+
+    /// One line per tenant with the QoS numbers; empty string when no
+    /// tenant ever recorded anything (single-tenant legacy paths).
+    pub fn tenant_summary(&self) -> String {
+        let map = self.per_tenant.lock().unwrap();
+        let mut out = String::new();
+        for (id, t) in map.iter() {
+            let mut ttft = t.ttft_us.samples.clone();
+            ttft.sort_unstable();
+            let mut itl = t.itl_us.samples.clone();
+            itl.sort_unstable();
+            let mut qw = t.queue_wait_us.samples.clone();
+            qw.sort_unstable();
+            if !out.is_empty() {
+                out.push('\n');
+            }
+            out.push_str(&format!(
+                "tenant={} completed={} rejected={} qwait_p50={}us ttft_p50={}us ttft_p95={}us \
+                 itl_p50={}us itl_p95={}us",
+                id,
+                t.completed,
+                t.rejected,
+                percentile_sorted(&qw, 0.5),
+                percentile_sorted(&ttft, 0.5),
+                percentile_sorted(&ttft, 0.95),
+                percentile_sorted(&itl, 0.5),
+                percentile_sorted(&itl, 0.95),
+            ));
+        }
+        out
     }
 
     /// Mean prefill cost per prompt token (µs); 0 before any prefill.
@@ -369,6 +488,33 @@ mod tests {
         assert!(s.contains("kv_blocks=3/16"), "summary carries pool gauges: {s}");
         assert!(s.contains("kv_preempt=1") && s.contains("kv_defer=1+1"), "{s}");
         assert!(s.contains("inflight_peak=5"), "{s}");
+    }
+
+    #[test]
+    fn per_tenant_reservoirs_are_isolated() {
+        let m = Metrics::new();
+        m.record_tenant_admission("alice", 10);
+        m.record_tenant_ttft("alice", 100);
+        m.record_tenant_ttft("alice", 200);
+        m.record_tenant_itl("alice", 7);
+        m.record_tenant_completion("alice");
+        m.record_tenant_ttft("flood", 9000);
+        m.record_tenant_rejection("flood");
+        m.record_tenant_rejection("flood");
+        assert_eq!(m.tenant_ttft_percentile_us("alice", 1.0), 200);
+        assert_eq!(m.tenant_ttft_percentile_us("flood", 0.5), 9000);
+        assert_eq!(m.tenant_queue_wait_percentile_us("alice", 0.5), 10);
+        assert_eq!(m.tenant_itl_percentile_us("alice", 0.5), 7);
+        assert_eq!(m.tenant_completed("alice"), 1);
+        assert_eq!(m.tenant_rejected("flood"), 2);
+        // Unknown tenants read as zero, not panic.
+        assert_eq!(m.tenant_ttft_percentile_us("nobody", 0.5), 0);
+        assert_eq!(m.tenant_completed("nobody"), 0);
+        let s = m.tenant_summary();
+        assert!(s.contains("tenant=alice") && s.contains("tenant=flood"), "{s}");
+        assert!(s.contains("rejected=2"), "{s}");
+        // Global reservoirs are untouched by tenant recorders.
+        assert_eq!(m.ttft_percentile_us(0.5), 0);
     }
 
     #[test]

@@ -1,36 +1,57 @@
-//! L3 coordinator: config system, continuous-batching serving loop,
-//! and metrics. The paper's contribution lives at L1/L2 (kernel +
-//! quantization algorithm), so per DESIGN.md this layer is a thin but
-//! real deployment front-end, all on std threads + channels (tokio is
-//! not in the offline vendor set):
+//! L3 coordinator: config system, network front-end, multi-tenant
+//! QoS, continuous-batching serving loop, and metrics. The paper's
+//! contribution lives at L1/L2 (kernel + quantization algorithm), so
+//! per DESIGN.md this layer is a thin but real deployment front-end,
+//! all on std threads + channels + `std::net` (tokio is not in the
+//! offline vendor set). The layering, outside in:
 //!
-//! request queue → in-flight scheduler → quantized engine → per-token
-//! streams + responses.
+//! TCP listener (`net`) → HTTP/SSE bridge → submit path (`server`,
+//! per-tenant admission bounds) → QoS pending queues (`qos`) →
+//! in-flight scheduler (`scheduler`) → quantized engine → per-token
+//! streams back out over the same path.
+//!
+//! [`NetServer`] is a dependency-free HTTP/1.1 front-end: it parses
+//! generate requests (token ids, sampling knobs, tenant id), bridges
+//! each connection onto the server's in-process streaming channels
+//! (chunked SSE out), and maps QoS rejections onto wire status codes
+//! (429 for a tenant over its pending bound, 503 while draining) —
+//! see DESIGN.md §9.
 //!
 //! The [`Scheduler`] admits requests *between decode rounds* (no
 //! head-of-line blocking behind a long generation), prefills prompts
 //! in bounded chunks interleaved with in-flight decoding, applies stop
 //! conditions (EOS + stop sets, [`StopSet`]) and delivers tokens as
-//! they are accepted over optional streaming channels. It also owns
-//! the block-paged KV pool (`model/kvcache.rs`): admission is
-//! memory-aware (free blocks for the prompt, no worst-case
-//! reservation), prompts sharing a token prefix share refcounted
-//! blocks, and cold blocks optionally store packed int K/V
-//! (`serve.kv_bits`) — see DESIGN.md §8. [`Metrics`] tracks queue
-//! wait, time-to-first-token and inter-token latency alongside the
+//! they are accepted over optional streaming channels. Its pending set
+//! is policy-ordered (`qos`): global FIFO by default, or per-tenant
+//! weighted round-robin within priority classes, so one flooding
+//! tenant cannot starve a well-behaved peer. It also owns the
+//! block-paged KV pool (`model/kvcache.rs`): admission is memory-aware
+//! (free blocks for the prompt, no worst-case reservation), prompts
+//! sharing a token prefix share refcounted blocks, cold blocks
+//! optionally store packed int K/V (`serve.kv_bits`), and preemption
+//! under pool pressure picks its victim through the pluggable
+//! [`EvictionPolicy`] (newest / lowest-priority / largest-KV) — see
+//! DESIGN.md §8–9. [`Metrics`] tracks queue wait, time-to-first-token
+//! and inter-token latency — globally and per tenant — alongside the
 //! per-phase prefill/decode rates and the KV-pool gauges. With greedy
 //! sampling each request's output is bit-identical regardless of
-//! co-traffic — see DESIGN.md §6 for the determinism contract.
+//! co-traffic — see DESIGN.md §6 for the determinism contract; the
+//! network layer preserves it bit for bit (`rust/tests/serving.rs`).
 //!
 //! [`Metrics`]: metrics::Metrics
+//! [`EvictionPolicy`]: qos::EvictionPolicy
 
 pub mod batcher;
 pub mod config;
 pub mod metrics;
+pub mod net;
+pub mod qos;
 pub mod scheduler;
 pub mod server;
 
 pub use config::ServeConfig;
+pub use net::{NetOptions, NetServer};
+pub use qos::{AdmitPolicy, EvictionKind, EvictionPolicy, QosConfig, TenantSpec};
 pub use scheduler::Scheduler;
 pub use server::{
     FinishReason, GenRequest, GenResponse, ServeError, Server, ServerOptions, StopSet,

@@ -1,0 +1,1017 @@
+//! Dependency-free TCP front-end: minimal HTTP/1.1 on [`std::net`]
+//! bridging wire clients onto the in-process [`Server`] submission
+//! surface (DESIGN.md §9). No external crates — the parser, the JSON
+//! reader and the chunked/SSE writer are all here, small enough to
+//! test exhaustively.
+//!
+//! **Wire protocol.**
+//! - `POST /generate` with a JSON body:
+//!   `{"prompt": [ids], "max_new": n, "temperature": t,
+//!     "stop": [ids], "eos": id, "tenant": "name", "stream": bool}`.
+//!   Only `prompt` is required. With `"stream": true` (the default)
+//!   the response is `Transfer-Encoding: chunked` server-sent events:
+//!   one `data: {"token": id}` event per generated token the moment
+//!   the scheduler accepts it, then a final
+//!   `data: {"done": true, "finish": "...", "tokens": [...]}` event
+//!   carrying the generated ids, then the terminal chunk. With
+//!   `"stream": false` it is one JSON document with Content-Length.
+//! - `GET /metrics` returns the global summary plus the per-tenant
+//!   QoS lines; `GET /healthz` returns `ok`.
+//!
+//! **Backpressure contract.** The front-end buffers nothing per
+//! tenant: admission control is entirely the server's submit path.
+//! A tenant over its `max_pending` bound gets HTTP 429 immediately
+//! ([`ServeError::TenantOverloaded`]), a draining server 503, a dead
+//! worker 500. Wire-layer abuse (oversized headers/body, malformed
+//! request line, bad JSON) is a clean 4xx + close — never a panic,
+//! never an unbounded buffer (pinned by the tests below).
+//!
+//! **Streaming bridge.** Each connection thread submits with a
+//! [`std::sync::mpsc::Sender<u16>`] token channel — exactly the
+//! in-process streaming surface — and forwards tokens to the socket
+//! as SSE chunks, so a TCP client observes the same token ids in the
+//! same order as an in-process `submit_streaming` caller (pinned
+//! bit-identical in `rust/tests/serving.rs`).
+//!
+//! **Shutdown.** [`NetServer::shutdown`] stops the acceptor (a
+//! self-connect unblocks `accept`), then runs the server's bounded
+//! drain, then joins every connection thread: in-flight clients get
+//! their final event (possibly `finish: "cancelled"`) and a closed
+//! socket, never a hang.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::server::{FinishReason, GenResponse, ServeError, Server, StopSet};
+
+/// Wire-layer tunables.
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Max bytes of request line + headers (431 beyond).
+    pub max_header_bytes: usize,
+    /// Max request body bytes (413 beyond) — bounds what one client
+    /// can make the front-end buffer.
+    pub max_body_bytes: usize,
+    /// Default `max_new` when the request omits it.
+    pub default_max_new: usize,
+    /// Socket read poll interval: how often a blocked reader rechecks
+    /// the shutdown flag.
+    pub read_timeout: Duration,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            max_header_bytes: 8 * 1024,
+            max_body_bytes: 1024 * 1024,
+            default_max_new: 64,
+            read_timeout: Duration::from_millis(200),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HTTP request parsing: a pure incremental function over the bytes
+// received so far, so partial reads at any split point are just
+// "call it again with more bytes".
+// ---------------------------------------------------------------------------
+
+/// A parsed request (only what the routes need).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Outcome of parsing the bytes received so far.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Parse {
+    /// No complete request yet; read more and call again.
+    NeedMore,
+    /// Protocol violation: answer `status` and close.
+    Bad { status: u16, reason: String },
+    /// One complete request.
+    Ready(HttpRequest),
+}
+
+fn bad(status: u16, reason: &str) -> Parse {
+    Parse::Bad { status, reason: reason.to_string() }
+}
+
+/// Incremental HTTP/1.1 request parser. Pure: same bytes in, same
+/// verdict out, no state between calls, no panics on any input.
+fn parse_http(buf: &[u8], opts: &NetOptions) -> Parse {
+    // Header section ends at the first CRLFCRLF.
+    let head_end = match find(buf, b"\r\n\r\n") {
+        Some(i) => i,
+        None => {
+            if buf.len() > opts.max_header_bytes {
+                return bad(431, "header section too large");
+            }
+            return Parse::NeedMore;
+        }
+    };
+    if head_end > opts.max_header_bytes {
+        return bad(431, "header section too large");
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(s) => s,
+        Err(_) => return bad(400, "headers are not valid UTF-8"),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None) if !m.is_empty() => (m, p, v),
+            _ => return bad(400, "malformed request line"),
+        };
+    if !path.starts_with('/') || !version.starts_with("HTTP/1.") {
+        return bad(400, "malformed request line");
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return bad(400, "malformed header line");
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            match value.trim().parse::<usize>() {
+                Ok(n) => content_length = n,
+                Err(_) => return bad(400, "unparseable content-length"),
+            }
+        }
+    }
+    if content_length > opts.max_body_bytes {
+        return bad(413, "body too large");
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return Parse::NeedMore;
+    }
+    Parse::Ready(HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        body: buf[body_start..body_start + content_length].to_vec(),
+    })
+}
+
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON: recursive descent, depth-capped, panic-free.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+const JSON_MAX_DEPTH: usize = 32;
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonParser<'a> {
+    fn ws(&mut self) {
+        while self.pos < self.b.len() && self.b[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, lit: &[u8]) -> bool {
+        if self.b[self.pos..].starts_with(lit) {
+            self.pos += lit.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > JSON_MAX_DEPTH {
+            return Err("nesting too deep".into());
+        }
+        self.ws();
+        match self.peek() {
+            None => Err("unexpected end of input".into()),
+            Some(b'n') if self.eat(b"null") => Ok(Json::Null),
+            Some(b't') if self.eat(b"true") => Ok(Json::Bool(true)),
+            Some(b'f') if self.eat(b"false") => Ok(Json::Bool(false)),
+            Some(b'"') => self.string().map(Json::Str),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value(depth + 1)?);
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err("expected ',' or ']' in array".into()),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut kv = Vec::new();
+                self.ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                loop {
+                    self.ws();
+                    if self.peek() != Some(b'"') {
+                        return Err("expected string key in object".into());
+                    }
+                    let k = self.string()?;
+                    self.ws();
+                    if self.peek() != Some(b':') {
+                        return Err("expected ':' in object".into());
+                    }
+                    self.pos += 1;
+                    kv.push((k, self.value(depth + 1)?));
+                    self.ws();
+                    match self.peek() {
+                        Some(b',') => self.pos += 1,
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(kv));
+                        }
+                        _ => return Err("expected ',' or '}' in object".into()),
+                    }
+                }
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected byte 0x{c:02x}")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".into()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            if self.pos + 4 >= self.b.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = &self.b[self.pos + 1..self.pos + 5];
+                            let s = std::str::from_utf8(hex)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            let cp = u32::from_str_radix(s, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return Err("bad escape".into()),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Copy a whole UTF-8 scalar, not a byte.
+                    let rest = match std::str::from_utf8(&self.b[self.pos..]) {
+                        Ok(s) => s,
+                        Err(e) if e.valid_up_to() > 0 => {
+                            // SAFETY-free fallback: only the valid prefix.
+                            std::str::from_utf8(&self.b[self.pos..self.pos + e.valid_up_to()])
+                                .unwrap_or("")
+                        }
+                        Err(_) => return Err("invalid UTF-8 in string".into()),
+                    };
+                    match rest.chars().next() {
+                        Some(c) => {
+                            out.push(c);
+                            self.pos += c.len_utf8();
+                        }
+                        None => return Err("invalid UTF-8 in string".into()),
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos]).map_err(|_| "bad number")?;
+        s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number {s:?}: {e}"))
+    }
+}
+
+fn parse_json(bytes: &[u8]) -> Result<Json, String> {
+    let mut p = JsonParser { b: bytes, pos: 0 };
+    let v = p.value(0)?;
+    p.ws();
+    if p.pos != bytes.len() {
+        return Err("trailing bytes after JSON value".into());
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// The /generate request body.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+struct GenerateSpec {
+    tenant: String,
+    prompt: Vec<u16>,
+    max_new: usize,
+    temperature: f64,
+    /// `None` = the server's default stop set.
+    stop: Option<StopSet>,
+    stream: bool,
+}
+
+fn token_array(v: &Json, what: &str) -> Result<Vec<u16>, String> {
+    let arr = v.as_arr().ok_or_else(|| format!("{what} must be an array of token ids"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let n = item.as_f64().ok_or_else(|| format!("{what} must contain only numbers"))?;
+        if n.fract() != 0.0 || !(0.0..=u16::MAX as f64).contains(&n) {
+            return Err(format!("{what} ids must be integers in 0..=65535"));
+        }
+        out.push(n as u16);
+    }
+    Ok(out)
+}
+
+fn generate_spec(body: &[u8], opts: &NetOptions) -> Result<GenerateSpec, String> {
+    let v = parse_json(body).map_err(|e| format!("invalid JSON body: {e}"))?;
+    let prompt = token_array(v.get("prompt").ok_or("missing required field \"prompt\"")?, "prompt")?;
+    if prompt.is_empty() {
+        return Err("prompt must not be empty".into());
+    }
+    let max_new = match v.get("max_new") {
+        Some(n) => {
+            let n = n.as_f64().ok_or("max_new must be a number")?;
+            if n.fract() != 0.0 || n < 1.0 || n > 1e9 {
+                return Err("max_new must be an integer >= 1".into());
+            }
+            n as usize
+        }
+        None => opts.default_max_new,
+    };
+    let temperature = match v.get("temperature") {
+        Some(t) => t.as_f64().ok_or("temperature must be a number")?,
+        None => 0.0,
+    };
+    let stops = match v.get("stop") {
+        Some(s) => Some(token_array(s, "stop")?),
+        None => None,
+    };
+    let eos = match v.get("eos") {
+        Some(e) => {
+            let n = e.as_f64().ok_or("eos must be a number")?;
+            if n.fract() != 0.0 || !(0.0..=u16::MAX as f64).contains(&n) {
+                return Err("eos must be an integer in 0..=65535".into());
+            }
+            Some(n as u16)
+        }
+        None => None,
+    };
+    let stop = match (stops, eos) {
+        (None, None) => None,
+        (stops, eos) => Some(StopSet { eos, stops: stops.unwrap_or_default() }),
+    };
+    let tenant = match v.get("tenant") {
+        Some(t) => t.as_str().ok_or("tenant must be a string")?.to_string(),
+        None => "default".to_string(),
+    };
+    let stream = match v.get("stream") {
+        Some(s) => s.as_bool().ok_or("stream must be a boolean")?,
+        None => true,
+    };
+    Ok(GenerateSpec { tenant, prompt, max_new, temperature, stop, stream })
+}
+
+// ---------------------------------------------------------------------------
+// Response writing.
+// ---------------------------------------------------------------------------
+
+fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+fn write_plain(w: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason_phrase(status),
+        body.len(),
+        body
+    )?;
+    w.flush()
+}
+
+fn write_json(w: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason_phrase(status),
+        body.len(),
+        body
+    )?;
+    w.flush()
+}
+
+fn write_chunk(w: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    write!(w, "{:x}\r\n{}\r\n", data.len(), data)?;
+    w.flush()
+}
+
+fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::Stop => "stop",
+        FinishReason::Eos => "eos",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+fn ids_json(ids: &[u16]) -> String {
+    let mut s = String::from("[");
+    for (i, id) in ids.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&id.to_string());
+    }
+    s.push(']');
+    s
+}
+
+/// HTTP status for a refused submission.
+fn submit_status(e: &ServeError) -> u16 {
+    match e {
+        ServeError::TenantOverloaded { .. } => 429,
+        ServeError::ShuttingDown => 503,
+        ServeError::WorkerGone | ServeError::InvalidConfig(_) => 500,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling.
+// ---------------------------------------------------------------------------
+
+/// Read one request (tolerating arbitrary read()-boundary splits),
+/// route it, write the response. One request per connection
+/// (`Connection: close`) — the protocol surface stays minimal.
+fn handle_conn(server: &Server, mut stream: TcpStream, opts: &NetOptions, stop: &AtomicBool) {
+    let _ = stream.set_read_timeout(Some(opts.read_timeout));
+    let mut buf: Vec<u8> = Vec::new();
+    let req = loop {
+        match parse_http(&buf, opts) {
+            Parse::Ready(r) => break r,
+            Parse::Bad { status, reason } => {
+                let _ = write_plain(&mut stream, status, &format!("{reason}\n"));
+                return;
+            }
+            Parse::NeedMore => {}
+        }
+        if stop.load(Ordering::SeqCst) {
+            return; // shutting down before a full request arrived
+        }
+        let mut tmp = [0u8; 4096];
+        match stream.read(&mut tmp) {
+            Ok(0) => return, // client closed mid-request
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => continue,
+            Err(_) => return,
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/generate") => handle_generate(server, &mut stream, &req.body, opts),
+        ("GET", "/healthz") => {
+            let _ = write_plain(&mut stream, 200, "ok\n");
+        }
+        ("GET", "/metrics") => {
+            let tenants = server.metrics.tenant_summary();
+            let body = if tenants.is_empty() {
+                format!("{}\n", server.metrics.summary())
+            } else {
+                format!("{}\n{}\n", server.metrics.summary(), tenants)
+            };
+            let _ = write_plain(&mut stream, 200, &body);
+        }
+        _ => {
+            let _ = write_plain(&mut stream, 404, "not found\n");
+        }
+    }
+}
+
+fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], opts: &NetOptions) {
+    let spec = match generate_spec(body, opts) {
+        Ok(s) => s,
+        Err(msg) => {
+            let _ = write_plain(stream, 400, &format!("{msg}\n"));
+            return;
+        }
+    };
+    if spec.stream {
+        let (stx, srx) = channel();
+        let rrx = match server.submit_qos(
+            &spec.tenant,
+            spec.prompt,
+            spec.max_new,
+            spec.temperature,
+            spec.stop,
+            Some(stx),
+        ) {
+            Ok(rrx) => rrx,
+            Err(e) => {
+                let _ = write_plain(stream, submit_status(&e), &format!("{e}\n"));
+                return;
+            }
+        };
+        if write!(
+            stream,
+            "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        )
+        .and_then(|_| stream.flush())
+        .is_err()
+        {
+            return; // client gone; the generation still completes server-side
+        }
+        let mut client_gone = false;
+        loop {
+            match srx.recv_timeout(Duration::from_millis(200)) {
+                Ok(tok) => {
+                    if !client_gone
+                        && write_chunk(stream, &format!("data: {{\"token\":{tok}}}\n\n")).is_err()
+                    {
+                        // Keep draining the channel so the worker's
+                        // sends never error into a closed buffer, but
+                        // stop writing.
+                        client_gone = true;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // The stream sender is dropped only after the response is
+        // delivered, so the final response is already here.
+        if let Ok(r) = rrx.recv_timeout(Duration::from_secs(10)) {
+            if !client_gone {
+                let done = format!(
+                    "data: {{\"done\":true,\"finish\":\"{}\",\"prompt_len\":{},\"tokens\":{}}}\n\n",
+                    finish_str(r.finish),
+                    r.prompt_len,
+                    ids_json(&r.tokens[r.prompt_len..])
+                );
+                let _ = write_chunk(stream, &done);
+                let _ = write!(stream, "0\r\n\r\n");
+                let _ = stream.flush();
+            }
+        }
+    } else {
+        let rrx = match server.submit_qos(
+            &spec.tenant,
+            spec.prompt,
+            spec.max_new,
+            spec.temperature,
+            spec.stop,
+            None,
+        ) {
+            Ok(rrx) => rrx,
+            Err(e) => {
+                let _ = write_plain(stream, submit_status(&e), &format!("{e}\n"));
+                return;
+            }
+        };
+        match rrx.recv() {
+            Ok(r) => {
+                let body = response_json(&r);
+                let _ = write_json(stream, 200, &body);
+            }
+            Err(_) => {
+                let _ = write_plain(stream, 500, "worker gone before responding\n");
+            }
+        }
+    }
+}
+
+fn response_json(r: &GenResponse) -> String {
+    format!(
+        "{{\"finish\":\"{}\",\"prompt_len\":{},\"tokens\":{}}}",
+        finish_str(r.finish),
+        r.prompt_len,
+        ids_json(&r.tokens)
+    )
+}
+
+// ---------------------------------------------------------------------------
+// The listener.
+// ---------------------------------------------------------------------------
+
+/// The TCP front-end: an acceptor thread plus one thread per live
+/// connection, all bridging onto a shared [`Server`].
+pub struct NetServer {
+    server: Arc<Server>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8090"`; port 0 = OS-assigned,
+    /// read back via [`NetServer::local_addr`]) and start accepting.
+    /// A bad address is [`ServeError::InvalidConfig`] — reported here,
+    /// not a panic in the acceptor thread.
+    pub fn bind(server: Arc<Server>, addr: &str, opts: NetOptions) -> Result<NetServer, ServeError> {
+        let sock: SocketAddr = addr
+            .parse()
+            .map_err(|e| ServeError::InvalidConfig(format!("listen address {addr:?}: {e}")))?;
+        let listener = TcpListener::bind(sock)
+            .map_err(|e| ServeError::InvalidConfig(format!("bind {sock}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| ServeError::InvalidConfig(format!("local_addr: {e}")))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let server = server.clone();
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break; // the shutdown self-connect lands here
+                    }
+                    let stream = match conn {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    // Reap finished handlers so a long-lived server
+                    // doesn't accumulate dead JoinHandles.
+                    {
+                        let mut guard = conns.lock().unwrap();
+                        let mut i = 0;
+                        while i < guard.len() {
+                            if guard[i].is_finished() {
+                                let h = guard.swap_remove(i);
+                                let _ = h.join();
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                    let server = server.clone();
+                    let stop = stop.clone();
+                    let opts = opts.clone();
+                    let h = std::thread::spawn(move || {
+                        handle_conn(&server, stream, &opts, &stop);
+                    });
+                    conns.lock().unwrap().push(h);
+                }
+            })
+        };
+        Ok(NetServer {
+            server,
+            addr: local,
+            stop,
+            acceptor: Mutex::new(Some(acceptor)),
+            conns,
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The server this front-end bridges onto.
+    pub fn server(&self) -> &Arc<Server> {
+        &self.server
+    }
+
+    /// Stop accepting, drain the engine within `drain`
+    /// ([`Server::shutdown_within`]) and join every connection thread.
+    /// In-flight clients get a final event (`finish: "cancelled"` past
+    /// the deadline) and a closed socket. Idempotent.
+    pub fn shutdown(&self, drain: Duration) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock accept() so the acceptor sees the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.lock().unwrap().take() {
+            let _ = a.join();
+        }
+        self.server.shutdown_within(drain);
+        let handles: Vec<JoinHandle<()>> = {
+            let mut guard = self.conns.lock().unwrap();
+            guard.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown(Duration::from_secs(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> NetOptions {
+        NetOptions::default()
+    }
+
+    fn http(s: &str) -> Parse {
+        parse_http(s.as_bytes(), &opts())
+    }
+
+    #[test]
+    fn parses_a_complete_post() {
+        let raw = "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        match http(raw) {
+            Parse::Ready(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/generate");
+                assert_eq!(r.body, b"abcd");
+            }
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn get_without_body_parses() {
+        match http("GET /healthz HTTP/1.1\r\n\r\n") {
+            Parse::Ready(r) => {
+                assert_eq!(r.method, "GET");
+                assert!(r.body.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_request_lines_are_400_not_panic() {
+        for raw in [
+            "\r\n\r\n",
+            "GARBAGE\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET /x\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x SMTP/1.0\r\n\r\n",
+            "GET /x HTTP/1.1\r\nno-colon-header\r\n\r\n",
+            "GET /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+        ] {
+            match http(raw) {
+                Parse::Bad { status, .. } => assert_eq!(status, 400, "{raw:?}"),
+                other => panic!("{raw:?} must be Bad(400), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_header_and_body_are_rejected() {
+        let huge = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(9000));
+        assert!(matches!(http(&huge), Parse::Bad { status: 431, .. }));
+        // Oversized without a terminator yet: reject as soon as the
+        // cap is exceeded — no unbounded buffering while waiting.
+        let endless = format!("GET /x HTTP/1.1\r\nX-Pad: {}", "a".repeat(9000));
+        assert!(matches!(http(&endless), Parse::Bad { status: 431, .. }));
+        let big_body =
+            format!("POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 10 * 1024 * 1024);
+        assert!(matches!(http(&big_body), Parse::Bad { status: 413, .. }));
+    }
+
+    #[test]
+    fn truncated_body_needs_more() {
+        let raw = "POST /g HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        assert_eq!(http(raw), Parse::NeedMore);
+        assert_eq!(http(""), Parse::NeedMore);
+        assert_eq!(http("POST /g HT"), Parse::NeedMore);
+    }
+
+    #[test]
+    fn byte_at_a_time_feed_matches_whole_buffer_parse() {
+        // Property: for every split point, the incremental result is
+        // NeedMore until the exact byte where the whole-buffer parse
+        // completes, then identical — reads can split anywhere.
+        let raw = "POST /generate HTTP/1.1\r\nContent-Length: 17\r\n\r\n{\"prompt\":[1,2,3]}";
+        let raw = &raw[..raw.len() - 1]; // body is 17 bytes: drop the final '}' padding
+        let full = parse_http(raw.as_bytes(), &opts());
+        assert!(matches!(full, Parse::Ready(_)), "{full:?}");
+        for cut in 0..raw.len() {
+            let partial = parse_http(&raw.as_bytes()[..cut], &opts());
+            assert_eq!(partial, Parse::NeedMore, "cut at {cut}");
+        }
+        assert_eq!(parse_http(raw.as_bytes(), &opts()), full);
+    }
+
+    #[test]
+    fn fuzzish_inputs_never_panic() {
+        // Deterministic pseudo-random byte soup through the parser:
+        // any outcome is fine, panicking is not.
+        let mut x: u64 = 0x9e3779b97f4a7c15;
+        for len in 0..512usize {
+            let mut bytes = Vec::with_capacity(len);
+            for _ in 0..len {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                bytes.push((x >> 24) as u8);
+            }
+            let _ = parse_http(&bytes, &opts());
+            let _ = parse_json(&bytes);
+        }
+    }
+
+    #[test]
+    fn json_values_parse() {
+        let v = parse_json(br#"{"a": [1, 2.5, -3], "b": "x\n", "c": true, "d": null}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x\n"));
+        assert_eq!(v.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("d"), Some(&Json::Null));
+        assert_eq!(v.get("missing"), None);
+        assert_eq!(parse_json(br#""\u0041""#).unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn json_rejects_garbage_cleanly() {
+        for bad in [
+            &b"{"[..],
+            b"[1, 2",
+            b"{\"a\" 1}",
+            b"{\"a\": }",
+            b"tru",
+            b"\"unterminated",
+            b"1 2",
+            b"{\"a\":1} trailing",
+            b"",
+            b"\"\\u00\"",
+            b"\"\\q\"",
+        ] {
+            assert!(parse_json(bad).is_err(), "{:?}", String::from_utf8_lossy(bad));
+        }
+        // Depth cap: 40 nested arrays exceed JSON_MAX_DEPTH.
+        let deep = format!("{}1{}", "[".repeat(40), "]".repeat(40));
+        assert!(parse_json(deep.as_bytes()).unwrap_err().contains("deep"));
+    }
+
+    #[test]
+    fn generate_spec_defaults_and_validation() {
+        let o = opts();
+        let s = generate_spec(br#"{"prompt": [1, 2, 3]}"#, &o).unwrap();
+        assert_eq!(s.prompt, vec![1, 2, 3]);
+        assert_eq!(s.max_new, o.default_max_new);
+        assert_eq!(s.temperature, 0.0);
+        assert_eq!(s.stop, None, "no stop/eos fields = server default stop set");
+        assert_eq!(s.tenant, "default");
+        assert!(s.stream, "streaming is the default");
+        let s = generate_spec(
+            br#"{"prompt": [7], "max_new": 4, "temperature": 0.5, "stop": [10],
+                 "eos": 2, "tenant": "alice", "stream": false}"#,
+            &o,
+        )
+        .unwrap();
+        assert_eq!(s.max_new, 4);
+        assert_eq!(s.temperature, 0.5);
+        assert_eq!(s.stop, Some(StopSet { eos: Some(2), stops: vec![10] }));
+        assert_eq!(s.tenant, "alice");
+        assert!(!s.stream);
+        // Eos alone still builds a stop set.
+        let s = generate_spec(br#"{"prompt": [7], "eos": 2}"#, &o).unwrap();
+        assert_eq!(s.stop, Some(StopSet { eos: Some(2), stops: vec![] }));
+        for bad in [
+            &br#"{}"#[..],
+            br#"{"prompt": []}"#,
+            br#"{"prompt": "text"}"#,
+            br#"{"prompt": [70000]}"#,
+            br#"{"prompt": [1.5]}"#,
+            br#"{"prompt": [-1]}"#,
+            br#"{"prompt": [1], "max_new": 0}"#,
+            br#"{"prompt": [1], "max_new": "lots"}"#,
+            br#"{"prompt": [1], "stream": "yes"}"#,
+            br#"{"prompt": [1], "tenant": 7}"#,
+            br#"not json at all"#,
+        ] {
+            assert!(generate_spec(bad, &o).is_err(), "{:?}", String::from_utf8_lossy(bad));
+        }
+    }
+
+    #[test]
+    fn wire_helpers_format_correctly() {
+        assert_eq!(ids_json(&[1, 22, 333]), "[1,22,333]");
+        assert_eq!(ids_json(&[]), "[]");
+        assert_eq!(finish_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(reason_phrase(429), "Too Many Requests");
+        assert_eq!(
+            submit_status(&ServeError::TenantOverloaded { tenant: "x".into() }),
+            429
+        );
+        assert_eq!(submit_status(&ServeError::ShuttingDown), 503);
+        assert_eq!(submit_status(&ServeError::WorkerGone), 500);
+    }
+}

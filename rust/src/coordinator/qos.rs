@@ -1,0 +1,616 @@
+//! Multi-tenant QoS: the tenant table, pluggable admission policies
+//! (global FIFO vs weighted round-robin within priority classes), and
+//! the pluggable eviction policy the scheduler preempts with under
+//! KV-pool pressure.
+//!
+//! **Admission.** The scheduler's single FIFO pending queue becomes a
+//! [`PendingQueues`] value: under [`AdmitPolicy::Fifo`] it behaves
+//! exactly as before (global arrival order, tenant-blind — the bench's
+//! fairness control); under [`AdmitPolicy::WeightedRoundRobin`] each
+//! tenant gets its own queue and the drain order is: most urgent
+//! priority class with waiting work first, then deficit-style weighted
+//! round-robin across that class's tenants. A flooding tenant can
+//! therefore fill the queue *behind* itself but never starve a
+//! well-behaved peer: the peer's next request is at the front of its
+//! own queue and the round-robin cursor reaches it within one
+//! weight-cycle.
+//!
+//! **Backpressure.** Each tenant may bound its pending depth
+//! (`max_pending`); the server rejects overflow at submit time with
+//! `ServeError::TenantOverloaded` (HTTP 429 on the wire) instead of
+//! buffering without bound. The shared [`QosState`] counters make that
+//! check O(1) on the submit path without locking the scheduler.
+//!
+//! **Eviction.** PR 5's hard-coded newest-slot preemption generalizes
+//! to the [`EvictionPolicy`] trait: a policy maps each in-flight slot
+//! to a strictly-totally-ordered *eviction key*, and the scheduler
+//! preempts the eligible slot with the **largest** key — but only if
+//! that key is strictly greater than the requesting slot's own key.
+//! The slot with the minimum key can therefore never be preempted, so
+//! some request always makes progress and the pool can never
+//! live-lock, whatever the policy (the same progress guarantee the
+//! newest-slot rule gave, now an invariant of the key ordering).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::server::GenRequest;
+
+/// One tenant's service contract.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantSpec {
+    /// Tenant id (the `tenant` field of a wire request).
+    pub id: String,
+    /// Weighted-round-robin weight within the priority class (>= 1):
+    /// a weight-3 tenant drains three requests per cycle for every
+    /// one of a weight-1 peer.
+    pub weight: u32,
+    /// Priority class, 0 = most urgent. Admission always serves the
+    /// most urgent class with waiting work; classes do not share.
+    pub priority: u8,
+    /// Max requests queued (submitted but not yet slotted); 0 =
+    /// unbounded. Overflow is rejected at submit time (429 on the
+    /// wire), not buffered.
+    pub max_pending: usize,
+}
+
+impl TenantSpec {
+    /// A weight-1, class-0, unbounded tenant.
+    pub fn new(id: &str) -> TenantSpec {
+        TenantSpec { id: id.to_string(), weight: 1, priority: 0, max_pending: 0 }
+    }
+}
+
+/// How pending requests are drained into scheduler slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmitPolicy {
+    /// Global arrival order, tenant-blind (the pre-QoS behavior; kept
+    /// selectable as the fairness baseline the bench compares
+    /// against).
+    #[default]
+    Fifo,
+    /// Most urgent priority class first; weighted round-robin across
+    /// tenants within the class.
+    WeightedRoundRobin,
+}
+
+impl AdmitPolicy {
+    pub fn parse(s: &str) -> Result<AdmitPolicy, String> {
+        match s {
+            "fifo" => Ok(AdmitPolicy::Fifo),
+            "wrr" | "weighted-round-robin" => Ok(AdmitPolicy::WeightedRoundRobin),
+            other => Err(format!("unknown admission policy {other:?} (expected fifo|wrr)")),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmitPolicy::Fifo => "fifo",
+            AdmitPolicy::WeightedRoundRobin => "wrr",
+        }
+    }
+}
+
+/// Which eviction policy the scheduler preempts with when a slot needs
+/// KV blocks and the pool is out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EvictionKind {
+    /// Evict the most recently admitted slot (PR 5's rule).
+    #[default]
+    Newest,
+    /// Evict the least urgent (highest `priority` value) slot; ties
+    /// break newest-first.
+    LowestPriority,
+    /// Evict the slot holding the most KV blocks (frees the most
+    /// memory per preemption); ties break newest-first.
+    LargestKv,
+}
+
+impl EvictionKind {
+    pub fn parse(s: &str) -> Result<EvictionKind, String> {
+        match s {
+            "newest" => Ok(EvictionKind::Newest),
+            "lowest-priority" => Ok(EvictionKind::LowestPriority),
+            "largest-kv" => Ok(EvictionKind::LargestKv),
+            other => Err(format!(
+                "unknown eviction policy {other:?} (expected newest|lowest-priority|largest-kv)"
+            )),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EvictionKind::Newest => "newest",
+            EvictionKind::LowestPriority => "lowest-priority",
+            EvictionKind::LargestKv => "largest-kv",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn policy(self) -> Box<dyn EvictionPolicy> {
+        match self {
+            EvictionKind::Newest => Box::new(EvictNewest),
+            EvictionKind::LowestPriority => Box::new(EvictLowestPriority),
+            EvictionKind::LargestKv => Box::new(EvictLargestKv),
+        }
+    }
+}
+
+/// What an eviction policy sees of one in-flight slot.
+#[derive(Debug, Clone, Copy)]
+pub struct SlotView {
+    /// Admission sequence number (unique per slot — the tiebreaker
+    /// that makes every key ordering strict).
+    pub admitted: u64,
+    /// Priority class of the slot's tenant (0 = most urgent).
+    pub priority: u8,
+    /// KV blocks the slot currently holds.
+    pub kv_blocks: usize,
+}
+
+/// Maps a slot to its eviction key. The scheduler preempts the
+/// eligible slot with the largest key, and only when that key is
+/// strictly greater than the requester's: because `admitted` is unique
+/// the ordering is strict, the minimum-key slot is unevictable, and
+/// progress is guaranteed under any policy.
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+    /// Larger key = evicted sooner. The second component must make
+    /// ties impossible (conventionally `admitted`).
+    fn key(&self, s: &SlotView) -> (u64, u64);
+}
+
+/// PR 5's rule: newest admission goes first.
+pub struct EvictNewest;
+
+impl EvictionPolicy for EvictNewest {
+    fn name(&self) -> &'static str {
+        "newest"
+    }
+    fn key(&self, s: &SlotView) -> (u64, u64) {
+        (0, s.admitted)
+    }
+}
+
+/// Least urgent tenant goes first; newest-first within a class.
+pub struct EvictLowestPriority;
+
+impl EvictionPolicy for EvictLowestPriority {
+    fn name(&self) -> &'static str {
+        "lowest-priority"
+    }
+    fn key(&self, s: &SlotView) -> (u64, u64) {
+        (s.priority as u64, s.admitted)
+    }
+}
+
+/// Biggest KV footprint goes first (most memory freed per preemption);
+/// newest-first among equals.
+pub struct EvictLargestKv;
+
+impl EvictionPolicy for EvictLargestKv {
+    fn name(&self) -> &'static str {
+        "largest-kv"
+    }
+    fn key(&self, s: &SlotView) -> (u64, u64) {
+        (s.kv_blocks as u64, s.admitted)
+    }
+}
+
+/// The full QoS configuration a server runs with.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QosConfig {
+    pub admission: AdmitPolicy,
+    pub eviction: EvictionKind,
+    /// Tenant table; requests resolve against it by id (unknown ids
+    /// ride tenant 0). Never empty after validation.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for QosConfig {
+    /// Single anonymous tenant, FIFO, newest-slot eviction — exactly
+    /// the pre-QoS behavior.
+    fn default() -> QosConfig {
+        QosConfig {
+            admission: AdmitPolicy::Fifo,
+            eviction: EvictionKind::Newest,
+            tenants: vec![TenantSpec::new("default")],
+        }
+    }
+}
+
+impl QosConfig {
+    /// Reject configurations the scheduler cannot serve correctly:
+    /// no tenants at all, empty ids, duplicate ids, zero weights (a
+    /// zero-weight tenant would never earn WRR credit and starve).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants.is_empty() {
+            return Err("qos: at least one tenant is required".to_string());
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.id.trim().is_empty() {
+                return Err(format!("qos: tenant #{i} has an empty id"));
+            }
+            if t.weight == 0 {
+                return Err(format!("qos: tenant {:?} has zero weight", t.id));
+            }
+            if self.tenants[..i].iter().any(|u| u.id == t.id) {
+                return Err(format!("qos: duplicate tenant id {:?}", t.id));
+            }
+        }
+        Ok(())
+    }
+
+    /// Index of `id` in the tenant table.
+    pub fn tenant_index(&self, id: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.id == id)
+    }
+}
+
+/// QoS state shared between the submit path (server handle threads)
+/// and the scheduler (worker thread): the immutable config plus the
+/// per-tenant pending-depth counters behind the `max_pending` bound.
+#[derive(Debug)]
+pub struct QosState {
+    pub config: QosConfig,
+    /// Requests submitted but not yet slotted (incremented at submit,
+    /// decremented when the scheduler dequeues), one per tenant.
+    pub queued: Vec<AtomicU64>,
+}
+
+impl QosState {
+    pub fn new(config: QosConfig) -> QosState {
+        let queued = config.tenants.iter().map(|_| AtomicU64::new(0)).collect();
+        QosState { config, queued }
+    }
+
+    /// Current pending depth for tenant index `t` (clamped in-range).
+    pub fn queued_for(&self, t: usize) -> u64 {
+        self.queued[t.min(self.queued.len() - 1)].load(Ordering::Relaxed)
+    }
+
+    /// Count one dequeue (slot admission, rejection or cancellation)
+    /// for tenant index `t`. Saturates at zero: requests admitted
+    /// directly into a bare `Scheduler` never went through the submit
+    /// path's increment.
+    pub fn note_dequeued(&self, t: usize) {
+        let c = &self.queued[t.min(self.queued.len() - 1)];
+        let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
+    }
+}
+
+impl Default for QosState {
+    fn default() -> QosState {
+        QosState::new(QosConfig::default())
+    }
+}
+
+/// The scheduler's pending set, drained according to the admission
+/// policy. Single-threaded (owned by the scheduler); the cross-thread
+/// surface is [`QosState`].
+pub struct PendingQueues {
+    policy: AdmitPolicy,
+    weights: Vec<u64>,
+    priorities: Vec<u8>,
+    /// FIFO mode: one global arrival-ordered queue.
+    fifo: VecDeque<GenRequest>,
+    /// WRR mode: one queue per tenant.
+    queues: Vec<VecDeque<GenRequest>>,
+    /// Deficit credits, replenished a weight per cycle; reset to zero
+    /// when a tenant's queue drains so idle tenants cannot hoard
+    /// credit and burst later.
+    credits: Vec<u64>,
+    /// Round-robin cursor: the tenant index the next scan starts from.
+    cursor: usize,
+    count: usize,
+}
+
+impl PendingQueues {
+    pub fn new(cfg: &QosConfig) -> PendingQueues {
+        let n = cfg.tenants.len().max(1);
+        PendingQueues {
+            policy: cfg.admission,
+            weights: cfg.tenants.iter().map(|t| t.weight as u64).collect(),
+            priorities: cfg.tenants.iter().map(|t| t.priority).collect(),
+            fifo: VecDeque::new(),
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            credits: vec![0; n],
+            cursor: 0,
+            count: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    fn tenant_of(&self, req: &GenRequest) -> usize {
+        (req.tenant as usize).min(self.queues.len() - 1)
+    }
+
+    pub fn push(&mut self, req: GenRequest) {
+        self.count += 1;
+        match self.policy {
+            AdmitPolicy::Fifo => self.fifo.push_back(req),
+            AdmitPolicy::WeightedRoundRobin => {
+                let t = self.tenant_of(&req);
+                self.queues[t].push_back(req);
+            }
+        }
+    }
+
+    /// The tenant the next `pop` will serve. Deterministic in the
+    /// queue state: calling it twice (or `peek` then `pop`) selects
+    /// the same tenant, because replenishment is idempotent once a
+    /// tenant in the urgent class holds credit.
+    fn select(&mut self) -> Option<usize> {
+        if self.count == 0 {
+            return None;
+        }
+        let cls = (0..self.queues.len())
+            .filter(|&t| !self.queues[t].is_empty())
+            .map(|t| self.priorities[t])
+            .min()?;
+        let n = self.queues.len();
+        // Pass 1 with current credits; if the whole class is out,
+        // replenish once and pass 2 must hit (weights are >= 1).
+        for round in 0..2 {
+            for k in 0..n {
+                let t = (self.cursor + k) % n;
+                if self.priorities[t] == cls && !self.queues[t].is_empty() && self.credits[t] > 0 {
+                    return Some(t);
+                }
+            }
+            if round == 0 {
+                for t in 0..n {
+                    if self.priorities[t] != cls {
+                        continue;
+                    }
+                    self.credits[t] = if self.queues[t].is_empty() {
+                        0
+                    } else {
+                        self.credits[t].saturating_add(self.weights[t])
+                    };
+                }
+            }
+        }
+        None
+    }
+
+    /// Next request under the policy, without removing it.
+    pub fn peek(&mut self) -> Option<&GenRequest> {
+        match self.policy {
+            AdmitPolicy::Fifo => self.fifo.front(),
+            AdmitPolicy::WeightedRoundRobin => {
+                let t = self.select()?;
+                self.queues[t].front()
+            }
+        }
+    }
+
+    /// Remove and return the next request under the policy.
+    pub fn pop(&mut self) -> Option<GenRequest> {
+        match self.policy {
+            AdmitPolicy::Fifo => {
+                let req = self.fifo.pop_front()?;
+                self.count -= 1;
+                Some(req)
+            }
+            AdmitPolicy::WeightedRoundRobin => {
+                let t = self.select()?;
+                let req = self.queues[t].pop_front()?;
+                self.credits[t] = self.credits[t].saturating_sub(1);
+                if self.queues[t].is_empty() {
+                    self.credits[t] = 0;
+                }
+                if self.credits[t] == 0 {
+                    // Cycle on: the next scan starts at the next
+                    // tenant, so equal-weight peers alternate.
+                    self.cursor = (t + 1) % self.queues.len();
+                }
+                self.count -= 1;
+                Some(req)
+            }
+        }
+    }
+
+    /// Remove everything (graceful-drain cancellation path).
+    pub fn drain_all(&mut self) -> Vec<GenRequest> {
+        let mut out: Vec<GenRequest> = self.fifo.drain(..).collect();
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        self.count = 0;
+        self.credits.iter_mut().for_each(|c| *c = 0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::StopSet;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(tenant: u32, tag: u16) -> GenRequest {
+        let (tx, _rx) = channel();
+        GenRequest {
+            prompt: vec![tag],
+            max_new_tokens: 1,
+            temperature: 0.0,
+            stop: StopSet::none(),
+            stream: None,
+            respond: tx,
+            submitted: Instant::now(),
+            tenant,
+        }
+    }
+
+    fn cfg(tenants: Vec<TenantSpec>, admission: AdmitPolicy) -> QosConfig {
+        QosConfig { admission, eviction: EvictionKind::Newest, tenants }
+    }
+
+    fn tenant(id: &str, weight: u32, priority: u8) -> TenantSpec {
+        TenantSpec { id: id.into(), weight, priority, max_pending: 0 }
+    }
+
+    #[test]
+    fn validation_rejects_bad_tables() {
+        assert!(QosConfig::default().validate().is_ok());
+        let empty = QosConfig { tenants: vec![], ..QosConfig::default() };
+        assert!(empty.validate().unwrap_err().contains("at least one"));
+        let zero = cfg(vec![tenant("a", 0, 0)], AdmitPolicy::Fifo);
+        assert!(zero.validate().unwrap_err().contains("zero weight"));
+        let dup = cfg(vec![tenant("a", 1, 0), tenant("a", 2, 0)], AdmitPolicy::Fifo);
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+        let blank = cfg(vec![tenant("  ", 1, 0)], AdmitPolicy::Fifo);
+        assert!(blank.validate().unwrap_err().contains("empty id"));
+    }
+
+    #[test]
+    fn fifo_preserves_arrival_order_across_tenants() {
+        let c = cfg(vec![tenant("a", 1, 0), tenant("b", 1, 0)], AdmitPolicy::Fifo);
+        let mut q = PendingQueues::new(&c);
+        q.push(req(1, 10));
+        q.push(req(0, 20));
+        q.push(req(1, 30));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek().unwrap().prompt, vec![10]);
+        let order: Vec<u16> = std::iter::from_fn(|| q.pop()).map(|r| r.prompt[0]).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn wrr_alternates_equal_weights() {
+        let c = cfg(
+            vec![tenant("a", 1, 0), tenant("b", 1, 0)],
+            AdmitPolicy::WeightedRoundRobin,
+        );
+        let mut q = PendingQueues::new(&c);
+        // Tenant 0 floods; tenant 1 queues two.
+        for i in 0..4 {
+            q.push(req(0, i));
+        }
+        q.push(req(1, 100));
+        q.push(req(1, 101));
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|r| r.tenant).collect();
+        // Alternation until tenant 1 drains, then tenant 0's backlog.
+        assert_eq!(order, vec![0, 1, 0, 1, 0, 0]);
+    }
+
+    #[test]
+    fn wrr_weights_bias_the_cycle() {
+        let c = cfg(
+            vec![tenant("heavy", 3, 0), tenant("light", 1, 0)],
+            AdmitPolicy::WeightedRoundRobin,
+        );
+        let mut q = PendingQueues::new(&c);
+        for i in 0..6 {
+            q.push(req(0, i));
+        }
+        for i in 0..2 {
+            q.push(req(1, 100 + i));
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|r| r.tenant).collect();
+        // 3:1 within each cycle while both queues are non-empty.
+        assert_eq!(order, vec![0, 0, 0, 1, 0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn priority_class_preempts_lower_class() {
+        let c = cfg(
+            vec![tenant("bulk", 9, 1), tenant("urgent", 1, 0)],
+            AdmitPolicy::WeightedRoundRobin,
+        );
+        let mut q = PendingQueues::new(&c);
+        for i in 0..3 {
+            q.push(req(0, i));
+        }
+        assert_eq!(q.pop().unwrap().tenant, 0, "bulk serves while urgent is idle");
+        q.push(req(1, 100));
+        q.push(req(1, 101));
+        // Urgent (class 0) drains completely before bulk resumes,
+        // regardless of bulk's weight.
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).map(|r| r.tenant).collect();
+        assert_eq!(order, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn peek_and_pop_agree() {
+        let c = cfg(
+            vec![tenant("a", 2, 0), tenant("b", 1, 0)],
+            AdmitPolicy::WeightedRoundRobin,
+        );
+        let mut q = PendingQueues::new(&c);
+        for i in 0..3 {
+            q.push(req(0, i));
+            q.push(req(1, 100 + i));
+        }
+        while !q.is_empty() {
+            let want = q.peek().unwrap().prompt.clone();
+            let got = q.pop().unwrap();
+            assert_eq!(got.prompt, want, "peek must predict pop");
+        }
+    }
+
+    #[test]
+    fn drain_all_empties_every_queue() {
+        let c = cfg(
+            vec![tenant("a", 1, 0), tenant("b", 1, 1)],
+            AdmitPolicy::WeightedRoundRobin,
+        );
+        let mut q = PendingQueues::new(&c);
+        for i in 0..3 {
+            q.push(req(i % 2, i as u16));
+        }
+        assert_eq!(q.drain_all().len(), 3);
+        assert!(q.is_empty());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn unknown_tenant_index_rides_the_last_queue() {
+        // Out-of-range indices clamp instead of panicking (direct
+        // Scheduler users can construct GenRequest by hand).
+        let c = cfg(vec![tenant("only", 1, 0)], AdmitPolicy::WeightedRoundRobin);
+        let mut q = PendingQueues::new(&c);
+        q.push(req(999, 1));
+        assert_eq!(q.pop().unwrap().prompt, vec![1]);
+    }
+
+    #[test]
+    fn eviction_keys_order_as_documented() {
+        let older_small_urgent = SlotView { admitted: 1, priority: 0, kv_blocks: 2 };
+        let newer_big_bulk = SlotView { admitted: 5, priority: 2, kv_blocks: 7 };
+        let newest_mid = SlotView { admitted: 9, priority: 1, kv_blocks: 4 };
+        let newest = EvictionKind::Newest.policy();
+        assert!(newest.key(&newest_mid) > newest.key(&newer_big_bulk));
+        assert!(newest.key(&newer_big_bulk) > newest.key(&older_small_urgent));
+        let prio = EvictionKind::LowestPriority.policy();
+        assert!(prio.key(&newer_big_bulk) > prio.key(&newest_mid), "class outranks recency");
+        assert!(prio.key(&newest_mid) > prio.key(&older_small_urgent));
+        let kv = EvictionKind::LargestKv.policy();
+        assert!(kv.key(&newer_big_bulk) > kv.key(&newest_mid), "footprint outranks recency");
+        assert_eq!(kv.name(), "largest-kv");
+        assert_eq!(EvictionKind::parse("lowest-priority"), Ok(EvictionKind::LowestPriority));
+        assert!(EvictionKind::parse("nope").is_err());
+        assert_eq!(AdmitPolicy::parse("wrr"), Ok(AdmitPolicy::WeightedRoundRobin));
+        assert!(AdmitPolicy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn qos_state_counters_saturate_at_zero() {
+        let s = QosState::new(cfg(vec![tenant("a", 1, 0)], AdmitPolicy::Fifo));
+        s.note_dequeued(0); // never incremented: must not underflow
+        assert_eq!(s.queued_for(0), 0);
+        s.queued[0].store(2, Ordering::Relaxed);
+        s.note_dequeued(0);
+        assert_eq!(s.queued_for(0), 1);
+    }
+}

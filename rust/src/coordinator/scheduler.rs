@@ -15,35 +15,44 @@
 //! its request channel non-blockingly before each round (see
 //! [`Scheduler::admit_ready`]) up to `max_batch` in-flight slots.
 //!
-//! **Memory-aware admission (DESIGN.md §8).** Requests wait in a FIFO
-//! pending queue until a slot is free **and** the pool has free blocks
-//! for their prompt — no worst-case reservation: blocks are allocated
-//! incrementally as sequences grow, so the pool oversubscribes
-//! generation headroom and sustains strictly more in-flight requests
-//! than `prompt + max_new + 1` reservation would. When growth does
-//! exhaust the pool mid-flight, the *newest* slot is preempted
-//! (blocks released, state reset to re-prefill its accumulated tokens
-//! when memory frees up — recompute, not swap), so the oldest request
-//! always makes progress and every request eventually retires; a full
-//! pool defers admission rather than panicking. Prompts that share a
-//! token prefix share refcounted pool blocks (attached at admission,
-//! registered after prefill) instead of recomputing them.
+//! **Multi-tenant admission (DESIGN.md §9).** Requests wait in
+//! [`PendingQueues`] until a slot is free **and** the pool has free
+//! blocks for their prompt. Under the default FIFO policy this is the
+//! PR 4/5 behavior exactly; under weighted round-robin each tenant
+//! queues separately and admission drains the most urgent priority
+//! class first, weight-proportionally within it — a flooding tenant
+//! deepens only its own queue. Admission still reserves the *prompt*
+//! footprint only: generation headroom is allocated incrementally
+//! (the oversubscription that beats worst-case reservation).
+//!
+//! **Memory pressure (DESIGN.md §8).** When growth exhausts the pool
+//! mid-flight, the [`EvictionPolicy`] picks a victim: the eligible
+//! slot with the *largest eviction key*, and only if that key is
+//! strictly greater than the requester's own — so the minimum-key
+//! slot is unevictable and some request always makes progress, under
+//! any policy. The default `newest` policy reproduces PR 5's
+//! newest-slot rule bit for bit. Preemption releases the victim's
+//! blocks and resets it to re-prefill its accumulated tokens
+//! (recompute, not swap); a full pool defers admission rather than
+//! panicking. Prompts that share a token prefix share refcounted pool
+//! blocks.
 //!
 //! **Determinism contract:** with greedy sampling (temperature 0) a
 //! request's output tokens are bit-identical regardless of what else
 //! is in flight — including across preemption/re-prefill (prefill ≡
 //! repeated decode, so recompute reproduces the dropped state
 //! exactly) and prefix sharing (a shared block holds exactly the
-//! bytes the attaching request would have computed). Pinned by tests
-//! here and in `rust/tests/scheduling.rs` /
+//! bytes the attaching request would have computed). QoS reorders
+//! *which* request runs when, never *what* a request computes. Pinned
+//! by tests here and in `rust/tests/scheduling.rs` /
 //! `rust/tests/batch_equivalence.rs`.
 
-use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::metrics::Metrics;
+use super::qos::{EvictionPolicy, PendingQueues, QosState, SlotView};
 use super::server::{FinishReason, GenRequest, GenResponse};
 use crate::model::kvcache::{KvPool, PagedKvCache, PoolConfig};
 use crate::model::Transformer;
@@ -75,14 +84,23 @@ struct Slot {
     /// Effective generation cap (request's `max_new_tokens`, clamped
     /// so the sequence can always fit the pool alone).
     max_new: usize,
-    /// Admission order; preemption always evicts the newest.
+    /// Admission order (unique — the eviction keys' tiebreaker).
     admitted: u64,
+    /// Resolved tenant index (clamped into the tenant table).
+    tenant: usize,
+    /// The tenant's priority class (0 = most urgent), for
+    /// [`EvictionPolicy`] keys.
+    priority: u8,
     /// Submit → slot admission.
     queue_wait: Duration,
     /// Submit → first generated token (zero until the first token).
     ttft: Duration,
     /// When the previous token was accepted (inter-token gaps).
     last_token_at: Option<Instant>,
+}
+
+fn view(s: &Slot) -> SlotView {
+    SlotView { admitted: s.admitted, priority: s.priority, kv_blocks: s.cache.blocks() }
 }
 
 /// Continuous-batching scheduler. [`Server`](super::server::Server)
@@ -95,8 +113,14 @@ pub struct Scheduler {
     prefill_chunk: usize,
     pool: KvPool,
     slots: Vec<Slot>,
-    /// FIFO of requests waiting for a slot + pool memory.
-    pending: VecDeque<GenRequest>,
+    /// Requests waiting for a slot + pool memory, ordered by the
+    /// admission policy (FIFO or per-tenant WRR).
+    pending: PendingQueues,
+    /// Shared QoS state (tenant table + pending-depth counters the
+    /// server's submit path bounds against).
+    qos: Arc<QosState>,
+    /// Preemption victim selection under pool pressure.
+    evict: Box<dyn EvictionPolicy>,
     admit_seq: u64,
     /// The queue head is currently parked on pool memory — dedupes
     /// the admission-deferral counter to one event per parked
@@ -123,7 +147,8 @@ impl Scheduler {
 
     /// [`Scheduler::new`] with an explicit KV pool shape. A
     /// `budget_blocks` of 0 auto-sizes to `max_batch` worst-case
-    /// sequences.
+    /// sequences. Default QoS: single tenant, FIFO, newest-slot
+    /// eviction.
     pub fn with_pool(
         model: Transformer,
         metrics: Arc<Metrics>,
@@ -131,8 +156,25 @@ impl Scheduler {
         prefill_chunk: usize,
         pool_cfg: PoolConfig,
     ) -> Scheduler {
+        Self::with_qos(model, metrics, max_batch, prefill_chunk, pool_cfg, Arc::new(QosState::default()))
+    }
+
+    /// Fully-explicit construction: pool shape plus shared QoS state
+    /// (tenant table, admission policy, eviction policy). The server
+    /// shares `qos` with its submit path; direct users may pass a
+    /// fresh `QosState`.
+    pub fn with_qos(
+        model: Transformer,
+        metrics: Arc<Metrics>,
+        max_batch: usize,
+        prefill_chunk: usize,
+        pool_cfg: PoolConfig,
+        qos: Arc<QosState>,
+    ) -> Scheduler {
         let max_batch = max_batch.max(1);
         let pool = model.new_pool(&pool_cfg, max_batch);
+        let pending = PendingQueues::new(&qos.config);
+        let evict = qos.config.eviction.policy();
         let s = Scheduler {
             model,
             metrics,
@@ -140,7 +182,9 @@ impl Scheduler {
             prefill_chunk: prefill_chunk.max(1),
             pool,
             slots: Vec::new(),
-            pending: VecDeque::new(),
+            pending,
+            qos,
+            evict,
             admit_seq: 0,
             head_deferred: false,
         };
@@ -176,19 +220,19 @@ impl Scheduler {
     /// Enqueue one request; it enters a slot immediately if a slot and
     /// pool memory are available, otherwise at a later round.
     pub fn admit(&mut self, req: GenRequest) {
-        self.pending.push_back(req);
+        self.pending.push(req);
         self.try_admit_pending();
     }
 
-    /// Drain `rx` non-blockingly into the pending queue and admit what
-    /// fits (the between-rounds admission path). Returns `false` once
-    /// the channel is disconnected — no further arrivals will ever
-    /// come.
+    /// Drain `rx` non-blockingly into the pending queues and admit
+    /// what fits (the between-rounds admission path). Returns `false`
+    /// once the channel is disconnected — no further arrivals will
+    /// ever come.
     pub fn admit_ready(&mut self, rx: &Receiver<GenRequest>) -> bool {
         let mut open = true;
         loop {
             match rx.try_recv() {
-                Ok(req) => self.pending.push_back(req),
+                Ok(req) => self.pending.push(req),
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
                     open = false;
@@ -201,24 +245,28 @@ impl Scheduler {
     }
 
     /// Move pending requests into slots while both a slot and enough
-    /// free blocks for their prompt exist. FIFO: a blocked head defers
-    /// everything behind it (no starvation). Admission checks — and
-    /// reserves — the *prompt* footprint only; generation headroom is
-    /// allocated incrementally, which is exactly the oversubscription
-    /// that lets the pool hold more in-flight requests than
-    /// worst-case reservation would.
+    /// free blocks for their prompt exist. The *policy* picks who is
+    /// next; a memory-blocked head still defers everyone behind it
+    /// (deliberate: skipping a parked request would starve it).
+    /// Admission checks — and reserves — the *prompt* footprint only;
+    /// generation headroom is allocated incrementally, which is
+    /// exactly the oversubscription that lets the pool hold more
+    /// in-flight requests than worst-case reservation would.
     fn try_admit_pending(&mut self) {
         while self.slots.len() < self.max_batch {
-            let Some(req) = self.pending.front() else { break };
-            let plen = req.prompt.len();
+            let plen = match self.pending.peek() {
+                Some(req) => req.prompt.len(),
+                None => break,
+            };
             if plen + 1 > self.seq_position_cap() {
                 // Can never be served — the whole pool or the RoPE
                 // table couldn't hold it: fail fast instead of
-                // wedging the FIFO (or panicking the worker mid-
+                // wedging the queue (or panicking the worker mid-
                 // forward on a rope-table overrun).
-                let req = self.pending.pop_front().unwrap();
+                let req = self.pending.pop().unwrap();
                 self.head_deferred = false;
-                self.reject_oversized(req);
+                self.note_dequeued(&req);
+                self.complete_unserved(req, FinishReason::Length);
                 continue;
             }
             if !self.pool.can_fit_new(plen + 1) {
@@ -228,16 +276,32 @@ impl Scheduler {
                 }
                 break;
             }
-            let req = self.pending.pop_front().unwrap();
+            let req = self.pending.pop().unwrap();
             self.head_deferred = false;
+            self.note_dequeued(&req);
             self.admit_slot(req);
         }
+    }
+
+    /// Resolve a request's tenant index (clamped into the table).
+    fn tenant_of(&self, req: &GenRequest) -> usize {
+        (req.tenant as usize).min(self.qos.config.tenants.len() - 1)
+    }
+
+    /// Maintain the shared pending-depth counter the submit path
+    /// bounds against.
+    fn note_dequeued(&self, req: &GenRequest) {
+        self.qos.note_dequeued(self.tenant_of(req));
     }
 
     fn admit_slot(&mut self, req: GenRequest) {
         let now = Instant::now();
         let queue_wait = now.duration_since(req.submitted);
+        let tenant = self.tenant_of(&req);
+        let priority = self.qos.config.tenants[tenant].priority;
         self.metrics.record_admission(queue_wait.as_micros() as u64);
+        self.metrics
+            .record_tenant_admission(&self.qos.config.tenants[tenant].id, queue_wait.as_micros() as u64);
         let mut cache = self.pool.new_cache();
         // Prefix sharing: attach whatever full prompt blocks are
         // already resident; prefill starts after them.
@@ -264,6 +328,8 @@ impl Scheduler {
             state: SlotState::Prefill { consumed: shared },
             max_new,
             admitted: self.admit_seq,
+            tenant,
+            priority,
             queue_wait,
             ttft: Duration::ZERO,
             last_token_at: None,
@@ -277,10 +343,10 @@ impl Scheduler {
         self.pool.position_capacity().min(self.model.max_positions())
     }
 
-    /// A prompt larger than the entire pool (or the RoPE table) can
-    /// never be served: complete it immediately with zero generated
-    /// tokens rather than blocking the queue forever.
-    fn reject_oversized(&self, req: GenRequest) {
+    /// Complete a request without serving it: zero generated tokens,
+    /// explicit finish reason. Used for prompts that can never fit
+    /// (`Length`) and for drain-time cancellation (`Cancelled`).
+    fn complete_unserved(&self, req: GenRequest, finish: FinishReason) {
         let GenRequest { prompt, respond, submitted, .. } = req;
         let latency = submitted.elapsed();
         let seq = self.metrics.record_completion(0, latency.as_micros() as u64);
@@ -291,9 +357,39 @@ impl Scheduler {
             latency,
             queue_wait: latency,
             ttft: Duration::ZERO,
-            finish: FinishReason::Length,
+            finish,
             seq,
         });
+    }
+
+    /// Cancel a request that never reached the pending queues (the
+    /// server's drain path pulls these straight off its channel):
+    /// decrement its tenant's pending depth and answer `Cancelled`.
+    pub fn cancel_submitted(&mut self, req: GenRequest) {
+        self.note_dequeued(&req);
+        self.complete_unserved(req, FinishReason::Cancelled);
+    }
+
+    /// Cancel everything still waiting in the pending queues with an
+    /// explicit `Cancelled` response (bounded-drain shutdown).
+    pub fn cancel_pending(&mut self) {
+        let reqs = self.pending.drain_all();
+        self.head_deferred = false;
+        for req in reqs {
+            self.note_dequeued(&req);
+            self.complete_unserved(req, FinishReason::Cancelled);
+        }
+    }
+
+    /// Mark every in-flight slot `Cancelled`; the next `step` retires
+    /// them, delivering partial outputs (tokens generated so far) and
+    /// closing their streams (drain-deadline shutdown).
+    pub fn cancel_in_flight(&mut self) {
+        for slot in &mut self.slots {
+            if !matches!(slot.state, SlotState::Done(_)) {
+                slot.state = SlotState::Done(FinishReason::Cancelled);
+            }
+        }
     }
 
     /// One scheduling round: admissions, bounded prefill chunks, one
@@ -309,31 +405,30 @@ impl Scheduler {
         self.housekeep();
     }
 
-    /// Ensure slot `i` can append `extra` positions, preempting
-    /// strictly **newer** slots (newest first) until it fits. Returns
-    /// `false` when `i` should defer instead — some older slot owns
-    /// the memory and will retire first. Capacity is *reserved* (not
-    /// just checked), so a later slot's check cannot steal it.
+    /// Ensure slot `i` can append `extra` positions, preempting slots
+    /// the [`EvictionPolicy`] ranks strictly above it (largest key
+    /// first) until it fits. Returns `false` when `i` should defer
+    /// instead — every other slot ranks at or below it and will
+    /// retire first. Capacity is *reserved* (not just checked), so a
+    /// later slot's check cannot steal it.
     fn ensure_capacity_for(&mut self, i: usize, extra: usize) -> bool {
         loop {
             if self.pool.ensure_append(&mut self.slots[i].cache, extra) {
                 return true;
             }
-            let me = self.slots[i].admitted;
-            let victim = self
-                .slots
-                .iter()
-                .enumerate()
-                .filter(|(j, s)| {
-                    *j != i
-                        && s.admitted > me
-                        && s.cache.blocks() > 0
-                        && !matches!(s.state, SlotState::Done(_))
-                })
-                .max_by_key(|(_, s)| s.admitted)
-                .map(|(j, _)| j);
+            let my_key = self.evict.key(&view(&self.slots[i]));
+            let mut victim: Option<(usize, (u64, u64))> = None;
+            for (j, s) in self.slots.iter().enumerate() {
+                if j == i || s.cache.blocks() == 0 || matches!(s.state, SlotState::Done(_)) {
+                    continue;
+                }
+                let k = self.evict.key(&view(s));
+                if k > my_key && victim.map_or(true, |(_, vk)| k > vk) {
+                    victim = Some((j, k));
+                }
+            }
             match victim {
-                Some(j) => self.preempt(j),
+                Some((j, _)) => self.preempt(j),
                 None => return false,
             }
         }
@@ -465,9 +560,10 @@ impl Scheduler {
     }
 
     /// Accept a sampled token into slot `i`: append it, stream it,
-    /// stamp TTFT / inter-token gaps, and apply the stop conditions
-    /// (the stop/EOS token itself is included in the output, exactly
-    /// as the pre-scheduler loop did with `'\n'`).
+    /// stamp TTFT / inter-token gaps (global and per-tenant), and
+    /// apply the stop conditions (the stop/EOS token itself is
+    /// included in the output, exactly as the pre-scheduler loop did
+    /// with `'\n'`).
     fn accept(&mut self, i: usize, next: u16) {
         let slot = &mut self.slots[i];
         let now = Instant::now();
@@ -475,12 +571,18 @@ impl Scheduler {
         if let Some(stream) = &slot.req.stream {
             let _ = stream.send(next); // client may have hung up
         }
+        let tenant_id = &self.qos.config.tenants[slot.tenant].id;
         match slot.last_token_at {
             None => {
                 slot.ttft = now.duration_since(slot.req.submitted);
                 self.metrics.record_ttft(slot.ttft.as_micros() as u64);
+                self.metrics.record_tenant_ttft(tenant_id, slot.ttft.as_micros() as u64);
             }
-            Some(prev) => self.metrics.record_itl(now.duration_since(prev).as_micros() as u64),
+            Some(prev) => {
+                let gap = now.duration_since(prev).as_micros() as u64;
+                self.metrics.record_itl(gap);
+                self.metrics.record_tenant_itl(tenant_id, gap);
+            }
         }
         slot.last_token_at = Some(now);
         let produced = slot.tokens.len() - slot.req.prompt.len();
@@ -513,6 +615,7 @@ impl Scheduler {
         let produced = slot.tokens.len() - slot.req.prompt.len();
         let latency = slot.req.submitted.elapsed();
         let seq = self.metrics.record_completion(produced, latency.as_micros() as u64);
+        self.metrics.record_tenant_completion(&self.qos.config.tenants[slot.tenant].id);
         // Dropping `slot.req` afterwards closes the streaming channel,
         // so a streaming client sees all tokens, then the response,
         // then end-of-stream.
@@ -575,6 +678,7 @@ pub(crate) fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::qos::{AdmitPolicy, EvictionKind, QosConfig, TenantSpec};
     use crate::coordinator::server::{Server, ServerOptions, StopSet};
     use crate::model::transformer::tests::tiny_model;
     use crate::quant::kvquant::KvQuantConfig;
@@ -636,6 +740,15 @@ mod tests {
         max_new: usize,
         respond: std::sync::mpsc::Sender<GenResponse>,
     ) -> GenRequest {
+        request_t(0, prompt, max_new, respond)
+    }
+
+    fn request_t(
+        tenant: u32,
+        prompt: Vec<u16>,
+        max_new: usize,
+        respond: std::sync::mpsc::Sender<GenResponse>,
+    ) -> GenRequest {
         GenRequest {
             prompt,
             max_new_tokens: max_new,
@@ -644,6 +757,7 @@ mod tests {
             stream: None,
             respond,
             submitted: Instant::now(),
+            tenant,
         }
     }
 
@@ -995,5 +1109,192 @@ mod tests {
         assert_eq!(r.finish, FinishReason::Length);
         // position_capacity 12 - prompt 3 = 9 generated tokens.
         assert_eq!(r.tokens.len() - r.prompt_len, 9);
+    }
+
+    // -- multi-tenant QoS ---------------------------------------------------
+
+    fn qos_state(
+        admission: AdmitPolicy,
+        eviction: EvictionKind,
+        tenants: Vec<TenantSpec>,
+    ) -> Arc<QosState> {
+        Arc::new(QosState::new(QosConfig { admission, eviction, tenants }))
+    }
+
+    fn tenant(id: &str, weight: u32, priority: u8) -> TenantSpec {
+        TenantSpec { id: id.into(), weight, priority, max_pending: 0 }
+    }
+
+    #[test]
+    fn wrr_admission_interleaves_a_flooded_queue() {
+        // Tenant 0 floods six requests before tenant 1 submits two;
+        // with one slot, WRR must interleave admissions so tenant 1's
+        // work retires before the flood's backlog — FIFO would serve
+        // it last.
+        let m = tiny_model(13, 4);
+        let metrics = Arc::new(Metrics::new());
+        let qos = qos_state(
+            AdmitPolicy::WeightedRoundRobin,
+            EvictionKind::Newest,
+            vec![tenant("flood", 1, 0), tenant("polite", 1, 0)],
+        );
+        let mut sched =
+            Scheduler::with_qos(m, metrics, 1, 64, PoolConfig::default(), qos);
+        let mut rng = Rng::new(7);
+        let flood_rx: Vec<_> = (0..6)
+            .map(|i| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request_t(0, vec![i as u16 + 1, 2], 2, tx));
+                rx
+            })
+            .collect();
+        let polite_rx: Vec<_> = (0..2)
+            .map(|i| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request_t(1, vec![10 + i as u16], 2, tx));
+                rx
+            })
+            .collect();
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 2000);
+        }
+        let flood_seqs: Vec<u64> =
+            flood_rx.into_iter().map(|rx| rx.try_recv().expect("flood response").seq).collect();
+        let polite_seqs: Vec<u64> =
+            polite_rx.into_iter().map(|rx| rx.try_recv().expect("polite response").seq).collect();
+        let polite_max = *polite_seqs.iter().max().unwrap();
+        let flood_max = *flood_seqs.iter().max().unwrap();
+        assert!(
+            polite_max < flood_max,
+            "WRR must finish the polite tenant (max seq {polite_max}) before the flood backlog \
+             (max seq {flood_max})"
+        );
+    }
+
+    #[test]
+    fn lowest_priority_eviction_inverts_the_newest_rule() {
+        // Bulk (class 1) admitted FIRST, urgent (class 0) second, in a
+        // pool too small for both. Under `newest`, urgent is the only
+        // evictable slot, so bulk retires first. Under
+        // `lowest-priority`, bulk is the victim and urgent retires
+        // first. Outputs stay bit-identical to solo runs either way.
+        let m = tiny_model(12, 4);
+        let bulk_job: (Vec<u16>, usize) = ((0..6).map(|i| (i * 3 + 1) as u16).collect(), 8);
+        let urgent_job: (Vec<u16>, usize) = ((0..6).map(|i| (i * 5 + 2) as u16).collect(), 8);
+        let solo = solo_tokens(&m, &[bulk_job.clone(), urgent_job.clone()]);
+        let run = |eviction: EvictionKind| {
+            let metrics = Arc::new(Metrics::new());
+            let qos = qos_state(
+                AdmitPolicy::Fifo,
+                eviction,
+                vec![tenant("urgent", 1, 0), tenant("bulk", 1, 1)],
+            );
+            let mut sched =
+                Scheduler::with_qos(m.clone(), metrics.clone(), 2, 64, tight_pool(4, 4), qos);
+            let mut rng = Rng::new(7);
+            let (btx, brx) = std::sync::mpsc::channel();
+            sched.admit(request_t(1, bulk_job.0.clone(), bulk_job.1, btx));
+            let (utx, urx) = std::sync::mpsc::channel();
+            sched.admit(request_t(0, urgent_job.0.clone(), urgent_job.1, utx));
+            let mut rounds = 0;
+            while !sched.is_idle() {
+                sched.step(&mut rng);
+                rounds += 1;
+                assert!(rounds < 5000, "pressured pool must drain");
+            }
+            use std::sync::atomic::Ordering::Relaxed;
+            assert!(metrics.kv_preemptions.load(Relaxed) > 0, "pressure actually bit");
+            (brx.try_recv().expect("bulk"), urx.try_recv().expect("urgent"))
+        };
+        let (bulk_n, urgent_n) = run(EvictionKind::Newest);
+        assert!(bulk_n.seq < urgent_n.seq, "newest policy keeps the older bulk slot");
+        let (bulk_p, urgent_p) = run(EvictionKind::LowestPriority);
+        assert!(
+            urgent_p.seq < bulk_p.seq,
+            "lowest-priority policy lets the urgent class finish first"
+        );
+        for r in [&bulk_n, &bulk_p] {
+            assert_eq!(r.tokens, solo[0], "bulk output diverged");
+        }
+        for r in [&urgent_n, &urgent_p] {
+            assert_eq!(r.tokens, solo[1], "urgent output diverged");
+        }
+    }
+
+    #[test]
+    fn largest_kv_eviction_stays_deterministic_under_pressure() {
+        // Same oversubscribed workload as the pool-exhaustion test but
+        // under `largest-kv`: the policy frees the most memory per
+        // preemption and every output still matches its solo run.
+        let m = tiny_model(12, 4);
+        let jobs: Vec<(Vec<u16>, usize)> = (0..4u16)
+            .map(|k| ((0..6).map(|j| (j * 3 + k * 7 + 1) as u16 % 30).collect(), 10))
+            .collect();
+        let solo = solo_tokens(&m, &jobs);
+        let metrics = Arc::new(Metrics::new());
+        let qos = qos_state(
+            AdmitPolicy::Fifo,
+            EvictionKind::LargestKv,
+            vec![tenant("default", 1, 0)],
+        );
+        let mut sched =
+            Scheduler::with_qos(m, metrics.clone(), 4, 8, tight_pool(4, 8), qos);
+        let mut rng = Rng::new(7);
+        let rxs: Vec<_> = jobs
+            .iter()
+            .map(|(p, max_new)| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request(p.clone(), *max_new, tx));
+                rx
+            })
+            .collect();
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 5000, "largest-kv policy must drain");
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.try_recv().expect("response");
+            assert_eq!(r.tokens, solo[i], "request {i} diverged under largest-kv eviction");
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(metrics.kv_preemptions.load(Relaxed) > 0, "eviction path exercised");
+    }
+
+    #[test]
+    fn cancellation_paths_answer_every_request() {
+        // cancel_pending answers queued requests with Cancelled and
+        // zero tokens; cancel_in_flight delivers the partial output.
+        let m = tiny_model(10, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m, metrics, 1, 64);
+        let mut rng = Rng::new(7);
+        let (tx1, rx1) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2, 3], 64, tx1));
+        let (tx2, rx2) = std::sync::mpsc::channel();
+        sched.admit(request(vec![4, 5], 8, tx2));
+        for _ in 0..3 {
+            sched.step(&mut rng); // first slotted + decoding; second pending
+        }
+        assert_eq!(sched.in_flight(), 1);
+        assert_eq!(sched.pending_len(), 1);
+        sched.cancel_pending();
+        let r2 = rx2.try_recv().expect("pending request answered on cancel");
+        assert_eq!(r2.finish, FinishReason::Cancelled);
+        assert_eq!(r2.tokens.len(), r2.prompt_len, "never ran: no generated tokens");
+        sched.cancel_in_flight();
+        sched.step(&mut rng); // retires the cancelled slot
+        let r1 = rx1.try_recv().expect("in-flight request answered on cancel");
+        assert_eq!(r1.finish, FinishReason::Cancelled);
+        assert!(
+            r1.tokens.len() > r1.prompt_len,
+            "partial output delivered (it had been decoding)"
+        );
+        assert!(sched.is_idle());
+        assert_eq!(sched.pool().blocks_in_use(), 0, "cancelled slots return their blocks");
     }
 }

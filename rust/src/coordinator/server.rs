@@ -1,7 +1,8 @@
 //! The serving front-end: a worker thread owns the (quantized) model
 //! and drives a continuous-batching [`Scheduler`]; clients submit via
 //! a channel handle and receive per-token streams and/or a completed
-//! response on per-request channels.
+//! response on per-request channels. The network layer
+//! (`coordinator/net.rs`) is a thin bridge onto exactly this surface.
 //!
 //! Unlike a batch-to-completion loop, new requests are admitted
 //! *between decode rounds* (up to `max_batch` in-flight slots), so a
@@ -9,16 +10,33 @@
 //! it instead of queueing until the whole batch drains. Prompts are
 //! prefilled in bounded chunks so a long prompt can't stall in-flight
 //! decoders either. See `coordinator/scheduler.rs` and DESIGN.md §6.
+//!
+//! **Multi-tenant QoS.** Every submission is attributed to a tenant
+//! (anonymous submits ride tenant 0). Per-tenant pending bounds are
+//! enforced here on the submit path ([`ServeError::TenantOverloaded`]
+//! — a 429 on the wire) while queue *ordering* is the scheduler's
+//! admission policy (`coordinator/qos.rs`).
+//!
+//! **Shutdown.** [`Server::shutdown`] keeps the historical contract:
+//! close the queue and serve everything already submitted to
+//! completion. [`Server::shutdown_within`] is the bounded drain:
+//! admission stops immediately (pending requests complete with
+//! [`FinishReason::Cancelled`]), in-flight requests keep decoding
+//! until the deadline, then are cancelled too — every client gets a
+//! response and then its streaming channel closes; nobody blocks
+//! forever. Dropping the `Server` equals `shutdown()`.
 
 use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::collect_batch;
 use super::config::ServeConfig;
 use super::metrics::Metrics;
+use super::qos::{QosConfig, QosState};
 use super::scheduler::Scheduler;
 use crate::model::kvcache::PoolConfig;
 use crate::model::Transformer;
@@ -35,6 +53,9 @@ pub enum FinishReason {
     Stop,
     /// Emitted the EOS token.
     Eos,
+    /// Cut short by a bounded server drain (`shutdown_within`): the
+    /// response carries whatever was generated before the deadline.
+    Cancelled,
 }
 
 /// Stop conditions for one request: an optional EOS token id plus a
@@ -108,6 +129,9 @@ pub struct GenRequest {
     pub respond: Sender<GenResponse>,
     /// When the client submitted (queue wait / TTFT clock origin).
     pub submitted: Instant,
+    /// Index into the server's tenant table (out-of-range clamps to
+    /// the last tenant; 0 for anonymous submits).
+    pub tenant: u32,
 }
 
 /// A completed generation.
@@ -128,11 +152,21 @@ pub struct GenResponse {
     pub seq: u64,
 }
 
-/// Submission failed because the worker thread is gone (it panicked —
-/// e.g. a poisoned model — or the server was shut down).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Why a submission (or server start) was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServeError {
+    /// The worker thread is gone (it panicked — e.g. a poisoned model
+    /// — or the server was shut down).
     WorkerGone,
+    /// A bounded drain is in progress; no new work is accepted.
+    ShuttingDown,
+    /// The tenant's `max_pending` queue bound is full (HTTP 429 on
+    /// the wire): shed load instead of buffering without bound.
+    TenantOverloaded { tenant: String },
+    /// The configuration was rejected at start time (bad listen
+    /// address, zero tenant weight, duplicate tenant id, …) — instead
+    /// of panicking later in the worker thread.
+    InvalidConfig(String),
 }
 
 impl fmt::Display for ServeError {
@@ -141,6 +175,13 @@ impl fmt::Display for ServeError {
             ServeError::WorkerGone => {
                 write!(f, "server worker is gone (panicked or shut down); request not accepted")
             }
+            ServeError::ShuttingDown => {
+                write!(f, "server is draining for shutdown; request not accepted")
+            }
+            ServeError::TenantOverloaded { tenant } => {
+                write!(f, "tenant {tenant:?} has reached its max_pending bound; request rejected")
+            }
+            ServeError::InvalidConfig(msg) => write!(f, "invalid serve configuration: {msg}"),
         }
     }
 }
@@ -180,6 +221,10 @@ pub struct ServerOptions {
     pub kv_bits: u32,
     /// Trailing positions kept f32 when `kv_bits` is active.
     pub kv_local_window: usize,
+    /// Tenant table + admission/eviction policies. The default is a
+    /// single anonymous tenant with FIFO admission and newest-slot
+    /// eviction — the pre-QoS behavior, bit for bit.
+    pub qos: QosConfig,
 }
 
 impl Default for ServerOptions {
@@ -195,6 +240,7 @@ impl Default for ServerOptions {
             kv_pool_blocks: 0,
             kv_bits: 16,
             kv_local_window: 16,
+            qos: QosConfig::default(),
         }
     }
 }
@@ -212,14 +258,48 @@ impl From<&ServeConfig> for ServerOptions {
             kv_pool_blocks: c.kv_pool_blocks,
             kv_bits: c.kv_bits,
             kv_local_window: c.kv_local_window,
+            qos: c.qos_config(),
         }
     }
 }
 
-/// Handle to a running server.
+/// Shared drain signal: submit paths check `draining` (reject new
+/// work), the worker checks it each round and cancels in-flight slots
+/// once `deadline` passes.
+#[derive(Debug, Default)]
+struct DrainSignal {
+    draining: AtomicBool,
+    deadline: Mutex<Option<Instant>>,
+}
+
+impl DrainSignal {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    fn deadline_passed(&self) -> bool {
+        self.draining()
+            && self
+                .deadline
+                .lock()
+                .unwrap()
+                .map(|d| Instant::now() >= d)
+                .unwrap_or(false)
+    }
+
+    fn start(&self, deadline: Option<Instant>) {
+        *self.deadline.lock().unwrap() = deadline;
+        self.draining.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Handle to a running server. Shutdown takes `&self`, so the handle
+/// can sit behind an `Arc` shared with the network front-end.
 pub struct Server {
-    tx: Option<Sender<GenRequest>>,
-    worker: Option<JoinHandle<()>>,
+    tx: Mutex<Option<Sender<GenRequest>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    drain: Arc<DrainSignal>,
+    qos: Arc<QosState>,
     pub metrics: Arc<Metrics>,
     /// Effective worker-thread count the kernels run with.
     pub threads: usize,
@@ -253,13 +333,26 @@ impl Server {
         )
     }
 
-    /// Spawn the worker thread owning `model`. The thread count is
-    /// validated/clamped (0 must not clobber a count a library user
-    /// already set via `parallel::set_threads` — only an explicit
-    /// value overrides), and serving engines are prepared on any
-    /// linear that lacks one, so callers can hand over a
-    /// freshly-quantized model directly.
-    pub fn start_with_opts(mut model: Transformer, opts: ServerOptions) -> Server {
+    /// [`Server::try_start_with_opts`], panicking on an invalid
+    /// configuration (the defaults are always valid — existing
+    /// callers keep their infallible signature).
+    pub fn start_with_opts(model: Transformer, opts: ServerOptions) -> Server {
+        Self::try_start_with_opts(model, opts).expect("invalid ServerOptions")
+    }
+
+    /// Spawn the worker thread owning `model`. The QoS table is
+    /// validated *here* — a zero-weight or duplicate tenant is an
+    /// [`ServeError::InvalidConfig`] at start time, not a worker-
+    /// thread panic later. The thread count is validated/clamped
+    /// (0 must not clobber a count a library user already set via
+    /// `parallel::set_threads` — only an explicit value overrides),
+    /// and serving engines are prepared on any linear that lacks one,
+    /// so callers can hand over a freshly-quantized model directly.
+    pub fn try_start_with_opts(
+        mut model: Transformer,
+        opts: ServerOptions,
+    ) -> Result<Server, ServeError> {
+        opts.qos.validate().map_err(ServeError::InvalidConfig)?;
         let threads = if opts.threads == 0 {
             parallel::threads()
         } else {
@@ -279,6 +372,7 @@ impl Server {
             kv_pool_blocks,
             kv_bits,
             kv_local_window,
+            qos,
             ..
         } = opts;
         let pool_cfg = PoolConfig {
@@ -286,11 +380,20 @@ impl Server {
             budget_blocks: kv_pool_blocks,
             quant: KvQuantConfig { bits: kv_bits, local_window: kv_local_window },
         };
+        let qos_state = Arc::new(QosState::new(qos));
+        let drain = Arc::new(DrainSignal::default());
+        let worker_qos = qos_state.clone();
+        let worker_drain = drain.clone();
         let worker = std::thread::spawn(move || {
             let mut rng = Rng::new(seed);
-            let mut sched = Scheduler::with_pool(model, m, max_batch, prefill_chunk, pool_cfg);
+            let mut sched =
+                Scheduler::with_qos(model, m, max_batch, prefill_chunk, pool_cfg, worker_qos);
             loop {
+                let draining = worker_drain.draining();
                 if sched.is_idle() {
+                    if draining {
+                        break;
+                    }
                     // Nothing in flight: block for work (and linger
                     // `batch_wait` for co-arrivals, as the batch-mode
                     // loop always did).
@@ -298,8 +401,31 @@ impl Server {
                     if batch.is_empty() {
                         break; // channel closed and drained
                     }
+                    if worker_drain.draining() {
+                        // Drain began while we were blocked: these
+                        // arrivals get explicit Cancelled responses.
+                        for req in batch {
+                            sched.cancel_submitted(req);
+                        }
+                        break;
+                    }
                     for req in batch {
                         sched.admit(req);
+                    }
+                    // Pull in whatever else already arrived, so the
+                    // admission order is the QoS policy's, not the
+                    // channel's.
+                    let _ = sched.admit_ready(&rx);
+                } else if draining {
+                    // Bounded drain: stop admitting, cancel everything
+                    // still queued; in-flight slots keep decoding
+                    // until the deadline, then are cancelled too.
+                    while let Ok(req) = rx.try_recv() {
+                        sched.cancel_submitted(req);
+                    }
+                    sched.cancel_pending();
+                    if worker_drain.deadline_passed() {
+                        sched.cancel_in_flight();
                     }
                 } else {
                     // Busy: admit whatever is already queued, without
@@ -308,8 +434,26 @@ impl Server {
                 }
                 sched.step(&mut rng);
             }
+            // Clients that raced shutdown and are still sitting in the
+            // channel get an explicit response, not a dropped sender.
+            while let Ok(req) = rx.try_recv() {
+                sched.cancel_submitted(req);
+            }
         });
-        Server { tx: Some(tx), worker: Some(worker), metrics, threads, stop }
+        Ok(Server {
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            drain,
+            qos: qos_state,
+            metrics,
+            threads,
+            stop,
+        })
+    }
+
+    /// The QoS configuration this server runs with.
+    pub fn qos(&self) -> &QosConfig {
+        &self.qos.config
     }
 
     /// Submit a request with the server's default stop conditions;
@@ -351,7 +495,7 @@ impl Server {
     }
 
     /// Fully-explicit submission: stop conditions and an optional
-    /// streaming sender.
+    /// streaming sender. Rides tenant 0.
     pub fn submit_with(
         &self,
         prompt: Vec<u16>,
@@ -360,6 +504,44 @@ impl Server {
         stop: StopSet,
         stream: Option<Sender<u16>>,
     ) -> Result<Receiver<GenResponse>, ServeError> {
+        self.submit_indexed(0, prompt, max_new_tokens, temperature, stop, stream)
+    }
+
+    /// Tenant-attributed submission (the network front-end's entry
+    /// point). `tenant` resolves against the QoS table; unknown ids
+    /// ride tenant 0. `stop: None` uses the server default. Enforces
+    /// the tenant's `max_pending` bound and the drain gate.
+    pub fn submit_qos(
+        &self,
+        tenant: &str,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+        stop: Option<StopSet>,
+        stream: Option<Sender<u16>>,
+    ) -> Result<Receiver<GenResponse>, ServeError> {
+        let t = self.qos.config.tenant_index(tenant).unwrap_or(0);
+        let stop = stop.unwrap_or_else(|| self.stop.clone());
+        self.submit_indexed(t, prompt, max_new_tokens, temperature, stop, stream)
+    }
+
+    fn submit_indexed(
+        &self,
+        t: usize,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+        stop: StopSet,
+        stream: Option<Sender<u16>>,
+    ) -> Result<Receiver<GenResponse>, ServeError> {
+        if self.drain.draining() {
+            return Err(ServeError::ShuttingDown);
+        }
+        let spec = &self.qos.config.tenants[t];
+        if spec.max_pending > 0 && self.qos.queued_for(t) >= spec.max_pending as u64 {
+            self.metrics.record_tenant_rejection(&spec.id);
+            return Err(ServeError::TenantOverloaded { tenant: spec.id.clone() });
+        }
         let (rtx, rrx) = channel();
         let req = GenRequest {
             prompt,
@@ -369,18 +551,40 @@ impl Server {
             stream,
             respond: rtx,
             submitted: Instant::now(),
+            tenant: t as u32,
         };
-        let tx = self.tx.as_ref().ok_or(ServeError::WorkerGone)?;
-        tx.send(req).map_err(|_| ServeError::WorkerGone)?;
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or(ServeError::WorkerGone)?;
+        self.qos.queued[t].fetch_add(1, Ordering::Relaxed);
+        if tx.send(req).is_err() {
+            self.qos.note_dequeued(t);
+            return Err(ServeError::WorkerGone);
+        }
         self.metrics.record_request();
         Ok(rrx)
     }
 
     /// Graceful shutdown: close the queue and join the worker (which
-    /// finishes everything already submitted first).
-    pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+    /// finishes everything already submitted first). Idempotent.
+    pub fn shutdown(&self) {
+        self.close_and_join();
+    }
+
+    /// Bounded drain: reject new submissions immediately, complete
+    /// pending (unslotted) requests with [`FinishReason::Cancelled`]
+    /// right away, let in-flight requests decode until `deadline`
+    /// elapses, then cancel those too. Every accepted request gets a
+    /// response before its streaming channel closes; the worker is
+    /// joined before this returns.
+    pub fn shutdown_within(&self, deadline: Duration) {
+        self.drain.start(Some(Instant::now() + deadline));
+        self.close_and_join();
+    }
+
+    fn close_and_join(&self) {
+        drop(self.tx.lock().unwrap().take());
+        let worker = self.worker.lock().unwrap().take();
+        if let Some(w) = worker {
             let _ = w.join();
         }
     }
@@ -388,16 +592,14 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.close_and_join();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::qos::TenantSpec;
     use crate::model::transformer::tests::tiny_model;
 
     #[test]
@@ -550,10 +752,131 @@ mod tests {
                     saw_error = true;
                     break;
                 }
+                Err(e) => panic!("unexpected submit error: {e}"),
                 Ok(_) => std::thread::sleep(Duration::from_millis(5)),
             }
         }
         assert!(saw_error, "submit must surface the dead worker as an error");
         server.shutdown();
+    }
+
+    #[test]
+    fn invalid_qos_rejected_at_start_not_in_worker() {
+        let mut opts = ServerOptions::default();
+        opts.qos.tenants = vec![
+            TenantSpec { id: "a".into(), weight: 1, priority: 0, max_pending: 0 },
+            TenantSpec { id: "a".into(), weight: 1, priority: 0, max_pending: 0 },
+        ];
+        match Server::try_start_with_opts(tiny_model(1, 4), opts) {
+            Err(ServeError::InvalidConfig(msg)) => assert!(msg.contains("duplicate"), "{msg}"),
+            other => panic!("duplicate tenant id must be rejected, got {:?}", other.is_ok()),
+        }
+        let mut opts = ServerOptions::default();
+        opts.qos.tenants[0].weight = 0;
+        assert!(matches!(
+            Server::try_start_with_opts(tiny_model(1, 4), opts),
+            Err(ServeError::InvalidConfig(_))
+        ));
+    }
+
+    #[test]
+    fn tenant_bound_rejects_with_429_semantics() {
+        // max_pending=1 and a long request hogging the single slot: the
+        // submit path must shed load with TenantOverloaded, and the
+        // rejection must be visible in the per-tenant metrics.
+        let mut opts = ServerOptions {
+            max_batch: 1,
+            batch_wait: Duration::from_millis(1),
+            seed: 7,
+            ..ServerOptions::default()
+        };
+        opts.qos.tenants =
+            vec![TenantSpec { id: "bounded".into(), weight: 1, priority: 0, max_pending: 1 }];
+        let server = Server::start_with_opts(tiny_model(2, 4), opts);
+        let first = server
+            .submit_qos("bounded", vec![1, 2, 3], 64, 0.0, Some(StopSet::none()), None)
+            .expect("first request accepted");
+        // Saturate the pending bound: at most one more is accepted;
+        // keep pushing until the bound trips (the scheduler may have
+        // slotted earlier ones in between).
+        let mut rejected = false;
+        let mut accepted = vec![first];
+        for _ in 0..50 {
+            match server.submit_qos("bounded", vec![1, 2], 64, 0.0, Some(StopSet::none()), None) {
+                Ok(rx) => accepted.push(rx),
+                Err(ServeError::TenantOverloaded { tenant }) => {
+                    assert_eq!(tenant, "bounded");
+                    rejected = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert!(rejected, "the max_pending bound must eventually shed load");
+        assert!(server.metrics.tenant_rejected("bounded") >= 1);
+        for rx in accepted {
+            assert!(rx.recv_timeout(Duration::from_secs(60)).is_ok(), "accepted requests finish");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn bounded_drain_cancels_and_never_blocks_clients() {
+        // A deep queue of long generations, then shutdown_within a
+        // short deadline: every client gets a response (some
+        // Cancelled), every stream closes — nobody blocks forever.
+        let server = Server::start_with_opts(
+            tiny_model(8, 4),
+            ServerOptions {
+                max_batch: 2,
+                batch_wait: Duration::from_millis(1),
+                seed: 7,
+                ..ServerOptions::default()
+            },
+        );
+        let subs: Vec<_> = (0..6)
+            .map(|i| {
+                server
+                    .submit_streaming_with(vec![i as u16 + 1, 2, 3], 400, 0.0, StopSet::none())
+                    .expect("submit")
+            })
+            .collect();
+        // Let generation actually start before draining.
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        server.shutdown_within(Duration::from_millis(50));
+        assert!(t0.elapsed() < Duration::from_secs(20), "drain is bounded");
+        let mut cancelled = 0;
+        for (stream, rx) in subs {
+            let r = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("every accepted request gets a response");
+            if r.finish == FinishReason::Cancelled {
+                cancelled += 1;
+            }
+            // The stream terminates (sender dropped after the
+            // response): iterating must not block.
+            let streamed: Vec<u16> = stream.try_iter().collect();
+            assert_eq!(streamed.len(), r.tokens.len() - r.prompt_len);
+        }
+        assert!(cancelled >= 1, "a 400-token generation cannot finish in a 50ms drain");
+        // Post-drain submissions are refused.
+        assert!(matches!(
+            server.submit(vec![1], 1, 0.0),
+            Err(ServeError::ShuttingDown) | Err(ServeError::WorkerGone)
+        ));
+    }
+
+    #[test]
+    fn drop_mid_stream_never_leaves_client_blocked() {
+        // Regression for the satellite: dropping the Server mid-stream
+        // must close every client channel (the legacy full drain keeps
+        // serving until done — but the client must never hang).
+        let server = Server::start(tiny_model(3, 4), 1, Duration::from_millis(1), 7);
+        let (stream, rx) = server.submit_streaming(vec![1, 2, 3], 32, 0.0).expect("submit");
+        drop(server); // full drain + join
+        let r = rx.recv_timeout(Duration::from_secs(60)).expect("response delivered");
+        let streamed: Vec<u16> = stream.iter().collect(); // terminates: sender dropped
+        assert_eq!(streamed.len(), r.tokens.len() - r.prompt_len);
     }
 }

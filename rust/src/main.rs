@@ -5,11 +5,19 @@
 //! btc-llm quantize  [--model tinylm_m] [--method btc] [--bits 0.8] [--out m.qlm]
 //! btc-llm eval      [--model tinylm_m] [--method btc] [--bits 0.8] [--tokens 4096] [--zeroshot]
 //! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N] [--kv-bits B]
+//!                   [--listen ADDR] [--smoke] [--synthetic]
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
+//!
+//! With `--listen ADDR` (or `[serve] listen` in the config) the serve
+//! command starts the TCP front-end (`coordinator/net.rs`) instead of
+//! replaying an offline trace; `--smoke` then runs one loopback
+//! streamed request and exits (the CI smoke), and `--synthetic` swaps
+//! the artifact model for a hermetic random one so the smoke needs no
+//! `make artifacts`.
 
 use anyhow::{Context, Result};
-use btc_llm::coordinator::{ServeConfig, Server, ServerOptions};
+use btc_llm::coordinator::{NetOptions, NetServer, ServeConfig, Server, ServerOptions};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::eval::{memory, perplexity, zeroshot};
 use btc_llm::io::{load_model, qweights};
@@ -118,9 +126,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.kv_bits = btc_llm::quant::kvquant::KvQuantConfig::sanitize_bits(
         args.get_usize("kv-bits", cfg.kv_bits as usize) as u32,
     );
-    let dir = artifacts_dir();
-    let raw = load_model(&dir.join(format!("{}.bin", cfg.model)))?;
-    let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt"))?;
+    if let Some(addr) = args.get("listen") {
+        addr.parse::<std::net::SocketAddr>()
+            .map_err(|e| anyhow::anyhow!("--listen {addr}: {e}"))?;
+        cfg.listen = Some(addr.to_string());
+    }
+    let (raw, corpus_bytes) = if args.flag("synthetic") {
+        // Hermetic: a random model of a serving-representative shape,
+        // so the loopback smoke runs without `make artifacts`.
+        use btc_llm::io::weights::ModelConfig;
+        btc_llm::util::fixture::synth_raw_model(
+            11,
+            ModelConfig {
+                vocab: 192,
+                d_model: 96,
+                n_layer: 2,
+                n_head: 6,
+                n_kv_head: 3,
+                d_ff: 192,
+                max_seq: 160,
+                rope_theta: 10000.0,
+            },
+        )
+    } else {
+        let dir = artifacts_dir();
+        let raw = load_model(&dir.join(format!("{}.bin", cfg.model)))?;
+        let corpus_bytes = std::fs::read(dir.join("corpus_eval.txt"))?;
+        (raw, corpus_bytes)
+    };
     // The serve config names a method by registry key ("binary" is the
     // historical alias for the ARB-LLM binary lane). A bits suffix in
     // the spec itself (backend = "btc-0.5") wins over the separate
@@ -133,12 +166,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     qcfg.act_bits = 16;
     info!("quantizing {} for serving ({})", cfg.model, cfg.backend);
     let qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
-    // start_with_opts prepares any missing engines itself; the config
-    // also carries the scheduler knobs (prefill chunk, stop set).
-    let server = Server::start_with_opts(qm.model, ServerOptions::from(&cfg));
+    // try_start prepares any missing engines itself; the config also
+    // carries the scheduler/QoS knobs (prefill chunk, stop set,
+    // tenant table, admission/eviction policy). A bad QoS table is an
+    // error here, not a worker-thread panic.
+    let server = Server::try_start_with_opts(qm.model, ServerOptions::from(&cfg))
+        .map_err(|e| anyhow::anyhow!("start server: {e}"))?;
     info!("serving with {} kernel thread(s)", server.threads);
-    // Replay a request trace (offline image: no network listener; the
-    // trace IS the workload — see examples/serve.rs for the full driver).
+    if let Some(addr) = cfg.listen.clone() {
+        return serve_network(server, &addr, args.flag("smoke"));
+    }
+    // Replay a request trace (no listener configured; the trace IS the
+    // workload — see examples/serve.rs for the full driver).
     let n = args.get_usize("requests", 16);
     let tok = ByteTokenizer::default();
     let prompts = corpus::prompts(n, cfg.seed);
@@ -159,6 +198,41 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     println!("{}", server.metrics.summary());
     server.shutdown();
+    Ok(())
+}
+
+/// Run the TCP front-end. With `smoke` set, issue one loopback
+/// streamed request against ourselves and exit non-zero unless the
+/// full SSE round-trip works — this is the CI serve-smoke step.
+fn serve_network(server: Server, addr: &str, smoke: bool) -> Result<()> {
+    use std::io::{Read, Write};
+    let server = std::sync::Arc::new(server);
+    let net = NetServer::bind(server, addr, NetOptions::default())
+        .map_err(|e| anyhow::anyhow!("listen {addr}: {e}"))?;
+    let bound = net.local_addr();
+    if smoke {
+        let mut conn = std::net::TcpStream::connect(bound).context("smoke connect")?;
+        let body = r#"{"prompt":[10,20,30],"max_new":8,"stream":true}"#;
+        write!(
+            conn,
+            "POST /generate HTTP/1.1\r\nHost: smoke\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )?;
+        let mut reply = String::new();
+        conn.read_to_string(&mut reply).context("smoke read")?;
+        net.shutdown(std::time::Duration::from_secs(5));
+        anyhow::ensure!(reply.contains("200 OK"), "smoke: bad status:\n{reply}");
+        anyhow::ensure!(reply.contains("data: {\"token\""), "smoke: no token events:\n{reply}");
+        anyhow::ensure!(reply.contains("\"done\":true"), "smoke: no final event:\n{reply}");
+        println!("serve smoke OK: streamed tokens over loopback from {bound}");
+        return Ok(());
+    }
+    println!("listening on http://{bound} (POST /generate, GET /healthz, GET /metrics)");
+    println!("press enter to drain and exit");
+    let mut line = String::new();
+    let _ = std::io::stdin().read_line(&mut line);
+    net.shutdown(std::time::Duration::from_secs(30));
     Ok(())
 }
 

@@ -198,6 +198,7 @@ fn no_head_of_line_blocking_under_real_pipeline() {
         stream: Some(long_stream_tx),
         respond: ltx,
         submitted: Instant::now(),
+        tenant: 0,
     });
     // A few rounds in, the long request is mid-decode (prompt chunked
     // 4+1, then decoding) — now the short one arrives.
@@ -214,6 +215,7 @@ fn no_head_of_line_blocking_under_real_pipeline() {
         stream: None,
         respond: stx,
         submitted: Instant::now(),
+        tenant: 0,
     });
     let mut rounds = 0;
     while !sched.is_idle() {

@@ -1,12 +1,20 @@
 //! Integration: the coordinator serves a quantized model end-to-end
-//! (quantize real artifacts → prepare engines → batched generation).
+//! (quantize real artifacts → prepare engines → batched generation),
+//! and the TCP front-end streams the same tokens bit for bit over
+//! loopback HTTP/SSE. The network tests are hermetic (synthetic
+//! model); the artifact tests skip when `make artifacts` hasn't run.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
 use btc_llm::benchsuite::load_workload;
-use btc_llm::coordinator::Server;
+use btc_llm::coordinator::{NetOptions, NetServer, Server};
 use btc_llm::data::{corpus, ByteTokenizer};
+use btc_llm::io::weights::ModelConfig;
 use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::fixture::synth_raw_model;
 
 #[test]
 #[cfg_attr(debug_assertions, ignore = "pipeline-heavy; run with cargo test --release")]
@@ -57,4 +65,211 @@ fn greedy_generation_continues_grammar() {
         "unexpected characters in {completion:?}"
     );
     server.shutdown();
+}
+
+// ---------------------------------------------------------------
+// Hermetic loopback tests: real OS TCP clients against NetServer,
+// on a synthetic model (no trained artifacts needed).
+// ---------------------------------------------------------------
+
+fn tiny_net_model() -> btc_llm::model::Transformer {
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 4,
+        n_kv_head: 2,
+        d_ff: 64,
+        max_seq: 128,
+        rope_theta: 10000.0,
+    };
+    let (raw, corpus) = synth_raw_model(3, cfg);
+    let mut qm = quantize_model(&raw, &corpus, &QuantConfig::fp16()).expect("quantize fp16");
+    qm.model.prepare_engines();
+    qm.model
+}
+
+fn ids_body(ids: &[u16]) -> String {
+    let inner = ids.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(",");
+    format!("[{inner}]")
+}
+
+/// One whole-request POST /generate round trip; returns the raw reply
+/// (status line + headers + chunked SSE body).
+fn post_generate(addr: std::net::SocketAddr, body: &str) -> String {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    write!(
+        conn,
+        "POST /generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .expect("write request");
+    let mut reply = String::new();
+    conn.read_to_string(&mut reply).expect("read reply");
+    reply
+}
+
+/// Token ids from the per-token SSE events, in arrival order.
+fn sse_tokens(reply: &str) -> Vec<u16> {
+    const EV: &str = "data: {\"token\":";
+    let mut out = Vec::new();
+    let mut rest = reply;
+    while let Some(i) = rest.find(EV) {
+        let tail = &rest[i + EV.len()..];
+        let end = tail.find('}').expect("token event closed");
+        out.push(tail[..end].parse::<u16>().expect("token id"));
+        rest = &tail[end..];
+    }
+    out
+}
+
+/// Generated ids from the final `done` event's `"tokens":[...]` array.
+fn final_tokens(reply: &str) -> Vec<u16> {
+    const KEY: &str = "\"tokens\":[";
+    let i = reply.find(KEY).expect("final done event present");
+    let tail = &reply[i + KEY.len()..];
+    let end = tail.find(']').expect("array closed");
+    if tail[..end].is_empty() {
+        return Vec::new();
+    }
+    tail[..end].split(',').map(|s| s.parse().expect("token id")).collect()
+}
+
+/// The acceptance bar for the wire layer: N OS-thread TCP clients
+/// receive token streams bit-identical to in-process
+/// `submit_streaming` on the same prompts (greedy determinism is
+/// preserved through HTTP parsing, SSE framing and co-scheduling).
+#[test]
+fn loopback_tcp_streams_are_bit_identical_to_in_process() {
+    let model = tiny_net_model();
+    let jobs: Vec<(Vec<u16>, usize)> = (0..4usize)
+        .map(|k| {
+            let plen = 2 + (k * 3) % 9;
+            let prompt = (0..plen).map(|j| ((j * 13 + k * 7) % 60) as u16).collect();
+            (prompt, 3 + k % 4)
+        })
+        .collect();
+
+    // In-process references: one request at a time, streamed.
+    let solo = Server::start(model.clone(), 1, Duration::from_millis(1), 7);
+    let mut want = Vec::new();
+    for (p, m) in &jobs {
+        let (srx, rrx) = solo.submit_streaming(p.clone(), *m, 0.0).expect("submit");
+        let streamed: Vec<u16> = srx.iter().collect();
+        let r = rrx.recv_timeout(Duration::from_secs(60)).expect("response");
+        assert_eq!(streamed, r.tokens[r.prompt_len..], "stream mirrors response");
+        want.push(streamed);
+    }
+    solo.shutdown();
+
+    // Same prompts, concurrently, over real sockets.
+    let server = Arc::new(Server::start(model, 4, Duration::from_millis(1), 7));
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let clients: Vec<_> = jobs
+        .iter()
+        .cloned()
+        .map(|(p, m)| {
+            std::thread::spawn(move || {
+                let body =
+                    format!("{{\"prompt\":{},\"max_new\":{m},\"stream\":true}}", ids_body(&p));
+                post_generate(addr, &body)
+            })
+        })
+        .collect();
+    for (client, want) in clients.into_iter().zip(&want) {
+        let reply = client.join().expect("client thread");
+        assert!(reply.contains("200 OK"), "unexpected reply:\n{reply}");
+        assert_eq!(&sse_tokens(&reply), want, "per-token SSE events are bit-identical");
+        assert_eq!(&final_tokens(&reply), want, "final event carries the same ids");
+    }
+    net.shutdown(Duration::from_secs(10));
+}
+
+/// Tearing the listener down mid-stream must never leave a connected
+/// client blocked: the client always receives a final `done` event
+/// (finish `length` if the generation beat the drain deadline,
+/// `cancelled` otherwise) and then a clean close.
+#[test]
+fn tcp_shutdown_mid_stream_unblocks_clients() {
+    let model = tiny_net_model();
+    let server = Arc::new(Server::start(model, 2, Duration::from_millis(1), 7));
+    let watch = server.clone();
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let client = std::thread::spawn(move || {
+        let body = r#"{"prompt":[5,6,7],"max_new":90,"stream":true}"#;
+        post_generate(addr, body)
+    });
+    // Wait until the generation is demonstrably mid-stream, then
+    // drain with a short deadline.
+    let t0 = std::time::Instant::now();
+    while watch.metrics.tokens_generated.load(std::sync::atomic::Ordering::Relaxed) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "generation never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    net.shutdown(Duration::from_millis(50));
+    let reply = client.join().expect("client thread returned — not blocked");
+    assert!(reply.contains("200 OK"), "unexpected reply:\n{reply}");
+    assert!(reply.contains("\"done\":true"), "client got a terminal event:\n{reply}");
+}
+
+/// A client that dribbles its request a few bytes at a time (partial
+/// reads on the server side) is still parsed and served normally.
+#[test]
+fn byte_dribbled_request_is_still_served() {
+    let model = tiny_net_model();
+    let server = Arc::new(Server::start(model, 2, Duration::from_millis(1), 7));
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let body = r#"{"prompt":[9,8,7],"max_new":4,"stream":true}"#;
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    for chunk in req.as_bytes().chunks(7) {
+        conn.write_all(chunk).expect("write chunk");
+        conn.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut reply = String::new();
+    conn.read_to_string(&mut reply).expect("read reply");
+    assert!(reply.contains("200 OK"), "unexpected reply:\n{reply}");
+    assert!(!sse_tokens(&reply).is_empty(), "tokens streamed:\n{reply}");
+    assert!(reply.contains("\"done\":true"), "terminal event present:\n{reply}");
+    net.shutdown(Duration::from_secs(10));
+}
+
+/// Wire-level rejects: malformed requests get clean 4xx + close, and
+/// an unknown path 404s — no panics, no hangs.
+#[test]
+fn malformed_requests_get_clean_errors_over_tcp() {
+    let model = tiny_net_model();
+    let server = Arc::new(Server::start(model, 2, Duration::from_millis(1), 7));
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let send = |raw: &str| -> String {
+        let mut conn = TcpStream::connect(addr).expect("connect");
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        conn.write_all(raw.as_bytes()).expect("write");
+        let mut reply = String::new();
+        conn.read_to_string(&mut reply).expect("read");
+        reply
+    };
+    let garbage = send("NOT A REQUEST\r\n\r\n");
+    assert!(garbage.contains("400"), "garbage request line:\n{garbage}");
+    let bad_json = send(
+        "POST /generate HTTP/1.1\r\nContent-Length: 9\r\n\r\nnot json!",
+    );
+    assert!(bad_json.contains("400"), "unparseable body:\n{bad_json}");
+    let missing = send("GET /nope HTTP/1.1\r\n\r\n");
+    assert!(missing.contains("404"), "unknown path:\n{missing}");
+    let health = send("GET /healthz HTTP/1.1\r\n\r\n");
+    assert!(health.contains("200 OK") && health.contains("ok"), "healthz:\n{health}");
+    net.shutdown(Duration::from_secs(5));
 }
