@@ -66,6 +66,19 @@ pub struct ServeConfig {
     /// `weights`, `priorities`, `max_pending`); empty = the implicit
     /// single "default" tenant.
     pub tenants: Vec<TenantSpec>,
+    /// Default wall-clock deadline per request in milliseconds
+    /// (`[serve] deadline_ms`); 0 = no deadline. Requests past their
+    /// deadline finish with partial output and
+    /// `FinishReason::DeadlineExceeded`.
+    pub deadline_ms: u64,
+    /// Per-tenant deadline overrides from the `[tenants] deadline_ms`
+    /// parallel array (0 = inherit the global `deadline_ms`). Always
+    /// the same length as `tenants`.
+    pub tenant_deadline_ms: Vec<u64>,
+    /// Fault-injection plan (`[serve] faults`), same grammar as the
+    /// `PALLAS_FAULTS` env var (see `util::faultpoint`). Empty =
+    /// disabled; production configs never set this.
+    pub faults: String,
 }
 
 impl Default for ServeConfig {
@@ -91,6 +104,9 @@ impl Default for ServeConfig {
             admission: AdmitPolicy::Fifo,
             eviction: EvictionKind::Newest,
             tenants: Vec::new(),
+            deadline_ms: 0,
+            tenant_deadline_ms: Vec::new(),
+            faults: String::new(),
         }
     }
 }
@@ -99,7 +115,7 @@ impl Default for ServeConfig {
 /// table arrays): `ids` is required when the section is present;
 /// `weights`/`priorities`/`max_pending` are optional but must match
 /// `ids` in length when given.
-fn parse_tenants(doc: &Doc) -> Result<Vec<TenantSpec>, String> {
+fn parse_tenants(doc: &Doc) -> Result<(Vec<TenantSpec>, Vec<u64>), String> {
     let ids: Vec<String> = match doc.get("tenants.ids") {
         Some(Value::Array(items)) => {
             let mut out = Vec::new();
@@ -113,12 +129,17 @@ fn parse_tenants(doc: &Doc) -> Result<Vec<TenantSpec>, String> {
         }
         Some(_) => return Err("[tenants] ids must be an array of strings".into()),
         None => {
-            for k in ["tenants.weights", "tenants.priorities", "tenants.max_pending"] {
+            for k in [
+                "tenants.weights",
+                "tenants.priorities",
+                "tenants.max_pending",
+                "tenants.deadline_ms",
+            ] {
                 if doc.get(k).is_some() {
                     return Err(format!("[tenants] has {k} but no ids array"));
                 }
             }
-            return Ok(Vec::new());
+            return Ok((Vec::new(), Vec::new()));
         }
     };
     let ints = |key: &str, default: i64| -> Result<Vec<i64>, String> {
@@ -143,6 +164,7 @@ fn parse_tenants(doc: &Doc) -> Result<Vec<TenantSpec>, String> {
     let weights = ints("tenants.weights", 1)?;
     let priorities = ints("tenants.priorities", 0)?;
     let max_pending = ints("tenants.max_pending", 0)?;
+    let deadline_ms = ints("tenants.deadline_ms", 0)?;
     let mut tenants = Vec::with_capacity(ids.len());
     for i in 0..ids.len() {
         if !(1..=u32::MAX as i64).contains(&weights[i]) {
@@ -163,6 +185,12 @@ fn parse_tenants(doc: &Doc) -> Result<Vec<TenantSpec>, String> {
                 ids[i], max_pending[i]
             ));
         }
+        if deadline_ms[i] < 0 {
+            return Err(format!(
+                "[tenants] tenant '{}' has deadline_ms {} (must be >= 0; 0 = inherit)",
+                ids[i], deadline_ms[i]
+            ));
+        }
         tenants.push(TenantSpec {
             id: ids[i].clone(),
             weight: weights[i] as u32,
@@ -170,7 +198,7 @@ fn parse_tenants(doc: &Doc) -> Result<Vec<TenantSpec>, String> {
             max_pending: max_pending[i] as usize,
         });
     }
-    Ok(tenants)
+    Ok((tenants, deadline_ms.iter().map(|&d| d as u64).collect()))
 }
 
 impl ServeConfig {
@@ -207,7 +235,18 @@ impl ServeConfig {
             }
             None => d.eviction,
         };
-        let tenants = parse_tenants(doc)?;
+        let (tenants, tenant_deadline_ms) = parse_tenants(doc)?;
+        let faults = match doc.get("serve.faults") {
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| "[serve] faults must be a string".to_string())?;
+                // Validate the spec at load time without installing it;
+                // installation happens at server start.
+                crate::util::faultpoint::validate(s)
+                    .map_err(|e| format!("[serve] faults: {e}"))?;
+                s.to_string()
+            }
+            None => d.faults.clone(),
+        };
         let cfg = ServeConfig {
             model: doc.get_str("serve.model", &d.model).to_string(),
             backend: doc.get_str("quant.backend", &d.backend).to_string(),
@@ -244,6 +283,9 @@ impl ServeConfig {
             admission,
             eviction,
             tenants,
+            deadline_ms: doc.get_int("serve.deadline_ms", d.deadline_ms as i64).max(0) as u64,
+            tenant_deadline_ms,
+            faults,
         };
         // Semantic QoS validation (duplicate/empty ids) lives in
         // QosConfig::validate — run it here so a bad file fails at
@@ -396,6 +438,35 @@ mod tests {
         assert_eq!(c.tenants[1].weight, 1);
         assert_eq!(c.tenants[1].priority, 0);
         assert_eq!(c.tenants[1].max_pending, 0);
+    }
+
+    #[test]
+    fn deadlines_and_faults_parse() {
+        // Defaults: no deadlines, no fault plan.
+        let c = from_str("").unwrap();
+        assert_eq!(c.deadline_ms, 0);
+        assert!(c.tenant_deadline_ms.is_empty());
+        assert!(c.faults.is_empty());
+        // Global deadline plus per-tenant overrides (0 = inherit).
+        let c = from_str(
+            "[serve]\ndeadline_ms = 5000\n[tenants]\nids = [\"a\", \"b\"]\n\
+             deadline_ms = [250, 0]\n",
+        )
+        .unwrap();
+        assert_eq!(c.deadline_ms, 5000);
+        assert_eq!(c.tenant_deadline_ms, vec![250, 0]);
+        // Omitted per-tenant array defaults to all-inherit.
+        let c = from_str("[tenants]\nids = [\"a\"]\n").unwrap();
+        assert_eq!(c.tenant_deadline_ms, vec![0]);
+        // A valid fault spec is carried through; a malformed one is a
+        // load-time error, not a worker surprise.
+        let c = from_str("[serve]\nfaults = \"kvpool.alloc=err%10;seed=3\"\n").unwrap();
+        assert_eq!(c.faults, "kvpool.alloc=err%10;seed=3");
+        let e = from_str("[serve]\nfaults = \"kvpool.alloc=frob@1\"\n").unwrap_err();
+        assert!(e.contains("faults"), "{e}");
+        // Negative per-tenant deadlines and orphan arrays are errors.
+        assert!(from_str("[tenants]\nids = [\"a\"]\ndeadline_ms = [-1]\n").is_err());
+        assert!(from_str("[tenants]\ndeadline_ms = [5]\n").is_err());
     }
 
     #[test]

@@ -88,6 +88,15 @@ pub struct Metrics {
     pub kv_admission_deferrals: AtomicU64,
     pub kv_round_deferrals: AtomicU64,
     pub kv_preemptions: AtomicU64,
+    /// Fault-isolation counters (DESIGN.md §10): model-call panics
+    /// caught by the scheduler's containment, slots quarantined with a
+    /// `Failed` response, worker loops re-spawned by the supervisor,
+    /// and requests reaped by their deadline or a client disconnect.
+    pub panics_caught: AtomicU64,
+    pub quarantines: AtomicU64,
+    pub worker_restarts: AtomicU64,
+    pub deadline_cancels: AtomicU64,
+    pub disconnect_cancels: AtomicU64,
     latencies_us: Mutex<Reservoir>,
     /// Submit → slot admission, one sample per request.
     queue_wait_us: Mutex<Reservoir>,
@@ -198,6 +207,31 @@ impl Metrics {
     /// The newest slot was evicted so an older one could grow.
     pub fn record_kv_preemption(&self) {
         self.kv_preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A model-call panic was caught by the scheduler's containment.
+    pub fn record_panic_caught(&self) {
+        self.panics_caught.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A slot was quarantined (its request answered `Failed`).
+    pub fn record_quarantine(&self) {
+        self.quarantines.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The supervisor re-spawned the worker loop after a panic.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was reaped past its deadline (partial output sent).
+    pub fn record_deadline_cancel(&self) {
+        self.deadline_cancels.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was reaped because its client went away.
+    pub fn record_disconnect_cancel(&self) {
+        self.disconnect_cancels.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Republish the KV pool gauges (scheduler, once per round).
@@ -368,7 +402,8 @@ impl Metrics {
              qwait_p50={}us ttft_p50={}us ttft_p95={}us itl_p50={}us itl_p95={}us \
              prefill={:.0}us/tok decode={:.0}us/tok inflight_peak={} \
              kv_blocks={}/{} kv_blocks_peak={} kv_bytes={} kv_bytes_peak={} kv_quant_blocks={} \
-             kv_shared_pos={} kv_defer={}+{} kv_preempt={}",
+             kv_shared_pos={} kv_defer={}+{} kv_preempt={} panics_caught={} quarantines={} \
+             worker_restarts={} deadline_cancels={} disconnect_cancels={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -394,6 +429,11 @@ impl Metrics {
             self.kv_admission_deferrals.load(Ordering::Relaxed),
             self.kv_round_deferrals.load(Ordering::Relaxed),
             self.kv_preemptions.load(Ordering::Relaxed),
+            self.panics_caught.load(Ordering::Relaxed),
+            self.quarantines.load(Ordering::Relaxed),
+            self.worker_restarts.load(Ordering::Relaxed),
+            self.deadline_cancels.load(Ordering::Relaxed),
+            self.disconnect_cancels.load(Ordering::Relaxed),
         )
     }
 }
@@ -488,6 +528,23 @@ mod tests {
         assert!(s.contains("kv_blocks=3/16"), "summary carries pool gauges: {s}");
         assert!(s.contains("kv_preempt=1") && s.contains("kv_defer=1+1"), "{s}");
         assert!(s.contains("inflight_peak=5"), "{s}");
+    }
+
+    #[test]
+    fn fault_counters_reach_the_summary() {
+        let m = Metrics::new();
+        m.record_panic_caught();
+        m.record_quarantine();
+        m.record_worker_restart();
+        m.record_deadline_cancel();
+        m.record_deadline_cancel();
+        m.record_disconnect_cancel();
+        let s = m.summary();
+        assert!(s.contains("panics_caught=1"), "{s}");
+        assert!(s.contains("quarantines=1"), "{s}");
+        assert!(s.contains("worker_restarts=1"), "{s}");
+        assert!(s.contains("deadline_cancels=2"), "{s}");
+        assert!(s.contains("disconnect_cancels=1"), "{s}");
     }
 
     #[test]

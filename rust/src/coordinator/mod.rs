@@ -38,6 +38,20 @@
 //! co-traffic — see DESIGN.md §6 for the determinism contract; the
 //! network layer preserves it bit for bit (`rust/tests/serving.rs`).
 //!
+//! **Fault isolation** (DESIGN.md §10) wraps that pipeline at three
+//! levels. Per request: a panic inside a model call is caught at the
+//! slot boundary — the scheduler replays the decode batch solo to
+//! attribute the culprit, quarantines it ([`FinishReason::Failed`]),
+//! releases its KV blocks and keeps serving the survivors
+//! bit-identically. Per worker: the serving thread is a supervisor
+//! loop with a bounded restart budget; a crash outside containment
+//! fails only the in-flight slots and preserves the pending queue.
+//! Per lifecycle: requests carry an optional wall-clock deadline and
+//! a [`CancelToken`] (tripped by client disconnect at the network
+//! layer), both honored between decode rounds with partial output.
+//! The deterministic fault-injection harness behind the chaos tests
+//! lives in `util/faultpoint.rs`.
+//!
 //! [`Metrics`]: metrics::Metrics
 //! [`EvictionPolicy`]: qos::EvictionPolicy
 
@@ -54,5 +68,5 @@ pub use net::{NetOptions, NetServer};
 pub use qos::{AdmitPolicy, EvictionKind, EvictionPolicy, QosConfig, TenantSpec};
 pub use scheduler::Scheduler;
 pub use server::{
-    FinishReason, GenRequest, GenResponse, ServeError, Server, ServerOptions, StopSet,
+    CancelToken, FinishReason, GenRequest, GenResponse, ServeError, Server, ServerOptions, StopSet,
 };

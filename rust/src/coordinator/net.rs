@@ -7,7 +7,8 @@
 //! **Wire protocol.**
 //! - `POST /generate` with a JSON body:
 //!   `{"prompt": [ids], "max_new": n, "temperature": t,
-//!     "stop": [ids], "eos": id, "tenant": "name", "stream": bool}`.
+//!     "stop": [ids], "eos": id, "tenant": "name", "stream": bool,
+//!     "deadline_ms": ms}`.
 //!   Only `prompt` is required. With `"stream": true` (the default)
 //!   the response is `Transfer-Encoding: chunked` server-sent events:
 //!   one `data: {"token": id}` event per generated token the moment
@@ -21,10 +22,22 @@
 //! **Backpressure contract.** The front-end buffers nothing per
 //! tenant: admission control is entirely the server's submit path.
 //! A tenant over its `max_pending` bound gets HTTP 429 immediately
-//! ([`ServeError::TenantOverloaded`]), a draining server 503, a dead
+//! ([`ServeError::TenantOverloaded`], with a `Retry-After` header so
+//! well-behaved clients back off), a draining server 503, a dead
 //! worker 500. Wire-layer abuse (oversized headers/body, malformed
 //! request line, bad JSON) is a clean 4xx + close — never a panic,
 //! never an unbounded buffer (pinned by the tests below).
+//!
+//! **Request lifecycle.** Every submission goes through
+//! [`Server::submit_qos_cancellable`]: `deadline_ms` in the body (or
+//! the server's configured default) bounds wall-clock time, and a
+//! client that hangs up trips the request's `CancelToken` — streaming
+//! connections when an SSE write fails, non-streaming ones via a
+//! 0-byte socket probe between response polls — so generation stops
+//! within one decode round instead of running to completion for
+//! nobody. A request quarantined by the scheduler
+//! (`finish: "failed"`, DESIGN.md §10) maps to HTTP 500 with the
+//! usual JSON body on the non-streaming path.
 //!
 //! **Streaming bridge.** Each connection thread submits with a
 //! [`std::sync::mpsc::Sender<u16>`] token channel — exactly the
@@ -409,6 +422,8 @@ struct GenerateSpec {
     /// `None` = the server's default stop set.
     stop: Option<StopSet>,
     stream: bool,
+    /// `None` = the server's configured default deadline.
+    deadline_ms: Option<u64>,
 }
 
 fn token_array(v: &Json, what: &str) -> Result<Vec<u16>, String> {
@@ -470,7 +485,17 @@ fn generate_spec(body: &[u8], opts: &NetOptions) -> Result<GenerateSpec, String>
         Some(s) => s.as_bool().ok_or("stream must be a boolean")?,
         None => true,
     };
-    Ok(GenerateSpec { tenant, prompt, max_new, temperature, stop, stream })
+    let deadline_ms = match v.get("deadline_ms") {
+        Some(d) => {
+            let n = d.as_f64().ok_or("deadline_ms must be a number")?;
+            if n.fract() != 0.0 || n < 1.0 || n > 1e12 {
+                return Err("deadline_ms must be an integer >= 1".into());
+            }
+            Some(n as u64)
+        }
+        None => None,
+    };
+    Ok(GenerateSpec { tenant, prompt, max_new, temperature, stop, stream, deadline_ms })
 }
 
 // ---------------------------------------------------------------------------
@@ -492,15 +517,36 @@ fn reason_phrase(status: u16) -> &'static str {
 }
 
 fn write_plain(w: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    write_plain_with(w, status, "", body)
+}
+
+/// Like [`write_plain`] with extra response headers (each terminated
+/// by `\r\n`), e.g. `Retry-After` on a 429.
+fn write_plain_with(
+    w: &mut TcpStream,
+    status: u16,
+    extra_headers: &str,
+    body: &str,
+) -> std::io::Result<()> {
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: text/plain\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: text/plain\r\n{}Content-Length: {}\r\nConnection: close\r\n\r\n{}",
         status,
         reason_phrase(status),
+        extra_headers,
         body.len(),
         body
     )?;
     w.flush()
+}
+
+/// Answer a refused submission. A 429 carries `Retry-After: 1` so a
+/// well-behaved client backs off instead of hammering the tenant's
+/// pending bound.
+fn write_submit_err(w: &mut TcpStream, e: &ServeError) -> std::io::Result<()> {
+    let status = submit_status(e);
+    let extra = if status == 429 { "Retry-After: 1\r\n" } else { "" };
+    write_plain_with(w, status, extra, &format!("{e}\n"))
 }
 
 fn write_json(w: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
@@ -516,6 +562,10 @@ fn write_json(w: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()>
 }
 
 fn write_chunk(w: &mut TcpStream, data: &str) -> std::io::Result<()> {
+    crate::fault_point!(
+        "net.write",
+        return Err(std::io::Error::new(ErrorKind::BrokenPipe, "injected fault: net.write"))
+    );
     write!(w, "{:x}\r\n{}\r\n", data.len(), data)?;
     w.flush()
 }
@@ -526,6 +576,8 @@ fn finish_str(f: FinishReason) -> &'static str {
         FinishReason::Stop => "stop",
         FinishReason::Eos => "eos",
         FinishReason::Cancelled => "cancelled",
+        FinishReason::DeadlineExceeded => "deadline_exceeded",
+        FinishReason::Failed => "failed",
     }
 }
 
@@ -610,20 +662,23 @@ fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], opts: &
     };
     if spec.stream {
         let (stx, srx) = channel();
-        let rrx = match server.submit_qos(
+        let submitted = server.submit_qos_cancellable(
             &spec.tenant,
             spec.prompt,
             spec.max_new,
             spec.temperature,
             spec.stop,
             Some(stx),
-        ) {
-            Ok(rrx) => rrx,
+            spec.deadline_ms,
+        );
+        let (rrx, cancel) = match submitted {
+            Ok(pair) => pair,
             Err(e) => {
-                let _ = write_plain(stream, submit_status(&e), &format!("{e}\n"));
+                let _ = write_submit_err(stream, &e);
                 return;
             }
         };
+        let mut client_gone = false;
         if write!(
             stream,
             "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
@@ -631,9 +686,12 @@ fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], opts: &
         .and_then(|_| stream.flush())
         .is_err()
         {
-            return; // client gone; the generation still completes server-side
+            // Client gone before the response line: stop generating
+            // for nobody, then drain below so the request's blocks
+            // are provably released before the thread exits.
+            client_gone = true;
+            cancel.cancel();
         }
-        let mut client_gone = false;
         loop {
             match srx.recv_timeout(Duration::from_millis(200)) {
                 Ok(tok) => {
@@ -642,8 +700,10 @@ fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], opts: &
                     {
                         // Keep draining the channel so the worker's
                         // sends never error into a closed buffer, but
-                        // stop writing.
+                        // stop writing — and stop generating: a dead
+                        // socket cancels the request between rounds.
                         client_gone = true;
+                        cancel.cancel();
                     }
                 }
                 Err(RecvTimeoutError::Timeout) => continue,
@@ -666,29 +726,54 @@ fn handle_generate(server: &Server, stream: &mut TcpStream, body: &[u8], opts: &
             }
         }
     } else {
-        let rrx = match server.submit_qos(
+        let submitted = server.submit_qos_cancellable(
             &spec.tenant,
             spec.prompt,
             spec.max_new,
             spec.temperature,
             spec.stop,
             None,
-        ) {
-            Ok(rrx) => rrx,
+            spec.deadline_ms,
+        );
+        let (rrx, cancel) = match submitted {
+            Ok(pair) => pair,
             Err(e) => {
-                let _ = write_plain(stream, submit_status(&e), &format!("{e}\n"));
+                let _ = write_submit_err(stream, &e);
                 return;
             }
         };
-        match rrx.recv() {
-            Ok(r) => {
-                let body = response_json(&r);
-                let _ = write_json(stream, 200, &body);
+        // Poll the response channel, probing the socket between
+        // polls: a 0-byte read means the client hung up, and tripping
+        // the cancel token stops generation within one decode round
+        // instead of running the request to completion for nobody.
+        let r = loop {
+            match rrx.recv_timeout(Duration::from_millis(100)) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Extra bytes before the response are not part of
+                    // this one-request protocol and are ignored; only
+                    // a 0-byte read (orderly close) or a hard socket
+                    // error counts as the client leaving.
+                    let mut probe = [0u8; 64];
+                    let gone = match stream.read(&mut probe) {
+                        Ok(n) => n == 0,
+                        Err(e) => !matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut),
+                    };
+                    if gone {
+                        cancel.cancel();
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    let _ = write_plain(stream, 500, "worker gone before responding\n");
+                    return;
+                }
             }
-            Err(_) => {
-                let _ = write_plain(stream, 500, "worker gone before responding\n");
-            }
-        }
+        };
+        // A quarantined request (DESIGN.md §10) is a server-side
+        // failure: surface it as 500, body still carrying the finish
+        // reason and any partial output.
+        let status = if r.finish == FinishReason::Failed { 500 } else { 200 };
+        let _ = write_json(stream, status, &response_json(&r));
     }
 }
 
@@ -970,9 +1055,10 @@ mod tests {
         assert_eq!(s.stop, None, "no stop/eos fields = server default stop set");
         assert_eq!(s.tenant, "default");
         assert!(s.stream, "streaming is the default");
+        assert_eq!(s.deadline_ms, None, "no deadline field = server default");
         let s = generate_spec(
             br#"{"prompt": [7], "max_new": 4, "temperature": 0.5, "stop": [10],
-                 "eos": 2, "tenant": "alice", "stream": false}"#,
+                 "eos": 2, "tenant": "alice", "stream": false, "deadline_ms": 250}"#,
             &o,
         )
         .unwrap();
@@ -981,6 +1067,7 @@ mod tests {
         assert_eq!(s.stop, Some(StopSet { eos: Some(2), stops: vec![10] }));
         assert_eq!(s.tenant, "alice");
         assert!(!s.stream);
+        assert_eq!(s.deadline_ms, Some(250));
         // Eos alone still builds a stop set.
         let s = generate_spec(br#"{"prompt": [7], "eos": 2}"#, &o).unwrap();
         assert_eq!(s.stop, Some(StopSet { eos: Some(2), stops: vec![] }));
@@ -995,6 +1082,9 @@ mod tests {
             br#"{"prompt": [1], "max_new": "lots"}"#,
             br#"{"prompt": [1], "stream": "yes"}"#,
             br#"{"prompt": [1], "tenant": 7}"#,
+            br#"{"prompt": [1], "deadline_ms": 0}"#,
+            br#"{"prompt": [1], "deadline_ms": 1.5}"#,
+            br#"{"prompt": [1], "deadline_ms": "soon"}"#,
             br#"not json at all"#,
         ] {
             assert!(generate_spec(bad, &o).is_err(), "{:?}", String::from_utf8_lossy(bad));
@@ -1006,6 +1096,8 @@ mod tests {
         assert_eq!(ids_json(&[1, 22, 333]), "[1,22,333]");
         assert_eq!(ids_json(&[]), "[]");
         assert_eq!(finish_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(finish_str(FinishReason::DeadlineExceeded), "deadline_exceeded");
+        assert_eq!(finish_str(FinishReason::Failed), "failed");
         assert_eq!(reason_phrase(429), "Too Many Requests");
         assert_eq!(
             submit_status(&ServeError::TenantOverloaded { tenant: "x".into() }),

@@ -418,6 +418,36 @@ impl PendingQueues {
         }
     }
 
+    /// Remove and return every request matching `pred`, from every
+    /// queue, preserving relative order among the survivors (the
+    /// deadline/disconnect reaping path). Credits of queues emptied by
+    /// the extraction re-zero, matching `pop`'s no-hoarding rule.
+    pub fn extract_where(&mut self, mut pred: impl FnMut(&GenRequest) -> bool) -> Vec<GenRequest> {
+        let mut out = Vec::new();
+        let mut take = |q: &mut VecDeque<GenRequest>, out: &mut Vec<GenRequest>| {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for req in q.drain(..) {
+                if pred(&req) {
+                    out.push(req);
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            *q = kept;
+        };
+        take(&mut self.fifo, &mut out);
+        for q in &mut self.queues {
+            take(q, &mut out);
+        }
+        self.count -= out.len();
+        for (t, q) in self.queues.iter().enumerate() {
+            if q.is_empty() {
+                self.credits[t] = 0;
+            }
+        }
+        out
+    }
+
     /// Remove everything (graceful-drain cancellation path).
     pub fn drain_all(&mut self) -> Vec<GenRequest> {
         let mut out: Vec<GenRequest> = self.fifo.drain(..).collect();
@@ -448,6 +478,8 @@ mod tests {
             respond: tx,
             submitted: Instant::now(),
             tenant,
+            deadline: None,
+            cancel: crate::coordinator::server::CancelToken::default(),
         }
     }
 
@@ -557,6 +589,38 @@ mod tests {
             let got = q.pop().unwrap();
             assert_eq!(got.prompt, want, "peek must predict pop");
         }
+    }
+
+    #[test]
+    fn extract_where_removes_matches_and_preserves_order() {
+        let c = cfg(
+            vec![tenant("a", 1, 0), tenant("b", 1, 0)],
+            AdmitPolicy::WeightedRoundRobin,
+        );
+        let mut q = PendingQueues::new(&c);
+        for i in 0..4 {
+            q.push(req(0, i));
+        }
+        q.push(req(1, 100));
+        // Pull the even-tagged requests of tenant 0.
+        let dead = q.extract_where(|r| r.tenant == 0 && r.prompt[0] % 2 == 0);
+        assert_eq!(dead.len(), 2);
+        assert_eq!(q.len(), 3);
+        let order: Vec<u16> = std::iter::from_fn(|| q.pop()).map(|r| r.prompt[0]).collect();
+        // Survivors keep their relative order under the WRR drain.
+        assert_eq!(order, vec![1, 100, 3]);
+        // Extracting nothing is a no-op; extracting from empty too.
+        assert!(q.extract_where(|_| true).is_empty());
+        // FIFO mode walks the global queue the same way.
+        let cf = cfg(vec![tenant("a", 1, 0)], AdmitPolicy::Fifo);
+        let mut qf = PendingQueues::new(&cf);
+        for i in 0..3 {
+            qf.push(req(0, i));
+        }
+        let dead = qf.extract_where(|r| r.prompt[0] == 1);
+        assert_eq!(dead.len(), 1);
+        let order: Vec<u16> = std::iter::from_fn(|| qf.pop()).map(|r| r.prompt[0]).collect();
+        assert_eq!(order, vec![0, 2]);
     }
 
     #[test]

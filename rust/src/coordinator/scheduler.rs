@@ -392,10 +392,13 @@ impl Scheduler {
         }
     }
 
-    /// One scheduling round: admissions, bounded prefill chunks, one
-    /// fused decode, retirements compacted out, cold blocks
-    /// re-encoded, pool gauges published. Does nothing when idle.
+    /// One scheduling round: expiry/cancellation reaping, admissions,
+    /// bounded prefill chunks, one fused decode, retirements compacted
+    /// out, cold blocks re-encoded, pool gauges published. Does
+    /// nothing when idle.
     pub fn step(&mut self, rng: &mut Rng) {
+        self.reap_expired();
+        self.retire_done();
         self.try_admit_pending();
         self.prefill_round(rng);
         self.retire_done();
@@ -403,6 +406,62 @@ impl Scheduler {
         self.retire_done();
         self.try_admit_pending();
         self.housekeep();
+    }
+
+    /// Retire requests whose client hung up ([`CancelToken`]
+    /// tripped → `Cancelled`) or whose wall-clock deadline passed
+    /// (`DeadlineExceeded`), both in-flight and still pending. Runs at
+    /// the top of every round, so either signal takes effect within
+    /// one decode round: in-flight slots deliver their partial output
+    /// and free their KV blocks at the `retire_done` that follows;
+    /// pending requests answer immediately without ever taking a slot.
+    fn reap_expired(&mut self) {
+        let now = Instant::now();
+        for slot in &mut self.slots {
+            if matches!(slot.state, SlotState::Done(_)) {
+                continue;
+            }
+            if slot.req.cancel.is_cancelled() {
+                self.metrics.record_disconnect_cancel();
+                slot.state = SlotState::Done(FinishReason::Cancelled);
+            } else if slot.req.deadline.is_some_and(|d| now >= d) {
+                self.metrics.record_deadline_cancel();
+                slot.state = SlotState::Done(FinishReason::DeadlineExceeded);
+            }
+        }
+        let dead = self.pending.extract_where(|req| {
+            req.cancel.is_cancelled() || req.deadline.is_some_and(|d| now >= d)
+        });
+        if !dead.is_empty() {
+            // The parked head may be among the extracted: re-evaluate.
+            self.head_deferred = false;
+        }
+        for req in dead {
+            self.note_dequeued(&req);
+            if req.cancel.is_cancelled() {
+                self.metrics.record_disconnect_cancel();
+                self.complete_unserved(req, FinishReason::Cancelled);
+            } else {
+                self.metrics.record_deadline_cancel();
+                self.complete_unserved(req, FinishReason::DeadlineExceeded);
+            }
+        }
+    }
+
+    /// Post-panic recovery (the server's supervisor calls this after
+    /// catching a panic that escaped round-level containment): every
+    /// in-flight request is answered with [`FinishReason::Failed`] and
+    /// its KV blocks are released; the pending queue is preserved so
+    /// queued requests are served by the restarted loop.
+    pub fn recover(&mut self) {
+        for slot in &mut self.slots {
+            if !matches!(slot.state, SlotState::Done(_)) {
+                slot.state = SlotState::Done(FinishReason::Failed);
+            }
+        }
+        self.retire_done();
+        self.head_deferred = false;
+        self.publish_kv_metrics();
     }
 
     /// Ensure slot `i` can append `extra` positions, preempting slots
@@ -485,14 +544,25 @@ impl Scheduler {
             }
             budget -= n;
             let t0 = Instant::now();
+            // Containment: prefill is per-slot, so a panicking forward
+            // (poisoned prompt, injected fault) is attributable to
+            // exactly this request — quarantine it with an explicit
+            // `Failed` response and keep serving everyone else. The
+            // forwards advance `cache.len()` only at the very end, so
+            // a mid-forward unwind leaves the cache consistent.
             if consumed + n >= plen {
                 // Final chunk: its logits seed the next output token.
                 let slot = &mut self.slots[i];
-                let logits = self.model.prefill_paged(
-                    &slot.tokens[consumed..consumed + n],
-                    &mut slot.cache,
-                    &mut self.pool,
-                );
+                let (model, pool) = (&self.model, &mut self.pool);
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::fault_point!("sched.prefill");
+                    let toks = &slot.tokens[consumed..consumed + n];
+                    model.prefill_paged(toks, &mut slot.cache, pool)
+                }));
+                let Ok(logits) = run else {
+                    self.quarantine(i);
+                    continue;
+                };
                 self.metrics.record_prefill(n, t0.elapsed().as_micros() as u64);
                 self.pool
                     .register_prompt_blocks(&self.slots[i].cache, &self.slots[i].req.prompt);
@@ -502,17 +572,31 @@ impl Scheduler {
                 // Mid-prompt chunk: nobody reads these logits — skip
                 // the lm-head projection entirely.
                 let slot = &mut self.slots[i];
-                self.model.prefill_extend_paged(
-                    &slot.tokens[consumed..consumed + n],
-                    &mut slot.cache,
-                    &mut self.pool,
-                );
+                let (model, pool) = (&self.model, &mut self.pool);
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    crate::fault_point!("sched.prefill");
+                    let toks = &slot.tokens[consumed..consumed + n];
+                    model.prefill_extend_paged(toks, &mut slot.cache, pool);
+                }));
+                if run.is_err() {
+                    self.quarantine(i);
+                    continue;
+                }
                 self.metrics.record_prefill(n, t0.elapsed().as_micros() as u64);
                 self.slots[i].state = SlotState::Prefill { consumed: consumed + n };
                 self.pool
                     .register_prompt_blocks(&self.slots[i].cache, &self.slots[i].req.prompt);
             }
         }
+    }
+
+    /// Contain a panic to slot `i`: count it, mark the slot `Failed`
+    /// (the next `retire_done` answers the client and releases its KV
+    /// blocks), and leave every other slot untouched.
+    fn quarantine(&mut self, i: usize) {
+        self.metrics.record_panic_caught();
+        self.metrics.record_quarantine();
+        self.slots[i].state = SlotState::Done(FinishReason::Failed);
     }
 
     /// One fused decode forward over every decoding slot that has (or
@@ -548,14 +632,67 @@ impl Scheduler {
         let mut caches: Vec<PagedKvCache> =
             ready.iter().map(|&i| std::mem::take(&mut self.slots[i].cache)).collect();
         let t0 = Instant::now();
-        let logits = self.model.decode_batch_paged(&toks, &mut caches, &mut self.pool);
-        self.metrics.record_decode(toks.len(), t0.elapsed().as_micros() as u64);
-        for (j, cache) in caches.into_iter().enumerate() {
-            self.slots[ready[j]].cache = cache;
+        // Containment: the fused forward mixes every decoding slot, so
+        // a panic in it (poisoned token, injected fault) is not
+        // attributable from here. Catch it, put the caches back (the
+        // forward advances `cache.len()` only at the very end, so an
+        // unwind leaves them consistent), and isolate the culprit by
+        // replaying each slot solo below.
+        let (model, pool) = (&self.model, &mut self.pool);
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::fault_point!("sched.decode");
+            for &t in &toks {
+                let _ = crate::util::faultpoint::hit_val("decode.token", t as u64);
+            }
+            model.decode_batch_paged(&toks, &mut caches, pool)
+        }));
+        match run {
+            Ok(logits) => {
+                self.metrics.record_decode(toks.len(), t0.elapsed().as_micros() as u64);
+                for (j, cache) in caches.into_iter().enumerate() {
+                    self.slots[ready[j]].cache = cache;
+                }
+                for (b, &i) in ready.iter().enumerate() {
+                    let next = sample(logits.row(b), self.slots[i].req.temperature, rng);
+                    self.accept(i, next);
+                }
+            }
+            Err(_) => {
+                self.metrics.record_panic_caught();
+                for (j, cache) in caches.into_iter().enumerate() {
+                    self.slots[ready[j]].cache = cache;
+                }
+                self.replay_solo(&ready, &toks, rng);
+            }
         }
-        for (b, &i) in ready.iter().enumerate() {
-            let next = sample(logits.row(b), self.slots[i].req.temperature, rng);
-            self.accept(i, next);
+    }
+
+    /// Isolate the culprit(s) of a fused-decode panic: replay each
+    /// participating slot as a batch of one, feeding the same pending
+    /// token it would have contributed to the fused round. Slots whose
+    /// solo forward succeeds accept their sampled token exactly as the
+    /// fused path would have (solo ≡ fused bit-identically — pinned by
+    /// `rust/tests/batch_equivalence.rs`), so survivors of a
+    /// quarantined neighbor stay deterministic. Slots that panic again
+    /// are quarantined with [`FinishReason::Failed`].
+    fn replay_solo(&mut self, ready: &[usize], toks: &[u16], rng: &mut Rng) {
+        for (j, &i) in ready.iter().enumerate() {
+            let tok = toks[j];
+            let t0 = Instant::now();
+            let slot = &mut self.slots[i];
+            let (model, pool) = (&self.model, &mut self.pool);
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = crate::util::faultpoint::hit_val("decode.token", tok as u64);
+                model.decode_batch_paged(&[tok], std::slice::from_mut(&mut slot.cache), pool)
+            }));
+            match run {
+                Ok(logits) => {
+                    self.metrics.record_decode(1, t0.elapsed().as_micros() as u64);
+                    let next = sample(logits.row(0), self.slots[i].req.temperature, rng);
+                    self.accept(i, next);
+                }
+                Err(_) => self.quarantine(i),
+            }
         }
     }
 
@@ -679,7 +816,7 @@ pub(crate) fn sample(logits: &[f32], temperature: f64, rng: &mut Rng) -> u16 {
 mod tests {
     use super::*;
     use crate::coordinator::qos::{AdmitPolicy, EvictionKind, QosConfig, TenantSpec};
-    use crate::coordinator::server::{Server, ServerOptions, StopSet};
+    use crate::coordinator::server::{CancelToken, Server, ServerOptions, StopSet};
     use crate::model::transformer::tests::tiny_model;
     use crate::quant::kvquant::KvQuantConfig;
 
@@ -758,6 +895,8 @@ mod tests {
             respond,
             submitted: Instant::now(),
             tenant,
+            deadline: None,
+            cancel: CancelToken::default(),
         }
     }
 
@@ -1263,6 +1402,117 @@ mod tests {
         }
         use std::sync::atomic::Ordering::Relaxed;
         assert!(metrics.kv_preemptions.load(Relaxed) > 0, "eviction path exercised");
+    }
+
+    // -- fault containment & request lifecycle ------------------------------
+
+    #[test]
+    fn poisoned_prefill_is_quarantined_not_fatal() {
+        // Token 999 is out of the tiny model's vocab (32): its prefill
+        // panics on the embedding lookup. The panic must be contained
+        // to that slot — Failed response, blocks released — while a
+        // concurrently-admitted healthy request generates exactly its
+        // solo output.
+        let m = tiny_model(12, 4);
+        let healthy_job: (Vec<u16>, usize) = (vec![3, 1, 4, 1, 5], 6);
+        let solo = solo_tokens(&m, &[healthy_job.clone()]);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m, metrics.clone(), 4, 64);
+        let mut rng = Rng::new(7);
+        let (ptx, prx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![999], 4, ptx));
+        let (htx, hrx) = std::sync::mpsc::channel();
+        sched.admit(request(healthy_job.0.clone(), healthy_job.1, htx));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000, "poisoned batch must still drain");
+        }
+        let poisoned = prx.try_recv().expect("poisoned request answered");
+        assert_eq!(poisoned.finish, FinishReason::Failed);
+        assert_eq!(poisoned.tokens.len(), poisoned.prompt_len, "no tokens generated");
+        let healthy = hrx.try_recv().expect("healthy request answered");
+        assert_eq!(healthy.tokens, solo[0], "survivor must match its solo run");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(metrics.panics_caught.load(Relaxed) >= 1);
+        assert_eq!(metrics.quarantines.load(Relaxed), 1);
+        assert_eq!(sched.pool().blocks_in_use(), 0, "quarantined slot returned its blocks");
+    }
+
+    #[test]
+    fn reap_answers_cancelled_and_expired_requests_within_a_round() {
+        // One slot: request A decodes, B waits pending with an
+        // already-expired deadline, C waits pending and gets cancelled
+        // by its client. One step later both are answered without ever
+        // taking a slot, and A proceeds unharmed.
+        let m = tiny_model(10, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m, metrics.clone(), 1, 64);
+        let mut rng = Rng::new(7);
+        let (atx, arx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2, 3], 6, atx));
+        sched.step(&mut rng); // A slotted + decoding
+        let (btx, brx) = std::sync::mpsc::channel();
+        let mut b = request(vec![4, 5], 8, btx);
+        b.deadline = Some(Instant::now() - Duration::from_millis(1));
+        sched.admit(b);
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let c = request(vec![6, 7], 8, ctx);
+        let c_cancel = c.cancel.clone();
+        sched.admit(c);
+        assert_eq!(sched.pending_len(), 2);
+        c_cancel.cancel();
+        sched.step(&mut rng);
+        let rb = brx.try_recv().expect("expired pending request answered");
+        assert_eq!(rb.finish, FinishReason::DeadlineExceeded);
+        assert_eq!(rb.tokens.len(), rb.prompt_len);
+        let rc = crx.try_recv().expect("cancelled pending request answered");
+        assert_eq!(rc.finish, FinishReason::Cancelled);
+        assert_eq!(sched.pending_len(), 0);
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000);
+        }
+        let ra = arx.try_recv().expect("healthy request unaffected");
+        assert_eq!(ra.tokens.len() - ra.prompt_len, 6);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(metrics.deadline_cancels.load(Relaxed), 1);
+        assert_eq!(metrics.disconnect_cancels.load(Relaxed), 1);
+        assert_eq!(sched.pool().blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn recover_fails_in_flight_but_preserves_the_pending_queue() {
+        // recover() is the supervisor's half of worker-restart: slots
+        // answer Failed and release memory; pending requests survive
+        // to be served by the restarted loop.
+        let m = tiny_model(11, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m, metrics, 1, 64);
+        let mut rng = Rng::new(7);
+        let (atx, arx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![1, 2, 3], 32, atx));
+        sched.step(&mut rng); // A slotted + decoding
+        let (btx, brx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![4, 5], 3, btx));
+        assert_eq!((sched.in_flight(), sched.pending_len()), (1, 1));
+        sched.recover();
+        let ra = arx.try_recv().expect("in-flight answered on recover");
+        assert_eq!(ra.finish, FinishReason::Failed);
+        assert!(ra.tokens.len() > ra.prompt_len, "partial output preserved");
+        assert_eq!(sched.pool().blocks_in_use(), 0, "recover releases every block");
+        assert_eq!(sched.pending_len(), 1, "pending queue preserved");
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000);
+        }
+        let rb = brx.try_recv().expect("queued request served after recovery");
+        assert_eq!(rb.tokens.len() - rb.prompt_len, 3);
     }
 
     #[test]

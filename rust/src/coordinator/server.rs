@@ -17,6 +17,16 @@
 //! — a 429 on the wire) while queue *ordering* is the scheduler's
 //! admission policy (`coordinator/qos.rs`).
 //!
+//! **Fault isolation.** Per-request faults (a poisoned prompt, an
+//! injected panic) are contained by the scheduler: the culprit slot is
+//! quarantined and answered with [`FinishReason::Failed`] while
+//! concurrent requests keep decoding, bit-identical to a fault-free
+//! run. Panics that escape that containment are absorbed by a
+//! supervisor around the worker loop, which recovers the scheduler and
+//! restarts under a bounded budget. Requests also carry an optional
+//! wall-clock deadline and a [`CancelToken`] (client disconnect); both
+//! take effect between decode rounds. See DESIGN.md §10.
+//!
 //! **Shutdown.** [`Server::shutdown`] keeps the historical contract:
 //! close the queue and serve everything already submitted to
 //! completion. [`Server::shutdown_within`] is the bounded drain:
@@ -53,9 +63,40 @@ pub enum FinishReason {
     Stop,
     /// Emitted the EOS token.
     Eos,
-    /// Cut short by a bounded server drain (`shutdown_within`): the
-    /// response carries whatever was generated before the deadline.
+    /// Cut short by a bounded server drain (`shutdown_within`) or a
+    /// client disconnect: the response carries whatever was generated
+    /// before the cut.
     Cancelled,
+    /// The request ran past its wall-clock deadline (`deadline_ms`):
+    /// the response carries the tokens generated so far.
+    DeadlineExceeded,
+    /// The request's own forward pass panicked (poisoned input,
+    /// injected fault) and the slot was quarantined. The response
+    /// carries whatever was generated before the fault; concurrent
+    /// requests are unaffected.
+    Failed,
+}
+
+/// Cooperative cancellation handle for one request. The submit paths
+/// hand one back; [`CancelToken::cancel`] (e.g. on client disconnect)
+/// makes the scheduler retire the request between decode rounds with
+/// [`FinishReason::Cancelled`], freeing its KV blocks immediately.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation; takes effect within one decode round.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
 }
 
 /// Stop conditions for one request: an optional EOS token id plus a
@@ -132,6 +173,13 @@ pub struct GenRequest {
     /// Index into the server's tenant table (out-of-range clamps to
     /// the last tenant; 0 for anonymous submits).
     pub tenant: u32,
+    /// Absolute wall-clock deadline; past it the scheduler retires the
+    /// request with [`FinishReason::DeadlineExceeded`]. `None` = run
+    /// to completion.
+    pub deadline: Option<Instant>,
+    /// Cooperative cancellation (client disconnect); checked between
+    /// decode rounds.
+    pub cancel: CancelToken,
 }
 
 /// A completed generation.
@@ -225,6 +273,16 @@ pub struct ServerOptions {
     /// single anonymous tenant with FIFO admission and newest-slot
     /// eviction — the pre-QoS behavior, bit for bit.
     pub qos: QosConfig,
+    /// Default per-request deadline in milliseconds (0 = none).
+    /// Applied at submit time when the request carries no explicit
+    /// deadline and its tenant has no override.
+    pub deadline_ms: u64,
+    /// Per-tenant deadline defaults, parallel to `qos.tenants`
+    /// (0 = inherit `deadline_ms`; missing entries inherit too).
+    pub tenant_deadline_ms: Vec<u64>,
+    /// Fault-injection plan installed in the worker thread at start
+    /// (`util::faultpoint` grammar). Empty = disabled.
+    pub faults: String,
 }
 
 impl Default for ServerOptions {
@@ -241,6 +299,9 @@ impl Default for ServerOptions {
             kv_bits: 16,
             kv_local_window: 16,
             qos: QosConfig::default(),
+            deadline_ms: 0,
+            tenant_deadline_ms: Vec::new(),
+            faults: String::new(),
         }
     }
 }
@@ -259,6 +320,9 @@ impl From<&ServeConfig> for ServerOptions {
             kv_bits: c.kv_bits,
             kv_local_window: c.kv_local_window,
             qos: c.qos_config(),
+            deadline_ms: c.deadline_ms,
+            tenant_deadline_ms: c.tenant_deadline_ms.clone(),
+            faults: c.faults.clone(),
         }
     }
 }
@@ -293,6 +357,74 @@ impl DrainSignal {
     }
 }
 
+/// How many worker-loop panics the supervisor absorbs before
+/// declaring the server unrecoverable. Round-level containment in the
+/// scheduler already quarantines per-request faults; a panic that
+/// reaches the supervisor means containment itself failed, so the
+/// budget is deliberately small.
+const RESTART_BUDGET: u32 = 3;
+
+/// One scheduling life: admit + step until the submit channel closes
+/// and everything drains (or a bounded drain completes). Returning
+/// normally is clean shutdown; a panic escaping this function is
+/// caught by the supervisor in [`Server::try_start_with_opts`], which
+/// recovers the scheduler and calls back in.
+fn worker_loop(
+    sched: &mut Scheduler,
+    rng: &mut Rng,
+    rx: &Receiver<GenRequest>,
+    drain: &DrainSignal,
+    max_batch: usize,
+    batch_wait: Duration,
+) {
+    loop {
+        crate::fault_point!("worker.round");
+        let draining = drain.draining();
+        if sched.is_idle() {
+            if draining {
+                return;
+            }
+            // Nothing in flight: block for work (and linger
+            // `batch_wait` for co-arrivals, as the batch-mode loop
+            // always did).
+            let batch = collect_batch(rx, max_batch, batch_wait);
+            if batch.is_empty() {
+                return; // channel closed and drained
+            }
+            if drain.draining() {
+                // Drain began while we were blocked: these arrivals
+                // get explicit Cancelled responses.
+                for req in batch {
+                    sched.cancel_submitted(req);
+                }
+                return;
+            }
+            for req in batch {
+                sched.admit(req);
+            }
+            // Pull in whatever else already arrived, so the admission
+            // order is the QoS policy's, not the channel's.
+            let _ = sched.admit_ready(rx);
+        } else if draining {
+            // Bounded drain: stop admitting, cancel everything still
+            // queued; in-flight slots keep decoding until the
+            // deadline, then are cancelled too.
+            while let Ok(req) = rx.try_recv() {
+                sched.cancel_submitted(req);
+            }
+            sched.cancel_pending();
+            if drain.deadline_passed() {
+                sched.cancel_in_flight();
+            }
+        } else {
+            // Busy: admit whatever is already queued, without waiting
+            // — in-flight requests keep decoding.
+            let _ = sched.admit_ready(rx);
+        }
+        sched.step(rng);
+    }
+}
+
 /// Handle to a running server. Shutdown takes `&self`, so the handle
 /// can sit behind an `Arc` shared with the network front-end.
 pub struct Server {
@@ -305,6 +437,10 @@ pub struct Server {
     pub threads: usize,
     /// Default stop conditions for [`Server::submit`].
     stop: StopSet,
+    /// Global default deadline (ms; 0 = none).
+    deadline_ms: u64,
+    /// Per-tenant deadline defaults (0/missing = inherit).
+    tenant_deadline_ms: Vec<u64>,
 }
 
 impl Server {
@@ -373,6 +509,9 @@ impl Server {
             kv_bits,
             kv_local_window,
             qos,
+            deadline_ms,
+            tenant_deadline_ms,
+            faults,
             ..
         } = opts;
         let pool_cfg = PoolConfig {
@@ -385,57 +524,53 @@ impl Server {
         let worker_qos = qos_state.clone();
         let worker_drain = drain.clone();
         let worker = std::thread::spawn(move || {
-            let mut rng = Rng::new(seed);
-            let mut sched =
-                Scheduler::with_qos(model, m, max_batch, prefill_chunk, pool_cfg, worker_qos);
-            loop {
-                let draining = worker_drain.draining();
-                if sched.is_idle() {
-                    if draining {
-                        break;
-                    }
-                    // Nothing in flight: block for work (and linger
-                    // `batch_wait` for co-arrivals, as the batch-mode
-                    // loop always did).
-                    let batch = collect_batch(&rx, max_batch, batch_wait);
-                    if batch.is_empty() {
-                        break; // channel closed and drained
-                    }
-                    if worker_drain.draining() {
-                        // Drain began while we were blocked: these
-                        // arrivals get explicit Cancelled responses.
-                        for req in batch {
-                            sched.cancel_submitted(req);
-                        }
-                        break;
-                    }
-                    for req in batch {
-                        sched.admit(req);
-                    }
-                    // Pull in whatever else already arrived, so the
-                    // admission order is the QoS policy's, not the
-                    // channel's.
-                    let _ = sched.admit_ready(&rx);
-                } else if draining {
-                    // Bounded drain: stop admitting, cancel everything
-                    // still queued; in-flight slots keep decoding
-                    // until the deadline, then are cancelled too.
-                    while let Ok(req) = rx.try_recv() {
-                        sched.cancel_submitted(req);
-                    }
-                    sched.cancel_pending();
-                    if worker_drain.deadline_passed() {
-                        sched.cancel_in_flight();
-                    }
-                } else {
-                    // Busy: admit whatever is already queued, without
-                    // waiting — in-flight requests keep decoding.
-                    let _ = sched.admit_ready(&rx);
+            if !faults.is_empty() {
+                // Validated at config load; install is process-global,
+                // doing it here just scopes it to server lifetime.
+                if let Err(e) = crate::util::faultpoint::install(&faults) {
+                    eprintln!("[serve] fault plan ignored: {e}");
                 }
-                sched.step(&mut rng);
             }
-            // Clients that raced shutdown and are still sitting in the
-            // channel get an explicit response, not a dropped sender.
+            let mut rng = Rng::new(seed);
+            let mut sched = Scheduler::with_qos(
+                model,
+                m.clone(),
+                max_batch,
+                prefill_chunk,
+                pool_cfg,
+                worker_qos,
+            );
+            // Supervisor: round-level containment inside the scheduler
+            // absorbs per-request faults; a panic that still unwinds
+            // out of the loop means containment itself failed. Catch
+            // it, recover the scheduler (in-flight slots answer
+            // `Failed`, the pending queue survives untouched), back
+            // off, and restart — up to `RESTART_BUDGET` times, after
+            // which every remaining client is answered and the thread
+            // exits (later submits see `WorkerGone`).
+            let mut restarts = 0u32;
+            loop {
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    worker_loop(&mut sched, &mut rng, &rx, &worker_drain, max_batch, batch_wait);
+                }));
+                match run {
+                    Ok(()) => break,
+                    Err(_) if restarts < RESTART_BUDGET => {
+                        restarts += 1;
+                        m.record_worker_restart();
+                        sched.recover();
+                        std::thread::sleep(Duration::from_millis(5u64 << restarts.min(8)));
+                    }
+                    Err(_) => {
+                        sched.recover();
+                        sched.cancel_pending();
+                        break;
+                    }
+                }
+            }
+            // Clients that raced shutdown (or the restart-budget
+            // exhaustion) and are still sitting in the channel get an
+            // explicit response, not a dropped sender.
             while let Ok(req) = rx.try_recv() {
                 sched.cancel_submitted(req);
             }
@@ -448,6 +583,8 @@ impl Server {
             metrics,
             threads,
             stop,
+            deadline_ms,
+            tenant_deadline_ms,
         })
     }
 
@@ -504,7 +641,9 @@ impl Server {
         stop: StopSet,
         stream: Option<Sender<u16>>,
     ) -> Result<Receiver<GenResponse>, ServeError> {
-        self.submit_indexed(0, prompt, max_new_tokens, temperature, stop, stream)
+        let (rrx, _cancel) =
+            self.submit_indexed(0, prompt, max_new_tokens, temperature, stop, stream, None)?;
+        Ok(rrx)
     }
 
     /// Tenant-attributed submission (the network front-end's entry
@@ -520,11 +659,39 @@ impl Server {
         stop: Option<StopSet>,
         stream: Option<Sender<u16>>,
     ) -> Result<Receiver<GenResponse>, ServeError> {
-        let t = self.qos.config.tenant_index(tenant).unwrap_or(0);
-        let stop = stop.unwrap_or_else(|| self.stop.clone());
-        self.submit_indexed(t, prompt, max_new_tokens, temperature, stop, stream)
+        let (rrx, _cancel) = self.submit_qos_cancellable(
+            tenant,
+            prompt,
+            max_new_tokens,
+            temperature,
+            stop,
+            stream,
+            None,
+        )?;
+        Ok(rrx)
     }
 
+    /// [`Server::submit_qos`] returning the request's [`CancelToken`]
+    /// alongside the response receiver, with an optional explicit
+    /// deadline. `deadline_ms: None` inherits the tenant default, then
+    /// the global default; `Some(0)` explicitly disables the deadline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_qos_cancellable(
+        &self,
+        tenant: &str,
+        prompt: Vec<u16>,
+        max_new_tokens: usize,
+        temperature: f64,
+        stop: Option<StopSet>,
+        stream: Option<Sender<u16>>,
+        deadline_ms: Option<u64>,
+    ) -> Result<(Receiver<GenResponse>, CancelToken), ServeError> {
+        let t = self.qos.config.tenant_index(tenant).unwrap_or(0);
+        let stop = stop.unwrap_or_else(|| self.stop.clone());
+        self.submit_indexed(t, prompt, max_new_tokens, temperature, stop, stream, deadline_ms)
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn submit_indexed(
         &self,
         t: usize,
@@ -533,7 +700,8 @@ impl Server {
         temperature: f64,
         stop: StopSet,
         stream: Option<Sender<u16>>,
-    ) -> Result<Receiver<GenResponse>, ServeError> {
+        deadline_ms: Option<u64>,
+    ) -> Result<(Receiver<GenResponse>, CancelToken), ServeError> {
         if self.drain.draining() {
             return Err(ServeError::ShuttingDown);
         }
@@ -542,6 +710,17 @@ impl Server {
             self.metrics.record_tenant_rejection(&spec.id);
             return Err(ServeError::TenantOverloaded { tenant: spec.id.clone() });
         }
+        // Effective deadline: explicit beats the tenant default beats
+        // the global default; 0 at any level means "none" there.
+        let default_ms = self
+            .tenant_deadline_ms
+            .get(t)
+            .copied()
+            .filter(|&d| d > 0)
+            .unwrap_or(self.deadline_ms);
+        let ms = deadline_ms.unwrap_or(default_ms);
+        let deadline = (ms > 0).then(|| Instant::now() + Duration::from_millis(ms));
+        let cancel = CancelToken::new();
         let (rtx, rrx) = channel();
         let req = GenRequest {
             prompt,
@@ -552,6 +731,8 @@ impl Server {
             respond: rtx,
             submitted: Instant::now(),
             tenant: t as u32,
+            deadline,
+            cancel: cancel.clone(),
         };
         let guard = self.tx.lock().unwrap();
         let tx = guard.as_ref().ok_or(ServeError::WorkerGone)?;
@@ -561,7 +742,7 @@ impl Server {
             return Err(ServeError::WorkerGone);
         }
         self.metrics.record_request();
-        Ok(rrx)
+        Ok((rrx, cancel))
     }
 
     /// Graceful shutdown: close the queue and join the worker (which
@@ -737,26 +918,79 @@ mod tests {
 
     #[test]
     fn submit_fails_after_worker_death_instead_of_panicking() {
-        // Token 999 is out of the tiny model's vocab (32): the worker
-        // panics on the embedding lookup. Callers must get an Err from
-        // subsequent submits, not a panic.
+        use std::sync::atomic::Ordering::Relaxed;
+        // Token 999 is out of the tiny model's vocab (32): its forward
+        // pass panics on the embedding lookup. Historical contract:
+        // the worker died and later submits saw WorkerGone. New
+        // contract: the panic is contained — the poisoned request gets
+        // an explicit Failed response, the worker survives, and later
+        // submits are served normally.
         let server = Server::start(tiny_model(7, 4), 2, Duration::from_millis(1), 7);
-        let poisoned = server.submit(vec![999], 3, 0.0).expect("queue accepts before death");
-        // The poisoned request's response channel closes without a
-        // response once the worker dies.
-        assert!(poisoned.recv_timeout(Duration::from_secs(30)).is_err());
-        let mut saw_error = false;
-        for _ in 0..500 {
-            match server.submit(vec![1], 1, 0.0) {
-                Err(ServeError::WorkerGone) => {
-                    saw_error = true;
-                    break;
-                }
-                Err(e) => panic!("unexpected submit error: {e}"),
-                Ok(_) => std::thread::sleep(Duration::from_millis(5)),
-            }
-        }
-        assert!(saw_error, "submit must surface the dead worker as an error");
+        let poisoned = server.submit(vec![999], 3, 0.0).expect("queue accepts the poison");
+        let r = poisoned
+            .recv_timeout(Duration::from_secs(30))
+            .expect("poisoned request gets an explicit response, not a dropped channel");
+        assert_eq!(r.finish, FinishReason::Failed);
+        assert_eq!(r.tokens.len(), r.prompt_len, "no tokens generated past the fault");
+        // The server survived and keeps serving.
+        let rx = server.submit(vec![1, 2], 3, 0.0).expect("server is still alive");
+        let ok = rx.recv_timeout(Duration::from_secs(30)).expect("healthy request completes");
+        assert!(ok.tokens.len() > ok.prompt_len);
+        assert!(server.metrics.panics_caught.load(Relaxed) >= 1);
+        assert!(server.metrics.quarantines.load(Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn deadline_returns_partial_output() {
+        use std::sync::atomic::Ordering::Relaxed;
+        // A deliberately long generation with a short deadline: the
+        // response arrives with whatever was decoded before the cut
+        // and FinishReason::DeadlineExceeded — within one decode
+        // round, not after max_new_tokens.
+        let server = Server::start(tiny_model(2, 4), 2, Duration::from_millis(1), 7);
+        let (rx, _cancel) = server
+            .submit_qos_cancellable(
+                "default",
+                vec![1, 2, 3],
+                400,
+                0.0,
+                Some(StopSet::none()),
+                None,
+                Some(80),
+            )
+            .expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("deadline forces a response");
+        assert_eq!(r.finish, FinishReason::DeadlineExceeded);
+        assert!(r.tokens.len() < 3 + 400, "partial output, not a full run");
+        assert!(server.metrics.deadline_cancels.load(Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn cancel_token_stops_generation_between_rounds() {
+        use std::sync::atomic::Ordering::Relaxed;
+        // Cancel mid-generation (the disconnect path): the request
+        // retires with Cancelled and partial output instead of
+        // decoding to max_new_tokens.
+        let server = Server::start(tiny_model(3, 4), 2, Duration::from_millis(1), 7);
+        let (rx, cancel) = server
+            .submit_qos_cancellable(
+                "default",
+                vec![4, 5],
+                400,
+                0.0,
+                Some(StopSet::none()),
+                None,
+                None,
+            )
+            .expect("submit");
+        std::thread::sleep(Duration::from_millis(50)); // let decoding start
+        cancel.cancel();
+        let r = rx.recv_timeout(Duration::from_secs(30)).expect("cancel forces a response");
+        assert_eq!(r.finish, FinishReason::Cancelled);
+        assert!(r.tokens.len() < 2 + 400, "partial output, not a full run");
+        assert!(server.metrics.disconnect_cancels.load(Relaxed) >= 1);
         server.shutdown();
     }
 

@@ -2,11 +2,11 @@
 //! `btc-llm quantize` output can be shipped to `btc-llm serve` without
 //! re-running the pipeline.
 //!
-//! v3 layout (little-endian) — file bytes equal the accounted storage
+//! v4 layout (little-endian) — file bytes equal the accounted storage
 //! bits (sub-byte payloads ship as unpadded bitstreams, scales as
-//! IEEE f16):
+//! IEEE f16) plus an 8-byte integrity trailer:
 //! ```text
-//! magic b"QLM1", u32 version = 3
+//! magic b"QLM1", u32 version = 4
 //! TLM1-style model config block
 //! u8 has_codebook; codebook: u32 v, u32 c, then c v-bit centroids
 //!   packed (wire::w_bits — c*v bits, not c u64 words)
@@ -19,17 +19,21 @@
 //!   u8 has_act_quant; act-quant: u32 bits, u32 n, f32 scale[n]
 //!   backend payload                  (WeightBackend::write_payload;
 //!     the codebook backend writes packed index planes + u16 scales)
+//! trailer: magic b"QCRC", u32 crc    (IEEE CRC-32 of every byte
+//!     before the trailer; mandatory from v4 on — a flipped bit or a
+//!     truncated tail anywhere in the container fails the load)
 //! ```
 //! Older containers still load: v1 (one-byte numeric tags, no
-//! act-quant block) and v2 (string tags, u64 codebook words, f32
+//! act-quant block), v2 (string tags, u64 codebook words, f32
 //! sigma, dense u32 codebook indices + f32 scales — layout pinned by
-//! the committed golden fixture in `rust/tests/fixtures/`). One
+//! the committed golden fixture in `rust/tests/fixtures/`) and v3
+//! (the v4 record layout without the checksum trailer). One
 //! deliberate semantic change on pre-v3 codebook payloads: their f32
 //! alpha/mu are rounded **once** to f16 at load (nearest-even), the
 //! shipping precision the storage accounting always claimed — scales
 //! that were already f16-representable (anything written by this
 //! crate's pipeline, whose layers round at quantization) reload
-//! bit-identically. v3 is always written. Backend payloads round-trip through the
+//! bit-identically. v4 is always written. Backend payloads round-trip through the
 //! [`crate::model::register_backend`] registry, so **every** lane —
 //! not just BTC — ships, including custom backends registered at
 //! runtime (a [`BackendIoCtx::version`] tells them which container
@@ -57,14 +61,17 @@ use crate::tensor::Matrix;
 const SLOTS: [&str; 7] = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
 /// Current QLM1 container version (written by [`save`]; [`load_into`]
 /// reads every version back to 1).
-pub const QLM_VERSION: u32 = 3;
+pub const QLM_VERSION: u32 = 4;
 const VERSION: u32 = QLM_VERSION;
+/// Magic of the integrity trailer appended from v4 on.
+const CRC_MAGIC: &[u8; 4] = b"QCRC";
 
 /// Save a quantized model. Works for every backend whose tag has a
 /// registered deserializer — i.e. all built-in lanes and any custom
 /// backend registered via [`crate::model::register_backend`].
 pub fn save(path: &Path, model: &Transformer) -> Result<()> {
-    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    crate::fault_point!("io.write", bail!("injected fault at io.write"));
+    let mut w = wire::CrcWriter::new(std::io::BufWriter::new(std::fs::File::create(path)?));
     w.write_all(b"QLM1")?;
     wire::w_u32(&mut w, VERSION)?;
     let c = &model.cfg;
@@ -157,6 +164,11 @@ pub fn save(path: &Path, model: &Transformer) -> Result<()> {
             lin.backend.write_payload(&mut w)?;
         }
     }
+    // Integrity trailer: CRC of everything written so far (the
+    // checksum covers the whole payload, not itself).
+    let crc = w.crc();
+    w.write_all(CRC_MAGIC)?;
+    wire::w_u32(&mut w, crc)?;
     // BufWriter drop swallows flush errors — surface them here so a
     // full disk can't yield a truncated container reported as success.
     w.flush()?;
@@ -207,6 +219,7 @@ fn read_act_quant(r: &mut dyn Read) -> Result<Option<ActQuant>> {
 /// Load quantized linears into a model previously built from the
 /// companion TLM1 blob (embeddings/norms come from there).
 pub fn load_into(path: &Path, model: &mut Transformer) -> Result<()> {
+    crate::fault_point!("io.read", bail!("injected fault at io.read"));
     let file = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = CountingReader::new(BufReader::new(file));
     let mut magic = [0u8; 4];
@@ -334,6 +347,29 @@ pub fn load_into(path: &Path, model: &mut Transformer) -> Result<()> {
                 *lin = new_lin;
                 break;
             }
+        }
+    }
+    // Integrity trailer: mandatory from v4 (its absence means the
+    // tail was cut off), absent in anything older.
+    if version >= 4 {
+        let payload_crc = r.crc();
+        let mut trailer = [0u8; 8];
+        r.read_exact(&mut trailer).with_context(|| {
+            format!("QLM1 checksum trailer missing or truncated at offset {}", r.offset())
+        })?;
+        if &trailer[..4] != CRC_MAGIC {
+            bail!("bad QLM1 trailer magic {:?} at offset {}", &trailer[..4], r.offset());
+        }
+        let want = u32::from_le_bytes([trailer[4], trailer[5], trailer[6], trailer[7]]);
+        if want != payload_crc {
+            bail!(
+                "QLM1 checksum mismatch: trailer says {want:#010x}, payload is \
+                 {payload_crc:#010x} — the container is corrupted"
+            );
+        }
+        let mut extra = [0u8; 1];
+        if r.read(&mut extra)? != 0 {
+            bail!("trailing bytes after the QLM1 checksum trailer (offset {})", r.offset());
         }
     }
     Ok(())
@@ -483,6 +519,92 @@ mod tests {
         std::fs::write(&bad2, &bytes2).unwrap();
         let err2 = load_into(&bad2, &mut m).unwrap_err().to_string();
         assert!(err2.contains("v=100"), "{err2}");
+    }
+
+    #[test]
+    fn trailer_detects_flips_legacy_v3_still_loads() {
+        // A v4 container with a flipped bit deep in a payload (past
+        // every semantic check) is caught by the CRC; stripping the
+        // trailer and rewriting the version as 3 loads fine (legacy).
+        let (raw, text) = crate::quant::pipeline::tests::fixture_public();
+        let cfg = QuantConfig {
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            calib_rows: 48,
+            arb_iters: 2,
+            ..QuantConfig::naive()
+        };
+        let qm = quantize_model(&raw, &text, &cfg).unwrap();
+        let path = tmp("trailer.qlm");
+        save(&path, &qm.model).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[bytes.len() - 8..][..4], b"QCRC", "v4 trailer present");
+
+        // Flip one sign bit in the last backend payload: numerics
+        // change silently without a checksum.
+        let mut flipped = bytes.clone();
+        let n = flipped.len();
+        flipped[n - 20] ^= 0x01;
+        let bad = tmp("flipped.qlm");
+        std::fs::write(&bad, &flipped).unwrap();
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        let err = load_into(&bad, &mut m).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // Same container as legacy v3: no trailer, no checksum — the
+        // old format keeps loading.
+        let mut legacy = bytes[..bytes.len() - 8].to_vec();
+        legacy[4..8].copy_from_slice(&3u32.to_le_bytes());
+        let v3 = tmp("legacy_v3.qlm");
+        std::fs::write(&v3, &legacy).unwrap();
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        load_into(&v3, &mut m).unwrap();
+        assert_eq!(m.blocks[0].wq.backend_name(), "binary");
+    }
+
+    #[test]
+    fn corruption_property_flips_and_truncations_yield_err_never_panic() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        let (raw, text) = crate::quant::pipeline::tests::fixture_public();
+        let cfg = QuantConfig {
+            calib_seqs: 4,
+            calib_seq_len: 24,
+            calib_rows: 48,
+            arb_iters: 2,
+            ..QuantConfig::naive()
+        };
+        let qm = quantize_model(&raw, &text, &cfg).unwrap();
+        let path = tmp("golden_corrupt.qlm");
+        save(&path, &qm.model).unwrap();
+        let golden = std::fs::read(&path).unwrap();
+
+        // Reused across attempts: corrupted loads only ever fail, and
+        // a fresh model per attempt would dominate the test's runtime.
+        let mut m = Transformer::from_raw(&raw).unwrap();
+        load_into(&path, &mut m).unwrap();
+
+        let target = tmp("corrupted.qlm");
+        let mut try_load = |bytes: &[u8], what: String| {
+            std::fs::write(&target, bytes).unwrap();
+            match catch_unwind(AssertUnwindSafe(|| load_into(&target, &mut m))) {
+                Ok(res) => assert!(res.is_err(), "{what}: corrupted container loaded"),
+                Err(_) => panic!("{what}: loader panicked instead of returning Err"),
+            }
+        };
+        // A bit flip at every byte offset must fail the load: CRC-32
+        // detects every single-bit error, and the bounded semantic
+        // checks may reject it even earlier. Never a panic.
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE);
+        for off in 0..golden.len() {
+            let mut bad = golden.clone();
+            bad[off] ^= 1 << rng.below(8);
+            try_load(&bad, format!("bit flip at offset {off}"));
+        }
+        // Every truncation must fail: the v4 trailer is mandatory, so
+        // even a cut that strips exactly the trailer is caught.
+        for cut in 0..golden.len() {
+            try_load(&golden[..cut], format!("truncation to {cut} bytes"));
+        }
     }
 
     #[test]

@@ -18,28 +18,133 @@ pub const MAX_DIM: usize = 1 << 20;
 pub const MAX_ELEMS: usize = 1 << 28;
 
 /// A `Read` adapter that tracks the absolute byte offset, so parse
-/// errors can report where in the file they happened.
+/// errors can report where in the file they happened, and accumulates
+/// a running [`Crc32`] over everything read — containers with an
+/// integrity trailer compare it against the stored checksum.
 pub struct CountingReader<R> {
     inner: R,
     pos: u64,
+    crc: Crc32,
 }
 
 impl<R: Read> CountingReader<R> {
     pub fn new(inner: R) -> CountingReader<R> {
-        CountingReader { inner, pos: 0 }
+        CountingReader { inner, pos: 0, crc: Crc32::new() }
     }
 
     /// Bytes consumed so far.
     pub fn offset(&self) -> u64 {
         self.pos
     }
+
+    /// CRC-32 over every byte consumed so far.
+    pub fn crc(&self) -> u32 {
+        self.crc.value()
+    }
 }
 
 impl<R: Read> Read for CountingReader<R> {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
         let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
         self.pos += n as u64;
         Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) — the integrity
+// check behind the QLM1 trailer. Hand-rolled: no checksum crate in
+// the offline vendor set.
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut t = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// Incremental IEEE CRC-32.
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut s = self.state;
+        for &b in bytes {
+            s = CRC32_TABLE[((s ^ b as u32) & 0xFF) as usize] ^ (s >> 8);
+        }
+        self.state = s;
+    }
+
+    /// The checksum of everything fed so far (does not reset).
+    pub fn value(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Crc32 {
+        Crc32::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.value()
+}
+
+/// A `Write` adapter accumulating a [`Crc32`] over everything written
+/// through it — the save-side twin of [`CountingReader::crc`].
+pub struct CrcWriter<W> {
+    inner: W,
+    crc: Crc32,
+}
+
+impl<W: Write> CrcWriter<W> {
+    pub fn new(inner: W) -> CrcWriter<W> {
+        CrcWriter { inner, crc: Crc32::new() }
+    }
+
+    /// CRC-32 over every byte written so far.
+    pub fn crc(&self) -> u32 {
+        self.crc.value()
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
     }
 }
 
@@ -355,6 +460,38 @@ mod tests {
         w_u32(&mut cw, 9).unwrap();
         w_bits(&mut cw, 3, &[1, 2, 3]).unwrap(); // 9 bits -> 2 bytes
         assert_eq!(cw.bytes, 6);
+    }
+
+    #[test]
+    fn crc32_reference_vector() {
+        // The canonical IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Incremental == one-shot.
+        let mut c = Crc32::new();
+        c.update(b"1234");
+        c.update(b"56789");
+        assert_eq!(c.value(), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn crc_writer_and_counting_reader_agree() {
+        let mut w = CrcWriter::new(Vec::new());
+        w_u32(&mut w, 0xdead_beef).unwrap();
+        w_tag(&mut w, "binary").unwrap();
+        w_f32s(&mut w, &[1.0, -0.5]).unwrap();
+        let crc_written = w.crc();
+        let bytes = w.into_inner();
+        assert_eq!(crc_written, crc32(&bytes));
+        let mut r = CountingReader::new(&bytes[..]);
+        let _ = r_u32(&mut r).unwrap();
+        let _ = r_tag(&mut r).unwrap();
+        let _ = r_f32s(&mut r, 2).unwrap();
+        assert_eq!(r.crc(), crc_written, "read-side CRC mirrors the write side");
+        // A single flipped bit changes the checksum.
+        let mut bad = bytes.clone();
+        bad[3] ^= 0x10;
+        assert_ne!(crc32(&bad), crc_written);
     }
 
     #[test]

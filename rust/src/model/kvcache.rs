@@ -293,7 +293,14 @@ impl KvPool {
     /// Would a *fresh* sequence of `positions` fit right now? (The
     /// admission check: conservative — prefix sharing can only reduce
     /// the real need.)
+    ///
+    /// Fault point `kvpool.alloc`: an injected `err` reports the pool
+    /// as full here — the capacity *query* — so the scheduler takes
+    /// its real deferral path. (The committed reservation in
+    /// `ensure_append` is deliberately not instrumented: callers have
+    /// already been promised the blocks by this gate.)
     pub fn can_fit_new(&self, positions: usize) -> bool {
+        crate::fault_point!("kvpool.alloc", return false);
         self.blocks_for(positions) <= self.free_blocks()
     }
 
@@ -348,7 +355,12 @@ impl KvPool {
     /// How many positions `cache` could append right now without
     /// exceeding the budget (accounts for the copy-on-write block a
     /// shared partial tail would need first).
+    ///
+    /// Fault point `kvpool.alloc`: an injected `err` reports zero
+    /// headroom, forcing the scheduler's round-deferral/preemption
+    /// path (see [`KvPool::can_fit_new`]).
     pub fn max_append(&self, cache: &PagedKvCache) -> usize {
+        crate::fault_point!("kvpool.alloc", return 0);
         let bs = self.block_size;
         let cap_rem = cache.block_table.len() * bs - cache.len;
         let cow = usize::from(

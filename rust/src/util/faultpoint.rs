@@ -1,0 +1,382 @@
+//! Deterministic, named fault-injection points.
+//!
+//! Production code crosses named points (`fault_point!("kvpool.alloc")`,
+//! [`hit`], [`hit_val`]); a *fault plan* — parsed from the
+//! `PALLAS_FAULTS` env var or installed programmatically
+//! ([`install`], [`scenario`]) — decides which crossings misbehave.
+//! With no plan installed the crossing is one relaxed atomic load, so
+//! instrumented hot paths stay effectively free.
+//!
+//! **Spec grammar** (`;`-separated entries):
+//!
+//! - `seed=S` — seed for probabilistic triggers (default 0).
+//! - `name=panic@N` / `name=err@N` — fire once, on the Nth crossing
+//!   of `name` (1-based).
+//! - `name=panic%P` / `name=err%P` — fire on each crossing with
+//!   probability P% , decided by a per-point deterministic generator
+//!   seeded from `seed ^ hash(name)` — the same spec always yields
+//!   the same firing pattern.
+//! - `name=panic#V` / `name=err#V` — fire whenever the crossing
+//!   reports value `V` through [`hit_val`] (content-keyed faults:
+//!   "this token id poisons the forward pass").
+//!
+//! `panic` actions unwind right at the crossing (the containment
+//! machinery under test must catch them); `err` actions make [`hit`]
+//! return [`Fault::Err`] so the call site takes its error path.
+//!
+//! **Determinism.** Every trigger is a pure function of the plan and
+//! the per-point crossing history — no wall clock, no OS entropy — so
+//! a failing chaos run replays exactly from its `PALLAS_FAULTS`
+//! string.
+//!
+//! **Tests.** Fault plans are process-global; concurrent tests in one
+//! binary would interfere. [`scenario`] therefore hands out a guard
+//! holding a global lock: tests that inject (or must be isolated from
+//! injection — pass `""`) serialize, and dropping the guard clears
+//! the plan.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once, OnceLock};
+
+use crate::util::rng::Rng;
+
+/// Whether any plan is installed — the fast-path gate.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+/// Outcome of crossing a fault point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Proceed normally.
+    None,
+    /// Take the call site's error path.
+    Err,
+}
+
+impl Fault {
+    pub fn is_err(self) -> bool {
+        self == Fault::Err
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Action {
+    Panic,
+    Err,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Trigger {
+    /// Fire once, on the Nth crossing (1-based).
+    Nth(u64),
+    /// Fire with probability P% per crossing (deterministic).
+    Percent(u64),
+    /// Fire when `hit_val` reports exactly this value.
+    Value(u64),
+}
+
+#[derive(Debug)]
+struct Point {
+    action: Action,
+    trigger: Trigger,
+    hits: u64,
+    rng: Rng,
+}
+
+#[derive(Debug, Default)]
+struct Plan {
+    points: HashMap<String, Point>,
+}
+
+fn plan_cell() -> &'static Mutex<Option<Plan>> {
+    static PLAN: OnceLock<Mutex<Option<Plan>>> = OnceLock::new();
+    PLAN.get_or_init(|| Mutex::new(None))
+}
+
+fn scenario_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Survive mutex poisoning: a panic *is* the expected behavior of a
+/// `panic`-action point, and must not wedge every later crossing.
+fn lock_plan() -> MutexGuard<'static, Option<Plan>> {
+    plan_cell().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Parse and install a fault plan. An empty spec installs an empty
+/// plan (nothing fires, but [`hit`] still consults it). Errors leave
+/// the previous plan untouched.
+pub fn install(spec: &str) -> Result<(), String> {
+    let plan = parse_plan(spec)?;
+    *lock_plan() = Some(plan);
+    ACTIVE.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Check a spec for well-formedness without installing it (config
+/// files validate at load time, install at server start).
+pub fn validate(spec: &str) -> Result<(), String> {
+    parse_plan(spec).map(|_| ())
+}
+
+fn parse_plan(spec: &str) -> Result<Plan, String> {
+    let mut seed = 0u64;
+    let mut entries: Vec<(String, Action, Trigger)> = Vec::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, rhs) = part
+            .split_once('=')
+            .ok_or_else(|| format!("fault entry {part:?} is not name=action"))?;
+        let (name, rhs) = (name.trim(), rhs.trim());
+        if name == "seed" {
+            seed = rhs.parse::<u64>().map_err(|e| format!("bad seed {rhs:?}: {e}"))?;
+            continue;
+        }
+        let sep = rhs
+            .find(['@', '%', '#'])
+            .ok_or_else(|| format!("fault action {rhs:?} needs one of @N %P #V"))?;
+        let action = match &rhs[..sep] {
+            "panic" => Action::Panic,
+            "err" => Action::Err,
+            other => return Err(format!("unknown fault action {other:?} (panic|err)")),
+        };
+        let num: u64 = rhs[sep + 1..]
+            .parse()
+            .map_err(|e| format!("bad fault trigger number in {rhs:?}: {e}"))?;
+        let trigger = match rhs.as_bytes()[sep] {
+            b'@' => {
+                if num == 0 {
+                    return Err("@N triggers are 1-based; @0 never fires".into());
+                }
+                Trigger::Nth(num)
+            }
+            b'%' => {
+                if num > 100 {
+                    return Err(format!("%P must be 0..=100, got {num}"));
+                }
+                Trigger::Percent(num)
+            }
+            _ => Trigger::Value(num),
+        };
+        entries.push((name.to_string(), action, trigger));
+    }
+    let mut points = HashMap::new();
+    for (name, action, trigger) in entries {
+        let rng = Rng::new(seed ^ fnv1a(&name));
+        points.insert(name, Point { action, trigger, hits: 0, rng });
+    }
+    Ok(Plan { points })
+}
+
+/// Remove any installed plan; crossings go back to the free path.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::Release);
+    *lock_plan() = None;
+}
+
+/// Crossings of `name` so far under the current plan (diagnostics).
+pub fn hits(name: &str) -> u64 {
+    lock_plan().as_ref().and_then(|p| p.points.get(name)).map_or(0, |p| p.hits)
+}
+
+fn env_init() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("PALLAS_FAULTS") {
+            if let Err(e) = install(&spec) {
+                // A malformed env spec must not take the process down
+                // from an arbitrary fault-point crossing.
+                eprintln!("PALLAS_FAULTS ignored: {e}");
+            }
+        }
+    });
+}
+
+/// Cross the named fault point. Panics here if the plan says `panic`;
+/// returns [`Fault::Err`] if it says `err`; otherwise [`Fault::None`].
+pub fn hit(name: &str) -> Fault {
+    check(name, None)
+}
+
+/// Cross the named fault point, reporting a content value that `#V`
+/// triggers match against (e.g. the token id being decoded).
+pub fn hit_val(name: &str, val: u64) -> Fault {
+    check(name, Some(val))
+}
+
+fn check(name: &str, val: Option<u64>) -> Fault {
+    env_init();
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Fault::None;
+    }
+    let mut guard = lock_plan();
+    let Some(plan) = guard.as_mut() else {
+        return Fault::None;
+    };
+    let Some(point) = plan.points.get_mut(name) else {
+        return Fault::None;
+    };
+    point.hits += 1;
+    let fire = match point.trigger {
+        Trigger::Nth(n) => point.hits == n,
+        Trigger::Percent(p) => point.rng.next_u64() % 100 < p,
+        Trigger::Value(v) => val == Some(v),
+    };
+    if !fire {
+        return Fault::None;
+    }
+    match point.action {
+        Action::Err => Fault::Err,
+        Action::Panic => {
+            drop(guard); // release before unwinding: later crossings must not see a poisoned lock
+            panic!("injected fault at {name}");
+        }
+    }
+}
+
+/// RAII scope for tests: serializes against every other scenario in
+/// the process (fault plans are global), installs `spec`, and clears
+/// the plan on drop. Pass `""` to hold the lock without injecting
+/// (isolates a test *from* injection). Panics on a malformed spec.
+pub fn scenario(spec: &str) -> FaultGuard {
+    let serial = scenario_lock().lock().unwrap_or_else(|e| e.into_inner());
+    // Force the one-time PALLAS_FAULTS install to happen *now*: if it
+    // fired lazily at the first crossing, it would land mid-test and
+    // override the plan installed here.
+    env_init();
+    install(spec).expect("valid fault spec");
+    FaultGuard { _serial: serial }
+}
+
+/// Guard returned by [`scenario`]; clears the plan when dropped.
+pub struct FaultGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// Cross a named fault point. One argument: only `panic` actions can
+/// fire (an `err` plan entry is ignored at a panic-only site). Two
+/// arguments: on an `err` action, evaluate the second argument —
+/// typically `return <error value>` — so the call site takes its
+/// normal error path.
+#[macro_export]
+macro_rules! fault_point {
+    ($name:expr) => {
+        let _ = $crate::util::faultpoint::hit($name);
+    };
+    ($name:expr, $on_err:expr) => {
+        if $crate::util::faultpoint::hit($name).is_err() {
+            $on_err;
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_a_noop() {
+        let _g = scenario("");
+        assert_eq!(hit("test.nowhere"), Fault::None);
+        assert_eq!(hit_val("test.nowhere", 7), Fault::None);
+    }
+
+    #[test]
+    fn nth_trigger_fires_exactly_once() {
+        let _g = scenario("test.nth=err@3");
+        assert_eq!(hit("test.nth"), Fault::None);
+        assert_eq!(hit("test.nth"), Fault::None);
+        assert_eq!(hit("test.nth"), Fault::Err);
+        assert_eq!(hit("test.nth"), Fault::None, "@N fires once, not from N on");
+        assert_eq!(hits("test.nth"), 4);
+    }
+
+    #[test]
+    fn value_trigger_matches_only_its_value() {
+        let _g = scenario("test.val=err#42");
+        assert_eq!(hit_val("test.val", 41), Fault::None);
+        assert_eq!(hit_val("test.val", 42), Fault::Err);
+        assert_eq!(hit_val("test.val", 42), Fault::Err, "value triggers fire every match");
+        assert_eq!(hit("test.val"), Fault::None, "no value reported, no match");
+    }
+
+    #[test]
+    fn percent_trigger_is_deterministic_per_seed() {
+        let pattern = |seed: u64| -> Vec<bool> {
+            let _g = scenario(&format!("seed={seed};test.pct=err%30"));
+            (0..64).map(|_| hit("test.pct").is_err()).collect()
+        };
+        let a = pattern(7);
+        let b = pattern(7);
+        assert_eq!(a, b, "same seed, same firing pattern");
+        let c = pattern(8);
+        assert_ne!(a, c, "different seed, different pattern");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!(fired > 0 && fired < 64, "~30% should fire, got {fired}/64");
+    }
+
+    #[test]
+    fn panic_action_unwinds_at_the_crossing() {
+        let _g = scenario("test.boom=panic@1");
+        let r = std::panic::catch_unwind(|| hit("test.boom"));
+        let msg = *r.expect_err("must panic").downcast::<String>().expect("string payload");
+        assert!(msg.contains("injected fault at test.boom"), "{msg}");
+        assert_eq!(hit("test.boom"), Fault::None, "plan survives the unwind");
+    }
+
+    #[test]
+    fn guard_drop_clears_the_plan() {
+        {
+            let _g = scenario("test.tmp=err@1");
+            assert_eq!(hit("test.tmp"), Fault::Err);
+        }
+        let _g = scenario("");
+        assert_eq!(hit("test.tmp"), Fault::None, "cleared on drop");
+    }
+
+    #[test]
+    fn macro_forms_compile_and_route() {
+        fn guarded() -> Result<u32, String> {
+            crate::fault_point!("test.macro", return Err("injected".into()));
+            Ok(5)
+        }
+        let _g = scenario("test.macro=err@1");
+        assert_eq!(guarded(), Err("injected".into()));
+        assert_eq!(guarded(), Ok(5));
+        crate::fault_point!("test.macro.panic_only");
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "noequals",
+            "x=frob@1",
+            "x=panic",
+            "x=panic@zero",
+            "x=err%101",
+            "x=err@0",
+            "seed=banana",
+        ] {
+            assert!(install(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

@@ -8,6 +8,7 @@
 pub mod argparse;
 pub mod benchkit;
 pub mod f16;
+pub mod faultpoint;
 pub mod fixture;
 pub mod log;
 pub mod parallel;

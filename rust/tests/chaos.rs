@@ -1,0 +1,388 @@
+//! Chaos: fault-isolated serving under deterministic fault injection
+//! (DESIGN.md §10). Every test drives the real server (some over real
+//! loopback TCP) with a `util::faultpoint` plan installed and asserts
+//! the supervision contract: no hangs, every accepted client gets an
+//! answer, zero leaked KV blocks, and survivors of a contained fault
+//! stay bit-identical to their solo runs.
+//!
+//! Fault plans are process-global, so every test here serializes
+//! through `faultpoint::scenario` (pass `""` to isolate a test *from*
+//! injection). The soak test honors a `PALLAS_FAULTS` env spec when
+//! one is set — CI replays it across a seed matrix; a failure
+//! reproduces locally from the same spec string.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use btc_llm::coordinator::{
+    AdmitPolicy, EvictionKind, FinishReason, NetOptions, NetServer, QosConfig, Server,
+    ServerOptions, StopSet, TenantSpec,
+};
+use btc_llm::io::weights::ModelConfig;
+use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
+use btc_llm::util::faultpoint;
+use btc_llm::util::fixture::synth_raw_model;
+
+const LONG: Duration = Duration::from_secs(120);
+
+fn tiny_model() -> btc_llm::model::Transformer {
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 4,
+        n_kv_head: 2,
+        d_ff: 64,
+        max_seq: 128,
+        rope_theta: 10000.0,
+    };
+    let (raw, corpus) = synth_raw_model(3, cfg);
+    let mut qm = quantize_model(&raw, &corpus, &QuantConfig::fp16()).expect("quantize fp16");
+    qm.model.prepare_engines();
+    qm.model
+}
+
+fn wait_until(what: &str, mut ok: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !ok() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Generated ids for `prompt` on an otherwise idle server (the solo
+/// reference the determinism assertions compare against).
+fn run_solo(server: &Server, prompt: &[u16]) -> Vec<u16> {
+    let rx = server.submit_with(prompt.to_vec(), 6, 0.0, StopSet::none(), None).expect("submit");
+    let r = rx.recv_timeout(LONG).expect("solo response");
+    r.tokens[r.prompt_len..].to_vec()
+}
+
+/// One whole-request POST /generate round trip over loopback TCP;
+/// returns the raw reply (status line + headers + body).
+fn post_generate(addr: SocketAddr, body: &str) -> String {
+    raw_roundtrip(
+        addr,
+        &format!(
+            "POST /generate HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        ),
+    )
+}
+
+fn raw_roundtrip(addr: SocketAddr, req: &str) -> String {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    conn.write_all(req.as_bytes()).expect("write request");
+    let mut reply = String::new();
+    conn.read_to_string(&mut reply).expect("read reply");
+    reply
+}
+
+/// Token ids from the per-token SSE events, in arrival order.
+fn sse_tokens(reply: &str) -> Vec<u16> {
+    const EV: &str = "data: {\"token\":";
+    let mut out = Vec::new();
+    let mut rest = reply;
+    while let Some(i) = rest.find(EV) {
+        let tail = &rest[i + EV.len()..];
+        let end = tail.find('}').expect("token event closed");
+        out.push(tail[..end].parse::<u16>().expect("token id"));
+        rest = &tail[end..];
+    }
+    out
+}
+
+/// A prompt that panics in the embedding lookup (id 999 is far out of
+/// the synthetic model's 64-token vocabulary) must fail alone:
+/// concurrent requests finish bit-identical to their solo runs, the
+/// worker survives, and every KV block comes back.
+#[test]
+fn poisoned_prompt_fails_while_survivors_match_solo() {
+    let _iso = faultpoint::scenario("");
+    let model = tiny_model();
+    let healthy: Vec<Vec<u16>> = vec![vec![5, 6, 7], vec![9, 8], vec![1, 2, 3, 4]];
+    let solo = Server::start(model.clone(), 1, Duration::from_millis(1), 7);
+    let want: Vec<Vec<u16>> = healthy.iter().map(|p| run_solo(&solo, p)).collect();
+    solo.shutdown();
+
+    let server = Server::start(model, 4, Duration::from_millis(20), 7);
+    let poisoned = server.submit_with(vec![999], 6, 0.0, StopSet::none(), None).expect("submit");
+    let rxs: Vec<_> = healthy
+        .iter()
+        .map(|p| server.submit_with(p.clone(), 6, 0.0, StopSet::none(), None).expect("submit"))
+        .collect();
+    let pr = poisoned.recv_timeout(LONG).expect("poisoned request still answered");
+    assert_eq!(pr.finish, FinishReason::Failed);
+    assert_eq!(pr.tokens.len(), pr.prompt_len, "no tokens survive a prefill poison");
+    for (rx, want) in rxs.iter().zip(&want) {
+        let r = rx.recv_timeout(LONG).expect("survivor answered");
+        assert_eq!(&r.tokens[r.prompt_len..], &want[..], "survivor bit-identical to solo");
+    }
+    let again = server.submit_with(vec![3, 4], 4, 0.0, StopSet::none(), None).expect("resubmit");
+    assert_eq!(again.recv_timeout(LONG).expect("served").finish, FinishReason::Length);
+    assert!(server.metrics.panics_caught.load(Relaxed) >= 1);
+    assert!(server.metrics.quarantines.load(Relaxed) >= 1);
+    wait_until("blocks released", || server.metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    server.shutdown();
+}
+
+/// Content-keyed decode fault: `decode.token=panic#X` panics any
+/// decode round that feeds token X. The fused batch panic is caught,
+/// the solo replay pins the culprit (partial output up to the fault),
+/// and the co-scheduled request — whose feeds avoid X — replays clean
+/// and stays bit-identical to its solo run.
+#[test]
+fn decode_token_fault_quarantines_only_the_culprit() {
+    let model = tiny_model();
+    let a_prompt: Vec<u16> = vec![5, 6, 7];
+    // Phase 1, fault-free: solo references, X = the first token A
+    // feeds back into decode, and a co-request whose feeds avoid X.
+    let (x, b_prompt, b_solo) = {
+        let _iso = faultpoint::scenario("");
+        let solo = Server::start(model.clone(), 1, Duration::from_millis(1), 7);
+        let a = run_solo(&solo, &a_prompt);
+        assert!(a.len() >= 2, "A must reach its second decode round: {a:?}");
+        let x = a[0];
+        let mut pick = None;
+        for k in 0..32u16 {
+            let p = vec![9 + k % 40, (8 + k * 3) % 40];
+            let g = run_solo(&solo, &p);
+            if !g.contains(&x) && *p.last().unwrap() != x {
+                pick = Some((p, g));
+                break;
+            }
+        }
+        solo.shutdown();
+        let (bp, bg) = pick.expect("some co-request avoids the fault token");
+        (x, bp, bg)
+    };
+    // Phase 2: same prompts, co-scheduled, with the fault armed.
+    let _g = faultpoint::scenario(&format!("decode.token=panic#{x}"));
+    let server = Server::start(model, 2, Duration::from_millis(20), 7);
+    let arx = server.submit_with(a_prompt, 6, 0.0, StopSet::none(), None).expect("submit A");
+    let brx = server.submit_with(b_prompt, 6, 0.0, StopSet::none(), None).expect("submit B");
+    let a = arx.recv_timeout(LONG).expect("culprit still answered");
+    let b = brx.recv_timeout(LONG).expect("survivor answered");
+    assert_eq!(a.finish, FinishReason::Failed);
+    assert_eq!(&a.tokens[a.prompt_len..], &[x], "partial output up to the fault");
+    assert_eq!(b.finish, FinishReason::Length);
+    assert_eq!(&b.tokens[b.prompt_len..], &b_solo[..], "survivor bit-identical to solo");
+    assert_eq!(server.metrics.quarantines.load(Relaxed), 1, "exactly the culprit");
+    assert!(server.metrics.panics_caught.load(Relaxed) >= 2, "fused panic + solo replay");
+    wait_until("blocks released", || server.metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    server.shutdown();
+}
+
+/// A panic that escapes round-level containment (injected at the top
+/// of the worker loop) costs the in-flight slots at most, never the
+/// service: the supervisor restarts the loop, the pending queue
+/// survives, every client is answered.
+#[test]
+fn worker_restart_preserves_service_and_answers_everyone() {
+    let _g = faultpoint::scenario("worker.round=panic@3");
+    let model = tiny_model();
+    let server = Server::start(model, 2, Duration::from_millis(1), 7);
+    let rxs: Vec<_> = (0..4u16)
+        .map(|k| {
+            let max_new = if k == 0 { 200 } else { 4 };
+            server
+                .submit_with(vec![5 + k, 6], max_new, 0.0, StopSet::none(), None)
+                .expect("submit")
+        })
+        .collect();
+    for (k, rx) in rxs.iter().enumerate() {
+        let r = rx.recv_timeout(LONG).unwrap_or_else(|e| panic!("client {k} unanswered: {e:?}"));
+        assert!(
+            matches!(
+                r.finish,
+                FinishReason::Length | FinishReason::Failed | FinishReason::Cancelled
+            ),
+            "client {k}: {:?}",
+            r.finish
+        );
+    }
+    assert_eq!(server.metrics.worker_restarts.load(Relaxed), 1);
+    let again = server.submit_with(vec![2, 3], 4, 0.0, StopSet::none(), None).expect("resubmit");
+    assert_eq!(again.recv_timeout(LONG).expect("served").finish, FinishReason::Length);
+    wait_until("blocks released", || server.metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    server.shutdown();
+}
+
+/// When every worker round panics, the supervisor burns its whole
+/// restart budget, answers everything still queued, and exits —
+/// clients see explicit responses or a closed channel (never a hang),
+/// and later submissions are refused.
+#[test]
+fn restart_budget_exhaustion_answers_everyone_then_refuses() {
+    let _g = faultpoint::scenario("worker.round=panic%100");
+    let model = tiny_model();
+    let server = Server::start(model, 2, Duration::from_millis(1), 7);
+    let rxs: Vec<_> = (0..3u16)
+        .filter_map(|k| server.submit_with(vec![5 + k, 6], 4, 0.0, StopSet::none(), None).ok())
+        .collect();
+    for (k, rx) in rxs.iter().enumerate() {
+        match rx.recv_timeout(LONG) {
+            Ok(r) => assert!(
+                matches!(r.finish, FinishReason::Cancelled | FinishReason::Failed),
+                "client {k}: {:?}",
+                r.finish
+            ),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {} // raced the worker's exit
+            Err(e) => panic!("client {k} left hanging: {e:?}"),
+        }
+    }
+    wait_until("restart budget exhausted", || {
+        server.metrics.worker_restarts.load(Relaxed) == 3
+    });
+    wait_until("worker gone", || server.submit(vec![1], 1, 0.0).is_err());
+    server.shutdown();
+}
+
+/// Soak: a burst of requests under allocation faults, deadlines and
+/// client cancellations. Every request is answered and the pool ends
+/// empty. `PALLAS_FAULTS`, when set (CI's seed matrix), replaces the
+/// default plan — a failure replays from the spec string alone.
+#[test]
+fn soak_mixed_faults_deadlines_and_cancels_leak_nothing() {
+    let spec = std::env::var("PALLAS_FAULTS")
+        .unwrap_or_else(|_| "seed=11;kvpool.alloc=err%25".to_string());
+    let _g = faultpoint::scenario(&spec);
+    let model = tiny_model();
+    let server = Server::start_with_opts(
+        model,
+        ServerOptions {
+            max_batch: 3,
+            batch_wait: Duration::from_millis(1),
+            kv_block: 8,
+            kv_pool_blocks: 10,
+            stop: StopSet::none(),
+            ..ServerOptions::default()
+        },
+    );
+    let mut clients = Vec::new();
+    for k in 0..24u16 {
+        let plen = 1 + (k as usize * 5) % 7;
+        let prompt: Vec<u16> = (0..plen as u16).map(|j| (j * 13 + k * 7) % 60).collect();
+        let deadline_ms = if k % 3 == 0 { Some(15) } else { None };
+        let (rx, cancel) = server
+            .submit_qos_cancellable("default", prompt, 8, 0.0, None, None, deadline_ms)
+            .expect("submit accepted");
+        if k % 4 == 1 {
+            cancel.cancel();
+        }
+        clients.push(rx);
+    }
+    for (k, rx) in clients.iter().enumerate() {
+        assert!(rx.recv_timeout(LONG).is_ok(), "request {k} left unanswered");
+    }
+    wait_until("blocks released", || server.metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    server.shutdown();
+}
+
+/// An SSE write failure mid-stream (injected at the wire) trips the
+/// request's cancel token: generation stops within a round, blocks
+/// come back, and the front-end keeps serving new connections.
+#[test]
+fn tcp_write_failure_mid_stream_cancels_the_generation() {
+    let _g = faultpoint::scenario("net.write=err@4");
+    let model = tiny_model();
+    let server = Arc::new(Server::start(model, 2, Duration::from_millis(1), 7));
+    let metrics = server.metrics.clone();
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let reply = post_generate(addr, r#"{"prompt":[5,6,7],"max_new":300,"stop":[],"stream":true}"#);
+    assert!(reply.contains("200 OK"), "{reply}");
+    assert_eq!(sse_tokens(&reply).len(), 3, "three events before the injected write failure");
+    assert!(!reply.contains("\"done\""), "no terminal event on a dead stream:\n{reply}");
+    assert!(metrics.disconnect_cancels.load(Relaxed) >= 1, "cancel token tripped");
+    wait_until("blocks released", || metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    let reply = post_generate(addr, r#"{"prompt":[9,8],"max_new":3,"stop":[],"stream":true}"#);
+    assert!(reply.contains("\"done\":true"), "follow-up client served:\n{reply}");
+    net.shutdown(Duration::from_secs(5));
+}
+
+/// A request whose deadline expires while it waits for admission
+/// (starved deterministically by a 100% allocation fault) is answered
+/// over the wire as HTTP 200 with finish `deadline_exceeded`.
+#[test]
+fn tcp_deadline_expires_while_pending_under_alloc_pressure() {
+    let _g = faultpoint::scenario("kvpool.alloc=err%100");
+    let model = tiny_model();
+    let server = Arc::new(Server::start(model, 2, Duration::from_millis(1), 7));
+    let metrics = server.metrics.clone();
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let reply =
+        post_generate(addr, r#"{"prompt":[5,6],"max_new":8,"stream":false,"deadline_ms":60}"#);
+    assert!(reply.contains("200 OK"), "{reply}");
+    assert!(reply.contains("\"finish\":\"deadline_exceeded\""), "{reply}");
+    assert!(metrics.deadline_cancels.load(Relaxed) >= 1);
+    wait_until("blocks released", || metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    net.shutdown(Duration::from_secs(5));
+}
+
+/// Status-code mapping on the wire: a quarantined request is HTTP 500
+/// with finish `failed`, and the fault counters all surface in
+/// `/metrics`.
+#[test]
+fn tcp_failed_maps_to_500_and_metrics_expose_fault_counters() {
+    let _iso = faultpoint::scenario("");
+    let model = tiny_model();
+    let server = Arc::new(Server::start(model, 2, Duration::from_millis(1), 7));
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let reply = post_generate(addr, r#"{"prompt":[999],"stream":false}"#);
+    assert!(reply.contains("500 Internal Server Error"), "{reply}");
+    assert!(reply.contains("\"finish\":\"failed\""), "{reply}");
+    let metrics = raw_roundtrip(addr, "GET /metrics HTTP/1.1\r\n\r\n");
+    for key in [
+        "panics_caught=",
+        "quarantines=",
+        "worker_restarts=",
+        "deadline_cancels=",
+        "disconnect_cancels=",
+    ] {
+        assert!(metrics.contains(key), "missing {key} in:\n{metrics}");
+    }
+    net.shutdown(Duration::from_secs(5));
+}
+
+/// Backpressure on the wire: with the lone pending slot occupied (and
+/// admission starved by a 100% allocation fault), an overflowing
+/// tenant gets HTTP 429 carrying `Retry-After` — and the queued
+/// request itself is still answered when its own deadline expires.
+#[test]
+fn tcp_backpressure_sends_retry_after() {
+    let _g = faultpoint::scenario("kvpool.alloc=err%100");
+    let model = tiny_model();
+    let qos = QosConfig {
+        admission: AdmitPolicy::Fifo,
+        eviction: EvictionKind::Newest,
+        tenants: vec![TenantSpec {
+            id: "default".to_string(),
+            weight: 1,
+            priority: 0,
+            max_pending: 1,
+        }],
+    };
+    let server = Arc::new(Server::start_with_opts(
+        model,
+        ServerOptions { max_batch: 1, qos, ..ServerOptions::default() },
+    ));
+    let (rx1, _cancel) = server
+        .submit_qos_cancellable("default", vec![1, 2], 2, 0.0, None, None, Some(2000))
+        .expect("first request queues");
+    let net = NetServer::bind(server, "127.0.0.1:0", NetOptions::default()).expect("bind");
+    let addr = net.local_addr();
+    let reply = post_generate(addr, r#"{"prompt":[3,4],"max_new":2,"stream":false}"#);
+    assert!(reply.contains("429 Too Many Requests"), "{reply}");
+    assert!(reply.contains("Retry-After: 1"), "429 carries a backoff hint:\n{reply}");
+    let r1 = rx1.recv_timeout(LONG).expect("queued request answered");
+    assert_eq!(r1.finish, FinishReason::DeadlineExceeded);
+    net.shutdown(Duration::from_secs(5));
+}

@@ -11,7 +11,7 @@
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use btc_llm::coordinator::{GenRequest, Scheduler, Server, ServerOptions, StopSet};
+use btc_llm::coordinator::{CancelToken, GenRequest, Scheduler, Server, ServerOptions, StopSet};
 use btc_llm::io::weights::ModelConfig;
 use btc_llm::quant::pipeline::{quantize_model, QuantConfig};
 use btc_llm::util::fixture::synth_raw_model;
@@ -199,6 +199,8 @@ fn no_head_of_line_blocking_under_real_pipeline() {
         respond: ltx,
         submitted: Instant::now(),
         tenant: 0,
+        deadline: None,
+        cancel: CancelToken::default(),
     });
     // A few rounds in, the long request is mid-decode (prompt chunked
     // 4+1, then decoding) — now the short one arrives.
@@ -216,6 +218,8 @@ fn no_head_of_line_blocking_under_real_pipeline() {
         respond: stx,
         submitted: Instant::now(),
         tenant: 0,
+        deadline: None,
+        cancel: CancelToken::default(),
     });
     let mut rounds = 0;
     while !sched.is_idle() {
