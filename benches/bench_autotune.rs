@@ -1,0 +1,74 @@
+//! Microbench autotuner harness: sweep the kernel tuning knobs
+//! (LUT-GEMM gather tile, spawn-amortization floor, prefill chunk) on
+//! this machine and persist the winners as a TOML consumed at serve
+//! startup (`[serve] tuning_file` / `--tuning-file`).
+//!
+//! ```text
+//! cargo bench --bench bench_autotune -- [--quick] [--out tuning.toml]
+//! ```
+//!
+//! With `BENCH_JSON=1` the per-candidate sweep points are also written
+//! to `BENCH_autotune.json` (artifact-only — the perf_compare gate
+//! does not consume it, since tuned winners are machine-dependent).
+
+use btc_llm::benchsuite::quick_mode;
+use btc_llm::util::autotune;
+use btc_llm::util::benchkit::{benchline, JsonReport, Table};
+use btc_llm::util::parallel;
+use btc_llm::util::simd;
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let out_path = {
+        let args: Vec<String> = std::env::args().collect();
+        args.iter()
+            .position(|a| a == "--out")
+            .and_then(|i| args.get(i + 1).cloned())
+            .unwrap_or_else(|| "tuning.toml".to_string())
+    };
+    println!(
+        "autotune sweep: simd={} threads={} ({} mode)",
+        simd::active().name(),
+        parallel::threads(),
+        if quick { "quick" } else { "full" }
+    );
+
+    let rep = autotune::run(quick);
+
+    let mut t = Table::new(&["knob", "candidate", "mean"]);
+    let mut json = JsonReport::new("autotune");
+    for p in &rep.points {
+        let chosen = match p.knob {
+            "gather_tile" => p.value == rep.tuning.gather_tile,
+            "par_min_work" => p.value == rep.tuning.par_min_work,
+            "prefill_chunk" => p.value == rep.tuning.prefill_chunk,
+            _ => false,
+        };
+        let mark = if chosen { " *" } else { "" };
+        t.row(&[
+            p.knob.to_string(),
+            format!("{}{mark}", p.value),
+            format!("{:.1}us", p.mean_ns / 1e3),
+        ]);
+        let kv = [
+            ("knob", p.knob.to_string()),
+            ("value", p.value.to_string()),
+            ("mean_ns", format!("{:.1}", p.mean_ns)),
+            ("chosen", chosen.to_string()),
+        ];
+        benchline("autotune", &kv);
+        json.row(&kv);
+    }
+    t.print();
+    println!("\nwinners: {}", rep.tuning.summary());
+
+    let toml = rep.tuning.to_toml();
+    std::fs::write(&out_path, &toml)?;
+    println!("wrote {out_path}");
+    // Round-trip through the serve-startup loader as a self-check.
+    let back = autotune::Tuning::from_file(&out_path)
+        .map_err(|e| anyhow::anyhow!("round-trip failed: {e}"))?;
+    anyhow::ensure!(back == rep.tuning, "tuning TOML round-trip mismatch");
+    let _ = json.write_if_enabled();
+    Ok(())
+}

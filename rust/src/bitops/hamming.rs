@@ -3,18 +3,112 @@
 //! For ±1 vectors packed as bits, squared Euclidean distance reduces to
 //! `4 · d_H` and the inner product to `len − 2 · d_H` — one XOR and one
 //! POPCNT per 64 elements instead of 64 multiply-adds.
+//!
+//! The word loop dispatches through [`crate::util::simd`]: the scalar
+//! body is the oracle, and the AVX2/NEON wrappers recompile the *same*
+//! unrolled body under wider target features so LLVM emits vector
+//! `popcnt` sequences (Harley-Seal-style on AVX2, `vcnt`+`vaddv` on
+//! NEON). Popcount is integer arithmetic, so every lane is
+//! **bit-identical** to scalar — asserted by the forced-variant
+//! equivalence suite (`rust/tests/simd_equivalence.rs`).
+//!
+//! Two tail policies exist:
+//! - [`hamming_words`] masks the final word with `tail_mask` and is
+//!   safe for operands with arbitrary padding bits.
+//! - [`hamming_words_padded`] assumes *clean* padding (the
+//!   `BitMatrix::from_signs` invariant, checkable via
+//!   `BitMatrix::padding_clean`) and runs one uniform unmasked loop —
+//!   the shape the vector lane wants and a small scalar win on
+//!   non-multiple-of-64 widths.
+
+use crate::util::simd::{self, Level};
+
+/// Sum of `popcount(a[i] ^ b[i])` over full words, 4-way unrolled with
+/// independent counters so the feature-gated wrappers vectorize it.
+#[inline(always)]
+fn xor_popcnt_generic(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut c0, mut c1, mut c2, mut c3) = (0u32, 0u32, 0u32, 0u32);
+    for i in 0..chunks {
+        let j = i * 4;
+        c0 += (a[j] ^ b[j]).count_ones();
+        c1 += (a[j + 1] ^ b[j + 1]).count_ones();
+        c2 += (a[j + 2] ^ b[j + 2]).count_ones();
+        c3 += (a[j + 3] ^ b[j + 3]).count_ones();
+    }
+    let mut tail = 0u32;
+    for j in chunks * 4..a.len() {
+        tail += (a[j] ^ b[j]).count_ones();
+    }
+    (c0 + c1) + (c2 + c3) + tail
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 and POPCNT (guaranteed
+    /// by dispatching on [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2,popcnt")]
+    pub unsafe fn xor_popcnt(a: &[u64], b: &[u64]) -> u32 {
+        super::xor_popcnt_generic(a, b)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON (guaranteed by
+    /// dispatching on [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_popcnt(a: &[u64], b: &[u64]) -> u32 {
+        super::xor_popcnt_generic(a, b)
+    }
+}
+
+/// Full-word XOR+POPCNT at an explicit dispatch level (integer math —
+/// bit-identical across every level).
+#[inline]
+fn xor_popcnt_words(level: Level, a: &[u64], b: &[u64]) -> u32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 | Level::Avx512 => unsafe { x86::xor_popcnt(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { arm::xor_popcnt(a, b) },
+        _ => xor_popcnt_generic(a, b),
+    }
+}
 
 /// Hamming distance between two packed rows of `n_bits` valid bits.
 /// `tail_mask` masks the final word's padding (see BitMatrix::tail_mask).
 #[inline]
 pub fn hamming_words(a: &[u64], b: &[u64], tail_mask: u64) -> u32 {
+    hamming_words_with_level(simd::active(), a, b, tail_mask)
+}
+
+/// [`hamming_words`] at an explicit dispatch level (for the
+/// equivalence suite; results are bit-identical across levels).
+#[inline]
+pub fn hamming_words_with_level(level: Level, a: &[u64], b: &[u64], tail_mask: u64) -> u32 {
     debug_assert_eq!(a.len(), b.len());
     let last = a.len() - 1;
-    let mut d = 0u32;
-    for i in 0..last {
-        d += (a[i] ^ b[i]).count_ones();
-    }
-    d + ((a[last] ^ b[last]) & tail_mask).count_ones()
+    xor_popcnt_words(level, &a[..last], &b[..last])
+        + ((a[last] ^ b[last]) & tail_mask).count_ones()
+}
+
+/// Hamming distance between packed rows whose padding bits are already
+/// zero (the `BitMatrix::from_signs` invariant): one uniform unmasked
+/// loop, no per-row tail special-casing. Callers with possibly-dirty
+/// words must use [`hamming_words`] instead.
+#[inline]
+pub fn hamming_words_padded(a: &[u64], b: &[u64]) -> u32 {
+    hamming_words_padded_with_level(simd::active(), a, b)
+}
+
+/// [`hamming_words_padded`] at an explicit dispatch level.
+#[inline]
+pub fn hamming_words_padded_with_level(level: Level, a: &[u64], b: &[u64]) -> u32 {
+    xor_popcnt_words(level, a, b)
 }
 
 /// Hamming distance between two ±1 f32 slices (reference path).
@@ -119,5 +213,53 @@ mod tests {
         let b = pack_signs(&[1.0, 1.0, 1.0]);
         a[0] |= 1u64 << 40; // padding
         assert_eq!(hamming_words(&a, &b, 0b111), 0);
+    }
+
+    #[test]
+    fn padded_variant_matches_masked_on_clean_padding() {
+        check(
+            "padded == masked when padding clean",
+            50,
+            |r: &mut Rng| {
+                let n = 1 + r.below(300);
+                let a: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+                let b: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let pa = pack_signs(a);
+                let pb = pack_signs(b);
+                let mask = if a.len() % 64 == 0 { u64::MAX } else { (1u64 << (a.len() % 64)) - 1 };
+                let masked = hamming_words(&pa, &pb, mask);
+                let padded = hamming_words_padded(&pa, &pb);
+                if masked == padded {
+                    Ok(())
+                } else {
+                    Err(format!("masked {masked} != padded {padded}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn every_supported_level_bit_identical() {
+        let mut r = Rng::new(0x5EED);
+        for n in [1usize, 63, 64, 65, 127, 128, 191, 200, 513] {
+            let a: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+            let b: Vec<f32> = (0..n).map(|_| r.sign()).collect();
+            let pa = pack_signs(&a);
+            let pb = pack_signs(&b);
+            let mask = if n % 64 == 0 { u64::MAX } else { (1u64 << (n % 64)) - 1 };
+            let oracle = hamming_words_with_level(Level::Scalar, &pa, &pb, mask);
+            let oracle_pad = hamming_words_padded_with_level(Level::Scalar, &pa, &pb);
+            for l in simd::supported_levels() {
+                assert_eq!(hamming_words_with_level(l, &pa, &pb, mask), oracle, "n={n} {l:?}");
+                assert_eq!(
+                    hamming_words_padded_with_level(l, &pa, &pb),
+                    oracle_pad,
+                    "padded n={n} {l:?}"
+                );
+            }
+        }
     }
 }

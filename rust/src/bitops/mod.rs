@@ -6,6 +6,6 @@ pub mod hamming;
 pub mod pack;
 pub mod plane;
 
-pub use hamming::{hamming, hamming_words, xnor_dot};
+pub use hamming::{hamming, hamming_words, hamming_words_padded, xnor_dot};
 pub use pack::BitMatrix;
 pub use plane::PackedPlane;

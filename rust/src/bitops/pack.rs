@@ -116,6 +116,18 @@ impl BitMatrix {
     pub fn storage_bytes(&self) -> usize {
         self.data.len() * 8
     }
+
+    /// True when every row's padding bits (past `cols` in its last
+    /// word) are zero — the invariant `from_signs`/`set` maintain and
+    /// the unmasked [`crate::bitops::hamming::hamming_words_padded`]
+    /// fast path relies on. O(rows); debug-assert material.
+    pub fn padding_clean(&self) -> bool {
+        let poison = !self.tail_mask();
+        if poison == 0 {
+            return true;
+        }
+        (0..self.rows).all(|r| self.row(r)[self.words_per_row - 1] & poison == 0)
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +192,16 @@ mod tests {
         assert_eq!(BitMatrix::zeros(1, 64).tail_mask(), u64::MAX);
         assert_eq!(BitMatrix::zeros(1, 3).tail_mask(), 0b111);
         assert_eq!(BitMatrix::zeros(1, 65).tail_mask(), 1);
+    }
+
+    #[test]
+    fn padding_clean_tracks_poisoned_bits() {
+        let mut m = BitMatrix::from_signs(2, 70, &[1.0; 140]);
+        assert!(m.padding_clean());
+        m.data[3] |= 1u64 << 63; // row 1, padding region (bits 6..64 of last word)
+        assert!(!m.padding_clean());
+        // Full-word widths have no padding to poison.
+        assert!(BitMatrix::from_signs(2, 64, &[-1.0; 128]).padding_clean());
     }
 
     #[test]

@@ -79,6 +79,15 @@ pub struct ServeConfig {
     /// `PALLAS_FAULTS` env var (see `util::faultpoint`). Empty =
     /// disabled; production configs never set this.
     pub faults: String,
+    /// Path to an autotuner TOML (`[serve] tuning_file`, written by
+    /// `cargo bench --bench bench_autotune`). Loaded and applied at
+    /// serve startup; empty = run with the compile-time defaults.
+    /// An explicit `prefill_chunk` in this config wins over the file.
+    pub tuning_file: String,
+    /// Run the quick in-process microbench sweep at startup
+    /// (`[serve] autotune`) and apply its winners. Applied *after*
+    /// `tuning_file`, so it refines a stale file on new hardware.
+    pub autotune: bool,
 }
 
 impl Default for ServeConfig {
@@ -107,6 +116,8 @@ impl Default for ServeConfig {
             deadline_ms: 0,
             tenant_deadline_ms: Vec::new(),
             faults: String::new(),
+            tuning_file: String::new(),
+            autotune: false,
         }
     }
 }
@@ -286,6 +297,8 @@ impl ServeConfig {
             deadline_ms: doc.get_int("serve.deadline_ms", d.deadline_ms as i64).max(0) as u64,
             tenant_deadline_ms,
             faults,
+            tuning_file: doc.get_str("serve.tuning_file", &d.tuning_file).to_string(),
+            autotune: doc.get_bool("serve.autotune", d.autotune),
         };
         // Semantic QoS validation (duplicate/empty ids) lives in
         // QosConfig::validate — run it here so a bad file fails at
@@ -378,6 +391,16 @@ mod tests {
         assert_eq!(c.backend, "binary");
         assert_eq!(c.bits, 1.0);
         assert_eq!(c.threads, 3);
+    }
+
+    #[test]
+    fn tuning_knobs_parse_with_defaults() {
+        let c = from_str("").unwrap();
+        assert!(c.tuning_file.is_empty());
+        assert!(!c.autotune);
+        let c = from_str("[serve]\ntuning_file = \"tuning.toml\"\nautotune = true\n").unwrap();
+        assert_eq!(c.tuning_file, "tuning.toml");
+        assert!(c.autotune);
     }
 
     #[test]

@@ -403,7 +403,8 @@ impl Metrics {
              prefill={:.0}us/tok decode={:.0}us/tok inflight_peak={} \
              kv_blocks={}/{} kv_blocks_peak={} kv_bytes={} kv_bytes_peak={} kv_quant_blocks={} \
              kv_shared_pos={} kv_defer={}+{} kv_preempt={} panics_caught={} quarantines={} \
-             worker_restarts={} deadline_cancels={} disconnect_cancels={}",
+             worker_restarts={} deadline_cancels={} disconnect_cancels={} \
+             simd={} gather_tile={} par_min_work={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -434,6 +435,9 @@ impl Metrics {
             self.worker_restarts.load(Ordering::Relaxed),
             self.deadline_cancels.load(Ordering::Relaxed),
             self.disconnect_cancels.load(Ordering::Relaxed),
+            crate::util::simd::active().name(),
+            crate::util::autotune::gather_tile(),
+            crate::util::parallel::par_min_work(),
         )
     }
 }
@@ -545,6 +549,19 @@ mod tests {
         assert!(s.contains("worker_restarts=1"), "{s}");
         assert!(s.contains("deadline_cancels=2"), "{s}");
         assert!(s.contains("disconnect_cancels=1"), "{s}");
+    }
+
+    #[test]
+    fn summary_reports_kernel_dispatch() {
+        // The /metrics surface carries the active SIMD level and the
+        // live tuning constants. Values are process-global (other
+        // tests may transiently retune them), so only presence and
+        // well-formedness are pinned here.
+        let s = Metrics::new().summary();
+        let level = crate::util::simd::active().name();
+        assert!(s.contains(&format!("simd={level}")), "{s}");
+        assert!(s.contains("gather_tile="), "{s}");
+        assert!(s.contains("par_min_work="), "{s}");
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::bitops::PackedPlane;
 use crate::quant::codebook::CodebookLayer;
 use crate::tensor::Matrix;
 use crate::util::parallel;
+use crate::util::simd::{self, Level};
 
 /// Largest divisor of `v` that is <= 8 (the Stage-I segment width μ).
 pub fn pick_mu(v: usize) -> usize {
@@ -29,10 +30,105 @@ pub fn pick_mu(v: usize) -> usize {
     1
 }
 
-/// Output-row tile width of the gather stage: a tile of rows walks the
-/// blocks together so each block's `cblut` row stays hot in cache
-/// across the whole tile.
-const GATHER_TILE: usize = 32;
+/// Default output-row tile width of the gather stage: a tile of rows
+/// walks the blocks together so each block's `cblut` row stays hot in
+/// cache across the whole tile. The per-engine width is tunable
+/// (`util::autotune` sweeps it; `try_new_with` pins it for tests) —
+/// and because each output row's block-accumulation order is fixed at
+/// j = 0..nb regardless of tiling, *every* tile width produces
+/// bit-identical results.
+pub const GATHER_TILE_DEFAULT: usize = 32;
+
+/// Upper bound for the tunable gather tile; the gather's stack
+/// buffers are sized to this.
+pub const GATHER_TILE_MAX: usize = 64;
+
+/// Per-lane gather accumulate, ungrouped: independent f32 adds per
+/// tile lane, j-order fixed by the caller.
+#[inline(always)]
+fn gather_accum_generic(acc: &mut [f32], cb: &[f32], idx: &[u32]) {
+    for (a, &k) in acc.iter_mut().zip(idx) {
+        *a += cb[k as usize];
+    }
+}
+
+/// Per-lane gather accumulate with per-(row, group) scales.
+#[inline(always)]
+fn gather_accum_grouped_generic(
+    acc: &mut [f32],
+    cb: &[f32],
+    idx: &[u32],
+    alpha: &[f32],
+    r: usize,
+    n_groups: usize,
+    g: usize,
+) {
+    for (rr, (a, &k)) in acc.iter_mut().zip(idx).enumerate() {
+        *a += alpha[(r + rr) * n_groups + g] * cb[k as usize];
+    }
+}
+
+// The vector lanes recompile the generic bodies under wider target
+// features so LLVM can emit gathered loads / wider mul-add sequences.
+// Deliberately NO fma in the enable set: Rust never contracts
+// mul-then-add on its own, each tile lane is an independent
+// accumulator, and the per-row j-order is unchanged — so these lanes
+// stay **bit-identical** to scalar (asserted by
+// `packed_gather_bit_identical_to_dense_index_reference` and the
+// forced-variant equivalence suite).
+#[cfg(target_arch = "x86_64")]
+mod lanes {
+    /// # Safety
+    /// Caller must ensure AVX2 (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum(acc: &mut [f32], cb: &[f32], idx: &[u32]) {
+        super::gather_accum_generic(acc, cb, idx)
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_grouped(
+        acc: &mut [f32],
+        cb: &[f32],
+        idx: &[u32],
+        alpha: &[f32],
+        r: usize,
+        n_groups: usize,
+        g: usize,
+    ) {
+        super::gather_accum_grouped_generic(acc, cb, idx, alpha, r, n_groups, g)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod lanes {
+    /// # Safety
+    /// Caller must ensure NEON (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accum(acc: &mut [f32], cb: &[f32], idx: &[u32]) {
+        super::gather_accum_generic(acc, cb, idx)
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accum_grouped(
+        acc: &mut [f32],
+        cb: &[f32],
+        idx: &[u32],
+        alpha: &[f32],
+        r: usize,
+        n_groups: usize,
+        g: usize,
+    ) {
+        super::gather_accum_grouped_generic(acc, cb, idx, alpha, r, n_groups, g)
+    }
+}
 
 /// Prepared LUT-GEMM engine for one codebook-compressed layer.
 #[derive(Debug, Clone)]
@@ -61,6 +157,12 @@ pub struct LutGemmEngine {
     /// Per-block group id (block-aligned column groups).
     block_group: Vec<u16>,
     n_groups: usize,
+    /// Gather tile width, clamped to `1..=GATHER_TILE_MAX`. Seeded
+    /// from `util::autotune` at construction; bit-identical across
+    /// widths (fixed per-row j-order).
+    gather_tile: usize,
+    /// Dispatch lane captured at construction (never changes mid-serve).
+    level: Level,
 }
 
 /// Per-thread activation scratch: padded row, Stage-I tables, Stage-II
@@ -76,6 +178,17 @@ impl LutGemmEngine {
     /// Build from a codebook layer. Returns `None` when column groups
     /// are not block-aligned (caller falls back to the dequant path).
     pub fn try_new(layer: &CodebookLayer) -> Option<LutGemmEngine> {
+        Self::try_new_with(layer, simd::active(), crate::util::autotune::gather_tile())
+    }
+
+    /// Build with an explicit dispatch level and gather tile width
+    /// (equivalence tests and benches; production goes through
+    /// [`Self::try_new`]). The tile is clamped to `1..=GATHER_TILE_MAX`.
+    pub fn try_new_with(
+        layer: &CodebookLayer,
+        level: Level,
+        gather_tile: usize,
+    ) -> Option<LutGemmEngine> {
         let v = layer.v;
         let nb = layer.blocks_per_row();
         // Verify block-aligned groups and collect per-block ids.
@@ -120,7 +233,14 @@ impl LutGemmEngine {
             mu: layer.mu_f32(),
             block_group,
             n_groups: layer.n_groups,
+            gather_tile: gather_tile.clamp(1, GATHER_TILE_MAX),
+            level,
         })
+    }
+
+    /// The dispatch lane this engine was built with.
+    pub fn level(&self) -> Level {
+        self.level
     }
 
     fn scratch(&self) -> Scratch {
@@ -224,32 +344,57 @@ impl LutGemmEngine {
         xsum
     }
 
+    /// Ungrouped tile accumulate, dispatched on the engine's lane.
+    #[inline]
+    fn accum(&self, acc: &mut [f32], cb: &[f32], idx: &[u32]) {
+        match self.level {
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 | Level::Avx512 => unsafe { lanes::accum(acc, cb, idx) },
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => unsafe { lanes::accum(acc, cb, idx) },
+            _ => gather_accum_generic(acc, cb, idx),
+        }
+    }
+
+    /// Grouped tile accumulate, dispatched on the engine's lane.
+    #[inline]
+    fn accum_grouped(&self, acc: &mut [f32], cb: &[f32], idx: &[u32], r: usize, g: usize) {
+        match self.level {
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 | Level::Avx512 => unsafe {
+                lanes::accum_grouped(acc, cb, idx, &self.alpha, r, self.n_groups, g)
+            },
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => unsafe {
+                lanes::accum_grouped(acc, cb, idx, &self.alpha, r, self.n_groups, g)
+            },
+            _ => gather_accum_grouped_generic(acc, cb, idx, &self.alpha, r, self.n_groups, g),
+        }
+    }
+
     /// Gather-accumulate output rows `r0..r0+ys.len()` from a built
     /// `cblut`, tiled so each block's `cblut` row is reused across a
     /// whole tile of output rows. The block-major packed plane is
-    /// decoded `GATHER_TILE` indices at a time into a stack buffer, so
+    /// decoded `gather_tile` indices at a time into a stack buffer, so
     /// the inner loop is a branch-light table walk over plain u32s.
     /// Per output row the accumulation order stays j = 0..nb, so
-    /// tiling is bit-identical to the row-at-a-time loop.
+    /// tiling (at any width) is bit-identical to the row-at-a-time
+    /// loop, and so are the vector lanes (no FMA contraction).
     fn gather(&self, cblut: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
         let (nb, c) = (self.nb, self.c);
-        let mut ibuf = [0u32; GATHER_TILE];
+        let mut ibuf = [0u32; GATHER_TILE_MAX];
         let mut r = r0;
-        for tile in ys.chunks_mut(GATHER_TILE) {
+        for tile in ys.chunks_mut(self.gather_tile) {
             let tl = tile.len();
-            let mut acc = [0f32; GATHER_TILE];
+            let mut acc = [0f32; GATHER_TILE_MAX];
             for j in 0..nb {
                 let cb = &cblut[j * c..(j + 1) * c];
                 self.idx_t.decode_range(j, r, &mut ibuf[..tl]);
                 if self.n_groups == 1 {
-                    for (a, &k) in acc[..tl].iter_mut().zip(&ibuf[..tl]) {
-                        *a += cb[k as usize];
-                    }
+                    self.accum(&mut acc[..tl], cb, &ibuf[..tl]);
                 } else {
                     let g = self.block_group[j] as usize;
-                    for (rr, (a, &k)) in acc[..tl].iter_mut().zip(&ibuf[..tl]).enumerate() {
-                        *a += self.alpha[(r + rr) * self.n_groups + g] * cb[k as usize];
-                    }
+                    self.accum_grouped(&mut acc[..tl], cb, &ibuf[..tl], r, g);
                 }
             }
             if self.n_groups == 1 {
@@ -431,6 +576,29 @@ mod tests {
     }
 
     #[test]
+    fn every_level_and_tile_bit_identical() {
+        // The gather's contract is *bit*-identity across dispatch
+        // lanes AND tile widths (fixed per-row j-order, no FMA in the
+        // lane bodies) — including out < tile and ragged cols.
+        let mut rng = Rng::new(15);
+        for (rows, cols, v, c) in [(70usize, 64usize, 16usize, 40usize), (5, 21, 8, 16)] {
+            let cl = make_codebook_layer(&mut rng, rows, cols, v, c);
+            let x = Matrix::randn(2, cols, &mut rng);
+            let oracle = LutGemmEngine::try_new_with(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+                .unwrap()
+                .forward(&x);
+            for l in crate::util::simd::supported_levels() {
+                for tile in [1usize, 3, GATHER_TILE_DEFAULT, GATHER_TILE_MAX] {
+                    let eng = LutGemmEngine::try_new_with(&cl, l, tile).unwrap();
+                    assert_eq!(eng.gather_tile, tile);
+                    let y = eng.forward(&x);
+                    assert_eq!(y.data, oracle.data, "{rows}x{cols} {l:?} tile={tile}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn resident_bytes_equal_sum_of_owned_buffers() {
         // The memory estimate must be a measurement of the buffers the
         // engine actually owns — not a hypothetical packed size.
@@ -473,9 +641,9 @@ mod tests {
             let xsum = eng.build_tables(x.row(0), &mut sc);
             let mut want = vec![0f32; rows];
             let mut r = 0usize;
-            for tile in want.chunks_mut(GATHER_TILE) {
+            for tile in want.chunks_mut(eng.gather_tile) {
                 let tl = tile.len();
-                let mut acc = [0f32; GATHER_TILE];
+                let mut acc = [0f32; GATHER_TILE_MAX];
                 for j in 0..eng.nb {
                     let cb = &sc.cblut[j * eng.c..(j + 1) * eng.c];
                     let it = &dense_idx_t[j * rows + r..j * rows + r + tl];

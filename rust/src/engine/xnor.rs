@@ -2,15 +2,181 @@
 //! 1-bit lane): `y[i,r] = Σ_g alpha[r,g]·Σ_{c∈g} ±x[i,c] + mu[r]·Σx`.
 //!
 //! No dequantized weight is ever materialized: the ±1 contraction uses
-//! the identity `Σ ±x = 2·Σ_{bits set} x − Σ x`, so each 64-column word
-//! costs one mask + one bit-iteration over the *set* bits (≈ cols/2
-//! adds). A true XNOR+POPCNT path ([`xnor_popcnt_gemm`]) is provided
-//! for binary activations (App. F / BNN-style fully-binary inference).
+//! the identity `Σ ±x = 2·Σ_{bits set} x − Σ x`. The scalar lane walks
+//! the *set* bits of each 64-column word (≈ cols/2 adds) and is the
+//! oracle; the AVX2 lane instead turns each sign byte into an 8-lane
+//! compare mask and does a masked vector accumulate (8 adds per 8
+//! columns, no data-dependent branching), which reassociates the sum —
+//! so the vector lanes are ULP-bounded rather than bit-identical
+//! against scalar (bound asserted in `rust/tests/simd_equivalence.rs`).
+//! The lane is chosen per [`crate::util::simd::Level`], captured at
+//! engine construction. A true XNOR+POPCNT path ([`xnor_popcnt_gemm`])
+//! is provided for binary activations (App. F / BNN-style fully-binary
+//! inference); popcount is integer math, so that one stays
+//! bit-identical on every lane.
 
-use crate::bitops::{hamming_words, BitMatrix};
+use crate::bitops::{hamming_words_padded, BitMatrix};
 use crate::quant::binarize::BinaryLayer;
 use crate::tensor::Matrix;
 use crate::util::parallel;
+use crate::util::simd::{self, Level};
+
+/// Σ x over the set bits of `w`, offset by `base` — the scalar set-bit
+/// walk, also used for the vector lanes' final partial word.
+#[inline(always)]
+fn sum_where_set(mut w: u64, xrow: &[f32], base: usize) -> f32 {
+    let mut s = 0f32;
+    while w != 0 {
+        let t = w.trailing_zeros() as usize;
+        s += xrow[base + t];
+        w &= w - 1;
+    }
+    s
+}
+
+/// Scalar oracle for one weight row: single sequential accumulator in
+/// word-then-bit order — exactly the pre-SIMD loop, so
+/// `PALLAS_SIMD=scalar` stays bit-identical to historical outputs.
+fn row_pos_scalar(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
+    let mut pos = 0f32;
+    for (wi, &bw) in brow.iter().enumerate() {
+        let mut w = match gmask {
+            Some(m) => bw & m[wi],
+            None => bw,
+        };
+        let base = wi * 64;
+        while w != 0 {
+            let t = w.trailing_zeros() as usize;
+            pos += xrow[base + t];
+            w &= w - 1;
+        }
+    }
+    pos
+}
+
+/// Branchless 8-lane masked accumulate body shared by the non-x86
+/// vector wrappers: select via sign-bit AND masks (never `0 * inf`),
+/// 8 independent sub-accumulators reduced pairwise at the end.
+#[cfg(target_arch = "aarch64")]
+#[inline(always)]
+fn row_pos_lanes_generic(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
+    let full = xrow.len() / 64;
+    let mut acc = [0f32; 8];
+    for wi in 0..full {
+        let w = match gmask {
+            Some(m) => brow[wi] & m[wi],
+            None => brow[wi],
+        };
+        if w == 0 {
+            continue;
+        }
+        let xw = &xrow[wi * 64..wi * 64 + 64];
+        for byte in 0..8 {
+            let b = (w >> (byte * 8)) & 0xff;
+            if b == 0 {
+                continue;
+            }
+            let xs = &xw[byte * 8..byte * 8 + 8];
+            for (l, a) in acc.iter_mut().enumerate() {
+                let keep = 0u32.wrapping_sub(((b >> l) & 1) as u32);
+                *a += f32::from_bits(xs[l].to_bits() & keep);
+            }
+        }
+    }
+    let mut pos = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    if full < brow.len() {
+        let w = match gmask {
+            Some(m) => brow[full] & m[full],
+            None => brow[full],
+        };
+        pos += sum_where_set(w, xrow, full * 64);
+    }
+    pos
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    #[inline(always)]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Masked sign-accumulate for one weight row: each byte of the
+    /// (group-masked) sign word is broadcast and compared against the
+    /// per-lane bit positions to build an 8-lane select mask for one
+    /// unaligned f32 load — no data-dependent branches in the lane
+    /// body. Final partial word falls back to the scalar walk
+    /// (padding bits are zero by BitMatrix construction).
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 (guaranteed by
+    /// dispatching on [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_pos(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
+        let full = xrow.len() / 64;
+        let bits = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let mut acc = _mm256_setzero_ps();
+        let p = xrow.as_ptr();
+        for wi in 0..full {
+            let w = match gmask {
+                Some(m) => brow[wi] & m[wi],
+                None => brow[wi],
+            };
+            if w == 0 {
+                continue;
+            }
+            for byte in 0..8 {
+                let b = ((w >> (byte * 8)) & 0xff) as i32;
+                if b == 0 {
+                    continue;
+                }
+                let sel = _mm256_cmpeq_epi32(_mm256_and_si256(_mm256_set1_epi32(b), bits), bits);
+                let xv = _mm256_loadu_ps(p.add(wi * 64 + byte * 8));
+                acc = _mm256_add_ps(acc, _mm256_and_ps(_mm256_castsi256_ps(sel), xv));
+            }
+        }
+        let mut pos = hsum(acc);
+        if full < brow.len() {
+            let w = match gmask {
+                Some(m) => brow[full] & m[full],
+                None => brow[full],
+            };
+            pos += super::sum_where_set(w, xrow, full * 64);
+        }
+        pos
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON (guaranteed by
+    /// dispatching on [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn row_pos(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
+        super::row_pos_lanes_generic(brow, gmask, xrow)
+    }
+}
+
+/// `pos = Σ x` over columns whose (optionally group-masked) sign bit
+/// is set, dispatched on `level`.
+#[inline]
+fn row_pos(level: Level, brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 | Level::Avx512 => unsafe { x86::row_pos(brow, gmask, xrow) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { arm::row_pos(brow, gmask, xrow) },
+        _ => row_pos_scalar(brow, gmask, xrow),
+    }
+}
 
 /// Prepared W1A16 engine for one binarized layer.
 #[derive(Debug, Clone)]
@@ -23,10 +189,18 @@ pub struct BinaryGemmEngine {
     mu: Vec<f32>,
     /// Per-group column bitmask, one mask row of `words_per_row` words.
     group_masks: Vec<Vec<u64>>,
+    /// Dispatch lane captured at construction (never changes mid-serve).
+    level: Level,
 }
 
 impl BinaryGemmEngine {
     pub fn new(layer: &BinaryLayer) -> BinaryGemmEngine {
+        Self::new_with_level(layer, simd::active())
+    }
+
+    /// Build with an explicit dispatch level (equivalence tests and
+    /// benches; production goes through [`Self::new`]).
+    pub fn new_with_level(layer: &BinaryLayer, level: Level) -> BinaryGemmEngine {
         let wpr = layer.b.words_per_row;
         let mut group_masks = vec![vec![0u64; wpr]; layer.n_groups];
         for (c, &g) in layer.col_group.iter().enumerate() {
@@ -40,7 +214,13 @@ impl BinaryGemmEngine {
             alpha: layer.alpha.clone(),
             mu: layer.mu.clone(),
             group_masks,
+            level,
         }
+    }
+
+    /// The dispatch lane this engine was built with.
+    pub fn level(&self) -> Level {
+        self.level
     }
 
     /// y = x @ Ŵᵀ without dequantization. x: (m, cols) -> (m, out).
@@ -51,16 +231,17 @@ impl BinaryGemmEngine {
         self.forward_grouped(x)
     }
 
-    /// Fast path (single scale group): `Σ±x = 2·Σ_{set bits}x − Σx`,
-    /// iterating only the SET bits of each weight word (≈cols/2 adds).
+    /// Fast path (single scale group): `Σ±x = 2·Σ_{set bits}x − Σx`.
     /// Perf §Perf note: a branchless sign-XOR variant
     /// (`acc += f32::from_bits(x ^ flip)`) was tried and measured
     /// ~1.7x SLOWER at the Fig. 5 shape — the per-lane variable shifts
-    /// defeat LLVM's vectorizer — so set-bit iteration stays.
+    /// defeat LLVM's vectorizer — so the scalar lane keeps set-bit
+    /// iteration and the AVX2 lane uses compare-mask selects instead.
     ///
     /// Thread-parallel over input rows (batch decode / prefill) or,
     /// at m == 1, over output-row chunks; each output value is
-    /// computed by the same scalar loop either way (bit-identical).
+    /// computed by the same per-row loop either way (bit-identical
+    /// across thread counts at a fixed dispatch level).
     fn forward_ungrouped(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.cols);
         let m = x.rows;
@@ -87,25 +268,14 @@ impl BinaryGemmEngine {
 
     /// Output rows `r0..r0+ys.len()` for one activation row.
     fn outs_ungrouped(&self, xrow: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
-        let wpr = self.b.words_per_row;
         for (rr, yv) in ys.iter_mut().enumerate() {
             let r = r0 + rr;
-            let brow = self.b.row(r);
-            let mut pos = 0f32;
-            for wi in 0..wpr {
-                let mut w = brow[wi];
-                let base = wi * 64;
-                while w != 0 {
-                    let t = w.trailing_zeros() as usize;
-                    pos += xrow[base + t];
-                    w &= w - 1;
-                }
-            }
+            let pos = row_pos(self.level, self.b.row(r), None, xrow);
             *yv = self.alpha[r] * (2.0 * pos - xsum) + self.mu[r] * xsum;
         }
     }
 
-    /// General path: per-(row, group) scales via masked bit iteration.
+    /// General path: per-(row, group) scales via masked accumulation.
     /// Parallel split mirrors [`Self::forward_ungrouped`].
     fn forward_grouped(&self, x: &Matrix) -> Matrix {
         assert_eq!(x.cols, self.cols);
@@ -132,6 +302,8 @@ impl BinaryGemmEngine {
     }
 
     /// Per-group sums (Σ_{c in g} x_c) and their total for one row.
+    /// Runs once per activation row (not per output row), so it stays
+    /// on the scalar walk at every dispatch level.
     fn group_sums(&self, xrow: &[f32]) -> (Vec<f32>, f32) {
         let mut group_sum = vec![0f32; self.n_groups];
         let mut xsum = 0f32;
@@ -154,24 +326,13 @@ impl BinaryGemmEngine {
 
     /// Grouped output rows `r0..r0+ys.len()` for one activation row.
     fn outs_grouped(&self, xrow: &[f32], group_sum: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
-        let wpr = self.b.words_per_row;
         for (rr, yv) in ys.iter_mut().enumerate() {
             let r = r0 + rr;
             let brow = self.b.row(r);
             let mut acc = 0f32;
-            for g in 0..self.n_groups {
+            for (g, mask) in self.group_masks.iter().enumerate() {
                 // pos = Σ x over columns where sign=+1 within group g.
-                let mask = &self.group_masks[g];
-                let mut pos = 0f32;
-                for wi in 0..wpr {
-                    let mut w = brow[wi] & mask[wi];
-                    let base = wi * 64;
-                    while w != 0 {
-                        let t = w.trailing_zeros() as usize;
-                        pos += xrow[base + t];
-                        w &= w - 1;
-                    }
-                }
+                let pos = row_pos(self.level, brow, Some(mask), xrow);
                 acc += self.alpha[r * self.n_groups + g] * (2.0 * pos - group_sum[g]);
             }
             *yv = acc + self.mu[r] * xsum;
@@ -192,12 +353,16 @@ impl BinaryGemmEngine {
 
 /// Fully-binary GEMM: both activations and weights are packed ±1;
 /// `y[i,r] = n − 2·d_H` via XNOR+POPCNT (one instruction pair per 64
-/// elements — the paper's Eq. 5 arithmetic). Thread-parallel over
-/// activation rows; each output is an independent popcount reduction,
-/// so the split cannot change results.
+/// elements — the paper's Eq. 5 arithmetic). Padding bits are zero by
+/// `BitMatrix` construction, so the final partial word needs no mask
+/// re-check in the inner loop: one uniform unmasked popcount pass
+/// ([`hamming_words_padded`]), bit-identical at every dispatch level.
+/// Thread-parallel over activation rows; each output is an independent
+/// popcount reduction, so the split cannot change results.
 pub fn xnor_popcnt_gemm(x: &BitMatrix, w: &BitMatrix) -> Matrix {
     assert_eq!(x.cols, w.cols);
-    let mask = x.tail_mask();
+    debug_assert!(x.padding_clean(), "xnor_popcnt_gemm: dirty padding bits in activations");
+    debug_assert!(w.padding_clean(), "xnor_popcnt_gemm: dirty padding bits in weights");
     let out_n = w.rows;
     let mut y = Matrix::zeros(x.rows, out_n);
     let nt = parallel::threads_for(x.rows * out_n * (x.cols / 32).max(1));
@@ -205,7 +370,7 @@ pub fn xnor_popcnt_gemm(x: &BitMatrix, w: &BitMatrix) -> Matrix {
         for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
             let xrow = x.row(i0 + ii);
             for (r, yv) in yrow.iter_mut().enumerate() {
-                let d = hamming_words(xrow, w.row(r), mask);
+                let d = hamming_words_padded(xrow, w.row(r));
                 *yv = (x.cols as i32 - 2 * d as i32) as f32;
             }
         }
@@ -277,7 +442,8 @@ mod tests {
     #[test]
     fn batched_forward_bitwise_matches_per_row() {
         // Crossing the parallel threshold must not change a single bit
-        // vs running each activation row alone.
+        // vs running each activation row alone (same engine, so the
+        // same dispatch lane on both sides).
         let mut rng = Rng::new(8);
         let w = Matrix::randn(96, 256, &mut rng);
         let q = BinaryLayer::quantize(&w);
@@ -288,6 +454,22 @@ mod tests {
             let xi = Matrix::from_vec(1, 256, x.row(i).to_vec());
             let yi = eng.forward(&xi);
             assert_eq!(y.row(i), yi.row(0), "row {i}");
+        }
+    }
+
+    #[test]
+    fn vector_lanes_close_to_scalar_engine() {
+        // Full-precision equivalence across every runnable lane; tight
+        // ULP-style bounds live in rust/tests/simd_equivalence.rs.
+        let mut rng = Rng::new(21);
+        let w = Matrix::randn(24, 193, &mut rng); // cols % 64 == 1
+        let q = BinaryLayer::quantize(&w);
+        let x = Matrix::randn(3, 193, &mut rng);
+        let oracle = BinaryGemmEngine::new_with_level(&q, Level::Scalar).forward(&x);
+        for l in simd::supported_levels() {
+            let y = BinaryGemmEngine::new_with_level(&q, l).forward(&x);
+            assert_close(&y.data, &oracle.data, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{l:?}: {e}"));
         }
     }
 

@@ -6,6 +6,7 @@
 //! btc-llm eval      [--model tinylm_m] [--method btc] [--bits 0.8] [--tokens 4096] [--zeroshot]
 //! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N] [--kv-bits B]
 //!                   [--listen ADDR] [--smoke] [--synthetic]
+//!                   [--tuning-file tuning.toml] [--autotune]
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
 //!
@@ -131,6 +132,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map_err(|e| anyhow::anyhow!("--listen {addr}: {e}"))?;
         cfg.listen = Some(addr.to_string());
     }
+    // Kernel tuning: a persisted autotuner file first, then (or
+    // instead) the quick in-process sweep. Both only retune
+    // speed-shaping knobs — results are pinned bit-identical across
+    // tile widths and thread splits, so a stale file cannot corrupt
+    // outputs. CLI: `--tuning-file PATH` / `--autotune`.
+    let tuning_file = args.get_or("tuning-file", &cfg.tuning_file).to_string();
+    if !tuning_file.is_empty() {
+        let t = btc_llm::util::autotune::Tuning::from_file(&tuning_file)
+            .map_err(|e| anyhow::anyhow!("tuning file: {e}"))?;
+        t.apply();
+        // The file's prefill chunk applies only where the config left
+        // the default — an explicit `[serve] prefill_chunk` wins.
+        if cfg.prefill_chunk == ServeConfig::default().prefill_chunk {
+            cfg.prefill_chunk = t.prefill_chunk;
+        }
+        info!("tuning file {tuning_file}: {}", t.summary());
+    }
+    if cfg.autotune || args.flag("autotune") {
+        info!("autotuning kernels (quick sweep)...");
+        let rep = btc_llm::util::autotune::run(true);
+        rep.tuning.apply();
+        if cfg.prefill_chunk == ServeConfig::default().prefill_chunk {
+            cfg.prefill_chunk = rep.tuning.prefill_chunk;
+        }
+        info!("autotune: {}", rep.tuning.summary());
+    }
     let (raw, corpus_bytes) = if args.flag("synthetic") {
         // Hermetic: a random model of a serving-representative shape,
         // so the loopback smoke runs without `make artifacts`.
@@ -172,7 +199,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // error here, not a worker-thread panic.
     let server = Server::try_start_with_opts(qm.model, ServerOptions::from(&cfg))
         .map_err(|e| anyhow::anyhow!("start server: {e}"))?;
-    info!("serving with {} kernel thread(s)", server.threads);
+    info!(
+        "serving with {} kernel thread(s), simd={} gather_tile={} par_min_work={} prefill_chunk={}",
+        server.threads,
+        btc_llm::util::simd::active().name(),
+        btc_llm::util::autotune::gather_tile(),
+        btc_llm::util::parallel::par_min_work(),
+        cfg.prefill_chunk
+    );
     if let Some(addr) = cfg.listen.clone() {
         return serve_network(server, &addr, args.flag("smoke"));
     }

@@ -216,8 +216,36 @@ impl Matrix {
 }
 
 /// Unrolled dot product over contiguous slices — the GEMM inner loop.
+/// Dispatches on the global [`crate::util::simd`] level: the scalar
+/// lane is the historical 4-accumulator unroll (bit-identical to
+/// pre-SIMD outputs under `PALLAS_SIMD=scalar`); the vector lanes use
+/// explicit `mul_add` in a wider unroll, which contracts and
+/// reassociates — ULP-bounded rather than bit-identical against
+/// scalar (bound asserted in `rust/tests/simd_equivalence.rs`). Each
+/// `matmul_bt` call resolves the level once, so parallel splits and
+/// the serial reference always agree bitwise.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_with_level(crate::util::simd::active(), a, b)
+}
+
+/// [`dot`] at an explicit dispatch level.
+#[inline]
+pub fn dot_with_level(level: crate::util::simd::Level, a: &[f32], b: &[f32]) -> f32 {
+    use crate::util::simd::Level;
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 | Level::Avx512 => unsafe { dot_lanes::fma(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { dot_lanes::fma(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// The scalar oracle: the pre-SIMD 4-accumulator unroll, association
+/// preserved exactly.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 8;
@@ -234,6 +262,55 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         tail += a[i] * b[i];
     }
     (s0 + s1) + (s2 + s3) + tail
+}
+
+/// FMA dot body: `W` independent lane accumulators fed by explicit
+/// `mul_add` (deterministic per level — Rust only contracts where the
+/// source says so), reduced in a fixed order. Instantiated inside the
+/// feature-gated wrappers so LLVM lowers `mul_add` to real `vfmadd` /
+/// `fmla` and vectorizes the lane loop.
+#[inline(always)]
+fn dot_fma_generic<const W: usize>(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / W;
+    let mut acc = [0f32; W];
+    for c in 0..chunks {
+        let i = c * W;
+        for l in 0..W {
+            acc[l] = a[i + l].mul_add(b[i + l], acc[l]);
+        }
+    }
+    let mut s = 0f32;
+    for v in acc {
+        s += v;
+    }
+    for i in chunks * W..n {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
+}
+
+#[cfg(target_arch = "x86_64")]
+mod dot_lanes {
+    /// # Safety
+    /// Caller must ensure AVX2+FMA (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma(a: &[f32], b: &[f32]) -> f32 {
+        super::dot_fma_generic::<16>(a, b)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod dot_lanes {
+    /// # Safety
+    /// Caller must ensure NEON (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma(a: &[f32], b: &[f32]) -> f32 {
+        super::dot_fma_generic::<16>(a, b)
+    }
 }
 
 /// y += alpha * x (axpy).
@@ -363,6 +440,27 @@ mod tests {
                 assert_close(&[dot(a, b)], &[naive], 1e-4, 1e-4)
             },
         );
+    }
+
+    #[test]
+    fn dot_lanes_within_f64_bound() {
+        // The FMA lanes reassociate; the contract is an asserted error
+        // bound vs the f64 reference, which the scalar oracle must
+        // also satisfy (and Scalar must equal dot_scalar bitwise).
+        let mut r = Rng::new(77);
+        for n in [0usize, 1, 7, 8, 15, 16, 64, 1000] {
+            let a = r.normal_vec(n);
+            let b = r.normal_vec(n);
+            let ref64: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let mag: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            let bound = 4.0 * n.max(1) as f64 * f32::EPSILON as f64 * mag + 1e-30;
+            for l in crate::util::simd::supported_levels() {
+                let d = dot_with_level(l, &a, &b) as f64;
+                assert!((d - ref64).abs() <= bound, "n={n} {l:?}: |{d} - {ref64}| > {bound}");
+            }
+            let s = dot_with_level(crate::util::simd::Level::Scalar, &a, &b);
+            assert_eq!(s.to_bits(), dot_scalar(&a, &b).to_bits());
+        }
     }
 
     #[test]

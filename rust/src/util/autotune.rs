@@ -1,0 +1,380 @@
+//! Microbench autotuner for the serving kernels' tuning constants.
+//!
+//! Three knobs materially shape single-node throughput and each has a
+//! machine-dependent sweet spot:
+//!
+//! - `gather_tile` — the LUT-GEMM output-tile width
+//!   ([`crate::engine::lutgemm`]). Too small wastes the per-tile index
+//!   decode; too large spills the f32 accumulator block out of
+//!   registers.
+//! - `par_min_work` — the spawn-amortization floor gating scoped-thread
+//!   parallelism ([`crate::util::parallel`]). The crossover depends on
+//!   spawn latency and per-core GEMM throughput.
+//! - `prefill_chunk` — how many prompt tokens the decode loop batches
+//!   per forward pass. Larger chunks amortize per-call overhead but
+//!   raise time-to-first-token; we pick the *smallest* chunk within
+//!   tolerance of the best per-token cost (see [`pick_knee`]).
+//!
+//! [`run`] sweeps each knob with [`benchkit::bench_for_ms`] on
+//! synthetic fixtures shaped like the serving hot path, returns an
+//! [`AutotuneReport`], and the winner set is persisted as TOML
+//! ([`Tuning::to_toml`]) by the `bench_autotune` harness. At serve
+//! startup the TOML is re-read ([`Tuning::from_file`]) and applied
+//! ([`Tuning::apply`]) — see `serve.tuning_file` / `serve.autotune` in
+//! the serve config.
+//!
+//! Correctness is never at stake: every knob only reshapes the
+//! iteration/split schedule, and the kernels are pinned bit-identical
+//! across tile widths and thread counts (tests in `engine::lutgemm`,
+//! `util::parallel`, and `tests/simd_equivalence.rs`). A bad tuning
+//! file can only cost speed.
+
+use crate::engine::lutgemm::{LutGemmEngine, GATHER_TILE_DEFAULT, GATHER_TILE_MAX};
+use crate::quant::binarize::BinaryLayer;
+use crate::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
+use crate::tensor::Matrix;
+use crate::util::benchkit::{bench_for_ms, black_box};
+use crate::util::rng::Rng;
+use crate::util::toml::Doc;
+use crate::util::{parallel, simd, toml};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Default prefill chunk (tokens per forward pass during prompt
+/// ingestion). Mirrors `ServeConfig::default().prefill_chunk`; the
+/// serve loader keeps the two in sync.
+pub const PREFILL_CHUNK_DEFAULT: usize = 32;
+
+/// 0 = use the [`GATHER_TILE_DEFAULT`] compile-time default.
+static GATHER_TILE_TUNED: AtomicUsize = AtomicUsize::new(0);
+
+/// The live LUT-GEMM gather tile (tuned override, else
+/// [`GATHER_TILE_DEFAULT`]). Engines read this once at construction,
+/// so changing it never reshapes an engine already built.
+pub fn gather_tile() -> usize {
+    match GATHER_TILE_TUNED.load(Ordering::Relaxed) {
+        0 => GATHER_TILE_DEFAULT,
+        n => n,
+    }
+}
+
+/// Override the gather tile (`0` resets to the default); values are
+/// clamped to `1..=GATHER_TILE_MAX`. Returns the effective value.
+pub fn set_gather_tile(tile: usize) -> usize {
+    let v = if tile == 0 { 0 } else { tile.clamp(1, GATHER_TILE_MAX) };
+    GATHER_TILE_TUNED.store(v, Ordering::Relaxed);
+    gather_tile()
+}
+
+/// One persisted/applied set of tuned constants. `simd` and `threads`
+/// record the environment the sweep ran under (provenance — a tuning
+/// file from a different machine class is still *safe*, just possibly
+/// slow); the remaining fields are the knobs themselves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tuning {
+    pub simd: String,
+    pub threads: usize,
+    pub gather_tile: usize,
+    pub par_min_work: usize,
+    pub prefill_chunk: usize,
+}
+
+impl Tuning {
+    /// The compile-time defaults (what an untuned process runs with).
+    pub fn defaults() -> Tuning {
+        Tuning {
+            simd: String::new(),
+            threads: 0,
+            gather_tile: GATHER_TILE_DEFAULT,
+            par_min_work: parallel::PAR_MIN_WORK,
+            prefill_chunk: PREFILL_CHUNK_DEFAULT,
+        }
+    }
+
+    /// Render as a TOML document (the in-repo parser has no
+    /// serializer, so this is hand-rendered; [`from_doc`] is the
+    /// round-trip partner).
+    ///
+    /// [`from_doc`]: Tuning::from_doc
+    pub fn to_toml(&self) -> String {
+        format!(
+            "# Autotuned kernel constants (cargo bench --bench bench_autotune).\n\
+             # Consumed at serve startup via `serve.tuning_file`; safe to\n\
+             # carry across machines (knobs only affect speed, never results).\n\
+             [tuning]\n\
+             simd = \"{}\"\n\
+             threads = {}\n\
+             gather_tile = {}\n\
+             par_min_work = {}\n\
+             prefill_chunk = {}\n",
+            self.simd, self.threads, self.gather_tile, self.par_min_work, self.prefill_chunk
+        )
+    }
+
+    /// Read a `[tuning]` section out of a parsed document, validating
+    /// ranges. Missing keys fall back to the defaults so partial files
+    /// (e.g. hand-written gather_tile-only overrides) work.
+    pub fn from_doc(doc: &Doc) -> Result<Tuning, String> {
+        let d = Tuning::defaults();
+        let t = Tuning {
+            simd: doc.get_str("tuning.simd", &d.simd).to_string(),
+            threads: read_usize(doc, "tuning.threads", d.threads)?,
+            gather_tile: read_usize(doc, "tuning.gather_tile", d.gather_tile)?,
+            par_min_work: read_usize(doc, "tuning.par_min_work", d.par_min_work)?,
+            prefill_chunk: read_usize(doc, "tuning.prefill_chunk", d.prefill_chunk)?,
+        };
+        if t.gather_tile == 0 || t.gather_tile > GATHER_TILE_MAX {
+            return Err(format!(
+                "tuning.gather_tile {} out of range 1..={GATHER_TILE_MAX}",
+                t.gather_tile
+            ));
+        }
+        if t.par_min_work == 0 {
+            return Err("tuning.par_min_work must be positive".to_string());
+        }
+        if t.prefill_chunk == 0 {
+            return Err("tuning.prefill_chunk must be positive".to_string());
+        }
+        Ok(t)
+    }
+
+    /// Parse and validate a tuning file from disk.
+    pub fn from_file(path: &str) -> Result<Tuning, String> {
+        let doc = toml::parse_file(std::path::Path::new(path))?;
+        Self::from_doc(&doc).map_err(|e| format!("{path}: {e}"))
+    }
+
+    /// Install the kernel-level knobs into the process globals. The
+    /// `prefill_chunk` knob lives in `ServeConfig`, so the caller
+    /// adopts it there (explicit config wins over the tuning file).
+    pub fn apply(&self) {
+        set_gather_tile(self.gather_tile);
+        parallel::set_par_min_work(self.par_min_work);
+    }
+
+    /// One-line human summary for startup logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "gather_tile={} par_min_work={} prefill_chunk={}",
+            self.gather_tile, self.par_min_work, self.prefill_chunk
+        )
+    }
+}
+
+fn read_usize(doc: &Doc, key: &str, default: usize) -> Result<usize, String> {
+    let v = doc.get_int(key, default as i64);
+    if v < 0 {
+        return Err(format!("{key} must be non-negative, got {v}"));
+    }
+    Ok(v as usize)
+}
+
+/// One measured candidate from a sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub knob: &'static str,
+    pub value: usize,
+    pub mean_ns: f64,
+}
+
+/// The chosen [`Tuning`] plus every candidate measurement (for the
+/// bench table / JSON artifact).
+#[derive(Debug, Clone)]
+pub struct AutotuneReport {
+    pub tuning: Tuning,
+    pub points: Vec<SweepPoint>,
+}
+
+/// From `(value, mean_ns)` candidates, pick the *smallest* value whose
+/// cost is within `tol` (fractional, e.g. `0.10`) of the best. Used
+/// for prefill chunking, where the smallest near-optimal chunk also
+/// minimizes time-to-first-token.
+pub fn pick_knee(points: &[(usize, f64)], tol: f64) -> usize {
+    assert!(!points.is_empty(), "pick_knee needs candidates");
+    let best = points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let mut cands: Vec<&(usize, f64)> =
+        points.iter().filter(|p| p.1 <= best * (1.0 + tol)).collect();
+    cands.sort_by_key(|p| p.0);
+    cands[0].0
+}
+
+/// Sweep all three knobs. `quick` shrinks the fixture and budget for
+/// CI / startup use (~a second); the full sweep is for the offline
+/// `bench_autotune` run. Globals touched during the sweep
+/// (`par_min_work`) are restored before returning; the report is
+/// *not* applied — callers decide ([`Tuning::apply`]).
+pub fn run(quick: bool) -> AutotuneReport {
+    run_with(if quick { 25 } else { 120 }, quick)
+}
+
+/// [`run`] with an explicit per-candidate budget (milliseconds);
+/// exposed so tests can sweep in a few milliseconds.
+pub fn run_with(budget_ms: u64, quick: bool) -> AutotuneReport {
+    let mut rng = Rng::new(0xA11C);
+    let level = simd::active();
+    let mut points: Vec<SweepPoint> = Vec::new();
+
+    // --- gather_tile: LUT-GEMM GEMV decode (the m=1 serving shape).
+    let (o, n) = if quick { (256, 256) } else { (896, 512) };
+    let v = 16usize;
+    let c = if quick { 256 } else { 1024 };
+    let w = Matrix::randn(o, n, &mut rng);
+    let bl = BinaryLayer::quantize(&w);
+    let vectors = collect_vectors(&bl, v);
+    let (cb, assign, _) = BinaryCodebook::build(&vectors, v, c, 3);
+    let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+    let x1 = Matrix::randn(1, n, &mut rng);
+    let mut best_tile = (GATHER_TILE_DEFAULT, f64::INFINITY);
+    for tile in [8usize, 16, 32, 48, 64] {
+        let eng = LutGemmEngine::try_new_with(&cl, level, tile).expect("fixture is block-aligned");
+        let st = bench_for_ms("autotune_gather", budget_ms, 3, || {
+            black_box(eng.forward(&x1));
+        });
+        let m = st.mean_ns();
+        points.push(SweepPoint { knob: "gather_tile", value: tile, mean_ns: m });
+        if m < best_tile.1 {
+            best_tile = (tile, m);
+        }
+    }
+
+    // --- par_min_work: matmul_bt mix straddling the spawn crossover.
+    // Work sizes m*k*n from 16K to 1M scalar ops, so every candidate
+    // floor flips at least one shape between serial and parallel.
+    let shapes: &[(usize, usize, usize)] =
+        &[(1, 256, 64), (1, 256, 256), (4, 256, 128), (8, 512, 256)];
+    let mix: Vec<(Matrix, Matrix)> = shapes
+        .iter()
+        .map(|&(m, k, nn)| (Matrix::randn(m, k, &mut rng), Matrix::randn(nn, k, &mut rng)))
+        .collect();
+    let orig_floor = parallel::par_min_work();
+    let mut best_floor = (orig_floor, f64::INFINITY);
+    for floor in [1usize << 13, 1 << 14, 1 << 15, 1 << 16, 1 << 17, 1 << 18] {
+        parallel::set_par_min_work(floor);
+        let st = bench_for_ms("autotune_floor", budget_ms, 3, || {
+            for (a, b) in &mix {
+                black_box(a.matmul_bt(b));
+            }
+        });
+        let m = st.mean_ns();
+        points.push(SweepPoint { knob: "par_min_work", value: floor, mean_ns: m });
+        if m < best_floor.1 {
+            best_floor = (floor, m);
+        }
+    }
+    parallel::set_par_min_work(orig_floor);
+
+    // --- prefill_chunk: chunked prompt ingestion proxy. Cost model is
+    // per-token mean over a fixed prompt; pick_knee then prefers the
+    // smallest chunk within 10% (lower TTFT at equal throughput).
+    let t_tokens = if quick { 64 } else { 128 };
+    let xfull = Matrix::randn(t_tokens, n, &mut rng);
+    let wdense = bl.reconstruct();
+    let mut chunk_points: Vec<(usize, f64)> = Vec::new();
+    for chunk in [8usize, 16, 32, 64, 128] {
+        let st = bench_for_ms("autotune_prefill", budget_ms, 3, || {
+            let mut r0 = 0usize;
+            while r0 < t_tokens {
+                let take = chunk.min(t_tokens - r0);
+                let xc =
+                    Matrix::from_vec(take, n, xfull.data[r0 * n..(r0 + take) * n].to_vec());
+                black_box(xc.matmul_bt(&wdense));
+                r0 += take;
+            }
+        });
+        let per_token = st.mean_ns() / t_tokens as f64;
+        points.push(SweepPoint { knob: "prefill_chunk", value: chunk, mean_ns: per_token });
+        chunk_points.push((chunk, per_token));
+    }
+    let prefill_chunk = pick_knee(&chunk_points, 0.10);
+
+    AutotuneReport {
+        tuning: Tuning {
+            simd: level.name().to_string(),
+            threads: parallel::threads(),
+            gather_tile: best_tile.0,
+            par_min_work: best_floor.0,
+            prefill_chunk,
+        },
+        points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip_preserves_tuning() {
+        let t = Tuning {
+            simd: "avx2".to_string(),
+            threads: 8,
+            gather_tile: 48,
+            par_min_work: 1 << 14,
+            prefill_chunk: 16,
+        };
+        let doc = toml::parse(&t.to_toml()).expect("rendered TOML parses");
+        assert_eq!(Tuning::from_doc(&doc).unwrap(), t);
+    }
+
+    #[test]
+    fn from_doc_defaults_missing_keys() {
+        let doc = toml::parse("[tuning]\ngather_tile = 8\n").unwrap();
+        let t = Tuning::from_doc(&doc).unwrap();
+        assert_eq!(t.gather_tile, 8);
+        assert_eq!(t.par_min_work, parallel::PAR_MIN_WORK);
+        assert_eq!(t.prefill_chunk, PREFILL_CHUNK_DEFAULT);
+    }
+
+    #[test]
+    fn from_doc_rejects_bad_ranges() {
+        for bad in [
+            "[tuning]\ngather_tile = 0\n",
+            "[tuning]\ngather_tile = 65\n",
+            "[tuning]\npar_min_work = 0\n",
+            "[tuning]\nprefill_chunk = 0\n",
+            "[tuning]\ngather_tile = -3\n",
+        ] {
+            let doc = toml::parse(bad).unwrap();
+            assert!(Tuning::from_doc(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn gather_tile_override_clamps_and_resets() {
+        // Transiently visible to concurrent tests, which is fine: the
+        // tile is read once at engine construction and every tile is
+        // bit-identical (pinned in engine::lutgemm tests).
+        assert_eq!(set_gather_tile(16), 16);
+        assert_eq!(gather_tile(), 16);
+        assert_eq!(set_gather_tile(10_000), GATHER_TILE_MAX);
+        assert_eq!(set_gather_tile(0), GATHER_TILE_DEFAULT);
+        assert_eq!(gather_tile(), GATHER_TILE_DEFAULT);
+    }
+
+    #[test]
+    fn pick_knee_prefers_smallest_within_tolerance() {
+        // 16 is within 10% of the best (100 vs 95) -> knee picks 16.
+        let pts = [(8, 130.0), (16, 100.0), (32, 95.0), (64, 94.0 + 7.0)];
+        assert_eq!(pick_knee(&pts, 0.10), 16);
+        // Tight tolerance falls through to the true argmin.
+        assert_eq!(pick_knee(&pts, 0.0), 32);
+    }
+
+    #[test]
+    fn quick_sweep_produces_valid_tuning() {
+        let rep = run_with(2, true);
+        let t = &rep.tuning;
+        assert!(t.gather_tile >= 1 && t.gather_tile <= GATHER_TILE_MAX);
+        assert!(t.par_min_work > 0);
+        assert!(t.prefill_chunk > 0);
+        assert!(!t.simd.is_empty());
+        for knob in ["gather_tile", "par_min_work", "prefill_chunk"] {
+            assert!(rep.points.iter().any(|p| p.knob == knob), "missing sweep for {knob}");
+        }
+        // The sweep must leave the process floor untouched.
+        assert!(parallel::par_min_work() > 0);
+        // And the rendered winner must round-trip through the parser.
+        let doc = toml::parse(&t.to_toml()).unwrap();
+        assert_eq!(&Tuning::from_doc(&doc).unwrap(), t);
+    }
+}

@@ -6,6 +6,7 @@
 //! fully-tested replacement covering exactly what this project needs.
 
 pub mod argparse;
+pub mod autotune;
 pub mod benchkit;
 pub mod f16;
 pub mod faultpoint;
@@ -14,4 +15,5 @@ pub mod log;
 pub mod parallel;
 pub mod proptest;
 pub mod rng;
+pub mod simd;
 pub mod toml;

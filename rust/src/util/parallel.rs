@@ -20,12 +20,37 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// Upper bound on the worker count (sanity clamp for config typos).
 pub const MAX_THREADS: usize = 256;
 
-/// Kernels with fewer scalar ops than this stay single-threaded — a
-/// scoped spawn costs ~10µs, so parallelism below this floor loses.
+/// Default spawn-amortization floor: kernels with fewer scalar ops
+/// than this stay single-threaded — a scoped spawn costs ~10µs, so
+/// parallelism below this floor loses. The *live* floor is tunable
+/// (see [`par_min_work`] / [`set_par_min_work`]; `util::autotune`
+/// sweeps it). Changing the floor only changes which split runs, never
+/// the results — every kernel is bit-identical across thread counts
+/// at a fixed dispatch level.
 pub const PAR_MIN_WORK: usize = 1 << 16;
 
 /// 0 = not yet resolved.
 static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// 0 = use the [`PAR_MIN_WORK`] default.
+static PAR_MIN_WORK_TUNED: AtomicUsize = AtomicUsize::new(0);
+
+/// The live spawn-amortization floor (tuned override, else the
+/// [`PAR_MIN_WORK`] default).
+pub fn par_min_work() -> usize {
+    match PAR_MIN_WORK_TUNED.load(Ordering::Relaxed) {
+        0 => PAR_MIN_WORK,
+        n => n,
+    }
+}
+
+/// Override the spawn-amortization floor (`0` resets to the default);
+/// returns the effective value. Called by the autotuner / tuning-file
+/// loader at serve startup.
+pub fn set_par_min_work(floor: usize) -> usize {
+    PAR_MIN_WORK_TUNED.store(floor, Ordering::Relaxed);
+    par_min_work()
+}
 
 fn hardware_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -70,9 +95,10 @@ pub fn threads() -> usize {
 }
 
 /// Worker count for a kernel invocation doing ~`work` scalar ops:
-/// 1 below the spawn-amortization floor, else the global count.
+/// 1 below the (tunable) spawn-amortization floor, else the global
+/// count.
 pub fn threads_for(work: usize) -> usize {
-    if work < PAR_MIN_WORK {
+    if work < par_min_work() {
         1
     } else {
         threads()
@@ -188,6 +214,18 @@ mod tests {
     fn threads_for_gates_small_work() {
         assert_eq!(threads_for(8), 1);
         assert!(threads_for(PAR_MIN_WORK) >= 1);
+    }
+
+    #[test]
+    fn par_min_work_override_roundtrip() {
+        // The tuned floor shadows the default and 0 restores it.
+        // (Transiently visible to concurrently-running tests, which is
+        // fine: the floor only selects a split, never changes results.)
+        assert_eq!(par_min_work(), PAR_MIN_WORK);
+        assert_eq!(set_par_min_work(1 << 14), 1 << 14);
+        assert_eq!(par_min_work(), 1 << 14);
+        assert_eq!(set_par_min_work(0), PAR_MIN_WORK);
+        assert_eq!(par_min_work(), PAR_MIN_WORK);
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Runtime CPU-feature dispatch for the SIMD kernel lanes.
+//!
+//! Every hot kernel (packed-popcount Hamming, the sign-GEMM
+//! accumulate, the LUT-GEMM gather, `matmul_bt`'s dot product) keeps
+//! its scalar body as the bit-identity oracle and gains vector lanes
+//! selected here at runtime:
+//!
+//! - **x86-64**: AVX2 (+FMA, +POPCNT) via `is_x86_feature_detected!`.
+//!   AVX-512 with VPOPCNTDQ is *detected* and reportable as its own
+//!   level, but its kernel bodies currently compile against the
+//!   stable target-feature whitelist (the AVX-512 attribute set needs
+//!   a newer rustc floor than this crate assumes), so the Avx512
+//!   level selects the widest stably-compiled lane. When the floor
+//!   rises, only the lane bodies change — no call site moves.
+//! - **aarch64**: NEON (`vcnt`-based popcount, `fmla` dot lanes).
+//! - anywhere else: scalar.
+//!
+//! `PALLAS_SIMD=scalar|avx2|avx512|neon` force-overrides detection
+//! (for CI matrices and A/B benching). A forced level the hardware
+//! cannot run falls back down the chain avx512 → avx2 → scalar /
+//! neon → scalar instead of crashing on an illegal instruction.
+//!
+//! The active level is process-global, resolved once on first use;
+//! engines additionally capture it at construction so a prepared
+//! engine's lane never changes mid-serve. Tests that need a specific
+//! lane use the explicit `*_with_level` kernel variants (or the
+//! engines' `*_with_level` constructors) rather than mutating the
+//! global, so parallel test threads cannot race each other's
+//! dispatch; whole-suite forcing goes through the env var (one value
+//! per process — the CI matrix legs).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A dispatchable kernel lane, ordered roughly by width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Level {
+    /// Portable Rust, no feature gates — the bit-identity oracle.
+    Scalar = 0,
+    /// x86-64 AVX2 + FMA + POPCNT.
+    Avx2 = 1,
+    /// x86-64 AVX-512F + VPOPCNTDQ (detection-complete; see module
+    /// docs for the current lane-body story).
+    Avx512 = 2,
+    /// aarch64 NEON (`vcnt`, `fmla`).
+    Neon = 3,
+}
+
+impl Level {
+    /// The `PALLAS_SIMD` spelling of this level (also what `/metrics`
+    /// and the startup log report).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+            Level::Avx512 => "avx512",
+            Level::Neon => "neon",
+        }
+    }
+
+    /// Parse a `PALLAS_SIMD` value (case-insensitive).
+    pub fn parse(s: &str) -> Result<Level, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Level::Scalar),
+            "avx2" => Ok(Level::Avx2),
+            "avx512" => Ok(Level::Avx512),
+            "neon" => Ok(Level::Neon),
+            other => Err(format!(
+                "unknown SIMD level '{other}' (expected scalar|avx2|avx512|neon)"
+            )),
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            1 => Level::Avx2,
+            2 => Level::Avx512,
+            3 => Level::Neon,
+            _ => Level::Scalar,
+        }
+    }
+
+    /// The next-narrower level to try when this one is unsupported.
+    fn fallback(self) -> Option<Level> {
+        match self {
+            Level::Avx512 => Some(Level::Avx2),
+            Level::Avx2 | Level::Neon => Some(Level::Scalar),
+            Level::Scalar => None,
+        }
+    }
+}
+
+/// Whether the running CPU (and OS) can execute `level`'s lanes.
+pub fn detected(level: Level) -> bool {
+    match level {
+        Level::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => {
+            is_x86_feature_detected!("avx2")
+                && is_x86_feature_detected!("fma")
+                && is_x86_feature_detected!("popcnt")
+        }
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx512 => {
+            is_x86_feature_detected!("avx512f")
+                && is_x86_feature_detected!("avx512vpopcntdq")
+                && detected(Level::Avx2)
+        }
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// The widest level this machine supports.
+pub fn detect_best() -> Level {
+    for l in [Level::Avx512, Level::Avx2, Level::Neon] {
+        if detected(l) {
+            return l;
+        }
+    }
+    Level::Scalar
+}
+
+/// Every level the machine supports (always contains `Scalar`) — the
+/// iteration set for the forced-variant equivalence suite.
+pub fn supported_levels() -> Vec<Level> {
+    let mut out = vec![Level::Scalar];
+    for l in [Level::Avx2, Level::Avx512, Level::Neon] {
+        if detected(l) {
+            out.push(l);
+        }
+    }
+    out
+}
+
+/// Clamp a requested level to something the machine can run, walking
+/// the fallback chain (avx512 → avx2 → scalar, neon → scalar).
+pub fn supported_or_fallback(requested: Level) -> Level {
+    let mut cur = requested;
+    loop {
+        if detected(cur) {
+            return cur;
+        }
+        match cur.fallback() {
+            Some(next) => cur = next,
+            None => return Level::Scalar,
+        }
+    }
+}
+
+/// Resolve a `PALLAS_SIMD`-style request: `None`/empty = detect,
+/// unknown names warn and detect, supported-but-absent hardware walks
+/// the fallback chain.
+pub fn resolve(requested: Option<&str>) -> Level {
+    match requested.map(str::trim).filter(|s| !s.is_empty()) {
+        None => detect_best(),
+        Some(s) => match Level::parse(s) {
+            Ok(l) => supported_or_fallback(l),
+            Err(e) => {
+                eprintln!("[simd] PALLAS_SIMD ignored: {e}");
+                detect_best()
+            }
+        },
+    }
+}
+
+const UNSET: u8 = u8::MAX;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+/// The process-global active dispatch level, resolved once from
+/// `PALLAS_SIMD` (else detection) on first use.
+pub fn active() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNSET => {
+            let l = resolve(std::env::var("PALLAS_SIMD").ok().as_deref());
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        v => Level::from_u8(v),
+    }
+}
+
+/// Force the global level (benches A/B-ing lanes in-process; the
+/// serve CLI never calls this). The request is clamped through the
+/// fallback chain; the *effective* level is stored and returned.
+/// Engines built before this call keep their construction-time level.
+pub fn set_level(requested: Level) -> Level {
+    let eff = supported_or_fallback(requested);
+    LEVEL.store(eff as u8, Ordering::Relaxed);
+    eff
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_all_names() {
+        for l in [Level::Scalar, Level::Avx2, Level::Avx512, Level::Neon] {
+            assert_eq!(Level::parse(l.name()).unwrap(), l);
+            assert_eq!(Level::parse(&l.name().to_uppercase()).unwrap(), l);
+            assert_eq!(Level::from_u8(l as u8), l);
+        }
+        assert!(Level::parse("sse9").is_err());
+    }
+
+    #[test]
+    fn fallback_chain_terminates_at_scalar() {
+        for l in [Level::Scalar, Level::Avx2, Level::Avx512, Level::Neon] {
+            let mut cur = l;
+            let mut steps = 0;
+            while let Some(next) = cur.fallback() {
+                cur = next;
+                steps += 1;
+                assert!(steps <= 2, "chain too long from {l:?}");
+            }
+            assert_eq!(cur, Level::Scalar);
+        }
+    }
+
+    #[test]
+    fn resolve_is_always_supported() {
+        // Whatever is asked for, the resolved level must actually run
+        // here — the whole point of the fallback chain.
+        let reqs = [
+            None,
+            Some(""),
+            Some("scalar"),
+            Some("avx2"),
+            Some("avx512"),
+            Some("neon"),
+            Some("bogus"),
+        ];
+        for req in reqs {
+            let l = resolve(req);
+            assert!(detected(l), "resolve({req:?}) -> {l:?} not runnable");
+        }
+        assert_eq!(resolve(Some("scalar")), Level::Scalar);
+    }
+
+    #[test]
+    fn supported_levels_contains_scalar_and_best() {
+        let s = supported_levels();
+        assert!(s.contains(&Level::Scalar));
+        assert!(s.contains(&detect_best()));
+        for l in s {
+            assert!(detected(l));
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_supported() {
+        let a = active();
+        assert!(detected(a));
+        assert_eq!(active(), a, "resolution is sticky");
+    }
+}

@@ -1,0 +1,249 @@
+//! Forced-variant SIMD equivalence suite (DESIGN.md §11): every
+//! dispatchable kernel lane is driven across awkward shapes at every
+//! level the host supports, against the scalar oracle.
+//!
+//! Contract being pinned:
+//! - integer kernels (XOR+POPCNT Hamming) and the LUT-GEMM gather are
+//!   **bit-identical** across levels (and, for the gather, across
+//!   every tile width);
+//! - the FMA dot lane and the sign-GEMM masked accumulate reassociate,
+//!   so they are **ULP-bounded** against an f64 reference, with the
+//!   bound asserted (not just "close");
+//! - `Level::Scalar` is bitwise the historical pre-SIMD code path.
+//!
+//! Everything here uses the explicit `*_with_level` APIs — the
+//! process-global dispatch level is never mutated, so this suite is
+//! race-free under the parallel test harness.
+
+use btc_llm::bitops::hamming::{hamming_words_padded_with_level, hamming_words_with_level};
+use btc_llm::bitops::pack::pack_signs;
+use btc_llm::engine::lutgemm::{GATHER_TILE_DEFAULT, GATHER_TILE_MAX};
+use btc_llm::engine::{BinaryGemmEngine, LutGemmEngine};
+use btc_llm::quant::arb::arb_quantize;
+use btc_llm::quant::binarize::BinaryLayer;
+use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
+use btc_llm::tensor::matrix::{dot_scalar, dot_with_level};
+use btc_llm::tensor::Matrix;
+use btc_llm::util::rng::Rng;
+use btc_llm::util::simd::{self, Level};
+use std::sync::Arc;
+
+/// Shapes chosen to hit every tail path: single partial word
+/// (cols % 64 == 1 and == 63), exact word multiples, multi-word rows.
+const AWKWARD_COLS: &[usize] = &[1, 63, 64, 65, 127, 128, 193, 512];
+
+fn sign_vec(r: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| r.sign()).collect()
+}
+
+#[test]
+fn popcount_lanes_bit_identical_on_awkward_widths() {
+    let mut r = Rng::new(0xD15);
+    for &n in AWKWARD_COLS {
+        let a = sign_vec(&mut r, n);
+        let b = sign_vec(&mut r, n);
+        let pa = pack_signs(&a);
+        let pb = pack_signs(&b);
+        let mask = if n % 64 == 0 { u64::MAX } else { (1u64 << (n % 64)) - 1 };
+        let want = hamming_words_with_level(Level::Scalar, &pa, &pb, mask);
+        let want_pad = hamming_words_padded_with_level(Level::Scalar, &pa, &pb);
+        assert_eq!(want, want_pad, "clean padding: both tail policies agree (n={n})");
+        for l in simd::supported_levels() {
+            assert_eq!(hamming_words_with_level(l, &pa, &pb, mask), want, "n={n} {l:?}");
+            assert_eq!(hamming_words_padded_with_level(l, &pa, &pb), want_pad, "n={n} {l:?}");
+        }
+    }
+}
+
+#[test]
+fn dot_lanes_ulp_bounded_and_scalar_is_oracle() {
+    let mut r = Rng::new(0xD07);
+    for &n in AWKWARD_COLS {
+        let a: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let exact: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let mag: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        // Worst-case relative rounding growth of an n-term f32 sum is
+        // O(n·eps)·Σ|terms|; factor 4 covers the lane reductions.
+        let bound = 4.0 * n.max(1) as f64 * f32::EPSILON as f64 * mag + 1e-30;
+        for l in simd::supported_levels() {
+            let got = dot_with_level(l, &a, &b) as f64;
+            assert!(
+                (got - exact).abs() <= bound,
+                "dot n={n} {l:?}: |{got} - {exact}| > {bound}"
+            );
+        }
+        // The Scalar level IS the historical unroll, bit for bit.
+        let s = dot_with_level(Level::Scalar, &a, &b);
+        assert_eq!(s.to_bits(), dot_scalar(&a, &b).to_bits(), "n={n}");
+    }
+}
+
+/// f64 reference for the sign-GEMM (the reconstructed weight
+/// `w̃ = alpha·(±1) + mu` already carries the scales): per output,
+/// the exact f64 sum and the magnitude sum Σ|x·w̃| for the bound.
+fn sign_gemm_f64(layer: &BinaryLayer, x: &Matrix) -> (Vec<f64>, Vec<f64>) {
+    let w = layer.reconstruct();
+    let mut exact = vec![0f64; x.rows * w.rows];
+    let mut mags = vec![0f64; x.rows * w.rows];
+    for i in 0..x.rows {
+        for rr in 0..w.rows {
+            let (mut s, mut m) = (0f64, 0f64);
+            for c in 0..w.cols {
+                let t = x.at(i, c) as f64 * w.at(rr, c) as f64;
+                s += t;
+                m += t.abs();
+            }
+            exact[i * w.rows + rr] = s;
+            mags[i * w.rows + rr] = m;
+        }
+    }
+    (exact, mags)
+}
+
+#[test]
+fn sign_gemm_lanes_ulp_bounded_vs_f64_reference() {
+    let mut rng = Rng::new(0x51611);
+    // cols % 64 == 1 and == 63 exercise the masked-accumulate tail.
+    for &(rows, cols) in &[(24usize, 193usize), (16, 127), (8, 64)] {
+        let w = Matrix::randn(rows, cols, &mut rng);
+        let q = BinaryLayer::quantize(&w);
+        let x = Matrix::randn(3, cols, &mut rng);
+        let (exact, mags) = sign_gemm_f64(&q, &x);
+        for l in simd::supported_levels() {
+            let eng = BinaryGemmEngine::new_with_level(&q, l);
+            let y = eng.forward(&x);
+            for (i, (&got, (&want, &mag))) in
+                y.data.iter().zip(exact.iter().zip(&mags)).enumerate()
+            {
+                // The engine computes alpha·(2·pos − Σx) + mu·Σx: three
+                // O(cols)-term f32 sums, each with worst-case error
+                // O(cols·eps)·Σ|terms|; factor 8 covers the
+                // rearrangement slack across the lanes.
+                let bound = 8.0 * cols as f64 * f32::EPSILON as f64 * mag + 1e-20;
+                assert!(
+                    (got as f64 - want).abs() <= bound,
+                    "{rows}x{cols} {l:?} out[{i}]: {got} vs f64 {want} (bound {bound})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grouped_sign_gemm_with_empty_group_every_lane() {
+    // Declared 4 groups, only {0, 2} used — group 1 and 3 are empty
+    // masks; every lane must agree with the dequant reference and the
+    // scalar-lane engine must match historical outputs bitwise.
+    let mut rng = Rng::new(0x6E0);
+    let cols = 96usize;
+    let w = Matrix::randn(12, cols, &mut rng);
+    let groups: Vec<u16> = (0..cols).map(|c| if c < 48 { 0 } else { 2 }).collect();
+    let q = arb_quantize(&w, &groups, 4, 3);
+    let x = Matrix::randn(2, cols, &mut rng);
+    let wd = q.reconstruct();
+    let oracle = BinaryGemmEngine::new_with_level(&q, Level::Scalar).forward(&x);
+    for l in simd::supported_levels() {
+        let y = BinaryGemmEngine::new_with_level(&q, l).forward(&x);
+        for i in 0..x.rows {
+            for rr in 0..w.rows {
+                let want: f64 = (0..cols)
+                    .map(|c| x.at(i, c) as f64 * wd.at(rr, c) as f64)
+                    .sum();
+                let got = y.at(i, rr) as f64;
+                assert!(
+                    (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "{l:?} y[{i},{rr}] = {got}, dequant {want}"
+                );
+            }
+        }
+        if l == Level::Scalar {
+            assert_eq!(y.data, oracle.data);
+        }
+    }
+}
+
+fn codebook_layer(rng: &mut Rng, rows: usize, cols: usize, v: usize, c: usize) -> CodebookLayer {
+    let w = Matrix::randn(rows, cols, rng);
+    let bl = BinaryLayer::quantize(&w);
+    let vectors = collect_vectors(&bl, v);
+    let (cb, assign, _) = BinaryCodebook::build(&vectors, v, c, 3);
+    CodebookLayer::from_assignments(&bl, Arc::new(cb), assign)
+}
+
+#[test]
+fn lut_gather_bit_identical_across_levels_and_tiles() {
+    let mut rng = Rng::new(0x107);
+    // (out < tile), ragged cols (21 = 2·8 + 5), and a tall layer that
+    // spans several tiles.
+    let shapes = [(5usize, 21usize, 8usize, 16usize), (70, 64, 16, 40), (130, 48, 8, 64)];
+    for &(rows, cols, v, c) in &shapes {
+        let cl = codebook_layer(&mut rng, rows, cols, v, c);
+        let x = Matrix::randn(2, cols, &mut rng);
+        let oracle = LutGemmEngine::try_new_with(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+            .expect("block aligned")
+            .forward(&x);
+        for l in simd::supported_levels() {
+            for tile in [1usize, 3, GATHER_TILE_DEFAULT, GATHER_TILE_MAX] {
+                let y = LutGemmEngine::try_new_with(&cl, l, tile).unwrap().forward(&x);
+                assert_eq!(y.data, oracle.data, "{rows}x{cols} v={v} {l:?} tile={tile}");
+            }
+        }
+    }
+}
+
+#[test]
+fn grouped_lut_gather_bit_identical_with_empty_group() {
+    // Block-aligned groups {0, 2} of a declared 4 (two empty groups),
+    // driven through every lane × tile width.
+    let mut rng = Rng::new(0x1D8);
+    let cols = 32usize;
+    let w = Matrix::randn(40, cols, &mut rng);
+    let groups: Vec<u16> = (0..cols).map(|c| if c < 16 { 0 } else { 2 }).collect();
+    let bl = arb_quantize(&w, &groups, 4, 3);
+    let vectors = collect_vectors(&bl, 8);
+    let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 12, 3);
+    let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+    let x = Matrix::randn(1, cols, &mut rng);
+    let oracle = LutGemmEngine::try_new_with(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+        .expect("block aligned")
+        .forward(&x);
+    for l in simd::supported_levels() {
+        for tile in [1usize, 5, GATHER_TILE_MAX] {
+            let y = LutGemmEngine::try_new_with(&cl, l, tile).unwrap().forward(&x);
+            assert_eq!(y.data, oracle.data, "{l:?} tile={tile}");
+        }
+    }
+}
+
+#[test]
+fn matmul_bt_agrees_with_scalar_dot_within_bound() {
+    // The full GEMM through whatever lane is globally active must stay
+    // ULP-bounded against the scalar dot applied row by row.
+    let mut rng = Rng::new(0xABC);
+    let a = Matrix::randn(4, 193, &mut rng);
+    let b = Matrix::randn(9, 193, &mut rng);
+    let y = a.matmul_bt(&b);
+    for i in 0..a.rows {
+        for j in 0..b.rows {
+            let exact: f64 = a
+                .row(i)
+                .iter()
+                .zip(b.row(j))
+                .map(|(&x, &w)| x as f64 * w as f64)
+                .sum();
+            let mag: f64 = a
+                .row(i)
+                .iter()
+                .zip(b.row(j))
+                .map(|(&x, &w)| (x as f64 * w as f64).abs())
+                .sum();
+            let bound = 4.0 * 193.0 * f32::EPSILON as f64 * mag + 1e-30;
+            assert!(
+                (y.at(i, j) as f64 - exact).abs() <= bound,
+                "y[{i},{j}] = {} vs {exact}",
+                y.at(i, j)
+            );
+        }
+    }
+}
