@@ -8,7 +8,7 @@
 //! path at sub-1-bit, sign-GEMM competitive with FP at small M.
 
 use btc_llm::benchsuite::quick_mode;
-use btc_llm::engine::{dense, BinaryGemmEngine, LutGemmEngine};
+use btc_llm::engine::{dense, BinaryGemmEngine, EngineCtx, LutGemmEngine, QuantizedActs};
 use btc_llm::quant::binarize::BinaryLayer;
 use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
 use btc_llm::tensor::Matrix;
@@ -30,14 +30,15 @@ fn main() -> anyhow::Result<()> {
     let vectors = collect_vectors(&bl, v);
     let (cb, assign, _) = BinaryCodebook::build(&vectors, v, c, 3);
     let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
-    let xnor = BinaryGemmEngine::new(&bl);
-    let lut = LutGemmEngine::try_new(&cl).expect("block aligned");
+    let ctx = EngineCtx::current();
+    let xnor = BinaryGemmEngine::with_ctx(&bl, &ctx);
+    let lut = LutGemmEngine::try_with_ctx(&cl, &ctx).expect("block aligned");
     // Scalar-lane twins of the same engines: the in-process baseline
     // for the SIMD speedup columns and the CI decode-throughput gate.
     let level = simd::active();
-    let tile = btc_llm::util::autotune::gather_tile();
-    let xnor_s = BinaryGemmEngine::new_with_level(&bl, Level::Scalar);
-    let lut_s = LutGemmEngine::try_new_with(&cl, Level::Scalar, tile).expect("block aligned");
+    let sctx = ctx.clone().with_level(Level::Scalar);
+    let xnor_s = BinaryGemmEngine::with_ctx(&bl, &sctx);
+    let lut_s = LutGemmEngine::try_with_ctx(&cl, &sctx).expect("block aligned");
     let wdense = bl.reconstruct();
 
     let budget = if quick { 150 } else { 500 };
@@ -49,7 +50,9 @@ fn main() -> anyhow::Result<()> {
         "fp32 GEMM",
         "dequant+GEMM",
         "W1A16 sign",
+        "W1A8 sign",
         "LUT-GEMM",
+        "W1A8 LUT",
         "LUT vs dequant",
         "best vs scalar",
     ]);
@@ -86,6 +89,17 @@ fn main() -> anyhow::Result<()> {
         let lg_s = bench_for_ms("lut_scalar", budget, 5, || {
             black_box(lut_s.forward(&x));
         });
+        // W1A8 integer lanes, end to end: the per-row activation
+        // quantization is inside the timed region because that is what
+        // `Linear::forward` pays per call on the int path.
+        let sg_i8 = bench_for_ms("sign_i8", budget, 5, || {
+            let qa = QuantizedActs::quantize(&x, 8);
+            black_box(xnor.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols));
+        });
+        let lg_i8 = bench_for_ms("lut_i8", budget, 5, || {
+            let qa = QuantizedActs::quantize(&x, 8);
+            black_box(lut.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols));
+        });
         let speedup = dq.mean_ns() / lg.mean_ns();
         let best_simd = (fp_s.mean_ns() / fp.mean_ns())
             .max(sg_s.mean_ns() / sg.mean_ns())
@@ -95,18 +109,23 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}ms", fp.mean_ms()),
             format!("{:.2}ms", dq.mean_ms()),
             format!("{:.2}ms", sg.mean_ms()),
+            format!("{:.2}ms", sg_i8.mean_ms()),
             format!("{:.2}ms", lg.mean_ms()),
+            format!("{:.2}ms", lg_i8.mean_ms()),
             format!("{speedup:.2}x"),
             format!("{best_simd:.2}x"),
         ]);
-        // Scalar-lane numbers ride as extra FIELDS on the same
-        // (m, threads)-keyed row — perf_compare keys rows on those
-        // two, so adding fields (not rows) keeps old baselines valid.
+        // Scalar-lane and W1A8 numbers ride as extra FIELDS on the
+        // same (m, threads)-keyed row — perf_compare keys rows on
+        // those two, so adding fields (not rows) keeps old baselines
+        // valid.
         let kv = [("m", m.to_string()),
                   ("fp_ms", format!("{:.4}", fp.mean_ms())),
                   ("dequant_ms", format!("{:.4}", dq.mean_ms())),
                   ("sign_ms", format!("{:.4}", sg.mean_ms())),
                   ("lut_ms", format!("{:.4}", lg.mean_ms())),
+                  ("sign_i8_ms", format!("{:.4}", sg_i8.mean_ms())),
+                  ("lut_i8_ms", format!("{:.4}", lg_i8.mean_ms())),
                   ("fp_scalar_ms", format!("{:.4}", fp_s.mean_ms())),
                   ("sign_scalar_ms", format!("{:.4}", sg_s.mean_ms())),
                   ("lut_scalar_ms", format!("{:.4}", lg_s.mean_ms())),
@@ -115,18 +134,28 @@ fn main() -> anyhow::Result<()> {
         benchline("fig5", &kv);
         report.row(&kv);
         if m == 1 {
+            let int8_speedup = sg.mean_ns() / sg_i8.mean_ns();
             println!(
-                "decode (M=1): best vector-lane speedup vs scalar {best_simd:.2}x (simd={})",
+                "decode (M=1): best vector-lane speedup vs scalar {best_simd:.2}x, \
+                 W1A8 sign vs f32 sign {int8_speedup:.2}x (simd={})",
                 level.name()
             );
-            // CI perf-smoke gate (PALLAS_PERF_ASSERT=1, never tier-1):
+            // CI perf-smoke gates (PALLAS_PERF_ASSERT=1, never tier-1):
             // on a vector-capable runner the decode path must beat the
-            // scalar lanes by the ISSUE's 1.3x floor.
+            // scalar lanes by the ISSUE's 1.3x floor, and the W1A8
+            // sign lane (quantize + i8 dot) must not lose to the f32
+            // sign lane — conservative 1.05x floor, since the win
+            // grows with width and this is the scaled-down shape.
             let gate = std::env::var("PALLAS_PERF_ASSERT").is_ok_and(|v| v == "1");
             if gate && level != Level::Scalar {
                 anyhow::ensure!(
                     best_simd >= 1.3,
                     "decode speedup {best_simd:.2}x < 1.3x floor (simd={})",
+                    level.name()
+                );
+                anyhow::ensure!(
+                    int8_speedup >= 1.05,
+                    "W1A8 decode speedup {int8_speedup:.2}x < 1.05x floor (simd={})",
                     level.name()
                 );
             }

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use btc_llm::bitops::BitMatrix;
-use btc_llm::engine::{BinaryGemmEngine, LutGemmEngine};
+use btc_llm::engine::{BinaryGemmEngine, EngineCtx, LutGemmEngine};
 use btc_llm::io::load_model;
 use btc_llm::model::Transformer;
 use btc_llm::quant::binarize::BinaryLayer;
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         col_group: vec![0; n],
         n_groups: 1,
     };
-    let rust_out = BinaryGemmEngine::new(&layer).forward(&x);
+    let rust_out = BinaryGemmEngine::with_ctx(&layer, &EngineCtx::current()).forward(&x);
     assert_close(&rust_out.data, &jax_out, 1e-3, 1e-3)
         .map_err(|e| anyhow::anyhow!("binary_gemm parity: {e}"))?;
     println!("1. binary_gemm: Pallas/PJRT == engine::xnor  ({} outputs) ✓", jax_out.len());
@@ -87,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     let idx_u32: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
     let ungrouped = vec![0u16; n];
     let cl = CodebookLayer::new(o, n, codebook, &idx_u32, &alpha16, &mu16, &ungrouped, 1);
-    let rust_out = LutGemmEngine::try_new(&cl).unwrap().forward(&x);
+    let rust_out = LutGemmEngine::try_with_ctx(&cl, &EngineCtx::current()).unwrap().forward(&x);
     assert_close(&rust_out.data, &jax_out, 1e-3, 1e-3)
         .map_err(|e| anyhow::anyhow!("lut_gemm parity: {e}"))?;
     println!("2. lut_gemm:    Pallas/PJRT == engine::lutgemm ({} outputs) ✓", jax_out.len());

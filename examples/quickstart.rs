@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use btc_llm::engine::LutGemmEngine;
+use btc_llm::engine::{EngineCtx, LutGemmEngine};
 use btc_llm::quant::arb::arb_quantize;
 use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
 use btc_llm::quant::transform::{fit, FitConfig};
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     println!("codebook rel err {:.4}", rel_error(&wt.data, &cl.reconstruct().data));
 
     // 5. LUT-GEMM engine == dense reconstruction.
-    let eng = LutGemmEngine::try_new(&cl).expect("block-aligned");
+    let eng = LutGemmEngine::try_with_ctx(&cl, &EngineCtx::current()).expect("block-aligned");
     let y_fast = eng.forward(&xt);
     let y_ref = xt.matmul_bt(&cl.reconstruct());
     let gemm_err = rel_error(&y_ref.data, &y_fast.data);

@@ -45,6 +45,10 @@ pub struct ServeConfig {
     /// Bits for cold KV-cache blocks (2..=8; >= 16 = off, pure f32 —
     /// the default, so existing configs are byte-for-byte unchanged).
     pub kv_bits: u32,
+    /// Activation bits at the engine boundary (2..=8 arms the per-row
+    /// W1A8 integer lanes; >= 16 = off, f32 activations — the default,
+    /// so existing configs are unchanged).
+    pub act_bits: u32,
     /// Trailing positions kept f32 when `kv_bits` is active.
     pub kv_local_window: usize,
     /// KV-pool block size (positions per block).
@@ -106,6 +110,7 @@ impl Default for ServeConfig {
             seed: 42,
             threads: 0,
             kv_bits: 16,
+            act_bits: 16,
             kv_local_window: 16,
             kv_block: 32,
             kv_pool_blocks: 0,
@@ -283,6 +288,9 @@ impl ServeConfig {
             kv_bits: crate::quant::kvquant::KvQuantConfig::sanitize_bits(
                 doc.get_int("serve.kv_bits", d.kv_bits as i64).max(0) as u32,
             ),
+            act_bits: crate::quant::kvquant::KvQuantConfig::sanitize_bits(
+                doc.get_int("serve.act_bits", d.act_bits as i64).max(0) as u32,
+            ),
             kv_local_window: doc
                 .get_int("serve.kv_local_window", d.kv_local_window as i64)
                 .max(0) as usize,
@@ -430,6 +438,17 @@ mod tests {
         assert_eq!(from_str("[serve]\nkv_bits = 12\n").unwrap().kv_bits, 8);
         assert_eq!(from_str("[serve]\nkv_bits = 32\n").unwrap().kv_bits, 16);
         assert_eq!(from_str("[serve]\nkv_bits = 0\n").unwrap().kv_bits, 16);
+    }
+
+    #[test]
+    fn act_bits_defaults_off_and_sanitizes() {
+        // Default off: existing configs keep f32 activations.
+        assert_eq!(from_str("").unwrap().act_bits, 16);
+        assert_eq!(from_str("[serve]\nact_bits = 8\n").unwrap().act_bits, 8);
+        // Same clamp convention as kv_bits.
+        assert_eq!(from_str("[serve]\nact_bits = 1\n").unwrap().act_bits, 2);
+        assert_eq!(from_str("[serve]\nact_bits = 12\n").unwrap().act_bits, 8);
+        assert_eq!(from_str("[serve]\nact_bits = 0\n").unwrap().act_bits, 16);
     }
 
     #[test]

@@ -54,6 +54,9 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub tokens_generated: AtomicU64,
+    /// Activation bits at the engine boundary (16 = f32 activations,
+    /// 2..=8 = per-row integer lanes armed). Set once at server start.
+    pub act_bits: AtomicU64,
     /// Decode rounds run (continuous batching: one "batch" per round).
     pub batches: AtomicU64,
     pub batch_size_sum: AtomicU64,
@@ -138,7 +141,10 @@ fn sorted_clone(values: &Mutex<Reservoir>) -> Vec<u64> {
 
 impl Metrics {
     pub fn new() -> Metrics {
-        Metrics::default()
+        let m = Metrics::default();
+        // 16 = activations stay f32 (the act_bits "off" convention).
+        m.act_bits.store(16, Ordering::Relaxed);
+        m
     }
 
     pub fn record_request(&self) {
@@ -404,7 +410,7 @@ impl Metrics {
              kv_blocks={}/{} kv_blocks_peak={} kv_bytes={} kv_bytes_peak={} kv_quant_blocks={} \
              kv_shared_pos={} kv_defer={}+{} kv_preempt={} panics_caught={} quarantines={} \
              worker_restarts={} deadline_cancels={} disconnect_cancels={} \
-             simd={} gather_tile={} par_min_work={}",
+             act_bits={} simd={} gather_tile={} par_min_work={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -435,6 +441,7 @@ impl Metrics {
             self.worker_restarts.load(Ordering::Relaxed),
             self.deadline_cancels.load(Ordering::Relaxed),
             self.disconnect_cancels.load(Ordering::Relaxed),
+            self.act_bits.load(Ordering::Relaxed),
             crate::util::simd::active().name(),
             crate::util::autotune::gather_tile(),
             crate::util::parallel::par_min_work(),
@@ -557,11 +564,15 @@ mod tests {
         // live tuning constants. Values are process-global (other
         // tests may transiently retune them), so only presence and
         // well-formedness are pinned here.
-        let s = Metrics::new().summary();
+        let m = Metrics::new();
+        let s = m.summary();
         let level = crate::util::simd::active().name();
+        assert!(s.contains("act_bits=16"), "{s}");
         assert!(s.contains(&format!("simd={level}")), "{s}");
         assert!(s.contains("gather_tile="), "{s}");
         assert!(s.contains("par_min_work="), "{s}");
+        m.act_bits.store(8, Ordering::Relaxed);
+        assert!(m.summary().contains("act_bits=8"));
     }
 
     #[test]

@@ -50,6 +50,7 @@ use super::qos::{QosConfig, QosState};
 use super::scheduler::Scheduler;
 use crate::model::kvcache::PoolConfig;
 use crate::model::Transformer;
+use crate::quant::actquant::ActQuant;
 use crate::quant::kvquant::KvQuantConfig;
 use crate::util::parallel;
 use crate::util::rng::Rng;
@@ -269,6 +270,12 @@ pub struct ServerOptions {
     pub kv_bits: u32,
     /// Trailing positions kept f32 when `kv_bits` is active.
     pub kv_local_window: usize,
+    /// Activation bits at the engine boundary (2..=8 arms the per-row
+    /// W1A8 integer lanes on linears whose engines support them;
+    /// >= 16 keeps activations f32 — the default, bit-identical to the
+    /// pre-int-path server). Sanitized at start with the kv_bits clamp
+    /// convention.
+    pub act_bits: u32,
     /// Tenant table + admission/eviction policies. The default is a
     /// single anonymous tenant with FIFO admission and newest-slot
     /// eviction — the pre-QoS behavior, bit for bit.
@@ -298,6 +305,7 @@ impl Default for ServerOptions {
             kv_pool_blocks: 0,
             kv_bits: 16,
             kv_local_window: 16,
+            act_bits: 16,
             qos: QosConfig::default(),
             deadline_ms: 0,
             tenant_deadline_ms: Vec::new(),
@@ -319,6 +327,7 @@ impl From<&ServeConfig> for ServerOptions {
             kv_pool_blocks: c.kv_pool_blocks,
             kv_bits: c.kv_bits,
             kv_local_window: c.kv_local_window,
+            act_bits: c.act_bits,
             qos: c.qos_config(),
             deadline_ms: c.deadline_ms,
             tenant_deadline_ms: c.tenant_deadline_ms.clone(),
@@ -494,8 +503,24 @@ impl Server {
         } else {
             parallel::set_threads(opts.threads)
         };
+        // Validate the activation width at start (same clamp convention
+        // as kv_bits) and arm the per-row integer lanes: linears that
+        // carry no calibrated quantizer get a scale-free ActQuant so
+        // int-capable engines switch to W1A8; a pipeline-calibrated
+        // quantizer (if present) keeps its own width.
+        let act_bits = KvQuantConfig::sanitize_bits(opts.act_bits);
+        if act_bits < 16 {
+            for b in model.blocks.iter_mut() {
+                for (_, lin) in b.linears_mut() {
+                    if lin.act_quant.is_none() {
+                        lin.act_quant = Some(ActQuant { bits: act_bits, scale: Vec::new() });
+                    }
+                }
+            }
+        }
         model.ensure_engines();
         let metrics = Arc::new(Metrics::new());
+        metrics.act_bits.store(act_bits as u64, Ordering::Relaxed);
         let (tx, rx): (Sender<GenRequest>, Receiver<GenRequest>) = channel();
         let m = metrics.clone();
         let ServerOptions {
@@ -901,6 +926,33 @@ mod tests {
             "cold blocks were quantized in flight"
         );
         assert!(server.metrics.kv_resident_peak_bytes.load(Relaxed) > 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn serves_with_act_bits_armed_and_reported() {
+        use std::sync::atomic::Ordering::Relaxed;
+        // act_bits=8 on a dense model: the knob plumbs through
+        // (sanitized, reported in /metrics) and serving still
+        // completes; dense engines simply stay on the f32 path.
+        let server = Server::start_with_opts(
+            tiny_model(6, 4),
+            ServerOptions { act_bits: 8, ..ServerOptions::default() },
+        );
+        assert_eq!(server.metrics.act_bits.load(Relaxed), 8);
+        assert!(server.metrics.summary().contains("act_bits=8"));
+        let rx = server
+            .submit_with(vec![1, 2, 3], 4, 0.0, StopSet::none(), None)
+            .expect("submit");
+        let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!(r.tokens.len() - r.prompt_len, 4);
+        server.shutdown();
+        // Out-of-range widths sanitize at start, not in the worker.
+        let server = Server::start_with_opts(
+            tiny_model(6, 4),
+            ServerOptions { act_bits: 12, ..ServerOptions::default() },
+        );
+        assert_eq!(server.metrics.act_bits.load(Relaxed), 8);
         server.shutdown();
     }
 

@@ -11,14 +11,24 @@
 //!
 //! CBLUT is built once per activation row and reused by every output
 //! row — the paper's "amortized over a large tile of output rows".
-//! Column groups must be block-aligned (enforced by `try_new`): the
-//! pipeline rounds split-point boundaries to `v`-blocks for deployment.
+//! Column groups must be block-aligned (enforced by `try_with_ctx`):
+//! the pipeline rounds split-point boundaries to `v`-blocks for
+//! deployment.
+//!
+//! Two activation lanes share this structure: the f32 lane above, and
+//! a **W1A8 integer lane** ([`LutGemmEngine::forward_i8`]) whose
+//! Stage-I/II tables and gather accumulators are i32 over per-row
+//! int8 codes — every add is exact, so the integer lane is
+//! bit-identical across dispatch levels, tile widths and thread
+//! counts; the row scale and the f16-decoded weight scales multiply
+//! once per output value in the f32 epilogue (DESIGN.md §12).
 
+use super::EngineCtx;
 use crate::bitops::PackedPlane;
 use crate::quant::codebook::CodebookLayer;
 use crate::tensor::Matrix;
 use crate::util::parallel;
-use crate::util::simd::{self, Level};
+use crate::util::simd::Level;
 
 /// Largest divisor of `v` that is <= 8 (the Stage-I segment width μ).
 pub fn pick_mu(v: usize) -> usize {
@@ -33,10 +43,10 @@ pub fn pick_mu(v: usize) -> usize {
 /// Default output-row tile width of the gather stage: a tile of rows
 /// walks the blocks together so each block's `cblut` row stays hot in
 /// cache across the whole tile. The per-engine width is tunable
-/// (`util::autotune` sweeps it; `try_new_with` pins it for tests) —
-/// and because each output row's block-accumulation order is fixed at
-/// j = 0..nb regardless of tiling, *every* tile width produces
-/// bit-identical results.
+/// (`util::autotune` sweeps it; [`EngineCtx::with_gather_tile`] pins
+/// it for tests) — and because each output row's block-accumulation
+/// order is fixed at j = 0..nb regardless of tiling, *every* tile
+/// width produces bit-identical results.
 pub const GATHER_TILE_DEFAULT: usize = 32;
 
 /// Upper bound for the tunable gather tile; the gather's stack
@@ -65,6 +75,15 @@ fn gather_accum_grouped_generic(
 ) {
     for (rr, (a, &k)) in acc.iter_mut().zip(idx).enumerate() {
         *a += alpha[(r + rr) * n_groups + g] * cb[k as usize];
+    }
+}
+
+/// Integer gather accumulate (W1A8 lane): exact i32 adds, so every
+/// recompile of this body is bit-identical.
+#[inline(always)]
+fn gather_accum_i32_generic(acc: &mut [i32], cb: &[i32], idx: &[u32]) {
+    for (a, &k) in acc.iter_mut().zip(idx) {
+        *a += cb[k as usize];
     }
 }
 
@@ -101,6 +120,14 @@ mod lanes {
     ) {
         super::gather_accum_grouped_generic(acc, cb, idx, alpha, r, n_groups, g)
     }
+
+    /// # Safety
+    /// Caller must ensure AVX2 (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accum_i32(acc: &mut [i32], cb: &[i32], idx: &[u32]) {
+        super::gather_accum_i32_generic(acc, cb, idx)
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -127,6 +154,14 @@ mod lanes {
         g: usize,
     ) {
         super::gather_accum_grouped_generic(acc, cb, idx, alpha, r, n_groups, g)
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON (guaranteed by dispatching on
+    /// [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accum_i32(acc: &mut [i32], cb: &[i32], idx: &[u32]) {
+        super::gather_accum_i32_generic(acc, cb, idx)
     }
 }
 
@@ -158,7 +193,7 @@ pub struct LutGemmEngine {
     block_group: Vec<u16>,
     n_groups: usize,
     /// Gather tile width, clamped to `1..=GATHER_TILE_MAX`. Seeded
-    /// from `util::autotune` at construction; bit-identical across
+    /// from the [`EngineCtx`] at construction; bit-identical across
     /// widths (fixed per-row j-order).
     gather_tile: usize,
     /// Dispatch lane captured at construction (never changes mid-serve).
@@ -174,21 +209,22 @@ struct Scratch {
     cblut: Vec<f32>,
 }
 
-impl LutGemmEngine {
-    /// Build from a codebook layer. Returns `None` when column groups
-    /// are not block-aligned (caller falls back to the dequant path).
-    pub fn try_new(layer: &CodebookLayer) -> Option<LutGemmEngine> {
-        Self::try_new_with(layer, simd::active(), crate::util::autotune::gather_tile())
-    }
+/// Integer twin of [`Scratch`] for the W1A8 lane: int8 padded codes,
+/// i32 tables. Bounds: a Stage-II entry is a ±1 contraction of ≤ v
+/// int8 codes (|entry| ≤ v·127), a gather accumulator sums ≤ cols·127
+/// — both far inside i32.
+struct ScratchI8 {
+    qpad: Vec<i8>,
+    lut: Vec<i32>,
+    cblut: Vec<i32>,
+}
 
-    /// Build with an explicit dispatch level and gather tile width
-    /// (equivalence tests and benches; production goes through
-    /// [`Self::try_new`]). The tile is clamped to `1..=GATHER_TILE_MAX`.
-    pub fn try_new_with(
-        layer: &CodebookLayer,
-        level: Level,
-        gather_tile: usize,
-    ) -> Option<LutGemmEngine> {
+impl LutGemmEngine {
+    /// Build from a codebook layer with an explicit [`EngineCtx`] —
+    /// the canonical constructor. Returns `None` when column groups
+    /// are not block-aligned (caller falls back to the dequant path).
+    /// The ctx's gather tile is clamped to `1..=GATHER_TILE_MAX`.
+    pub fn try_with_ctx(layer: &CodebookLayer, ctx: &EngineCtx) -> Option<LutGemmEngine> {
         let v = layer.v;
         let nb = layer.blocks_per_row();
         // Verify block-aligned groups and collect per-block ids.
@@ -233,9 +269,28 @@ impl LutGemmEngine {
             mu: layer.mu_f32(),
             block_group,
             n_groups: layer.n_groups,
-            gather_tile: gather_tile.clamp(1, GATHER_TILE_MAX),
-            level,
+            gather_tile: ctx.gather_tile.clamp(1, GATHER_TILE_MAX),
+            level: ctx.simd_level,
         })
+    }
+
+    #[deprecated(note = "use `LutGemmEngine::try_with_ctx(layer, &EngineCtx::current())`")]
+    pub fn try_new(layer: &CodebookLayer) -> Option<LutGemmEngine> {
+        Self::try_with_ctx(layer, &EngineCtx::current())
+    }
+
+    #[deprecated(
+        note = "use `LutGemmEngine::try_with_ctx` with an `EngineCtx` carrying the level and tile"
+    )]
+    pub fn try_new_with(
+        layer: &CodebookLayer,
+        level: Level,
+        gather_tile: usize,
+    ) -> Option<LutGemmEngine> {
+        Self::try_with_ctx(
+            layer,
+            &EngineCtx::current().with_level(level).with_gather_tile(gather_tile),
+        )
     }
 
     /// The dispatch lane this engine was built with.
@@ -248,6 +303,14 @@ impl LutGemmEngine {
             xpad: vec![0f32; self.nb * self.v],
             lut: vec![0f32; self.nb * self.segs * (1usize << self.mu_bits)],
             cblut: vec![0f32; self.nb * self.c],
+        }
+    }
+
+    fn scratch_i8(&self) -> ScratchI8 {
+        ScratchI8 {
+            qpad: vec![0i8; self.nb * self.v],
+            lut: vec![0i32; self.nb * self.segs * (1usize << self.mu_bits)],
+            cblut: vec![0i32; self.nb * self.c],
         }
     }
 
@@ -282,6 +345,45 @@ impl LutGemmEngine {
                 let cblut = &sc.cblut;
                 parallel::par_row_ranges_with(nt, y.row_mut(i), 1, |r0, chunk| {
                     self.gather(cblut, xsum, r0, chunk);
+                });
+            }
+        }
+        y
+    }
+
+    /// W1A8 forward from per-row int8 activations: i32 Stage-I/II
+    /// tables and gather accumulators, the row scale applied once per
+    /// output value in the epilogue. `q` is row-major `(rows, cols)`
+    /// with one scale per row. Parallel splits mirror
+    /// [`Self::forward`]; every integer add is exact, so the result is
+    /// bit-identical across dispatch levels, tile widths and thread
+    /// counts.
+    pub fn forward_i8(&self, q: &[i8], scales: &[f32], rows: usize, cols: usize) -> Matrix {
+        assert_eq!(cols, self.cols);
+        assert_eq!(q.len(), rows * cols);
+        assert_eq!(scales.len(), rows);
+        let out_n = self.out;
+        let mut y = Matrix::zeros(rows, out_n);
+        let row_work =
+            self.nb * (self.segs << self.mu_bits) + self.nb * self.c + out_n * self.nb;
+        let nt = parallel::threads_for(rows * row_work);
+        if rows > 1 && nt > 1 {
+            parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+                let mut sc = self.scratch_i8();
+                for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+                    let i = i0 + ii;
+                    let qsum = self.build_tables_i8(&q[i * cols..(i + 1) * cols], &mut sc);
+                    self.gather_i8(&sc.cblut, qsum, scales[i], 0, yrow);
+                }
+            });
+        } else {
+            let mut sc = self.scratch_i8();
+            for i in 0..rows {
+                let qsum = self.build_tables_i8(&q[i * cols..(i + 1) * cols], &mut sc);
+                let cblut = &sc.cblut;
+                let s = scales[i];
+                parallel::par_row_ranges_with(nt, y.row_mut(i), 1, |r0, chunk| {
+                    self.gather_i8(cblut, qsum, s, r0, chunk);
                 });
             }
         }
@@ -344,6 +446,60 @@ impl LutGemmEngine {
         xsum
     }
 
+    /// Integer Stage-I + Stage-II for one int8 activation row; returns
+    /// Σq. Same incremental rule as [`Self::build_tables`], in exact
+    /// i32 arithmetic.
+    fn build_tables_i8(&self, qrow: &[i8], sc: &mut ScratchI8) -> i32 {
+        let (v, mu_b, segs, nb, c) = (self.v, self.mu_bits, self.segs, self.nb, self.c);
+        let npat = 1usize << mu_b;
+        let qsum: i32 = qrow.iter().map(|&q| q as i32).sum();
+        // Tail past `cols` was zeroed at construction and is never
+        // written, so only the live prefix needs refreshing.
+        sc.qpad[..self.cols].copy_from_slice(qrow);
+
+        for j in 0..nb {
+            for p in 0..segs {
+                let seg = &sc.qpad[j * v + p * mu_b..j * v + (p + 1) * mu_b];
+                let t = &mut sc.lut[(j * segs + p) * npat..(j * segs + p + 1) * npat];
+                t[0] = -seg.iter().map(|&q| q as i32).sum::<i32>();
+                for s in 1..npat {
+                    let low = s & s.wrapping_neg();
+                    t[s] = t[s ^ low] + 2 * seg[low.trailing_zeros() as usize] as i32;
+                }
+            }
+        }
+
+        for j in 0..nb {
+            let base_l = j * segs * npat;
+            let cb = &mut sc.cblut[j * c..(j + 1) * c];
+            match segs {
+                1 => {
+                    let t0 = &sc.lut[base_l..base_l + npat];
+                    for (out, &key) in cb.iter_mut().zip(&self.keys[..c]) {
+                        *out = t0[key as usize];
+                    }
+                }
+                2 => {
+                    let (t0, t1) = sc.lut[base_l..base_l + 2 * npat].split_at(npat);
+                    for (out, kk) in cb.iter_mut().zip(self.keys.chunks_exact(2)) {
+                        *out = t0[kk[0] as usize] + t1[kk[1] as usize];
+                    }
+                }
+                _ => {
+                    let lut = &sc.lut;
+                    for (out, kk) in cb.iter_mut().zip(self.keys.chunks_exact(segs)) {
+                        let mut s = 0i32;
+                        for (p, &key) in kk.iter().enumerate() {
+                            s += lut[base_l + p * npat + key as usize];
+                        }
+                        *out = s;
+                    }
+                }
+            }
+        }
+        qsum
+    }
+
     /// Ungrouped tile accumulate, dispatched on the engine's lane.
     #[inline]
     fn accum(&self, acc: &mut [f32], cb: &[f32], idx: &[u32]) {
@@ -369,6 +525,18 @@ impl LutGemmEngine {
                 lanes::accum_grouped(acc, cb, idx, &self.alpha, r, self.n_groups, g)
             },
             _ => gather_accum_grouped_generic(acc, cb, idx, &self.alpha, r, self.n_groups, g),
+        }
+    }
+
+    /// Integer tile accumulate, dispatched on the engine's lane.
+    #[inline]
+    fn accum_i32(&self, acc: &mut [i32], cb: &[i32], idx: &[u32]) {
+        match self.level {
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 | Level::Avx512 => unsafe { lanes::accum_i32(acc, cb, idx) },
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => unsafe { lanes::accum_i32(acc, cb, idx) },
+            _ => gather_accum_i32_generic(acc, cb, idx),
         }
     }
 
@@ -410,6 +578,56 @@ impl LutGemmEngine {
         }
     }
 
+    /// Integer gather: same tiled structure as [`Self::gather`] with
+    /// i32 accumulators. Grouped layers keep one i32 accumulator per
+    /// (tile lane, group) — the f32 weight scales can't fold into an
+    /// integer accumulation, so they move to the epilogue where the
+    /// per-group contraction is already exact.
+    fn gather_i8(&self, cblut: &[i32], qsum: i32, s: f32, r0: usize, ys: &mut [f32]) {
+        let (nb, c) = (self.nb, self.c);
+        let mut ibuf = [0u32; GATHER_TILE_MAX];
+        let mut r = r0;
+        if self.n_groups == 1 {
+            for tile in ys.chunks_mut(self.gather_tile) {
+                let tl = tile.len();
+                let mut acc = [0i32; GATHER_TILE_MAX];
+                for j in 0..nb {
+                    let cb = &cblut[j * c..(j + 1) * c];
+                    self.idx_t.decode_range(j, r, &mut ibuf[..tl]);
+                    self.accum_i32(&mut acc[..tl], cb, &ibuf[..tl]);
+                }
+                for (rr, yv) in tile.iter_mut().enumerate() {
+                    *yv = s * (self.alpha[r + rr] * acc[rr] as f32
+                        + self.mu[r + rr] * qsum as f32);
+                }
+                r += tl;
+            }
+        } else {
+            let ng = self.n_groups;
+            let mut acc = vec![0i32; GATHER_TILE_MAX * ng];
+            for tile in ys.chunks_mut(self.gather_tile) {
+                let tl = tile.len();
+                acc[..tl * ng].fill(0);
+                for j in 0..nb {
+                    let cb = &cblut[j * c..(j + 1) * c];
+                    self.idx_t.decode_range(j, r, &mut ibuf[..tl]);
+                    let g = self.block_group[j] as usize;
+                    for (rr, &k) in ibuf[..tl].iter().enumerate() {
+                        acc[rr * ng + g] += cb[k as usize];
+                    }
+                }
+                for (rr, yv) in tile.iter_mut().enumerate() {
+                    let mut a = 0f32;
+                    for (g, &av) in acc[rr * ng..(rr + 1) * ng].iter().enumerate() {
+                        a += self.alpha[(r + rr) * ng + g] * av as f32;
+                    }
+                    *yv = s * (a + self.mu[r + rr] * qsum as f32);
+                }
+                r += tl;
+            }
+        }
+    }
+
     /// Actually-resident bytes of the engine's owned buffers: the
     /// packed block-major index plane, the u16 key table, the decoded
     /// f32 scales, and the per-block group ids. This is a measurement,
@@ -426,6 +644,7 @@ impl LutGemmEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::QuantizedActs;
     use crate::quant::binarize::BinaryLayer;
     use crate::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
     use crate::util::proptest::{assert_close, check};
@@ -438,6 +657,17 @@ mod tests {
         let vectors = collect_vectors(&bl, v);
         let (cb, assign, _) = BinaryCodebook::build(&vectors, v, c, 5);
         CodebookLayer::from_assignments(&bl, Arc::new(cb), assign)
+    }
+
+    fn eng(cl: &CodebookLayer) -> Option<LutGemmEngine> {
+        LutGemmEngine::try_with_ctx(cl, &EngineCtx::current())
+    }
+
+    fn eng_at(cl: &CodebookLayer, level: Level, tile: usize) -> Option<LutGemmEngine> {
+        LutGemmEngine::try_with_ctx(
+            cl,
+            &EngineCtx::current().with_level(level).with_gather_tile(tile),
+        )
     }
 
     #[test]
@@ -465,7 +695,7 @@ mod tests {
                 (cl, x)
             },
             |(cl, x)| {
-                let eng = LutGemmEngine::try_new(cl).ok_or("not block aligned")?;
+                let eng = eng(cl).ok_or("not block aligned")?;
                 let fast = eng.forward(x);
                 let slow = x.matmul_bt(&cl.reconstruct());
                 assert_close(&fast.data, &slow.data, 1e-3, 1e-3)
@@ -478,7 +708,7 @@ mod tests {
         // cols not divisible by v: padded blocks must not contribute.
         let mut rng = Rng::new(5);
         let cl = make_codebook_layer(&mut rng, 6, 21, 8, 16); // 21 = 2*8 + 5
-        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let eng = eng(&cl).unwrap();
         let x = Matrix::randn(3, 21, &mut rng);
         let fast = eng.forward(&x);
         let slow = x.matmul_bt(&cl.reconstruct());
@@ -501,7 +731,7 @@ mod tests {
             &col_group,
             2,
         );
-        assert!(LutGemmEngine::try_new(&cl).is_none());
+        assert!(eng(&cl).is_none());
     }
 
     #[test]
@@ -513,7 +743,7 @@ mod tests {
         let vectors = collect_vectors(&bl, 8);
         let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 16, 5);
         let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
-        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let eng = eng(&cl).unwrap();
         let x = Matrix::randn(2, 32, &mut rng);
         assert_close(
             &eng.forward(&x).data,
@@ -529,7 +759,7 @@ mod tests {
         // Hand-check the incremental table for one segment.
         let mut rng = Rng::new(8);
         let cl = make_codebook_layer(&mut rng, 2, 8, 8, 4);
-        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let eng = eng(&cl).unwrap();
         assert_eq!(eng.mu_bits, 8);
         assert_eq!(eng.segs, 1);
         // forward already validated; here assert scratch dims derived.
@@ -543,7 +773,7 @@ mod tests {
         let mut rng = Rng::new(10);
         for c in [16usize, 40] {
             let cl = make_codebook_layer(&mut rng, 70, 64, 16, c);
-            let eng = LutGemmEngine::try_new(&cl).unwrap();
+            let eng = eng(&cl).unwrap();
             let x = Matrix::randn(6, 64, &mut rng);
             let y = eng.forward(&x);
             for i in 0..x.rows {
@@ -564,7 +794,7 @@ mod tests {
         let vectors = collect_vectors(&bl, 8);
         let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 12, 5);
         let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
-        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let eng = eng(&cl).unwrap();
         let x = Matrix::randn(3, 32, &mut rng);
         assert_close(
             &eng.forward(&x).data,
@@ -584,12 +814,10 @@ mod tests {
         for (rows, cols, v, c) in [(70usize, 64usize, 16usize, 40usize), (5, 21, 8, 16)] {
             let cl = make_codebook_layer(&mut rng, rows, cols, v, c);
             let x = Matrix::randn(2, cols, &mut rng);
-            let oracle = LutGemmEngine::try_new_with(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
-                .unwrap()
-                .forward(&x);
+            let oracle = eng_at(&cl, Level::Scalar, GATHER_TILE_DEFAULT).unwrap().forward(&x);
             for l in crate::util::simd::supported_levels() {
                 for tile in [1usize, 3, GATHER_TILE_DEFAULT, GATHER_TILE_MAX] {
-                    let eng = LutGemmEngine::try_new_with(&cl, l, tile).unwrap();
+                    let eng = eng_at(&cl, l, tile).unwrap();
                     assert_eq!(eng.gather_tile, tile);
                     let y = eng.forward(&x);
                     assert_eq!(y.data, oracle.data, "{rows}x{cols} {l:?} tile={tile}");
@@ -599,12 +827,86 @@ mod tests {
     }
 
     #[test]
+    fn i8_every_level_and_tile_bit_identical() {
+        // The integer lane extends the bit-identity contract to the
+        // whole pipeline: tables, gather AND epilogue agree exactly at
+        // every dispatch level and tile width (ragged cols included).
+        let mut rng = Rng::new(16);
+        for (rows, cols, v, c) in [(70usize, 64usize, 16usize, 40usize), (5, 21, 8, 16)] {
+            let cl = make_codebook_layer(&mut rng, rows, cols, v, c);
+            let x = Matrix::randn(2, cols, &mut rng);
+            let qa = QuantizedActs::quantize(&x, 8);
+            let oracle = eng_at(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+                .unwrap()
+                .forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+            for l in crate::util::simd::supported_levels() {
+                for tile in [1usize, 3, GATHER_TILE_MAX] {
+                    let y = eng_at(&cl, l, tile)
+                        .unwrap()
+                        .forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+                    assert_eq!(y.data, oracle.data, "{rows}x{cols} {l:?} tile={tile}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_matches_f32_forward_on_dequantized_rows() {
+        // Semantics check: the integer lane equals the f32 lane fed the
+        // dequantized codes, up to f32 epilogue rounding.
+        let mut rng = Rng::new(17);
+        let cl = make_codebook_layer(&mut rng, 40, 96, 16, 32);
+        let eng = eng(&cl).unwrap();
+        let x = Matrix::randn(3, 96, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let yi = eng.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        let yf = eng.forward(&qa.dequantize());
+        assert_close(&yi.data, &yf.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn grouped_i8_matches_dequant_reference() {
+        // Grouped layers route the integer gather through per-group
+        // i32 accumulators; the result must match the dequant GEMM on
+        // the dequantized codes.
+        let mut rng = Rng::new(18);
+        let w = Matrix::randn(70, 32, &mut rng);
+        let groups: Vec<u16> = (0..32).map(|c| (c / 16) as u16).collect();
+        let bl = crate::quant::arb::arb_quantize(&w, &groups, 4, 4);
+        let vectors = collect_vectors(&bl, 8);
+        let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 12, 5);
+        let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
+        let eng = eng(&cl).unwrap();
+        let x = Matrix::randn(3, 32, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let yi = eng.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        let slow = qa.dequantize().matmul_bt(&cl.reconstruct());
+        assert_close(&yi.data, &slow.data, 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn i8_batched_forward_bitwise_matches_per_row() {
+        // The batch split must not change a bit of the integer lane.
+        let mut rng = Rng::new(19);
+        let cl = make_codebook_layer(&mut rng, 70, 64, 16, 40);
+        let eng = eng(&cl).unwrap();
+        let x = Matrix::randn(6, 64, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let y = eng.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        for i in 0..qa.rows {
+            let qrow = &qa.q[i * qa.cols..(i + 1) * qa.cols];
+            let yi = eng.forward_i8(qrow, &qa.scales[i..i + 1], 1, qa.cols);
+            assert_eq!(y.row(i), yi.row(0), "row {i}");
+        }
+    }
+
+    #[test]
     fn resident_bytes_equal_sum_of_owned_buffers() {
         // The memory estimate must be a measurement of the buffers the
         // engine actually owns — not a hypothetical packed size.
         let mut rng = Rng::new(9);
         let cl = make_codebook_layer(&mut rng, 70, 256, 16, 256);
-        let eng = LutGemmEngine::try_new(&cl).unwrap();
+        let eng = eng(&cl).unwrap();
         let expect = eng.idx_t.storage_bytes()
             + eng.keys.len() * 2
             + (eng.alpha.len() + eng.mu.len()) * 4
@@ -625,7 +927,7 @@ mod tests {
         let mut rng = Rng::new(14);
         for (rows, cols, v, c) in [(70usize, 64usize, 16usize, 40usize), (33, 48, 8, 200)] {
             let cl = make_codebook_layer(&mut rng, rows, cols, v, c);
-            let eng = LutGemmEngine::try_new(&cl).unwrap();
+            let eng = eng(&cl).unwrap();
             let dense_idx_t: Vec<u32> = {
                 let mut t = vec![0u32; rows * eng.nb];
                 let idx = cl.idx.to_u32s();

@@ -3,15 +3,20 @@
 //! runtime parity tests):
 //!
 //! - [`dense`]: fp32 GEMM reference path (the "FP16" baseline lane).
-//! - [`xnor`]: W1A16 sign-GEMM over bit-packed ±1 weights (paper Fig. 5
-//!   1-bit lane) plus a true XNOR+POPCNT path for binary activations.
+//! - [`xnor`]: sign-GEMM over bit-packed ±1 weights (paper Fig. 5
+//!   1-bit lane) with both a W1A16 f32 lane and a true W1A8 integer
+//!   lane, plus an XNOR+POPCNT path for binary activations.
 //! - [`lutgemm`]: the two-stage Binary-Codebook LUT-GEMM (paper App. H)
-//!   — the sub-1-bit serving hot path, no dequantization.
+//!   — the sub-1-bit serving hot path, no dequantization — likewise
+//!   with f32 and int8 table/gather lanes.
 //!
 //! Engines are surfaced through the [`ComputeEngine`] trait so a
 //! [`crate::model::WeightBackend`] can hand its prepared serving path
 //! to [`crate::model::Linear`] without the model layer enumerating
-//! engine types.
+//! engine types. The boundary type is [`Activations`]: either f32 rows
+//! (the oracle path) or per-row symmetric int8 rows with the scale
+//! factored out, so the ±1 contraction can run entirely in i32 and
+//! multiply by `scales[i]` once per output value (DESIGN.md §12).
 
 pub mod dense;
 pub mod lutgemm;
@@ -20,12 +25,176 @@ pub mod xnor;
 pub use lutgemm::LutGemmEngine;
 pub use xnor::BinaryGemmEngine;
 
+use crate::quant::actquant::ActQuant;
 use crate::tensor::Matrix;
+use crate::util::simd::{self, Level};
+
+/// Activation rows at the engine boundary.
+///
+/// `I8` rows carry per-ROW dynamic symmetric quantization:
+/// `x[i][c] ≈ scales[i] * q[i*cols + c]`. The row scale factors out of
+/// the ±1 contraction, so integer-capable engines accumulate `q` in
+/// i32 and apply `scales[i]` (together with the per-channel weight
+/// scales) once per output value.
+#[derive(Debug, Clone, Copy)]
+pub enum Activations<'a> {
+    /// Full-precision rows — the oracle path every engine supports.
+    F32(&'a Matrix),
+    /// Per-row int8 rows (row-major `q`, one scale per row).
+    I8 { q: &'a [i8], scales: &'a [f32], rows: usize, cols: usize },
+}
+
+impl Activations<'_> {
+    pub fn rows(&self) -> usize {
+        match self {
+            Activations::F32(x) => x.rows,
+            Activations::I8 { rows, .. } => *rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Activations::F32(x) => x.cols,
+            Activations::I8 { cols, .. } => *cols,
+        }
+    }
+
+    /// Materialize f32 rows — the fallback used by the trait's default
+    /// [`ComputeEngine::forward`] for engines without an integer lane.
+    pub fn to_f32(&self) -> Matrix {
+        match self {
+            Activations::F32(x) => (*x).clone(),
+            Activations::I8 { q, scales, rows, cols } => {
+                dequantize_rows(q, scales, *rows, *cols)
+            }
+        }
+    }
+}
+
+/// `q[i*cols + c] * scales[i]` back to a dense f32 matrix.
+pub fn dequantize_rows(q: &[i8], scales: &[f32], rows: usize, cols: usize) -> Matrix {
+    assert_eq!(q.len(), rows * cols);
+    assert_eq!(scales.len(), rows);
+    let mut x = Matrix::zeros(rows, cols);
+    for (i, (xrow, qrow)) in x.data.chunks_mut(cols).zip(q.chunks(cols)).enumerate() {
+        let s = scales[i];
+        for (xv, &qv) in xrow.iter_mut().zip(qrow) {
+            *xv = qv as f32 * s;
+        }
+    }
+    x
+}
+
+/// Owned per-row symmetric int8 quantization of a batch of activation
+/// rows — built once per layer input and shared by every engine fed
+/// from the same rows (the quantize-once seam in `transformer.rs`).
+#[derive(Debug, Clone)]
+pub struct QuantizedActs {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major codes, `rows * cols`.
+    pub q: Vec<i8>,
+    /// One scale per row: `x[i][c] ≈ scales[i] * q[i][c]`.
+    pub scales: Vec<f32>,
+}
+
+impl QuantizedActs {
+    /// Per-row dynamic symmetric quantization at `bits` (2..=8):
+    /// `scale = absmax / qmax` (1.0 for an all-zero row), codes
+    /// round-to-nearest clamped to `±qmax` so they always fit i8.
+    pub fn quantize(x: &Matrix, bits: u32) -> QuantizedActs {
+        assert!((2..=8).contains(&bits), "int8 path needs 2..=8 bits, got {bits}");
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let mut q = vec![0i8; x.rows * x.cols];
+        let mut scales = vec![1f32; x.rows];
+        for (i, (qrow, srow)) in q.chunks_mut(x.cols).zip(scales.iter_mut()).enumerate() {
+            let xrow = x.row(i);
+            let absmax = xrow.iter().fold(0f32, |m, v| m.max(v.abs()));
+            let s = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+            *srow = s;
+            for (qv, &xv) in qrow.iter_mut().zip(xrow) {
+                *qv = (xv / s).round().clamp(-qmax, qmax) as i8;
+            }
+        }
+        QuantizedActs { rows: x.rows, cols: x.cols, q, scales }
+    }
+
+    /// Borrow as the engine-boundary enum.
+    pub fn as_acts(&self) -> Activations<'_> {
+        Activations::I8 { q: &self.q, scales: &self.scales, rows: self.rows, cols: self.cols }
+    }
+
+    /// Dequantize back to f32 (the default-impl fallback and tests).
+    pub fn dequantize(&self) -> Matrix {
+        dequantize_rows(&self.q, &self.scales, self.rows, self.cols)
+    }
+}
+
+/// Construction-time context for prepared engines — the one builder
+/// that replaces the old `new` / `new_with_level` / `try_new_with`
+/// constructor sprawl. Passed at `prepare_engine` time so every knob
+/// an engine captures (dispatch lane, gather tile, activation
+/// quantizer) flows through a single surface.
+#[derive(Debug, Clone)]
+pub struct EngineCtx {
+    /// SIMD dispatch lane, captured at construction (never changes
+    /// mid-serve).
+    pub simd_level: Level,
+    /// LUT gather output-row tile width (clamped by the engine to
+    /// `1..=`[`lutgemm::GATHER_TILE_MAX`]).
+    pub gather_tile: usize,
+    /// The linear's activation quantizer, if any: `bits <= 8` enables
+    /// the per-row integer lane on integer-capable engines.
+    pub act_quant: Option<ActQuant>,
+}
+
+impl EngineCtx {
+    /// The process-current context: detected/forced SIMD level, tuned
+    /// gather tile, no activation quantizer.
+    pub fn current() -> EngineCtx {
+        EngineCtx {
+            simd_level: simd::active(),
+            gather_tile: crate::util::autotune::gather_tile(),
+            act_quant: None,
+        }
+    }
+
+    pub fn with_level(mut self, level: Level) -> EngineCtx {
+        self.simd_level = level;
+        self
+    }
+
+    pub fn with_gather_tile(mut self, tile: usize) -> EngineCtx {
+        self.gather_tile = tile;
+        self
+    }
+
+    pub fn with_act_quant(mut self, aq: Option<ActQuant>) -> EngineCtx {
+        self.act_quant = aq;
+        self
+    }
+}
 
 /// A prepared GEMM engine for one weight backend: `y = x @ Ŵᵀ`.
+///
+/// `forward_f32` is the required oracle path; `forward` is the engine
+/// boundary, with a default that dequantizes int8 rows so backends
+/// without an integer lane (and pre-existing third-party impls that
+/// only know f32) keep working unchanged. Integer-capable engines
+/// override `forward` to route `I8` rows to their i32 lanes.
 pub trait ComputeEngine: std::fmt::Debug + Send + Sync {
-    /// x: (m, in) -> (m, out).
-    fn forward(&self, x: &Matrix) -> Matrix;
+    /// x: (m, in) -> (m, out), f32 activations.
+    fn forward_f32(&self, x: &Matrix) -> Matrix;
+
+    /// Engine boundary: f32 rows run the oracle path, int8 rows run
+    /// the integer lane when the engine has one (default: dequantize
+    /// and fall back to [`Self::forward_f32`]).
+    fn forward(&self, x: &Activations<'_>) -> Matrix {
+        match x {
+            Activations::F32(m) => self.forward_f32(m),
+            acts @ Activations::I8 { .. } => self.forward_f32(&acts.to_f32()),
+        }
+    }
 
     fn clone_box(&self) -> Box<dyn ComputeEngine>;
 }
@@ -37,8 +206,17 @@ impl Clone for Box<dyn ComputeEngine> {
 }
 
 impl ComputeEngine for BinaryGemmEngine {
-    fn forward(&self, x: &Matrix) -> Matrix {
+    fn forward_f32(&self, x: &Matrix) -> Matrix {
         BinaryGemmEngine::forward(self, x)
+    }
+
+    fn forward(&self, x: &Activations<'_>) -> Matrix {
+        match x {
+            Activations::F32(m) => BinaryGemmEngine::forward(self, m),
+            Activations::I8 { q, scales, rows, cols } => {
+                self.forward_i8(q, scales, *rows, *cols)
+            }
+        }
     }
 
     fn clone_box(&self) -> Box<dyn ComputeEngine> {
@@ -47,11 +225,97 @@ impl ComputeEngine for BinaryGemmEngine {
 }
 
 impl ComputeEngine for LutGemmEngine {
-    fn forward(&self, x: &Matrix) -> Matrix {
+    fn forward_f32(&self, x: &Matrix) -> Matrix {
         LutGemmEngine::forward(self, x)
+    }
+
+    fn forward(&self, x: &Activations<'_>) -> Matrix {
+        match x {
+            Activations::F32(m) => LutGemmEngine::forward(self, m),
+            Activations::I8 { q, scales, rows, cols } => {
+                self.forward_i8(q, scales, *rows, *cols)
+            }
+        }
     }
 
     fn clone_box(&self) -> Box<dyn ComputeEngine> {
         Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::assert_close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_row_quantize_roundtrip_error_bounded() {
+        let mut r = Rng::new(1);
+        let x = Matrix::randn(5, 33, &mut r);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let back = qa.dequantize();
+        for i in 0..x.rows {
+            // Round-to-nearest on a symmetric grid: error <= scale/2.
+            let half = qa.scales[i] * 0.5 + 1e-6;
+            for (a, b) in x.row(i).iter().zip(back.row(i)) {
+                assert!((a - b).abs() <= half, "{a} vs {b} (half-step {half})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_row_quantizes_to_zero_codes_unit_scale() {
+        let x = Matrix::zeros(2, 7);
+        let qa = QuantizedActs::quantize(&x, 8);
+        assert!(qa.q.iter().all(|&q| q == 0));
+        assert!(qa.scales.iter().all(|&s| s == 1.0));
+        assert_eq!(qa.dequantize().data, x.data);
+    }
+
+    #[test]
+    fn codes_stay_within_symmetric_range() {
+        let mut r = Rng::new(2);
+        for bits in [2u32, 4, 8] {
+            let x = Matrix::randn(3, 65, &mut r);
+            let qa = QuantizedActs::quantize(&x, bits);
+            let qmax = ((1i32 << (bits - 1)) - 1) as i8;
+            assert!(qa.q.iter().all(|&q| (-qmax..=qmax).contains(&q)), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn default_forward_dequantizes_for_f32_only_engines() {
+        // An engine that only implements forward_f32 must transparently
+        // serve int8 rows through the default dequantize fallback.
+        #[derive(Debug, Clone)]
+        struct DenseOnly(Matrix);
+        impl ComputeEngine for DenseOnly {
+            fn forward_f32(&self, x: &Matrix) -> Matrix {
+                x.matmul_bt(&self.0)
+            }
+            fn clone_box(&self) -> Box<dyn ComputeEngine> {
+                Box::new(self.clone())
+            }
+        }
+        let mut r = Rng::new(3);
+        let w = Matrix::randn(4, 16, &mut r);
+        let x = Matrix::randn(2, 16, &mut r);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let eng = DenseOnly(w.clone());
+        let via_acts = eng.forward(&qa.as_acts());
+        let via_dequant = qa.dequantize().matmul_bt(&w);
+        assert_close(&via_acts.data, &via_dequant.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn engine_ctx_builder_overrides() {
+        let ctx = EngineCtx::current()
+            .with_level(Level::Scalar)
+            .with_gather_tile(7)
+            .with_act_quant(Some(ActQuant::identity()));
+        assert_eq!(ctx.simd_level, Level::Scalar);
+        assert_eq!(ctx.gather_tile, 7);
+        assert!(ctx.act_quant.is_some());
     }
 }

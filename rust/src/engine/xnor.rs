@@ -1,25 +1,38 @@
-//! W1A16 sign-GEMM engine over bit-packed ±1 weights (paper Fig. 5,
-//! 1-bit lane): `y[i,r] = Σ_g alpha[r,g]·Σ_{c∈g} ±x[i,c] + mu[r]·Σx`.
+//! Sign-GEMM engine over bit-packed ±1 weights (paper Fig. 5, 1-bit
+//! lane): `y[i,r] = Σ_g alpha[r,g]·Σ_{c∈g} ±x[i,c] + mu[r]·Σx`.
 //!
 //! No dequantized weight is ever materialized: the ±1 contraction uses
-//! the identity `Σ ±x = 2·Σ_{bits set} x − Σ x`. The scalar lane walks
-//! the *set* bits of each 64-column word (≈ cols/2 adds) and is the
-//! oracle; the AVX2 lane instead turns each sign byte into an 8-lane
-//! compare mask and does a masked vector accumulate (8 adds per 8
-//! columns, no data-dependent branching), which reassociates the sum —
-//! so the vector lanes are ULP-bounded rather than bit-identical
-//! against scalar (bound asserted in `rust/tests/simd_equivalence.rs`).
+//! the identity `Σ ±x = 2·Σ_{bits set} x − Σ x`. Two activation lanes:
+//!
+//! - **W1A16 (f32)**: the scalar lane walks the *set* bits of each
+//!   64-column word (≈ cols/2 adds) and is the oracle; the AVX2 lane
+//!   instead turns each sign byte into an 8-lane compare mask and does
+//!   a masked vector accumulate (8 adds per 8 columns, no
+//!   data-dependent branching), which reassociates the sum — so the
+//!   f32 vector lanes are ULP-bounded rather than bit-identical
+//!   against scalar (bound asserted in
+//!   `rust/tests/simd_equivalence.rs`).
+//! - **W1A8 (int8)**: per-row int8 activations contracted entirely in
+//!   i32 (`Σ ±q = 2·Σ_{bits set} q − Σq`), the row scale applied once
+//!   per output value. Integer addition is exact at any association,
+//!   so *every* vector lane is bit-identical to the scalar i32 oracle
+//!   (`row_pos_i8_scalar`). The AVX2 body is a maddubs-style i8 dot:
+//!   expand 32 sign bits to a byte select mask, `maddubs(1, q&mask)`
+//!   into i16 pairs (|q| ≤ 127 so pairs can't saturate), widen with
+//!   `madd` into 8 i32 accumulators.
+//!
 //! The lane is chosen per [`crate::util::simd::Level`], captured at
-//! engine construction. A true XNOR+POPCNT path ([`xnor_popcnt_gemm`])
-//! is provided for binary activations (App. F / BNN-style fully-binary
-//! inference); popcount is integer math, so that one stays
-//! bit-identical on every lane.
+//! engine construction through [`EngineCtx`]. A true XNOR+POPCNT path
+//! ([`xnor_popcnt_gemm`]) is provided for binary activations (App. F /
+//! BNN-style fully-binary inference); popcount is integer math, so
+//! that one stays bit-identical on every lane too.
 
+use super::EngineCtx;
 use crate::bitops::{hamming_words_padded, BitMatrix};
 use crate::quant::binarize::BinaryLayer;
 use crate::tensor::Matrix;
 use crate::util::parallel;
-use crate::util::simd::{self, Level};
+use crate::util::simd::Level;
 
 /// Σ x over the set bits of `w`, offset by `base` — the scalar set-bit
 /// walk, also used for the vector lanes' final partial word.
@@ -29,6 +42,18 @@ fn sum_where_set(mut w: u64, xrow: &[f32], base: usize) -> f32 {
     while w != 0 {
         let t = w.trailing_zeros() as usize;
         s += xrow[base + t];
+        w &= w - 1;
+    }
+    s
+}
+
+/// Integer twin of [`sum_where_set`]: Σ q over set bits, exact i32.
+#[inline(always)]
+fn sum_where_set_i8(mut w: u64, qrow: &[i8], base: usize) -> i32 {
+    let mut s = 0i32;
+    while w != 0 {
+        let t = w.trailing_zeros() as usize;
+        s += qrow[base + t] as i32;
         w &= w - 1;
     }
     s
@@ -48,6 +73,27 @@ fn row_pos_scalar(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
         while w != 0 {
             let t = w.trailing_zeros() as usize;
             pos += xrow[base + t];
+            w &= w - 1;
+        }
+    }
+    pos
+}
+
+/// Scalar i32 oracle for the W1A8 lane: same word-then-bit walk as
+/// [`row_pos_scalar`], accumulating int8 codes exactly. Every vector
+/// lane must reproduce this bit-for-bit (integer adds are exact, so
+/// reassociation is free).
+fn row_pos_i8_scalar(brow: &[u64], gmask: Option<&[u64]>, qrow: &[i8]) -> i32 {
+    let mut pos = 0i32;
+    for (wi, &bw) in brow.iter().enumerate() {
+        let mut w = match gmask {
+            Some(m) => bw & m[wi],
+            None => bw,
+        };
+        let base = wi * 64;
+        while w != 0 {
+            let t = w.trailing_zeros() as usize;
+            pos += qrow[base + t] as i32;
             w &= w - 1;
         }
     }
@@ -94,6 +140,47 @@ fn row_pos_lanes_generic(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f
     pos
 }
 
+/// Branchless integer body for the non-x86 vector wrappers (NEON
+/// recompiles it so LLVM emits widening-add sequences): 8 independent
+/// i32 sub-accumulators, sign-bit AND masks. Exact, therefore
+/// bit-identical to [`row_pos_i8_scalar`] regardless of lane count.
+#[cfg(target_arch = "aarch64")]
+#[inline(always)]
+fn row_pos_i8_lanes_generic(brow: &[u64], gmask: Option<&[u64]>, qrow: &[i8]) -> i32 {
+    let full = qrow.len() / 64;
+    let mut acc = [0i32; 8];
+    for wi in 0..full {
+        let w = match gmask {
+            Some(m) => brow[wi] & m[wi],
+            None => brow[wi],
+        };
+        if w == 0 {
+            continue;
+        }
+        let qw = &qrow[wi * 64..wi * 64 + 64];
+        for byte in 0..8 {
+            let b = (w >> (byte * 8)) & 0xff;
+            if b == 0 {
+                continue;
+            }
+            let qs = &qw[byte * 8..byte * 8 + 8];
+            for (l, a) in acc.iter_mut().enumerate() {
+                let keep = 0i32.wrapping_sub(((b >> l) & 1) as i32);
+                *a += (qs[l] as i32) & keep;
+            }
+        }
+    }
+    let mut pos = acc.iter().sum::<i32>();
+    if full < brow.len() {
+        let w = match gmask {
+            Some(m) => brow[full] & m[full],
+            None => brow[full],
+        };
+        pos += sum_where_set_i8(w, qrow, full * 64);
+    }
+    pos
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use std::arch::x86_64::*;
@@ -106,6 +193,33 @@ mod x86 {
         let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
         let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
         _mm_cvtss_f32(s)
+    }
+
+    #[inline(always)]
+    unsafe fn hsum_i32(v: __m256i) -> i32 {
+        let hi = _mm256_extracti128_si256(v, 1);
+        let lo = _mm256_castsi256_si128(v);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01));
+        _mm_cvtsi128_si32(s)
+    }
+
+    /// Expand 32 sign bits into a 32-byte select mask (0xFF where the
+    /// bit is set). `set1_epi32` repeats the word in both 128-bit
+    /// halves, so the per-half `shuffle_epi8` spread stays in-lane.
+    #[inline(always)]
+    unsafe fn mask32(w32: u32) -> __m256i {
+        let spread = _mm256_setr_epi8(
+            0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1, 1, 1, 2, 2, 2, 2, 2, 2, 2, 2, 3, 3, 3, 3,
+            3, 3, 3, 3,
+        );
+        let bits = _mm256_setr_epi8(
+            1, 2, 4, 8, 16, 32, 64, -128, 1, 2, 4, 8, 16, 32, 64, -128, 1, 2, 4, 8, 16, 32, 64,
+            -128, 1, 2, 4, 8, 16, 32, 64, -128,
+        );
+        let v = _mm256_shuffle_epi8(_mm256_set1_epi32(w32 as i32), spread);
+        _mm256_cmpeq_epi8(_mm256_and_si256(v, bits), bits)
     }
 
     /// Masked sign-accumulate for one weight row: each byte of the
@@ -152,6 +266,53 @@ mod x86 {
         }
         pos
     }
+
+    /// W1A8 row contraction, maddubs-style: per 32-bit half-word, mask
+    /// 32 int8 codes by the expanded sign bits, `maddubs(1, ·)` into
+    /// i16 pairs (each product ≤ 127, pair sum ≤ 254 — saturation is
+    /// unreachable), widen with `madd(·, 1)` into 8 i32 accumulators.
+    /// Every add is exact, so the result is bit-identical to
+    /// [`super::row_pos_i8_scalar`].
+    ///
+    /// # Safety
+    /// Caller must ensure the CPU supports AVX2 (guaranteed by
+    /// dispatching on [`crate::util::simd::Level`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_pos_i8(brow: &[u64], gmask: Option<&[u64]>, qrow: &[i8]) -> i32 {
+        let full = qrow.len() / 64;
+        let ones8 = _mm256_set1_epi8(1);
+        let ones16 = _mm256_set1_epi16(1);
+        let mut acc = _mm256_setzero_si256();
+        let p = qrow.as_ptr();
+        for wi in 0..full {
+            let w = match gmask {
+                Some(m) => brow[wi] & m[wi],
+                None => brow[wi],
+            };
+            if w == 0 {
+                continue;
+            }
+            for half in 0..2usize {
+                let h = (w >> (half * 32)) as u32;
+                if h == 0 {
+                    continue;
+                }
+                let qv = _mm256_loadu_si256(p.add(wi * 64 + half * 32) as *const __m256i);
+                let masked = _mm256_and_si256(mask32(h), qv);
+                let pairs = _mm256_maddubs_epi16(ones8, masked);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(pairs, ones16));
+            }
+        }
+        let mut pos = hsum_i32(acc);
+        if full < brow.len() {
+            let w = match gmask {
+                Some(m) => brow[full] & m[full],
+                None => brow[full],
+            };
+            pos += super::sum_where_set_i8(w, qrow, full * 64);
+        }
+        pos
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -162,6 +323,14 @@ mod arm {
     #[target_feature(enable = "neon")]
     pub unsafe fn row_pos(brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f32 {
         super::row_pos_lanes_generic(brow, gmask, xrow)
+    }
+
+    /// # Safety
+    /// Caller must ensure the CPU supports NEON (guaranteed by
+    /// dispatching on [`crate::util::simd::Level`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn row_pos_i8(brow: &[u64], gmask: Option<&[u64]>, qrow: &[i8]) -> i32 {
+        super::row_pos_i8_lanes_generic(brow, gmask, qrow)
     }
 }
 
@@ -178,7 +347,21 @@ fn row_pos(level: Level, brow: &[u64], gmask: Option<&[u64]>, xrow: &[f32]) -> f
     }
 }
 
-/// Prepared W1A16 engine for one binarized layer.
+/// `pos = Σ q` over columns whose (optionally group-masked) sign bit
+/// is set, dispatched on `level`. Exact at every level.
+#[inline]
+fn row_pos_i8(level: Level, brow: &[u64], gmask: Option<&[u64]>, qrow: &[i8]) -> i32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 | Level::Avx512 => unsafe { x86::row_pos_i8(brow, gmask, qrow) },
+        #[cfg(target_arch = "aarch64")]
+        Level::Neon => unsafe { arm::row_pos_i8(brow, gmask, qrow) },
+        _ => row_pos_i8_scalar(brow, gmask, qrow),
+    }
+}
+
+/// Prepared sign-GEMM engine for one binarized layer (W1A16 f32 lane
+/// and W1A8 integer lane).
 #[derive(Debug, Clone)]
 pub struct BinaryGemmEngine {
     pub out: usize,
@@ -194,13 +377,11 @@ pub struct BinaryGemmEngine {
 }
 
 impl BinaryGemmEngine {
-    pub fn new(layer: &BinaryLayer) -> BinaryGemmEngine {
-        Self::new_with_level(layer, simd::active())
-    }
-
-    /// Build with an explicit dispatch level (equivalence tests and
-    /// benches; production goes through [`Self::new`]).
-    pub fn new_with_level(layer: &BinaryLayer, level: Level) -> BinaryGemmEngine {
+    /// Build from a binarized layer — the canonical constructor. The
+    /// engine captures the ctx's dispatch lane; `gather_tile` and
+    /// `act_quant` do not apply here (per-row int8 rows arrive already
+    /// quantized through [`super::Activations::I8`]).
+    pub fn with_ctx(layer: &BinaryLayer, ctx: &EngineCtx) -> BinaryGemmEngine {
         let wpr = layer.b.words_per_row;
         let mut group_masks = vec![vec![0u64; wpr]; layer.n_groups];
         for (c, &g) in layer.col_group.iter().enumerate() {
@@ -214,8 +395,20 @@ impl BinaryGemmEngine {
             alpha: layer.alpha.clone(),
             mu: layer.mu.clone(),
             group_masks,
-            level,
+            level: ctx.simd_level,
         }
+    }
+
+    #[deprecated(note = "use `BinaryGemmEngine::with_ctx(layer, &EngineCtx::current())`")]
+    pub fn new(layer: &BinaryLayer) -> BinaryGemmEngine {
+        Self::with_ctx(layer, &EngineCtx::current())
+    }
+
+    #[deprecated(
+        note = "use `BinaryGemmEngine::with_ctx(layer, &EngineCtx::current().with_level(level))`"
+    )]
+    pub fn new_with_level(layer: &BinaryLayer, level: Level) -> BinaryGemmEngine {
+        Self::with_ctx(layer, &EngineCtx::current().with_level(level))
     }
 
     /// The dispatch lane this engine was built with.
@@ -229,6 +422,22 @@ impl BinaryGemmEngine {
             return self.forward_ungrouped(x);
         }
         self.forward_grouped(x)
+    }
+
+    /// W1A8 forward from per-row int8 activations: the contraction
+    /// runs entirely in i32 and `scales[i]` multiplies once per output
+    /// value — `y = s·(alpha·(2·pos − Σq) + mu·Σq)`. `q` is row-major
+    /// `(rows, cols)` with one scale per row. Parallel splits mirror
+    /// [`Self::forward`]; integer adds are exact, so the result is
+    /// bit-identical across thread counts AND dispatch levels.
+    pub fn forward_i8(&self, q: &[i8], scales: &[f32], rows: usize, cols: usize) -> Matrix {
+        assert_eq!(cols, self.cols);
+        assert_eq!(q.len(), rows * cols);
+        assert_eq!(scales.len(), rows);
+        if self.n_groups == 1 {
+            return self.forward_ungrouped_i8(q, scales, rows, cols);
+        }
+        self.forward_grouped_i8(q, scales, rows, cols)
     }
 
     /// Fast path (single scale group): `Σ±x = 2·Σ_{set bits}x − Σx`.
@@ -266,12 +475,47 @@ impl BinaryGemmEngine {
         y
     }
 
+    /// Integer twin of [`Self::forward_ungrouped`].
+    fn forward_ungrouped_i8(&self, q: &[i8], scales: &[f32], rows: usize, cols: usize) -> Matrix {
+        let out_n = self.out;
+        let mut y = Matrix::zeros(rows, out_n);
+        let nt = parallel::threads_for(rows * out_n * (self.cols / 2).max(1));
+        if rows == 1 {
+            let qrow = &q[..cols];
+            let qsum: i32 = qrow.iter().map(|&v| v as i32).sum();
+            let s = scales[0];
+            parallel::par_row_ranges_with(nt, &mut y.data, 1, |r0, chunk| {
+                self.outs_ungrouped_i8(qrow, qsum, s, r0, chunk);
+            });
+        } else {
+            parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+                for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+                    let qrow = &q[(i0 + ii) * cols..(i0 + ii + 1) * cols];
+                    let qsum: i32 = qrow.iter().map(|&v| v as i32).sum();
+                    self.outs_ungrouped_i8(qrow, qsum, scales[i0 + ii], 0, yrow);
+                }
+            });
+        }
+        y
+    }
+
     /// Output rows `r0..r0+ys.len()` for one activation row.
     fn outs_ungrouped(&self, xrow: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
         for (rr, yv) in ys.iter_mut().enumerate() {
             let r = r0 + rr;
             let pos = row_pos(self.level, self.b.row(r), None, xrow);
             *yv = self.alpha[r] * (2.0 * pos - xsum) + self.mu[r] * xsum;
+        }
+    }
+
+    /// Integer output rows for one int8 activation row: i32 contraction
+    /// first, per-channel weight scales and the row scale applied in
+    /// one f32 epilogue per output value.
+    fn outs_ungrouped_i8(&self, qrow: &[i8], qsum: i32, s: f32, r0: usize, ys: &mut [f32]) {
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            let r = r0 + rr;
+            let pos = row_pos_i8(self.level, self.b.row(r), None, qrow);
+            *yv = s * (self.alpha[r] * (2 * pos - qsum) as f32 + self.mu[r] * qsum as f32);
         }
     }
 
@@ -301,6 +545,30 @@ impl BinaryGemmEngine {
         y
     }
 
+    /// Integer twin of [`Self::forward_grouped`].
+    fn forward_grouped_i8(&self, q: &[i8], scales: &[f32], rows: usize, cols: usize) -> Matrix {
+        let out_n = self.out;
+        let mut y = Matrix::zeros(rows, out_n);
+        let nt = parallel::threads_for(rows * out_n * (self.cols / 2).max(1));
+        if rows == 1 {
+            let qrow = &q[..cols];
+            let (group_sum, qsum) = self.group_sums_i8(qrow);
+            let s = scales[0];
+            parallel::par_row_ranges_with(nt, &mut y.data, 1, |r0, chunk| {
+                self.outs_grouped_i8(qrow, &group_sum, qsum, s, r0, chunk);
+            });
+        } else {
+            parallel::par_row_ranges_with(nt, &mut y.data, out_n, |i0, chunk| {
+                for (ii, yrow) in chunk.chunks_mut(out_n).enumerate() {
+                    let qrow = &q[(i0 + ii) * cols..(i0 + ii + 1) * cols];
+                    let (group_sum, qsum) = self.group_sums_i8(qrow);
+                    self.outs_grouped_i8(qrow, &group_sum, qsum, scales[i0 + ii], 0, yrow);
+                }
+            });
+        }
+        y
+    }
+
     /// Per-group sums (Σ_{c in g} x_c) and their total for one row.
     /// Runs once per activation row (not per output row), so it stays
     /// on the scalar walk at every dispatch level.
@@ -324,6 +592,27 @@ impl BinaryGemmEngine {
         (group_sum, xsum)
     }
 
+    /// Integer twin of [`Self::group_sums`] (exact i32).
+    fn group_sums_i8(&self, qrow: &[i8]) -> (Vec<i32>, i32) {
+        let mut group_sum = vec![0i32; self.n_groups];
+        let mut qsum = 0i32;
+        for (g, mask) in self.group_masks.iter().enumerate() {
+            let mut s = 0i32;
+            for (wi, &mw) in mask.iter().enumerate() {
+                let mut w = mw;
+                let base = wi * 64;
+                while w != 0 {
+                    let t = w.trailing_zeros() as usize;
+                    s += qrow[base + t] as i32;
+                    w &= w - 1;
+                }
+            }
+            group_sum[g] = s;
+            qsum += s;
+        }
+        (group_sum, qsum)
+    }
+
     /// Grouped output rows `r0..r0+ys.len()` for one activation row.
     fn outs_grouped(&self, xrow: &[f32], group_sum: &[f32], xsum: f32, r0: usize, ys: &mut [f32]) {
         for (rr, yv) in ys.iter_mut().enumerate() {
@@ -336,6 +625,29 @@ impl BinaryGemmEngine {
                 acc += self.alpha[r * self.n_groups + g] * (2.0 * pos - group_sum[g]);
             }
             *yv = acc + self.mu[r] * xsum;
+        }
+    }
+
+    /// Grouped integer output rows: per-group i32 contractions, one
+    /// f32 epilogue per output value.
+    fn outs_grouped_i8(
+        &self,
+        qrow: &[i8],
+        group_sum: &[i32],
+        qsum: i32,
+        s: f32,
+        r0: usize,
+        ys: &mut [f32],
+    ) {
+        for (rr, yv) in ys.iter_mut().enumerate() {
+            let r = r0 + rr;
+            let brow = self.b.row(r);
+            let mut acc = 0f32;
+            for (g, mask) in self.group_masks.iter().enumerate() {
+                let pos = row_pos_i8(self.level, brow, Some(mask), qrow);
+                acc += self.alpha[r * self.n_groups + g] * (2 * pos - group_sum[g]) as f32;
+            }
+            *yv = s * (acc + self.mu[r] * qsum as f32);
         }
     }
 
@@ -381,9 +693,15 @@ pub fn xnor_popcnt_gemm(x: &BitMatrix, w: &BitMatrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::QuantizedActs;
     use crate::quant::arb::arb_quantize;
     use crate::util::proptest::{assert_close, check};
     use crate::util::rng::Rng;
+    use crate::util::simd;
+
+    fn eng_at(layer: &BinaryLayer, level: Level) -> BinaryGemmEngine {
+        BinaryGemmEngine::with_ctx(layer, &EngineCtx::current().with_level(level))
+    }
 
     #[test]
     fn matches_dequant_gemm_property() {
@@ -396,7 +714,7 @@ mod tests {
             },
             |(x, w)| {
                 let q = BinaryLayer::quantize(w);
-                let eng = BinaryGemmEngine::new(&q);
+                let eng = BinaryGemmEngine::with_ctx(&q, &EngineCtx::current());
                 let fast = eng.forward(x);
                 let slow = x.matmul_bt(&q.reconstruct());
                 assert_close(&fast.data, &slow.data, 1e-3, 1e-3)
@@ -410,7 +728,7 @@ mod tests {
         let w = Matrix::randn(12, 96, &mut rng);
         let groups: Vec<u16> = (0..96).map(|c| (c / 32) as u16).collect();
         let q = arb_quantize(&w, &groups, 3, 6);
-        let eng = BinaryGemmEngine::new(&q);
+        let eng = BinaryGemmEngine::with_ctx(&q, &EngineCtx::current());
         let x = Matrix::randn(4, 96, &mut rng);
         let fast = eng.forward(&x);
         let slow = x.matmul_bt(&q.reconstruct());
@@ -447,7 +765,7 @@ mod tests {
         let mut rng = Rng::new(8);
         let w = Matrix::randn(96, 256, &mut rng);
         let q = BinaryLayer::quantize(&w);
-        let eng = BinaryGemmEngine::new(&q);
+        let eng = BinaryGemmEngine::with_ctx(&q, &EngineCtx::current());
         let x = Matrix::randn(8, 256, &mut rng);
         let y = eng.forward(&x);
         for i in 0..x.rows {
@@ -465,11 +783,76 @@ mod tests {
         let w = Matrix::randn(24, 193, &mut rng); // cols % 64 == 1
         let q = BinaryLayer::quantize(&w);
         let x = Matrix::randn(3, 193, &mut rng);
-        let oracle = BinaryGemmEngine::new_with_level(&q, Level::Scalar).forward(&x);
+        let oracle = eng_at(&q, Level::Scalar).forward(&x);
         for l in simd::supported_levels() {
-            let y = BinaryGemmEngine::new_with_level(&q, l).forward(&x);
+            let y = eng_at(&q, l).forward(&x);
             assert_close(&y.data, &oracle.data, 1e-4, 1e-4)
                 .unwrap_or_else(|e| panic!("{l:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn i8_lanes_bit_identical_across_levels() {
+        // The integer lane's contract is *bit*-identity (not a ULP
+        // bound): i32 adds are exact at any association. Awkward width
+        // on purpose (193 % 64 == 1 exercises the partial-word tail).
+        let mut rng = Rng::new(31);
+        let w = Matrix::randn(24, 193, &mut rng);
+        let q = BinaryLayer::quantize(&w);
+        let x = Matrix::randn(3, 193, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let oracle = eng_at(&q, Level::Scalar).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        for l in simd::supported_levels() {
+            let y = eng_at(&q, l).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+            assert_eq!(y.data, oracle.data, "{l:?}");
+        }
+    }
+
+    #[test]
+    fn i8_forward_matches_f32_forward_on_dequantized_rows() {
+        // Semantics check: the integer path must equal the f32 path fed
+        // the *dequantized* codes, up to f32 epilogue rounding.
+        let mut rng = Rng::new(32);
+        let w = Matrix::randn(16, 127, &mut rng);
+        let q = BinaryLayer::quantize(&w);
+        let eng = BinaryGemmEngine::with_ctx(&q, &EngineCtx::current());
+        let x = Matrix::randn(4, 127, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let yi = eng.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        let yf = eng.forward(&qa.dequantize());
+        assert_close(&yi.data, &yf.data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn grouped_i8_matches_dequant_reference() {
+        // Grouped scales through the integer path, including an empty
+        // group's zero contribution.
+        let mut rng = Rng::new(33);
+        let w = Matrix::randn(12, 96, &mut rng);
+        let groups: Vec<u16> = (0..96).map(|c| (c / 32) as u16).collect();
+        let q = arb_quantize(&w, &groups, 3, 6);
+        let eng = BinaryGemmEngine::with_ctx(&q, &EngineCtx::current());
+        let x = Matrix::randn(4, 96, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let yi = eng.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        let slow = qa.dequantize().matmul_bt(&q.reconstruct());
+        assert_close(&yi.data, &slow.data, 1e-2, 1e-2).unwrap();
+    }
+
+    #[test]
+    fn i8_batched_forward_bitwise_matches_per_row() {
+        // The batch split must not change a bit of the integer path.
+        let mut rng = Rng::new(34);
+        let w = Matrix::randn(96, 256, &mut rng);
+        let q = BinaryLayer::quantize(&w);
+        let eng = BinaryGemmEngine::with_ctx(&q, &EngineCtx::current());
+        let x = Matrix::randn(8, 256, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let y = eng.forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        for i in 0..qa.rows {
+            let qrow = &qa.q[i * qa.cols..(i + 1) * qa.cols];
+            let yi = eng.forward_i8(qrow, &qa.scales[i..i + 1], 1, qa.cols);
+            assert_eq!(y.row(i), yi.row(0), "row {i}");
         }
     }
 
@@ -477,7 +860,7 @@ mod tests {
     fn resident_bytes_equal_sum_of_owned_buffers() {
         let mut rng = Rng::new(4);
         let w = Matrix::randn(64, 128, &mut rng);
-        let eng = BinaryGemmEngine::new(&BinaryLayer::quantize(&w));
+        let eng = BinaryGemmEngine::with_ctx(&BinaryLayer::quantize(&w), &EngineCtx::current());
         // 64 rows x 2 words x 8 bytes + f32 scales + 1 group mask row.
         assert_eq!(eng.resident_bytes(), 64 * 2 * 8 + 2 * 64 * 4 + 2 * 8);
     }

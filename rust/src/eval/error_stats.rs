@@ -5,6 +5,38 @@
 use crate::model::transformer::{Capture, CaptureSite};
 use crate::model::Transformer;
 use crate::tensor::stats::{summarize, Summary};
+use crate::tensor::Matrix;
+
+/// Divergence between two same-shaped logit matrices: the accuracy
+/// gate for the integer compute path (DESIGN.md §12) compares the
+/// W1A8 lane against the f32 sim-quant reference with these numbers.
+#[derive(Debug, Clone, Copy)]
+pub struct Divergence {
+    /// max_i |a_i - b_i|
+    pub max_abs: f64,
+    /// mean_i |a_i - b_i|
+    pub mean_abs: f64,
+    /// ||a - b||_2 / ||b||_2 (b is the reference)
+    pub rel: f64,
+}
+
+/// Element-wise divergence of `a` (candidate) from `b` (reference).
+pub fn logit_divergence(a: &Matrix, b: &Matrix) -> Divergence {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "logit_divergence: shape mismatch");
+    let mut max_abs = 0f64;
+    let mut sum_abs = 0f64;
+    for (&x, &y) in a.data.iter().zip(&b.data) {
+        let d = (x as f64 - y as f64).abs();
+        max_abs = max_abs.max(d);
+        sum_abs += d;
+    }
+    Divergence {
+        max_abs,
+        mean_abs: sum_abs / a.data.len().max(1) as f64,
+        // rel_error's first argument is the norm denominator.
+        rel: crate::tensor::stats::rel_error(&b.data, &a.data),
+    }
+}
 
 /// Per-(layer, site) activation summary: the raw activations the site
 /// produces and, when the consuming linear carries a transformation,
@@ -81,6 +113,22 @@ mod tests {
         assert_eq!(stats.len(), 2 * 4);
         assert!(stats.iter().all(|s| s.raw.max_abs.is_finite()));
         assert!(stats.iter().all(|s| s.transformed.is_none())); // fp model
+    }
+
+    #[test]
+    fn logit_divergence_reports_known_perturbation() {
+        let b = Matrix { rows: 2, cols: 2, data: vec![1.0, -2.0, 3.0, -4.0] };
+        let zero = logit_divergence(&b, &b);
+        assert_eq!(zero.max_abs, 0.0);
+        assert_eq!(zero.mean_abs, 0.0);
+        assert_eq!(zero.rel, 0.0);
+        let mut a = b.clone();
+        a.data[2] += 0.5;
+        let d = logit_divergence(&a, &b);
+        assert!((d.max_abs - 0.5).abs() < 1e-9);
+        assert!((d.mean_abs - 0.125).abs() < 1e-9);
+        let want_rel = 0.5 / (30.0f64).sqrt(); // ||b|| = sqrt(1+4+9+16)
+        assert!((d.rel - want_rel).abs() < 1e-7, "rel {}", d.rel);
     }
 
     #[test]

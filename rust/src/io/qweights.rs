@@ -213,7 +213,9 @@ fn read_act_quant(r: &mut dyn Read) -> Result<Option<ActQuant>> {
         bail!("act-quant: implausible channel count {n}");
     }
     let scale = wire::r_f32s(r, n)?;
-    Ok(Some(ActQuant { bits, scale }))
+    // Enforce the ActQuant invariant on untrusted wire data: bits=16
+    // with scales would otherwise silently quantize.
+    ActQuant::checked(bits, scale).map(Some).map_err(|e| anyhow::anyhow!("act-quant: {e}"))
 }
 
 /// Load quantized linears into a model previously built from the

@@ -5,7 +5,7 @@
 //! btc-llm quantize  [--model tinylm_m] [--method btc] [--bits 0.8] [--out m.qlm]
 //! btc-llm eval      [--model tinylm_m] [--method btc] [--bits 0.8] [--tokens 4096] [--zeroshot]
 //! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N] [--kv-bits B]
-//!                   [--listen ADDR] [--smoke] [--synthetic]
+//!                   [--act-bits B] [--listen ADDR] [--smoke] [--synthetic]
 //!                   [--tuning-file tuning.toml] [--autotune]
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
@@ -127,6 +127,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.kv_bits = btc_llm::quant::kvquant::KvQuantConfig::sanitize_bits(
         args.get_usize("kv-bits", cfg.kv_bits as usize) as u32,
     );
+    // CLI override for engine-boundary activation quantization:
+    // `--act-bits 8` arms the per-row W1A8 integer lanes; 0 or >= 16
+    // (the default) keeps activations f32. Same clamp convention as
+    // --kv-bits.
+    cfg.act_bits = btc_llm::quant::kvquant::KvQuantConfig::sanitize_bits(
+        args.get_usize("act-bits", cfg.act_bits as usize) as u32,
+    );
     if let Some(addr) = args.get("listen") {
         addr.parse::<std::net::SocketAddr>()
             .map_err(|e| anyhow::anyhow!("--listen {addr}: {e}"))?;
@@ -190,6 +197,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => other,
     };
     let mut qcfg = registry::get_with_fallback_bits(spec, Some(cfg.bits))?;
+    // Serving quantizes weights here; activation width is the serve
+    // knob (`[serve] act_bits` / `--act-bits`), calibrated per-row at
+    // run time by the engines, so the pipeline's calibration pass
+    // stays off.
     qcfg.act_bits = 16;
     info!("quantizing {} for serving ({})", cfg.model, cfg.backend);
     let qm = quantize_model(&raw, &corpus_bytes, &qcfg)?;
@@ -200,8 +211,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let server = Server::try_start_with_opts(qm.model, ServerOptions::from(&cfg))
         .map_err(|e| anyhow::anyhow!("start server: {e}"))?;
     info!(
-        "serving with {} kernel thread(s), simd={} gather_tile={} par_min_work={} prefill_chunk={}",
+        "serving with {} kernel thread(s), act_bits={} simd={} gather_tile={} par_min_work={} \
+         prefill_chunk={}",
         server.threads,
+        cfg.act_bits,
         btc_llm::util::simd::active().name(),
         btc_llm::util::autotune::gather_tile(),
         btc_llm::util::parallel::par_min_work(),

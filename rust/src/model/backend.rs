@@ -22,7 +22,7 @@ use std::sync::{Arc, OnceLock, RwLock};
 
 use anyhow::Result;
 
-use crate::engine::ComputeEngine;
+use crate::engine::{ComputeEngine, EngineCtx};
 use crate::io::wire;
 use crate::quant::codebook::BinaryCodebook;
 use crate::tensor::Matrix;
@@ -85,6 +85,17 @@ pub trait WeightBackend: std::fmt::Debug + Send + Sync {
     /// caller falls back to a cached dense reconstruction.
     fn make_engine(&self) -> Option<Box<dyn ComputeEngine>> {
         None
+    }
+
+    /// Like [`make_engine`] (`WeightBackend::make_engine`) but with an
+    /// explicit [`EngineCtx`] (dispatch level, gather tile, activation
+    /// quantization). The default ignores the ctx and delegates to
+    /// `make_engine`, so third-party backends written against the old
+    /// hook keep working unchanged; built-in backends override this
+    /// one and route `make_engine` through it.
+    fn make_engine_with(&self, ctx: &EngineCtx) -> Option<Box<dyn ComputeEngine>> {
+        let _ = ctx;
+        self.make_engine()
     }
 
     /// The shared binary codebook this backend references, if any

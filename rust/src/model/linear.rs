@@ -5,17 +5,22 @@
 //!
 //! `forward` order: optional input transformation `x → xT` (the
 //! learnable transformation of §4.2, applied online via Kronecker
-//! factors) → optional activation quantization (Table 3d) → the
-//! backend GEMM.
+//! factors) → activation quantization → the backend GEMM. With a
+//! prepared integer-capable engine and `act_bits <= 8`, activation
+//! quantization is *real*: rows become per-row int8 codes once and the
+//! engine contracts them in i32 (W1A8, DESIGN.md §12). Otherwise the
+//! per-channel [`ActQuant`] simulates quantization in f32 — that
+//! sim-quant path is the accuracy reference for the integer lanes.
 //!
 //! For evaluation a reconstructed dense weight can be cached
 //! (`cache_dense`) — numerically identical to the engine paths (the
 //! engines are tested for exact agreement) but faster on the tiny-model
 //! eval grid. Serving/latency benches run the real engines, prepared
-//! from the backend via [`WeightBackend::make_engine`].
+//! from the backend via [`WeightBackend::make_engine_with`] with an
+//! [`EngineCtx`] carrying the dispatch level, gather tile and act-quant.
 
 use super::backend::WeightBackend;
-use crate::engine::ComputeEngine;
+use crate::engine::{Activations, ComputeEngine, EngineCtx, QuantizedActs};
 use crate::quant::actquant::ActQuant;
 use crate::quant::transform::Transform;
 use crate::tensor::Matrix;
@@ -67,9 +72,18 @@ impl Linear {
 
     /// Prepare the real serving engine for the backend (sign-GEMM for
     /// binary, LUT-GEMM for codebook; backends without a native engine
-    /// fall back to a dense cache).
+    /// fall back to a dense cache) using the process-current
+    /// [`EngineCtx`] plus this linear's act-quant.
     pub fn prepare_engine(&mut self) {
-        self.engine = match self.backend.make_engine() {
+        self.prepare_engine_with(&EngineCtx::current());
+    }
+
+    /// Prepare with an explicit [`EngineCtx`]; the linear's own
+    /// act-quant is layered onto the ctx so the backend sees the full
+    /// construction context.
+    pub fn prepare_engine_with(&mut self, ctx: &EngineCtx) {
+        let ctx = ctx.clone().with_act_quant(self.act_quant.clone());
+        self.engine = match self.backend.make_engine_with(&ctx) {
             Some(e) => Engine::Prepared(e),
             None => Engine::DenseCache(self.backend.reconstruct()),
         };
@@ -83,19 +97,52 @@ impl Linear {
         }
     }
 
+    /// The integer-path activation width: `Some(bits)` when a prepared
+    /// engine will consume per-row int8 codes (act-quant configured at
+    /// `bits <= 8`), `None` when forward runs the f32 sim-quant path.
+    pub fn int_bits(&self) -> Option<u32> {
+        match (&self.engine, &self.act_quant) {
+            (Engine::Prepared(_), Some(aq)) if aq.bits <= 8 => Some(aq.bits),
+            _ => None,
+        }
+    }
+
     /// y = f(x): transform → act-quant → GEMM. x: (m, in) -> (m, out).
+    ///
+    /// With a prepared engine and `act_bits <= 8` the rows are
+    /// quantized to per-row int8 *once* and handed to the engine's
+    /// integer lane; otherwise the per-channel [`ActQuant`] sim-quant
+    /// runs in f32 (the accuracy reference).
     pub fn forward(&self, x: &Matrix) -> Matrix {
         let mut xt = match &self.transform {
             Some(t) => t.apply(x),
             None => x.clone(),
         };
+        if let (Some(bits), Engine::Prepared(e)) = (self.int_bits(), &self.engine) {
+            let qa = QuantizedActs::quantize(&xt, bits);
+            return e.forward(&qa.as_acts());
+        }
         if let Some(aq) = &self.act_quant {
             aq.apply(&mut xt);
         }
         match &self.engine {
             Engine::DenseCache(w) => xt.matmul_bt(w),
-            Engine::Prepared(e) => e.forward(&xt),
+            Engine::Prepared(e) => e.forward(&Activations::F32(&xt)),
             Engine::None => self.backend.matvec(&xt),
+        }
+    }
+
+    /// Forward from activations already quantized by the caller — the
+    /// quantize-once seam: `transformer.rs` quantizes a block input a
+    /// single time and feeds every linear in the site group (q/k/v,
+    /// gate/up) the same codes. The caller is responsible for having
+    /// applied this linear's transform first; engines without an
+    /// integer lane (and the dense cache) consume the dequantized rows.
+    pub fn forward_quantized(&self, qa: &QuantizedActs) -> Matrix {
+        match &self.engine {
+            Engine::Prepared(e) => e.forward(&qa.as_acts()),
+            Engine::DenseCache(w) => qa.dequantize().matmul_bt(w),
+            Engine::None => self.backend.matvec(&qa.dequantize()),
         }
     }
 
@@ -166,6 +213,53 @@ mod tests {
         let y = lin.forward(&x);
         // Output must be the quantized x (identity weight), not x.
         assert!(y.sub(&x).fro2() > 0.0);
+    }
+
+    #[test]
+    fn int_path_engages_only_with_prepared_engine_and_low_bits() {
+        let mut r = Rng::new(7);
+        let w = Matrix::randn(12, 32, &mut r);
+        let x = Matrix::randn(4, 32, &mut r);
+        let mut lin = Linear::new(Box::new(BinaryLayer::quantize(&w)));
+        lin.act_quant = Some(ActQuant::calibrate(&x, 8));
+        assert!(lin.int_bits().is_none(), "no engine prepared yet");
+        lin.prepare_engine();
+        assert_eq!(lin.int_bits(), Some(8));
+        lin.act_quant = Some(ActQuant::identity());
+        assert!(lin.int_bits().is_none(), "16-bit identity must stay f32");
+        lin.act_quant = None;
+        assert!(lin.int_bits().is_none());
+    }
+
+    #[test]
+    fn int_path_close_to_f32_engine_path() {
+        // W1A8 through the integer lane vs the same engine fed f32:
+        // per-row 8-bit dynamic quantization error only.
+        let mut r = Rng::new(8);
+        let w = Matrix::randn(24, 64, &mut r);
+        let x = Matrix::randn(3, 64, &mut r);
+        let mut lin = Linear::new(Box::new(BinaryLayer::quantize(&w)));
+        lin.prepare_engine();
+        let y_f32 = lin.forward(&x);
+        lin.act_quant = Some(ActQuant::calibrate(&x, 8));
+        lin.prepare_engine();
+        assert_eq!(lin.int_bits(), Some(8));
+        let y_int = lin.forward(&x);
+        assert_close(&y_int.data, &y_f32.data, 5e-2, 1e-1).unwrap();
+    }
+
+    #[test]
+    fn forward_quantized_bitwise_matches_internal_quantize() {
+        // The quantize-once seam must be a pure refactor of forward:
+        // same codes in, same bits out.
+        let mut r = Rng::new(9);
+        let w = Matrix::randn(12, 32, &mut r);
+        let x = Matrix::randn(4, 32, &mut r);
+        let mut lin = Linear::new(Box::new(BinaryLayer::quantize(&w)));
+        lin.act_quant = Some(ActQuant::calibrate(&x, 8));
+        lin.prepare_engine();
+        let qa = crate::engine::QuantizedActs::quantize(&x, 8);
+        assert_eq!(lin.forward(&x).data, lin.forward_quantized(&qa).data);
     }
 
     #[test]

@@ -9,7 +9,9 @@ use anyhow::Result;
 use super::kvcache::{GatherScratch, KvCache, KvChunk, KvPool, PagedKvCache, PoolConfig};
 use super::linear::Linear;
 use super::rope::Rope;
+use crate::engine::QuantizedActs;
 use crate::io::weights::{ModelConfig, RawModel};
+use crate::quant::transform::Transform;
 use crate::tensor::Matrix;
 
 /// Where calibration activations are captured (inputs of the 7 linears).
@@ -74,9 +76,81 @@ pub struct Block {
     pub wgate: Linear,
     pub wup: Linear,
     pub wdown: Linear,
+    /// Quantize-once flags, refreshed whenever engines are
+    /// (re)prepared: `Some(bits)` means the site group's shared input
+    /// is quantized to per-row int8 a single time per forward and all
+    /// member engines consume the same codes.
+    qkv_share: Option<u32>,
+    ffn_share: Option<u32>,
+}
+
+/// By-value transform equality: two linears can share one transformed
+/// input iff their transforms compute the same function.
+fn transform_eq(a: &Option<Transform>, b: &Option<Transform>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => x.sigma == y.sigma && x.p1 == y.p1 && x.p2 == y.p2,
+        _ => false,
+    }
+}
+
+/// `Some(bits)` when every linear in a site group runs the integer
+/// path at the same width behind the same (by-value) transform — the
+/// precondition for quantizing their shared input once.
+fn share_bits(lins: &[&Linear]) -> Option<u32> {
+    let bits = lins[0].int_bits()?;
+    for l in &lins[1..] {
+        if l.int_bits() != Some(bits) || !transform_eq(&lins[0].transform, &l.transform) {
+            return None;
+        }
+    }
+    Some(bits)
 }
 
 impl Block {
+    /// Recompute the quantize-once share flags. Called whenever the
+    /// engine set changes; any member off the int path clears its
+    /// group's flag, so the flags can never go stale-positive.
+    fn refresh_share_flags(&mut self) {
+        self.qkv_share = share_bits(&[&self.wq, &self.wk, &self.wv]);
+        self.ffn_share = share_bits(&[&self.wgate, &self.wup]);
+    }
+
+    /// Attention projections from the shared ln1 output. With the
+    /// quantize-once flag set, the common input is transformed and
+    /// quantized to per-row int8 a single time and all three engines
+    /// consume the same codes — bit-identical to three independent
+    /// `forward` calls (same transform values, same quantizer) but
+    /// paying transform + quantization once instead of three times.
+    pub fn qkv_forward(&self, h: &Matrix) -> (Matrix, Matrix, Matrix) {
+        if let Some(bits) = self.qkv_share {
+            let ht = match &self.wq.transform {
+                Some(t) => t.apply(h),
+                None => h.clone(),
+            };
+            let qa = QuantizedActs::quantize(&ht, bits);
+            return (
+                self.wq.forward_quantized(&qa),
+                self.wk.forward_quantized(&qa),
+                self.wv.forward_quantized(&qa),
+            );
+        }
+        (self.wq.forward(h), self.wk.forward(h), self.wv.forward(h))
+    }
+
+    /// Gate/up projections from the shared ln2 output (same
+    /// quantize-once contract as [`Self::qkv_forward`]).
+    pub fn ffn_forward(&self, h2: &Matrix) -> (Matrix, Matrix) {
+        if let Some(bits) = self.ffn_share {
+            let ht = match &self.wgate.transform {
+                Some(t) => t.apply(h2),
+                None => h2.clone(),
+            };
+            let qa = QuantizedActs::quantize(&ht, bits);
+            return (self.wgate.forward_quantized(&qa), self.wup.forward_quantized(&qa));
+        }
+        (self.wgate.forward(h2), self.wup.forward(h2))
+    }
     /// Iterate the 7 linears with their names (pipeline, accounting).
     pub fn linears_mut(&mut self) -> [(&'static str, &mut Linear); 7] {
         [
@@ -344,6 +418,8 @@ impl Transformer {
                 wgate: Linear::dense(raw.matrix(&format!("l{i}.wgate"))?),
                 wup: Linear::dense(raw.matrix(&format!("l{i}.wup"))?),
                 wdown: Linear::dense(raw.matrix(&format!("l{i}.wdown"))?),
+                qkv_share: None,
+                ffn_share: None,
             });
         }
         let rope = Rope::new(cfg.head_dim(), cfg.max_seq.max(512), cfg.rope_theta);
@@ -377,9 +453,7 @@ impl Transformer {
             if let Some(c) = capture.as_deref_mut() {
                 c.push(li, CaptureSite::Ln1Out, &h);
             }
-            let mut q = block.wq.forward(&h); // (s, d)
-            let mut k = block.wk.forward(&h); // (s, kv_dim)
-            let v = block.wv.forward(&h); // (s, kv_dim)
+            let (mut q, mut k, v) = block.qkv_forward(&h); // (s, d), 2x (s, kv_dim)
             for pos in 0..s {
                 let qrow = q.row_mut(pos);
                 for hh in 0..nh {
@@ -419,8 +493,7 @@ impl Transformer {
             if let Some(c) = capture.as_deref_mut() {
                 c.push(li, CaptureSite::Ln2Out, &h2);
             }
-            let g = block.wgate.forward(&h2);
-            let u = block.wup.forward(&h2);
+            let (g, u) = block.ffn_forward(&h2);
             let mut mid = g;
             for (mv, uv) in mid.data.iter_mut().zip(u.data.iter()) {
                 *mv = silu(*mv) * uv;
@@ -491,9 +564,9 @@ impl Transformer {
         }
         for (li, block) in self.blocks.iter().enumerate() {
             let h = rmsnorm_rows(&x, &block.ln1);
-            let mut q = block.wq.forward(&h);
-            let mut k = block.wk.forward(&h);
-            let v = block.wv.forward(&h);
+            // Quantize-once: the B stacked rows are quantized a single
+            // time and shared across q/k/v (and gate/up below).
+            let (mut q, mut k, v) = block.qkv_forward(&h);
             for b in 0..bsz {
                 let qrow = q.row_mut(b);
                 for hh in 0..nh {
@@ -523,8 +596,7 @@ impl Transformer {
             }
             x = x.add(&block.wo.forward(&attn_out));
             let h2 = rmsnorm_rows(&x, &block.ln2);
-            let g = block.wgate.forward(&h2);
-            let u = block.wup.forward(&h2);
+            let (g, u) = block.ffn_forward(&h2);
             let mut mid = g;
             for (mv, uv) in mid.data.iter_mut().zip(u.data.iter()) {
                 *mv = silu(*mv) * uv;
@@ -614,9 +686,8 @@ impl Transformer {
         }
         for (li, block) in self.blocks.iter().enumerate() {
             let h = rmsnorm_rows(&x, &block.ln1);
-            let mut q = block.wq.forward(&h); // (s, d)
-            let mut k = block.wk.forward(&h); // (s, kv_dim)
-            let v = block.wv.forward(&h); // (s, kv_dim)
+            // Quantize-once: all s prompt rows quantize a single time.
+            let (mut q, mut k, v) = block.qkv_forward(&h);
             for i in 0..s {
                 let qrow = q.row_mut(i);
                 for hh in 0..nh {
@@ -636,8 +707,7 @@ impl Transformer {
             kv.attend_rows(&mut scratch, 0, li, base, &q, nh, rep, hd, scale, &mut attn_out);
             x = x.add(&block.wo.forward(&attn_out));
             let h2 = rmsnorm_rows(&x, &block.ln2);
-            let g = block.wgate.forward(&h2);
-            let u = block.wup.forward(&h2);
+            let (g, u) = block.ffn_forward(&h2);
             let mut mid = g;
             for (mv, uv) in mid.data.iter_mut().zip(u.data.iter()) {
                 *mv = silu(*mv) * uv;
@@ -650,12 +720,14 @@ impl Transformer {
         Some(last)
     }
 
-    /// Prepare serving engines on every linear.
+    /// Prepare serving engines on every linear, then refresh the
+    /// per-block quantize-once flags.
     pub fn prepare_engines(&mut self) {
         for b in self.blocks.iter_mut() {
             for (_, lin) in b.linears_mut() {
                 lin.prepare_engine();
             }
+            b.refresh_share_flags();
         }
     }
 
@@ -666,15 +738,19 @@ impl Transformer {
             for (_, lin) in b.linears_mut() {
                 lin.ensure_engine();
             }
+            b.refresh_share_flags();
         }
     }
 
-    /// Cache dense reconstructions on every linear (fast eval).
+    /// Cache dense reconstructions on every linear (fast eval). This
+    /// is the f32 sim-quant reference path, so the int-path share
+    /// flags clear along with it.
     pub fn cache_dense_all(&mut self) {
         for b in self.blocks.iter_mut() {
             for (_, lin) in b.linears_mut() {
                 lin.cache_dense();
             }
+            b.refresh_share_flags();
         }
     }
 
@@ -950,6 +1026,48 @@ pub mod tests {
         assert_eq!(la.data, lb.data);
         pool.release(&mut a);
         pool.release(&mut b);
+    }
+
+    #[test]
+    fn quantize_once_flags_set_and_bit_identical_to_per_linear() {
+        use crate::quant::actquant::ActQuant;
+        use crate::quant::binarize::BinaryLayer;
+        let mut m = tiny_model(30, 4);
+        let mut rng = Rng::new(31);
+        let calib = Matrix::randn(32, m.cfg.d_model, &mut rng);
+        for b in m.blocks.iter_mut() {
+            for (name, lin) in b.linears_mut() {
+                let w = lin.backend.reconstruct();
+                let mut nl = Linear::new(Box::new(BinaryLayer::quantize(&w)));
+                // wdown's input is d_ff-wide; keep it f32 so the test
+                // also covers a mixed block.
+                if name != "wdown" {
+                    nl.act_quant = Some(ActQuant::calibrate(&calib, 8));
+                }
+                *lin = nl;
+            }
+        }
+        m.prepare_engines();
+        assert_eq!(m.blocks[0].qkv_share, Some(8));
+        assert_eq!(m.blocks[0].ffn_share, Some(8));
+        let tokens = [1u16, 5, 9, 22];
+        let shared = m.forward(&tokens);
+        let mut cache_s = m.new_cache(8);
+        let shared_pre = m.prefill(&tokens, &mut cache_s);
+        // Clearing the flags forces per-linear transform+quantize; the
+        // outputs must not change by a single bit.
+        for b in m.blocks.iter_mut() {
+            b.qkv_share = None;
+            b.ffn_share = None;
+        }
+        assert_eq!(m.forward(&tokens).data, shared.data);
+        let mut cache_u = m.new_cache(8);
+        assert_eq!(m.prefill(&tokens, &mut cache_u), shared_pre);
+        // And the reference path clears the flags on its own.
+        m.prepare_engines();
+        m.cache_dense_all();
+        assert!(m.blocks[0].qkv_share.is_none());
+        assert!(m.blocks[0].ffn_share.is_none());
     }
 
     #[test]

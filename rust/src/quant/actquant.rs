@@ -6,6 +6,14 @@
 use crate::tensor::Matrix;
 
 /// Per-channel symmetric activation quantizer.
+///
+/// Invariant: `bits >= 16` implies an empty `scale` (identity). The
+/// fields stay public for construction-site ergonomics and wire
+/// compatibility, so [`ActQuant::apply`] asserts the invariant rather
+/// than trusting it — a hand-built `{ bits: 16, scale: vec![...] }`
+/// used to *silently quantize* at a width the config said was off.
+/// Use [`ActQuant::checked`] to validate untrusted (deserialized)
+/// values up front.
 #[derive(Debug, Clone)]
 pub struct ActQuant {
     pub bits: u32,
@@ -17,6 +25,22 @@ impl ActQuant {
     /// A16 = no activation quantization.
     pub fn identity() -> ActQuant {
         ActQuant { bits: 16, scale: Vec::new() }
+    }
+
+    /// Validate a hand-built / deserialized quantizer against the
+    /// type's invariant: `bits` in `2..=16`, and `bits >= 16` only as
+    /// the scale-free identity.
+    pub fn checked(bits: u32, scale: Vec<f32>) -> Result<ActQuant, String> {
+        if !(2..=16).contains(&bits) {
+            return Err(format!("act-quant bits must be in 2..=16, got {bits}"));
+        }
+        if bits >= 16 && !scale.is_empty() {
+            return Err(format!(
+                "act-quant bits=16 is identity but carries {} scales",
+                scale.len()
+            ));
+        }
+        Ok(ActQuant { bits, scale })
     }
 
     /// Calibrate per-channel scales from sample activations
@@ -39,6 +63,12 @@ impl ActQuant {
 
     /// Quantize-dequantize a batch of activations in place.
     pub fn apply(&self, x: &mut Matrix) {
+        assert!(
+            self.bits < 16 || self.scale.is_empty(),
+            "ActQuant invariant violated: bits={} (identity) with {} scales would silently quantize",
+            self.bits,
+            self.scale.len()
+        );
         if self.scale.is_empty() {
             return;
         }
@@ -132,5 +162,25 @@ mod tests {
         let x = Matrix::from_vec(2, 1, vec![-4.0, 2.0]);
         let q = ActQuant::calibrate(&x, 8);
         assert!((q.scale[0] - 4.0 / 127.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "ActQuant invariant violated")]
+    fn sixteen_bit_with_scales_panics_instead_of_silently_quantizing() {
+        // Regression: { bits: 16, scale: [...] } used to run the
+        // quantize loop with a 15-bit qmax even though bits=16 means
+        // "off" everywhere else.
+        let q = ActQuant { bits: 16, scale: vec![0.5, 0.5] };
+        let mut x = Matrix::from_vec(1, 2, vec![0.3, -0.7]);
+        q.apply(&mut x);
+    }
+
+    #[test]
+    fn checked_enforces_invariant() {
+        assert!(ActQuant::checked(8, vec![1.0; 4]).is_ok());
+        assert!(ActQuant::checked(16, Vec::new()).is_ok());
+        assert!(ActQuant::checked(16, vec![1.0]).is_err());
+        assert!(ActQuant::checked(1, Vec::new()).is_err());
+        assert!(ActQuant::checked(17, Vec::new()).is_err());
     }
 }

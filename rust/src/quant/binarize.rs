@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use super::quantizer::{QuantOutcome, Quantizer, SiteId};
 use crate::bitops::BitMatrix;
-use crate::engine::{BinaryGemmEngine, ComputeEngine};
+use crate::engine::{BinaryGemmEngine, ComputeEngine, EngineCtx};
 use crate::io::wire;
 use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
@@ -154,7 +154,11 @@ impl WeightBackend for BinaryLayer {
     }
 
     fn make_engine(&self) -> Option<Box<dyn ComputeEngine>> {
-        Some(Box::new(BinaryGemmEngine::new(self)))
+        self.make_engine_with(&EngineCtx::current())
+    }
+
+    fn make_engine_with(&self, ctx: &EngineCtx) -> Option<Box<dyn ComputeEngine>> {
+        Some(Box::new(BinaryGemmEngine::with_ctx(self, ctx)))
     }
 
     fn write_payload(&self, w: &mut dyn Write) -> Result<()> {

@@ -26,7 +26,7 @@ use anyhow::{bail, Context, Result};
 
 use super::binarize::BinaryLayer;
 use crate::bitops::PackedPlane;
-use crate::engine::{ComputeEngine, LutGemmEngine};
+use crate::engine::{ComputeEngine, EngineCtx, LutGemmEngine};
 use crate::io::wire;
 use crate::model::{BackendIoCtx, WeightBackend};
 use crate::tensor::Matrix;
@@ -486,7 +486,11 @@ impl WeightBackend for CodebookLayer {
     }
 
     fn make_engine(&self) -> Option<Box<dyn ComputeEngine>> {
-        LutGemmEngine::try_new(self).map(|e| Box::new(e) as Box<dyn ComputeEngine>)
+        self.make_engine_with(&EngineCtx::current())
+    }
+
+    fn make_engine_with(&self, ctx: &EngineCtx) -> Option<Box<dyn ComputeEngine>> {
+        LutGemmEngine::try_with_ctx(self, ctx).map(|e| Box::new(e) as Box<dyn ComputeEngine>)
     }
 
     fn shared_codebook(&self) -> Option<Arc<BinaryCodebook>> {

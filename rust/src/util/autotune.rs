@@ -226,7 +226,11 @@ pub fn run_with(budget_ms: u64, quick: bool) -> AutotuneReport {
     let x1 = Matrix::randn(1, n, &mut rng);
     let mut best_tile = (GATHER_TILE_DEFAULT, f64::INFINITY);
     for tile in [8usize, 16, 32, 48, 64] {
-        let eng = LutGemmEngine::try_new_with(&cl, level, tile).expect("fixture is block-aligned");
+        let eng = LutGemmEngine::try_with_ctx(
+            &cl,
+            &crate::engine::EngineCtx::current().with_level(level).with_gather_tile(tile),
+        )
+        .expect("fixture is block-aligned");
         let st = bench_for_ms("autotune_gather", budget_ms, 3, || {
             black_box(eng.forward(&x1));
         });

@@ -194,6 +194,80 @@ fn quantized_kv_stays_close_and_actually_shrinks() {
     fpool.release(&mut fc);
 }
 
+/// A W1A8 model: same deterministic quantization as `lane_model`, but
+/// every linear carries a scale-free 8-bit activation quantizer (the
+/// serve `--act-bits 8` arming) before the engines are prepared, so
+/// the packed lanes take the true integer path.
+fn w1a8_model(cfg: &QuantConfig) -> Transformer {
+    use btc_llm::quant::actquant::ActQuant;
+    let (raw, corpus) = tiny_raw_model(21);
+    let mut qm = quantize_model(&raw, &corpus, cfg).expect("quantize fixture");
+    for b in qm.model.blocks.iter_mut() {
+        for (_, lin) in b.linears_mut() {
+            lin.act_quant = Some(ActQuant { bits: 8, scale: Vec::new() });
+        }
+    }
+    qm.model.prepare_engines();
+    qm.model
+}
+
+#[test]
+fn w1a8_int_path_logits_within_bound_of_f32_reference() {
+    // Accuracy contract of the integer compute path (DESIGN.md §12):
+    // per backend lane, W1A8 logits stay within a documented relative
+    // divergence of the f32 path over the same weights. The fp16 lane
+    // has no packed engine, so its scale-free quantizer is a no-op and
+    // the logits are bit-identical.
+    use btc_llm::eval::error_stats::logit_divergence;
+    let mut rng = Rng::new(9);
+    for (label, cfg) in lanes() {
+        let reference = lane_model(&cfg);
+        let int_model = w1a8_model(&cfg);
+        for trial in 0..3 {
+            let len = 2 + rng.below(8);
+            let prompt: Vec<u16> = (0..len).map(|_| rng.below(128) as u16).collect();
+            let a = int_model.forward(&prompt);
+            let r = reference.forward(&prompt);
+            assert!(a.data.iter().all(|v| v.is_finite()), "{label} trial {trial}: finite");
+            let d = logit_divergence(&a, &r);
+            if label == "fp16" {
+                assert_eq!(d.max_abs, 0.0, "{label} trial {trial}: dense path must be exact");
+            } else {
+                assert!(
+                    d.rel < 0.08,
+                    "{label} trial {trial}: rel divergence {:.5} (max_abs {:.5}, mean_abs {:.5})",
+                    d.rel,
+                    d.max_abs,
+                    d.mean_abs
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn w1a8_perplexity_within_bound_of_f32_reference() {
+    // The end-to-end accuracy gate: on the hermetic corpus, W1A8
+    // perplexity stays within 15% of the f32 sim-quant path, per lane
+    // (the bound documented in DESIGN.md §12; fp16 is exact).
+    use btc_llm::eval::perplexity::perplexity;
+    let (_, corpus) = tiny_raw_model(21);
+    let tokens: Vec<u16> = corpus.iter().map(|&b| (b as u16) % 128).collect();
+    for (label, cfg) in lanes() {
+        let reference = lane_model(&cfg);
+        let int_model = w1a8_model(&cfg);
+        let ppl_f = perplexity(&reference, &tokens, 16, 192);
+        let ppl_i = perplexity(&int_model, &tokens, 16, 192);
+        assert!(ppl_i.is_finite() && ppl_i > 1.0, "{label}: ppl {ppl_i}");
+        let rel = (ppl_i / ppl_f - 1.0).abs();
+        if label == "fp16" {
+            assert_eq!(ppl_i.to_bits(), ppl_f.to_bits(), "{label}: dense path must be exact");
+        } else {
+            assert!(rel < 0.15, "{label}: W1A8 ppl {ppl_i} vs f32 {ppl_f} ({:.1}% off)", rel * 100.0);
+        }
+    }
+}
+
 fn argmax(xs: &[f32]) -> u16 {
     xs.iter()
         .enumerate()

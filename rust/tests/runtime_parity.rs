@@ -4,7 +4,7 @@
 //! artifacts.
 
 use btc_llm::bitops::BitMatrix;
-use btc_llm::engine::BinaryGemmEngine;
+use btc_llm::engine::{BinaryGemmEngine, EngineCtx};
 use btc_llm::io::load_model;
 use btc_llm::model::Transformer;
 use btc_llm::quant::binarize::BinaryLayer;
@@ -51,7 +51,7 @@ fn binary_gemm_kernel_parity() {
         col_group: vec![0; n],
         n_groups: 1,
     };
-    let rust = BinaryGemmEngine::new(&layer).forward(&x);
+    let rust = BinaryGemmEngine::with_ctx(&layer, &EngineCtx::current()).forward(&x);
     assert_close(&rust.data, &jax, 1e-3, 1e-3).unwrap();
 }
 

@@ -11,14 +11,19 @@
 //!   bound asserted (not just "close");
 //! - `Level::Scalar` is bitwise the historical pre-SIMD code path.
 //!
-//! Everything here uses the explicit `*_with_level` APIs — the
-//! process-global dispatch level is never mutated, so this suite is
-//! race-free under the parallel test harness.
+//! - the i8×sign integer lanes (`forward_i8`) are **bit-identical**
+//!   across levels: integer addition is exactly associative, so any
+//!   vectorization order yields the same i32 accumulator, and the f32
+//!   epilogue is evaluated in one fixed order.
+//!
+//! Everything here pins the level through explicit `EngineCtx`
+//! constructors — the process-global dispatch level is never mutated,
+//! so this suite is race-free under the parallel test harness.
 
 use btc_llm::bitops::hamming::{hamming_words_padded_with_level, hamming_words_with_level};
 use btc_llm::bitops::pack::pack_signs;
 use btc_llm::engine::lutgemm::{GATHER_TILE_DEFAULT, GATHER_TILE_MAX};
-use btc_llm::engine::{BinaryGemmEngine, LutGemmEngine};
+use btc_llm::engine::{BinaryGemmEngine, EngineCtx, LutGemmEngine, QuantizedActs};
 use btc_llm::quant::arb::arb_quantize;
 use btc_llm::quant::binarize::BinaryLayer;
 use btc_llm::quant::codebook::{collect_vectors, BinaryCodebook, CodebookLayer};
@@ -34,6 +39,14 @@ const AWKWARD_COLS: &[usize] = &[1, 63, 64, 65, 127, 128, 193, 512];
 
 fn sign_vec(r: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| r.sign()).collect()
+}
+
+fn bin_eng(layer: &BinaryLayer, l: Level) -> BinaryGemmEngine {
+    BinaryGemmEngine::with_ctx(layer, &EngineCtx::current().with_level(l))
+}
+
+fn lut_eng(layer: &CodebookLayer, l: Level, tile: usize) -> Option<LutGemmEngine> {
+    LutGemmEngine::try_with_ctx(layer, &EngineCtx::current().with_level(l).with_gather_tile(tile))
 }
 
 #[test]
@@ -111,7 +124,7 @@ fn sign_gemm_lanes_ulp_bounded_vs_f64_reference() {
         let x = Matrix::randn(3, cols, &mut rng);
         let (exact, mags) = sign_gemm_f64(&q, &x);
         for l in simd::supported_levels() {
-            let eng = BinaryGemmEngine::new_with_level(&q, l);
+            let eng = bin_eng(&q, l);
             let y = eng.forward(&x);
             for (i, (&got, (&want, &mag))) in
                 y.data.iter().zip(exact.iter().zip(&mags)).enumerate()
@@ -142,9 +155,9 @@ fn grouped_sign_gemm_with_empty_group_every_lane() {
     let q = arb_quantize(&w, &groups, 4, 3);
     let x = Matrix::randn(2, cols, &mut rng);
     let wd = q.reconstruct();
-    let oracle = BinaryGemmEngine::new_with_level(&q, Level::Scalar).forward(&x);
+    let oracle = bin_eng(&q, Level::Scalar).forward(&x);
     for l in simd::supported_levels() {
-        let y = BinaryGemmEngine::new_with_level(&q, l).forward(&x);
+        let y = bin_eng(&q, l).forward(&x);
         for i in 0..x.rows {
             for rr in 0..w.rows {
                 let want: f64 = (0..cols)
@@ -180,12 +193,12 @@ fn lut_gather_bit_identical_across_levels_and_tiles() {
     for &(rows, cols, v, c) in &shapes {
         let cl = codebook_layer(&mut rng, rows, cols, v, c);
         let x = Matrix::randn(2, cols, &mut rng);
-        let oracle = LutGemmEngine::try_new_with(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+        let oracle = lut_eng(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
             .expect("block aligned")
             .forward(&x);
         for l in simd::supported_levels() {
             for tile in [1usize, 3, GATHER_TILE_DEFAULT, GATHER_TILE_MAX] {
-                let y = LutGemmEngine::try_new_with(&cl, l, tile).unwrap().forward(&x);
+                let y = lut_eng(&cl, l, tile).unwrap().forward(&x);
                 assert_eq!(y.data, oracle.data, "{rows}x{cols} v={v} {l:?} tile={tile}");
             }
         }
@@ -205,14 +218,102 @@ fn grouped_lut_gather_bit_identical_with_empty_group() {
     let (cb, assign, _) = BinaryCodebook::build(&vectors, 8, 12, 3);
     let cl = CodebookLayer::from_assignments(&bl, Arc::new(cb), assign);
     let x = Matrix::randn(1, cols, &mut rng);
-    let oracle = LutGemmEngine::try_new_with(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+    let oracle = lut_eng(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
         .expect("block aligned")
         .forward(&x);
     for l in simd::supported_levels() {
         for tile in [1usize, 5, GATHER_TILE_MAX] {
-            let y = LutGemmEngine::try_new_with(&cl, l, tile).unwrap().forward(&x);
+            let y = lut_eng(&cl, l, tile).unwrap().forward(&x);
             assert_eq!(y.data, oracle.data, "{l:?} tile={tile}");
         }
+    }
+}
+
+#[test]
+fn sign_gemm_i8_lanes_bit_identical_vs_scalar_oracle() {
+    // Integer activations: cols % 64 == 1 and == 63 exercise the
+    // partial final bit-word; 193 spans several words. Every lane must
+    // reproduce the scalar i32 walk bit for bit.
+    let mut rng = Rng::new(0x18A8);
+    for &(rows, cols) in &[(9usize, 1usize), (16, 63), (24, 193)] {
+        let w = Matrix::randn(rows, cols, &mut rng);
+        let q = BinaryLayer::quantize(&w);
+        let x = Matrix::randn(3, cols, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let oracle = bin_eng(&q, Level::Scalar).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        for l in simd::supported_levels() {
+            let y = bin_eng(&q, l).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+            assert_eq!(y.data, oracle.data, "{rows}x{cols} {l:?}");
+        }
+    }
+}
+
+#[test]
+fn grouped_sign_gemm_i8_bit_identical_with_empty_group() {
+    // Same empty-group layout as the f32 test above, through the
+    // integer path: per-group i32 sums, alpha applied in the epilogue.
+    let mut rng = Rng::new(0x6E8);
+    let cols = 96usize;
+    let w = Matrix::randn(12, cols, &mut rng);
+    let groups: Vec<u16> = (0..cols).map(|c| if c < 48 { 0 } else { 2 }).collect();
+    let q = arb_quantize(&w, &groups, 4, 3);
+    let x = Matrix::randn(2, cols, &mut rng);
+    let qa = QuantizedActs::quantize(&x, 8);
+    let oracle = bin_eng(&q, Level::Scalar).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+    for l in simd::supported_levels() {
+        let y = bin_eng(&q, l).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        assert_eq!(y.data, oracle.data, "{l:?}");
+    }
+}
+
+#[test]
+fn sign_gemm_i8_empty_rows_every_lane() {
+    let mut rng = Rng::new(0x0E0);
+    let w = Matrix::randn(6, 65, &mut rng);
+    let q = BinaryLayer::quantize(&w);
+    let qa = QuantizedActs::quantize(&Matrix::zeros(0, 65), 8);
+    for l in simd::supported_levels() {
+        let y = bin_eng(&q, l).forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        assert_eq!((y.rows, y.cols), (0, 6), "{l:?}");
+        assert!(y.data.is_empty(), "{l:?}");
+    }
+}
+
+#[test]
+fn lut_gather_i8_bit_identical_across_levels_and_tiles() {
+    // Same shape sweep as the f32 gather test, with int8 activations:
+    // the i32 Stage-I/Stage-II tables and the gather accumulate are
+    // exact, so every level × tile combination is bit-identical.
+    let mut rng = Rng::new(0x1A7);
+    let shapes = [(5usize, 21usize, 8usize, 16usize), (70, 64, 16, 40), (130, 48, 8, 64)];
+    for &(rows, cols, v, c) in &shapes {
+        let cl = codebook_layer(&mut rng, rows, cols, v, c);
+        let x = Matrix::randn(2, cols, &mut rng);
+        let qa = QuantizedActs::quantize(&x, 8);
+        let oracle = lut_eng(&cl, Level::Scalar, GATHER_TILE_DEFAULT)
+            .expect("block aligned")
+            .forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        for l in simd::supported_levels() {
+            for tile in [1usize, 3, GATHER_TILE_DEFAULT, GATHER_TILE_MAX] {
+                let y =
+                    lut_eng(&cl, l, tile).unwrap().forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+                assert_eq!(y.data, oracle.data, "{rows}x{cols} v={v} {l:?} tile={tile}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lut_gather_i8_empty_rows_every_lane() {
+    let mut rng = Rng::new(0x1E0);
+    let cl = codebook_layer(&mut rng, 10, 24, 8, 12);
+    let qa = QuantizedActs::quantize(&Matrix::zeros(0, 24), 8);
+    for l in simd::supported_levels() {
+        let y = lut_eng(&cl, l, GATHER_TILE_DEFAULT)
+            .unwrap()
+            .forward_i8(&qa.q, &qa.scales, qa.rows, qa.cols);
+        assert_eq!((y.rows, y.cols), (0, 10), "{l:?}");
+        assert!(y.data.is_empty(), "{l:?}");
     }
 }
 
