@@ -32,9 +32,10 @@ fn spec_for(exp: &str, pct: f64) -> (Vec<&'static str>, Vec<Gate>) {
     match exp {
         "serve" => (
             // `policy`/`tenant` only exist on adversarial-scenario
-            // rows; elsewhere they render as "-" and stay inert in
-            // the row key.
-            vec!["scenario", "backend", "batch", "policy", "tenant", "workload"],
+            // rows and `spec` (on/off) only on spec-scenario rows;
+            // elsewhere they render as "-" and stay inert in the row
+            // key.
+            vec!["scenario", "backend", "batch", "policy", "tenant", "spec", "workload"],
             vec![
                 Gate::higher("tokens_per_s", pct),
                 Gate::lower("p50_ms", pct),
@@ -42,6 +43,12 @@ fn spec_for(exp: &str, pct: f64) -> (Vec<&'static str>, Vec<Gate>) {
                 Gate::lower("itl_p50_ms", pct),
                 Gate::lower("ttft_p95_ms", pct),
                 Gate::lower("itl_p95_ms", pct),
+                // Spec-scenario rows (also `decode_us_per_tok` on the
+                // batch sweep): rows lacking a gated metric are
+                // skipped, so these stay inert elsewhere.
+                Gate::lower("decode_us_per_tok", pct),
+                Gate::higher("accepted_per_round", pct),
+                Gate::higher("spec_speedup_m1", pct),
             ],
         ),
         "fig5" => (

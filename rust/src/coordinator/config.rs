@@ -92,6 +92,17 @@ pub struct ServeConfig {
     /// (`[serve] autotune`) and apply its winners. Applied *after*
     /// `tuning_file`, so it refines a stale file on new hardware.
     pub autotune: bool,
+    /// Path to a QLM1 draft-model artifact (`[serve] draft_model`)
+    /// for speculative decoding; empty = speculation off. The draft
+    /// must share the target's raw checkpoint shape — a mismatch is a
+    /// `ServeError::InvalidConfig` at start, not a mid-round panic.
+    pub draft_model: String,
+    /// Initial speculative draft length per round
+    /// (`[serve] spec_k`; must be >= 1 when `draft_model` is set).
+    pub spec_k: usize,
+    /// Upper bound the adaptive policy may grow a slot's k to
+    /// (`[serve] spec_max_k`; must be >= `spec_k`).
+    pub spec_max_k: usize,
 }
 
 impl Default for ServeConfig {
@@ -123,6 +134,9 @@ impl Default for ServeConfig {
             faults: String::new(),
             tuning_file: String::new(),
             autotune: false,
+            draft_model: String::new(),
+            spec_k: 4,
+            spec_max_k: 8,
         }
     }
 }
@@ -307,7 +321,23 @@ impl ServeConfig {
             faults,
             tuning_file: doc.get_str("serve.tuning_file", &d.tuning_file).to_string(),
             autotune: doc.get_bool("serve.autotune", d.autotune),
+            draft_model: doc.get_str("serve.draft_model", &d.draft_model).to_string(),
+            spec_k: doc.get_int("serve.spec_k", d.spec_k as i64).max(0) as usize,
+            spec_max_k: doc.get_int("serve.spec_max_k", d.spec_max_k as i64).max(0) as usize,
         };
+        // Speculation knobs are validated whenever a draft model is
+        // configured, so a bad file fails at load time.
+        if !cfg.draft_model.is_empty() {
+            if cfg.spec_k == 0 {
+                return Err("[serve] spec_k must be >= 1 when draft_model is set".into());
+            }
+            if cfg.spec_max_k < cfg.spec_k {
+                return Err(format!(
+                    "[serve] spec_max_k {} must be >= spec_k {}",
+                    cfg.spec_max_k, cfg.spec_k
+                ));
+            }
+        }
         // Semantic QoS validation (duplicate/empty ids) lives in
         // QosConfig::validate — run it here so a bad file fails at
         // load, not at Server start.
@@ -449,6 +479,28 @@ mod tests {
         assert_eq!(from_str("[serve]\nact_bits = 1\n").unwrap().act_bits, 2);
         assert_eq!(from_str("[serve]\nact_bits = 12\n").unwrap().act_bits, 8);
         assert_eq!(from_str("[serve]\nact_bits = 0\n").unwrap().act_bits, 16);
+    }
+
+    #[test]
+    fn spec_knobs_parse_and_validate() {
+        // Defaults: speculation off, ready-to-use k values.
+        let c = from_str("").unwrap();
+        assert!(c.draft_model.is_empty());
+        assert_eq!((c.spec_k, c.spec_max_k), (4, 8));
+        let c = from_str(
+            "[serve]\ndraft_model = \"artifacts/tinylm_s.btc0.8.qlm\"\nspec_k = 3\nspec_max_k = 6\n",
+        )
+        .unwrap();
+        assert_eq!(c.draft_model, "artifacts/tinylm_s.btc0.8.qlm");
+        assert_eq!((c.spec_k, c.spec_max_k), (3, 6));
+        // Invalid k values fail at load time — but only when a draft
+        // model is actually configured.
+        let e = from_str("[serve]\ndraft_model = \"d.qlm\"\nspec_k = 0\n").unwrap_err();
+        assert!(e.contains("spec_k"), "{e}");
+        let e =
+            from_str("[serve]\ndraft_model = \"d.qlm\"\nspec_k = 5\nspec_max_k = 2\n").unwrap_err();
+        assert!(e.contains("spec_max_k"), "{e}");
+        assert!(from_str("[serve]\nspec_k = 0\n").is_ok());
     }
 
     #[test]

@@ -100,6 +100,20 @@ pub struct Metrics {
     pub worker_restarts: AtomicU64,
     pub deadline_cancels: AtomicU64,
     pub disconnect_cancels: AtomicU64,
+    /// Speculative decoding (DESIGN.md §13): draft/verify rounds run,
+    /// draft tokens proposed, tokens accepted (agreed prefix + bonus
+    /// token — plain decoding would count 1 per round), and slots
+    /// degraded to plain decoding by a draft/verify fault.
+    pub spec_rounds: AtomicU64,
+    pub spec_drafted: AtomicU64,
+    pub spec_accepted: AtomicU64,
+    pub spec_degraded: AtomicU64,
+    /// Configured initial draft depth k (0 = speculation off).
+    pub spec_k: AtomicU64,
+    /// Draft-model tag for the summary line ("off" until armed).
+    spec_tag: Mutex<String>,
+    /// Accepted tokens per spec round (p50/p95 in `summary()`).
+    spec_accept_per_round: Mutex<Reservoir>,
     latencies_us: Mutex<Reservoir>,
     /// Submit → slot admission, one sample per request.
     queue_wait_us: Mutex<Reservoir>,
@@ -238,6 +252,42 @@ impl Metrics {
     /// A request was reaped because its client went away.
     pub fn record_disconnect_cancel(&self) {
         self.disconnect_cancels.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Speculation armed at server start: draft tag + initial k for
+    /// the startup log / `/metrics` summary.
+    pub fn set_spec(&self, tag: &str, k: usize) {
+        self.spec_k.store(k as u64, Ordering::Relaxed);
+        *self.spec_tag.lock().unwrap() = tag.to_string();
+    }
+
+    /// One draft/verify round: `drafted` tokens proposed, `accepted`
+    /// tokens emitted (agreed prefix + the bonus token).
+    pub fn record_spec_round(&self, drafted: usize, accepted: usize) {
+        self.spec_rounds.fetch_add(1, Ordering::Relaxed);
+        self.spec_drafted.fetch_add(drafted as u64, Ordering::Relaxed);
+        self.spec_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+        self.spec_accept_per_round.lock().unwrap().offer(accepted as u64);
+    }
+
+    /// A slot fell back to plain decoding after a draft/verify fault.
+    pub fn record_spec_degrade(&self) {
+        self.spec_degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accepted-tokens-per-round percentile; 0 before any spec round.
+    pub fn spec_accepted_percentile(&self, p: f64) -> u64 {
+        percentile_of(&self.spec_accept_per_round, p)
+    }
+
+    /// Mean accepted tokens per spec round (plain decoding = 1.0 per
+    /// decode round); 0 before any spec round.
+    pub fn mean_spec_accepted(&self) -> f64 {
+        let r = self.spec_rounds.load(Ordering::Relaxed);
+        if r == 0 {
+            return 0.0;
+        }
+        self.spec_accepted.load(Ordering::Relaxed) as f64 / r as f64
     }
 
     /// Republish the KV pool gauges (scheduler, once per round).
@@ -399,6 +449,15 @@ impl Metrics {
         self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// `spec=` summary token: `off` until armed, else `tag:k=N`.
+    pub fn spec_label(&self) -> String {
+        let k = self.spec_k.load(Ordering::Relaxed);
+        if k == 0 {
+            return "off".to_string();
+        }
+        format!("{}:k={}", self.spec_tag.lock().unwrap(), k)
+    }
+
     pub fn summary(&self) -> String {
         let lat = sorted_clone(&self.latencies_us);
         let ttft = sorted_clone(&self.ttft_us);
@@ -410,7 +469,8 @@ impl Metrics {
              kv_blocks={}/{} kv_blocks_peak={} kv_bytes={} kv_bytes_peak={} kv_quant_blocks={} \
              kv_shared_pos={} kv_defer={}+{} kv_preempt={} panics_caught={} quarantines={} \
              worker_restarts={} deadline_cancels={} disconnect_cancels={} \
-             act_bits={} simd={} gather_tile={} par_min_work={}",
+             spec_rounds={} spec_drafted={} spec_accepted={} spec_acc_p50={} spec_acc_p95={} \
+             spec_degraded={} act_bits={} simd={} spec={} gather_tile={} par_min_work={}",
             self.requests.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
@@ -441,8 +501,15 @@ impl Metrics {
             self.worker_restarts.load(Ordering::Relaxed),
             self.deadline_cancels.load(Ordering::Relaxed),
             self.disconnect_cancels.load(Ordering::Relaxed),
+            self.spec_rounds.load(Ordering::Relaxed),
+            self.spec_drafted.load(Ordering::Relaxed),
+            self.spec_accepted.load(Ordering::Relaxed),
+            self.spec_accepted_percentile(0.5),
+            self.spec_accepted_percentile(0.95),
+            self.spec_degraded.load(Ordering::Relaxed),
             self.act_bits.load(Ordering::Relaxed),
             crate::util::simd::active().name(),
+            self.spec_label(),
             crate::util::autotune::gather_tile(),
             crate::util::parallel::par_min_work(),
         )
@@ -573,6 +640,33 @@ mod tests {
         assert!(s.contains("par_min_work="), "{s}");
         m.act_bits.store(8, Ordering::Relaxed);
         assert!(m.summary().contains("act_bits=8"));
+    }
+
+    #[test]
+    fn spec_counters_reservoir_and_label() {
+        let m = Metrics::new();
+        assert_eq!(m.spec_label(), "off");
+        assert!(m.summary().contains("spec=off"), "{}", m.summary());
+        assert_eq!(m.mean_spec_accepted(), 0.0);
+        m.set_spec("btc-0.8", 4);
+        assert_eq!(m.spec_label(), "btc-0.8:k=4");
+        m.record_spec_round(4, 5);
+        m.record_spec_round(4, 1);
+        m.record_spec_round(2, 3);
+        m.record_spec_degrade();
+        assert_eq!(m.spec_rounds.load(Ordering::Relaxed), 3);
+        assert_eq!(m.spec_drafted.load(Ordering::Relaxed), 10);
+        assert_eq!(m.spec_accepted.load(Ordering::Relaxed), 9);
+        assert_eq!(m.mean_spec_accepted(), 3.0);
+        assert_eq!(m.spec_accepted_percentile(0.5), 3);
+        assert_eq!(m.spec_accepted_percentile(1.0), 5);
+        let s = m.summary();
+        assert!(s.contains("spec=btc-0.8:k=4"), "{s}");
+        assert!(s.contains("spec_rounds=3"), "{s}");
+        assert!(s.contains("spec_drafted=10"), "{s}");
+        assert!(s.contains("spec_accepted=9"), "{s}");
+        assert!(s.contains("spec_acc_p50=3"), "{s}");
+        assert!(s.contains("spec_degraded=1"), "{s}");
     }
 
     #[test]

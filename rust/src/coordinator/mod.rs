@@ -38,6 +38,21 @@
 //! co-traffic — see DESIGN.md §6 for the determinism contract; the
 //! network layer preserves it bit for bit (`rust/tests/serving.rs`).
 //!
+//! **Speculative decoding** (DESIGN.md §13) slots into the scheduler's
+//! round structure: when a [`SpecConfig`] arms a draft model (a
+//! cheaper quantization of the same checkpoint, e.g. btc-0.8 under an
+//! fp16 target), each greedy decode slot drafts up to k tokens on its
+//! own draft KV cache — allocated from the *same* pool, so admission
+//! and preemption accounting stay memory-honest — then verifies all
+//! k+1 positions in one batched target forward, accepting the longest
+//! agreeing prefix. Acceptance is greedy-exact: outputs are
+//! bit-identical to plain decoding, speculation only changes how many
+//! tokens one round yields. Rejection rolls the caches back via
+//! `PagedKvCache::truncate`; per-slot k adapts to the observed
+//! acceptance rate; temperature > 0 requests bypass the whole path. A
+//! draft-model fault degrades the slot to plain decoding (speculation
+//! is an optimization, never a correctness dependency).
+//!
 //! **Fault isolation** (DESIGN.md §10) wraps that pipeline at three
 //! levels. Per request: a panic inside a model call is caught at the
 //! slot boundary — the scheduler replays the decode batch solo to
@@ -68,5 +83,6 @@ pub use net::{NetOptions, NetServer};
 pub use qos::{AdmitPolicy, EvictionKind, EvictionPolicy, QosConfig, TenantSpec};
 pub use scheduler::Scheduler;
 pub use server::{
-    CancelToken, FinishReason, GenRequest, GenResponse, ServeError, Server, ServerOptions, StopSet,
+    CancelToken, FinishReason, GenRequest, GenResponse, ServeError, Server, ServerOptions,
+    SpecConfig, StopSet,
 };

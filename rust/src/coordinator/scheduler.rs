@@ -37,6 +37,20 @@
 //! panicking. Prompts that share a token prefix share refcounted pool
 //! blocks.
 //!
+//! **Speculative decoding (DESIGN.md §13).** When [`Scheduler::set_spec`]
+//! arms a draft model, a greedy slot's decode round may be replaced
+//! by a draft/verify round: the (sub-1-bit) draft proposes up to
+//! `spec_k` tokens on its own cache in the same pool, ONE batched
+//! target forward scores all k+1 positions, and the longest agreeing
+//! prefix plus the bonus token from the first disagreeing row are
+//! accepted — bit-identical to plain greedy decoding, because row i
+//! of the verify forward computes exactly the logits sequential
+//! decoding would (prefill ≡ decode). Rejected positions roll back
+//! via [`KvPool::truncate`]; draft blocks count toward the slot's
+//! eviction footprint; a draft-model fault degrades the slot to
+//! plain decoding (never quarantine) — speculation is an
+//! optimization, never a correctness dependency.
+//!
 //! **Determinism contract:** with greedy sampling (temperature 0) a
 //! request's output tokens are bit-identical regardless of what else
 //! is in flight — including across preemption/re-prefill (prefill ≡
@@ -97,10 +111,34 @@ struct Slot {
     ttft: Duration,
     /// When the previous token was accepted (inter-token gaps).
     last_token_at: Option<Instant>,
+    /// Draft-model KV cache for speculative decoding (lazily created
+    /// at the slot's first spec round; `None` when speculation is off
+    /// or degraded). Lives in the same block pool as `cache` — its
+    /// blocks count toward this slot's eviction footprint.
+    draft: Option<PagedKvCache>,
+    /// Per-slot draft depth (adaptive: halves on full rejection,
+    /// grows on full-acceptance streaks; 0 = not yet initialized).
+    spec_k: usize,
+    /// Consecutive fully-accepted spec rounds (adaptive-k growth).
+    spec_streak: u32,
+    /// Cleared when a draft-model fault degrades this slot to plain
+    /// decoding for the rest of its lifetime.
+    spec_on: bool,
 }
 
 fn view(s: &Slot) -> SlotView {
-    SlotView { admitted: s.admitted, priority: s.priority, kv_blocks: s.cache.blocks() }
+    let kv_blocks = s.cache.blocks() + s.draft.as_ref().map_or(0, |d| d.blocks());
+    SlotView { admitted: s.admitted, priority: s.priority, kv_blocks }
+}
+
+/// Speculative-decoding state shared by every slot: the draft model
+/// plus the adaptive-k bounds (DESIGN.md §13).
+struct SpecState {
+    draft: Transformer,
+    /// Initial per-slot draft depth.
+    k0: usize,
+    /// Adaptive-k ceiling.
+    max_k: usize,
 }
 
 /// Continuous-batching scheduler. [`Server`](super::server::Server)
@@ -121,6 +159,9 @@ pub struct Scheduler {
     qos: Arc<QosState>,
     /// Preemption victim selection under pool pressure.
     evict: Box<dyn EvictionPolicy>,
+    /// Speculative decoding (draft model + adaptive-k bounds); `None`
+    /// means plain decoding only.
+    spec: Option<SpecState>,
     admit_seq: u64,
     /// The queue head is currently parked on pool memory — dedupes
     /// the admission-deferral counter to one event per parked
@@ -185,11 +226,27 @@ impl Scheduler {
             pending,
             qos,
             evict,
+            spec: None,
             admit_seq: 0,
             head_deferred: false,
         };
         s.publish_kv_metrics();
         s
+    }
+
+    /// Arm speculative decoding: greedy slots draft up to `k` tokens
+    /// per round with `draft` (per-slot adaptive, up to `max_k`, both
+    /// clamped to at least 1/`k`) and verify them in one batched
+    /// target forward. The draft must share the target's
+    /// [`ModelConfig`](crate::io::weights::ModelConfig) — the two
+    /// caches live in one pool whose block geometry is the target's.
+    /// [`Server`](super::server::Server) validates this (and the
+    /// draft artifact itself) at start time; direct users get a
+    /// debug assertion.
+    pub fn set_spec(&mut self, draft: Transformer, k: usize, max_k: usize) {
+        debug_assert_eq!(draft.cfg, self.model.cfg, "draft/target ModelConfig mismatch");
+        let k = k.max(1);
+        self.spec = Some(SpecState { draft, k0: k, max_k: max_k.max(k) });
     }
 
     /// No requests in flight or pending.
@@ -333,6 +390,10 @@ impl Scheduler {
             queue_wait,
             ttft: Duration::ZERO,
             last_token_at: None,
+            draft: None,
+            spec_k: self.spec.as_ref().map_or(0, |s| s.k0),
+            spec_streak: 0,
+            spec_on: true,
         });
         self.metrics.record_in_flight(self.slots.len());
     }
@@ -478,7 +539,7 @@ impl Scheduler {
             let my_key = self.evict.key(&view(&self.slots[i]));
             let mut victim: Option<(usize, (u64, u64))> = None;
             for (j, s) in self.slots.iter().enumerate() {
-                if j == i || s.cache.blocks() == 0 || matches!(s.state, SlotState::Done(_)) {
+                if j == i || view(s).kv_blocks == 0 || matches!(s.state, SlotState::Done(_)) {
                     continue;
                 }
                 let k = self.evict.key(&view(s));
@@ -501,7 +562,17 @@ impl Scheduler {
     fn preempt(&mut self, j: usize) {
         self.metrics.record_kv_preemption();
         self.pool.release(&mut self.slots[j].cache);
+        self.release_draft(j);
         self.slots[j].state = SlotState::Prefill { consumed: 0 };
+    }
+
+    /// Return slot `j`'s draft cache (if any) to the pool. Safe to
+    /// call repeatedly; the slot re-warms a fresh draft cache at its
+    /// next spec round (unless degraded).
+    fn release_draft(&mut self, j: usize) {
+        if let Some(mut d) = self.slots[j].draft.take() {
+            self.pool.release(&mut d);
+        }
     }
 
     /// Advance prefilling slots within a shared per-round budget of
@@ -600,16 +671,34 @@ impl Scheduler {
     }
 
     /// One fused decode forward over every decoding slot that has (or
-    /// can get) room for one more position.
+    /// can get) room for one more position. Slots eligible for
+    /// speculation run a draft/verify round instead and skip the
+    /// fused batch; a spec round that refuses (no headroom, no
+    /// memory, draft fault) falls back to the plain path below.
     fn decode_round(&mut self, rng: &mut Rng) {
         let mut ready: Vec<usize> = Vec::new();
         for i in 0..self.slots.len() {
             if !matches!(self.slots[i].state, SlotState::Decode { .. }) {
                 continue;
             }
+            if self.spec_eligible(i) && self.spec_slot_round(i, rng) {
+                continue;
+            }
             if self.ensure_capacity_for(i, 1) {
                 ready.push(i);
             } else {
+                // A stuck slot must never be wedged by its *own*
+                // draft cache: drop it (speculation re-warms when
+                // memory frees up) and retry before deferring —
+                // preserves the progress guarantee that the
+                // minimum-key slot can always finish alone.
+                if self.slots[i].draft.as_ref().is_some_and(|d| d.blocks() > 0) {
+                    self.release_draft(i);
+                    if self.ensure_capacity_for(i, 1) {
+                        ready.push(i);
+                        continue;
+                    }
+                }
                 self.metrics.record_kv_round_deferral();
             }
         }
@@ -665,6 +754,192 @@ impl Scheduler {
                 self.replay_solo(&ready, &toks, rng);
             }
         }
+    }
+
+    /// Speculation applies only to greedy slots (temperature > 0
+    /// bypasses it — acceptance would change the sampling
+    /// distribution) that have not been degraded by a draft fault.
+    fn spec_eligible(&self, i: usize) -> bool {
+        self.spec.is_some() && self.slots[i].spec_on && self.slots[i].req.temperature <= 0.0
+    }
+
+    /// One speculative draft/verify round for slot `i` (DESIGN.md
+    /// §13). The draft model catches its cache up to the target's
+    /// frontier (ending with the pending token) and proposes up to
+    /// `spec_k` greedy tokens; ONE batched target forward over
+    /// `[pending, d1..dk]` scores all k+1 positions; the longest
+    /// agreeing prefix plus the bonus token from the first
+    /// disagreeing (or final) row are accepted — each exactly the
+    /// token plain greedy decoding would produce — and both caches
+    /// are truncated back to the accepted frontier.
+    ///
+    /// Returns `true` when the slot advanced (a successful round
+    /// always accepts at least the bonus token, so speculation never
+    /// falls behind plain decoding). `false` means "use the plain
+    /// fused decode this round": not enough generation headroom, no
+    /// free pool capacity (speculation never preempts a neighbor),
+    /// or a panic — a draft fault degrades the slot to plain
+    /// decoding for the rest of its lifetime; a target fault during
+    /// verify rolls back and lets the plain path attribute it (solo
+    /// replay → quarantine if genuinely poisoned).
+    fn spec_slot_round(&mut self, i: usize, rng: &mut Rng) -> bool {
+        let SlotState::Decode { next: t0 } = self.slots[i].state else {
+            return false;
+        };
+        let max_k = match &self.spec {
+            Some(s) => s.max_k,
+            None => return false,
+        };
+        if self.slots[i].spec_k == 0 {
+            // Slot was admitted before `set_spec` armed speculation.
+            self.slots[i].spec_k = self.spec.as_ref().expect("checked above").k0;
+        }
+        let produced = self.slots[i].tokens.len() - self.slots[i].req.prompt.len();
+        let remaining = self.slots[i].max_new - produced;
+        if remaining < 2 {
+            // The round could accept at most one token — plain
+            // decoding does that without the drafting overhead.
+            return false;
+        }
+        let k_eff = self.slots[i].spec_k.min(remaining - 1);
+        let l = self.slots[i].cache.len();
+        debug_assert_eq!(l + 1, self.slots[i].tokens.len(), "Decode slot cache invariant");
+        if self.slots[i].draft.is_none() {
+            self.slots[i].draft = Some(self.pool.new_cache());
+        }
+        let t_round = Instant::now();
+
+        let Scheduler { model, spec, slots, pool, metrics, .. } = self;
+        let spec_state = spec.as_ref().expect("speculation armed");
+        let slot = &mut slots[i];
+        let dcache = slot.draft.as_mut().expect("created above");
+        // Reserve BOTH appends up front, preempting nobody: the
+        // draft catches up `gap` positions (>= 1 — its cache is
+        // always truncated strictly behind the pending token) plus
+        // k_eff - 1 drafted ones; the target verifies k_eff + 1. On
+        // refusal, reclaim the uncommitted tail reservations and
+        // fall back to plain decoding (which may preempt under its
+        // own policy).
+        let gap = l + 1 - dcache.len();
+        if !pool.ensure_append(dcache, gap + (k_eff - 1))
+            || !pool.ensure_append(&mut slot.cache, k_eff + 1)
+        {
+            let (dl, tl) = (dcache.len(), slot.cache.len());
+            pool.truncate(dcache, dl);
+            pool.truncate(&mut slot.cache, tl);
+            return false;
+        }
+
+        // Draft phase, contained: a draft-model panic costs this
+        // slot its speculation, never its correctness (and never a
+        // quarantine — the target model is healthy).
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::fault_point!("spec.draft");
+            let mut drafts: Vec<u16> = Vec::with_capacity(k_eff);
+            let catchup = &slot.tokens[dcache.len()..l + 1];
+            let logits = spec_state.draft.prefill_paged(catchup, dcache, pool);
+            drafts.push(sample(&logits, 0.0, rng));
+            while drafts.len() < k_eff {
+                let t = *drafts.last().expect("seeded above");
+                let lg = spec_state
+                    .draft
+                    .decode_batch_paged(&[t], std::slice::from_mut(dcache), pool);
+                drafts.push(sample(lg.row(0), 0.0, rng));
+            }
+            drafts
+        }));
+        let drafts = match run {
+            Ok(d) => d,
+            Err(_) => {
+                metrics.record_panic_caught();
+                metrics.record_spec_degrade();
+                if let Some(mut d) = slot.draft.take() {
+                    pool.release(&mut d);
+                }
+                slot.spec_on = false;
+                return false;
+            }
+        };
+
+        // Verify: one batched target forward over all k+1 positions.
+        let mut fed = Vec::with_capacity(k_eff + 1);
+        fed.push(t0);
+        fed.extend_from_slice(&drafts);
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.verify_paged(&fed, &mut slot.cache, pool)
+        }));
+        let logits = match run {
+            Ok(lg) => lg,
+            Err(_) => {
+                // The forward advances `len` only at the very end, so
+                // the cache is consistent at the round's start;
+                // truncating there also reclaims the reservation.
+                metrics.record_panic_caught();
+                metrics.record_spec_degrade();
+                pool.truncate(&mut slot.cache, l);
+                if let Some(mut d) = slot.draft.take() {
+                    pool.release(&mut d);
+                }
+                slot.spec_on = false;
+                return false;
+            }
+        };
+
+        // Greedy acceptance: row r of the verify logits is the
+        // target's distribution after consuming fed[0..=r], so each
+        // accepted token is bit-identical to sequential decoding
+        // (pinned in rust/tests/speculation.rs). Stop conditions
+        // apply per token inside accept(), exactly as the plain path.
+        let mut greedy = Vec::with_capacity(fed.len());
+        for r in 0..fed.len() {
+            greedy.push(sample(logits.row(r), 0.0, rng));
+        }
+        let mut agree = 0;
+        while agree < k_eff && drafts[agree] == greedy[agree] {
+            agree += 1;
+        }
+        let mut emitted = 0;
+        for &g in &greedy[..=agree] {
+            self.accept(i, g);
+            emitted += 1;
+            if matches!(self.slots[i].state, SlotState::Done(_)) {
+                break;
+            }
+        }
+
+        // Roll both caches back to the accepted frontier: the target
+        // keeps `emitted` of its k_eff + 1 new positions; the draft
+        // keeps positions whose K/V belongs to accepted tokens
+        // (position l holds the pending token, l + j holds draft j
+        // for j <= agree) and always stays strictly behind the new
+        // pending token so the next catch-up feeds at least one row.
+        let new_len = l + emitted;
+        let Scheduler { slots, pool, metrics, .. } = self;
+        let slot = &mut slots[i];
+        pool.truncate(&mut slot.cache, new_len);
+        if let Some(d) = slot.draft.as_mut() {
+            let valid = (l + 1 + agree.min(k_eff - 1)).min(new_len).min(d.len());
+            pool.truncate(d, valid);
+        }
+        metrics.record_spec_round(k_eff, emitted);
+        metrics.record_decode(emitted, t_round.elapsed().as_micros() as u64);
+        // Adaptive depth: two consecutive fully-accepted rounds grow
+        // k by one (up to max_k); a fully-rejected round halves it
+        // (floor 1) so an adversarial draft costs ~2 extra forwards
+        // per round at worst, not k.
+        if agree == k_eff {
+            slot.spec_streak += 1;
+            if slot.spec_streak >= 2 {
+                slot.spec_k = (slot.spec_k + 1).min(max_k);
+                slot.spec_streak = 0;
+            }
+        } else {
+            slot.spec_streak = 0;
+            if agree == 0 {
+                slot.spec_k = (slot.spec_k / 2).max(1);
+            }
+        }
+        true
     }
 
     /// Isolate the culprit(s) of a fused-decode panic: replay each
@@ -749,6 +1024,9 @@ impl Scheduler {
             unreachable!("finish() called on unfinished slot");
         };
         self.pool.release(&mut slot.cache);
+        if let Some(mut d) = slot.draft.take() {
+            self.pool.release(&mut d);
+        }
         let produced = slot.tokens.len() - slot.req.prompt.len();
         let latency = slot.req.submitted.elapsed();
         let seq = self.metrics.record_completion(produced, latency.as_micros() as u64);
@@ -772,6 +1050,9 @@ impl Scheduler {
     fn housekeep(&mut self) {
         for i in 0..self.slots.len() {
             self.pool.quantize_cold(&self.slots[i].cache);
+            if let Some(d) = &self.slots[i].draft {
+                self.pool.quantize_cold(d);
+            }
         }
         self.publish_kv_metrics();
     }
@@ -1546,5 +1827,156 @@ mod tests {
         );
         assert!(sched.is_idle());
         assert_eq!(sched.pool().blocks_in_use(), 0, "cancelled slots return their blocks");
+    }
+
+    // -- speculative decoding -----------------------------------------------
+
+    #[test]
+    fn spec_with_agreeing_draft_matches_solo_and_returns_blocks() {
+        // Draft == target: every draft token agrees, so each round
+        // accepts k+1 tokens, outputs stay bit-identical to the plain
+        // solo runs, and every block (target AND draft caches) comes
+        // back to the pool.
+        let m = tiny_model(5, 4);
+        let jobs: Vec<(Vec<u16>, usize)> = vec![(vec![6, 1, 9], 12), (vec![2, 3], 9)];
+        let solo = solo_tokens(&m, &jobs);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m.clone(), metrics.clone(), 2, 64);
+        sched.set_spec(m, 3, 6);
+        let mut rng = Rng::new(7);
+        let rxs: Vec<_> = jobs
+            .iter()
+            .map(|(p, n)| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request(p.clone(), *n, tx));
+                rx
+            })
+            .collect();
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000, "speculating scheduler must drain");
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.try_recv().expect("response");
+            assert_eq!(r.tokens, solo[i], "request {i} diverged under speculation");
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        let spec_rounds = metrics.spec_rounds.load(Relaxed);
+        let accepted = metrics.spec_accepted.load(Relaxed);
+        assert!(spec_rounds > 0, "speculation actually ran");
+        assert!(
+            accepted >= 2 * spec_rounds,
+            "an identical draft must average well over 2 tokens/round \
+             ({accepted} over {spec_rounds} rounds)"
+        );
+        assert!(metrics.spec_drafted.load(Relaxed) >= spec_rounds);
+        assert_eq!(sched.pool().blocks_in_use(), 0, "draft caches released");
+    }
+
+    #[test]
+    fn spec_under_pool_pressure_falls_back_and_stays_deterministic() {
+        // The pool-exhaustion workload with speculation armed: spec
+        // rounds that cannot reserve memory refuse (never preempt a
+        // neighbor) and fall back to plain decoding; preemption of a
+        // speculating slot releases its draft cache too. Outputs
+        // still match the plain solo runs and nothing leaks.
+        let m = tiny_model(12, 4);
+        let jobs: Vec<(Vec<u16>, usize)> = (0..4u16)
+            .map(|k| ((0..6).map(|j| (j * 3 + k * 7 + 1) as u16 % 30).collect(), 10))
+            .collect();
+        let solo = solo_tokens(&m, &jobs);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::with_pool(m.clone(), metrics.clone(), 4, 8, tight_pool(4, 8));
+        sched.set_spec(m, 4, 8);
+        let mut rng = Rng::new(7);
+        let rxs: Vec<_> = jobs
+            .iter()
+            .map(|(p, max_new)| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                sched.admit(request(p.clone(), *max_new, tx));
+                rx
+            })
+            .collect();
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 5000, "pressured speculating pool must drain");
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.try_recv().expect("response despite pool pressure");
+            assert_eq!(r.tokens, solo[i], "request {i} diverged under pressure + speculation");
+        }
+        assert_eq!(sched.pool().blocks_in_use(), 0, "all blocks returned");
+        assert!(
+            sched.pool().peak_blocks() <= 8,
+            "budget respected with draft caches: peak {}",
+            sched.pool().peak_blocks()
+        );
+    }
+
+    #[test]
+    fn spec_adaptive_k_grows_on_streaks_and_respects_max_new() {
+        // An identical draft fully accepts every round, so spec_k
+        // grows toward max_k; the generation cap is still exact.
+        let m = tiny_model(9, 4);
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m.clone(), metrics.clone(), 1, 64);
+        sched.set_spec(m, 2, 8);
+        let mut rng = Rng::new(7);
+        let (tx, rx) = std::sync::mpsc::channel();
+        sched.admit(request(vec![4, 2, 7], 31, tx));
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000);
+        }
+        let r = rx.try_recv().expect("response");
+        assert_eq!(r.tokens.len() - r.prompt_len, 31, "exact generation cap under spec");
+        assert_eq!(r.finish, FinishReason::Length);
+        use std::sync::atomic::Ordering::Relaxed;
+        // Full acceptance at growing k: strictly fewer rounds than
+        // tokens proves multi-token acceptance; the k gauge moved.
+        assert!(metrics.spec_rounds.load(Relaxed) * 2 < 31);
+        assert!(metrics.spec_accepted.load(Relaxed) >= 24);
+    }
+
+    #[test]
+    fn spec_respects_stop_tokens_mid_round() {
+        // Learn the 3rd greedy token, declare it EOS, then run with
+        // speculation: generation must stop at exactly that token
+        // even when the spec round had more accepted tokens queued.
+        let m = tiny_model(4, 4);
+        let jobs: Vec<(Vec<u16>, usize)> = vec![(vec![3, 1], 8)];
+        let solo = solo_tokens(&m, &jobs);
+        let gen = &solo[0][2..]; // prompt_len 2
+        // First generated token with no earlier occurrence, so the
+        // EOS fires at exactly that position.
+        let pos = (1..gen.len())
+            .find(|&p| !gen[..p].contains(&gen[p]))
+            .expect("some non-repeating generated token");
+        let eos = gen[pos];
+        let metrics = Arc::new(Metrics::new());
+        let mut sched = Scheduler::new(m.clone(), metrics, 1, 64);
+        sched.set_spec(m, 4, 8);
+        let mut rng = Rng::new(7);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut req = request(vec![3, 1], 8, tx);
+        req.stop = StopSet::none().with_eos(eos);
+        sched.admit(req);
+        let mut rounds = 0;
+        while !sched.is_idle() {
+            sched.step(&mut rng);
+            rounds += 1;
+            assert!(rounds < 1000);
+        }
+        let r = rx.try_recv().expect("response");
+        assert_eq!(r.finish, FinishReason::Eos);
+        assert_eq!(r.tokens.len() - r.prompt_len, pos + 1, "stops at the EOS token exactly");
+        assert_eq!(&r.tokens[r.prompt_len..], &gen[..=pos]);
+        assert_eq!(sched.pool().blocks_in_use(), 0);
     }
 }

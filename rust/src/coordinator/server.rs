@@ -37,6 +37,7 @@
 //! forever. Dropping the `Server` equals `shutdown()`.
 
 use std::fmt;
+use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -237,6 +238,61 @@ impl fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
+/// Speculative decoding: a second (cheaper) model drafts tokens that
+/// the target model verifies in one batched forward per round. Greedy
+/// requests stay **bit-identical** to plain decoding; temperature > 0
+/// requests bypass speculation. See DESIGN.md §13.
+#[derive(Clone)]
+pub struct SpecConfig {
+    /// The draft model. Must share the target's `ModelConfig`
+    /// (typically the same weights at a lower bit-width, e.g. a
+    /// btc-0.8 draft under an fp16 or btc-1.11 target).
+    pub draft: Transformer,
+    /// Short tag for the startup log and `/metrics` `spec=` field
+    /// (the QLM1 file stem when loaded from disk).
+    pub tag: String,
+    /// Initial per-slot draft length (tokens drafted per round).
+    pub k: usize,
+    /// Upper bound the adaptive policy may grow a slot's k to.
+    pub max_k: usize,
+}
+
+impl fmt::Debug for SpecConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("SpecConfig")
+            .field("tag", &self.tag)
+            .field("k", &self.k)
+            .field("max_k", &self.max_k)
+            .finish_non_exhaustive()
+    }
+}
+
+impl SpecConfig {
+    pub fn new(draft: Transformer, tag: &str, k: usize, max_k: usize) -> SpecConfig {
+        SpecConfig { draft, tag: tag.to_string(), k, max_k }
+    }
+
+    /// Load a draft model from a QLM1 artifact. `raw` must be the same
+    /// raw checkpoint the target was quantized from: the QLM1 header
+    /// self-validates against the model shape, so a corrupt file or a
+    /// vocab/d_model mismatch surfaces here as
+    /// [`ServeError::InvalidConfig`] — at start time, not mid-round.
+    pub fn load(
+        path: &Path,
+        raw: &crate::io::weights::RawModel,
+        k: usize,
+        max_k: usize,
+    ) -> Result<SpecConfig, ServeError> {
+        let mut draft = Transformer::from_raw(raw)
+            .map_err(|e| ServeError::InvalidConfig(format!("draft_model: {e}")))?;
+        crate::io::qweights::load_into(path, &mut draft).map_err(|e| {
+            ServeError::InvalidConfig(format!("draft_model {}: {e:#}", path.display()))
+        })?;
+        let tag = path.file_stem().and_then(|s| s.to_str()).unwrap_or("draft").to_string();
+        Ok(SpecConfig { draft, tag, k, max_k })
+    }
+}
+
 /// Tunables for [`Server::start_with_opts`].
 #[derive(Debug, Clone)]
 pub struct ServerOptions {
@@ -290,6 +346,12 @@ pub struct ServerOptions {
     /// Fault-injection plan installed in the worker thread at start
     /// (`util::faultpoint` grammar). Empty = disabled.
     pub faults: String,
+    /// Speculative decoding (draft model + k); `None` = off. Validated
+    /// at start: `k >= 1`, `max_k >= k`, draft/target config match,
+    /// and `kv_bits` must stay 16 (cold-KV quantization timing differs
+    /// between speculative and plain schedules, which would break the
+    /// bit-identity contract).
+    pub spec: Option<SpecConfig>,
 }
 
 impl Default for ServerOptions {
@@ -310,6 +372,7 @@ impl Default for ServerOptions {
             deadline_ms: 0,
             tenant_deadline_ms: Vec::new(),
             faults: String::new(),
+            spec: None,
         }
     }
 }
@@ -332,6 +395,10 @@ impl From<&ServeConfig> for ServerOptions {
             deadline_ms: c.deadline_ms,
             tenant_deadline_ms: c.tenant_deadline_ms.clone(),
             faults: c.faults.clone(),
+            // The draft model is a loaded artifact, not a config
+            // value: `main.rs` resolves `c.draft_model` against the
+            // raw checkpoint and fills this in.
+            spec: None,
         }
     }
 }
@@ -498,6 +565,37 @@ impl Server {
         opts: ServerOptions,
     ) -> Result<Server, ServeError> {
         opts.qos.validate().map_err(ServeError::InvalidConfig)?;
+        if let Some(s) = &opts.spec {
+            if s.k == 0 {
+                return Err(ServeError::InvalidConfig("spec_k must be >= 1".into()));
+            }
+            if s.max_k < s.k {
+                return Err(ServeError::InvalidConfig(format!(
+                    "spec_max_k {} must be >= spec_k {}",
+                    s.max_k, s.k
+                )));
+            }
+            if s.draft.cfg != model.cfg {
+                return Err(ServeError::InvalidConfig(format!(
+                    "draft model shape mismatch: draft vocab={} d_model={} n_layer={} \
+                     vs target vocab={} d_model={} n_layer={}",
+                    s.draft.cfg.vocab,
+                    s.draft.cfg.d_model,
+                    s.draft.cfg.n_layer,
+                    model.cfg.vocab,
+                    model.cfg.d_model,
+                    model.cfg.n_layer
+                )));
+            }
+            if KvQuantConfig::sanitize_bits(opts.kv_bits) < 16 {
+                return Err(ServeError::InvalidConfig(
+                    "speculative decoding requires kv_bits = 16: cold-KV quantization \
+                     timing differs between speculative and plain schedules, breaking \
+                     the bit-identity contract"
+                        .into(),
+                ));
+            }
+        }
         let threads = if opts.threads == 0 {
             parallel::threads()
         } else {
@@ -537,8 +635,13 @@ impl Server {
             deadline_ms,
             tenant_deadline_ms,
             faults,
+            mut spec,
             ..
         } = opts;
+        if let Some(s) = spec.as_mut() {
+            s.draft.ensure_engines();
+            metrics.set_spec(&s.tag, s.k);
+        }
         let pool_cfg = PoolConfig {
             block_size: kv_block.max(1),
             budget_blocks: kv_pool_blocks,
@@ -565,6 +668,9 @@ impl Server {
                 pool_cfg,
                 worker_qos,
             );
+            if let Some(s) = spec {
+                sched.set_spec(s.draft, s.k, s.max_k);
+            }
             // Supervisor: round-level containment inside the scheduler
             // absorbs per-request faults; a panic that still unwinds
             // out of the loop means containment itself failed. Catch
@@ -1151,6 +1257,120 @@ mod tests {
             server.submit(vec![1], 1, 0.0),
             Err(ServeError::ShuttingDown) | Err(ServeError::WorkerGone)
         ));
+    }
+
+    #[test]
+    fn invalid_spec_rejected_at_start_not_in_worker() {
+        let reject = |opts: ServerOptions, needle: &str| {
+            match Server::try_start_with_opts(tiny_model(1, 4), opts) {
+                Err(ServeError::InvalidConfig(msg)) => {
+                    assert!(msg.contains(needle), "expected {needle:?} in {msg:?}")
+                }
+                other => panic!("{needle}: must be rejected, got ok={}", other.is_ok()),
+            }
+        };
+        reject(
+            ServerOptions {
+                spec: Some(SpecConfig::new(tiny_model(1, 4), "d", 0, 4)),
+                ..ServerOptions::default()
+            },
+            "spec_k",
+        );
+        reject(
+            ServerOptions {
+                spec: Some(SpecConfig::new(tiny_model(1, 4), "d", 4, 2)),
+                ..ServerOptions::default()
+            },
+            "spec_max_k",
+        );
+        // A draft with a different shape (n_kv_head 2 vs 4) is a
+        // config mismatch, not a mid-round panic.
+        reject(
+            ServerOptions {
+                spec: Some(SpecConfig::new(tiny_model(1, 2), "d", 2, 4)),
+                ..ServerOptions::default()
+            },
+            "shape mismatch",
+        );
+        // Speculation is incompatible with cold-KV quantization (it
+        // would change *when* blocks go cold, breaking bit-identity).
+        reject(
+            ServerOptions {
+                spec: Some(SpecConfig::new(tiny_model(1, 4), "d", 2, 4)),
+                kv_bits: 4,
+                ..ServerOptions::default()
+            },
+            "kv_bits",
+        );
+    }
+
+    #[test]
+    fn spec_load_surfaces_missing_file_as_config_error() {
+        use crate::io::weights::ModelConfig;
+        use crate::util::fixture::synth_raw_model;
+        let cfg = ModelConfig {
+            vocab: 32,
+            d_model: 16,
+            n_layer: 2,
+            n_head: 4,
+            n_kv_head: 4,
+            d_ff: 24,
+            max_seq: 64,
+            rope_theta: 10000.0,
+        };
+        let (raw, _) = synth_raw_model(3, cfg);
+        let err = SpecConfig::load(Path::new("/nonexistent/draft.qlm"), &raw, 4, 8)
+            .err()
+            .expect("missing draft file must fail");
+        match err {
+            ServeError::InvalidConfig(msg) => assert!(msg.contains("draft_model"), "{msg}"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_serving_matches_plain_and_reports() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = tiny_model(9, 4);
+        let prompts: Vec<Vec<u16>> = vec![vec![5, 6, 7], vec![1, 2], vec![9, 3, 4, 8]];
+        let solo: Vec<Vec<u16>> = prompts
+            .iter()
+            .map(|p| {
+                let server = Server::start(m.clone(), 1, Duration::from_millis(1), 7);
+                let rx = server
+                    .submit_with(p.clone(), 8, 0.0, StopSet::none(), None)
+                    .expect("submit");
+                let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+                server.shutdown();
+                r.tokens
+            })
+            .collect();
+        // Draft == target: every draft agrees, acceptance is maximal —
+        // and the outputs must still be bit-identical to plain runs.
+        let server = Server::start_with_opts(
+            m.clone(),
+            ServerOptions {
+                max_batch: 2,
+                batch_wait: Duration::from_millis(20),
+                seed: 7,
+                spec: Some(SpecConfig::new(m.clone(), "twin", 3, 6)),
+                ..ServerOptions::default()
+            },
+        );
+        assert!(server.metrics.summary().contains("spec=twin:k=3"), "{}", server.metrics.summary());
+        let rxs: Vec<_> = prompts
+            .iter()
+            .map(|p| {
+                server.submit_with(p.clone(), 8, 0.0, StopSet::none(), None).expect("submit")
+            })
+            .collect();
+        for (rx, expect) in rxs.into_iter().zip(solo) {
+            let r = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(r.tokens, expect, "speculative output must be bit-identical");
+        }
+        assert!(server.metrics.spec_rounds.load(Relaxed) >= 1, "speculation actually ran");
+        assert!(server.metrics.mean_spec_accepted() > 1.0, "agreeing draft accepts > 1/round");
+        server.shutdown();
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! btc-llm serve     [--config configs/serve.toml] [--requests 16] [--threads N] [--kv-bits B]
 //!                   [--act-bits B] [--listen ADDR] [--smoke] [--synthetic]
 //!                   [--tuning-file tuning.toml] [--autotune]
+//!                   [--draft-model m.qlm] [--spec-k K]
 //! btc-llm parity                                        PJRT artifact cross-check
 //! ```
 //!
@@ -18,7 +19,7 @@
 //! `make artifacts`.
 
 use anyhow::{Context, Result};
-use btc_llm::coordinator::{NetOptions, NetServer, ServeConfig, Server, ServerOptions};
+use btc_llm::coordinator::{NetOptions, NetServer, ServeConfig, Server, ServerOptions, SpecConfig};
 use btc_llm::data::{corpus, ByteTokenizer};
 use btc_llm::eval::{memory, perplexity, zeroshot};
 use btc_llm::io::{load_model, qweights};
@@ -134,6 +135,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     cfg.act_bits = btc_llm::quant::kvquant::KvQuantConfig::sanitize_bits(
         args.get_usize("act-bits", cfg.act_bits as usize) as u32,
     );
+    // CLI overrides for speculative decoding: `--draft-model PATH`
+    // points at a QLM1 artifact (e.g. a btc-0.8 quantization of the
+    // same checkpoint), `--spec-k K` sets the initial draft length.
+    // Raising k past the configured ceiling lifts the ceiling too, so
+    // `--spec-k 10` alone is not an instant start-time error.
+    if let Some(p) = args.get("draft-model") {
+        cfg.draft_model = p.to_string();
+    }
+    cfg.spec_k = args.get_usize("spec-k", cfg.spec_k);
+    cfg.spec_max_k = cfg.spec_max_k.max(cfg.spec_k);
     if let Some(addr) = args.get("listen") {
         addr.parse::<std::net::SocketAddr>()
             .map_err(|e| anyhow::anyhow!("--listen {addr}: {e}"))?;
@@ -208,14 +219,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // carries the scheduler/QoS knobs (prefill chunk, stop set,
     // tenant table, admission/eviction policy). A bad QoS table is an
     // error here, not a worker-thread panic.
-    let server = Server::try_start_with_opts(qm.model, ServerOptions::from(&cfg))
+    let mut opts = ServerOptions::from(&cfg);
+    // The draft model rides the same raw checkpoint: the QLM1 header
+    // self-validates shape, so a wrong/corrupt/missing file is an
+    // error here — before the worker thread exists.
+    if !cfg.draft_model.is_empty() {
+        opts.spec = Some(
+            SpecConfig::load(
+                std::path::Path::new(&cfg.draft_model),
+                &raw,
+                cfg.spec_k,
+                cfg.spec_max_k,
+            )
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        );
+    }
+    let server = Server::try_start_with_opts(qm.model, opts)
         .map_err(|e| anyhow::anyhow!("start server: {e}"))?;
     info!(
-        "serving with {} kernel thread(s), act_bits={} simd={} gather_tile={} par_min_work={} \
-         prefill_chunk={}",
+        "serving with {} kernel thread(s), act_bits={} simd={} spec={} gather_tile={} \
+         par_min_work={} prefill_chunk={}",
         server.threads,
         cfg.act_bits,
         btc_llm::util::simd::active().name(),
+        server.metrics.spec_label(),
         btc_llm::util::autotune::gather_tile(),
         btc_llm::util::parallel::par_min_work(),
         cfg.prefill_chunk

@@ -604,6 +604,25 @@ impl KvPool {
         }
     }
 
+    /// Roll `cache` back to `len` positions, returning every whole
+    /// tail block past the new length to the pool (shared tails just
+    /// drop this holder's refcount — the rollback mirror of
+    /// [`Self::fork`]). Rows still resident inside a kept partial
+    /// tail are harmless stale data: [`Self::append_row`] writes by
+    /// absolute position, and a shared kept tail copy-on-write-splits
+    /// in [`Self::ensure_append`] before any re-append touches it.
+    /// Also shrinks a table grown past `len` by a speculative
+    /// [`Self::ensure_append`] whose positions were never committed.
+    pub fn truncate(&mut self, cache: &mut PagedKvCache, len: usize) {
+        assert!(len <= cache.len, "truncate can only shrink ({} -> {len})", cache.len);
+        let keep = len.div_ceil(self.block_size);
+        while cache.block_table.len() > keep {
+            let id = cache.block_table.pop().expect("keep <= table len");
+            self.dec_ref(id);
+        }
+        cache.len = len;
+    }
+
     /// Return every block of `cache` to the pool (freed once the last
     /// sharer releases). The cache is empty afterwards.
     pub fn release(&mut self, cache: &mut PagedKvCache) {
@@ -956,6 +975,106 @@ mod tests {
         assert_eq!(p.attach_prefix(&mut b, &prompt), 4, "only the cold-for-B block shared");
         p.release(&mut b);
         p.release(&mut a);
+    }
+
+    #[test]
+    fn truncate_releases_whole_tail_blocks() {
+        let mut p = pool(8, KvQuantConfig::off());
+        let mut c = p.new_cache();
+        fill(&mut p, &mut c, 11, 3); // 3 blocks: 4 + 4 + 3
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (11, 3, 3));
+        let kept = p.materialize(&c, 0).0[..6 * 4].to_vec();
+        // Truncating inside block 1 drops only block 2; the kept
+        // partial tail's surviving rows are untouched.
+        p.truncate(&mut c, 6);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (6, 2, 2));
+        assert_eq!(p.materialize(&c, 0).0[..6 * 4], kept[..]);
+        // Block-boundary truncation keeps exactly the full blocks.
+        p.truncate(&mut c, 4);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (4, 1, 1));
+        // Re-appending after rollback overwrites stale tail rows by
+        // absolute position and regrows blocks from the free list.
+        fill(&mut p, &mut c, 7, 17);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (11, 3, 3));
+        p.truncate(&mut c, 0);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (0, 0, 0));
+        assert_eq!(p.free_blocks(), 8);
+    }
+
+    #[test]
+    fn truncate_shrinks_an_uncommitted_reservation() {
+        // ensure_append may reserve blocks whose positions are never
+        // committed (a speculative round that fell back): truncating
+        // to the *current* length returns exactly those blocks.
+        let mut p = pool(4, KvQuantConfig::off());
+        let mut c = p.new_cache();
+        fill(&mut p, &mut c, 4, 5);
+        assert!(p.ensure_append(&mut c, 8));
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (4, 3, 3));
+        p.truncate(&mut c, 4);
+        assert_eq!((c.len(), c.blocks(), p.blocks_in_use()), (4, 1, 1));
+        p.release(&mut c);
+    }
+
+    #[test]
+    fn truncate_after_fork_restores_prefork_refcounts() {
+        // The speculative rollback cycle: fork -> append -> truncate
+        // -> drop must leave refcounts exactly as before the fork and
+        // leak zero blocks, across every divergence length.
+        let mut p = pool(16, KvQuantConfig::off());
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 6, 11); // block 0 full, block 1 partial
+        let base_refs: Vec<u32> = a.table().iter().map(|&id| p.block_refs(id)).collect();
+        let base_in_use = p.blocks_in_use();
+        for extra in 1..=7usize {
+            let mut b = p.fork(&a);
+            fill(&mut p, &mut b, extra, 40 + extra as u64);
+            // The divergent append COW-split A's partial tail.
+            assert_ne!(a.table()[1], b.table()[1]);
+            // Roll the fork all the way back, then drop it.
+            p.truncate(&mut b, a.len());
+            p.release(&mut b);
+            let refs_now: Vec<u32> = a.table().iter().map(|&id| p.block_refs(id)).collect();
+            assert_eq!(refs_now, base_refs, "refcounts restored after extra={extra}");
+            assert_eq!(p.blocks_in_use(), base_in_use, "zero leaked blocks (extra={extra})");
+        }
+        // Partial rollback keeps the fork consistent: truncate to a
+        // mid-point, append again, then drop — still zero leaks.
+        let mut b = p.fork(&a);
+        fill(&mut p, &mut b, 6, 77);
+        p.truncate(&mut b, 8);
+        assert_eq!(b.len(), 8);
+        fill(&mut p, &mut b, 3, 78);
+        assert_eq!(b.len(), 11);
+        p.release(&mut b);
+        assert_eq!(p.blocks_in_use(), base_in_use);
+        p.release(&mut a);
+        assert_eq!(p.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn truncate_respects_shared_full_blocks() {
+        // A truncated holder of a shared prompt block must not free
+        // it out from under the other holder.
+        let mut p = pool(8, KvQuantConfig::off());
+        let prompt: Vec<u16> = (0..9).map(|i| i as u16 + 10).collect();
+        let mut a = p.new_cache();
+        fill(&mut p, &mut a, 9, 7);
+        p.register_prompt_blocks(&a, &prompt);
+        let mut b = p.new_cache();
+        assert_eq!(p.attach_prefix(&mut b, &prompt), 8);
+        let a_before = p.materialize(&a, 0);
+        p.truncate(&mut b, 4);
+        assert_eq!(p.block_refs(a.table()[0]), 2, "kept shared block still held");
+        assert_eq!(p.block_refs(a.table()[1]), 1, "dropped shared block released");
+        assert_eq!(p.materialize(&a, 0), a_before, "A untouched by B's rollback");
+        p.truncate(&mut b, 0);
+        p.release(&mut a);
+        assert_eq!(p.blocks_in_use(), 0);
+        // The prefix map survived for blocks A still owned at release
+        // time only as far as dec_ref removed them: nothing to attach.
+        let mut e = p.new_cache();
+        assert_eq!(p.attach_prefix(&mut e, &prompt), 0);
     }
 
     #[test]

@@ -637,13 +637,39 @@ impl Transformer {
 
     /// Logit only the last position: one (1, vocab) GEMV instead of
     /// the s lm-head GEMVs the incremental prefill paid.
-    fn last_logits(&self, last: Option<Matrix>) -> Vec<f32> {
-        match last {
-            Some(last) => {
+    fn last_logits(&self, hidden: Option<Matrix>) -> Vec<f32> {
+        match hidden {
+            Some(x) => {
+                let mut last = Matrix::zeros(1, x.cols);
+                last.row_mut(0).copy_from_slice(x.row(x.rows - 1));
                 let xf = rmsnorm_rows(&last, &self.lnf);
                 xf.matmul_bt(&self.emb).row(0).to_vec()
             }
             None => Vec::new(),
+        }
+    }
+
+    /// Speculative verification forward: feed `tokens` (the pending
+    /// next token plus a drafted continuation) starting at
+    /// `cache.len()`, appending K/V for every position, and return
+    /// logits for **all** fed rows as a (s, vocab) matrix. Row `i` is
+    /// bit-identical to what `decode_batch_paged` would produce after
+    /// consuming `tokens[..=i]` one at a time — the same shared
+    /// prefill body behind the pinned chunked-prefill equivalence —
+    /// which is what makes greedy speculative acceptance exact. The
+    /// caller rolls rejected tail positions back with
+    /// [`KvPool::truncate`]. Capacity for `tokens.len()` positions
+    /// must be ensured first; exhaustion panics as API misuse.
+    pub fn verify_paged(
+        &self,
+        tokens: &[u16],
+        cache: &mut PagedKvCache,
+        pool: &mut KvPool,
+    ) -> Matrix {
+        let caches = std::slice::from_mut(cache);
+        match self.prefill_hidden(tokens, KvTarget::Paged { caches, pool }) {
+            Some(x) => rmsnorm_rows(&x, &self.lnf).matmul_bt(&self.emb),
+            None => Matrix::zeros(0, self.cfg.vocab),
         }
     }
 
@@ -667,8 +693,9 @@ impl Transformer {
     }
 
     /// Shared prefill body: appends K/V for every position and returns
-    /// the last position's final hidden state as a (1, d) matrix
-    /// (pre-lnf), or `None` for empty `tokens`.
+    /// every position's final hidden state as a (s, d) matrix
+    /// (pre-lnf), or `None` for empty `tokens`. Prefill callers read
+    /// only the last row; [`Self::verify_paged`] projects all of them.
     fn prefill_hidden(&self, tokens: &[u16], mut kv: KvTarget<'_>) -> Option<Matrix> {
         let s = tokens.len();
         if s == 0 {
@@ -715,9 +742,7 @@ impl Transformer {
             x = x.add(&block.wdown.forward(&mid));
         }
         kv.advance(0, s);
-        let mut last = Matrix::zeros(1, d);
-        last.row_mut(0).copy_from_slice(x.row(s - 1));
-        Some(last)
+        Some(x)
     }
 
     /// Prepare serving engines on every linear, then refresh the
@@ -1002,6 +1027,68 @@ pub mod tests {
             pool.release(&mut paged2);
             assert_eq!(pool.blocks_in_use(), 0);
         }
+    }
+
+    #[test]
+    fn verify_paged_rows_bit_identical_to_sequential_decode() {
+        // The speculative-verification contract: one multi-position
+        // verify forward produces, for every fed row, exactly the
+        // logits sequential decode steps would have produced — and
+        // identical K/V bytes — so greedy acceptance is exact.
+        for nkv in [4usize, 2] {
+            let m = tiny_model(23, nkv);
+            let cfg = PoolConfig { block_size: 3, budget_blocks: 0, ..PoolConfig::default() };
+            let mut pool = m.new_pool(&cfg, 2);
+            let prompt = [3u16, 17, 2, 29, 11];
+            let fed = [7u16, 21, 4, 9];
+            let mut seq = pool.new_cache();
+            m.prefill_paged(&prompt, &mut seq, &mut pool);
+            let mut spec = pool.new_cache();
+            m.prefill_paged(&prompt, &mut spec, &mut pool);
+            let verify = m.verify_paged(&fed, &mut spec, &mut pool);
+            assert_eq!(verify.rows, fed.len());
+            for (i, &t) in fed.iter().enumerate() {
+                let solo = m.decode_batch_paged(&[t], std::slice::from_mut(&mut seq), &mut pool);
+                assert_eq!(verify.row(i), solo.row(0), "nkv={nkv}: verify row {i} differs");
+            }
+            assert_eq!(spec.len(), seq.len());
+            for li in 0..m.cfg.n_layer {
+                assert_eq!(
+                    pool.materialize(&spec, li),
+                    pool.materialize(&seq, li),
+                    "nkv={nkv}: layer {li} K/V differ after verify"
+                );
+            }
+            // Rollback: truncate the rejected tail, then decoding from
+            // the truncated state matches a never-speculated cache.
+            let keep = prompt.len() + 2;
+            pool.truncate(&mut spec, keep);
+            pool.truncate(&mut seq, keep);
+            let a = m.decode_batch_paged(&[19], std::slice::from_mut(&mut spec), &mut pool);
+            let b = m.decode_batch_paged(&[19], std::slice::from_mut(&mut seq), &mut pool);
+            assert_eq!(a.data, b.data, "nkv={nkv}: post-rollback decode differs");
+            // And against a cache that never held the rejected tail.
+            let mut fresh = pool.new_cache();
+            m.prefill_paged(&prompt, &mut fresh, &mut pool);
+            m.verify_paged(&fed[..2], &mut fresh, &mut pool);
+            let c = m.decode_batch_paged(&[19], std::slice::from_mut(&mut fresh), &mut pool);
+            assert_eq!(a.data, c.data, "nkv={nkv}: rollback state is not clean");
+            pool.release(&mut spec);
+            pool.release(&mut seq);
+            pool.release(&mut fresh);
+            assert_eq!(pool.blocks_in_use(), 0);
+        }
+    }
+
+    #[test]
+    fn verify_paged_empty_is_empty() {
+        let m = tiny_model(24, 4);
+        let cfg = PoolConfig { block_size: 4, budget_blocks: 8, ..PoolConfig::default() };
+        let mut pool = m.new_pool(&cfg, 1);
+        let mut c = pool.new_cache();
+        let out = m.verify_paged(&[], &mut c, &mut pool);
+        assert_eq!((out.rows, out.cols), (0, m.cfg.vocab));
+        assert_eq!(c.len(), 0);
     }
 
     #[test]

@@ -284,6 +284,49 @@ fn soak_mixed_faults_deadlines_and_cancels_leak_nothing() {
     server.shutdown();
 }
 
+/// An injected draft-model panic (fault site `spec.draft`) must
+/// degrade the slot to *plain* decoding — speculation is an
+/// optimization, never a correctness dependency. No quarantine, no
+/// failed response, output bit-identical to a fault-free run.
+#[test]
+fn draft_panic_degrades_to_plain_decoding_not_quarantine() {
+    use btc_llm::coordinator::SpecConfig;
+    let model = tiny_model();
+    let prompts: Vec<Vec<u16>> = vec![vec![5, 6, 7], vec![9, 8]];
+    let want: Vec<Vec<u16>> = {
+        let _iso = faultpoint::scenario("");
+        let solo = Server::start(model.clone(), 1, Duration::from_millis(1), 7);
+        let w = prompts.iter().map(|p| run_solo(&solo, p)).collect();
+        solo.shutdown();
+        w
+    };
+    let _g = faultpoint::scenario("spec.draft=panic%100");
+    let server = Server::start_with_opts(
+        model.clone(),
+        ServerOptions {
+            max_batch: 2,
+            batch_wait: Duration::from_millis(20),
+            seed: 7,
+            spec: Some(SpecConfig::new(model, "twin", 3, 6)),
+            ..ServerOptions::default()
+        },
+    );
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit_with(p.clone(), 6, 0.0, StopSet::none(), None).expect("submit"))
+        .collect();
+    for (rx, want) in rxs.iter().zip(&want) {
+        let r = rx.recv_timeout(LONG).expect("degraded slot still answers");
+        assert_eq!(r.finish, FinishReason::Length, "degrade, not failure");
+        assert_eq!(&r.tokens[r.prompt_len..], &want[..], "bit-identical after degrade");
+    }
+    assert!(server.metrics.spec_degraded.load(Relaxed) >= 1, "degrade recorded");
+    assert!(server.metrics.panics_caught.load(Relaxed) >= 1, "draft panic caught");
+    assert_eq!(server.metrics.quarantines.load(Relaxed), 0, "no quarantine for a draft fault");
+    wait_until("blocks released", || server.metrics.kv_blocks_in_use.load(Relaxed) == 0);
+    server.shutdown();
+}
+
 /// An SSE write failure mid-stream (injected at the wire) trips the
 /// request's cancel token: generation stops within a round, blocks
 /// come back, and the front-end keeps serving new connections.

@@ -1,0 +1,223 @@
+//! Integration: speculative decoding bit-identity (DESIGN.md §13).
+//!
+//! Greedy outputs with speculation ON must be bit-identical to the
+//! plain target-only path. Speculation only changes how many tokens
+//! one scheduling round yields — never which tokens. Pinned here
+//! across quantization backends (fp16 / binary / btc targets under a
+//! btc-0.8 draft), mixed co-traffic with sampled lanes, pool pressure
+//! that defers/preempts a speculating slot mid-stream, and a
+//! deliberately-disagreeing draft whose every proposal is rejected.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::time::Duration;
+
+use btc_llm::coordinator::{Server, ServerOptions, SpecConfig, StopSet};
+use btc_llm::io::weights::ModelConfig;
+use btc_llm::model::Transformer;
+use btc_llm::quant::pipeline::{quantize_model, registry, QuantConfig};
+use btc_llm::util::fixture::synth_raw_model;
+
+const LONG: Duration = Duration::from_secs(120);
+
+fn serving_cfg() -> ModelConfig {
+    ModelConfig {
+        vocab: 64,
+        d_model: 32,
+        n_layer: 2,
+        n_head: 4,
+        n_kv_head: 2,
+        d_ff: 64,
+        max_seq: 128,
+        rope_theta: 10000.0,
+    }
+}
+
+/// Quantize a synthetic checkpoint (`seed`) with the given method.
+/// Every model here shares the serving shape, so any two of them form
+/// a valid target/draft pair; same seed = same checkpoint, the
+/// deployment story (one raw model, two bit-widths).
+fn quantized(seed: u64, qcfg: &QuantConfig) -> Transformer {
+    let (raw, corpus) = synth_raw_model(seed, serving_cfg());
+    let mut qcfg = qcfg.clone();
+    // Serving arms activation quantization at the engine boundary, not
+    // in the pipeline (same convention as `cmd_serve`).
+    qcfg.act_bits = 16;
+    let mut qm = quantize_model(&raw, &corpus, &qcfg).expect("quantize");
+    qm.model.prepare_engines();
+    qm.model
+}
+
+fn btc_08() -> QuantConfig {
+    registry::get_with_bits("btc", Some(0.8)).expect("btc-0.8 preset")
+}
+
+/// Mixed workload: prompt lengths 1..=10, generation lengths 3..=10.
+fn jobs(n: u16) -> Vec<(Vec<u16>, usize)> {
+    (0..n)
+        .map(|k| {
+            let plen = 1 + ((k as usize * 7) % 10);
+            let prompt: Vec<u16> =
+                (0..plen).map(|j| ((j * 11 + k as usize * 5) % 60) as u16).collect();
+            (prompt, 3 + (k as usize % 8))
+        })
+        .collect()
+}
+
+/// Isolated single-request references on a plain (non-speculative)
+/// server: the ground truth every speculative run must reproduce.
+fn solo_refs(model: &Transformer, jobs: &[(Vec<u16>, usize)]) -> Vec<Vec<u16>> {
+    let solo = Server::start(model.clone(), 1, Duration::from_millis(1), 7);
+    let out = jobs
+        .iter()
+        .map(|(p, m)| {
+            solo.submit_with(p.clone(), *m, 0.0, StopSet::none(), None)
+                .expect("submit")
+                .recv_timeout(LONG)
+                .expect("solo response")
+                .tokens
+        })
+        .collect();
+    solo.shutdown();
+    out
+}
+
+fn run_and_compare(server: &Server, jobs: &[(Vec<u16>, usize)], want: &[Vec<u16>], label: &str) {
+    let rxs: Vec<_> = jobs
+        .iter()
+        .map(|(p, m)| {
+            server.submit_with(p.clone(), *m, 0.0, StopSet::none(), None).expect("submit")
+        })
+        .collect();
+    for (i, (rx, want)) in rxs.into_iter().zip(want).enumerate() {
+        let r = rx.recv_timeout(LONG).expect("response");
+        assert_eq!(&r.tokens, want, "{label}: request {i} diverged from its plain run");
+    }
+}
+
+#[test]
+fn spec_on_equals_off_across_backends() {
+    for (name, qcfg) in [
+        ("fp16", QuantConfig::fp16()),
+        ("binary", registry::get_with_bits("arb-llm", Some(1.0)).expect("arb-llm preset")),
+        ("btc-1.11", registry::get_with_bits("btc", Some(1.11)).expect("btc-1.11 preset")),
+    ] {
+        let target = quantized(3, &qcfg);
+        let draft = quantized(3, &btc_08());
+        let jobs = jobs(8);
+        let want = solo_refs(&target, &jobs);
+        let server = Server::start_with_opts(
+            target,
+            ServerOptions {
+                max_batch: 4,
+                batch_wait: Duration::from_millis(20),
+                prefill_chunk: 4,
+                seed: 7,
+                spec: Some(SpecConfig::new(draft, "btc-0.8", 3, 6)),
+                ..ServerOptions::default()
+            },
+        );
+        run_and_compare(&server, &jobs, &want, name);
+        assert!(
+            server.metrics.spec_rounds.load(Relaxed) >= 1,
+            "{name}: speculation actually ran"
+        );
+        // Every speculative round yields at least the bonus token.
+        assert!(server.metrics.mean_spec_accepted() >= 1.0, "{name}");
+        server.shutdown();
+    }
+}
+
+#[test]
+fn pool_pressure_preempting_speculating_slots_preserves_bit_identity() {
+    // An agreeing draft (the target itself) makes every slot
+    // speculate deeply, while the pool is far too small for four
+    // slots' target + draft caches at once: speculative rounds hit
+    // capacity walls, fall back, defer, and preempt mid-stream — and
+    // every output must still match its isolated plain run.
+    let target = quantized(3, &QuantConfig::fp16());
+    let draft = target.clone();
+    let jobs = jobs(16);
+    let want = solo_refs(&target, &jobs);
+    let server = Server::start_with_opts(
+        target,
+        ServerOptions {
+            max_batch: 4,
+            batch_wait: Duration::from_millis(2),
+            prefill_chunk: 4,
+            seed: 7,
+            kv_block: 8,
+            kv_pool_blocks: 8,
+            spec: Some(SpecConfig::new(draft, "twin", 4, 8)),
+            ..ServerOptions::default()
+        },
+    );
+    run_and_compare(&server, &jobs, &want, "tight-pool");
+    let m = &server.metrics;
+    assert!(m.kv_blocks_peak.load(Relaxed) <= 8, "pool budget respected");
+    assert!(
+        m.kv_round_deferrals.load(Relaxed) + m.kv_preemptions.load(Relaxed) >= 1,
+        "the pool actually pushed back"
+    );
+    assert_eq!(m.completed.load(Relaxed), jobs.len() as u64);
+    server.shutdown();
+}
+
+#[test]
+fn disagreeing_draft_still_terminates_and_matches() {
+    // A draft from a *different* checkpoint (same shape, seed 99):
+    // its proposals are effectively noise, so rounds accept ~0 drafts
+    // — generation must still terminate (the verify forward always
+    // yields the bonus token) and stay bit-identical.
+    let target = quantized(3, &QuantConfig::fp16());
+    let draft = quantized(99, &QuantConfig::fp16());
+    let jobs = jobs(6);
+    let want = solo_refs(&target, &jobs);
+    let server = Server::start_with_opts(
+        target,
+        ServerOptions {
+            max_batch: 3,
+            batch_wait: Duration::from_millis(20),
+            seed: 7,
+            spec: Some(SpecConfig::new(draft, "noise", 4, 8)),
+            ..ServerOptions::default()
+        },
+    );
+    run_and_compare(&server, &jobs, &want, "disagreeing-draft");
+    let m = &server.metrics;
+    assert!(m.spec_rounds.load(Relaxed) >= 1, "speculation ran");
+    assert!(m.mean_spec_accepted() >= 1.0, "every round still emits the bonus token");
+    server.shutdown();
+}
+
+#[test]
+fn sampled_cotraffic_bypasses_speculation_and_greedy_stays_exact() {
+    // temperature > 0 lanes bypass speculation entirely; greedy lanes
+    // sharing the batch keep the exactness contract.
+    let target = quantized(3, &QuantConfig::fp16());
+    let draft = target.clone();
+    let greedy = jobs(4);
+    let want = solo_refs(&target, &greedy);
+    let server = Server::start_with_opts(
+        target,
+        ServerOptions {
+            max_batch: 4,
+            batch_wait: Duration::from_millis(20),
+            seed: 7,
+            spec: Some(SpecConfig::new(draft, "twin", 3, 6)),
+            ..ServerOptions::default()
+        },
+    );
+    let sampled: Vec<_> = (0..4u16)
+        .map(|k| {
+            server
+                .submit_with(vec![5 + k, 6, 7], 6, 0.8, StopSet::none(), None)
+                .expect("submit sampled")
+        })
+        .collect();
+    run_and_compare(&server, &greedy, &want, "greedy-under-sampled-cotraffic");
+    for rx in sampled {
+        let r = rx.recv_timeout(LONG).expect("sampled lane completes");
+        assert_eq!(r.tokens.len() - r.prompt_len, 6);
+    }
+    server.shutdown();
+}
